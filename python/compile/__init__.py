@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT pipeline.
+
+Never imported at runtime; `make artifacts` runs `python -m compile.aot` once
+and the rust coordinator consumes artifacts/*.hlo.txt + manifest.json.
+"""

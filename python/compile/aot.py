@@ -1,0 +1,246 @@
+"""AOT pipeline: lower every artifact to HLO *text* + emit manifest.json.
+
+HLO text (not serialized HloModuleProto) is the interchange format — the
+image's xla_extension 0.5.1 rejects jax ≥0.5 protos with 64-bit instruction
+ids; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--filter SUBSTR]
+        [--jobs N] [--force]
+
+Incremental: an artifact is skipped when its .hlo.txt already exists (the
+Makefile invalidates on python source changes); the manifest is always
+rewritten from the full registry.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import multiprocessing as mp
+import os
+import sys
+import time
+
+from . import config as C
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry
+# ---------------------------------------------------------------------------
+
+
+def _sub_edges(ds: C.DatasetCfg, nodes: int) -> int:
+    """Padded edge capacity for a subgraph artifact: generous headroom over
+    nodes·(deg+self-loop), rounded up to a power of two."""
+    want = int(nodes * (ds.avg_degree + 2) * 1.6)
+    cap = 1 << max(10, (want - 1).bit_length())
+    return min(cap, ds.m_max)
+
+
+def artifact_registry() -> list[dict]:
+    """Every artifact the repo builds, with its static shape config."""
+    arts: list[dict] = []
+    tc = C.TRAIN
+
+    def add(kind, ds_name, model_name, *, b=None, k=None, nn=None, ne=None,
+            layers=None, suffix=""):
+        name = f"{kind}_{ds_name}_{model_name}{suffix}"
+        arts.append(dict(
+            name=name, file=name + ".hlo.txt", kind=kind, dataset=ds_name,
+            model=model_name, b=b, k=k, nn=nn, ne=ne, layers=layers,
+        ))
+
+    for ds_name, ds in C.DATASETS.items():
+        tiny = ds_name == "tiny_sim"
+        b = 64 if tiny else tc.b
+        k = 16 if tiny else tc.k
+        models = ["gcn", "sage", "gat"] + (["txf"] if ds_name == "arxiv_sim" else [])
+        for m in models:
+            add("vq_train", ds_name, m, b=b, k=k)
+            add("vq_infer", ds_name, m, b=b, k=k)
+            if m == "txf":
+                # Global attention has no edge-list form (dense n×n); the
+                # paper's Table 8 evaluates txf under VQ-GNN only.
+                continue
+            # Full-graph exact train/infer ("oracle" rows + sampler inference).
+            add("edge_train", ds_name, m, nn=ds.n, ne=ds.m_max, suffix="_full")
+            add("edge_infer", ds_name, m, nn=ds.n, ne=ds.m_max, suffix="_full")
+            if not tiny:
+                # Cluster-GCN / GraphSAINT subgraph class.
+                nn_sub = 1024
+                add("edge_train", ds_name, m, nn=nn_sub,
+                    ne=_sub_edges(ds, nn_sub), suffix="_sub")
+        if not tiny:
+            # NS-SAGE union subgraphs (not compatible with GCN — Table 4 fn.1).
+            for m in ("sage", "gat"):
+                nn_ns = min(ds.n, 4096)
+                add("edge_train", ds_name, m, nn=nn_ns,
+                    ne=min(ds.m_max, 131072), suffix="_ns")
+
+    # Ablations (paper App. G) on arxiv_sim + GCN.
+    for nl in C.ABLATION_LAYERS:
+        if nl == C.MODELS["gcn"].layers:
+            continue
+        add("vq_train", "arxiv_sim", "gcn", b=tc.b, k=tc.k, layers=nl,
+            suffix=f"_l{nl}")
+        add("vq_infer", "arxiv_sim", "gcn", b=tc.b, k=tc.k, layers=nl,
+            suffix=f"_l{nl}")
+    for kk in C.ABLATION_CODEBOOK:
+        if kk == tc.k:
+            continue
+        add("vq_train", "arxiv_sim", "gcn", b=tc.b, k=kk, suffix=f"_k{kk}")
+        add("vq_infer", "arxiv_sim", "gcn", b=tc.b, k=kk, suffix=f"_k{kk}")
+    for bb in C.ABLATION_BATCH:
+        if bb == tc.b:
+            continue
+        add("vq_train", "arxiv_sim", "gcn", b=bb, k=tc.k, suffix=f"_b{bb}")
+        add("vq_infer", "arxiv_sim", "gcn", b=bb, k=tc.k, suffix=f"_b{bb}")
+
+    # Perf-pass variants (EXPERIMENTS.md §Perf): coarser product-VQ branches
+    # (fp=32 → half the sketch volume) and the combination with k=64.
+    add("vq_train", "arxiv_sim", "gcn", b=tc.b, k=tc.k, suffix="_fp32")
+    add("vq_infer", "arxiv_sim", "gcn", b=tc.b, k=tc.k, suffix="_fp32")
+    arts[-1]["fp"] = 32
+    arts[-2]["fp"] = 32
+    add("vq_train", "arxiv_sim", "gcn", b=tc.b, k=64, suffix="_fp32k64")
+    add("vq_infer", "arxiv_sim", "gcn", b=tc.b, k=64, suffix="_fp32k64")
+    arts[-1]["fp"] = 32
+    arts[-2]["fp"] = 32
+
+    # Standalone assignment kernel (inductive inference), per vq model family.
+    for ds_name in ("ppi_sim", "tiny_sim"):
+        ds = C.DATASETS[ds_name]
+        b = 64 if ds_name == "tiny_sim" else tc.b
+        k = 16 if ds_name == "tiny_sim" else tc.k
+        model = C.MODELS["gcn"]
+        from .model import make_plan
+        p0 = make_plan(ds, model)[0]
+        arts.append(dict(
+            name=f"vq_assign_{ds_name}", file=f"vq_assign_{ds_name}.hlo.txt",
+            kind="vq_assign", dataset=ds_name, model="gcn", b=b, k=k,
+            nn=None, ne=None, layers=None,
+            n_br=p0.n_br, fp=p0.fp,
+        ))
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def build_fn(art: dict):
+    """Resolve an artifact spec to (fn, in_specs, out_specs)."""
+    from . import edgemp, model
+    ds = C.DATASETS[art["dataset"]]
+    mo = C.MODELS[art["model"]]
+    if art.get("layers"):
+        mo = dataclasses.replace(mo, layers=art["layers"])
+    if art.get("fp"):
+        mo = dataclasses.replace(mo, fp=art["fp"])
+    kind = art["kind"]
+    if kind == "vq_train":
+        return model.build_vq_train(ds, mo, C.TRAIN, art["b"], art["k"]), mo
+    if kind == "vq_infer":
+        return model.build_vq_infer(ds, mo, C.TRAIN, art["b"], art["k"]), mo
+    if kind == "edge_train":
+        return edgemp.build_edge_train(ds, mo, C.TRAIN, art["nn"], art["ne"]), mo
+    if kind == "edge_infer":
+        return edgemp.build_edge_infer(ds, mo, C.TRAIN, art["nn"], art["ne"]), mo
+    if kind == "vq_assign":
+        return model.build_vq_assign_only(
+            art["n_br"], art["b"], art["k"], art["fp"]), mo
+    raise ValueError(kind)
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(args) -> dict:
+    """Worker: lower one artifact, write HLO text, return manifest entry.
+    When `skip_build` is set only the (cheap) manifest entry is produced —
+    the manifest always covers the full registry even under --filter."""
+    art, out_dir, force, skip_build = args
+    import jax
+    import jax.numpy as jnp
+    t0 = time.time()
+    (fn, in_specs, out_specs), mo = build_fn(art)
+    entry = dict(art)
+    entry["inputs"] = [dict(name=n, shape=list(s), dtype=d) for n, s, d in in_specs]
+    entry["outputs"] = [dict(name=n, shape=list(s), dtype=d) for n, s, d in out_specs]
+    if art["kind"].startswith("vq") and art["kind"] != "vq_assign":
+        from .model import make_plan
+        ds = C.DATASETS[art["dataset"]]
+        entry["plan"] = [dataclasses.asdict(p) for p in make_plan(ds, mo)]
+        entry["model_cfg"] = dataclasses.asdict(mo)
+    path = os.path.join(out_dir, art["file"])
+    if skip_build:
+        entry["_built"] = False
+        entry["_secs"] = round(time.time() - t0, 2)
+        return entry
+    if force or not os.path.exists(path):
+        sp = [
+            jax.ShapeDtypeStruct(s, jnp.int32 if d == "i32" else jnp.float32)
+            for _, s, d in in_specs
+        ]
+        lowered = jax.jit(fn, keep_unused=True).lower(*sp)
+        text = to_hlo_text(lowered)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+        entry["_built"] = True
+    else:
+        entry["_built"] = False
+    entry["_secs"] = round(time.time() - t0, 2)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--filter", default="")
+    ap.add_argument("--jobs", type=int, default=max(1, (os.cpu_count() or 2) - 1))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    arts = artifact_registry()
+    t0 = time.time()
+    work = [(a, out_dir, args.force, args.filter not in a["name"]) for a in arts]
+    if args.jobs > 1:
+        with mp.get_context("spawn").Pool(args.jobs) as pool:
+            entries = pool.map(lower_one, work)
+    else:
+        entries = [lower_one(w) for w in work]
+    built = sum(e.pop("_built") for e in entries)
+    for e in entries:
+        e.pop("_secs", None)
+
+    manifest = dict(
+        version=1,
+        train=dataclasses.asdict(C.TRAIN),
+        datasets={n: dataclasses.asdict(d) for n, d in C.DATASETS.items()},
+        models={n: dataclasses.asdict(m) for n, m in C.MODELS.items()},
+        subgraph_shapes=C.SUBGRAPH_SHAPES,
+        artifacts=entries,
+    )
+    man_path = os.path.join(out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"aot: {built} built, {len(entries) - built} cached, "
+          f"{len(entries)} total in {time.time() - t0:.1f}s -> {man_path}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Single source of truth for dataset shapes, model dims and artifact specs.
+
+Everything the rust coordinator needs to know about shapes is emitted into
+``artifacts/manifest.json`` by ``aot.py``; the rust side never hard-codes a
+dimension.  The synthetic dataset stand-ins (see DESIGN.md §3) are parameterized
+here so the graph generators (rust) and the AOT shapes (python) can never drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Datasets (synthetic stand-ins for the paper's five benchmarks)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetCfg:
+    name: str
+    n: int                      # number of nodes
+    m_max: int                  # padded directed-edge capacity (incl. self loops)
+    f_in: int                   # raw input feature dim
+    n_classes: int
+    task: str                   # "node" | "link"
+    multilabel: bool = False
+    inductive: bool = False
+    n_graphs: int = 1           # >1 => disjoint union (PPI-style inductive)
+    avg_degree: float = 8.0     # generator target
+    communities: int = 16       # planted communities (label signal)
+    feature_noise: float = 1.0  # generator noise scale
+    intra_p_scale: float = 12.0  # SBM intra/inter connectivity ratio
+
+    @property
+    def f_in_pad(self) -> int:
+        """Input features padded to a multiple of 8 (product-VQ friendliness)."""
+        return ((self.f_in + 7) // 8) * 8
+
+
+DATASETS: dict[str, DatasetCfg] = {
+    # Tiny config for fast unit/integration tests (not a paper benchmark).
+    "tiny_sim": DatasetCfg(
+        name="tiny_sim", n=256, m_max=4096, f_in=16, n_classes=4,
+        task="node", avg_degree=6.0, communities=4,
+    ),
+    # ogbn-arxiv stand-in: sparse scale-free citation graph, transductive.
+    "arxiv_sim": DatasetCfg(
+        name="arxiv_sim", n=8192, m_max=163840, f_in=64, n_classes=16,
+        task="node", avg_degree=7.0, communities=16,
+    ),
+    # Reddit stand-in: dense SBM, message-bound, high-dim features.
+    "reddit_sim": DatasetCfg(
+        name="reddit_sim", n=4096, m_max=262144, f_in=128, n_classes=16,
+        task="node", avg_degree=50.0, communities=16,
+    ),
+    # PPI stand-in: disjoint graphs, multilabel, inductive.
+    "ppi_sim": DatasetCfg(
+        name="ppi_sim", n=4608, m_max=131072, f_in=56, n_classes=16,
+        task="node", multilabel=True, inductive=True, n_graphs=12,
+        avg_degree=14.0, communities=16,
+    ),
+    # ogbl-collab stand-in: link prediction with held-out positives.
+    "collab_sim": DatasetCfg(
+        name="collab_sim", n=8192, m_max=163840, f_in=64, n_classes=0,
+        task="link", avg_degree=8.0, communities=32,
+    ),
+    # Flickr stand-in: mid-size, high-dim features, 7 classes.
+    "flickr_sim": DatasetCfg(
+        name="flickr_sim", n=4096, m_max=98304, f_in=104, n_classes=7,
+        task="node", avg_degree=10.0, communities=7,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """A GNN backbone under the generalized-convolution framework (Eq. 1)."""
+
+    name: str                   # gcn | sage | gat | txf
+    hidden: int = 64
+    layers: int = 3
+    heads: int = 2              # gat/txf attention heads
+    # Product VQ: dimension of each VQ branch over the concat (feat ‖ grad)
+    # space.  Learnable-convolution models use a single full-dim codebook
+    # (fp == 0 sentinel => one branch spanning everything); see DESIGN.md §2.
+    fp: int = 16
+
+    @property
+    def learnable_conv(self) -> bool:
+        return self.name in ("gat", "txf")
+
+
+MODELS: dict[str, ModelCfg] = {
+    "gcn": ModelCfg(name="gcn"),
+    "sage": ModelCfg(name="sage"),
+    "gat": ModelCfg(name="gat", fp=0),
+    "txf": ModelCfg(name="txf", fp=0),
+}
+
+
+# ---------------------------------------------------------------------------
+# Training / VQ hyper-parameters (paper App. F defaults, scaled)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    b: int = 512                # mini-batch size (nodes)
+    k: int = 128                # codebook size per branch
+    lr: float = 3e-3            # RMSprop lr (paper: 3e-3)
+    rms_alpha: float = 0.99     # RMSprop smoothing (paper: 0.99)
+    gamma: float = 0.99         # VQ codeword EMA decay  (Alg. 2 γ)
+    beta: float = 0.99          # whitening EMA decay    (Alg. 2 β)
+    p_pairs: int = 1024         # link-prediction pairs per step
+    weight_clip: float = 4.0    # Lipschitz control for attention params
+
+
+TRAIN = TrainCfg()
+
+
+# ---------------------------------------------------------------------------
+# Derived shapes
+# ---------------------------------------------------------------------------
+
+
+def feat_dims(ds: DatasetCfg, model: ModelCfg) -> list[int]:
+    """Per-layer input feature dims [f_0 .. f_{L-1}] plus output dim f_L."""
+    return [ds.f_in_pad] + [model.hidden] * model.layers
+
+
+def branch_layout(f_l: int, h_l: int, fp: int) -> tuple[int, int]:
+    """(num_branches, padded_concat_dim) for a layer with f_l input features
+    and h_l pre-activation output dims.  fp == 0 => single branch."""
+    concat = f_l + h_l
+    if fp == 0:
+        return 1, concat
+    n_br = (concat + fp - 1) // fp
+    return n_br, n_br * fp
+
+
+def out_dim(ds: DatasetCfg, model: ModelCfg) -> int:
+    if ds.task == "link":
+        return model.hidden          # embeddings; pair scoring on top
+    return ds.n_classes
+
+
+# Subgraph artifact size classes for the sampling baselines.  A sampler picks
+# the smallest class its batch fits into; the harness records which.
+SUBGRAPH_SHAPES: dict[str, tuple[int, int]] = {
+    "sub_s": (512, 16384),
+    "sub_m": (1024, 49152),
+    "sub_l": (2048, 98304),
+    "sub_xl": (4096, 262144),
+}
+
+
+# Ablation grids (paper App. G), run on arxiv_sim + GCN.
+ABLATION_LAYERS = [1, 2, 3, 4, 5]
+ABLATION_CODEBOOK = [32, 64, 128, 256]
+ABLATION_BATCH = [128, 256, 512, 1024]

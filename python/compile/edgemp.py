@@ -1,0 +1,151 @@
+"""L2: exact edge-list message passing — the baseline compute path.
+
+Full-graph training ("oracle" rows of Table 4), NS-SAGE, Cluster-GCN and
+GraphSAINT all run standard exact message passing over a node set + edge
+list; they differ only in *which* subgraph the coordinator feeds (and in the
+SAINT normalization coefficients).  One artifact family serves them all:
+
+  x     : (nn, f)  node features of the (sub)graph, padded to nn
+  esrc  : (ne,)    source node index per directed edge (padded with 0)
+  edst  : (ne,)    destination node index per directed edge
+  ecoef : (ne,)    convolution coefficient per edge (0 ⇒ padding edge).
+                   GCN: sym-norm D̃^{-1/2}ÃD̃^{-1/2} entries (incl. self loop
+                   edges); SAGE: 1/deg(dst); SAINT: divided by α_e; GAT: edge
+                   validity (attention computed in-graph).
+  y, wloss        : labels and per-node loss weights (mask / λ_v weights)
+
+Autodiff end-to-end — the baselines back-propagate exactly on the subgraph,
+matching the sampling methods in the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import DatasetCfg, ModelCfg, TrainCfg, out_dim
+from .kernels.gat_scores import SCORE_CAP, SLOPE
+from .model import (bce_multilabel_loss, ce_loss, link_loss, param_specs,
+                    unflatten_params)
+
+
+def edge_mp(x, esrc, edst, ecoef, nn: int):
+    """out[i] = Σ_{e: dst_e = i} ecoef_e · x[src_e] (scatter-add)."""
+    return jnp.zeros((nn, x.shape[1]), x.dtype).at[edst].add(
+        ecoef[:, None] * x[esrc]
+    )
+
+
+def _gat_edge_layer(params, x, esrc, edst, evalid, nn, heads):
+    outs = []
+    for s in range(heads):
+        proj = x @ params["w"][s]
+        e_src = proj @ params["a_src"][s]
+        e_dst = proj @ params["a_dst"][s]
+        raw = e_dst[edst] + e_src[esrc]
+        raw = jnp.where(raw >= 0, raw, SLOPE * raw)
+        score = evalid * jnp.exp(jnp.minimum(raw, SCORE_CAP))
+        num = jnp.zeros((nn, proj.shape[1]), x.dtype).at[edst].add(
+            score[:, None] * proj[esrc]
+        )
+        den = jnp.zeros((nn,), x.dtype).at[edst].add(score)
+        outs.append(num / jnp.maximum(den, 1e-12)[:, None])
+    return jnp.concatenate(outs, axis=1) + params["bias"]
+
+
+def _edge_forward(model: ModelCfg, ds: DatasetCfg, layer_params, x,
+                  esrc, edst, ecoef, nn: int):
+    h = x
+    n_layers = model.layers
+    for l in range(n_layers):
+        last = l == n_layers - 1
+        p = layer_params[l]
+        if model.name == "gcn":
+            y = edge_mp(h, esrc, edst, ecoef, nn) @ p["w"] + p["bias"]
+        elif model.name == "sage":
+            y = h @ p["w_self"] + edge_mp(h, esrc, edst, ecoef, nn) @ p["w_nbr"] + p["bias"]
+        elif model.name == "gat":
+            heads = 1 if last else model.heads
+            y = _gat_edge_layer(p, h, esrc, edst, ecoef, nn, heads)
+        else:
+            raise ValueError(f"edge path does not support {model.name}")
+        h = y if last else jax.nn.relu(y)
+    return h
+
+
+def build_edge_train(ds: DatasetCfg, model: ModelCfg, tc: TrainCfg,
+                     nn: int, ne: int):
+    """Exact subgraph train step: loss + ∇params on a padded edge list."""
+    pspecs = param_specs(ds, model)
+    c = out_dim(ds, model)
+    link = ds.task == "link"
+
+    in_specs = [
+        ("x", (nn, ds.f_in_pad), "f32"),
+        ("esrc", (ne,), "i32"),
+        ("edst", (ne,), "i32"),
+        ("ecoef", (ne,), "f32"),
+    ]
+    if link:
+        in_specs += [
+            ("psrc", (tc.p_pairs,), "i32"),
+            ("pdst", (tc.p_pairs,), "i32"),
+            ("py", (tc.p_pairs,), "f32"),
+            ("pw", (tc.p_pairs,), "f32"),
+        ]
+    elif ds.multilabel:
+        in_specs += [("y", (nn, c), "f32"), ("wloss", (nn,), "f32")]
+    else:
+        in_specs += [("y", (nn,), "i32"), ("wloss", (nn,), "f32")]
+    in_specs += [(f"param.{n}", s, "f32") for n, s in pspecs]
+
+    out_specs = [("loss", (), "f32"), ("logits", (nn, c), "f32")]
+    out_specs += [(f"grad.{n}", s, "f32") for n, s in pspecs]
+
+    def fn(*flat):
+        i = 0
+        x, esrc, edst, ecoef = flat[i:i + 4]; i += 4
+        if link:
+            psrc, pdst, py, pw = flat[i:i + 4]; i += 4
+        else:
+            y, wl = flat[i:i + 2]; i += 2
+        params_flat = list(flat[i:])
+
+        def loss_fn(pf):
+            lp = unflatten_params(model, model.layers, pf)
+            outp = _edge_forward(model, ds, lp, x, esrc, edst, ecoef, nn)
+            if link:
+                loss, _ = link_loss(outp, psrc, pdst, py, pw)
+            elif ds.multilabel:
+                loss = bce_multilabel_loss(outp, y, wl)
+            else:
+                loss = ce_loss(outp, y, wl)
+            return loss, outp
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params_flat)
+        return tuple([loss, logits] + list(grads))
+
+    return fn, in_specs, out_specs
+
+
+def build_edge_infer(ds: DatasetCfg, model: ModelCfg, tc: TrainCfg,
+                     nn: int, ne: int):
+    """Exact forward pass over a (sub)graph — used for full-graph inference
+    (layer-stacked) and the baselines' neighbor-expansion inference."""
+    pspecs = param_specs(ds, model)
+    c = out_dim(ds, model)
+    in_specs = [
+        ("x", (nn, ds.f_in_pad), "f32"),
+        ("esrc", (ne,), "i32"),
+        ("edst", (ne,), "i32"),
+        ("ecoef", (ne,), "f32"),
+    ]
+    in_specs += [(f"param.{n}", s, "f32") for n, s in pspecs]
+    out_specs = [("logits", (nn, c), "f32")]
+
+    def fn(*flat):
+        x, esrc, edst, ecoef = flat[:4]
+        lp = unflatten_params(model, model.layers, list(flat[4:]))
+        return (_edge_forward(model, ds, lp, x, esrc, edst, ecoef, nn),)
+
+    return fn, in_specs, out_specs

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the VQ-GNN compute hot-spots, plus their jnp oracle.
+
+Kernels (all lowered with interpret=True — see /opt/xla-example/README.md):
+  - appx_mp.fused_mp      fused [C_in | C_out~] message passing (Eq. 6/7)
+  - vq_assign.vq_assign   nearest-codeword search (Alg. 2 FINDNEAREST)
+  - gat_scores.gat_scores dense additive-attention tile with analytic VJP
+"""
+
+from . import ref  # noqa: F401
+from .appx_mp import fused_mp  # noqa: F401
+from .gat_scores import gat_scores  # noqa: F401
+from .vq_assign import vq_assign  # noqa: F401

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: fused approximated message passing (paper Eq. 6/7 core).
+
+Computes, over the padded concat space F = B*fp:
+
+    out[:, j·fp:(j+1)·fp] = C_in @ X_pad[:, j·fp:(j+1)·fp] + C̃_out[j] @ X̃[j]
+
+i.e. one fused (b, b)·(b, F) GEMM plus the per-branch sketch GEMMs.  The same
+kernel serves the forward pass (Eq. 6: X_pad carries X_B in the feature
+columns) and the backward pass (Eq. 7: X_pad carries G_B in the gradient
+columns and the sketches are the transposed-convolution sketches).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid = (b/bt, B); each step
+keeps a (bt, b) slab of C_in, a (b, fp) slab of X_pad, a (bt, k) slab of the
+branch sketch and the (k, fp) branch codebook in VMEM and issues two MXU
+matmuls accumulating into a (bt, fp) output tile.  On this image the kernel
+runs with interpret=True (CPU), which lowers to plain HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_mp_kernel(c_in_ref, x_ref, c_out_ref, cw_ref, o_ref):
+    # c_in_ref: (bt, b); x_ref: (b, fp); c_out_ref: (1, bt, k); cw_ref: (1, k, fp)
+    exact = jnp.dot(c_in_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+    approx = jnp.dot(
+        c_out_ref[0], cw_ref[0], preferred_element_type=jnp.float32
+    )
+    o_ref[...] = exact + approx
+
+
+def _pick_bt(b: int) -> int:
+    """Row-tile size: the largest of {128, 64, b} that divides b."""
+    for bt in (256, 128, 64):
+        if b % bt == 0:
+            return bt
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_mp(c_in, x_pad, c_out, cw, interpret: bool = True):
+    """Fused [C_in | C̃_out] @ [X_pad ; X̃] over the padded concat space.
+
+    c_in : (b, b) f32   intra-mini-batch convolution block
+    x_pad: (b, F) f32   batch vectors laid out over concat columns
+    c_out: (B, b, k) f32 per-branch out-of-batch sketches
+    cw   : (B, k, fp) f32 per-branch codewords
+    returns (b, F) f32 with F = B*fp
+    """
+    b = c_in.shape[0]
+    n_br, _, k = c_out.shape
+    fp = cw.shape[2]
+    assert x_pad.shape == (b, n_br * fp), (x_pad.shape, (b, n_br * fp))
+    bt = _pick_bt(b)
+    grid = (b // bt, n_br)
+    return pl.pallas_call(
+        _fused_mp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, b), lambda i, j: (i, 0)),
+            pl.BlockSpec((b, fp), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bt, k), lambda i, j: (j, i, 0)),
+            pl.BlockSpec((1, k, fp), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, fp), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_br * fp), jnp.float32),
+        interpret=interpret,
+    )(c_in, x_pad, c_out, cw)
+
+
+def vmem_footprint_bytes(b: int, k: int, n_br: int, fp: int) -> int:
+    """Estimated VMEM residency per grid step (used by the §Perf analysis)."""
+    bt = _pick_bt(b)
+    return 4 * (bt * b + b * fp + bt * k + k * fp + bt * fp)
+
+
+def mxu_flops(b: int, k: int, n_br: int, fp: int) -> int:
+    """MXU MACs for one full fused_mp invocation."""
+    return b * b * (n_br * fp) + n_br * b * k * fp

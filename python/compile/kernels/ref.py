@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness contract).
+
+Each function here is the mathematical definition the corresponding kernel in
+this package must match (up to float tolerance).  pytest sweeps shapes/dtypes
+via hypothesis and asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Attention scores are exp(LeakyReLU(·)) without max-subtraction (GAT);
+# capped for numerical stability (part of the Lipschitz control, App. E).
+SCORE_CAP = 8.0
+
+
+def unsketch_ref(c_out, cw):
+    """Out-of-batch message reconstruction: Σ_branches C̃_out[j] @ X̃[j]
+    laid out over the padded concat (feature ‖ gradient) space.
+
+    c_out: (B, b, k)  per-branch sketches C_out R_j
+    cw   : (B, k, fp) per-branch codewords
+    returns (b, B*fp) — caller slices feature vs gradient columns.
+    """
+    b = c_out.shape[1]
+    n_br, _k, fp = cw.shape
+    return jnp.einsum("jbv,jvp->bjp", c_out, cw).reshape(b, n_br * fp)
+
+
+def appx_mp_ref(c_in, xb, c_out, cw):
+    """Approximated forward message passing (paper Eq. 6, pre-weight half).
+
+    out = C_in @ X_B  +  unsketch(C̃_out, X̃)[:, :f]
+
+    c_in : (b, b) intra-mini-batch convolution block
+    xb   : (b, f) mini-batch features
+    """
+    f = xb.shape[1]
+    return c_in @ xb + unsketch_ref(c_out, cw)[:, :f]
+
+
+def vq_assign_ref(z, cww):
+    """Nearest-codeword assignment per branch (whitened space).
+
+    z   : (B, b, fp) whitened mini-batch vectors per branch
+    cww : (B, k, fp) whitened codewords per branch
+    returns (B, b) int32 = argmin_v ||z - cww_v||²
+    """
+    d = (
+        (z * z).sum(-1)[:, :, None]
+        - 2.0 * jnp.einsum("jbp,jvp->jbv", z, cww)
+        + (cww * cww).sum(-1)[:, None, :]
+    )
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def vq_assign_masked_ref(z, cww, mask):
+    """Assignment using only unmasked dims (inductive inference: the gradient
+    half of the concat space is unknown for unseen nodes, so mask it out).
+
+    mask: (B, fp) — 1.0 for dims that participate in the distance.
+    """
+    zm = z * mask[:, None, :]
+    cm = cww * mask[:, None, :]
+    d = (
+        (zm * zm).sum(-1)[:, :, None]
+        - 2.0 * jnp.einsum("jbp,jvp->jbv", zm, cm)
+        + (cm * cm).sum(-1)[:, None, :]
+    )
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def gat_scores_ref(e_src, e_dst, mask, slope: float = 0.2):
+    """Additive (GAT) attention scores over a dense (b, b) tile.
+
+    score[i, j] = mask[i, j] * exp(LeakyReLU(e_dst[i] + e_src[j]))
+
+    Row i is the *target* (message receiver): the "query" half comes from the
+    destination node's projection, matching GAT's a·[W x_i ‖ W x_j].
+    """
+    s = e_dst[:, None] + e_src[None, :]
+    s = jnp.where(s >= 0, s, slope * s)
+    return mask * jnp.exp(jnp.minimum(s, SCORE_CAP))
+
+
+def segment_softmax_mp_ref(x, esrc, edst, escore, n: int):
+    """Edge-list attention aggregation with segment-sum normalization
+    (the full-graph / subgraph GAT oracle used by the baseline path).
+
+    out[i] = Σ_{e: dst=i} escore[e]·x[src_e] / Σ_{e: dst=i} escore[e]
+    """
+    num = jnp.zeros((n, x.shape[1]), x.dtype).at[edst].add(escore[:, None] * x[esrc])
+    den = jnp.zeros((n,), x.dtype).at[edst].add(escore)
+    return num / jnp.maximum(den, 1e-12)[:, None]
+
+
+def edge_mp_ref(x, esrc, edst, ecoef, n: int):
+    """Plain edge-list message passing: out[i] = Σ_{e: dst=i} coef_e·x[src_e]."""
+    return jnp.zeros((n, x.shape[1]), x.dtype).at[edst].add(ecoef[:, None] * x[esrc])

@@ -1,0 +1,212 @@
+"""L2: generalized graph convolution layers with VQ-approximated message
+passing (paper Eqs. 6 & 7).
+
+The core primitive is :func:`mp_linear` — a custom-VJP boundary implementing
+one convolution support `(C X) W` of Eq. 1 under the mini-batch + codebook
+approximation:
+
+  forward  (Eq. 6):  y = (C_in X_B + unsketch_feat(C̃_out, X̃)) W
+  backward (Eq. 7):  ∇X_B = (C_inᵀ G_B + unsketch_grad((C̃ᵀ)_out, G̃)) Wᵀ
+
+Both directions are the *same* fused L1 kernel (`kernels.fused_mp`): the
+backward call feeds `C_inᵀ` and places the incoming gradient in the gradient
+columns of the padded concat space, so the "blue" out-of-batch messages of
+paper Fig. 2 ride in through the gradient half of the codewords.
+
+The weight gradient `∇W = Mᵀ G_B` is exact given the approximated features
+(paper App. C), and the convolution-matrix cotangents (∂ℓ/∂C_in, ∂ℓ/∂C̃_out)
+are returned so learnable convolutions (GAT / Graph Transformer) train their
+attention parameters through both the exact and approximated message paths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.appx_mp import fused_mp
+from .kernels.gat_scores import SCORE_CAP, SLOPE, gat_scores
+
+
+def _pad_cols(x, width: int, offset: int = 0):
+    """Place x into columns [offset, offset+x.shape[1]) of a (b, width) zero
+    buffer (the concat-space layout used by the fused kernel)."""
+    b, f = x.shape
+    out = jnp.zeros((b, width), x.dtype)
+    return jax.lax.dynamic_update_slice(out, x, (0, offset))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def mp_linear(gcol: tuple, xb, w, c_in, c_out, ct_out, cw):
+    """One convolution support of Eq. 1 under approximated message passing.
+
+    gcol  : static (start, width) — which gradient columns of the concat
+            space this support consumes in the backward pass (multi-head
+            attention slices its own head's columns).
+    xb    : (b, f)       mini-batch features
+    w     : (f, h)       layer weight for this support
+    c_in  : (b, b)       intra-batch convolution block
+    c_out : (B, b, k)    out-of-batch sketches C_out R (forward)
+    ct_out: (B, b, k)    transposed-conv sketches (Cᵀ)_out R (backward)
+    cw    : (B, k, fp)   concat-space codewords X̃ ‖ G̃
+    """
+    y, _ = _mp_linear_fwd(gcol, xb, w, c_in, c_out, ct_out, cw)
+    return y
+
+
+def _mp_linear_fwd(gcol, xb, w, c_in, c_out, ct_out, cw):
+    b, f = xb.shape
+    n_br, k, fp = cw.shape
+    width = n_br * fp
+    full = fused_mp(c_in, _pad_cols(xb, width), c_out, cw)
+    m = full[:, :f]
+    y = m @ w
+    return y, (xb, w, c_in, ct_out, cw, m)
+
+
+def _mp_linear_bwd(gcol, res, g):
+    xb, w, c_in, ct_out, cw, m = res
+    b, f = xb.shape
+    n_br, k, fp = cw.shape
+    width = n_br * fp
+    gstart, gwidth = gcol
+    # Approximated backward message passing (Eq. 7): feed C_inᵀ and the
+    # incoming gradient (placed in this support's gradient columns) through
+    # the same fused kernel; the codeword half contributes (C̃ᵀ)_out G̃.
+    ubwd = fused_mp(
+        jnp.transpose(c_in), _pad_cols(g, width, gstart), ct_out, cw
+    )
+    gslice = jax.lax.dynamic_slice(ubwd, (0, gstart), (b, gwidth))
+    dxb = gslice @ w.T
+    dw = m.T @ g
+    # Convolution cotangents (pruned by XLA for fixed-convolution backbones).
+    dm = g @ w.T
+    dc_in = dm @ xb.T
+    dmfull = _pad_cols(dm, width)
+    dc_out = jnp.einsum(
+        "bjp,jvp->jbv", dmfull.reshape(b, n_br, fp), cw
+    )
+    return dxb, dw, dc_in, dc_out, None, None
+
+
+mp_linear.defvjp(_mp_linear_fwd, _mp_linear_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Backbone layers.  Each takes the layer's VQ context (sketches + codewords)
+# and a probe (zeros; its gradient is exactly G_B^{l+1}, captured by the
+# training step for the codebook update).
+# ---------------------------------------------------------------------------
+
+
+def gcn_layer(params, ctx, xb, probe):
+    """GCN (Table 1): single fixed support C = D̃^{-1/2} Ã D̃^{-1/2}."""
+    h = mp_linear(
+        ctx["gcol"], xb, params["w"], ctx["c_in"], ctx["c_out"],
+        ctx["ct_out"], ctx["cw"],
+    )
+    return h + params["bias"] + probe
+
+
+def sage_layer(params, ctx, xb, probe):
+    """SAGE-Mean (Table 1): identity support + row-normalized D^{-1}A.
+
+    The identity support needs no approximation (C_in = I_b, C_out = 0), so
+    it is a plain dense product; only the mean aggregator goes through the
+    approximated message-passing boundary.
+    """
+    h_self = xb @ params["w_self"]
+    h_nbr = mp_linear(
+        ctx["gcol"], xb, params["w_nbr"], ctx["c_in"], ctx["c_out"],
+        ctx["ct_out"], ctx["cw"],
+    )
+    return h_self + h_nbr + params["bias"] + probe
+
+
+def _leaky_exp(s):
+    return jnp.exp(jnp.minimum(jnp.where(s >= 0, s, SLOPE * s), SCORE_CAP))
+
+
+def gat_layer(params, ctx, xb, probe, heads: int):
+    """GAT (Table 1) under the decoupled row-normalization trick (App. E).
+
+    Per head s with projection W_s and attention vectors a_src/a_dst:
+      unnormalized score  s_ij = exp(LeakyReLU(e_dst_i + e_src_j)),
+      in-batch block via the L1 `gat_scores` kernel, out-of-batch block via
+      codeword projections weighted by the masked count sketches M_out /
+      M_outᵀ supplied by the coordinator.  Numerator goes through
+      `mp_linear`; the denominator is the same attention applied to 1s —
+      i.e. plain row sums of the (approximate) convolution matrix.
+
+    The probe is injected at the *unnormalized* numerator, so the captured
+    gradient codewords pair with ∂ℓ/∂num — the quantity Eq. 7 needs at this
+    boundary under the decoupled normalization (see DESIGN.md §2).
+    """
+    b, f = xb.shape
+    cw = ctx["cw"]                       # (1, k, F) single-branch codebook
+    cw_feat = cw[0, :, :f]               # feature half X̃ (k, f)
+    hh = params["w"][0].shape[1]         # per-head out dim
+    outs = []
+    for s in range(heads):
+        w_s = params["w"][s]
+        proj = xb @ w_s                  # (b, hh)
+        e_src = proj @ params["a_src"][s]
+        e_dst = proj @ params["a_dst"][s]
+        cproj = cw_feat @ w_s            # codeword projections (k, hh)
+        ecw_src = cproj @ params["a_src"][s]
+        ecw_dst = cproj @ params["a_dst"][s]
+        # In-batch unnormalized scores on the fixed mask 𝔠 = A + I (Eq. 2).
+        c_in = gat_scores(e_src, e_dst, ctx["mask_in"])
+        # Out-of-batch: merged messages from codeword v (paper Fig. 1) carry
+        # weight M_out[i,v]·h(X_i, X̃_v); transposed side mirrors it.
+        c_out = (ctx["m_out"] * _leaky_exp(e_dst[:, None] + ecw_src[None, :]))[None]
+        ct_out = (ctx["m_out_t"] * _leaky_exp(ecw_dst[None, :] + e_src[:, None]))[None]
+        hh0 = s * hh
+        num = mp_linear(
+            (f + hh0, hh), xb, w_s, c_in, c_out, ct_out, cw
+        ) + jax.lax.dynamic_slice(probe, (0, hh0), (b, hh))
+        den = c_in.sum(axis=1) + c_out[0].sum(axis=1)
+        outs.append(num / jnp.maximum(den, 1e-12)[:, None])
+    return jnp.concatenate(outs, axis=1) + params["bias"]
+
+
+def txf_layer(params, ctx, xb, probe, heads: int):
+    """Graph-Transformer hybrid (paper Table 8): local GAT attention +
+    global scaled-dot attention + a linear branch, summed.
+
+    Global attention has 𝔠 = all-ones (App. Table 5): every out-of-batch
+    node contributes, so the sketch weight for codeword v is simply the
+    out-of-batch member count `cnt_out[v]` times the attention kernel
+    evaluated against the codeword.
+
+    The gradient half of the concat space is 2h wide: cols [f, f+h) hold the
+    local-attention numerator gradients, cols [f+h, f+2h) the global ones.
+    The probe is (b, 2h), split accordingly.
+    """
+    b, f = xb.shape
+    cw = ctx["cw"]
+    cw_feat = cw[0, :, :f]
+    h = params["w_lin"].shape[1]
+    local = gat_layer(
+        {k: params[k] for k in ("w", "a_src", "a_dst", "bias")},
+        ctx, xb, probe[:, :h], heads,
+    )
+    # Global attention branch (single head).
+    dk = params["wq"].shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dk))
+    q = xb @ params["wq"]
+    kk = xb @ params["wk"]
+    kcw = cw_feat @ params["wk"]
+    qcw = cw_feat @ params["wq"]
+    c_in = jnp.exp(jnp.minimum(scale * (q @ kk.T), SCORE_CAP))
+    c_out = (ctx["cnt_out"][None, :] * jnp.exp(jnp.minimum(scale * (q @ kcw.T), SCORE_CAP)))[None]
+    ct_out = (ctx["cnt_out"][None, :] * jnp.exp(jnp.minimum(scale * (qcw @ kk.T), SCORE_CAP)).T)[None]
+    num = mp_linear(
+        (f + h, h), xb, params["wv"], c_in, c_out, ct_out, cw
+    ) + probe[:, h:]
+    den = c_in.sum(axis=1) + c_out[0].sum(axis=1)
+    glob = num / jnp.maximum(den, 1e-12)[:, None]
+    lin = xb @ params["w_lin"]
+    return local + glob + lin

@@ -1,0 +1,56 @@
+//! End-to-end benchmarks: steps/sec per method on arxiv_sim (one per
+//! paper-table row family) plus both inference paths — the measured numbers
+//! behind Table 3 / Fig. 4 / the §6 inference comparison.
+//!
+//!   cargo bench --offline
+
+use std::rc::Rc;
+
+use vq_gnn::coordinator::edge_trainer::{Baseline, EdgeTrainer};
+use vq_gnn::coordinator::vq_trainer::VqTrainer;
+use vq_gnn::datasets::Dataset;
+use vq_gnn::runtime::manifest::Manifest;
+use vq_gnn::runtime::Runtime;
+use vq_gnn::sampler::NodeStrategy;
+use vq_gnn::util::bench::bench;
+
+fn main() {
+    let man = Manifest::load(&Manifest::default_dir()).expect("run make artifacts");
+    let mut rt = Runtime::new().unwrap();
+    let ds = Rc::new(Dataset::generate(&man.datasets["arxiv_sim"], 42));
+
+    // --- training steps per method (Table 3 / Fig. 4 substrate) ----------
+    let mut vq =
+        VqTrainer::new(&mut rt, &man, ds.clone(), "gcn", "", NodeStrategy::Nodes, 1)
+            .unwrap();
+    vq.train_step(&mut rt).unwrap();
+    bench("step/vq-gnn gcn b=512", 5.0, || {
+        vq.train_step(&mut rt).unwrap();
+    });
+
+    for (name, model, kind) in [
+        ("full", "gcn", Baseline::FullGraph),
+        ("cluster", "gcn", Baseline::ClusterGcn),
+        ("saint", "gcn", Baseline::SaintRw),
+        ("ns", "sage", Baseline::NsSage),
+    ] {
+        let mut tr = EdgeTrainer::new(&mut rt, &man, ds.clone(), model, kind, 1).unwrap();
+        tr.train_step(&mut rt).unwrap();
+        bench(&format!("step/{name} {model}"), 4.0, || {
+            tr.train_step(&mut rt).unwrap();
+        });
+    }
+
+    // --- inference paths (§6 comparison) ----------------------------------
+    let nodes: Vec<u32> = (0..ds.n() as u32).collect();
+    bench("infer/vq-gnn minibatch all-nodes", 5.0, || {
+        vq.infer_nodes(&mut rt, &nodes).unwrap();
+    });
+    let mut base =
+        EdgeTrainer::new(&mut rt, &man, ds.clone(), "sage", Baseline::SaintRw, 1)
+            .unwrap();
+    base.train_step(&mut rt).unwrap();
+    bench("infer/neighbor-expansion full-graph", 5.0, || {
+        base.infer_full(&mut rt).unwrap();
+    });
+}

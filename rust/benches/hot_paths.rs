@@ -1,0 +1,71 @@
+//! Micro-benchmarks of the L3 hot paths (in-tree harness — criterion is
+//! unavailable offline): sketch building, VQ EMA update, batch gather,
+//! codeword tensor assembly, and one full VQ train step.
+//!
+//!   cargo bench --offline
+
+use std::rc::Rc;
+
+use vq_gnn::coordinator::vq_trainer::VqTrainer;
+use vq_gnn::datasets::Dataset;
+use vq_gnn::graph::Conv;
+use vq_gnn::runtime::manifest::Manifest;
+use vq_gnn::runtime::Runtime;
+use vq_gnn::sampler::NodeStrategy;
+use vq_gnn::util::bench::bench;
+use vq_gnn::util::rng::Rng;
+use vq_gnn::vq::sketch::{build_fixed, SketchScratch};
+use vq_gnn::vq::{LayerVq, VqBranch};
+
+fn main() {
+    let man = Manifest::load(&Manifest::default_dir()).expect("run make artifacts");
+    let ds = Rc::new(Dataset::generate(&man.datasets["arxiv_sim"], 42));
+    let mut rng = Rng::new(1);
+
+    // --- sketch building (the per-step O(b·d·B) scan) --------------------
+    let spec = man.artifact("vq_train_arxiv_sim_gcn").unwrap();
+    let layer = LayerVq::init(&spec.plan[1], spec.k, ds.n(), &mut rng);
+    let batch: Vec<u32> = rng.sample_distinct(ds.n(), spec.b);
+    let mut scratch = SketchScratch::new(ds.n());
+    bench("sketch_build/gcn b=512 k=128 B=8", 1.5, || {
+        let (a, b2, c) = build_fixed(&ds.graph, Conv::GcnSym, &batch, &layer, &mut scratch);
+        std::hint::black_box((a, b2, c));
+    });
+
+    // --- VQ EMA update per branch ----------------------------------------
+    let mut br = VqBranch::init(128, 16, &mut rng);
+    let v: Vec<f32> = (0..512 * 16).map(|_| rng.gauss_f32()).collect();
+    let assign: Vec<i32> = (0..512).map(|_| rng.below(128) as i32).collect();
+    bench("vq_update/branch b=512 k=128 fp=16", 1.0, || {
+        br.update(&v, &assign, 0.99, 0.99);
+    });
+
+    // --- host-side assignment (inductive bootstrap path) -----------------
+    bench("vq_assign_host/branch b=512 k=128 fp=16", 1.0, || {
+        std::hint::black_box(br.assign_host(&v));
+    });
+
+    // --- codeword tensor assembly -----------------------------------------
+    bench("codeword_tensors/layer", 1.0, || {
+        std::hint::black_box((layer.cw_tensor(), layer.cww_tensor()));
+    });
+
+    // --- feature gather -----------------------------------------------------
+    bench("gather_features/b=512 f=64", 1.0, || {
+        std::hint::black_box(vq_gnn::coordinator::gather_features(
+            &ds.features,
+            ds.cfg.f_in_pad,
+            &batch,
+        ));
+    });
+
+    // --- one full VQ train step (sketches + execute + updates) ------------
+    let mut rt = Runtime::new().unwrap();
+    let mut tr =
+        VqTrainer::new(&mut rt, &man, ds.clone(), "gcn", "", NodeStrategy::Nodes, 1)
+            .unwrap();
+    tr.train_step(&mut rt).unwrap(); // compile + warm
+    bench("train_step/vq arxiv gcn (end-to-end)", 4.0, || {
+        tr.train_step(&mut rt).unwrap();
+    });
+}

@@ -1,0 +1,239 @@
+//! Checkpointing: serialize/restore model parameters and the full VQ state
+//! (codebooks, EMA statistics, assignment tables) so long runs survive
+//! restarts and trained models can be shipped to inference-only processes.
+//!
+//! Format: little-endian binary, versioned header, length-prefixed named
+//! f32/u32 sections (no serde offline — DESIGN.md §7).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::tensor::Tensor;
+use crate::vq::VqModel;
+
+const MAGIC: u32 = 0x56_51_47_31; // "VQG1"
+
+struct Writer<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Writer<W> {
+    fn u32(&mut self, x: u32) -> Result<()> {
+        self.w.write_all(&x.to_le_bytes())?;
+        Ok(())
+    }
+
+    fn f32s(&mut self, xs: &[f32]) -> Result<()> {
+        self.u32(xs.len() as u32)?;
+        for &x in xs {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    fn u32s(&mut self, xs: &[u32]) -> Result<()> {
+        self.u32(xs.len() as u32)?;
+        for &x in xs {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let mut out = vec![0.0f32; n];
+        let mut b = [0u8; 4];
+        for x in out.iter_mut() {
+            self.r.read_exact(&mut b)?;
+            *x = f32::from_le_bytes(b);
+        }
+        Ok(out)
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let mut out = vec![0u32; n];
+        let mut b = [0u8; 4];
+        for x in out.iter_mut() {
+            self.r.read_exact(&mut b)?;
+            *x = u32::from_le_bytes(b);
+        }
+        Ok(out)
+    }
+}
+
+/// Persist parameters + VQ state.  The artifact name is stored so a loader
+/// can refuse a shape-incompatible restore early.
+pub fn save(path: &Path, artifact: &str, params: &[Tensor], vq: &VqModel) -> Result<()> {
+    let f = std::fs::File::create(path).context("create checkpoint")?;
+    let mut w = Writer { w: std::io::BufWriter::new(f) };
+    w.u32(MAGIC)?;
+    w.u32(artifact.len() as u32)?;
+    w.w.write_all(artifact.as_bytes())?;
+    w.u32(params.len() as u32)?;
+    for p in params {
+        w.u32(p.shape.len() as u32)?;
+        for &d in &p.shape {
+            w.u32(d as u32)?;
+        }
+        w.f32s(&p.f)?;
+    }
+    w.u32(vq.layers.len() as u32)?;
+    for layer in &vq.layers {
+        w.u32(layer.k as u32)?;
+        w.u32(layer.n as u32)?;
+        w.u32(layer.branches.len() as u32)?;
+        for br in &layer.branches {
+            w.f32s(&br.cww)?;
+            w.f32s(&br.counts)?;
+            w.f32s(&br.sums)?;
+            w.f32s(&br.mean)?;
+            w.f32s(&br.var)?;
+        }
+        w.u32s(&layer.assign)?;
+    }
+    Ok(())
+}
+
+/// Restore into existing (shape-matched) params + VQ state.
+pub fn load(path: &Path, artifact: &str, params: &mut [Tensor], vq: &mut VqModel) -> Result<()> {
+    let f = std::fs::File::open(path).context("open checkpoint")?;
+    let mut r = Reader { r: std::io::BufReader::new(f) };
+    if r.u32()? != MAGIC {
+        bail!("not a vq-gnn checkpoint");
+    }
+    let alen = r.u32()? as usize;
+    let mut aname = vec![0u8; alen];
+    r.r.read_exact(&mut aname)?;
+    let aname = String::from_utf8(aname)?;
+    if aname != artifact {
+        bail!("checkpoint is for artifact '{aname}', expected '{artifact}'");
+    }
+    let np = r.u32()? as usize;
+    if np != params.len() {
+        bail!("checkpoint has {np} params, model has {}", params.len());
+    }
+    for p in params.iter_mut() {
+        let rank = r.u32()? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u32()? as usize);
+        }
+        if shape != p.shape {
+            bail!("param shape mismatch: {:?} vs {:?}", shape, p.shape);
+        }
+        p.f = r.f32s()?;
+        if p.f.len() != p.numel() {
+            bail!("param payload mismatch");
+        }
+    }
+    let nl = r.u32()? as usize;
+    if nl != vq.layers.len() {
+        bail!("layer count mismatch");
+    }
+    for layer in vq.layers.iter_mut() {
+        let k = r.u32()? as usize;
+        let n = r.u32()? as usize;
+        let nb = r.u32()? as usize;
+        if k != layer.k || n != layer.n || nb != layer.branches.len() {
+            bail!("vq layer shape mismatch");
+        }
+        for br in layer.branches.iter_mut() {
+            br.cww = r.f32s()?;
+            br.counts = r.f32s()?;
+            br.sums = r.f32s()?;
+            br.mean = r.f32s()?;
+            br.var = r.f32s()?;
+            if br.cww.len() != br.k * br.fp || br.mean.len() != br.fp {
+                bail!("vq branch payload mismatch");
+            }
+        }
+        layer.assign = r.u32s()?;
+        if layer.assign.len() != nb * n {
+            bail!("assignment table mismatch");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::LayerPlan;
+    use crate::util::rng::Rng;
+
+    fn mk_vq(seed: u64) -> VqModel {
+        let plan = LayerPlan { f_in: 8, h_out: 4, g_dim: 4, n_br: 2, fp: 6, cf: 12, heads: 1 };
+        VqModel::init(&[plan.clone(), plan], 5, 30, seed)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let dir = std::env::temp_dir().join("vqgnn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let mut rng = Rng::new(1);
+        let params = vec![
+            Tensor::from_f32(&[3, 4], (0..12).map(|_| rng.gauss_f32()).collect()),
+            Tensor::from_f32(&[4], vec![1.0, 2.0, 3.0, 4.0]),
+        ];
+        let vq = mk_vq(7);
+        save(&path, "vq_train_x", &params, &vq).unwrap();
+
+        let mut params2 = vec![Tensor::zeros(&[3, 4]), Tensor::zeros(&[4])];
+        let mut vq2 = mk_vq(99); // different init, will be overwritten
+        load(&path, "vq_train_x", &mut params2, &mut vq2).unwrap();
+        assert_eq!(params[0].f, params2[0].f);
+        assert_eq!(params[1].f, params2[1].f);
+        for (a, b) in vq.layers.iter().zip(&vq2.layers) {
+            assert_eq!(a.assign, b.assign);
+            for (x, y) in a.branches.iter().zip(&b.branches) {
+                assert_eq!(x.cww, y.cww);
+                assert_eq!(x.counts, y.counts);
+                assert_eq!(x.mean, y.mean);
+            }
+        }
+    }
+
+    #[test]
+    fn refuses_wrong_artifact_and_shapes() {
+        let dir = std::env::temp_dir().join("vqgnn_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.ckpt");
+        let params = vec![Tensor::zeros(&[2, 2])];
+        let vq = mk_vq(1);
+        save(&path, "art_a", &params, &vq).unwrap();
+
+        let mut p2 = vec![Tensor::zeros(&[2, 2])];
+        let mut vq2 = mk_vq(1);
+        assert!(load(&path, "art_b", &mut p2, &mut vq2).is_err());
+        let mut p3 = vec![Tensor::zeros(&[2, 3])];
+        assert!(load(&path, "art_a", &mut p3, &mut vq2).is_err());
+        assert!(load(Path::new("/nonexistent/x.ckpt"), "art_a", &mut p2, &mut vq2).is_err());
+    }
+
+    #[test]
+    fn corrupt_file_fails_cleanly() {
+        let dir = std::env::temp_dir().join("vqgnn_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        std::fs::write(&path, b"garbage").unwrap();
+        let mut p = vec![];
+        let mut vq = mk_vq(1);
+        assert!(load(&path, "x", &mut p, &mut vq).is_err());
+    }
+}

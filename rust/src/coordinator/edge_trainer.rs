@@ -1,0 +1,509 @@
+//! Baseline trainers (paper §5): full-graph "oracle", NS-SAGE neighbor
+//! sampling, Cluster-GCN, GraphSAINT-RW.  All share the exact edge-list
+//! artifacts (python/compile/edgemp.py); they differ only in the subgraph
+//! each step feeds and in the normalization coefficients.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::opt::{self, Optimizer};
+use crate::coordinator::{gather_features, init_params, lipschitz_clip, RunStats};
+use crate::datasets::{Dataset, Split};
+use crate::graph::Conv;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{Artifact, Runtime};
+use crate::sampler::{cluster, neighbor, saint};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    FullGraph,
+    NsSage,
+    ClusterGcn,
+    SaintRw,
+}
+
+impl Baseline {
+    pub fn from_str(s: &str) -> Option<Baseline> {
+        match s {
+            "full" => Some(Baseline::FullGraph),
+            "ns" => Some(Baseline::NsSage),
+            "cluster" => Some(Baseline::ClusterGcn),
+            "saint" => Some(Baseline::SaintRw),
+            _ => None,
+        }
+    }
+
+    fn artifact_suffix(self) -> &'static str {
+        match self {
+            Baseline::FullGraph => "_full",
+            Baseline::NsSage => "_ns",
+            Baseline::ClusterGcn | Baseline::SaintRw => "_sub",
+        }
+    }
+}
+
+pub struct EdgeTrainer {
+    pub kind: Baseline,
+    pub train_art: Rc<Artifact>,
+    pub infer_art: Rc<Artifact>,
+    pub ds: Rc<Dataset>,
+    pub model_name: String,
+    pub params: Vec<Tensor>,
+    opt: opt::Adam,
+    rng: Rng,
+    weight_clip: f32,
+    // method-specific state
+    partition: Vec<u32>,
+    n_parts: usize,
+    saint: Option<saint::SaintSampler>,
+    pub stats: RunStats,
+}
+
+impl EdgeTrainer {
+    pub fn new(rt: &mut Runtime, man: &Manifest, ds: Rc<Dataset>,
+               model_name: &str, kind: Baseline, seed: u64) -> Result<EdgeTrainer> {
+        if kind == Baseline::NsSage && model_name == "gcn" {
+            anyhow::bail!("NS-SAGE is not compatible with the GCN backbone (Table 4 fn.1)");
+        }
+        let train_name = format!(
+            "edge_train_{}_{}{}", ds.cfg.name, model_name, kind.artifact_suffix()
+        );
+        let infer_name = format!("edge_infer_{}_{}_full", ds.cfg.name, model_name);
+        let train_art = rt.load(man, &train_name).context("load train artifact")?;
+        let infer_art = rt.load(man, &infer_name).context("load infer artifact")?;
+        let params = init_params(&train_art.spec, seed);
+        let opt = opt::Adam::new(1e-3, &params); // OGB reference setup (App. F)
+        let mut rng = Rng::new(seed ^ 0xBA5E);
+        let sub_nodes = train_art.spec.nn;
+        let (partition, n_parts) = if kind == Baseline::ClusterGcn {
+            // clusters of ~sub_nodes/2 so a batch groups ≥2 clusters
+            let parts = (ds.n() / (sub_nodes / 2).max(1)).max(2);
+            (cluster::partition(&ds.graph, parts, &mut rng), parts)
+        } else {
+            (vec![], 0)
+        };
+        let saint_s = if kind == Baseline::SaintRw {
+            // roots×(walk+1) ≈ sub_nodes/2 target
+            let roots = (sub_nodes / 8).max(8);
+            Some(saint::SaintSampler::new(&ds.graph, roots, 3, 30, &mut rng))
+        } else {
+            None
+        };
+        Ok(EdgeTrainer {
+            kind,
+            train_art,
+            infer_art,
+            model_name: model_name.to_string(),
+            params,
+            opt,
+            rng,
+            weight_clip: man.train.weight_clip as f32,
+            partition,
+            n_parts,
+            saint: saint_s,
+            stats: RunStats::default(),
+            ds,
+        })
+    }
+
+    fn conv(&self) -> Conv {
+        match self.model_name.as_str() {
+            "gcn" => Conv::GcnSym,
+            "sage" => Conv::SageMean,
+            _ => Conv::SageMean, // GAT: ecoef is just validity
+        }
+    }
+
+    fn is_gat(&self) -> bool {
+        self.model_name == "gat"
+    }
+
+    /// Subgraph for one step: (nodes, local arcs with coef, loss weights).
+    fn sample_subgraph(&mut self) -> (Vec<u32>, Vec<(u32, u32, f32)>, Vec<f32>) {
+        let ds = self.ds.clone();
+        let g = &ds.graph;
+        let cap_nodes = self.train_art.spec.nn;
+        match self.kind {
+            Baseline::FullGraph => {
+                let nodes: Vec<u32> = (0..g.n as u32).collect();
+                let mut arcs = Vec::with_capacity(g.num_arcs() + g.n);
+                for v in 0..g.n {
+                    for &u in g.in_neighbors(v) {
+                        let coef = if self.is_gat() {
+                            1.0
+                        } else {
+                            g.coef(self.conv(), u as usize, v)
+                        };
+                        arcs.push((u, v as u32, coef));
+                    }
+                }
+                // self loops: GCN's Ã and GAT's 𝔠 = A + I
+                if self.conv().with_self_loops() || self.is_gat() {
+                    for v in 0..g.n {
+                        let coef = if self.is_gat() {
+                            1.0
+                        } else {
+                            g.coef(Conv::GcnSym, v, v)
+                        };
+                        arcs.push((v as u32, v as u32, coef));
+                    }
+                }
+                let lam = vec![1.0; g.n];
+                (nodes, arcs, lam)
+            }
+            Baseline::ClusterGcn => {
+                // group random clusters until the capacity class is filled
+                let mut group = Vec::new();
+                let mut order: Vec<u32> = (0..self.n_parts as u32).collect();
+                self.rng.shuffle(&mut order);
+                let mut size = 0usize;
+                let mut sizes = vec![0usize; self.n_parts];
+                for &p in &self.partition {
+                    sizes[p as usize] += 1;
+                }
+                for &p in &order {
+                    if size + sizes[p as usize] > cap_nodes {
+                        continue;
+                    }
+                    size += sizes[p as usize];
+                    group.push(p);
+                    if size > cap_nodes * 3 / 4 {
+                        break;
+                    }
+                }
+                let nodes = cluster::batch_nodes(&self.partition, &group);
+                let arcs = self.induced_with_subgraph_norm(&nodes);
+                let lam = vec![1.0; nodes.len()];
+                (nodes, arcs, lam)
+            }
+            Baseline::SaintRw => {
+                let s = self.saint.as_ref().unwrap();
+                let (nodes, raw_arcs, lam) = s.sample(g, &mut self.rng);
+                let mut nodes = nodes;
+                nodes.truncate(cap_nodes);
+                let keep = nodes.len() as u32;
+                // subgraph normalization × SAINT α correction
+                let base = self.induced_with_subgraph_norm(&nodes);
+                // fold in the α edge corrections where available
+                let alpha: std::collections::HashMap<(u32, u32), f32> = raw_arcs
+                    .iter()
+                    .filter(|&&(u, v, _)| u < keep && v < keep)
+                    .map(|&(u, v, a)| ((u, v), a))
+                    .collect();
+                let arcs = base
+                    .into_iter()
+                    .map(|(u, v, c)| {
+                        let a = alpha.get(&(u, v)).copied().unwrap_or(1.0);
+                        // cap the variance of the unbiasedness correction
+                        (u, v, c * a.clamp(0.5, 4.0))
+                    })
+                    .collect();
+                let mut lam = lam;
+                lam.truncate(cap_nodes);
+                // normalize λ to mean 1 (stability at small sample counts)
+                let m: f32 = lam.iter().sum::<f32>() / lam.len().max(1) as f32;
+                for x in lam.iter_mut() {
+                    *x /= m.max(1e-6);
+                }
+                (nodes, arcs, lam)
+            }
+            Baseline::NsSage => {
+                let b_roots = (cap_nodes / 8).max(16);
+                let pool = ds.nodes_in_split(Split::Train);
+                let roots: Vec<u32> = (0..b_roots)
+                    .map(|_| pool[self.rng.below(pool.len())])
+                    .collect();
+                let fanouts = [10, 5, 5];
+                let s = neighbor::sample(&ds.graph, &roots, &fanouts, cap_nodes,
+                                         &mut self.rng);
+                // mean aggregator over the SAMPLED neighbors
+                let mut indeg = vec![0u32; s.nodes.len()];
+                for &(_, v) in &s.edges {
+                    indeg[v as usize] += 1;
+                }
+                let arcs = s
+                    .edges
+                    .iter()
+                    .map(|&(u, v)| {
+                        let c = if self.is_gat() {
+                            1.0
+                        } else {
+                            1.0 / indeg[v as usize].max(1) as f32
+                        };
+                        (u, v, c)
+                    })
+                    .collect();
+                // loss only on roots
+                let mut lam = vec![0.0f32; s.nodes.len()];
+                for x in lam.iter_mut().take(s.n_roots) {
+                    *x = 1.0;
+                }
+                (s.nodes, arcs, lam)
+            }
+        }
+    }
+
+    /// Induced subgraph arcs with the convolution re-normalized on the
+    /// subgraph (Cluster-GCN / SAINT convention), plus self loops for GCN.
+    fn induced_with_subgraph_norm(&mut self, nodes: &[u32]) -> Vec<(u32, u32, f32)> {
+        let g = &self.ds.graph;
+        let mut local = vec![-1i32; g.n];
+        let pairs = g.induced_edges(nodes, &mut local);
+        let nl = nodes.len();
+        let mut indeg = vec![0u32; nl];
+        for &(_, v) in &pairs {
+            indeg[v as usize] += 1;
+        }
+        let conv = self.conv();
+        let mut arcs: Vec<(u32, u32, f32)> = pairs
+            .into_iter()
+            .map(|(u, v)| {
+                let c = if self.is_gat() {
+                    1.0
+                } else {
+                    match conv {
+                        Conv::GcnSym => 1.0
+                            / (((indeg[u as usize] + 1) as f32
+                                * (indeg[v as usize] + 1) as f32)
+                                .sqrt()),
+                        Conv::SageMean => 1.0 / indeg[v as usize].max(1) as f32,
+                    }
+                };
+                (u, v, c)
+            })
+            .collect();
+        if conv.with_self_loops() && !self.is_gat() {
+            for v in 0..nl as u32 {
+                arcs.push((v, v, 1.0 / (indeg[v as usize] + 1) as f32));
+            }
+        } else if self.is_gat() {
+            for v in 0..nl as u32 {
+                arcs.push((v, v, 1.0));
+            }
+        }
+        arcs
+    }
+
+    pub fn train_step(&mut self, rt: &mut Runtime) -> Result<f32> {
+        let t0 = std::time::Instant::now();
+        let (nodes, arcs, lam) = self.sample_subgraph();
+        let art = self.train_art.clone();
+        let inputs = self.assemble(&art, &nodes, &arcs, &lam, true)?;
+        let outputs = rt.execute(&art, &inputs)?;
+        let loss = outputs[0].f[0];
+        let n_params = self.params.len();
+        let grads: Vec<&Tensor> = outputs[outputs.len() - n_params..].iter().collect();
+        self.opt.step(&mut self.params, &grads);
+        if self.is_gat() {
+            lipschitz_clip(&art.spec, &mut self.params, self.weight_clip);
+        }
+        let step_bytes = art.spec.input_bytes() + art.spec.output_bytes()
+            + opt::opt_state_bytes(&self.params, 2);
+        self.stats.peak_step_bytes = self.stats.peak_step_bytes.max(step_bytes);
+        self.stats.steps += 1;
+        self.stats.loss_last = loss;
+        self.stats.nodes_per_step = nodes.len() as u64;
+        self.stats.messages_per_step = arcs.len() as u64;
+        self.stats.train_secs += t0.elapsed().as_secs_f64();
+        Ok(loss)
+    }
+
+    /// Steps per "epoch" (coverage-equivalent to one pass over the graph).
+    pub fn steps_per_epoch(&self) -> usize {
+        match self.kind {
+            Baseline::FullGraph => 8, // converge the oracle at equal epoch counts
+            _ => {
+                let per = self.train_art.spec.nn.max(1);
+                (self.ds.n() + per - 1) / per
+            }
+        }
+    }
+
+    pub fn epoch(&mut self, rt: &mut Runtime) -> Result<f32> {
+        let mut last = 0.0;
+        for _ in 0..self.steps_per_epoch() {
+            last = self.train_step(rt)?;
+        }
+        Ok(last)
+    }
+
+    /// Exact full-graph inference (shared by all baselines — OGB protocol).
+    pub fn infer_full(&mut self, rt: &mut Runtime) -> Result<Vec<f32>> {
+        let ds = self.ds.clone();
+        let g = &ds.graph;
+        let art = self.infer_art.clone();
+        let nodes: Vec<u32> = (0..g.n as u32).collect();
+        let mut arcs = Vec::with_capacity(g.num_arcs());
+        for v in 0..g.n {
+            for &u in g.in_neighbors(v) {
+                let coef = if self.is_gat() {
+                    1.0
+                } else {
+                    g.coef(self.conv(), u as usize, v)
+                };
+                arcs.push((u, v as u32, coef));
+            }
+        }
+        if self.conv().with_self_loops() && !self.is_gat() {
+            for v in 0..g.n {
+                arcs.push((v as u32, v as u32, g.coef(Conv::GcnSym, v, v)));
+            }
+        } else if self.is_gat() {
+            for v in 0..g.n {
+                arcs.push((v as u32, v as u32, 1.0));
+            }
+        }
+        let lam = vec![1.0; g.n];
+        let inputs = self.assemble(&art, &nodes, &arcs, &lam, false)?;
+        let out = rt.execute(&art, &inputs)?;
+        Ok(out[0].f.clone())
+    }
+
+    pub fn evaluate(&mut self, rt: &mut Runtime, split: Split) -> Result<f64> {
+        use crate::coordinator::metrics;
+        let ds = self.ds.clone();
+        let logits = self.infer_full(rt)?;
+        if ds.cfg.task == "link" {
+            let h = self.infer_art.spec.outputs[0].shape[1];
+            let score = |u: u32, v: u32| -> f32 {
+                logits[u as usize * h..(u as usize + 1) * h]
+                    .iter()
+                    .zip(&logits[v as usize * h..(v as usize + 1) * h])
+                    .map(|(x, y)| x * y)
+                    .sum()
+            };
+            let pos = if split == Split::Val { &ds.val_pos } else { &ds.test_pos };
+            let pos_scores: Vec<f32> = pos.iter().map(|&(u, v)| score(u, v)).collect();
+            let mut rng = Rng::new(0xBEEF);
+            let neg: Vec<f32> = (0..4096)
+                .map(|_| score(rng.below(ds.n()) as u32, rng.below(ds.n()) as u32))
+                .collect();
+            return Ok(metrics::hits_at_k(&pos_scores, &neg, 50));
+        }
+        let rows: Vec<usize> = ds.nodes_in_split(split).iter().map(|&v| v as usize).collect();
+        let c = ds.cfg.n_classes;
+        if ds.cfg.multilabel {
+            Ok(metrics::micro_f1(&logits, c, &ds.labels_multi, &rows))
+        } else {
+            Ok(metrics::accuracy(&logits, c, &ds.labels, &rows))
+        }
+    }
+
+    /// Assemble the edge-artifact input list.
+    fn assemble(&mut self, art: &Rc<Artifact>, nodes: &[u32],
+                arcs: &[(u32, u32, f32)], lam: &[f32], train: bool)
+                -> Result<Vec<Tensor>> {
+        let spec = &art.spec;
+        let ds = self.ds.clone();
+        let (nn, ne) = (spec.nn, spec.ne);
+        anyhow::ensure!(nodes.len() <= nn, "subgraph {} > artifact nn {}", nodes.len(), nn);
+        anyhow::ensure!(arcs.len() <= ne, "edges {} > artifact ne {}", arcs.len(), ne);
+        let f = ds.cfg.f_in_pad;
+        // features padded to nn rows
+        let mut x = gather_features(&ds.features, f, nodes);
+        x.f.resize(nn * f, 0.0);
+        x.shape = vec![nn, f];
+        let mut esrc = vec![0i32; ne];
+        let mut edst = vec![0i32; ne];
+        let mut ecoef = vec![0.0f32; ne];
+        for (i, &(u, v, c)) in arcs.iter().enumerate() {
+            esrc[i] = u as i32;
+            edst[i] = v as i32;
+            ecoef[i] = c;
+        }
+        let link_pairs = if ds.cfg.task == "link" && spec.input_index("psrc").is_some() {
+            Some(self.link_pairs(spec.inputs[spec.input_index("psrc").unwrap()].numel(),
+                                 nodes, train))
+        } else {
+            None
+        };
+        let mut inputs = Vec::with_capacity(spec.inputs.len());
+        let mut pi = 0usize;
+        for ts in &spec.inputs {
+            let t: Tensor = match ts.name.as_str() {
+                "x" => x.clone(),
+                "esrc" => Tensor::from_i32(&[ne], esrc.clone()),
+                "edst" => Tensor::from_i32(&[ne], edst.clone()),
+                "ecoef" => Tensor::from_f32(&[ne], ecoef.clone()),
+                "y" => {
+                    if ds.cfg.multilabel {
+                        let c = ds.cfg.n_classes;
+                        let mut data = vec![0.0f32; nn * c];
+                        for (i, &v) in nodes.iter().enumerate() {
+                            data[i * c..(i + 1) * c].copy_from_slice(
+                                &ds.labels_multi[v as usize * c..(v as usize + 1) * c],
+                            );
+                        }
+                        Tensor::from_f32(&[nn, c], data)
+                    } else {
+                        let mut data = vec![0i32; nn];
+                        for (i, &v) in nodes.iter().enumerate() {
+                            data[i] = ds.labels[v as usize];
+                        }
+                        Tensor::from_i32(&[nn], data)
+                    }
+                }
+                "wloss" => {
+                    let mut w = vec![0.0f32; nn];
+                    for (i, &v) in nodes.iter().enumerate() {
+                        let in_split = !train || ds.split[v as usize] == Split::Train;
+                        w[i] = if in_split { lam[i] } else { 0.0 };
+                    }
+                    Tensor::from_f32(&[nn], w)
+                }
+                "psrc" => Tensor::from_i32(&ts.shape, link_pairs.as_ref().unwrap().0.clone()),
+                "pdst" => Tensor::from_i32(&ts.shape, link_pairs.as_ref().unwrap().1.clone()),
+                "py" => Tensor::from_f32(&ts.shape, link_pairs.as_ref().unwrap().2.clone()),
+                "pw" => Tensor::from_f32(&ts.shape, link_pairs.as_ref().unwrap().3.clone()),
+                name if name.starts_with("param.") => {
+                    let t = self.params[pi].clone();
+                    pi += 1;
+                    t
+                }
+                other => anyhow::bail!("unknown edge input {other}"),
+            };
+            inputs.push(t);
+        }
+        Ok(inputs)
+    }
+
+    fn link_pairs(&mut self, p: usize, nodes: &[u32], train: bool)
+                  -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>) {
+        let g = &self.ds.graph;
+        let nl = nodes.len();
+        let mut local = std::collections::HashMap::new();
+        for (i, &v) in nodes.iter().enumerate() {
+            local.insert(v, i as i32);
+        }
+        let mut pos = Vec::new();
+        'outer: for (i, &v) in nodes.iter().enumerate() {
+            for &u in g.in_neighbors(v as usize) {
+                if let Some(&lu) = local.get(&u) {
+                    pos.push((lu, i as i32));
+                    if pos.len() >= p / 2 {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        let mut psrc = vec![0i32; p];
+        let mut pdst = vec![0i32; p];
+        let mut py = vec![0.0f32; p];
+        let mut pw = vec![0.0f32; p];
+        for (i, &(u, v)) in pos.iter().enumerate() {
+            psrc[i] = u;
+            pdst[i] = v;
+            py[i] = 1.0;
+            pw[i] = 1.0;
+        }
+        for i in pos.len()..p {
+            psrc[i] = self.rng.below(nl) as i32;
+            pdst[i] = self.rng.below(nl) as i32;
+            pw[i] = if train { 1.0 } else { 0.0 };
+        }
+        (psrc, pdst, py, pw)
+    }
+}

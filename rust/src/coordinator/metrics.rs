@@ -1,0 +1,91 @@
+//! Task metrics: accuracy (single-label), micro-F1 (multilabel, threshold
+//! 0 on logits), and Hits@50 (link prediction) — matching the paper's
+//! evaluation protocols per benchmark (Table 4 footnotes).
+
+/// Single-label accuracy over the selected rows.
+pub fn accuracy(logits: &[f32], n_classes: usize, labels: &[i32], rows: &[usize]) -> f64 {
+    if rows.is_empty() {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for &r in rows {
+        let row = &logits[r * n_classes..(r + 1) * n_classes];
+        let mut arg = 0usize;
+        for c in 1..n_classes {
+            if row[c] > row[arg] {
+                arg = c;
+            }
+        }
+        if arg as i32 == labels[r] {
+            correct += 1;
+        }
+    }
+    correct as f64 / rows.len() as f64
+}
+
+/// Micro-averaged F1 for multilabel targets (PPI protocol): predictions are
+/// sigmoid(logit) > 0.5, i.e. logit > 0.
+pub fn micro_f1(logits: &[f32], n_classes: usize, targets: &[f32], rows: &[usize]) -> f64 {
+    let (mut tp, mut fp, mut fne) = (0usize, 0usize, 0usize);
+    for &r in rows {
+        for c in 0..n_classes {
+            let pred = logits[r * n_classes + c] > 0.0;
+            let truth = targets[r * n_classes + c] > 0.5;
+            match (pred, truth) {
+                (true, true) => tp += 1,
+                (true, false) => fp += 1,
+                (false, true) => fne += 1,
+                _ => {}
+            }
+        }
+    }
+    if tp == 0 {
+        return 0.0;
+    }
+    let p = tp as f64 / (tp + fp) as f64;
+    let r = tp as f64 / (tp + fne) as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// Hits@K (ogbl-collab protocol): the fraction of positive pairs scoring
+/// strictly above the K-th highest negative score.
+pub fn hits_at_k(pos_scores: &[f32], neg_scores: &[f32], k: usize) -> f64 {
+    if pos_scores.is_empty() || neg_scores.len() < k {
+        return 0.0;
+    }
+    let mut neg = neg_scores.to_vec();
+    neg.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let threshold = neg[k - 1];
+    let hits = pos_scores.iter().filter(|&&s| s > threshold).count();
+    hits as f64 / pos_scores.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = vec![1.0, 2.0, /* row0 -> 1 */ 5.0, 0.0 /* row1 -> 0 */];
+        let acc = accuracy(&logits, 2, &[1, 1], &[0, 1]);
+        assert!((acc - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f1_perfect_and_empty() {
+        let logits = vec![1.0, -1.0, -1.0, 1.0];
+        let tgt = vec![1.0, 0.0, 0.0, 1.0];
+        assert!((micro_f1(&logits, 2, &tgt, &[0, 1]) - 1.0).abs() < 1e-9);
+        let tgt0 = vec![0.0, 1.0, 1.0, 0.0];
+        assert_eq!(micro_f1(&logits, 2, &tgt0, &[0, 1]), 0.0);
+    }
+
+    #[test]
+    fn hits_at_k_threshold_semantics() {
+        let neg: Vec<f32> = (0..100).map(|i| i as f32).collect(); // max 99
+        // K=50 → threshold is the 50th highest = 50.0
+        let pos = vec![51.0, 49.0, 99.5];
+        let h = hits_at_k(&pos, &neg, 50);
+        assert!((h - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,160 @@
+//! Coordinator: trainers (VQ-GNN + the four baselines), optimizers, metrics
+//! and evaluation — everything that owns cross-batch state.
+
+pub mod checkpoint;
+pub mod edge_trainer;
+pub mod metrics;
+pub mod opt;
+pub mod vq_trainer;
+
+use crate::runtime::manifest::ArtifactSpec;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// Initialize the artifact's `param.*` inputs: Glorot-uniform for matrices,
+/// scaled normal for attention vectors, zeros for biases.  Order matches the
+/// artifact signature (and therefore its `grad.*` outputs).
+pub fn init_params(spec: &ArtifactSpec, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed ^ 0x9A7A);
+    let mut out = Vec::new();
+    for t in &spec.inputs {
+        if !t.name.starts_with("param.") {
+            continue;
+        }
+        let n = t.numel();
+        let data = if t.name.ends_with(".bias") {
+            vec![0.0f32; n]
+        } else if t.name.contains(".a_src") || t.name.contains(".a_dst") {
+            (0..n).map(|_| 0.1 * rng.gauss_f32()).collect()
+        } else {
+            // matrices: last two dims are (fan_in, fan_out); leading dims
+            // (attention heads) don't change the per-matrix fans
+            let d = t.shape.len();
+            let (fi, fo) = if d >= 2 {
+                (t.shape[d - 2], t.shape[d - 1])
+            } else {
+                (n, n)
+            };
+            let lim = (6.0 / (fi + fo) as f32).sqrt();
+            (0..n).map(|_| (2.0 * rng.f32() - 1.0) * lim).collect()
+        };
+        out.push(Tensor::from_f32(&t.shape, data));
+    }
+    out
+}
+
+/// Lipschitz control for learnable convolutions (paper App. E / [47],
+/// realized as norm clipping of the attention vectors): keeps the error
+/// bounds of Thm. 2 meaningful for GAT / Transformer backbones.
+pub fn lipschitz_clip(spec: &ArtifactSpec, params: &mut [Tensor], clip: f32) {
+    let names: Vec<&str> = spec
+        .inputs
+        .iter()
+        .filter(|t| t.name.starts_with("param."))
+        .map(|t| t.name.as_str())
+        .collect();
+    for (name, p) in names.iter().zip(params.iter_mut()) {
+        if name.contains(".a_src") || name.contains(".a_dst")
+            || name.contains(".wq") || name.contains(".wk")
+        {
+            let norm: f32 = p.f.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > clip {
+                let s = clip / norm;
+                for x in p.f.iter_mut() {
+                    *x *= s;
+                }
+            }
+        }
+    }
+}
+
+/// Gather feature rows of `nodes` into a (b, f) tensor.
+pub fn gather_features(features: &[f32], f: usize, nodes: &[u32]) -> Tensor {
+    let mut data = Vec::with_capacity(nodes.len() * f);
+    for &v in nodes {
+        data.extend_from_slice(&features[v as usize * f..(v as usize + 1) * f]);
+    }
+    Tensor::from_f32(&[nodes.len(), f], data)
+}
+
+/// Running throughput/bytes statistics for a training run.
+#[derive(Debug, Default, Clone)]
+pub struct RunStats {
+    pub steps: u64,
+    pub train_secs: f64,
+    pub loss_last: f32,
+    /// peak bytes = params + opt state + largest single-step (in + out)
+    pub peak_step_bytes: u64,
+    pub messages_per_step: u64,
+    pub nodes_per_step: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    #[test]
+    fn init_params_match_spec_order_and_shapes() {
+        let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let man = Manifest::load(dir).unwrap();
+        for name in ["vq_train_tiny_sim_gcn", "vq_train_tiny_sim_gat"] {
+            let spec = man.artifact(name).unwrap();
+            let params = init_params(spec, 1);
+            let pspecs: Vec<_> = spec
+                .inputs
+                .iter()
+                .filter(|t| t.name.starts_with("param."))
+                .collect();
+            assert_eq!(params.len(), pspecs.len());
+            for (p, s) in params.iter().zip(&pspecs) {
+                assert_eq!(p.shape, s.shape, "{}", s.name);
+                assert!(p.f.iter().all(|x| x.is_finite()));
+                if s.name.ends_with(".bias") {
+                    assert!(p.f.iter().all(|&x| x == 0.0));
+                } else {
+                    assert!(p.f.iter().any(|&x| x != 0.0), "{}", s.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lipschitz_clip_bounds_attention_norms() {
+        let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let man = Manifest::load(dir).unwrap();
+        let spec = man.artifact("vq_train_tiny_sim_gat").unwrap();
+        let mut params = init_params(spec, 2);
+        for p in params.iter_mut() {
+            for x in p.f.iter_mut() {
+                *x *= 100.0;
+            }
+        }
+        lipschitz_clip(spec, &mut params, 4.0);
+        let names: Vec<&str> = spec
+            .inputs
+            .iter()
+            .filter(|t| t.name.starts_with("param."))
+            .map(|t| t.name.as_str())
+            .collect();
+        for (n, p) in names.iter().zip(&params) {
+            if n.contains(".a_src") || n.contains(".a_dst") {
+                let norm: f32 = p.f.iter().map(|x| x * x).sum::<f32>().sqrt();
+                assert!(norm <= 4.0 + 1e-4, "{n}: {norm}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_features_rows() {
+        let feats = vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0];
+        let t = gather_features(&feats, 2, &[2, 0]);
+        assert_eq!(t.f, vec![20.0, 21.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Optimizers.  VQ-GNN uses RMSprop (paper App. E: the EMA-smoothed gradient
+//! codewords are incompatible with Adam's cumulative history); the sampling
+//! baselines use Adam per the OGB reference setups (App. F).
+
+use crate::util::tensor::Tensor;
+
+pub trait Optimizer {
+    fn step(&mut self, params: &mut [Tensor], grads: &[&Tensor]);
+}
+
+pub struct RmsProp {
+    pub lr: f32,
+    pub alpha: f32,
+    pub eps: f32,
+    v: Vec<Vec<f32>>,
+}
+
+impl RmsProp {
+    pub fn new(lr: f32, alpha: f32, params: &[Tensor]) -> RmsProp {
+        RmsProp {
+            lr,
+            alpha,
+            eps: 1e-8,
+            v: params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+        }
+    }
+}
+
+impl Optimizer for RmsProp {
+    fn step(&mut self, params: &mut [Tensor], grads: &[&Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        for (pi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let v = &mut self.v[pi];
+            for i in 0..p.f.len() {
+                let gi = g.f[i];
+                v[i] = self.alpha * v[i] + (1.0 - self.alpha) * gi * gi;
+                p.f[i] -= self.lr * gi / (v[i].sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+pub struct Adam {
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    t: i32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32, params: &[Tensor]) -> Adam {
+        Adam {
+            lr,
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+            v: params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [Tensor], grads: &[&Tensor]) {
+        self.t += 1;
+        let bc1 = 1.0 - self.b1.powi(self.t);
+        let bc2 = 1.0 - self.b2.powi(self.t);
+        for (pi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            let (m, v) = (&mut self.m[pi], &mut self.v[pi]);
+            for i in 0..p.f.len() {
+                let gi = g.f[i];
+                m[i] = self.b1 * m[i] + (1.0 - self.b1) * gi;
+                v[i] = self.b2 * v[i] + (1.0 - self.b2) * gi * gi;
+                p.f[i] -= self.lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+/// Optimizer state bytes (memory-meter component for Table 3).
+pub fn opt_state_bytes(params: &[Tensor], slots: usize) -> u64 {
+    params.iter().map(|p| (p.numel() * 4 * slots) as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_grad(p: &Tensor) -> Tensor {
+        // f(x) = ||x||²/2, ∇ = x
+        Tensor::from_f32(&p.shape, p.f.clone())
+    }
+
+    #[test]
+    fn rmsprop_descends_quadratic() {
+        let mut params = vec![Tensor::from_f32(&[4], vec![1.0, -2.0, 3.0, -4.0])];
+        let mut opt = RmsProp::new(0.05, 0.9, &params);
+        for _ in 0..200 {
+            let g = quad_grad(&params[0]);
+            opt.step(&mut params, &[&g]);
+        }
+        let norm: f32 = params[0].f.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!(norm < 0.1, "norm {norm}");
+    }
+
+    #[test]
+    fn adam_descends_quadratic() {
+        let mut params = vec![Tensor::from_f32(&[4], vec![1.0, -2.0, 3.0, -4.0])];
+        let mut opt = Adam::new(0.05, &params);
+        for _ in 0..300 {
+            let g = quad_grad(&params[0]);
+            opt.step(&mut params, &[&g]);
+        }
+        let norm: f32 = params[0].f.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!(norm < 0.1, "norm {norm}");
+    }
+}

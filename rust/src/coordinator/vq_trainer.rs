@@ -1,0 +1,468 @@
+//! VQ-GNN trainer (paper Alg. 1): mini-batch sampling → sketch building →
+//! one fused train-step execution (Eq. 6/7 + in-graph FINDNEAREST) →
+//! RMSprop + VQ EMA update + assignment-table refresh.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::opt::Optimizer;
+use crate::coordinator::{gather_features, init_params, lipschitz_clip, opt, RunStats};
+use crate::datasets::{Dataset, Split};
+use crate::graph::Conv;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{Artifact, Runtime};
+use crate::sampler::{NodeBatcher, NodeStrategy};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+use crate::vq::sketch::{build_cnt_out, build_fixed, build_learnable, SketchScratch};
+use crate::vq::VqModel;
+
+pub struct VqTrainer {
+    pub train_art: Rc<Artifact>,
+    pub infer_art: Rc<Artifact>,
+    pub ds: Rc<Dataset>,
+    pub model_name: String,
+    pub vq: VqModel,
+    pub params: Vec<Tensor>,
+    opt: opt::RmsProp,
+    batcher: NodeBatcher,
+    scratch: SketchScratch,
+    rng: Rng,
+    gamma: f32,
+    beta: f32,
+    weight_clip: f32,
+    p_pairs: usize,
+    /// Per-layer (c_out, ct_out) stash between consecutive ctx inputs.
+    pending: Option<(usize, Tensor, Tensor)>,
+    pub stats: RunStats,
+}
+
+impl VqTrainer {
+    /// `suffix` selects ablation artifacts ("", "_l2", "_k64", "_b256", ...).
+    pub fn new(rt: &mut Runtime, man: &Manifest, ds: Rc<Dataset>,
+               model_name: &str, suffix: &str, strategy: NodeStrategy,
+               seed: u64) -> Result<VqTrainer> {
+        let train_name = format!("vq_train_{}_{}{}", ds.cfg.name, model_name, suffix);
+        let infer_name = format!("vq_infer_{}_{}{}", ds.cfg.name, model_name, suffix);
+        let train_art = rt.load(man, &train_name)?;
+        let infer_art = rt.load(man, &infer_name)?;
+        let spec = &train_art.spec;
+        let params = init_params(spec, seed);
+        let opt = opt::RmsProp::new(man.train.lr as f32, man.train.rms_alpha as f32, &params);
+        let vq = VqModel::init(&spec.plan, spec.k, ds.n(), seed);
+        // transductive: batches over ALL nodes (loss masked to train nodes);
+        // inductive: only training graphs' nodes are visible during training.
+        let pool: Vec<u32> = if ds.cfg.inductive {
+            ds.nodes_in_split(Split::Train)
+        } else {
+            (0..ds.n() as u32).collect()
+        };
+        let batcher = NodeBatcher::new(pool, spec.b, strategy);
+        let scratch = SketchScratch::new(ds.n());
+        Ok(VqTrainer {
+            train_art,
+            infer_art,
+            model_name: model_name.to_string(),
+            vq,
+            params,
+            opt,
+            batcher,
+            scratch,
+            rng: Rng::new(seed ^ 0x7141),
+            gamma: man.train.gamma as f32,
+            beta: man.train.beta as f32,
+            weight_clip: man.train.weight_clip as f32,
+            p_pairs: man.train.p_pairs,
+            pending: None,
+            stats: RunStats::default(),
+            ds,
+        })
+    }
+
+    fn conv(&self) -> Conv {
+        match self.model_name.as_str() {
+            "gcn" => Conv::GcnSym,
+            "sage" => Conv::SageMean,
+            other => panic!("fixed conv requested for learnable model {other}"),
+        }
+    }
+
+    fn learnable(&self) -> bool {
+        matches!(self.model_name.as_str(), "gat" | "txf")
+    }
+
+    pub fn train_step(&mut self, rt: &mut Runtime) -> Result<f32> {
+        let t0 = std::time::Instant::now();
+        let ds = self.ds.clone();
+        let mut rng = self.rng.fork(self.stats.steps);
+        let (batch, pad) = self.batcher.next_batch(&ds.graph, &mut rng);
+        let art = self.train_art.clone();
+        let inputs = self.assemble(&art, &batch, pad, true)?;
+        let outputs = rt.execute(&art, &inputs)?;
+        let spec = &art.spec;
+        let loss = outputs[0].f[0];
+        // VQ EMA updates + assignment-table refresh per layer (Alg. 2)
+        for l in 0..spec.plan.len() {
+            let xi = spec.output_index(&format!("l{l}.xfeat")).unwrap();
+            let gi = spec.output_index(&format!("l{l}.gvec")).unwrap();
+            let ai = spec.output_index(&format!("l{l}.assign")).unwrap();
+            self.vq.layers[l].update_from_batch(
+                &batch, &outputs[xi], &outputs[gi], &outputs[ai],
+                self.gamma, self.beta,
+            );
+        }
+        // optimizer on the grad.* tail (ordered like params)
+        let n_params = self.params.len();
+        let grads: Vec<&Tensor> = outputs[outputs.len() - n_params..].iter().collect();
+        self.opt.step(&mut self.params, &grads);
+        if self.learnable() {
+            lipschitz_clip(spec, &mut self.params, self.weight_clip);
+        }
+        let step_bytes = spec.input_bytes() + spec.output_bytes()
+            + opt::opt_state_bytes(&self.params, 1);
+        self.stats.peak_step_bytes = self.stats.peak_step_bytes.max(step_bytes);
+        self.stats.steps += 1;
+        self.stats.loss_last = loss;
+        self.stats.nodes_per_step = batch.len() as u64;
+        self.stats.messages_per_step = self.count_messages(&batch);
+        self.stats.train_secs += t0.elapsed().as_secs_f64();
+        Ok(loss)
+    }
+
+    /// Messages effectively preserved per step: ALL arcs into the batch
+    /// (paper Fig. 1 — intra-batch exact + codeword-merged).
+    fn count_messages(&self, batch: &[u32]) -> u64 {
+        batch
+            .iter()
+            .map(|&v| self.ds.graph.in_degree(v as usize) as u64 + 1)
+            .sum()
+    }
+
+    pub fn epoch(&mut self, rt: &mut Runtime) -> Result<f32> {
+        let mut last = 0.0;
+        for _ in 0..self.batcher.batches_per_epoch() {
+            last = self.train_step(rt)?;
+        }
+        Ok(last)
+    }
+
+    /// Mini-batch inference over arbitrary nodes via the infer artifact;
+    /// returns row-major (|nodes|, c) logits/embeddings.
+    pub fn infer_nodes(&mut self, rt: &mut Runtime, nodes: &[u32]) -> Result<Vec<f32>> {
+        let art = self.infer_art.clone();
+        let b = art.spec.b;
+        let c = art.spec.outputs[0].shape[1];
+        let mut logits = vec![0.0f32; nodes.len() * c];
+        let mut i = 0;
+        while i < nodes.len() {
+            let end = (i + b).min(nodes.len());
+            let mut batch: Vec<u32> = nodes[i..end].to_vec();
+            let real = batch.len();
+            while batch.len() < b {
+                batch.push(nodes[0]); // pad rows; outputs ignored
+            }
+            let inputs = self.assemble(&art, &batch, 0, false)?;
+            let out = rt.execute(&art, &inputs)?;
+            logits[i * c..end * c].copy_from_slice(&out[0].f[..real * c]);
+            i = end;
+        }
+        Ok(logits)
+    }
+
+    /// Evaluate the task metric on a split (accuracy / micro-F1 / Hits@50).
+    pub fn evaluate(&mut self, rt: &mut Runtime, split: Split) -> Result<f64> {
+        use crate::coordinator::metrics;
+        let ds = self.ds.clone();
+        if ds.cfg.task == "link" {
+            return self.evaluate_link(rt, split);
+        }
+        if ds.cfg.inductive && split != Split::Train {
+            self.bootstrap_inductive(rt, split)?;
+        }
+        let nodes = ds.nodes_in_split(split);
+        let logits = self.infer_nodes(rt, &nodes)?;
+        let rows: Vec<usize> = (0..nodes.len()).collect();
+        let c = ds.cfg.n_classes;
+        if ds.cfg.multilabel {
+            let mut tgt = vec![0.0f32; nodes.len() * c];
+            for (i, &v) in nodes.iter().enumerate() {
+                tgt[i * c..(i + 1) * c].copy_from_slice(
+                    &ds.labels_multi[v as usize * c..(v as usize + 1) * c],
+                );
+            }
+            Ok(metrics::micro_f1(&logits, c, &tgt, &rows))
+        } else {
+            let labels: Vec<i32> = nodes.iter().map(|&v| ds.labels[v as usize]).collect();
+            Ok(metrics::accuracy(&logits, c, &labels, &rows))
+        }
+    }
+
+    fn evaluate_link(&mut self, rt: &mut Runtime, split: Split) -> Result<f64> {
+        use crate::coordinator::metrics;
+        let ds = self.ds.clone();
+        let all: Vec<u32> = (0..ds.n() as u32).collect();
+        let h = self.infer_art.spec.outputs[0].shape[1];
+        let emb = self.infer_nodes(rt, &all)?;
+        let score = |u: u32, v: u32| -> f32 {
+            emb[u as usize * h..(u as usize + 1) * h]
+                .iter()
+                .zip(&emb[v as usize * h..(v as usize + 1) * h])
+                .map(|(x, y)| x * y)
+                .sum()
+        };
+        let pos = if split == Split::Val { &ds.val_pos } else { &ds.test_pos };
+        let pos_scores: Vec<f32> = pos.iter().map(|&(u, v)| score(u, v)).collect();
+        let mut rng = Rng::new(0xBEEF);
+        let neg_scores: Vec<f32> = (0..4096)
+            .map(|_| score(rng.below(ds.n()) as u32, rng.below(ds.n()) as u32))
+            .collect();
+        Ok(metrics::hits_at_k(&pos_scores, &neg_scores, 50))
+    }
+
+    /// Inductive inference bootstrap (paper §6 "one extra step"): assign
+    /// unseen nodes to their nearest codewords by *feature* columns — layer
+    /// 0 from raw inputs, deeper layers refined from one forward sweep.
+    fn bootstrap_inductive(&mut self, rt: &mut Runtime, split: Split) -> Result<()> {
+        let ds = self.ds.clone();
+        let nodes = ds.nodes_in_split(split);
+        let f0 = ds.cfg.f_in_pad;
+        // pass 1: raw features seed every layer's assignment
+        for l in 0..self.vq.layers.len() {
+            let fl = self.vq.layers[l].plan.f_in;
+            let take = fl.min(f0);
+            let mut rows = vec![0.0f32; nodes.len() * fl];
+            for (i, &v) in nodes.iter().enumerate() {
+                rows[i * fl..i * fl + take].copy_from_slice(
+                    &ds.features[v as usize * f0..v as usize * f0 + take],
+                );
+            }
+            self.assign_by_features(l, &nodes, &rows);
+        }
+        // pass 2: forward sweep yields true per-layer inputs; re-assign
+        let art = self.infer_art.clone();
+        let spec = art.spec.clone();
+        let b = spec.b;
+        let nl = self.vq.layers.len();
+        let mut feats: Vec<Vec<f32>> = (0..nl)
+            .map(|l| vec![0.0f32; nodes.len() * self.vq.layers[l].plan.f_in])
+            .collect();
+        let mut i = 0;
+        while i < nodes.len() {
+            let end = (i + b).min(nodes.len());
+            let mut batch: Vec<u32> = nodes[i..end].to_vec();
+            let real = batch.len();
+            while batch.len() < b {
+                batch.push(nodes[0]);
+            }
+            let inputs = self.assemble(&art, &batch, 0, false)?;
+            let out = rt.execute(&art, &inputs)?;
+            for l in 0..nl {
+                let fl = self.vq.layers[l].plan.f_in;
+                let xi = spec.output_index(&format!("l{l}.xfeat")).unwrap();
+                feats[l][i * fl..end * fl].copy_from_slice(&out[xi].f[..real * fl]);
+            }
+            i = end;
+        }
+        for l in 0..nl {
+            let rows = std::mem::take(&mut feats[l]);
+            self.assign_by_features(l, &nodes, &rows);
+        }
+        Ok(())
+    }
+
+    /// Feature-only nearest-codeword assignment for `nodes` (gradient
+    /// columns masked out — unseen nodes have no gradient history).
+    fn assign_by_features(&mut self, l: usize, nodes: &[u32], rows: &[f32]) {
+        let layer = &mut self.vq.layers[l];
+        let (fl, fp) = (layer.plan.f_in, layer.plan.fp);
+        let nb = layer.plan.n_br;
+        debug_assert_eq!(rows.len(), nodes.len() * fl);
+        for j in 0..nb {
+            let lo = j * fp;
+            if lo >= fl {
+                continue; // pure-gradient branch: keep previous assignment
+            }
+            let width = (fp).min(fl - lo);
+            let br = &layer.branches[j];
+            for (i, &node) in nodes.iter().enumerate() {
+                let mut best = f32::INFINITY;
+                let mut arg = 0usize;
+                for cidx in 0..br.k {
+                    let mut d2 = 0.0f32;
+                    for d in 0..width {
+                        let w = (rows[i * fl + lo + d] - br.mean[d])
+                            / (br.var[d] + crate::vq::EPS).sqrt();
+                        let diff = w - br.cww[cidx * fp + d];
+                        d2 += diff * diff;
+                    }
+                    if d2 < best {
+                        best = d2;
+                        arg = cidx;
+                    }
+                }
+                layer.assign[j * layer.n + node as usize] = arg as u32;
+            }
+        }
+    }
+
+    /// Sample link-prediction training pairs: positives are intra-batch
+    /// arcs, negatives random intra-batch pairs; padding pairs get weight 0.
+    fn fill_link_pairs(&mut self, spec_p: usize, batch: &[u32], train: bool)
+                       -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>) {
+        let p = spec_p;
+        let b = batch.len();
+        let mut pos = Vec::new();
+        if train {
+            let mut local = std::collections::HashMap::new();
+            for (i, &g) in batch.iter().enumerate() {
+                local.insert(g, i as i32);
+            }
+            'outer: for (i, &g) in batch.iter().enumerate() {
+                for &u in self.ds.graph.in_neighbors(g as usize) {
+                    if let Some(&lu) = local.get(&u) {
+                        pos.push((lu, i as i32));
+                        if pos.len() >= p / 2 {
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+        let mut psrc = vec![0i32; p];
+        let mut pdst = vec![0i32; p];
+        let mut py = vec![0.0f32; p];
+        let mut pw = vec![0.0f32; p];
+        for (i, &(u, v)) in pos.iter().enumerate() {
+            psrc[i] = u;
+            pdst[i] = v;
+            py[i] = 1.0;
+            pw[i] = 1.0;
+        }
+        for i in pos.len()..p {
+            psrc[i] = self.rng.below(b) as i32;
+            pdst[i] = self.rng.below(b) as i32;
+            pw[i] = if train { 1.0 } else { 0.0 };
+        }
+        (psrc, pdst, py, pw)
+    }
+
+    /// Assemble the artifact's ordered input list for one batch.
+    fn assemble(&mut self, art: &Rc<Artifact>, batch: &[u32], pad: usize,
+                train: bool) -> Result<Vec<Tensor>> {
+        self.pending = None;
+        let spec = &art.spec;
+        let ds = self.ds.clone();
+        let b = batch.len();
+        let f = ds.cfg.f_in_pad;
+        let link_pairs = if ds.cfg.task == "link" && spec.input_index("psrc").is_some() {
+            Some(self.fill_link_pairs(
+                spec.inputs[spec.input_index("psrc").unwrap()].numel(),
+                batch, train,
+            ))
+        } else {
+            None
+        };
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(spec.inputs.len());
+        let mut pi = 0usize;
+        for ts in &spec.inputs {
+            let name = ts.name.as_str();
+            let t: Tensor = if name == "xb" {
+                gather_features(&ds.features, f, batch)
+            } else if name == "y" {
+                if ds.cfg.multilabel {
+                    let c = ds.cfg.n_classes;
+                    let mut data = Vec::with_capacity(b * c);
+                    for &v in batch {
+                        data.extend_from_slice(
+                            &ds.labels_multi[v as usize * c..(v as usize + 1) * c],
+                        );
+                    }
+                    Tensor::from_f32(&[b, c], data)
+                } else {
+                    Tensor::from_i32(
+                        &[b],
+                        batch.iter().map(|&v| ds.labels[v as usize]).collect(),
+                    )
+                }
+            } else if name == "wloss" {
+                let mut w: Vec<f32> = batch
+                    .iter()
+                    .map(|&v| {
+                        if train && ds.split[v as usize] != Split::Train {
+                            0.0
+                        } else {
+                            1.0
+                        }
+                    })
+                    .collect();
+                for i in (b - pad)..b {
+                    w[i] = 0.0;
+                }
+                Tensor::from_f32(&[b], w)
+            } else if name == "psrc" {
+                Tensor::from_i32(&ts.shape, link_pairs.as_ref().unwrap().0.clone())
+            } else if name == "pdst" {
+                Tensor::from_i32(&ts.shape, link_pairs.as_ref().unwrap().1.clone())
+            } else if name == "py" {
+                Tensor::from_f32(&ts.shape, link_pairs.as_ref().unwrap().2.clone())
+            } else if name == "pw" {
+                Tensor::from_f32(&ts.shape, link_pairs.as_ref().unwrap().3.clone())
+            } else if name.starts_with("param.") {
+                let t = self.params[pi].clone();
+                pi += 1;
+                t
+            } else if let Some((lstr, field)) = name.split_once('.') {
+                let l: usize = lstr[1..].parse().context("layer index")?;
+                match field {
+                    "c_in" => {
+                        let layer = &self.vq.layers[l];
+                        let (c_in, c_out, ct_out) = build_fixed(
+                            &ds.graph, self.conv(), batch, layer, &mut self.scratch,
+                        );
+                        self.pending = Some((l, c_out, ct_out));
+                        c_in
+                    }
+                    "c_out" => {
+                        let (pl, c_out, _) = self.pending.as_ref().unwrap();
+                        assert_eq!(*pl, l);
+                        c_out.clone()
+                    }
+                    "ct_out" => {
+                        let (pl, _, ct_out) = self.pending.take().unwrap();
+                        assert_eq!(pl, l);
+                        ct_out
+                    }
+                    "mask_in" => {
+                        let layer = &self.vq.layers[l];
+                        let (mask_in, m_out, m_out_t) = build_learnable(
+                            &ds.graph, batch, layer, &mut self.scratch,
+                        );
+                        self.pending = Some((l, m_out, m_out_t));
+                        mask_in
+                    }
+                    "m_out" => {
+                        let (pl, m_out, _) = self.pending.as_ref().unwrap();
+                        assert_eq!(*pl, l);
+                        m_out.clone()
+                    }
+                    "m_out_t" => {
+                        let (pl, _, m_out_t) = self.pending.take().unwrap();
+                        assert_eq!(pl, l);
+                        m_out_t
+                    }
+                    "cnt_out" => build_cnt_out(batch, &self.vq.layers[l], &mut self.scratch),
+                    "cw" => self.vq.layers[l].cw_tensor(),
+                    "cww" => self.vq.layers[l].cww_tensor(),
+                    "mean" => self.vq.layers[l].mean_tensor(),
+                    "var" => self.vq.layers[l].var_tensor(),
+                    other => anyhow::bail!("unknown ctx field {other}"),
+                }
+            } else {
+                anyhow::bail!("unknown input {name}")
+            };
+            inputs.push(t);
+        }
+        Ok(inputs)
+    }
+}

@@ -1,0 +1,313 @@
+//! Graph substrate: CSR storage (both directions), Table-1 convolution
+//! normalizations, subgraph induction, and edge-list export for the AOT
+//! artifacts.
+
+use crate::util::rng::Rng;
+
+/// Undirected graphs are stored as two directed arcs.  `Csr` holds both the
+/// outgoing adjacency (src → dst, used by transposed-convolution sketches)
+/// and the incoming adjacency (receiver-major, used by message passing).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub n: usize,
+    /// Outgoing CSR: out_ptr[u]..out_ptr[u+1] indexes out_col (targets of u).
+    pub out_ptr: Vec<u32>,
+    pub out_col: Vec<u32>,
+    /// Incoming CSR: in_ptr[v]..in_ptr[v+1] indexes in_col (sources into v).
+    pub in_ptr: Vec<u32>,
+    pub in_col: Vec<u32>,
+    /// Component id per node (disjoint-union datasets like ppi_sim).
+    pub component: Vec<u32>,
+}
+
+/// Which Table-1 convolution matrix a coefficient array realizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Conv {
+    /// GCN: C = D̃^{-1/2} Ã D̃^{-1/2} (self loops included).
+    GcnSym,
+    /// SAGE-Mean aggregator: C = D^{-1} A (no self loops; identity support
+    /// is handled separately inside the model).
+    SageMean,
+}
+
+impl Conv {
+    pub fn with_self_loops(self) -> bool {
+        matches!(self, Conv::GcnSym)
+    }
+}
+
+impl Graph {
+    /// Build from undirected edge pairs (u, v); deduped, self loops dropped
+    /// (the convolutions re-add them as needed).
+    pub fn from_undirected(n: usize, edges: &[(u32, u32)]) -> Graph {
+        let mut arcs: Vec<(u32, u32)> = Vec::with_capacity(edges.len() * 2);
+        for &(u, v) in edges {
+            if u == v || u as usize >= n || v as usize >= n {
+                continue;
+            }
+            arcs.push((u, v));
+            arcs.push((v, u));
+        }
+        arcs.sort_unstable();
+        arcs.dedup();
+        Self::from_arcs(n, &arcs)
+    }
+
+    /// Build from directed arcs (already deduped & in-range).
+    pub fn from_arcs(n: usize, arcs: &[(u32, u32)]) -> Graph {
+        let mut out_ptr = vec![0u32; n + 1];
+        for &(u, _) in arcs {
+            out_ptr[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            out_ptr[i + 1] += out_ptr[i];
+        }
+        let mut out_col = vec![0u32; arcs.len()];
+        let mut cur = out_ptr.clone();
+        for &(u, v) in arcs {
+            out_col[cur[u as usize] as usize] = v;
+            cur[u as usize] += 1;
+        }
+        // incoming = transpose
+        let mut in_ptr = vec![0u32; n + 1];
+        for &(_, v) in arcs {
+            in_ptr[v as usize + 1] += 1;
+        }
+        for i in 0..n {
+            in_ptr[i + 1] += in_ptr[i];
+        }
+        let mut in_col = vec![0u32; arcs.len()];
+        let mut cur = in_ptr.clone();
+        for &(u, v) in arcs {
+            in_col[cur[v as usize] as usize] = u;
+            cur[v as usize] += 1;
+        }
+        Graph { n, out_ptr, out_col, in_ptr, in_col, component: vec![0; n] }
+    }
+
+    pub fn num_arcs(&self) -> usize {
+        self.out_col.len()
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        self.num_arcs() as f64 / self.n.max(1) as f64
+    }
+
+    pub fn out_neighbors(&self, u: usize) -> &[u32] {
+        &self.out_col[self.out_ptr[u] as usize..self.out_ptr[u + 1] as usize]
+    }
+
+    pub fn in_neighbors(&self, v: usize) -> &[u32] {
+        &self.in_col[self.in_ptr[v] as usize..self.in_ptr[v + 1] as usize]
+    }
+
+    pub fn in_degree(&self, v: usize) -> usize {
+        (self.in_ptr[v + 1] - self.in_ptr[v]) as usize
+    }
+
+    pub fn out_degree(&self, u: usize) -> usize {
+        (self.out_ptr[u + 1] - self.out_ptr[u]) as usize
+    }
+
+    /// Convolution coefficient of the arc (src → dst) under `conv`.
+    /// (Self-loop coefficients are queried with src == dst.)
+    pub fn coef(&self, conv: Conv, src: usize, dst: usize) -> f32 {
+        match conv {
+            Conv::GcnSym => {
+                let dd = (self.in_degree(dst) + 1) as f32;
+                let ds = (self.in_degree(src) + 1) as f32;
+                1.0 / (dd * ds).sqrt()
+            }
+            Conv::SageMean => {
+                let d = self.in_degree(dst);
+                if d == 0 {
+                    0.0
+                } else {
+                    1.0 / d as f32
+                }
+            }
+        }
+    }
+
+    /// Export the full graph as a padded directed edge list for the edge
+    /// artifacts: (esrc, edst, ecoef), including self loops when the
+    /// convolution asks for them.  Padding arcs have coef 0 and src=dst=0.
+    pub fn edge_list(&self, conv: Conv, capacity: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let with_loops = conv.with_self_loops();
+        let want = self.num_arcs() + if with_loops { self.n } else { 0 };
+        assert!(want <= capacity, "edge list {want} exceeds capacity {capacity}");
+        let mut esrc = Vec::with_capacity(capacity);
+        let mut edst = Vec::with_capacity(capacity);
+        let mut coef = Vec::with_capacity(capacity);
+        for v in 0..self.n {
+            for &u in self.in_neighbors(v) {
+                esrc.push(u as i32);
+                edst.push(v as i32);
+                coef.push(self.coef(conv, u as usize, v));
+            }
+            if with_loops {
+                esrc.push(v as i32);
+                edst.push(v as i32);
+                coef.push(self.coef(conv, v, v));
+            }
+        }
+        esrc.resize(capacity, 0);
+        edst.resize(capacity, 0);
+        coef.resize(capacity, 0.0);
+        (esrc, edst, coef)
+    }
+
+    /// Induced subgraph on `nodes`; returns local edge list (src, dst) in
+    /// local indices, self loops excluded.  O(Σ deg(nodes)).
+    pub fn induced_edges(&self, nodes: &[u32], local: &mut [i32]) -> Vec<(u32, u32)> {
+        // local: scratch of size n filled with -1 (caller reuses it).
+        for (li, &g) in nodes.iter().enumerate() {
+            local[g as usize] = li as i32;
+        }
+        let mut edges = Vec::new();
+        for (li, &g) in nodes.iter().enumerate() {
+            for &u in self.in_neighbors(g as usize) {
+                let lu = local[u as usize];
+                if lu >= 0 {
+                    edges.push((lu as u32, li as u32));
+                }
+            }
+        }
+        for &g in nodes {
+            local[g as usize] = -1;
+        }
+        edges
+    }
+
+    /// Random walk of `len` steps from `start` (undirected graphs: uses
+    /// outgoing arcs).  Stays in place at dead ends.
+    pub fn random_walk(&self, start: u32, len: usize, rng: &mut Rng) -> Vec<u32> {
+        let mut out = Vec::with_capacity(len + 1);
+        let mut cur = start;
+        out.push(cur);
+        for _ in 0..len {
+            let nb = self.out_neighbors(cur as usize);
+            if nb.is_empty() {
+                break;
+            }
+            cur = nb[rng.below(nb.len())];
+            out.push(cur);
+        }
+        out
+    }
+
+    /// Connected components (on the undirected structure).
+    pub fn compute_components(&mut self) {
+        let mut comp = vec![u32::MAX; self.n];
+        let mut next = 0u32;
+        let mut stack = Vec::new();
+        for s in 0..self.n {
+            if comp[s] != u32::MAX {
+                continue;
+            }
+            comp[s] = next;
+            stack.push(s as u32);
+            while let Some(u) = stack.pop() {
+                for &v in self.out_neighbors(u as usize) {
+                    if comp[v as usize] == u32::MAX {
+                        comp[v as usize] = next;
+                        stack.push(v);
+                    }
+                }
+                for &v in self.in_neighbors(u as usize) {
+                    if comp[v as usize] == u32::MAX {
+                        comp[v as usize] = next;
+                        stack.push(v);
+                    }
+                }
+            }
+            next += 1;
+        }
+        self.component = comp;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> Graph {
+        // 0 - 1 - 2
+        Graph::from_undirected(3, &[(0, 1), (1, 2)])
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = path3();
+        assert_eq!(g.num_arcs(), 4);
+        assert_eq!(g.in_degree(1), 2);
+        assert_eq!(g.out_degree(0), 1);
+        assert_eq!(g.in_neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn dedup_and_self_loop_drop() {
+        let g = Graph::from_undirected(3, &[(0, 1), (1, 0), (2, 2), (0, 1)]);
+        assert_eq!(g.num_arcs(), 2);
+    }
+
+    #[test]
+    fn gcn_coef_symmetry_and_rowsum() {
+        let g = path3();
+        // C = D̃^{-1/2} Ã D̃^{-1/2}: symmetric
+        let c01 = g.coef(Conv::GcnSym, 0, 1);
+        let c10 = g.coef(Conv::GcnSym, 1, 0);
+        assert!((c01 - c10).abs() < 1e-6);
+        // deg̃(0)=2, deg̃(1)=3 → c = 1/sqrt(6)
+        assert!((c01 - 1.0 / 6.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sage_coef_is_mean() {
+        let g = path3();
+        assert!((g.coef(Conv::SageMean, 0, 1) - 0.5).abs() < 1e-6);
+        assert!((g.coef(Conv::SageMean, 1, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn edge_list_padded_with_self_loops() {
+        let g = path3();
+        let (es, ed, c) = g.edge_list(Conv::GcnSym, 16);
+        assert_eq!(es.len(), 16);
+        let n_real = c.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(n_real, 4 + 3); // arcs + self loops
+        // self loop of node 1: 1/deg̃(1) = 1/3
+        let idx = (0..16).find(|&i| es[i] == 1 && ed[i] == 1).unwrap();
+        assert!((c[idx] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn induced_subgraph() {
+        let g = Graph::from_undirected(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let mut scratch = vec![-1i32; 5];
+        let e = g.induced_edges(&[1, 2, 4], &mut scratch);
+        // only 1-2 survives (both directions)
+        assert_eq!(e.len(), 2);
+        assert!(scratch.iter().all(|&x| x == -1));
+    }
+
+    #[test]
+    fn components() {
+        let mut g = Graph::from_undirected(5, &[(0, 1), (2, 3)]);
+        g.compute_components();
+        assert_eq!(g.component[0], g.component[1]);
+        assert_eq!(g.component[2], g.component[3]);
+        assert_ne!(g.component[0], g.component[2]);
+        assert_ne!(g.component[4], g.component[0]);
+    }
+
+    #[test]
+    fn random_walk_stays_connected() {
+        let g = Graph::from_undirected(6, &[(0, 1), (1, 2), (2, 0), (3, 4)]);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let w = g.random_walk(0, 8, &mut rng);
+            assert!(w.iter().all(|&x| x < 3), "{w:?}");
+        }
+    }
+}

@@ -1,0 +1,377 @@
+//! Experiment harness: one function per paper exhibit (DESIGN.md §4 index).
+//! Each writes a CSV + markdown table under results/ and prints it.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::edge_trainer::{Baseline, EdgeTrainer};
+use crate::coordinator::vq_trainer::VqTrainer;
+use crate::datasets::{Dataset, Split};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::Runtime;
+use crate::sampler::NodeStrategy;
+use crate::util::{mean_std, Stopwatch};
+
+pub struct Ctx {
+    pub rt: Runtime,
+    pub man: Manifest,
+    pub epochs: usize,
+    pub seeds: Vec<u64>,
+    pub out_dir: std::path::PathBuf,
+    datasets: BTreeMap<String, Rc<Dataset>>,
+}
+
+impl Ctx {
+    pub fn new(epochs: usize, seeds: Vec<u64>) -> Result<Ctx> {
+        let man = Manifest::load(&Manifest::default_dir()).map_err(anyhow::Error::msg)?;
+        let out_dir = std::path::PathBuf::from("results");
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(Ctx {
+            rt: Runtime::new()?,
+            man,
+            epochs,
+            seeds,
+            out_dir,
+            datasets: BTreeMap::new(),
+        })
+    }
+
+    pub fn dataset(&mut self, name: &str) -> Rc<Dataset> {
+        if let Some(d) = self.datasets.get(name) {
+            return d.clone();
+        }
+        let cfg = &self.man.datasets[name];
+        let d = Rc::new(Dataset::generate(cfg, 42));
+        self.datasets.insert(name.to_string(), d.clone());
+        d
+    }
+
+    pub fn save(&self, file: &str, text: &str) -> Result<()> {
+        let path = self.out_dir.join(file);
+        std::fs::write(&path, text)?;
+        eprintln!("wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// One (dataset, model, method) run: train `epochs`, return test metric.
+pub fn run_one(ctx: &mut Ctx, ds_name: &str, model: &str, method: &str,
+               seed: u64) -> Result<(f64, crate::coordinator::RunStats)> {
+    run_one_suffix(ctx, ds_name, model, method, "", seed)
+}
+
+/// Like run_one, with an artifact-suffix selector for the ablation / perf
+/// variants ("_fp32", "_k64", ...; VQ method only).
+pub fn run_one_suffix(ctx: &mut Ctx, ds_name: &str, model: &str, method: &str,
+                      suffix: &str, seed: u64)
+                      -> Result<(f64, crate::coordinator::RunStats)> {
+    let ds = ctx.dataset(ds_name);
+    let epochs = ctx.epochs;
+    if method == "vq" {
+        let mut tr = VqTrainer::new(&mut ctx.rt, &ctx.man, ds, model, suffix,
+                                    NodeStrategy::Nodes, seed)?;
+        for _ in 0..epochs {
+            tr.epoch(&mut ctx.rt)?;
+        }
+        let m = tr.evaluate(&mut ctx.rt, Split::Test)?;
+        Ok((m, tr.stats.clone()))
+    } else {
+        let kind = Baseline::from_str(method).context("method")?;
+        let mut tr = EdgeTrainer::new(&mut ctx.rt, &ctx.man, ds, model, kind, seed)?;
+        for _ in 0..epochs {
+            tr.epoch(&mut ctx.rt)?;
+        }
+        let m = tr.evaluate(&mut ctx.rt, Split::Test)?;
+        Ok((m, tr.stats.clone()))
+    }
+}
+
+fn fmt_cell(vals: &[f64]) -> String {
+    let (m, s) = mean_std(vals);
+    format!("{m:.4}±{s:.4}")
+}
+
+/// Tables 4 & 7: performance across datasets × backbones × methods.
+pub fn table_perf(ctx: &mut Ctx, datasets: &[&str], file: &str) -> Result<()> {
+    let methods = ["full", "ns", "cluster", "saint", "vq"];
+    let models = ["gcn", "sage", "gat"];
+    let mut md = String::new();
+    let mut csv = String::from("dataset,model,method,metric_mean,metric_std\n");
+    for ds in datasets {
+        let metric = match ctx.man.datasets[*ds].task.as_str() {
+            "link" => "Hits@50",
+            _ if ctx.man.datasets[*ds].multilabel => "micro-F1",
+            _ => "accuracy",
+        };
+        let _ = writeln!(md, "\n### {ds} ({metric})\n");
+        let _ = writeln!(md, "| method | {} |", models.join(" | "));
+        let _ = writeln!(md, "|---|{}|", "---|".repeat(models.len()));
+        for method in methods {
+            let mut row = format!("| {method} ");
+            for model in models {
+                let cell = if method == "ns" && model == "gcn" {
+                    "NA¹".to_string()
+                } else {
+                    let mut vals = Vec::new();
+                    for (si, &seed) in ctx.seeds.clone().iter().enumerate() {
+                        let t = Stopwatch::start();
+                        match run_one(ctx, ds, model, method, seed) {
+                            Ok((m, _)) => {
+                                vals.push(m);
+                                eprintln!(
+                                    "  {ds}/{model}/{method} seed{si}: {m:.4} ({:.1}s)",
+                                    t.secs()
+                                );
+                            }
+                            Err(e) => eprintln!("  {ds}/{model}/{method}: ERROR {e:#}"),
+                        }
+                    }
+                    if vals.is_empty() {
+                        "ERR".into()
+                    } else {
+                        let (m, s) = mean_std(&vals);
+                        let _ = writeln!(csv, "{ds},{model},{method},{m:.4},{s:.4}");
+                        fmt_cell(&vals)
+                    }
+                };
+                let _ = write!(row, "| {cell} ");
+            }
+            let _ = writeln!(md, "{row}|");
+        }
+    }
+    md.push_str("\n¹ NS-SAGE sampling is not compatible with the GCN backbone (paper Table 4).\n");
+    println!("{md}");
+    ctx.save(&format!("{file}.md"), &md)?;
+    ctx.save(&format!("{file}.csv"), &csv)
+}
+
+/// Table 3: peak device bytes per training step, with measured node and
+/// message counts (the paper's fixed-nodes / fixed-messages comparison).
+pub fn table3(ctx: &mut Ctx) -> Result<()> {
+    let ds_name = "arxiv_sim";
+    let mut md = String::from(
+        "### Table 3 — peak per-step device bytes (arxiv_sim)\n\n\
+         | method | model | nodes/step | messages/step | step MB | KB/message |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    let mut csv = String::from("method,model,nodes,messages,bytes\n");
+    for model in ["gcn", "sage"] {
+        for method in ["ns", "cluster", "saint", "vq"] {
+            if method == "ns" && model == "gcn" {
+                continue;
+            }
+            let ds = ctx.dataset(ds_name);
+            let (nodes, msgs, bytes) = if method == "vq" {
+                let mut tr = VqTrainer::new(&mut ctx.rt, &ctx.man, ds, model, "",
+                                            NodeStrategy::Nodes, 1)?;
+                for _ in 0..3 {
+                    tr.train_step(&mut ctx.rt)?;
+                }
+                (tr.stats.nodes_per_step, tr.stats.messages_per_step,
+                 tr.stats.peak_step_bytes)
+            } else {
+                let kind = Baseline::from_str(method).unwrap();
+                let mut tr = EdgeTrainer::new(&mut ctx.rt, &ctx.man, ds, model, kind, 1)?;
+                for _ in 0..3 {
+                    tr.train_step(&mut ctx.rt)?;
+                }
+                (tr.stats.nodes_per_step, tr.stats.messages_per_step,
+                 tr.stats.peak_step_bytes)
+            };
+            let _ = writeln!(
+                md, "| {method} | {model} | {nodes} | {msgs} | {:.1} | {:.2} |",
+                bytes as f64 / 1e6,
+                bytes as f64 / 1024.0 / msgs.max(1) as f64
+            );
+            let _ = writeln!(csv, "{method},{model},{nodes},{msgs},{bytes}");
+        }
+    }
+    md.push_str(
+        "\nKB/message is the fixed-message-count comparison: VQ-GNN preserves \
+         ALL messages into the batch while samplers drop most, so its \
+         per-message footprint is the smallest (paper Table 3, right half).\n",
+    );
+    println!("{md}");
+    ctx.save("table3.md", &md)?;
+    ctx.save("table3.csv", &csv)
+}
+
+/// Fig. 4: validation metric vs wall-clock training time.
+pub fn fig4(ctx: &mut Ctx) -> Result<()> {
+    let ds_name = "arxiv_sim";
+    let mut csv = String::from("model,method,epoch,train_secs,val_metric\n");
+    for model in ["gcn", "sage"] {
+        for method in ["ns", "cluster", "saint", "vq"] {
+            if method == "ns" && model == "gcn" {
+                continue;
+            }
+            let ds = ctx.dataset(ds_name);
+            eprintln!("fig4: {model}/{method}");
+            if method == "vq" {
+                let mut tr = VqTrainer::new(&mut ctx.rt, &ctx.man, ds, model, "",
+                                            NodeStrategy::Nodes, 1)?;
+                for e in 0..ctx.epochs {
+                    tr.epoch(&mut ctx.rt)?;
+                    let t = tr.stats.train_secs;
+                    let v = tr.evaluate(&mut ctx.rt, Split::Val)?;
+                    let _ = writeln!(csv, "{model},vq,{e},{t:.3},{v:.4}");
+                }
+            } else {
+                let kind = Baseline::from_str(method).unwrap();
+                let mut tr = EdgeTrainer::new(&mut ctx.rt, &ctx.man, ds, model, kind, 1)?;
+                for e in 0..ctx.epochs {
+                    tr.epoch(&mut ctx.rt)?;
+                    let t = tr.stats.train_secs;
+                    let v = tr.evaluate(&mut ctx.rt, Split::Val)?;
+                    let _ = writeln!(csv, "{model},{method},{e},{t:.3},{v:.4}");
+                }
+            }
+        }
+    }
+    println!("{csv}");
+    ctx.save("fig4.csv", &csv)
+}
+
+/// §6 inference-time: VQ mini-batch inference vs the samplers' L-hop
+/// neighbor-expansion inference (OGB protocol).
+pub fn inference(ctx: &mut Ctx) -> Result<()> {
+    let ds = ctx.dataset("arxiv_sim");
+    let mut md = String::from("### Inference time, arxiv_sim SAGE (all nodes)\n\n");
+    let mut base = EdgeTrainer::new(&mut ctx.rt, &ctx.man, ds.clone(), "sage",
+                                    Baseline::SaintRw, 1)?;
+    for _ in 0..2 {
+        base.train_step(&mut ctx.rt)?;
+    }
+    let t = Stopwatch::start();
+    base.infer_full(&mut ctx.rt)?;
+    let t_full = t.secs();
+    let mut vq = VqTrainer::new(&mut ctx.rt, &ctx.man, ds.clone(), "sage", "",
+                                NodeStrategy::Nodes, 1)?;
+    for _ in 0..2 {
+        vq.train_step(&mut ctx.rt)?;
+    }
+    let nodes: Vec<u32> = (0..ds.n() as u32).collect();
+    let t = Stopwatch::start();
+    vq.infer_nodes(&mut ctx.rt, &nodes)?;
+    let t_vq = t.secs();
+    let _ = writeln!(
+        md,
+        "| path | seconds |\n|---|---|\n| neighbor-expansion (samplers) | {t_full:.3} |\n\
+         | VQ-GNN mini-batch | {t_vq:.3} |\n\nratio: {:.2}×\n",
+        t_full / t_vq.max(1e-9)
+    );
+    println!("{md}");
+    ctx.save("inference.md", &md)
+}
+
+/// Table 2 companion: asymptotics + measured per-step message counts.
+pub fn complexity(ctx: &mut Ctx) -> Result<()> {
+    let ds = ctx.dataset("arxiv_sim");
+    let (n, m) = (ds.n(), ds.graph.num_arcs());
+    let b = ctx.man.train.b;
+    let k = ctx.man.train.k;
+    let mut md = format!(
+        "### Table 2 — complexity (arxiv_sim: n={n}, m={m}, b={b}, k={k})\n\n\
+         | method | memory | train time/epoch | measured msgs/step |\n|---|---|---|---|\n"
+    );
+    for (method, model, mem, tt) in [
+        ("ns", "sage", "O(b·r^L·f + L·f²)", "O(n·r^L·f + n·r^{L-1}·f²)"),
+        ("cluster", "gcn", "O(L·b·f + L·f²)", "O(L·m·f + L·n·f²)"),
+        ("saint", "gcn", "O(L²·b·f + L·f²)", "O(L²·n·f + L²·n·f²)"),
+        ("vq", "gcn", "O(L·b·f + L·f² + L·k·f)", "O(L·b·d·f + L·n·f² + L·n·k·f)"),
+    ] {
+        let dsr = ctx.dataset("arxiv_sim");
+        let msgs = if method == "vq" {
+            let mut tr = VqTrainer::new(&mut ctx.rt, &ctx.man, dsr, model, "",
+                                        NodeStrategy::Nodes, 1)?;
+            tr.train_step(&mut ctx.rt)?;
+            tr.stats.messages_per_step
+        } else {
+            let kind = Baseline::from_str(method).unwrap();
+            let mut tr = EdgeTrainer::new(&mut ctx.rt, &ctx.man, dsr, model, kind, 1)?;
+            tr.train_step(&mut ctx.rt)?;
+            tr.stats.messages_per_step
+        };
+        let _ = writeln!(md, "| {method} | {mem} | {tt} | {msgs} |");
+    }
+    println!("{md}");
+    ctx.save("complexity.md", &md)
+}
+
+/// Table 8: Graph-Transformer hybrid backbone on arxiv_sim.
+pub fn table8(ctx: &mut Ctx) -> Result<()> {
+    let mut md = String::from(
+        "### Table 8 — Global attention + GAT (arxiv_sim)\n\n| run | acc |\n|---|---|\n",
+    );
+    let mut vals = Vec::new();
+    for &seed in &ctx.seeds.clone() {
+        let (m, _) = run_one(ctx, "arxiv_sim", "txf", "vq", seed)?;
+        vals.push(m);
+        let _ = writeln!(md, "| seed {seed} | {m:.4} |");
+    }
+    let (m, s) = mean_std(&vals);
+    let _ = writeln!(md, "| **mean±std** | **{m:.4}±{s:.4}** |");
+    println!("{md}");
+    ctx.save("table8.md", &md)
+}
+
+/// App. G ablations: layers / codebook size / batch size / sampling strategy.
+pub fn ablations(ctx: &mut Ctx, which: &str) -> Result<()> {
+    let ds_name = "arxiv_sim";
+    let mut md = format!(
+        "### Ablation: {which} (arxiv_sim, GCN, VQ-GNN)\n\n| config | acc |\n|---|---|\n"
+    );
+    let mut results: Vec<(String, f64)> = Vec::new();
+    let mut run_suffix = |ctx: &mut Ctx, label: String, suffix: String,
+                          strategy: NodeStrategy| -> Result<(String, f64)> {
+        let ds = ctx.dataset(ds_name);
+        let mut tr = VqTrainer::new(&mut ctx.rt, &ctx.man, ds, "gcn", &suffix,
+                                    strategy, 1)?;
+        for _ in 0..ctx.epochs {
+            tr.epoch(&mut ctx.rt)?;
+        }
+        let m = tr.evaluate(&mut ctx.rt, Split::Test)?;
+        eprintln!("  ablation {label}: {m:.4}");
+        Ok((label, m))
+    };
+    match which {
+        "layers" => {
+            for l in [1usize, 2, 3, 4, 5] {
+                let suffix = if l == 3 { String::new() } else { format!("_l{l}") };
+                results.push(run_suffix(ctx, format!("{l} layers"), suffix,
+                                        NodeStrategy::Nodes)?);
+            }
+        }
+        "codebook" => {
+            for k in [32usize, 64, 128, 256] {
+                let suffix = if k == ctx.man.train.k { String::new() } else { format!("_k{k}") };
+                results.push(run_suffix(ctx, format!("k={k}"), suffix,
+                                        NodeStrategy::Nodes)?);
+            }
+        }
+        "batch" => {
+            for b in [128usize, 256, 512, 1024] {
+                let suffix = if b == ctx.man.train.b { String::new() } else { format!("_b{b}") };
+                results.push(run_suffix(ctx, format!("b={b}"), suffix,
+                                        NodeStrategy::Nodes)?);
+            }
+        }
+        "sampling" => {
+            for (name, s) in [("nodes", NodeStrategy::Nodes),
+                              ("edges", NodeStrategy::Edges),
+                              ("walks", NodeStrategy::Walks)] {
+                results.push(run_suffix(ctx, format!("sampling {name}"),
+                                        String::new(), s)?);
+            }
+        }
+        other => anyhow::bail!("unknown ablation {other}"),
+    }
+    for (label, m) in &results {
+        let _ = writeln!(md, "| {label} | {m:.4} |");
+    }
+    println!("{md}");
+    ctx.save(&format!("ablation_{which}.md"), &md)
+}

@@ -1,0 +1,4 @@
+//! Experiment harness: reproduces every table and figure of the paper's
+//! evaluation (DESIGN.md §4 maps exhibits to functions here).
+
+pub mod experiments;

@@ -1,0 +1,17 @@
+//! VQ-GNN: a universal framework to scale up graph neural networks using
+//! vector quantization — NeurIPS 2021 reproduction.
+//!
+//! Three-layer architecture (DESIGN.md):
+//! - L3 (this crate): coordinator — datasets, samplers, VQ codebook state,
+//!   sketch building, trainers, metrics, experiment harness.
+//! - L2/L1 (python/, build-time only): JAX model + Pallas kernels, AOT
+//!   lowered to `artifacts/*.hlo.txt`, executed here via PJRT.
+
+pub mod coordinator;
+pub mod datasets;
+pub mod graph;
+pub mod harness;
+pub mod runtime;
+pub mod sampler;
+pub mod util;
+pub mod vq;

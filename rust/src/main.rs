@@ -1,0 +1,120 @@
+//! vq-gnn CLI — leader entrypoint.
+//!
+//!   vq-gnn train --dataset arxiv_sim --model gcn --method vq --epochs 30
+//!   vq-gnn exp <table3|table4|table7|table8|fig4|inference|complexity|
+//!               ablation-layers|ablation-codebook|ablation-batch|
+//!               ablation-sampling|all> [--epochs N] [--seeds a,b,c]
+//!
+//! (clap is unavailable offline — hand-rolled parsing, DESIGN.md §7.)
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use vq_gnn::harness::experiments as exp;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    let epochs: usize = flags.get("epochs").map(|s| s.parse()).transpose()?.unwrap_or(20);
+    let seeds: Vec<u64> = flags
+        .get("seeds")
+        .map(|s| s.split(',').map(|x| x.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![1, 2, 3]);
+
+    match pos.first().map(String::as_str) {
+        Some("train") => {
+            let ds = flags.get("dataset").cloned().unwrap_or("tiny_sim".into());
+            let model = flags.get("model").cloned().unwrap_or("gcn".into());
+            let method = flags.get("method").cloned().unwrap_or("vq".into());
+            let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
+            let suffix = flags.get("suffix").cloned().unwrap_or_default();
+            let mut ctx = exp::Ctx::new(epochs, seeds)?;
+            let t = std::time::Instant::now();
+            let (metric, stats) =
+                exp::run_one_suffix(&mut ctx, &ds, &model, &method, &suffix, seed)?;
+            println!(
+                "{ds}/{model}/{method}: test metric {metric:.4} \
+                 ({} steps, {:.1}s train, {:.1} MB peak step, {} msgs/step, total {:.1}s)",
+                stats.steps,
+                stats.train_secs,
+                stats.peak_step_bytes as f64 / 1e6,
+                stats.messages_per_step,
+                t.elapsed().as_secs_f64()
+            );
+        }
+        Some("exp") => {
+            let which = pos.get(1).context("exp needs a name")?.as_str();
+            let mut ctx = exp::Ctx::new(epochs, seeds)?;
+            match which {
+                "table3" => exp::table3(&mut ctx)?,
+                "table4" => {
+                    let ds: Vec<&str> = flags
+                        .get("datasets")
+                        .map(|s| s.split(',').collect())
+                        .unwrap_or_else(|| {
+                            vec!["arxiv_sim", "reddit_sim", "ppi_sim", "collab_sim"]
+                        });
+                    exp::table_perf(&mut ctx, &ds, "table4")?
+                }
+                "table7" => exp::table_perf(&mut ctx, &["flickr_sim"], "table7")?,
+                "table8" => exp::table8(&mut ctx)?,
+                "fig4" => exp::fig4(&mut ctx)?,
+                "inference" => exp::inference(&mut ctx)?,
+                "complexity" => exp::complexity(&mut ctx)?,
+                "ablation-layers" => exp::ablations(&mut ctx, "layers")?,
+                "ablation-codebook" => exp::ablations(&mut ctx, "codebook")?,
+                "ablation-batch" => exp::ablations(&mut ctx, "batch")?,
+                "ablation-sampling" => exp::ablations(&mut ctx, "sampling")?,
+                "all" => {
+                    exp::complexity(&mut ctx)?;
+                    exp::table3(&mut ctx)?;
+                    exp::inference(&mut ctx)?;
+                    exp::table_perf(
+                        &mut ctx,
+                        &["arxiv_sim", "reddit_sim", "ppi_sim", "collab_sim"],
+                        "table4",
+                    )?;
+                    exp::table_perf(&mut ctx, &["flickr_sim"], "table7")?;
+                    exp::table8(&mut ctx)?;
+                    exp::fig4(&mut ctx)?;
+                    for a in ["layers", "codebook", "batch", "sampling"] {
+                        exp::ablations(&mut ctx, a)?;
+                    }
+                }
+                other => bail!("unknown experiment '{other}'"),
+            }
+        }
+        _ => {
+            eprintln!(
+                "usage:\n  vq-gnn train --dataset D --model M --method \
+                 [vq|full|ns|cluster|saint] [--epochs N] [--seed S]\n  \
+                 vq-gnn exp [table3|table4|table7|table8|fig4|inference|\
+                 complexity|ablation-*|all] [--epochs N] [--seeds 1,2,3] \
+                 [--datasets a,b]"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! artifacts/manifest.json — the single source of truth for shapes, dataset
+//! generator parameters and artifact input/output signatures (emitted by
+//! python/compile/aot.py; parsed here so the two sides can never drift).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::util::tensor::DType;
+
+#[derive(Debug, Clone)]
+pub struct DatasetCfg {
+    pub name: String,
+    pub n: usize,
+    pub m_max: usize,
+    pub f_in: usize,
+    pub f_in_pad: usize,
+    pub n_classes: usize,
+    pub task: String,
+    pub multilabel: bool,
+    pub inductive: bool,
+    pub n_graphs: usize,
+    pub avg_degree: f64,
+    pub communities: usize,
+    pub feature_noise: f64,
+    pub intra_p_scale: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub fp: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub b: usize,
+    pub k: usize,
+    pub lr: f64,
+    pub rms_alpha: f64,
+    pub gamma: f64,
+    pub beta: f64,
+    pub p_pairs: usize,
+    pub weight_clip: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Per-layer VQ shape plan (mirrors python compile.model.LayerPlan).
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub f_in: usize,
+    pub h_out: usize,
+    pub g_dim: usize,
+    pub n_br: usize,
+    pub fp: usize,
+    pub cf: usize, // padded concat dim F
+    pub heads: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub dataset: String,
+    pub model: String,
+    pub b: usize,
+    pub k: usize,
+    pub nn: usize,
+    pub ne: usize,
+    pub layers_override: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub plan: Vec<LayerPlan>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub train: TrainCfg,
+    pub datasets: BTreeMap<String, DatasetCfg>,
+    pub models: BTreeMap<String, ModelCfg>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn us(j: &Json, k: &str) -> usize {
+    j.get(k).and_then(Json::as_usize).unwrap_or(0)
+}
+
+fn fl(j: &Json, k: &str) -> f64 {
+    j.get(k).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn st(j: &Json, k: &str) -> String {
+    j.get(k).and_then(Json::as_str).unwrap_or("").to_string()
+}
+
+fn bo(j: &Json, k: &str) -> bool {
+    j.get(k).and_then(Json::as_bool).unwrap_or(false)
+}
+
+fn tensor_specs(j: &Json) -> Vec<TensorSpec> {
+    j.as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|t| TensorSpec {
+            name: st(t, "name"),
+            shape: t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            dtype: DType::from_str(&st(t, "dtype")).unwrap_or(DType::F32),
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("read manifest: {e} (run `make artifacts`)"))?;
+        let j = Json::parse(&text)?;
+
+        let tj = j.get("train").ok_or("missing train")?;
+        let train = TrainCfg {
+            b: us(tj, "b"),
+            k: us(tj, "k"),
+            lr: fl(tj, "lr"),
+            rms_alpha: fl(tj, "rms_alpha"),
+            gamma: fl(tj, "gamma"),
+            beta: fl(tj, "beta"),
+            p_pairs: us(tj, "p_pairs"),
+            weight_clip: fl(tj, "weight_clip"),
+        };
+
+        let mut datasets = BTreeMap::new();
+        for (name, d) in j.get("datasets").and_then(Json::as_obj).ok_or("datasets")? {
+            datasets.insert(
+                name.clone(),
+                DatasetCfg {
+                    name: name.clone(),
+                    n: us(d, "n"),
+                    m_max: us(d, "m_max"),
+                    f_in: us(d, "f_in"),
+                    f_in_pad: (us(d, "f_in") + 7) / 8 * 8,
+                    n_classes: us(d, "n_classes"),
+                    task: st(d, "task"),
+                    multilabel: bo(d, "multilabel"),
+                    inductive: bo(d, "inductive"),
+                    n_graphs: us(d, "n_graphs").max(1),
+                    avg_degree: fl(d, "avg_degree"),
+                    communities: us(d, "communities"),
+                    feature_noise: fl(d, "feature_noise"),
+                    intra_p_scale: fl(d, "intra_p_scale"),
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models").and_then(Json::as_obj).ok_or("models")? {
+            models.insert(
+                name.clone(),
+                ModelCfg {
+                    name: name.clone(),
+                    hidden: us(m, "hidden"),
+                    layers: us(m, "layers"),
+                    heads: us(m, "heads"),
+                    fp: us(m, "fp"),
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).ok_or("artifacts")? {
+            let plan = a
+                .get("plan")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| LayerPlan {
+                    f_in: us(p, "f_in"),
+                    h_out: us(p, "h_out"),
+                    g_dim: us(p, "g_dim"),
+                    n_br: us(p, "n_br"),
+                    fp: us(p, "fp"),
+                    cf: us(p, "F"),
+                    heads: us(p, "heads"),
+                })
+                .collect();
+            let spec = ArtifactSpec {
+                name: st(a, "name"),
+                file: st(a, "file"),
+                kind: st(a, "kind"),
+                dataset: st(a, "dataset"),
+                model: st(a, "model"),
+                b: us(a, "b"),
+                k: us(a, "k"),
+                nn: us(a, "nn"),
+                ne: us(a, "ne"),
+                layers_override: us(a, "layers"),
+                inputs: tensor_specs(a.get("inputs").unwrap_or(&Json::Null)),
+                outputs: tensor_specs(a.get("outputs").unwrap_or(&Json::Null)),
+                plan,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), train, datasets, models, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec, String> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn default_dir() -> PathBuf {
+        std::env::var("VQ_GNN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.train.b > 0 && m.train.k > 0);
+        assert!(m.datasets.contains_key("tiny_sim"));
+        let a = m.artifact("vq_train_tiny_sim_gcn").unwrap();
+        assert_eq!(a.kind, "vq_train");
+        assert!(!a.inputs.is_empty() && !a.outputs.is_empty());
+        assert_eq!(a.plan.len(), m.models["gcn"].layers);
+        // xb comes first and matches (b, f_in_pad)
+        assert_eq!(a.inputs[0].name, "xb");
+        assert_eq!(a.inputs[0].shape[0], a.b);
+        // every vq_train has matching grad outputs for each param input
+        let params: Vec<_> = a
+            .inputs
+            .iter()
+            .filter(|t| t.name.starts_with("param."))
+            .collect();
+        for p in params {
+            let g = format!("grad.{}", &p.name["param.".len()..]);
+            let go = a.outputs.iter().find(|t| t.name == g).expect("grad output");
+            assert_eq!(go.shape, p.shape);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them from
+//! the rust hot path (the only place python output is consumed).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile` →
+//! `execute`, with outputs arriving as a single tuple literal
+//! (`return_tuple=True` at lowering time).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::tensor::{DType, Tensor};
+use manifest::{ArtifactSpec, Manifest};
+
+/// Process-wide PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, std::rc::Rc<Artifact>>,
+    /// Cumulative bytes shipped to/from the device (memory-meter input).
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub executions: u64,
+}
+
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, cache: HashMap::new(), bytes_in: 0, bytes_out: 0, executions: 0 })
+    }
+
+    /// Load + compile an artifact (cached per name).
+    pub fn load(&mut self, man: &Manifest, name: &str) -> Result<std::rc::Rc<Artifact>> {
+        if let Some(a) = self.cache.get(name) {
+            return Ok(a.clone());
+        }
+        let spec = man.artifact(name).map_err(anyhow::Error::msg)?.clone();
+        let path = man.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", spec.name))?;
+        let a = std::rc::Rc::new(Artifact { spec, exe });
+        self.cache.insert(name.to_string(), a.clone());
+        Ok(a)
+    }
+
+    /// Execute with positional inputs matching the manifest signature.
+    pub fn execute(&mut self, art: &Artifact, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = &art.spec;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, artifact expects {}",
+                spec.name,
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            if t.shape != s.shape || t.dtype != s.dtype {
+                bail!(
+                    "{}: input '{}' shape/dtype mismatch: got {:?}/{:?}, want {:?}/{:?}",
+                    spec.name, s.name, t.shape, t.dtype, s.shape, s.dtype
+                );
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = match t.dtype {
+                DType::F32 => xla::Literal::vec1(&t.f).reshape(&dims)?,
+                DType::I32 => xla::Literal::vec1(&t.i).reshape(&dims)?,
+            };
+            self.bytes_in += t.bytes() as u64;
+            lits.push(lit);
+        }
+        let result = art.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest declares {}",
+                spec.name,
+                outs.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut tensors = Vec::with_capacity(outs.len());
+        for (lit, s) in outs.iter().zip(&spec.outputs) {
+            let t = match s.dtype {
+                DType::F32 => Tensor::from_f32(&s.shape, lit.to_vec::<f32>()?),
+                DType::I32 => Tensor::from_i32(&s.shape, lit.to_vec::<i32>()?),
+            };
+            self.bytes_out += t.bytes() as u64;
+            tensors.push(t);
+        }
+        self.executions += 1;
+        Ok(tensors)
+    }
+}
+
+impl ArtifactSpec {
+    /// Static byte sizes (the memory-meter primitive for Table 3).
+    pub fn input_bytes(&self) -> u64 {
+        self.inputs.iter().map(|t| 4 * t.numel() as u64).sum()
+    }
+
+    pub fn output_bytes(&self) -> u64 {
+        self.outputs.iter().map(|t| 4 * t.numel() as u64).sum()
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.inputs
+            .iter()
+            .filter(|t| t.name.starts_with("param."))
+            .map(|t| 4 * t.numel() as u64)
+            .sum()
+    }
+}
+
+/// Load a golden bundle produced by python/compile/goldens.py.
+pub struct Golden {
+    pub inputs: Vec<(String, Tensor)>,
+    pub outputs: Vec<(String, Tensor)>,
+}
+
+impl Golden {
+    pub fn load(dir: &Path) -> Result<Golden> {
+        use crate::util::json::Json;
+        let idx = Json::parse(
+            &std::fs::read_to_string(dir.join("index.json")).context("golden index")?,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let load = |section: &str| -> Result<Vec<(String, Tensor)>> {
+            let mut out = Vec::new();
+            for e in idx.get(section).and_then(Json::as_arr).unwrap_or(&[]) {
+                let name = e.get("name").and_then(Json::as_str).unwrap().to_string();
+                let file = e.get("file").and_then(Json::as_str).unwrap();
+                let shape: Vec<usize> = e
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .unwrap()
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                let dt = DType::from_str(
+                    e.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+                )
+                .unwrap();
+                out.push((name, Tensor::from_bin(&dir.join(file), &shape, dt)?));
+            }
+            Ok(out)
+        };
+        Ok(Golden { inputs: load("inputs")?, outputs: load("outputs")? })
+    }
+}

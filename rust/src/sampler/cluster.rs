@@ -1,0 +1,150 @@
+//! Cluster-GCN (paper §5): partition the graph into densely-connected
+//! clusters (METIS in the original; BFS-grown + LDG greedy here — DESIGN.md
+//! §7), then train each step on a random group of clusters with the
+//! intra-group edges restored.
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Partition `g` into `parts` clusters of roughly n/parts nodes.
+///
+/// Streaming LDG (linear deterministic greedy): visit nodes in BFS order
+/// from random seeds; place each node in the cluster holding most of its
+/// already-placed neighbors, penalized by fullness.  This matches
+/// Cluster-GCN's requirement (dense clusters) without METIS.
+pub fn partition(g: &Graph, parts: usize, rng: &mut Rng) -> Vec<u32> {
+    let n = g.n;
+    let cap = (n + parts - 1) / parts;
+    let mut part = vec![u32::MAX; n];
+    let mut sizes = vec![0usize; parts];
+    // BFS visit order over components (keeps clusters contiguous)
+    let mut order = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    let mut starts: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut starts);
+    let mut queue = std::collections::VecDeque::new();
+    for &s in &starts {
+        if seen[s as usize] {
+            continue;
+        }
+        seen[s as usize] = true;
+        queue.push_back(s);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &v in g.out_neighbors(u as usize) {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    let mut score = vec![0.0f64; parts];
+    for &u in &order {
+        for s in score.iter_mut() {
+            *s = 0.0;
+        }
+        for &v in g.in_neighbors(u as usize) {
+            let p = part[v as usize];
+            if p != u32::MAX {
+                score[p as usize] += 1.0;
+            }
+        }
+        let mut best = 0usize;
+        let mut best_s = f64::NEG_INFINITY;
+        for p in 0..parts {
+            if sizes[p] >= cap {
+                continue;
+            }
+            let s = (score[p] + 1e-3) * (1.0 - sizes[p] as f64 / cap as f64);
+            if s > best_s {
+                best_s = s;
+                best = p;
+            }
+        }
+        part[u as usize] = best as u32;
+        sizes[best] += 1;
+    }
+    part
+}
+
+/// One Cluster-GCN batch: the union of `group` clusters.
+pub fn batch_nodes(part: &[u32], group: &[u32]) -> Vec<u32> {
+    let set: std::collections::HashSet<u32> = group.iter().cloned().collect();
+    (0..part.len() as u32)
+        .filter(|&v| set.contains(&part[v as usize]))
+        .collect()
+}
+
+/// Edge-cut fraction — partition quality metric (lower = denser clusters).
+pub fn edge_cut(g: &Graph, part: &[u32]) -> f64 {
+    let mut cut = 0usize;
+    for v in 0..g.n {
+        for &u in g.in_neighbors(v) {
+            if part[u as usize] != part[v] {
+                cut += 1;
+            }
+        }
+    }
+    cut as f64 / g.num_arcs().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn community_graph(n: usize, comms: usize, rng: &mut Rng) -> Graph {
+        let mut edges = Vec::new();
+        let per = n / comms;
+        for _ in 0..n * 4 {
+            let c = rng.below(comms);
+            let u = (c * per + rng.below(per)) as u32;
+            let v = if rng.f64() < 0.9 {
+                (c * per + rng.below(per)) as u32
+            } else {
+                rng.below(n) as u32
+            };
+            edges.push((u, v));
+        }
+        Graph::from_undirected(n, &edges)
+    }
+
+    #[test]
+    fn partition_covers_all_nodes_balanced() {
+        check("partition_cover", 8, |rng, _| {
+            let g = community_graph(120, 4, rng);
+            let parts = 6;
+            let part = partition(&g, parts, rng);
+            if part.iter().any(|&p| p == u32::MAX || p as usize >= parts) {
+                return Err("unassigned node".into());
+            }
+            let mut sizes = vec![0usize; parts];
+            for &p in &part {
+                sizes[p as usize] += 1;
+            }
+            let cap = (120 + parts - 1) / parts;
+            if sizes.iter().any(|&s| s > cap) {
+                return Err(format!("oversized cluster {sizes:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn partition_beats_random_on_edge_cut() {
+        let mut rng = Rng::new(5);
+        let g = community_graph(200, 4, &mut rng);
+        let part = partition(&g, 4, &mut rng);
+        let random: Vec<u32> = (0..200).map(|_| rng.below(4) as u32).collect();
+        assert!(edge_cut(&g, &part) < edge_cut(&g, &random) * 0.8,
+                "ldg {} vs random {}", edge_cut(&g, &part), edge_cut(&g, &random));
+    }
+
+    #[test]
+    fn batch_nodes_selects_exactly_group() {
+        let part = vec![0, 1, 2, 0, 1, 2, 0];
+        let b = batch_nodes(&part, &[0, 2]);
+        assert_eq!(b, vec![0, 2, 3, 5, 6]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Mini-batch samplers.
+//!
+//! VQ-GNN samples *nodes* (by node / edge / random-walk strategies — the
+//! App. G ablation); the baselines sample *subgraphs* (neighbor.rs,
+//! cluster.rs, saint.rs).
+
+pub mod cluster;
+pub mod neighbor;
+pub mod saint;
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeStrategy {
+    /// Uniform node sampling (the paper's default).
+    Nodes,
+    /// Sample edges, take both endpoints.
+    Edges,
+    /// GraphSAINT-style random-walk roots.
+    Walks,
+}
+
+impl NodeStrategy {
+    pub fn from_str(s: &str) -> Option<NodeStrategy> {
+        match s {
+            "nodes" => Some(NodeStrategy::Nodes),
+            "edges" => Some(NodeStrategy::Edges),
+            "walks" => Some(NodeStrategy::Walks),
+            _ => None,
+        }
+    }
+}
+
+/// Epoch-wise node batcher for VQ-GNN: traverses a node pool in shuffled
+/// order (strategy Nodes), or draws correlated batches (Edges / Walks) while
+/// still touching every pool node once per epoch on average.
+pub struct NodeBatcher {
+    pool: Vec<u32>,
+    pub b: usize,
+    strategy: NodeStrategy,
+    cursor: usize,
+    order: Vec<u32>,
+}
+
+impl NodeBatcher {
+    pub fn new(pool: Vec<u32>, b: usize, strategy: NodeStrategy) -> NodeBatcher {
+        assert!(!pool.is_empty());
+        let order = pool.clone();
+        NodeBatcher { pool, b, strategy, cursor: 0, order }
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        (self.pool.len() + self.b - 1) / self.b
+    }
+
+    /// Next batch of exactly b node ids (the tail wraps with resampled
+    /// nodes so artifact shapes stay fixed); `pad` gives the count of
+    /// duplicated tail nodes whose loss weight must be zeroed.
+    pub fn next_batch(&mut self, graph: &Graph, rng: &mut Rng) -> (Vec<u32>, usize) {
+        match self.strategy {
+            NodeStrategy::Nodes => {
+                if self.cursor == 0 {
+                    rng.shuffle(&mut self.order);
+                }
+                let start = self.cursor;
+                let end = (start + self.b).min(self.order.len());
+                let mut out: Vec<u32> = self.order[start..end].to_vec();
+                self.cursor = if end == self.order.len() { 0 } else { end };
+                let pad = self.b - out.len();
+                // pad with distinct nodes not already in the batch
+                if pad > 0 {
+                    let mut seen: std::collections::HashSet<u32> =
+                        out.iter().cloned().collect();
+                    while out.len() < self.b {
+                        let c = self.pool[rng.below(self.pool.len())];
+                        if seen.insert(c) {
+                            out.push(c);
+                        }
+                    }
+                }
+                (out, pad)
+            }
+            NodeStrategy::Edges => {
+                let mut seen = std::collections::HashSet::with_capacity(self.b * 2);
+                let mut out = Vec::with_capacity(self.b);
+                let mut guard = 0;
+                while out.len() < self.b && guard < self.b * 50 {
+                    guard += 1;
+                    let u = self.pool[rng.below(self.pool.len())];
+                    if seen.insert(u) {
+                        out.push(u);
+                    }
+                    if out.len() >= self.b {
+                        break;
+                    }
+                    let nbs = graph.out_neighbors(u as usize);
+                    if !nbs.is_empty() {
+                        let v = nbs[rng.below(nbs.len())];
+                        if seen.insert(v) {
+                            out.push(v);
+                        }
+                    }
+                }
+                while out.len() < self.b {
+                    let c = self.pool[rng.below(self.pool.len())];
+                    if seen.insert(c) {
+                        out.push(c);
+                    }
+                }
+                (out, 0)
+            }
+            NodeStrategy::Walks => {
+                let mut seen = std::collections::HashSet::with_capacity(self.b * 2);
+                let mut out = Vec::with_capacity(self.b);
+                let mut guard = 0;
+                while out.len() < self.b && guard < self.b * 50 {
+                    guard += 1;
+                    let root = self.pool[rng.below(self.pool.len())];
+                    for v in graph.random_walk(root, 3, rng) {
+                        if out.len() >= self.b {
+                            break;
+                        }
+                        if seen.insert(v) {
+                            out.push(v);
+                        }
+                    }
+                }
+                while out.len() < self.b {
+                    let c = self.pool[rng.below(self.pool.len())];
+                    if seen.insert(c) {
+                        out.push(c);
+                    }
+                }
+                (out, 0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(n: usize) -> Graph {
+        let edges: Vec<(u32, u32)> =
+            (0..n as u32).map(|i| (i, (i + 1) % n as u32)).collect();
+        Graph::from_undirected(n, &edges)
+    }
+
+    #[test]
+    fn node_strategy_covers_pool_each_epoch() {
+        let g = ring(100);
+        let pool: Vec<u32> = (0..100).collect();
+        let mut nb = NodeBatcher::new(pool, 32, NodeStrategy::Nodes);
+        let mut rng = Rng::new(1);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..nb.batches_per_epoch() {
+            let (batch, _pad) = nb.next_batch(&g, &mut rng);
+            assert_eq!(batch.len(), 32);
+            let uniq: std::collections::HashSet<_> = batch.iter().collect();
+            assert_eq!(uniq.len(), 32, "batch has duplicates");
+            seen.extend(batch);
+        }
+        assert_eq!(seen.len(), 100);
+    }
+
+    #[test]
+    fn edge_and_walk_strategies_fill_batches() {
+        let g = ring(64);
+        for strat in [NodeStrategy::Edges, NodeStrategy::Walks] {
+            let mut nb = NodeBatcher::new((0..64).collect(), 16, strat);
+            let mut rng = Rng::new(2);
+            for _ in 0..10 {
+                let (batch, pad) = nb.next_batch(&g, &mut rng);
+                assert_eq!(batch.len(), 16);
+                assert_eq!(pad, 0);
+                let uniq: std::collections::HashSet<_> = batch.iter().collect();
+                assert_eq!(uniq.len(), 16);
+            }
+        }
+    }
+
+    #[test]
+    fn restricted_pool_is_respected() {
+        let g = ring(50);
+        let pool: Vec<u32> = (0..25).collect();
+        let mut nb = NodeBatcher::new(pool, 10, NodeStrategy::Nodes);
+        let mut rng = Rng::new(3);
+        for _ in 0..8 {
+            let (batch, _) = nb.next_batch(&g, &mut rng);
+            assert!(batch.iter().all(|&v| v < 25));
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! GraphSAINT-RW (paper §5): random-walk-induced subgraphs with the
+//! unbiasedness normalizations — aggregator coefficients divided by edge
+//! inclusion probability α_e and per-node loss weights λ_v = 1/p_v, both
+//! estimated from pre-sampled subgraphs as in the original.
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+pub struct SaintSampler {
+    pub roots: usize,
+    pub walk_len: usize,
+    /// Estimated node/edge inclusion probabilities (per undirected arc id).
+    node_p: Vec<f32>,
+    arc_p: Vec<f32>,
+}
+
+impl SaintSampler {
+    /// `pre_samples` subgraphs estimate inclusion probabilities.
+    pub fn new(g: &Graph, roots: usize, walk_len: usize, pre_samples: usize,
+               rng: &mut Rng) -> SaintSampler {
+        let mut node_c = vec![1.0f32; g.n]; // +1 smoothing
+        let mut arc_c = vec![1.0f32; g.num_arcs()];
+        let mut scratch = vec![-1i32; g.n];
+        for _ in 0..pre_samples {
+            let nodes = sample_nodes(g, roots, walk_len, rng);
+            for &v in &nodes {
+                node_c[v as usize] += 1.0;
+            }
+            for (u_local, v_local) in induced_arc_ids(g, &nodes, &mut scratch) {
+                let _ = u_local;
+                arc_c[v_local] += 1.0;
+            }
+        }
+        let s = (pre_samples + 1) as f32;
+        SaintSampler {
+            roots,
+            walk_len,
+            node_p: node_c.into_iter().map(|c| c / s).collect(),
+            arc_p: arc_c.into_iter().map(|c| c / s).collect(),
+        }
+    }
+
+    /// Sample one subgraph; returns (nodes, local arcs with normalized
+    /// coefficients relative to `base_coef`, loss weights λ).
+    pub fn sample(&self, g: &Graph, rng: &mut Rng)
+                  -> (Vec<u32>, Vec<(u32, u32, f32)>, Vec<f32>) {
+        let nodes = sample_nodes(g, self.roots, self.walk_len, rng);
+        let mut scratch = vec![-1i32; g.n];
+        for (li, &v) in nodes.iter().enumerate() {
+            scratch[v as usize] = li as i32;
+        }
+        let mut arcs = Vec::new();
+        for (li, &v) in nodes.iter().enumerate() {
+            let (s0, s1) = (g.in_ptr[v as usize] as usize, g.in_ptr[v as usize + 1] as usize);
+            for e in s0..s1 {
+                let u = g.in_col[e];
+                let lu = scratch[u as usize];
+                if lu >= 0 {
+                    // α_e ≈ p(edge in subgraph); divide to stay unbiased
+                    let alpha = self.arc_p[e].max(1e-3);
+                    arcs.push((lu as u32, li as u32, 1.0 / alpha));
+                }
+            }
+        }
+        for &v in &nodes {
+            scratch[v as usize] = -1;
+        }
+        let lam: Vec<f32> = nodes
+            .iter()
+            .map(|&v| 1.0 / self.node_p[v as usize].max(1e-3))
+            .collect();
+        (nodes, arcs, lam)
+    }
+}
+
+fn sample_nodes(g: &Graph, roots: usize, walk_len: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut seen = std::collections::HashSet::with_capacity(roots * walk_len);
+    let mut nodes = Vec::with_capacity(roots * walk_len);
+    for _ in 0..roots {
+        let r = rng.below(g.n) as u32;
+        for v in g.random_walk(r, walk_len, rng) {
+            if seen.insert(v) {
+                nodes.push(v);
+            }
+        }
+    }
+    nodes
+}
+
+/// Local arcs of the induced subgraph, tagged with the *global* in-CSR arc
+/// index (for inclusion-probability accounting).
+fn induced_arc_ids(g: &Graph, nodes: &[u32], scratch: &mut [i32]) -> Vec<(u32, usize)> {
+    for (li, &v) in nodes.iter().enumerate() {
+        scratch[v as usize] = li as i32;
+    }
+    let mut out = Vec::new();
+    for &v in nodes {
+        let (s0, s1) = (g.in_ptr[v as usize] as usize, g.in_ptr[v as usize + 1] as usize);
+        for e in s0..s1 {
+            if scratch[g.in_col[e] as usize] >= 0 {
+                out.push((g.in_col[e], e));
+            }
+        }
+    }
+    for &v in nodes {
+        scratch[v as usize] = -1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn com_graph(rng: &mut Rng) -> Graph {
+        let n = 120;
+        let mut e = Vec::new();
+        for _ in 0..n * 4 {
+            e.push((rng.below(n) as u32, rng.below(n) as u32));
+        }
+        Graph::from_undirected(n, &e)
+    }
+
+    #[test]
+    fn subgraph_nodes_unique_and_connected_ish() {
+        let mut rng = Rng::new(1);
+        let g = com_graph(&mut rng);
+        let s = SaintSampler::new(&g, 8, 3, 10, &mut rng);
+        let (nodes, arcs, lam) = s.sample(&g, &mut rng);
+        let uniq: std::collections::HashSet<_> = nodes.iter().collect();
+        assert_eq!(uniq.len(), nodes.len());
+        assert_eq!(lam.len(), nodes.len());
+        for &(u, v, c) in &arcs {
+            assert!((u as usize) < nodes.len() && (v as usize) < nodes.len());
+            assert!(c > 0.0);
+        }
+    }
+
+    #[test]
+    fn frequently_sampled_nodes_get_lower_loss_weight() {
+        let mut rng = Rng::new(2);
+        // star graph: hub 0 is in nearly every walk
+        let edges: Vec<(u32, u32)> = (1..60u32).map(|v| (0, v)).collect();
+        let g = Graph::from_undirected(60, &edges);
+        let s = SaintSampler::new(&g, 6, 4, 50, &mut rng);
+        // hub inclusion prob >> leaf inclusion prob → λ_hub << λ_leaf
+        let hub_p = s.node_p[0];
+        let leaf_p: f32 = (1..60).map(|v| s.node_p[v]).sum::<f32>() / 59.0;
+        assert!(hub_p > leaf_p * 3.0, "hub {hub_p} leaf {leaf_p}");
+    }
+
+    #[test]
+    fn walk_subgraphs_cover_graph_over_epoch() {
+        let mut rng = Rng::new(3);
+        let g = com_graph(&mut rng);
+        let s = SaintSampler::new(&g, 10, 3, 5, &mut rng);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..40 {
+            let (nodes, _, _) = s.sample(&g, &mut rng);
+            seen.extend(nodes);
+        }
+        assert!(seen.len() > g.n * 8 / 10, "covered {}/{}", seen.len(), g.n);
+    }
+}

@@ -1,0 +1,70 @@
+//! Mini benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean/std/min reporting, runnable under
+//! `cargo bench` via `harness = false` targets.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let (v, unit) = humanize(self.mean_ns);
+        let (vmin, umin) = humanize(self.min_ns);
+        println!(
+            "{:<44} {:>10.3} {}/iter (min {:.3} {}, ±{:.1}%, n={})",
+            self.name,
+            v,
+            unit,
+            vmin,
+            umin,
+            100.0 * self.std_ns / self.mean_ns.max(1e-9),
+            self.iters
+        );
+    }
+}
+
+fn humanize(ns: f64) -> (f64, &'static str) {
+    if ns >= 1e9 {
+        (ns / 1e9, "s")
+    } else if ns >= 1e6 {
+        (ns / 1e6, "ms")
+    } else if ns >= 1e3 {
+        (ns / 1e3, "us")
+    } else {
+        (ns, "ns")
+    }
+}
+
+/// Run `f` for ~`target_secs` (after warmup), return timing stats.
+pub fn bench<F: FnMut()>(name: &str, target_secs: f64, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / once).ceil() as usize).clamp(3, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        min_ns: min,
+    };
+    r.report();
+    r
+}

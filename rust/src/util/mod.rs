@@ -1,0 +1,50 @@
+//! Offline substrates: JSON, PRNG, tensors, stats/benchmarking, and a mini
+//! property-test driver (serde/rand/criterion/proptest are unavailable in
+//! this image — DESIGN.md §7).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tensor;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch with named laps (used by the experiment harness).
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Mean / population std of a sample.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    (m, v.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = super::mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

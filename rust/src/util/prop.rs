@@ -1,0 +1,54 @@
+//! Mini property-test driver (proptest is unavailable offline): run a
+//! predicate over many seeded random cases; on failure, report the seed so
+//! the case replays deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop(rng, case_index)` for `cases` seeds; panic with the failing
+/// seed on the first violation (returning Err(msg) or panicking counts).
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper producing Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("below_in_range", 50, |rng, _| {
+            let n = 1 + rng.below(100);
+            let x = rng.below(n);
+            if x < n {
+                Ok(())
+            } else {
+                Err(format!("{x} >= {n}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_failures() {
+        check("always_fails", 3, |_, _| Err("nope".into()));
+    }
+}

@@ -1,0 +1,129 @@
+//! Host-side tensors: the marshalling type between the coordinator and the
+//! PJRT runtime (and the payload format of the python goldens).
+
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_str(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        4
+    }
+}
+
+/// Dense row-major host tensor (f32 or i32 payload).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub f: Vec<f32>,
+    pub i: Vec<i32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), dtype: DType::F32, f: vec![0.0; n], i: vec![] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), dtype: DType::F32, f: data, i: vec![] }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), dtype: DType::I32, f: vec![], i: data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::from_f32(&[], vec![x])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype.bytes()
+    }
+
+    /// Load a raw little-endian .bin payload (golden format).
+    pub fn from_bin(path: &Path, shape: &[usize], dtype: DType) -> std::io::Result<Tensor> {
+        let raw = std::fs::read(path)?;
+        let n: usize = shape.iter().product();
+        assert_eq!(raw.len(), n * 4, "{}: bad payload size", path.display());
+        Ok(match dtype {
+            DType::F32 => {
+                let f = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Tensor::from_f32(shape, f)
+            }
+            DType::I32 => {
+                let i = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Tensor::from_i32(shape, i)
+            }
+        })
+    }
+
+    /// Max |a - b| between two f32 tensors (shape-checked).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        assert_eq!(self.dtype, DType::F32);
+        self.f
+            .iter()
+            .zip(&other.f)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 error ‖a−b‖/(‖b‖+eps).
+    pub fn rel_l2(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.f.iter().zip(&other.f) {
+            num += ((a - b) * (a - b)) as f64;
+            den += (b * b) as f64;
+        }
+        (num.sqrt() / (den.sqrt() + 1e-12)) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_measure() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.bytes(), 24);
+        let u = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 7.]);
+        assert!((t.max_abs_diff(&u) - 1.0).abs() < 1e-6);
+        assert!(t.rel_l2(&t) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(&[2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,360 @@
+//! VQ codebook state (paper Alg. 2): product-VQ branches with implicit
+//! whitening + EMA cluster statistics, and the global assignment table R
+//! maintained across mini-batches.  Mirrors python/compile/vq.py (the
+//! executable spec) — semantics are locked by tests on both sides.
+
+pub mod sketch;
+
+use crate::runtime::manifest::LayerPlan;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+pub const EPS: f32 = 1e-5;
+
+/// One product-VQ branch: k codewords over an fp-dim slice of the concat
+/// (feature ‖ gradient) space.
+#[derive(Debug, Clone)]
+pub struct VqBranch {
+    pub k: usize,
+    pub fp: usize,
+    /// Whitened codewords Ṽ̄, row-major (k, fp).
+    pub cww: Vec<f32>,
+    /// EMA cluster sizes η (k).
+    pub counts: Vec<f32>,
+    /// EMA cluster vector sums Σ, row-major (k, fp).
+    pub sums: Vec<f32>,
+    /// Smoothed whitening stats Ẽ[V], Ṽar[V] (fp).
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+impl VqBranch {
+    pub fn init(k: usize, fp: usize, rng: &mut Rng) -> VqBranch {
+        let mut cww = vec![0.0f32; k * fp];
+        for x in cww.iter_mut() {
+            *x = 0.1 * rng.gauss_f32();
+        }
+        VqBranch {
+            k,
+            fp,
+            sums: cww.clone(),
+            cww,
+            counts: vec![1.0; k],
+            mean: vec![0.0; fp],
+            var: vec![1.0; fp],
+        }
+    }
+
+    /// Inverse whitening transform: raw-space codewords (Eq. 6/7 inputs).
+    pub fn raw_codewords_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.k * self.fp);
+        for v in 0..self.k {
+            for d in 0..self.fp {
+                out[v * self.fp + d] = self.cww[v * self.fp + d]
+                    * (self.var[d] + EPS).sqrt()
+                    + self.mean[d];
+            }
+        }
+    }
+
+    /// Alg. 2 body: EMA whitening stats → whiten batch → EMA cluster
+    /// stats → codeword refresh.  `v` is (b, fp) raw vectors; `assign` the
+    /// in-graph FINDNEAREST result (computed against the pre-update state).
+    pub fn update(&mut self, v: &[f32], assign: &[i32], gamma: f32, beta: f32) {
+        let b = assign.len();
+        debug_assert_eq!(v.len(), b * self.fp);
+        // batch mean / variance per dim
+        for d in 0..self.fp {
+            let mut m = 0.0f64;
+            for i in 0..b {
+                m += v[i * self.fp + d] as f64;
+            }
+            let m = (m / b as f64) as f32;
+            let mut va = 0.0f64;
+            for i in 0..b {
+                let x = v[i * self.fp + d] - m;
+                va += (x * x) as f64;
+            }
+            let va = (va / b as f64) as f32;
+            self.mean[d] = self.mean[d] * beta + m * (1.0 - beta);
+            self.var[d] = self.var[d] * beta + va * (1.0 - beta);
+        }
+        // EMA cluster sizes + sums over whitened vectors
+        for c in self.counts.iter_mut() {
+            *c *= gamma;
+        }
+        for s in self.sums.iter_mut() {
+            *s *= gamma;
+        }
+        let g1 = 1.0 - gamma;
+        for i in 0..b {
+            let a = assign[i] as usize;
+            debug_assert!(a < self.k);
+            self.counts[a] += g1;
+            for d in 0..self.fp {
+                let w = (v[i * self.fp + d] - self.mean[d])
+                    / (self.var[d] + EPS).sqrt();
+                self.sums[a * self.fp + d] += g1 * w;
+            }
+        }
+        // refresh codewords with mass
+        for c in 0..self.k {
+            if self.counts[c] > 1e-6 {
+                for d in 0..self.fp {
+                    self.cww[c * self.fp + d] =
+                        self.sums[c * self.fp + d] / self.counts[c];
+                }
+            }
+        }
+    }
+
+    /// Host-side FINDNEAREST (tests + inductive bootstrap fallback).
+    pub fn assign_host(&self, v: &[f32]) -> Vec<i32> {
+        let b = v.len() / self.fp;
+        let mut out = vec![0i32; b];
+        for i in 0..b {
+            let mut best = f32::INFINITY;
+            let mut arg = 0usize;
+            for c in 0..self.k {
+                let mut d2 = 0.0f32;
+                for d in 0..self.fp {
+                    let w = (v[i * self.fp + d] - self.mean[d])
+                        / (self.var[d] + EPS).sqrt();
+                    let diff = w - self.cww[c * self.fp + d];
+                    d2 += diff * diff;
+                }
+                if d2 < best {
+                    best = d2;
+                    arg = c;
+                }
+            }
+            out[i] = arg as i32;
+        }
+        out
+    }
+}
+
+/// Per-layer codebook: branches + the global node→codeword table R.
+#[derive(Debug)]
+pub struct LayerVq {
+    pub plan: LayerPlan,
+    pub k: usize,
+    pub branches: Vec<VqBranch>,
+    /// Assignment table, (n_br, n) row-major: R_j[node] ∈ [0, k).
+    pub assign: Vec<u32>,
+    pub n: usize,
+}
+
+impl LayerVq {
+    pub fn init(plan: &LayerPlan, k: usize, n: usize, rng: &mut Rng) -> LayerVq {
+        let branches = (0..plan.n_br).map(|_| VqBranch::init(k, plan.fp, rng)).collect();
+        let assign = (0..plan.n_br * n).map(|_| rng.below(k) as u32).collect();
+        LayerVq { plan: plan.clone(), k, branches, assign, n }
+    }
+
+    pub fn assign_of(&self, branch: usize, node: usize) -> usize {
+        self.assign[branch * self.n + node] as usize
+    }
+
+    /// Artifact input tensors: raw codewords cw, whitened cww, mean, var.
+    pub fn cw_tensor(&self) -> Tensor {
+        let (nb, k, fp) = (self.plan.n_br, self.k, self.plan.fp);
+        let mut data = vec![0.0f32; nb * k * fp];
+        for (j, br) in self.branches.iter().enumerate() {
+            br.raw_codewords_into(&mut data[j * k * fp..(j + 1) * k * fp]);
+        }
+        Tensor::from_f32(&[nb, k, fp], data)
+    }
+
+    pub fn cww_tensor(&self) -> Tensor {
+        let (nb, k, fp) = (self.plan.n_br, self.k, self.plan.fp);
+        let mut data = Vec::with_capacity(nb * k * fp);
+        for br in &self.branches {
+            data.extend_from_slice(&br.cww);
+        }
+        Tensor::from_f32(&[nb, k, fp], data)
+    }
+
+    pub fn mean_tensor(&self) -> Tensor {
+        let (nb, fp) = (self.plan.n_br, self.plan.fp);
+        let mut data = Vec::with_capacity(nb * fp);
+        for br in &self.branches {
+            data.extend_from_slice(&br.mean);
+        }
+        Tensor::from_f32(&[nb, fp], data)
+    }
+
+    pub fn var_tensor(&self) -> Tensor {
+        let (nb, fp) = (self.plan.n_br, self.plan.fp);
+        let mut data = Vec::with_capacity(nb * fp);
+        for br in &self.branches {
+            data.extend_from_slice(&br.var);
+        }
+        Tensor::from_f32(&[nb, fp], data)
+    }
+
+    /// Apply a train step's outputs: update branch EMAs with the batch's
+    /// concat vectors and write the fresh assignments into R.
+    ///
+    /// xfeat: (b, f_in) features; gvec: (b, g_dim) gradients;
+    /// assign: (n_br, b) int32 from the in-graph L1 kernel.
+    pub fn update_from_batch(&mut self, batch: &[u32], xfeat: &Tensor,
+                             gvec: &Tensor, assign: &Tensor,
+                             gamma: f32, beta: f32) {
+        let b = batch.len();
+        let (f, g) = (self.plan.f_in, self.plan.g_dim);
+        let (nb, fp, cf) = (self.plan.n_br, self.plan.fp, self.plan.cf);
+        debug_assert_eq!(xfeat.shape, &[b, f]);
+        debug_assert_eq!(gvec.shape, &[b, g]);
+        debug_assert_eq!(assign.shape, &[nb, b]);
+        // lay the concat space out per node: [feat | grad | zero-pad]
+        let mut z = vec![0.0f32; b * cf];
+        for i in 0..b {
+            z[i * cf..i * cf + f].copy_from_slice(&xfeat.f[i * f..(i + 1) * f]);
+            z[i * cf + f..i * cf + f + g]
+                .copy_from_slice(&gvec.f[i * g..(i + 1) * g]);
+        }
+        let mut vbr = vec![0.0f32; b * fp];
+        for j in 0..nb {
+            for i in 0..b {
+                vbr[i * fp..(i + 1) * fp]
+                    .copy_from_slice(&z[i * cf + j * fp..i * cf + (j + 1) * fp]);
+            }
+            let a = &assign.i[j * b..(j + 1) * b];
+            self.branches[j].update(&vbr, a, gamma, beta);
+            for (i, &node) in batch.iter().enumerate() {
+                self.assign[j * self.n + node as usize] = a[i] as u32;
+            }
+        }
+    }
+}
+
+/// All layers' codebooks for one VQ-GNN model instance.
+#[derive(Debug)]
+pub struct VqModel {
+    pub layers: Vec<LayerVq>,
+}
+
+impl VqModel {
+    pub fn init(plans: &[LayerPlan], k: usize, n: usize, seed: u64) -> VqModel {
+        let mut rng = Rng::new(seed ^ 0x56515Fu64);
+        VqModel {
+            layers: plans.iter().map(|p| LayerVq::init(p, k, n, &mut rng)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn plan(f: usize, h: usize, nb: usize) -> LayerPlan {
+        let cf = ((f + h) + nb - 1) / nb * nb;
+        LayerPlan { f_in: f, h_out: h, g_dim: h, n_br: nb, fp: cf / nb, cf, heads: 1 }
+    }
+
+    #[test]
+    fn whitening_roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut br = VqBranch::init(4, 3, &mut rng);
+        br.mean = vec![1.0, -2.0, 0.5];
+        br.var = vec![4.0, 0.25, 1.0];
+        let mut raw = vec![0.0; 12];
+        br.raw_codewords_into(&mut raw);
+        for v in 0..4 {
+            for d in 0..3 {
+                let back = (raw[v * 3 + d] - br.mean[d]) / (br.var[d] + EPS).sqrt();
+                assert!((back - br.cww[v * 3 + d]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn ema_mass_interpolates() {
+        let mut rng = Rng::new(2);
+        let mut br = VqBranch::init(8, 4, &mut rng);
+        let total0: f32 = br.counts.iter().sum();
+        let b = 64;
+        let v: Vec<f32> = (0..b * 4).map(|_| rng.gauss_f32()).collect();
+        let assign = br.assign_host(&v);
+        br.update(&v, &assign, 0.9, 0.9);
+        let total1: f32 = br.counts.iter().sum();
+        let (lo, hi) = if total0 < b as f32 { (total0, b as f32) } else { (b as f32, total0) };
+        assert!(total1 >= lo - 1e-3 && total1 <= hi + 1e-3, "{total1}");
+        assert!(br.counts.iter().all(|&c| c >= 0.0));
+    }
+
+    #[test]
+    fn online_kmeans_recovers_centroids() {
+        let mut rng = Rng::new(3);
+        let centers = [[4.0f32, 4.0], [-4.0, 4.0], [4.0, -4.0], [-4.0, -4.0]];
+        let mut br = VqBranch::init(4, 2, &mut rng);
+        for (c, row) in centers.iter().enumerate() {
+            br.cww[c * 2] = row[0] * 0.1;
+            br.cww[c * 2 + 1] = row[1] * 0.1;
+        }
+        for _ in 0..300 {
+            let mut v = vec![0.0f32; 128 * 2];
+            for i in 0..128 {
+                let c = rng.below(4);
+                v[i * 2] = centers[c][0] + 0.3 * rng.gauss_f32();
+                v[i * 2 + 1] = centers[c][1] + 0.3 * rng.gauss_f32();
+            }
+            let a = br.assign_host(&v);
+            br.update(&v, &a, 0.95, 0.95);
+        }
+        let mut raw = vec![0.0f32; 8];
+        br.raw_codewords_into(&mut raw);
+        for c in centers {
+            let best = (0..4)
+                .map(|v| {
+                    let dx = raw[v * 2] - c[0];
+                    let dy = raw[v * 2 + 1] - c[1];
+                    (dx * dx + dy * dy).sqrt()
+                })
+                .fold(f32::INFINITY, f32::min);
+            assert!(best < 0.5, "center {c:?} best {best}");
+        }
+    }
+
+    #[test]
+    fn update_from_batch_writes_assignment_table() {
+        let p = plan(6, 4, 2);
+        let mut rng = Rng::new(4);
+        let mut lv = LayerVq::init(&p, 8, 50, &mut rng);
+        let batch = vec![3u32, 10, 49];
+        let xf = Tensor::from_f32(&[3, 6], (0..18).map(|x| x as f32 * 0.1).collect());
+        let gv = Tensor::from_f32(&[3, 4], (0..12).map(|x| x as f32 * 0.01).collect());
+        let asg = Tensor::from_i32(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        lv.update_from_batch(&batch, &xf, &gv, &asg, 0.9, 0.9);
+        assert_eq!(lv.assign_of(0, 3), 1);
+        assert_eq!(lv.assign_of(0, 10), 2);
+        assert_eq!(lv.assign_of(1, 49), 6);
+        // untouched nodes keep their assignment in [0, k)
+        assert!(lv.assign_of(0, 0) < 8);
+    }
+
+    #[test]
+    fn host_assign_matches_brute_force() {
+        let mut rng = Rng::new(5);
+        let br = VqBranch::init(16, 8, &mut rng);
+        let v: Vec<f32> = (0..32 * 8).map(|_| rng.gauss_f32()).collect();
+        let got = br.assign_host(&v);
+        for i in 0..32 {
+            let mut best = (f32::INFINITY, 0usize);
+            for c in 0..16 {
+                let mut d2 = 0.0;
+                for d in 0..8 {
+                    let w = (v[i * 8 + d] - br.mean[d]) / (br.var[d] + EPS).sqrt();
+                    let diff = w - br.cww[c * 8 + d];
+                    d2 += diff * diff;
+                }
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            assert_eq!(got[i] as usize, best.1);
+        }
+    }
+}
