@@ -15,7 +15,7 @@ use vq_gnn::sampler::NodeStrategy;
 use vq_gnn::util::bench::bench;
 
 fn main() {
-    let man = Manifest::load(&Manifest::default_dir()).expect("run make artifacts");
+    let man = Manifest::load_or_builtin(&Manifest::default_dir());
     let mut rt = Runtime::new().unwrap();
     let ds = Rc::new(Dataset::generate(&man.datasets["arxiv_sim"], 42));
 

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(20);
-    let man = Manifest::load(&Manifest::default_dir()).map_err(anyhow::Error::msg)?;
+    let man = Manifest::load_or_builtin(&Manifest::default_dir());
     let mut rt = Runtime::new()?;
     let ds = Rc::new(Dataset::generate(&man.datasets["arxiv_sim"], 42));
     println!(

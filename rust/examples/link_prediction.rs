@@ -13,7 +13,7 @@ use vq_gnn::runtime::Runtime;
 use vq_gnn::sampler::NodeStrategy;
 
 fn main() -> anyhow::Result<()> {
-    let man = Manifest::load(&Manifest::default_dir()).map_err(anyhow::Error::msg)?;
+    let man = Manifest::load_or_builtin(&Manifest::default_dir());
     let mut rt = Runtime::new()?;
     let ds = Rc::new(Dataset::generate(&man.datasets["collab_sim"], 42));
     println!(

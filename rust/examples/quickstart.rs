@@ -2,7 +2,7 @@
 //! and compare it against the full-graph oracle — the 60-second tour of the
 //! public API.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
 
 use std::rc::Rc;
 
@@ -14,8 +14,9 @@ use vq_gnn::runtime::Runtime;
 use vq_gnn::sampler::NodeStrategy;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the AOT manifest and spin up the PJRT CPU runtime.
-    let man = Manifest::load(&Manifest::default_dir()).map_err(anyhow::Error::msg)?;
+    // 1. Load the manifest (builtin registry when no AOT artifacts exist)
+    //    and spin up the runtime (native CPU backend by default).
+    let man = Manifest::load_or_builtin(&Manifest::default_dir());
     let mut rt = Runtime::new()?;
 
     // 2. Generate the tiny synthetic benchmark (deterministic).

@@ -272,36 +272,34 @@ impl VqTrainer {
     }
 
     /// Feature-only nearest-codeword assignment for `nodes` (gradient
-    /// columns masked out — unseen nodes have no gradient history).
+    /// columns masked out — unseen nodes have no gradient history).  Runs
+    /// on the same blocked kernel as the in-graph FINDNEAREST.
     fn assign_by_features(&mut self, l: usize, nodes: &[u32], rows: &[f32]) {
+        use crate::vq::kernels;
         let layer = &mut self.vq.layers[l];
         let (fl, fp) = (layer.plan.f_in, layer.plan.fp);
         let nb = layer.plan.n_br;
         debug_assert_eq!(rows.len(), nodes.len() * fl);
+        let n_nodes = nodes.len();
         for j in 0..nb {
             let lo = j * fp;
             if lo >= fl {
                 continue; // pure-gradient branch: keep previous assignment
             }
-            let width = (fp).min(fl - lo);
+            let width = fp.min(fl - lo);
             let br = &layer.branches[j];
-            for (i, &node) in nodes.iter().enumerate() {
-                let mut best = f32::INFINITY;
-                let mut arg = 0usize;
-                for cidx in 0..br.k {
-                    let mut d2 = 0.0f32;
-                    for d in 0..width {
-                        let w = (rows[i * fl + lo + d] - br.mean[d])
-                            / (br.var[d] + crate::vq::EPS).sqrt();
-                        let diff = w - br.cww[cidx * fp + d];
-                        d2 += diff * diff;
-                    }
-                    if d2 < best {
-                        best = d2;
-                        arg = cidx;
-                    }
+            // gather + whiten this branch's feature columns in one pass
+            let inv = kernels::inv_std(&br.var[..width]);
+            let mut vw = vec![0.0f32; n_nodes * width];
+            for i in 0..n_nodes {
+                for d in 0..width {
+                    vw[i * width + d] = (rows[i * fl + lo + d] - br.mean[d]) * inv[d];
                 }
-                layer.assign[j * layer.n + node as usize] = arg as u32;
+            }
+            let mut out = vec![0i32; n_nodes];
+            kernels::assign_blocked(&vw, width, width, &br.cww, br.k, fp, &mut out);
+            for (i, &node) in nodes.iter().enumerate() {
+                layer.assign[j * layer.n + node as usize] = out[i] as u32;
             }
         }
     }

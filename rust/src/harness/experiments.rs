@@ -26,7 +26,7 @@ pub struct Ctx {
 
 impl Ctx {
     pub fn new(epochs: usize, seeds: Vec<u64>) -> Result<Ctx> {
-        let man = Manifest::load(&Manifest::default_dir()).map_err(anyhow::Error::msg)?;
+        let man = Manifest::load_or_builtin(&Manifest::default_dir());
         let out_dir = std::path::PathBuf::from("results");
         std::fs::create_dir_all(&out_dir)?;
         Ok(Ctx {
@@ -114,6 +114,8 @@ pub fn table_perf(ctx: &mut Ctx, datasets: &[&str], file: &str) -> Result<()> {
             for model in models {
                 let cell = if method == "ns" && model == "gcn" {
                     "NA¹".to_string()
+                } else if !ctx.rt.supports_model(model) {
+                    "NA²".to_string()
                 } else {
                     let mut vals = Vec::new();
                     for (si, &seed) in ctx.seeds.clone().iter().enumerate() {
@@ -143,6 +145,7 @@ pub fn table_perf(ctx: &mut Ctx, datasets: &[&str], file: &str) -> Result<()> {
         }
     }
     md.push_str("\n¹ NS-SAGE sampling is not compatible with the GCN backbone (paper Table 4).\n");
+    md.push_str("² backbone unsupported on this backend (requires --features pjrt + artifacts).\n");
     println!("{md}");
     ctx.save(&format!("{file}.md"), &md)?;
     ctx.save(&format!("{file}.csv"), &csv)
@@ -303,6 +306,14 @@ pub fn complexity(ctx: &mut Ctx) -> Result<()> {
 
 /// Table 8: Graph-Transformer hybrid backbone on arxiv_sim.
 pub fn table8(ctx: &mut Ctx) -> Result<()> {
+    if !ctx.rt.supports_model("txf") {
+        eprintln!(
+            "table8 skipped: the {} backend does not support the txf backbone \
+             (build with --features pjrt + AOT artifacts)",
+            ctx.rt.backend_name()
+        );
+        return Ok(());
+    }
     let mut md = String::from(
         "### Table 8 — Global attention + GAT (arxiv_sim)\n\n| run | acc |\n|---|---|\n",
     );

@@ -37,6 +37,10 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (pos, flags) = parse_flags(&args);
+    // --backend native|pjrt (default native; see README "Backends")
+    if let Some(backend) = flags.get("backend") {
+        std::env::set_var("VQ_GNN_BACKEND", backend);
+    }
     let epochs: usize = flags.get("epochs").map(|s| s.parse()).transpose()?.unwrap_or(20);
     let seeds: Vec<u64> = flags
         .get("seeds")
@@ -109,10 +113,11 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage:\n  vq-gnn train --dataset D --model M --method \
-                 [vq|full|ns|cluster|saint] [--epochs N] [--seed S]\n  \
+                 [vq|full|ns|cluster|saint] [--epochs N] [--seed S] \
+                 [--backend native|pjrt]\n  \
                  vq-gnn exp [table3|table4|table7|table8|fig4|inference|\
                  complexity|ablation-*|all] [--epochs N] [--seeds 1,2,3] \
-                 [--datasets a,b]"
+                 [--datasets a,b] [--backend native|pjrt]"
             );
         }
     }

@@ -1,0 +1,531 @@
+//! Built-in manifest: a pure-Rust mirror of `python/compile/config.py` +
+//! `python/compile/aot.py`'s artifact registry.
+//!
+//! The PJRT path consumes `artifacts/manifest.json` emitted by the AOT
+//! pipeline; the native backend needs the same shape contract but no
+//! Python, so this module reconstructs the registry deterministically.  Any
+//! drift between the two is caught by `tests/` (the builtin manifest is
+//! validated against a checked-in manifest.json whenever one exists).
+
+use std::path::Path;
+
+use crate::runtime::manifest::{
+    ArtifactSpec, DatasetCfg, LayerPlan, Manifest, ModelCfg, TensorSpec, TrainCfg,
+};
+use crate::util::tensor::DType;
+
+fn ceil8(x: usize) -> usize {
+    (x + 7) / 8 * 8
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dataset(
+    name: &str,
+    n: usize,
+    m_max: usize,
+    f_in: usize,
+    n_classes: usize,
+    task: &str,
+    multilabel: bool,
+    inductive: bool,
+    n_graphs: usize,
+    avg_degree: f64,
+    communities: usize,
+) -> DatasetCfg {
+    DatasetCfg {
+        name: name.to_string(),
+        n,
+        m_max,
+        f_in,
+        f_in_pad: ceil8(f_in),
+        n_classes,
+        task: task.to_string(),
+        multilabel,
+        inductive,
+        n_graphs,
+        avg_degree,
+        communities,
+        feature_noise: 1.0,
+        intra_p_scale: 12.0,
+    }
+}
+
+fn model(name: &str, fp: usize) -> ModelCfg {
+    ModelCfg { name: name.to_string(), hidden: 64, layers: 3, heads: 2, fp }
+}
+
+fn learnable(model_name: &str) -> bool {
+    matches!(model_name, "gat" | "txf")
+}
+
+fn out_dim(ds: &DatasetCfg, mo: &ModelCfg) -> usize {
+    if ds.task == "link" {
+        mo.hidden
+    } else {
+        ds.n_classes
+    }
+}
+
+/// `(num_branches, padded_concat_dim)`; `fp == 0` ⇒ one full-width branch.
+fn branch_layout(f_l: usize, g_l: usize, fp: usize) -> (usize, usize) {
+    let concat = f_l + g_l;
+    if fp == 0 {
+        (1, concat)
+    } else {
+        let n_br = (concat + fp - 1) / fp;
+        (n_br, n_br * fp)
+    }
+}
+
+/// Mirror of `compile.model.make_plan`.
+pub fn make_plan(ds: &DatasetCfg, mo: &ModelCfg) -> Vec<LayerPlan> {
+    let mut plans = Vec::with_capacity(mo.layers);
+    let mut f = ds.f_in_pad;
+    for l in 0..mo.layers {
+        let last = l == mo.layers - 1;
+        let h = if last { out_dim(ds, mo) } else { mo.hidden };
+        let heads = if last || !learnable(&mo.name) { 1 } else { mo.heads };
+        let g_dim = if mo.name == "txf" { 2 * h } else { h };
+        let (n_br, cf) = branch_layout(f, g_dim, mo.fp);
+        plans.push(LayerPlan { f_in: f, h_out: h, g_dim, n_br, fp: cf / n_br, cf, heads });
+        f = h;
+    }
+    plans
+}
+
+/// Ordered `(name, shape)` parameter list (`compile.model.param_specs`);
+/// names are WITHOUT the `param.` prefix.
+fn param_specs(mo: &ModelCfg, plans: &[LayerPlan]) -> Vec<(String, Vec<usize>)> {
+    let mut specs = Vec::new();
+    for (l, p) in plans.iter().enumerate() {
+        let pre = format!("l{l}.");
+        match mo.name.as_str() {
+            "gcn" => {
+                specs.push((format!("{pre}w"), vec![p.f_in, p.h_out]));
+                specs.push((format!("{pre}bias"), vec![p.h_out]));
+            }
+            "sage" => {
+                specs.push((format!("{pre}w_self"), vec![p.f_in, p.h_out]));
+                specs.push((format!("{pre}w_nbr"), vec![p.f_in, p.h_out]));
+                specs.push((format!("{pre}bias"), vec![p.h_out]));
+            }
+            "gat" => {
+                let hh = p.h_out / p.heads;
+                specs.push((format!("{pre}w"), vec![p.heads, p.f_in, hh]));
+                specs.push((format!("{pre}a_src"), vec![p.heads, hh]));
+                specs.push((format!("{pre}a_dst"), vec![p.heads, hh]));
+                specs.push((format!("{pre}bias"), vec![p.h_out]));
+            }
+            "txf" => {
+                let hh = p.h_out / p.heads;
+                let dk = 32;
+                specs.push((format!("{pre}w"), vec![p.heads, p.f_in, hh]));
+                specs.push((format!("{pre}a_src"), vec![p.heads, hh]));
+                specs.push((format!("{pre}a_dst"), vec![p.heads, hh]));
+                specs.push((format!("{pre}bias"), vec![p.h_out]));
+                specs.push((format!("{pre}wq"), vec![p.f_in, dk]));
+                specs.push((format!("{pre}wk"), vec![p.f_in, dk]));
+                specs.push((format!("{pre}wv"), vec![p.f_in, p.h_out]));
+                specs.push((format!("{pre}w_lin"), vec![p.f_in, p.h_out]));
+            }
+            other => panic!("unknown model {other}"),
+        }
+    }
+    specs
+}
+
+fn f32_spec(name: String, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec { name, shape, dtype: DType::F32 }
+}
+
+fn i32_spec(name: String, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec { name, shape, dtype: DType::I32 }
+}
+
+/// Per-layer VQ context inputs (`compile.model.ctx_specs`).
+fn ctx_specs(mo: &ModelCfg, plans: &[LayerPlan], b: usize, k: usize, train: bool) -> Vec<TensorSpec> {
+    let mut specs = Vec::new();
+    for (l, p) in plans.iter().enumerate() {
+        let pre = format!("l{l}.");
+        if learnable(&mo.name) {
+            specs.push(f32_spec(format!("{pre}mask_in"), vec![b, b]));
+            specs.push(f32_spec(format!("{pre}m_out"), vec![b, k]));
+            specs.push(f32_spec(format!("{pre}m_out_t"), vec![b, k]));
+            if mo.name == "txf" {
+                specs.push(f32_spec(format!("{pre}cnt_out"), vec![k]));
+            }
+        } else {
+            specs.push(f32_spec(format!("{pre}c_in"), vec![b, b]));
+            specs.push(f32_spec(format!("{pre}c_out"), vec![p.n_br, b, k]));
+            specs.push(f32_spec(format!("{pre}ct_out"), vec![p.n_br, b, k]));
+        }
+        specs.push(f32_spec(format!("{pre}cw"), vec![p.n_br, k, p.fp]));
+        if train {
+            specs.push(f32_spec(format!("{pre}mean"), vec![p.n_br, p.fp]));
+            specs.push(f32_spec(format!("{pre}var"), vec![p.n_br, p.fp]));
+            specs.push(f32_spec(format!("{pre}cww"), vec![p.n_br, k, p.fp]));
+        }
+    }
+    specs
+}
+
+fn task_specs(ds: &DatasetCfg, tc: &TrainCfg, rows: usize, c: usize) -> Vec<TensorSpec> {
+    if ds.task == "link" {
+        vec![
+            i32_spec("psrc".into(), vec![tc.p_pairs]),
+            i32_spec("pdst".into(), vec![tc.p_pairs]),
+            f32_spec("py".into(), vec![tc.p_pairs]),
+            f32_spec("pw".into(), vec![tc.p_pairs]),
+        ]
+    } else if ds.multilabel {
+        vec![f32_spec("y".into(), vec![rows, c]), f32_spec("wloss".into(), vec![rows])]
+    } else {
+        vec![i32_spec("y".into(), vec![rows]), f32_spec("wloss".into(), vec![rows])]
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn vq_spec(
+    train: bool,
+    ds: &DatasetCfg,
+    mo: &ModelCfg,
+    tc: &TrainCfg,
+    b: usize,
+    k: usize,
+    suffix: &str,
+    layers_override: usize,
+) -> ArtifactSpec {
+    let plans = make_plan(ds, mo);
+    let pspecs = param_specs(mo, &plans);
+    let c = out_dim(ds, mo);
+    let kind = if train { "vq_train" } else { "vq_infer" };
+    let name = format!("{kind}_{}_{}{suffix}", ds.name, mo.name);
+
+    let mut inputs = vec![f32_spec("xb".into(), vec![b, ds.f_in_pad])];
+    if train {
+        inputs.extend(task_specs(ds, tc, b, c));
+    }
+    inputs.extend(ctx_specs(mo, &plans, b, k, train));
+    inputs.extend(pspecs.iter().map(|(n, s)| f32_spec(format!("param.{n}"), s.clone())));
+
+    let mut outputs = Vec::new();
+    if train {
+        outputs.push(f32_spec("loss".into(), vec![]));
+    }
+    outputs.push(f32_spec("logits".into(), vec![b, c]));
+    if train {
+        for (l, p) in plans.iter().enumerate() {
+            outputs.push(f32_spec(format!("l{l}.xfeat"), vec![b, p.f_in]));
+            outputs.push(f32_spec(format!("l{l}.gvec"), vec![b, p.g_dim]));
+            outputs.push(i32_spec(format!("l{l}.assign"), vec![p.n_br, b]));
+        }
+        outputs.extend(pspecs.iter().map(|(n, s)| f32_spec(format!("grad.{n}"), s.clone())));
+    } else {
+        for (l, p) in plans.iter().enumerate() {
+            outputs.push(f32_spec(format!("l{l}.xfeat"), vec![b, p.f_in]));
+        }
+    }
+
+    ArtifactSpec {
+        file: format!("{name}.hlo.txt"),
+        name,
+        kind: kind.to_string(),
+        dataset: ds.name.clone(),
+        model: mo.name.clone(),
+        b,
+        k,
+        nn: 0,
+        ne: 0,
+        layers_override,
+        inputs,
+        outputs,
+        plan: plans,
+    }
+}
+
+fn edge_spec(
+    train: bool,
+    ds: &DatasetCfg,
+    mo: &ModelCfg,
+    tc: &TrainCfg,
+    nn: usize,
+    ne: usize,
+    suffix: &str,
+) -> ArtifactSpec {
+    let plans = make_plan(ds, mo);
+    let pspecs = param_specs(mo, &plans);
+    let c = out_dim(ds, mo);
+    let kind = if train { "edge_train" } else { "edge_infer" };
+    let name = format!("{kind}_{}_{}{suffix}", ds.name, mo.name);
+
+    let mut inputs = vec![
+        f32_spec("x".into(), vec![nn, ds.f_in_pad]),
+        i32_spec("esrc".into(), vec![ne]),
+        i32_spec("edst".into(), vec![ne]),
+        f32_spec("ecoef".into(), vec![ne]),
+    ];
+    if train {
+        inputs.extend(task_specs(ds, tc, nn, c));
+    }
+    inputs.extend(pspecs.iter().map(|(n, s)| f32_spec(format!("param.{n}"), s.clone())));
+
+    let mut outputs = Vec::new();
+    if train {
+        outputs.push(f32_spec("loss".into(), vec![]));
+    }
+    outputs.push(f32_spec("logits".into(), vec![nn, c]));
+    if train {
+        outputs.extend(pspecs.iter().map(|(n, s)| f32_spec(format!("grad.{n}"), s.clone())));
+    }
+
+    ArtifactSpec {
+        file: format!("{name}.hlo.txt"),
+        name,
+        kind: kind.to_string(),
+        dataset: ds.name.clone(),
+        model: mo.name.clone(),
+        b: 0,
+        k: 0,
+        nn,
+        ne,
+        layers_override: 0,
+        inputs,
+        outputs,
+        plan: vec![],
+    }
+}
+
+/// Padded edge capacity for subgraph artifacts (`aot._sub_edges`).
+fn sub_edges(ds: &DatasetCfg, nodes: usize) -> usize {
+    let want = (nodes as f64 * (ds.avg_degree + 2.0) * 1.6) as usize;
+    let bits = usize::BITS - want.saturating_sub(1).leading_zeros();
+    let cap = 1usize << bits.max(10);
+    cap.min(ds.m_max)
+}
+
+fn vq_assign_spec(ds: &DatasetCfg, gcn: &ModelCfg, b: usize, k: usize) -> ArtifactSpec {
+    let p0 = &make_plan(ds, gcn)[0];
+    let name = format!("vq_assign_{}", ds.name);
+    ArtifactSpec {
+        file: format!("{name}.hlo.txt"),
+        name,
+        kind: "vq_assign".to_string(),
+        dataset: ds.name.clone(),
+        model: "gcn".to_string(),
+        b,
+        k,
+        nn: 0,
+        ne: 0,
+        layers_override: 0,
+        inputs: vec![
+            f32_spec("z".into(), vec![p0.n_br, b, p0.fp]),
+            f32_spec("cww".into(), vec![p0.n_br, k, p0.fp]),
+            f32_spec("mask".into(), vec![p0.n_br, p0.fp]),
+        ],
+        outputs: vec![i32_spec("assign".into(), vec![p0.n_br, b])],
+        plan: vec![],
+    }
+}
+
+/// Reconstruct the full manifest (datasets, models, train config and every
+/// registry artifact) without touching the filesystem.
+pub fn manifest(dir: &Path) -> Manifest {
+    let tc = TrainCfg {
+        b: 512,
+        k: 128,
+        lr: 3e-3,
+        rms_alpha: 0.99,
+        gamma: 0.99,
+        beta: 0.99,
+        p_pairs: 1024,
+        weight_clip: 4.0,
+    };
+
+    let ds_list = vec![
+        dataset("tiny_sim", 256, 4096, 16, 4, "node", false, false, 1, 6.0, 4),
+        dataset("arxiv_sim", 8192, 163840, 64, 16, "node", false, false, 1, 7.0, 16),
+        dataset("reddit_sim", 4096, 262144, 128, 16, "node", false, false, 1, 50.0, 16),
+        dataset("ppi_sim", 4608, 131072, 56, 16, "node", true, true, 12, 14.0, 16),
+        dataset("collab_sim", 8192, 163840, 64, 0, "link", false, false, 1, 8.0, 32),
+        dataset("flickr_sim", 4096, 98304, 104, 7, "node", false, false, 1, 10.0, 7),
+    ];
+    let mo_list = vec![model("gcn", 16), model("sage", 16), model("gat", 0), model("txf", 0)];
+
+    let mut datasets = std::collections::BTreeMap::new();
+    for d in &ds_list {
+        datasets.insert(d.name.clone(), d.clone());
+    }
+    let mut models = std::collections::BTreeMap::new();
+    for m in &mo_list {
+        models.insert(m.name.clone(), m.clone());
+    }
+
+    let mut artifacts = std::collections::BTreeMap::new();
+    let mut add = |spec: ArtifactSpec| {
+        artifacts.insert(spec.name.clone(), spec);
+    };
+
+    for ds in &ds_list {
+        let tiny = ds.name == "tiny_sim";
+        let b = if tiny { 64 } else { tc.b };
+        let k = if tiny { 16 } else { tc.k };
+        let mut model_names = vec!["gcn", "sage", "gat"];
+        if ds.name == "arxiv_sim" {
+            model_names.push("txf");
+        }
+        for mn in model_names {
+            let mo = &models[mn];
+            add(vq_spec(true, ds, mo, &tc, b, k, "", 0));
+            add(vq_spec(false, ds, mo, &tc, b, k, "", 0));
+            if mn == "txf" {
+                continue; // global attention has no edge-list form
+            }
+            add(edge_spec(true, ds, mo, &tc, ds.n, ds.m_max, "_full"));
+            add(edge_spec(false, ds, mo, &tc, ds.n, ds.m_max, "_full"));
+            if !tiny {
+                add(edge_spec(true, ds, mo, &tc, 1024, sub_edges(ds, 1024), "_sub"));
+            }
+        }
+        if !tiny {
+            for mn in ["sage", "gat"] {
+                let mo = &models[mn];
+                add(edge_spec(true, ds, mo, &tc, ds.n.min(4096), ds.m_max.min(131072), "_ns"));
+            }
+        }
+    }
+
+    // App. G ablations on arxiv_sim + GCN (layers / codebook / batch), plus
+    // the perf-pass fp variants — all mirror aot.py's suffix scheme.
+    let arxiv = datasets["arxiv_sim"].clone();
+    let gcn = models["gcn"].clone();
+    for nl in [1usize, 2, 4, 5] {
+        let mo = ModelCfg { layers: nl, ..gcn.clone() };
+        add(vq_spec(true, &arxiv, &mo, &tc, tc.b, tc.k, &format!("_l{nl}"), nl));
+        add(vq_spec(false, &arxiv, &mo, &tc, tc.b, tc.k, &format!("_l{nl}"), nl));
+    }
+    for kk in [32usize, 64, 256] {
+        add(vq_spec(true, &arxiv, &gcn, &tc, tc.b, kk, &format!("_k{kk}"), 0));
+        add(vq_spec(false, &arxiv, &gcn, &tc, tc.b, kk, &format!("_k{kk}"), 0));
+    }
+    for bb in [128usize, 256, 1024] {
+        add(vq_spec(true, &arxiv, &gcn, &tc, bb, tc.k, &format!("_b{bb}"), 0));
+        add(vq_spec(false, &arxiv, &gcn, &tc, bb, tc.k, &format!("_b{bb}"), 0));
+    }
+    let gcn_fp32 = ModelCfg { fp: 32, ..gcn.clone() };
+    add(vq_spec(true, &arxiv, &gcn_fp32, &tc, tc.b, tc.k, "_fp32", 0));
+    add(vq_spec(false, &arxiv, &gcn_fp32, &tc, tc.b, tc.k, "_fp32", 0));
+    add(vq_spec(true, &arxiv, &gcn_fp32, &tc, tc.b, 64, "_fp32k64", 0));
+    add(vq_spec(false, &arxiv, &gcn_fp32, &tc, tc.b, 64, "_fp32k64", 0));
+
+    // Standalone assignment kernel artifacts (inductive inference).
+    add(vq_assign_spec(&datasets["ppi_sim"], &gcn, tc.b, tc.k));
+    add(vq_assign_spec(&datasets["tiny_sim"], &gcn, 64, 16));
+
+    Manifest { dir: dir.to_path_buf(), train: tc, datasets, models, artifacts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_the_trainer_name_scheme() {
+        let m = manifest(Path::new("artifacts"));
+        for name in [
+            "vq_train_tiny_sim_gcn",
+            "vq_infer_tiny_sim_gcn",
+            "vq_train_tiny_sim_sage",
+            "vq_train_tiny_sim_gat",
+            "vq_train_arxiv_sim_txf",
+            "edge_train_tiny_sim_gcn_full",
+            "edge_infer_tiny_sim_gcn_full",
+            "edge_train_arxiv_sim_gcn_sub",
+            "edge_train_arxiv_sim_sage_ns",
+            "vq_train_arxiv_sim_gcn_l5",
+            "vq_train_arxiv_sim_gcn_k64",
+            "vq_train_arxiv_sim_gcn_b256",
+            "vq_train_arxiv_sim_gcn_fp32",
+            "vq_train_arxiv_sim_gcn_fp32k64",
+            "vq_assign_tiny_sim",
+        ] {
+            assert!(m.artifacts.contains_key(name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn tiny_gcn_train_spec_shapes() {
+        let m = manifest(Path::new("artifacts"));
+        let a = m.artifact("vq_train_tiny_sim_gcn").unwrap();
+        assert_eq!((a.b, a.k), (64, 16));
+        assert_eq!(a.inputs[0].name, "xb");
+        assert_eq!(a.inputs[0].shape, vec![64, 16]);
+        assert_eq!(a.plan.len(), 3);
+        // layer 0: f=16, h=64 ⇒ concat 80 ⇒ 5 branches of fp=16
+        let p0 = &a.plan[0];
+        assert_eq!((p0.f_in, p0.h_out, p0.n_br, p0.fp, p0.cf), (16, 64, 5, 16, 80));
+        // last layer: h = n_classes = 4
+        assert_eq!(a.plan[2].h_out, 4);
+        // params and grads pair up in order
+        let params: Vec<&TensorSpec> =
+            a.inputs.iter().filter(|t| t.name.starts_with("param.")).collect();
+        let grads: Vec<&TensorSpec> =
+            a.outputs.iter().filter(|t| t.name.starts_with("grad.")).collect();
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), 6); // 3 layers × (w, bias)
+        for (p, g) in params.iter().zip(&grads) {
+            assert_eq!(p.shape, g.shape);
+            assert_eq!(g.name, format!("grad.{}", &p.name["param.".len()..]));
+        }
+        // outputs start with loss, logits, then per-layer triples
+        assert_eq!(a.outputs[0].name, "loss");
+        assert_eq!(a.outputs[1].name, "logits");
+        assert_eq!(a.outputs[1].shape, vec![64, 4]);
+        assert_eq!(a.outputs[2].name, "l0.xfeat");
+        assert_eq!(a.outputs[4].name, "l0.assign");
+        assert_eq!(a.outputs[4].dtype, DType::I32);
+    }
+
+    #[test]
+    fn edge_full_spec_matches_dataset_capacity() {
+        let m = manifest(Path::new("artifacts"));
+        let a = m.artifact("edge_train_tiny_sim_sage_full").unwrap();
+        assert_eq!((a.nn, a.ne), (256, 4096));
+        assert_eq!(a.inputs[0].shape, vec![256, 16]);
+        assert_eq!(a.inputs[1].name, "esrc");
+        // sage: 3 layers × (w_self, w_nbr, bias)
+        let n_params = a.inputs.iter().filter(|t| t.name.starts_with("param.")).count();
+        assert_eq!(n_params, 9);
+    }
+
+    #[test]
+    fn link_dataset_uses_pair_inputs_and_embedding_logits() {
+        let m = manifest(Path::new("artifacts"));
+        let a = m.artifact("vq_train_collab_sim_sage").unwrap();
+        assert!(a.inputs.iter().any(|t| t.name == "psrc"));
+        assert!(!a.inputs.iter().any(|t| t.name == "y"));
+        let lo = a.outputs.iter().find(|t| t.name == "logits").unwrap();
+        assert_eq!(lo.shape, vec![512, 64]); // embeddings, not classes
+    }
+
+    #[test]
+    fn matches_checked_in_manifest_when_present() {
+        // Drift guard: if an AOT manifest.json exists in the tree, the
+        // builtin registry must agree on shapes for every shared artifact.
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let real = Manifest::load(dir).unwrap();
+        let ours = manifest(dir);
+        for (name, a) in &real.artifacts {
+            let b = ours.artifact(name).unwrap_or_else(|_| panic!("builtin missing {name}"));
+            assert_eq!(a.inputs.len(), b.inputs.len(), "{name}: input count");
+            for (x, y) in a.inputs.iter().zip(&b.inputs) {
+                assert_eq!((&x.name, &x.shape), (&y.name, &y.shape), "{name}");
+            }
+            for (x, y) in a.outputs.iter().zip(&b.outputs) {
+                assert_eq!((&x.name, &x.shape), (&y.name, &y.shape), "{name}");
+            }
+        }
+    }
+}

@@ -246,6 +246,21 @@ impl Manifest {
             .map(PathBuf::from)
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
+
+    /// Load `manifest.json` when present (AOT/PJRT checkouts); otherwise
+    /// fall back to the built-in registry (`runtime::builtin`) — the native
+    /// backend needs no files at all.  A manifest that exists but fails to
+    /// parse is a hard error: silently substituting builtin shapes for a
+    /// user's artifacts would misconfigure every downstream run.
+    pub fn load_or_builtin(dir: &Path) -> Manifest {
+        if !dir.join("manifest.json").exists() {
+            return crate::runtime::builtin::manifest(dir);
+        }
+        match Manifest::load(dir) {
+            Ok(m) => m,
+            Err(e) => panic!("{}/manifest.json is present but unusable: {e}", dir.display()),
+        }
+    }
 }
 
 #[cfg(test)]

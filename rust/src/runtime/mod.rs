@@ -1,59 +1,111 @@
-//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them from
-//! the rust hot path (the only place python output is consumed).
+//! Execution runtime behind a [`Backend`] trait with two implementations:
 //!
-//! Pattern follows /opt/xla-example/load_hlo: HLO text →
-//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile` →
-//! `execute`, with outputs arriving as a single tuple literal
-//! (`return_tuple=True` at lowering time).
+//! - **native** (default): pure-Rust CPU interpreter of the manifest's
+//!   artifact contract — zero Python/JAX dependency, runs anywhere
+//!   (`runtime::native`, specs reconstructed by `runtime::builtin`);
+//! - **pjrt** (`--features pjrt`): the original PJRT executor for
+//!   AOT-compiled HLO text artifacts (`runtime::pjrt`).
+//!
+//! Backend selection: `Runtime::new()` honors `VQ_GNN_BACKEND=native|pjrt`
+//! (the CLI's `--backend` flag sets it), defaulting to native.  The
+//! `Runtime` owns the artifact cache and the bytes/executions accounting
+//! (the memory-meter input for Table 3), so trainers are backend-agnostic.
 
+pub mod builtin;
 pub mod manifest;
+pub mod native;
+pub mod ops;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::util::tensor::{DType, Tensor};
 use manifest::{ArtifactSpec, Manifest};
 
-/// Process-wide PJRT CPU client + executable cache.
+/// A compiled artifact, ready to execute.
+pub trait Executable {
+    fn run(&self, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution engine that can compile manifest artifacts.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Whether artifacts of this model family can execute on this backend.
+    fn supports_model(&self, _model: &str) -> bool {
+        true
+    }
+
+    fn compile(&mut self, man: &Manifest, spec: &ArtifactSpec) -> Result<Box<dyn Executable>>;
+}
+
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: Box<dyn Executable>,
+}
+
+/// Backend + executable cache + transfer accounting.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: HashMap<String, std::rc::Rc<Artifact>>,
-    /// Cumulative bytes shipped to/from the device (memory-meter input).
+    backend: Box<dyn Backend>,
+    cache: HashMap<String, Rc<Artifact>>,
+    /// Cumulative bytes shipped to/from the backend (memory-meter input).
     pub bytes_in: u64,
     pub bytes_out: u64,
     pub executions: u64,
 }
 
-pub struct Artifact {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
 impl Runtime {
+    /// Backend chosen by `VQ_GNN_BACKEND` (default: native).
     pub fn new() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime { client, cache: HashMap::new(), bytes_in: 0, bytes_out: 0, executions: 0 })
+        match std::env::var("VQ_GNN_BACKEND").as_deref() {
+            Err(_) | Ok("") | Ok("native") => Ok(Runtime::native()),
+            Ok("pjrt") => Runtime::pjrt(),
+            Ok(other) => bail!("unknown VQ_GNN_BACKEND '{other}' (native|pjrt)"),
+        }
+    }
+
+    pub fn native() -> Runtime {
+        Runtime::with_backend(Box::new(native::NativeBackend))
+    }
+
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt() -> Result<Runtime> {
+        Ok(Runtime::with_backend(Box::new(pjrt::PjrtBackend::new()?)))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn pjrt() -> Result<Runtime> {
+        bail!("this build has no PJRT support — rebuild with `--features pjrt`")
+    }
+
+    pub fn with_backend(backend: Box<dyn Backend>) -> Runtime {
+        Runtime { backend, cache: HashMap::new(), bytes_in: 0, bytes_out: 0, executions: 0 }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn supports_model(&self, model: &str) -> bool {
+        self.backend.supports_model(model)
     }
 
     /// Load + compile an artifact (cached per name).
-    pub fn load(&mut self, man: &Manifest, name: &str) -> Result<std::rc::Rc<Artifact>> {
+    pub fn load(&mut self, man: &Manifest, name: &str) -> Result<Rc<Artifact>> {
         if let Some(a) = self.cache.get(name) {
             return Ok(a.clone());
         }
         let spec = man.artifact(name).map_err(anyhow::Error::msg)?.clone();
-        let path = man.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", spec.name))?;
-        let a = std::rc::Rc::new(Artifact { spec, exe });
+            .backend
+            .compile(man, &spec)
+            .with_context(|| format!("compile {} on {} backend", spec.name, self.backend.name()))?;
+        let a = Rc::new(Artifact { spec, exe });
         self.cache.insert(name.to_string(), a.clone());
         Ok(a)
     }
@@ -69,43 +121,34 @@ impl Runtime {
                 spec.inputs.len()
             );
         }
-        let mut lits = Vec::with_capacity(inputs.len());
         for (t, s) in inputs.iter().zip(&spec.inputs) {
             if t.shape != s.shape || t.dtype != s.dtype {
                 bail!(
                     "{}: input '{}' shape/dtype mismatch: got {:?}/{:?}, want {:?}/{:?}",
-                    spec.name, s.name, t.shape, t.dtype, s.shape, s.dtype
+                    spec.name,
+                    s.name,
+                    t.shape,
+                    t.dtype,
+                    s.shape,
+                    s.dtype
                 );
             }
-            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-            let lit = match t.dtype {
-                DType::F32 => xla::Literal::vec1(&t.f).reshape(&dims)?,
-                DType::I32 => xla::Literal::vec1(&t.i).reshape(&dims)?,
-            };
             self.bytes_in += t.bytes() as u64;
-            lits.push(lit);
         }
-        let result = art.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        if outs.len() != spec.outputs.len() {
+        let outputs = art.exe.run(spec, inputs)?;
+        if outputs.len() != spec.outputs.len() {
             bail!(
                 "{}: got {} outputs, manifest declares {}",
                 spec.name,
-                outs.len(),
+                outputs.len(),
                 spec.outputs.len()
             );
         }
-        let mut tensors = Vec::with_capacity(outs.len());
-        for (lit, s) in outs.iter().zip(&spec.outputs) {
-            let t = match s.dtype {
-                DType::F32 => Tensor::from_f32(&s.shape, lit.to_vec::<f32>()?),
-                DType::I32 => Tensor::from_i32(&s.shape, lit.to_vec::<i32>()?),
-            };
+        for t in &outputs {
             self.bytes_out += t.bytes() as u64;
-            tensors.push(t);
         }
         self.executions += 1;
-        Ok(tensors)
+        Ok(outputs)
     }
 }
 

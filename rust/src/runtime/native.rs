@@ -1,0 +1,545 @@
+//! Native CPU backend: executes the manifest's artifacts as pure-Rust
+//! computations — no Python, no JAX, no HLO artifacts, no PJRT.
+//!
+//! It interprets the same positional input/output contract the AOT
+//! artifacts expose (`runtime::builtin` reconstructs the specs), so the
+//! trainers cannot tell the backends apart.  Supported today:
+//!
+//! - `vq_train` / `vq_infer` for the fixed-convolution backbones (GCN,
+//!   SAGE-mean): Eq. 6 forward, loss head (CE / multilabel BCE / link BCE),
+//!   Eq. 7 custom-VJP backward (the out-of-batch gradient messages ride the
+//!   gradient half of the codewords via the transposed sketches), per-layer
+//!   probe gradients, whitened FINDNEAREST via the blocked VQ kernels, and
+//!   exact parameter gradients;
+//! - `edge_train` / `edge_infer`: exact edge-list message passing with full
+//!   autodiff (the four sampling baselines);
+//! - `vq_assign`: the standalone masked assignment kernel.
+//!
+//! Learnable convolutions (GAT / Graph Transformer) still require the PJRT
+//! backend — `compile` rejects them with a clear error.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, DatasetCfg, LayerPlan, Manifest, ModelCfg};
+use crate::runtime::ops;
+use crate::runtime::{Backend, Executable};
+use crate::util::tensor::Tensor;
+use crate::vq::kernels;
+
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports_model(&self, model: &str) -> bool {
+        matches!(model, "gcn" | "sage")
+    }
+
+    fn compile(&mut self, man: &Manifest, spec: &ArtifactSpec) -> Result<Box<dyn Executable>> {
+        let ds = man
+            .datasets
+            .get(&spec.dataset)
+            .with_context(|| format!("native: unknown dataset '{}'", spec.dataset))?
+            .clone();
+        let model = man
+            .models
+            .get(&spec.model)
+            .with_context(|| format!("native: unknown model '{}'", spec.model))?
+            .clone();
+        match spec.kind.as_str() {
+            "vq_train" | "vq_infer" | "edge_train" | "edge_infer" => {
+                if !self.supports_model(&spec.model) {
+                    bail!(
+                        "native backend does not implement the learnable convolution \
+                         '{}' (artifact {}); build with --features pjrt and AOT \
+                         artifacts to run it",
+                        spec.model,
+                        spec.name
+                    );
+                }
+            }
+            "vq_assign" => {}
+            other => bail!("native: unknown artifact kind '{other}' ({})", spec.name),
+        }
+        Ok(Box::new(NativeExec { ds, model }))
+    }
+}
+
+pub struct NativeExec {
+    ds: DatasetCfg,
+    model: ModelCfg,
+}
+
+impl Executable for NativeExec {
+    fn run(&self, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match spec.kind.as_str() {
+            "vq_train" => self.run_vq(spec, inputs, true),
+            "vq_infer" => self.run_vq(spec, inputs, false),
+            "edge_train" => self.run_edge(spec, inputs, true),
+            "edge_infer" => self.run_edge(spec, inputs, false),
+            "vq_assign" => self.run_vq_assign(spec, inputs),
+            other => bail!("native: unknown artifact kind '{other}'"),
+        }
+    }
+}
+
+fn tin<'a>(spec: &ArtifactSpec, inputs: &'a [Tensor], name: &str) -> Result<&'a Tensor> {
+    let i = spec
+        .input_index(name)
+        .with_context(|| format!("native {}: missing input '{name}'", spec.name))?;
+    Ok(&inputs[i])
+}
+
+fn fin<'a>(spec: &ArtifactSpec, inputs: &'a [Tensor], name: &str) -> Result<&'a [f32]> {
+    Ok(&tin(spec, inputs, name)?.f)
+}
+
+fn iin<'a>(spec: &ArtifactSpec, inputs: &'a [Tensor], name: &str) -> Result<&'a [i32]> {
+    Ok(&tin(spec, inputs, name)?.i)
+}
+
+/// Emit the computed tensors in the spec's declared output order.  Shapes
+/// are enforced unconditionally: trainers index these buffers flat by the
+/// declared spec shape, so any interpreter/spec drift must fail loudly
+/// (the PJRT path got the same guarantee by reconstructing tensors from
+/// the spec).
+fn emit(spec: &ArtifactSpec, mut out: HashMap<String, Tensor>) -> Result<Vec<Tensor>> {
+    let mut tensors = Vec::with_capacity(spec.outputs.len());
+    for ts in &spec.outputs {
+        let t = out
+            .remove(&ts.name)
+            .with_context(|| format!("native {}: output '{}' not computed", spec.name, ts.name))?;
+        if t.shape != ts.shape {
+            bail!(
+                "native {}: output '{}' computed as {:?}, spec declares {:?}",
+                spec.name,
+                ts.name,
+                t.shape,
+                ts.shape
+            );
+        }
+        tensors.push(t);
+    }
+    Ok(tensors)
+}
+
+/// Loss head shared by both train paths.  Returns `(loss, dloss/dlogits)`;
+/// for the link task `logits` are node embeddings and the gradient is the
+/// pair-loss cotangent scattered back onto them.
+fn loss_head(
+    ds: &DatasetCfg,
+    spec: &ArtifactSpec,
+    inputs: &[Tensor],
+    logits: &[f32],
+    rows: usize,
+    c: usize,
+) -> Result<(f32, Vec<f32>)> {
+    let mut dlogits = vec![0.0f32; rows * c];
+    if ds.task == "link" {
+        let psrc = iin(spec, inputs, "psrc")?;
+        let pdst = iin(spec, inputs, "pdst")?;
+        let py = fin(spec, inputs, "py")?;
+        let pw = fin(spec, inputs, "pw")?;
+        let wsum: f32 = pw.iter().sum::<f32>().max(1.0);
+        let mut loss = 0.0f64;
+        for e in 0..psrc.len() {
+            let (u, v) = (psrc[e] as usize, pdst[e] as usize);
+            let eu = &logits[u * c..(u + 1) * c];
+            let ev = &logits[v * c..(v + 1) * c];
+            let mut z = 0.0f32;
+            for d in 0..c {
+                z += eu[d] * ev[d];
+            }
+            loss += (pw[e] * ops::bce_with_logits(z, py[e])) as f64;
+            let dz = pw[e] * (ops::sigmoid(z) - py[e]) / wsum;
+            if dz != 0.0 {
+                for d in 0..c {
+                    dlogits[u * c + d] += dz * ev[d];
+                    dlogits[v * c + d] += dz * eu[d];
+                }
+            }
+        }
+        return Ok(((loss / wsum as f64) as f32, dlogits));
+    }
+    let w = fin(spec, inputs, "wloss")?;
+    let wsum: f32 = w.iter().sum::<f32>().max(1.0);
+    if ds.multilabel {
+        let y = fin(spec, inputs, "y")?;
+        let mut loss = 0.0f64;
+        for i in 0..rows {
+            if w[i] == 0.0 {
+                // gradient rows stay zero; skip the loss term too
+                continue;
+            }
+            let mut per = 0.0f32;
+            for j in 0..c {
+                let z = logits[i * c + j];
+                per += ops::bce_with_logits(z, y[i * c + j]);
+                dlogits[i * c + j] =
+                    w[i] * (ops::sigmoid(z) - y[i * c + j]) / (c as f32 * wsum);
+            }
+            loss += (w[i] * per / c as f32) as f64;
+        }
+        Ok(((loss / wsum as f64) as f32, dlogits))
+    } else {
+        let y = iin(spec, inputs, "y")?;
+        let logp = ops::log_softmax(logits, c);
+        let mut loss = 0.0f64;
+        for i in 0..rows {
+            if w[i] == 0.0 {
+                continue;
+            }
+            let yi = y[i] as usize;
+            loss += (w[i] * -logp[i * c + yi]) as f64;
+            for j in 0..c {
+                let soft = logp[i * c + j].exp();
+                let delta = if j == yi { 1.0 } else { 0.0 };
+                dlogits[i * c + j] = w[i] * (soft - delta) / wsum;
+            }
+        }
+        Ok(((loss / wsum as f64) as f32, dlogits))
+    }
+}
+
+impl NativeExec {
+    /// VQ-GNN train / inference step (Eq. 6/7 + Alg. 2 FINDNEAREST).
+    fn run_vq(&self, spec: &ArtifactSpec, inputs: &[Tensor], train: bool) -> Result<Vec<Tensor>> {
+        let plans: &[LayerPlan] = &spec.plan;
+        let ll = plans.len();
+        let (b, k) = (spec.b, spec.k);
+        let sage = self.model.name == "sage";
+        let xb = fin(spec, inputs, "xb")?;
+
+        // ---- forward (Eq. 6): m = C_in X_B + unsketch(C̃_out, X̃)[:, :f] ----
+        let mut h: Vec<f32> = xb.to_vec();
+        let mut xfeat: Vec<Vec<f32>> = Vec::with_capacity(ll);
+        let mut mbuf: Vec<Vec<f32>> = Vec::with_capacity(ll);
+        let mut pre: Vec<Vec<f32>> = Vec::with_capacity(ll);
+        for (l, p) in plans.iter().enumerate() {
+            let c_in = fin(spec, inputs, &format!("l{l}.c_in"))?;
+            let c_out = fin(spec, inputs, &format!("l{l}.c_out"))?;
+            let cw = fin(spec, inputs, &format!("l{l}.cw"))?;
+            let un = ops::unsketch(c_out, p.n_br, b, k, cw, p.fp);
+            let mut m = ops::matmul(c_in, b, b, &h, p.f_in);
+            for i in 0..b {
+                for d in 0..p.f_in {
+                    m[i * p.f_in + d] += un[i * p.cf + d];
+                }
+            }
+            let bias = fin(spec, inputs, &format!("param.l{l}.bias"))?;
+            let mut y = if sage {
+                let w_self = fin(spec, inputs, &format!("param.l{l}.w_self"))?;
+                let w_nbr = fin(spec, inputs, &format!("param.l{l}.w_nbr"))?;
+                let mut y = ops::matmul(&h, b, p.f_in, w_self, p.h_out);
+                let ynbr = ops::matmul(&m, b, p.f_in, w_nbr, p.h_out);
+                for (a, x) in y.iter_mut().zip(&ynbr) {
+                    *a += x;
+                }
+                y
+            } else {
+                let w = fin(spec, inputs, &format!("param.l{l}.w"))?;
+                ops::matmul(&m, b, p.f_in, w, p.h_out)
+            };
+            ops::add_bias(&mut y, p.h_out, bias);
+            xfeat.push(std::mem::take(&mut h));
+            h = if l + 1 < ll { ops::relu(&y) } else { y.clone() };
+            mbuf.push(m);
+            pre.push(y);
+        }
+        let c = plans[ll - 1].h_out;
+        let logits = h;
+
+        let mut out: HashMap<String, Tensor> = HashMap::new();
+        out.insert("logits".into(), Tensor::from_f32(&[b, c], logits.clone()));
+        if !train {
+            for (l, p) in plans.iter().enumerate() {
+                out.insert(
+                    format!("l{l}.xfeat"),
+                    Tensor::from_f32(&[b, p.f_in], xfeat[l].clone()),
+                );
+            }
+            return emit(spec, out);
+        }
+
+        let (loss, dlogits) = loss_head(&self.ds, spec, inputs, &logits, b, c)?;
+        out.insert("loss".into(), Tensor::from_f32(&[], vec![loss]));
+
+        // ---- backward (Eq. 7): same fused form with C_inᵀ and the
+        // transposed out-of-batch sketches; the probe gradient at each layer
+        // is exactly G_B^{l+1} ----
+        let mut g = dlogits;
+        let mut gvec: Vec<Vec<f32>> = vec![Vec::new(); ll];
+        for l in (0..ll).rev() {
+            let p = &plans[l];
+            if l + 1 < ll {
+                ops::relu_bwd(&mut g, &pre[l]);
+            }
+            gvec[l] = g.clone();
+            out.insert(
+                format!("grad.l{l}.bias"),
+                Tensor::from_f32(&[p.h_out], ops::col_sum(&g, p.h_out)),
+            );
+            let c_in = fin(spec, inputs, &format!("l{l}.c_in"))?;
+            let ct_out = fin(spec, inputs, &format!("l{l}.ct_out"))?;
+            let cw = fin(spec, inputs, &format!("l{l}.cw"))?;
+            // (C_inᵀ G_B + unsketch((C̃ᵀ)_out, G̃)) — gradient columns of the
+            // concat space are [f_in, f_in + g_dim).
+            let mut gsl = ops::slice_cols(
+                &ops::unsketch(ct_out, p.n_br, b, k, cw, p.fp),
+                p.cf,
+                p.f_in,
+                p.f_in + p.g_dim,
+            );
+            let bsk = ops::matmul_at_b(c_in, b, b, &g, p.h_out);
+            for (a, x) in gsl.iter_mut().zip(&bsk) {
+                *a += x;
+            }
+            let dx = if sage {
+                let w_self = fin(spec, inputs, &format!("param.l{l}.w_self"))?;
+                let w_nbr = fin(spec, inputs, &format!("param.l{l}.w_nbr"))?;
+                out.insert(
+                    format!("grad.l{l}.w_self"),
+                    Tensor::from_f32(
+                        &[p.f_in, p.h_out],
+                        ops::matmul_at_b(&xfeat[l], b, p.f_in, &g, p.h_out),
+                    ),
+                );
+                out.insert(
+                    format!("grad.l{l}.w_nbr"),
+                    Tensor::from_f32(
+                        &[p.f_in, p.h_out],
+                        ops::matmul_at_b(&mbuf[l], b, p.f_in, &g, p.h_out),
+                    ),
+                );
+                let mut dx = ops::matmul_a_bt(&g, b, p.h_out, w_self, p.f_in);
+                let dx2 = ops::matmul_a_bt(&gsl, b, p.h_out, w_nbr, p.f_in);
+                for (a, x) in dx.iter_mut().zip(&dx2) {
+                    *a += x;
+                }
+                dx
+            } else {
+                let w = fin(spec, inputs, &format!("param.l{l}.w"))?;
+                out.insert(
+                    format!("grad.l{l}.w"),
+                    Tensor::from_f32(
+                        &[p.f_in, p.h_out],
+                        ops::matmul_at_b(&mbuf[l], b, p.f_in, &g, p.h_out),
+                    ),
+                );
+                ops::matmul_a_bt(&gsl, b, p.h_out, w, p.f_in)
+            };
+            g = dx;
+        }
+
+        // ---- Alg. 2 FINDNEAREST on (X_B^l ‖ G_B^{l+1}), whitened against
+        // the pre-update codebook stats supplied as inputs ----
+        for (l, p) in plans.iter().enumerate() {
+            let mean = fin(spec, inputs, &format!("l{l}.mean"))?;
+            let var = fin(spec, inputs, &format!("l{l}.var"))?;
+            let cww = fin(spec, inputs, &format!("l{l}.cww"))?;
+            let mut assign = vec![0i32; p.n_br * b];
+            let mut zb = vec![0.0f32; b * p.fp];
+            for j in 0..p.n_br {
+                // branch j covers concat columns [j*fp, (j+1)*fp)
+                for i in 0..b {
+                    for d in 0..p.fp {
+                        let col = j * p.fp + d;
+                        let raw = if col < p.f_in {
+                            xfeat[l][i * p.f_in + col]
+                        } else if col < p.f_in + p.g_dim {
+                            gvec[l][i * p.g_dim + (col - p.f_in)]
+                        } else {
+                            0.0
+                        };
+                        zb[i * p.fp + d] = raw;
+                    }
+                }
+                let inv = kernels::inv_std(&var[j * p.fp..(j + 1) * p.fp]);
+                let zw = kernels::whiten(&zb, p.fp, &mean[j * p.fp..(j + 1) * p.fp], &inv);
+                kernels::assign_blocked(
+                    &zw,
+                    p.fp,
+                    p.fp,
+                    &cww[j * k * p.fp..(j + 1) * k * p.fp],
+                    k,
+                    p.fp,
+                    &mut assign[j * b..(j + 1) * b],
+                );
+            }
+            out.insert(
+                format!("l{l}.xfeat"),
+                Tensor::from_f32(&[b, p.f_in], xfeat[l].clone()),
+            );
+            out.insert(
+                format!("l{l}.gvec"),
+                Tensor::from_f32(&[b, p.g_dim], gvec[l].clone()),
+            );
+            out.insert(format!("l{l}.assign"), Tensor::from_i32(&[p.n_br, b], assign));
+        }
+        emit(spec, out)
+    }
+
+    /// Exact edge-list message passing (baseline compute path), with full
+    /// backprop for the train variant.
+    fn run_edge(&self, spec: &ArtifactSpec, inputs: &[Tensor], train: bool) -> Result<Vec<Tensor>> {
+        let (nn, _ne) = (spec.nn, spec.ne);
+        let sage = self.model.name == "sage";
+        let x = fin(spec, inputs, "x")?;
+        let esrc = iin(spec, inputs, "esrc")?;
+        let edst = iin(spec, inputs, "edst")?;
+        let ecoef = fin(spec, inputs, "ecoef")?;
+        let c = spec
+            .outputs
+            .iter()
+            .find(|t| t.name == "logits")
+            .context("edge spec has no logits output")?
+            .shape[1];
+        let ll = self.model.layers;
+        // per-layer (f_in, h_out)
+        let dims: Vec<(usize, usize)> = (0..ll)
+            .map(|l| {
+                let f = if l == 0 { self.ds.f_in_pad } else { self.model.hidden };
+                let h = if l + 1 == ll { c } else { self.model.hidden };
+                (f, h)
+            })
+            .collect();
+
+        let mut h: Vec<f32> = x.to_vec();
+        let mut xin: Vec<Vec<f32>> = Vec::with_capacity(ll);
+        let mut aggbuf: Vec<Vec<f32>> = Vec::with_capacity(ll);
+        let mut pre: Vec<Vec<f32>> = Vec::with_capacity(ll);
+        for l in 0..ll {
+            let (f, ho) = dims[l];
+            let agg = scatter_edges(&h, f, nn, esrc, edst, ecoef, false);
+            let bias = fin(spec, inputs, &format!("param.l{l}.bias"))?;
+            let mut y = if sage {
+                let w_self = fin(spec, inputs, &format!("param.l{l}.w_self"))?;
+                let w_nbr = fin(spec, inputs, &format!("param.l{l}.w_nbr"))?;
+                let mut y = ops::matmul(&h, nn, f, w_self, ho);
+                let ynbr = ops::matmul(&agg, nn, f, w_nbr, ho);
+                for (a, v) in y.iter_mut().zip(&ynbr) {
+                    *a += v;
+                }
+                y
+            } else {
+                let w = fin(spec, inputs, &format!("param.l{l}.w"))?;
+                ops::matmul(&agg, nn, f, w, ho)
+            };
+            ops::add_bias(&mut y, ho, bias);
+            xin.push(std::mem::take(&mut h));
+            h = if l + 1 < ll { ops::relu(&y) } else { y.clone() };
+            aggbuf.push(agg);
+            pre.push(y);
+        }
+        let logits = h;
+        let mut out: HashMap<String, Tensor> = HashMap::new();
+        out.insert("logits".into(), Tensor::from_f32(&[nn, c], logits.clone()));
+        if !train {
+            return emit(spec, out);
+        }
+
+        let (loss, dlogits) = loss_head(&self.ds, spec, inputs, &logits, nn, c)?;
+        out.insert("loss".into(), Tensor::from_f32(&[], vec![loss]));
+
+        let mut g = dlogits;
+        for l in (0..ll).rev() {
+            let (f, ho) = dims[l];
+            if l + 1 < ll {
+                ops::relu_bwd(&mut g, &pre[l]);
+            }
+            out.insert(
+                format!("grad.l{l}.bias"),
+                Tensor::from_f32(&[ho], ops::col_sum(&g, ho)),
+            );
+            let dx = if sage {
+                let w_self = fin(spec, inputs, &format!("param.l{l}.w_self"))?;
+                let w_nbr = fin(spec, inputs, &format!("param.l{l}.w_nbr"))?;
+                out.insert(
+                    format!("grad.l{l}.w_self"),
+                    Tensor::from_f32(&[f, ho], ops::matmul_at_b(&xin[l], nn, f, &g, ho)),
+                );
+                out.insert(
+                    format!("grad.l{l}.w_nbr"),
+                    Tensor::from_f32(&[f, ho], ops::matmul_at_b(&aggbuf[l], nn, f, &g, ho)),
+                );
+                let mut dx = ops::matmul_a_bt(&g, nn, ho, w_self, f);
+                let dagg = ops::matmul_a_bt(&g, nn, ho, w_nbr, f);
+                let dxa = scatter_edges(&dagg, f, nn, esrc, edst, ecoef, true);
+                for (a, v) in dx.iter_mut().zip(&dxa) {
+                    *a += v;
+                }
+                dx
+            } else {
+                let w = fin(spec, inputs, &format!("param.l{l}.w"))?;
+                out.insert(
+                    format!("grad.l{l}.w"),
+                    Tensor::from_f32(&[f, ho], ops::matmul_at_b(&aggbuf[l], nn, f, &g, ho)),
+                );
+                let dagg = ops::matmul_a_bt(&g, nn, ho, w, f);
+                scatter_edges(&dagg, f, nn, esrc, edst, ecoef, true)
+            };
+            g = dx;
+        }
+        emit(spec, out)
+    }
+
+    /// Standalone masked assignment (inductive inference path).
+    fn run_vq_assign(&self, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let z = tin(spec, inputs, "z")?;
+        let cww = fin(spec, inputs, "cww")?;
+        let mask = fin(spec, inputs, "mask")?;
+        let (nb, b, fp) = (z.shape[0], z.shape[1], z.shape[2]);
+        let k = spec.k;
+        let mut assign = vec![0i32; nb * b];
+        for j in 0..nb {
+            let mj = &mask[j * fp..(j + 1) * fp];
+            let mut zm = z.f[j * b * fp..(j + 1) * b * fp].to_vec();
+            for (idx, v) in zm.iter_mut().enumerate() {
+                *v *= mj[idx % fp];
+            }
+            let mut cm = cww[j * k * fp..(j + 1) * k * fp].to_vec();
+            for (idx, v) in cm.iter_mut().enumerate() {
+                *v *= mj[idx % fp];
+            }
+            kernels::assign_blocked(&zm, fp, fp, &cm, k, fp, &mut assign[j * b..(j + 1) * b]);
+        }
+        let mut out = HashMap::new();
+        out.insert("assign".to_string(), Tensor::from_i32(&[nb, b], assign));
+        emit(spec, out)
+    }
+}
+
+/// Edge-list scatter: `out[dst] += coef · h[src]` per edge (`transpose`
+/// flips the arc, which is exactly the backward pass of the aggregation).
+fn scatter_edges(
+    h: &[f32],
+    f: usize,
+    nn: usize,
+    esrc: &[i32],
+    edst: &[i32],
+    ecoef: &[f32],
+    transpose: bool,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; nn * f];
+    for e in 0..esrc.len() {
+        let coef = ecoef[e];
+        if coef == 0.0 {
+            continue; // padding edge
+        }
+        let (s, d) = if transpose {
+            (edst[e] as usize, esrc[e] as usize)
+        } else {
+            (esrc[e] as usize, edst[e] as usize)
+        };
+        let src = &h[s * f..(s + 1) * f];
+        let dst = &mut out[d * f..(d + 1) * f];
+        for j in 0..f {
+            dst[j] += coef * src[j];
+        }
+    }
+    out
+}

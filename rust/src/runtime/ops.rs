@@ -1,0 +1,292 @@
+//! Dense row-major f32 ops for the native CPU backend: matmul variants
+//! (thread-parallel over row blocks above a serial threshold), the VQ
+//! unsketch primitive (codebook-weighted out-of-batch message
+//! reconstruction), activations and loss-head numerics.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` — these are the same
+//! mathematical definitions the Pallas kernels are tested against.
+
+use crate::util::par;
+
+/// Below this many multiply-accumulates a matmul runs serially (thread
+/// dispatch costs more than the arithmetic).
+const PAR_THRESHOLD: usize = 1 << 16;
+
+/// Rows per parallel work unit.
+const ROW_BLOCK: usize = 32;
+
+/// `(m, k) @ (k, n) -> (m, n)`, ikj order (streams `b` rows, vectorizes n).
+pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    let body = |r0: usize, chunk: &mut [f32]| {
+        for (rr, orow) in chunk.chunks_mut(n).enumerate() {
+            let r = r0 + rr;
+            let arow = &a[r * k..(r + 1) * k];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    };
+    if m * k * n < PAR_THRESHOLD {
+        body(0, &mut out);
+    } else {
+        par::par_chunks_mut(&mut out, ROW_BLOCK * n, |ci, chunk| body(ci * ROW_BLOCK, chunk));
+    }
+    out
+}
+
+/// `aᵀ @ b` where `a` is `(m, k)` and `b` is `(m, n)` -> `(k, n)`.
+/// Serial: used for weight gradients whose output is small.
+pub fn matmul_at_b(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    let mut out = vec![0.0f32; k * n];
+    for r in 0..m {
+        let arow = &a[r * k..(r + 1) * k];
+        let brow = &b[r * n..(r + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// `a @ bᵀ` where `a` is `(m, k)` and `b` is `(n, k)` -> `(m, n)` (row-dot).
+pub fn matmul_a_bt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    let body = |r0: usize, chunk: &mut [f32]| {
+        for (rr, orow) in chunk.chunks_mut(n).enumerate() {
+            let arow = &a[(r0 + rr) * k..(r0 + rr + 1) * k];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut dot = 0.0f32;
+                for d in 0..k {
+                    dot += arow[d] * brow[d];
+                }
+                *o = dot;
+            }
+        }
+    };
+    if m * k * n < PAR_THRESHOLD {
+        body(0, &mut out);
+    } else {
+        par::par_chunks_mut(&mut out, ROW_BLOCK * n, |ci, chunk| body(ci * ROW_BLOCK, chunk));
+    }
+    out
+}
+
+/// Out-of-batch message reconstruction (`unsketch_ref`): per branch `j`,
+/// `(b, k) @ (k, fp)` written into columns `[j*fp, (j+1)*fp)` of a
+/// `(b, n_br*fp)` buffer.
+pub fn unsketch(c_out: &[f32], n_br: usize, b: usize, k: usize, cw: &[f32], fp: usize) -> Vec<f32> {
+    debug_assert_eq!(c_out.len(), n_br * b * k);
+    debug_assert_eq!(cw.len(), n_br * k * fp);
+    let width = n_br * fp;
+    let mut out = vec![0.0f32; b * width];
+    let body = |r0: usize, chunk: &mut [f32]| {
+        for (rr, orow) in chunk.chunks_mut(width).enumerate() {
+            let i = r0 + rr;
+            for j in 0..n_br {
+                let ocols = &mut orow[j * fp..(j + 1) * fp];
+                let sk = &c_out[(j * b + i) * k..(j * b + i + 1) * k];
+                for (v, &coef) in sk.iter().enumerate() {
+                    if coef == 0.0 {
+                        continue;
+                    }
+                    let cwrow = &cw[(j * k + v) * fp..(j * k + v + 1) * fp];
+                    for d in 0..fp {
+                        ocols[d] += coef * cwrow[d];
+                    }
+                }
+            }
+        }
+    };
+    if b * k * width < PAR_THRESHOLD {
+        body(0, &mut out);
+    } else {
+        par::par_chunks_mut(&mut out, ROW_BLOCK * width, |ci, chunk| {
+            body(ci * ROW_BLOCK, chunk)
+        });
+    }
+    out
+}
+
+/// Add a broadcast row bias in place: `x (rows, n) += bias (n)`.
+pub fn add_bias(x: &mut [f32], n: usize, bias: &[f32]) {
+    debug_assert_eq!(bias.len(), n);
+    for row in x.chunks_mut(n) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+}
+
+/// Column sums: `(rows, n) -> (n)` (bias gradient).
+pub fn col_sum(x: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for row in x.chunks(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Elementwise ReLU.
+pub fn relu(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect()
+}
+
+/// Mask a gradient by ReLU'(pre): `g ⊙ 1[pre > 0]`, in place.
+pub fn relu_bwd(g: &mut [f32], pre: &[f32]) {
+    debug_assert_eq!(g.len(), pre.len());
+    for (gv, &pv) in g.iter_mut().zip(pre) {
+        if pv <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// Copy columns `[lo, hi)` of a `(rows, width)` buffer into a dense
+/// `(rows, hi-lo)` one.
+pub fn slice_cols(x: &[f32], width: usize, lo: usize, hi: usize) -> Vec<f32> {
+    debug_assert!(lo <= hi && hi <= width);
+    let rows = x.len() / width;
+    let w = hi - lo;
+    let mut out = vec![0.0f32; rows * w];
+    for i in 0..rows {
+        out[i * w..(i + 1) * w].copy_from_slice(&x[i * width + lo..i * width + hi]);
+    }
+    out
+}
+
+/// Row-stable log-softmax over `(rows, c)`.
+pub fn log_softmax(x: &[f32], c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    for (orow, row) in out.chunks_mut(c).zip(x.chunks(c)) {
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut lse = 0.0f32;
+        for &v in row {
+            lse += (v - mx).exp();
+        }
+        let lse = lse.ln() + mx;
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = v - lse;
+        }
+    }
+    out
+}
+
+/// Numerically-stable `log(1 + exp(-|z|))` BCE pieces: returns
+/// `max(z,0) - z*y + log1p(exp(-|z|))`.
+pub fn bce_with_logits(z: f32, y: f32) -> f32 {
+    z.max(0.0) - z * y + (-z.abs()).exp().ln_1p()
+}
+
+/// Logistic sigmoid.
+pub fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // (2,3) @ (3,2)
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let c = matmul(&a, 2, 3, &b, 2);
+        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn transposed_variants_agree_with_explicit_transpose() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let (m, k, n) = (17, 9, 13);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gauss_f32()).collect();
+        let b: Vec<f32> = (0..m * n).map(|_| rng.gauss_f32()).collect();
+        // aᵀ b via explicit transpose
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let want = matmul(&at, k, m, &b, n);
+        let got = matmul_at_b(&a, m, k, &b, n);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // a bᵀ via explicit transpose
+        let c: Vec<f32> = (0..n * k).map(|_| rng.gauss_f32()).collect();
+        let mut ct = vec![0.0f32; k * n];
+        for i in 0..n {
+            for j in 0..k {
+                ct[j * n + i] = c[i * k + j];
+            }
+        }
+        let want2 = matmul(&a, m, k, &ct, n);
+        let got2 = matmul_a_bt(&a, m, k, &c, n);
+        for (x, y) in got2.iter().zip(&want2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn unsketch_matches_reference_einsum() {
+        // einsum("jbv,jvp->bjp") laid out as (b, n_br*fp)
+        let mut rng = crate::util::rng::Rng::new(4);
+        let (nb, b, k, fp) = (3, 5, 7, 4);
+        let c_out: Vec<f32> = (0..nb * b * k).map(|_| rng.gauss_f32()).collect();
+        let cw: Vec<f32> = (0..nb * k * fp).map(|_| rng.gauss_f32()).collect();
+        let got = unsketch(&c_out, nb, b, k, &cw, fp);
+        for i in 0..b {
+            for j in 0..nb {
+                for p in 0..fp {
+                    let mut want = 0.0f32;
+                    for v in 0..k {
+                        want += c_out[(j * b + i) * k + v] * cw[(j * k + v) * fp + p];
+                    }
+                    let x = got[i * nb * fp + j * fp + p];
+                    assert!((x - want).abs() < 1e-4, "[{i},{j},{p}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn log_softmax_rows_normalize() {
+        let x = [1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let ls = log_softmax(&x, 3);
+        for row in ls.chunks(3) {
+            let s: f32 = row.iter().map(|v| v.exp()).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bce_matches_naive_formula_on_safe_range() {
+        for &(z, y) in &[(0.3f32, 1.0f32), (-0.7, 0.0), (2.0, 1.0), (-3.0, 1.0)] {
+            let naive = -(y * sigmoid(z).ln() + (1.0 - y) * (1.0 - sigmoid(z)).ln());
+            assert!((bce_with_logits(z, y) - naive).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! PJRT backend: load AOT-compiled HLO text artifacts and execute them via
+//! the `xla` bindings (the original seed execution path, now behind the
+//! [`crate::runtime::Backend`] trait and the `pjrt` cargo feature).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile` →
+//! `execute`, with outputs arriving as a single tuple literal
+//! (`return_tuple=True` at lowering time).
+//!
+//! Note: the workspace ships an in-tree `xla` stub so this module always
+//! compiles; executing for real requires patching in an actual xla-rs build
+//! (see rust/vendor/README.md).
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::{Backend, Executable};
+use crate::util::tensor::{DType, Tensor};
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtBackend { client })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(&mut self, man: &Manifest, spec: &ArtifactSpec) -> Result<Box<dyn Executable>> {
+        let path = man.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", spec.name))?;
+        Ok(Box::new(PjrtExec { exe }))
+    }
+}
+
+pub struct PjrtExec {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable for PjrtExec {
+    fn run(&self, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = match t.dtype {
+                DType::F32 => xla::Literal::vec1(&t.f).reshape(&dims)?,
+                DType::I32 => xla::Literal::vec1(&t.i).reshape(&dims)?,
+            };
+            lits.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest declares {}",
+                spec.name,
+                outs.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut tensors = Vec::with_capacity(outs.len());
+        for (lit, s) in outs.iter().zip(&spec.outputs) {
+            let t = match s.dtype {
+                DType::F32 => Tensor::from_f32(&s.shape, lit.to_vec::<f32>()?),
+                DType::I32 => Tensor::from_i32(&s.shape, lit.to_vec::<i32>()?),
+            };
+            tensors.push(t);
+        }
+        Ok(tensors)
+    }
+}

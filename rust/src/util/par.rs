@@ -1,0 +1,125 @@
+//! Tiny data-parallel helpers over `std::thread::scope` (rayon is not
+//! available offline — DESIGN.md §7).  Work is split into fixed contiguous
+//! chunks assigned round-robin to workers, so the partitioning — and with it
+//! every merge order downstream — is deterministic for a given machine.
+
+/// Worker count: physical parallelism, overridable via `VQ_GNN_THREADS`.
+pub fn max_threads() -> usize {
+    if let Ok(s) = std::env::var("VQ_GNN_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_index, chunk)` over contiguous chunks of `data`, in
+/// parallel.  Chunks are disjoint `&mut` slices, so `f` may write freely;
+/// chunk `i` always covers `data[i*chunk .. (i+1)*chunk]`.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk = chunk.max(1);
+    let n_chunks = (data.len() + chunk - 1) / chunk;
+    let threads = max_threads().min(n_chunks);
+    if threads <= 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, &mut [T])>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, c) in data.chunks_mut(chunk).enumerate() {
+        buckets[i % threads].push((i, c));
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            s.spawn(move || {
+                for (i, c) in bucket {
+                    f(i, c);
+                }
+            });
+        }
+    });
+}
+
+/// Map contiguous chunks of `data` to partial results, in parallel, and
+/// return them **in chunk order** — callers merge sequentially, which keeps
+/// floating-point reductions deterministic for a fixed thread count.
+pub fn par_map_chunks<T, R, F>(data: &[T], chunk: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &[T]) -> R + Sync,
+{
+    let chunk = chunk.max(1);
+    let n_chunks = (data.len() + chunk - 1) / chunk;
+    let threads = max_threads().min(n_chunks);
+    if threads <= 1 {
+        return data.chunks(chunk).enumerate().map(|(i, c)| f(i, c)).collect();
+    }
+    let f = &f;
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n_chunks);
+    slots.resize_with(n_chunks, || None);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let chunks: Vec<(usize, &[T])> = data
+                .chunks(chunk)
+                .enumerate()
+                .filter(|(i, _)| i % threads == w)
+                .collect();
+            handles.push(s.spawn(move || {
+                chunks.into_iter().map(|(i, c)| (i, f(i, c))).collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            for (i, r) in h.join().expect("par worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots.into_iter().map(|r| r.expect("chunk not computed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let mut v = vec![0u32; 1037];
+        par_chunks_mut(&mut v, 64, |i, c| {
+            for (j, x) in c.iter_mut().enumerate() {
+                *x = (i * 64 + j) as u32;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+    }
+
+    #[test]
+    fn map_chunks_in_order() {
+        let data: Vec<u64> = (0..1000).collect();
+        let partials = par_map_chunks(&data, 128, |i, c| (i, c.iter().sum::<u64>()));
+        assert_eq!(partials.len(), 8);
+        let mut total = 0u64;
+        for (i, (ci, s)) in partials.iter().enumerate() {
+            assert_eq!(i, *ci);
+            total += s;
+        }
+        assert_eq!(total, 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut v: Vec<u8> = vec![];
+        par_chunks_mut(&mut v, 16, |_, _| panic!("no chunks expected"));
+        let out = par_map_chunks(&[1u8, 2, 3], 16, |_, c| c.len());
+        assert_eq!(out, vec![3]);
+    }
+}

@@ -1,0 +1,314 @@
+//! Blocked, thread-parallel VQ kernels — the L3 hot path shared by the
+//! trainers, the native backend and `benches/hot_paths.rs`.
+//!
+//! FINDNEAREST uses the classic distance decomposition
+//! `‖v − c‖² = ‖v‖² − 2·v·cᵀ + ‖c‖²` over contiguous row blocks: whitening
+//! is hoisted out of the O(b·k·fp) inner loop (the seed's scalar loop paid a
+//! divide + sqrt per element), codeword norms are computed once, and rows
+//! are distributed over threads.  Codewords are always scanned in ascending
+//! index order with a strict `<` comparison, so ties break to the lowest
+//! index — identical to the scalar reference and to
+//! `python/compile/kernels/ref.py`.
+
+use crate::util::par;
+use crate::vq::EPS;
+
+/// Rows per parallel work unit (large enough to amortize thread dispatch,
+/// small enough to balance uneven tails).
+pub const ROW_BLOCK: usize = 64;
+
+/// `1 / sqrt(var + EPS)` per dim — the whitening scale, computed once.
+pub fn inv_std(var: &[f32]) -> Vec<f32> {
+    var.iter().map(|&v| 1.0 / (v + EPS).sqrt()).collect()
+}
+
+/// Whiten `(b, fp)` row-major vectors: `w = (v − mean) · inv`.
+pub fn whiten(v: &[f32], fp: usize, mean: &[f32], inv: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(v.len() % fp.max(1), 0);
+    debug_assert_eq!(mean.len(), fp);
+    debug_assert_eq!(inv.len(), fp);
+    let mut out = vec![0.0f32; v.len()];
+    par::par_chunks_mut(&mut out, ROW_BLOCK * fp, |ci, chunk| {
+        let base = ci * ROW_BLOCK * fp;
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let d = (base + j) % fp;
+            *o = (v[base + j] - mean[d]) * inv[d];
+        }
+    });
+    out
+}
+
+/// Nearest-codeword assignment over pre-whitened rows.
+///
+/// `vw`  — row-major vectors, one row every `v_stride` floats, of which the
+///         first `width` dims participate in the distance;
+/// `cww` — `k` codewords, one row every `c_stride` floats (same `width`
+///         prefix participates — the feature-masked inductive path passes
+///         `width < c_stride`);
+/// `out` — one `i32` per row (its length defines the row count).
+pub fn assign_blocked(
+    vw: &[f32],
+    width: usize,
+    v_stride: usize,
+    cww: &[f32],
+    k: usize,
+    c_stride: usize,
+    out: &mut [i32],
+) {
+    debug_assert!(width <= v_stride && width <= c_stride);
+    debug_assert!(vw.len() >= out.len() * v_stride || out.is_empty());
+    debug_assert!(cww.len() >= k * c_stride || k == 0);
+    if k == 0 {
+        return;
+    }
+    // ‖c‖² once per codeword, shared by every row.
+    let cnorm: Vec<f32> = (0..k)
+        .map(|c| {
+            let row = &cww[c * c_stride..c * c_stride + width];
+            row.iter().map(|x| x * x).sum()
+        })
+        .collect();
+    let cnorm = &cnorm;
+    par::par_chunks_mut(out, ROW_BLOCK, |ci, ochunk| {
+        let r0 = ci * ROW_BLOCK;
+        for (rr, o) in ochunk.iter_mut().enumerate() {
+            let r = r0 + rr;
+            let v = &vw[r * v_stride..r * v_stride + width];
+            let vn: f32 = v.iter().map(|x| x * x).sum();
+            let mut best = f32::INFINITY;
+            let mut arg = 0usize;
+            for c in 0..k {
+                let cr = &cww[c * c_stride..c * c_stride + width];
+                let mut dot = 0.0f32;
+                for d in 0..width {
+                    dot += v[d] * cr[d];
+                }
+                let d2 = vn - 2.0 * dot + cnorm[c];
+                if d2 < best {
+                    best = d2;
+                    arg = c;
+                }
+            }
+            *o = arg as i32;
+        }
+    });
+}
+
+/// Per-dim batch mean and (population) variance of `(b, fp)` rows, f64
+/// accumulation, parallel over row blocks with a deterministic in-order
+/// merge.  Matches `numpy`'s `v.mean(0)` / `v.var(0)` semantics used by
+/// `python/compile/vq.py`.
+pub fn batch_mean_var(v: &[f32], b: usize, fp: usize) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(v.len(), b * fp);
+    let partials = par::par_map_chunks(v, ROW_BLOCK * fp, |_ci, chunk| {
+        let mut s = vec![0.0f64; fp];
+        let mut s2 = vec![0.0f64; fp];
+        for (j, &x) in chunk.iter().enumerate() {
+            let d = j % fp;
+            let x = x as f64;
+            s[d] += x;
+            s2[d] += x * x;
+        }
+        (s, s2)
+    });
+    let mut s = vec![0.0f64; fp];
+    let mut s2 = vec![0.0f64; fp];
+    for (ps, ps2) in partials {
+        for d in 0..fp {
+            s[d] += ps[d];
+            s2[d] += ps2[d];
+        }
+    }
+    let bf = b as f64;
+    let mean: Vec<f32> = s.iter().map(|&x| (x / bf) as f32).collect();
+    let var: Vec<f32> = (0..fp)
+        .map(|d| {
+            let m = s[d] / bf;
+            ((s2[d] / bf - m * m).max(0.0)) as f32
+        })
+        .collect();
+    (mean, var)
+}
+
+/// Scatter whitened rows into per-cluster counts and vector sums
+/// (`onehot.sum(0)`, `onehotᵀ @ vw`), parallel over row blocks with
+/// deterministic in-order merge of the per-block partials.
+pub fn cluster_accumulate(
+    vw: &[f32],
+    assign: &[i32],
+    b: usize,
+    fp: usize,
+    k: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(vw.len(), b * fp);
+    debug_assert_eq!(assign.len(), b);
+    let partials = par::par_map_chunks(assign, ROW_BLOCK, |ci, chunk| {
+        let row0 = ci * ROW_BLOCK;
+        let mut counts = vec![0.0f32; k];
+        let mut sums = vec![0.0f32; k * fp];
+        for (off, &ai) in chunk.iter().enumerate() {
+            let i = row0 + off;
+            let a = ai as usize;
+            debug_assert!(a < k);
+            counts[a] += 1.0;
+            let row = &vw[i * fp..(i + 1) * fp];
+            let dst = &mut sums[a * fp..(a + 1) * fp];
+            for d in 0..fp {
+                dst[d] += row[d];
+            }
+        }
+        (counts, sums)
+    });
+    let mut counts = vec![0.0f32; k];
+    let mut sums = vec![0.0f32; k * fp];
+    for (pc, ps) in partials {
+        for c in 0..k {
+            counts[c] += pc[c];
+        }
+        for j in 0..k * fp {
+            sums[j] += ps[j];
+        }
+    }
+    (counts, sums)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The seed's scalar FINDNEAREST (whitening recomputed per element) —
+    /// kept as the reference the blocked kernel must agree with.
+    fn scalar_assign(
+        v: &[f32],
+        fp: usize,
+        mean: &[f32],
+        var: &[f32],
+        cww: &[f32],
+        k: usize,
+    ) -> Vec<i32> {
+        let b = v.len() / fp;
+        let mut out = vec![0i32; b];
+        for i in 0..b {
+            let mut best = f32::INFINITY;
+            let mut arg = 0usize;
+            for c in 0..k {
+                let mut d2 = 0.0f32;
+                for d in 0..fp {
+                    let w = (v[i * fp + d] - mean[d]) / (var[d] + EPS).sqrt();
+                    let diff = w - cww[c * fp + d];
+                    d2 += diff * diff;
+                }
+                if d2 < best {
+                    best = d2;
+                    arg = c;
+                }
+            }
+            out[i] = arg as i32;
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matches_scalar_reference() {
+        let mut rng = Rng::new(11);
+        let (b, k, fp) = (257, 33, 12);
+        let v: Vec<f32> = (0..b * fp).map(|_| rng.gauss_f32()).collect();
+        let cww: Vec<f32> = (0..k * fp).map(|_| 0.5 * rng.gauss_f32()).collect();
+        let mean: Vec<f32> = (0..fp).map(|_| 0.2 * rng.gauss_f32()).collect();
+        let var: Vec<f32> = (0..fp).map(|_| 0.5 + rng.f32()).collect();
+        let want = scalar_assign(&v, fp, &mean, &var, &cww, k);
+        let inv = inv_std(&var);
+        let vw = whiten(&v, fp, &mean, &inv);
+        let mut got = vec![0i32; b];
+        assign_blocked(&vw, fp, fp, &cww, k, fp, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        // Duplicate codewords produce bit-identical distances: the winner
+        // must be the lowest index, exactly like the scalar loop.
+        let fp = 4;
+        let proto = [0.5f32, -1.0, 0.25, 2.0];
+        let mut cww = Vec::new();
+        for _ in 0..6 {
+            cww.extend_from_slice(&proto); // all six codewords identical
+        }
+        let vw: Vec<f32> = vec![0.1, 0.2, 0.3, 0.4, -3.0, 1.0, 0.0, 9.0];
+        let mut got = vec![0i32; 2];
+        assign_blocked(&vw, fp, fp, &cww, 6, fp, &mut got);
+        assert_eq!(got, vec![0, 0]);
+        // and with two distinct groups, a row equidistant picks the first
+        let cww2: Vec<f32> = vec![1.0, 0.0, -1.0, 0.0, 1.0, 0.0, -1.0, 0.0];
+        let mut got2 = vec![0i32; 1];
+        assign_blocked(&[0.0, 0.0], 2, 2, &cww2, 4, 2, &mut got2);
+        assert_eq!(got2, vec![0]);
+    }
+
+    #[test]
+    fn prefix_width_ignores_masked_dims() {
+        // width < stride: the trailing (gradient) dims must not matter.
+        let mut rng = Rng::new(3);
+        let (b, k, fp, width) = (40, 7, 8, 5);
+        let cww: Vec<f32> = (0..k * fp).map(|_| rng.gauss_f32()).collect();
+        let mut vw: Vec<f32> = (0..b * fp).map(|_| rng.gauss_f32()).collect();
+        let mut a1 = vec![0i32; b];
+        assign_blocked(&vw, width, fp, &cww, k, fp, &mut a1);
+        for i in 0..b {
+            for d in width..fp {
+                vw[i * fp + d] = 1e6; // poison masked dims
+            }
+        }
+        let mut a2 = vec![0i32; b];
+        assign_blocked(&vw, width, fp, &cww, k, fp, &mut a2);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn mean_var_match_two_pass_reference() {
+        let mut rng = Rng::new(5);
+        let (b, fp) = (301, 9);
+        let v: Vec<f32> = (0..b * fp).map(|_| 3.0 * rng.gauss_f32() + 1.5).collect();
+        let (m, va) = batch_mean_var(&v, b, fp);
+        for d in 0..fp {
+            let mut s = 0.0f64;
+            for i in 0..b {
+                s += v[i * fp + d] as f64;
+            }
+            let mr = s / b as f64;
+            let mut s2 = 0.0f64;
+            for i in 0..b {
+                let x = v[i * fp + d] as f64 - mr;
+                s2 += x * x;
+            }
+            let vr = s2 / b as f64;
+            assert!((m[d] as f64 - mr).abs() < 1e-5, "mean[{d}]");
+            assert!((va[d] as f64 - vr).abs() < 1e-4, "var[{d}]");
+        }
+    }
+
+    #[test]
+    fn cluster_accumulate_matches_scatter() {
+        let mut rng = Rng::new(7);
+        let (b, k, fp) = (200, 13, 6);
+        let vw: Vec<f32> = (0..b * fp).map(|_| rng.gauss_f32()).collect();
+        let assign: Vec<i32> = (0..b).map(|_| rng.below(k) as i32).collect();
+        let (counts, sums) = cluster_accumulate(&vw, &assign, b, fp, k);
+        let mut wc = vec![0.0f32; k];
+        let mut ws = vec![0.0f32; k * fp];
+        for i in 0..b {
+            let a = assign[i] as usize;
+            wc[a] += 1.0;
+            for d in 0..fp {
+                ws[a * fp + d] += vw[i * fp + d];
+            }
+        }
+        for c in 0..k {
+            assert!((counts[c] - wc[c]).abs() < 1e-4);
+        }
+        for j in 0..k * fp {
+            assert!((sums[j] - ws[j]).abs() < 1e-3, "sums[{j}]");
+        }
+    }
+}

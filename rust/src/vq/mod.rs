@@ -3,6 +3,7 @@
 //! maintained across mini-batches.  Mirrors python/compile/vq.py (the
 //! executable spec) — semantics are locked by tests on both sides.
 
+pub mod kernels;
 pub mod sketch;
 
 use crate::runtime::manifest::LayerPlan;
@@ -60,24 +61,19 @@ impl VqBranch {
     /// Alg. 2 body: EMA whitening stats → whiten batch → EMA cluster
     /// stats → codeword refresh.  `v` is (b, fp) raw vectors; `assign` the
     /// in-graph FINDNEAREST result (computed against the pre-update state).
+    /// Runs on the blocked parallel kernels in [`kernels`].
     pub fn update(&mut self, v: &[f32], assign: &[i32], gamma: f32, beta: f32) {
         let b = assign.len();
+        if b == 0 {
+            // An empty batch has no statistics: the seed's per-dim mean
+            // divided by b and produced NaN whitening stats here.
+            return;
+        }
         debug_assert_eq!(v.len(), b * self.fp);
-        // batch mean / variance per dim
+        let (m, va) = kernels::batch_mean_var(v, b, self.fp);
         for d in 0..self.fp {
-            let mut m = 0.0f64;
-            for i in 0..b {
-                m += v[i * self.fp + d] as f64;
-            }
-            let m = (m / b as f64) as f32;
-            let mut va = 0.0f64;
-            for i in 0..b {
-                let x = v[i * self.fp + d] - m;
-                va += (x * x) as f64;
-            }
-            let va = (va / b as f64) as f32;
-            self.mean[d] = self.mean[d] * beta + m * (1.0 - beta);
-            self.var[d] = self.var[d] * beta + va * (1.0 - beta);
+            self.mean[d] = self.mean[d] * beta + m[d] * (1.0 - beta);
+            self.var[d] = self.var[d] * beta + va[d] * (1.0 - beta);
         }
         // EMA cluster sizes + sums over whitened vectors
         for c in self.counts.iter_mut() {
@@ -86,50 +82,38 @@ impl VqBranch {
         for s in self.sums.iter_mut() {
             *s *= gamma;
         }
+        let inv = kernels::inv_std(&self.var);
+        let vw = kernels::whiten(v, self.fp, &self.mean, &inv);
+        let (bc, bs) = kernels::cluster_accumulate(&vw, assign, b, self.fp, self.k);
         let g1 = 1.0 - gamma;
-        for i in 0..b {
-            let a = assign[i] as usize;
-            debug_assert!(a < self.k);
-            self.counts[a] += g1;
-            for d in 0..self.fp {
-                let w = (v[i * self.fp + d] - self.mean[d])
-                    / (self.var[d] + EPS).sqrt();
-                self.sums[a * self.fp + d] += g1 * w;
-            }
-        }
-        // refresh codewords with mass
         for c in 0..self.k {
-            if self.counts[c] > 1e-6 {
+            self.counts[c] += g1 * bc[c];
+        }
+        for j in 0..self.k * self.fp {
+            self.sums[j] += g1 * bs[j];
+        }
+        // Refresh only clusters with mass; empty clusters keep their
+        // position — dividing by a vanishing count would mint NaN/Inf
+        // codewords that poison every later assignment.
+        for c in 0..self.k {
+            let cnt = self.counts[c];
+            if cnt > 1e-6 && cnt.is_finite() {
                 for d in 0..self.fp {
-                    self.cww[c * self.fp + d] =
-                        self.sums[c * self.fp + d] / self.counts[c];
+                    self.cww[c * self.fp + d] = self.sums[c * self.fp + d] / cnt;
                 }
             }
         }
     }
 
-    /// Host-side FINDNEAREST (tests + inductive bootstrap fallback).
+    /// Host-side FINDNEAREST (tests + inductive bootstrap fallback), via
+    /// the blocked parallel kernel.
     pub fn assign_host(&self, v: &[f32]) -> Vec<i32> {
+        debug_assert_eq!(v.len() % self.fp, 0);
         let b = v.len() / self.fp;
+        let inv = kernels::inv_std(&self.var);
+        let vw = kernels::whiten(v, self.fp, &self.mean, &inv);
         let mut out = vec![0i32; b];
-        for i in 0..b {
-            let mut best = f32::INFINITY;
-            let mut arg = 0usize;
-            for c in 0..self.k {
-                let mut d2 = 0.0f32;
-                for d in 0..self.fp {
-                    let w = (v[i * self.fp + d] - self.mean[d])
-                        / (self.var[d] + EPS).sqrt();
-                    let diff = w - self.cww[c * self.fp + d];
-                    d2 += diff * diff;
-                }
-                if d2 < best {
-                    best = d2;
-                    arg = c;
-                }
-            }
-            out[i] = arg as i32;
-        }
+        kernels::assign_blocked(&vw, self.fp, self.fp, &self.cww, self.k, self.fp, &mut out);
         out
     }
 }
@@ -333,6 +317,37 @@ mod tests {
         assert_eq!(lv.assign_of(1, 49), 6);
         // untouched nodes keep their assignment in [0, k)
         assert!(lv.assign_of(0, 0) < 8);
+    }
+
+    #[test]
+    fn empty_clusters_never_go_nan() {
+        // Drive every cluster's EMA mass toward zero while feeding all
+        // vectors to cluster 0: codewords must stay finite throughout.
+        let mut rng = Rng::new(6);
+        let mut br = VqBranch::init(8, 4, &mut rng);
+        let v: Vec<f32> = (0..32 * 4).map(|_| rng.gauss_f32()).collect();
+        let assign = vec![0i32; 32];
+        for _ in 0..400 {
+            br.update(&v, &assign, 0.05, 0.9); // aggressive decay
+            assert!(br.cww.iter().all(|x| x.is_finite()), "NaN codeword");
+            assert!(br.counts.iter().all(|c| c.is_finite() && *c >= 0.0));
+        }
+        // clusters 1.. lost all mass but kept their (finite) positions
+        for c in 1..8 {
+            assert!(br.counts[c] < 1e-3);
+        }
+    }
+
+    #[test]
+    fn empty_batch_update_is_a_noop() {
+        let mut rng = Rng::new(8);
+        let mut br = VqBranch::init(4, 3, &mut rng);
+        let before = br.clone();
+        br.update(&[], &[], 0.9, 0.9);
+        assert_eq!(br.cww, before.cww);
+        assert_eq!(br.counts, before.counts);
+        assert_eq!(br.mean, before.mean);
+        assert_eq!(br.var, before.var);
     }
 
     #[test]
