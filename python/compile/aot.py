@@ -55,7 +55,9 @@ def artifact_registry() -> list[dict]:
         tiny = ds_name == "tiny_sim"
         b = 64 if tiny else tc.b
         k = 16 if tiny else tc.k
-        models = ["gcn", "sage", "gat"] + (["txf"] if ds_name == "arxiv_sim" else [])
+        # txf: the Table-8 backbone (arxiv) + the tiny config the rust
+        # test/gradcheck suites train hermetically (mirrors runtime/builtin.rs).
+        models = ["gcn", "sage", "gat"] + (["txf"] if ds_name == "arxiv_sim" or tiny else [])
         for m in models:
             add("vq_train", ds_name, m, b=b, k=k)
             add("vq_infer", ds_name, m, b=b, k=k)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from .config import DatasetCfg, ModelCfg, TrainCfg, out_dim
 from .kernels.gat_scores import SCORE_CAP, SLOPE
+from .layers import DEN_FLOOR
 from .model import (bce_multilabel_loss, ce_loss, link_loss, param_specs,
                     unflatten_params)
 
@@ -49,7 +50,7 @@ def _gat_edge_layer(params, x, esrc, edst, evalid, nn, heads):
             score[:, None] * proj[esrc]
         )
         den = jnp.zeros((nn,), x.dtype).at[edst].add(score)
-        outs.append(num / jnp.maximum(den, 1e-12)[:, None])
+        outs.append(num / jnp.maximum(den, DEN_FLOOR)[:, None])
     return jnp.concatenate(outs, axis=1) + params["bias"]
 
 

@@ -125,6 +125,13 @@ def sage_layer(params, ctx, xb, probe):
     return h_self + h_nbr + params["bias"] + probe
 
 
+# Attention-mass floor: exp(-SCORE_CAP), the cap's reciprocal.  Without it a
+# destination whose every score underflows divides by ~0 and the probe
+# gradient ∂ℓ/∂num explodes by up to 1e12 — the floor keeps the decoupled
+# normalization Lipschitz (App. E) on both sides of the cap.
+DEN_FLOOR = jnp.exp(-SCORE_CAP)
+
+
 def _leaky_exp(s):
     return jnp.exp(jnp.minimum(jnp.where(s >= 0, s, SLOPE * s), SCORE_CAP))
 
@@ -168,7 +175,7 @@ def gat_layer(params, ctx, xb, probe, heads: int):
             (f + hh0, hh), xb, w_s, c_in, c_out, ct_out, cw
         ) + jax.lax.dynamic_slice(probe, (0, hh0), (b, hh))
         den = c_in.sum(axis=1) + c_out[0].sum(axis=1)
-        outs.append(num / jnp.maximum(den, 1e-12)[:, None])
+        outs.append(num / jnp.maximum(den, DEN_FLOOR)[:, None])
     return jnp.concatenate(outs, axis=1) + params["bias"]
 
 
@@ -207,6 +214,6 @@ def txf_layer(params, ctx, xb, probe, heads: int):
         (f + h, h), xb, params["wv"], c_in, c_out, ct_out, cw
     ) + probe[:, h:]
     den = c_in.sum(axis=1) + c_out[0].sum(axis=1)
-    glob = num / jnp.maximum(den, 1e-12)[:, None]
+    glob = num / jnp.maximum(den, DEN_FLOOR)[:, None]
     lin = xb @ params["w_lin"]
     return local + glob + lin

@@ -202,12 +202,41 @@ fn main() {
     let tiny = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
     let mut rt = Runtime::native();
     let mut tr =
-        VqTrainer::new(&mut rt, &man, tiny, "gcn", "", NodeStrategy::Nodes, 1).unwrap();
+        VqTrainer::new(&mut rt, &man, tiny.clone(), "gcn", "", NodeStrategy::Nodes, 1).unwrap();
     tr.train_step(&mut rt).unwrap(); // warm
     let r_ts = bench("train_step/vq tiny gcn (native end-to-end)", t(2.0, 0.4), || {
         tr.train_step(&mut rt).unwrap();
     });
     report.insert("train_step_tiny_ms".into(), num(r_ts.mean_ns / 1e6));
+
+    // --- attention paths: dense score tile + the learnable-conv backbones --
+    {
+        let b = 512usize;
+        let e_src: Vec<f32> = (0..b).map(|_| rng.gauss_f32()).collect();
+        let e_dst: Vec<f32> = (0..b).map(|_| rng.gauss_f32()).collect();
+        let mask: Vec<f32> =
+            (0..b * b).map(|_| if rng.f64() < 0.05 { 1.0 } else { 0.0 }).collect();
+        let r_sc = bench("attn/gat_score_tile b=512", t(1.5, 0.3), || {
+            std::hint::black_box(vq_gnn::runtime::ops::gat_score_tile(&e_dst, &e_src, &mask));
+        });
+        report.insert("attn_score_tile_ms".into(), num(r_sc.mean_ns / 1e6));
+
+        for model in ["gat", "txf"] {
+            let mut tra = VqTrainer::new(
+                &mut rt, &man, tiny.clone(), model, "", NodeStrategy::Nodes, 1,
+            )
+            .unwrap();
+            tra.train_step(&mut rt).unwrap(); // warm
+            let r = bench(
+                &format!("train_step/vq tiny {model} (native end-to-end)"),
+                t(2.0, 0.4),
+                || {
+                    tra.train_step(&mut rt).unwrap();
+                },
+            );
+            report.insert(format!("train_step_tiny_{model}_ms"), num(r.mean_ns / 1e6));
+        }
+    }
 
     if !smoke {
         let mut tra =

@@ -18,6 +18,60 @@ use crate::util::tensor::Tensor;
 use crate::vq::sketch::{build_cnt_out, build_fixed, build_learnable, SketchScratch};
 use crate::vq::VqModel;
 
+/// Global gradient-scale cap for the learnable-convolution backbones.  In
+/// practice attention gradients sit well above 1 every step (the decoupled
+/// Eq. 7 messages are unnormalized), so this acts as gradient
+/// *normalization* — each RMSprop step sees a unit-norm gradient direction,
+/// which makes the update scale-free and immune to the occasional 1000×
+/// Eq. 7 spike (verified over the exact training trajectories the
+/// loss-descent tests assert).
+const GRAD_NORM_CAP: f64 = 1.0;
+
+/// L2 norm over the whole grad.* tail, accumulated in f64.
+fn global_grad_norm(grads: &[Tensor]) -> f64 {
+    grads
+        .iter()
+        .flat_map(|t| t.f.iter())
+        .map(|&x| x as f64 * x as f64)
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Cap gradient-codeword rows at 10× the upper-median *nonzero* row L2 norm
+/// before they enter the codebook EMA (App. E: the smoothed gradient
+/// codewords are only meaningful if no single row dominates the cluster
+/// statistics).  Zero rows — loss-masked validation/test/padding nodes,
+/// which can be more than half the batch at the last layer — are excluded
+/// from the median so they cannot collapse the cap onto the real rows.
+fn winsorize_rows(gvec: &Tensor) -> Tensor {
+    let (b, g) = (gvec.shape[0], gvec.shape[1]);
+    let norms: Vec<f64> = (0..b)
+        .map(|i| {
+            gvec.f[i * g..(i + 1) * g]
+                .iter()
+                .map(|&x| x as f64 * x as f64)
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect();
+    let mut nonzero: Vec<f64> = norms.iter().copied().filter(|&n| n > 0.0).collect();
+    if nonzero.is_empty() {
+        return gvec.clone();
+    }
+    nonzero.sort_by(f64::total_cmp);
+    let cap = 10.0 * nonzero[nonzero.len() / 2];
+    let mut out = gvec.clone();
+    for i in 0..b {
+        if norms[i] > cap {
+            let s = (cap / norms[i]) as f32;
+            for x in out.f[i * g..(i + 1) * g].iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+    out
+}
+
 pub struct VqTrainer {
     pub train_art: Rc<Artifact>,
     pub infer_art: Rc<Artifact>,
@@ -49,7 +103,17 @@ impl VqTrainer {
         let infer_art = rt.load(man, &infer_name)?;
         let spec = &train_art.spec;
         let params = init_params(spec, seed);
-        let opt = opt::RmsProp::new(man.train.lr as f32, man.train.rms_alpha as f32, &params);
+        // Learnable convolutions step at lr/3: the Eq. 7 out-of-batch
+        // gradient messages decouple raw attention scores from their own
+        // denominators, so their early-training variance is higher than the
+        // fixed convs' (bounded row-normalized coefficients) tolerate-ably
+        // under the shared base lr.
+        let lr = if matches!(model_name, "gat" | "txf") {
+            man.train.lr / 3.0
+        } else {
+            man.train.lr
+        };
+        let opt = opt::RmsProp::new(lr as f32, man.train.rms_alpha as f32, &params);
         let vq = VqModel::init(&spec.plan, spec.k, ds.n(), seed);
         // transductive: batches over ALL nodes (loss masked to train nodes);
         // inductive: only training graphs' nodes are visible during training.
@@ -102,19 +166,52 @@ impl VqTrainer {
         let outputs = rt.execute(&art, &inputs)?;
         let spec = &art.spec;
         let loss = outputs[0].f[0];
-        // VQ EMA updates + assignment-table refresh per layer (Alg. 2)
+        // VQ EMA updates + assignment-table refresh per layer (Alg. 2).
+        // Learnable convolutions winsorize the gradient rows first: a
+        // single spiky ∂ℓ/∂num row (attention-denominator conditioning)
+        // would otherwise poison its cluster's EMA codeword for ~1/(1-γ)
+        // steps and get re-broadcast into every later batch's Eq. 7
+        // backward messages.
         for l in 0..spec.plan.len() {
             let xi = spec.output_index(&format!("l{l}.xfeat")).unwrap();
             let gi = spec.output_index(&format!("l{l}.gvec")).unwrap();
             let ai = spec.output_index(&format!("l{l}.assign")).unwrap();
+            let gv;
+            let gvec = if self.learnable() {
+                gv = winsorize_rows(&outputs[gi]);
+                &gv
+            } else {
+                &outputs[gi]
+            };
             self.vq.layers[l].update_from_batch(
-                &batch, &outputs[xi], &outputs[gi], &outputs[ai],
+                &batch, &outputs[xi], gvec, &outputs[ai],
                 self.gamma, self.beta,
             );
         }
-        // optimizer on the grad.* tail (ordered like params)
+        // optimizer on the grad.* tail (ordered like params); attention
+        // backbones normalize the global gradient scale (GRAD_NORM_CAP) —
+        // the same Eq. 7 spikes that motivate the winsorization also reach
+        // the parameter gradients of the lower layers.
         let n_params = self.params.len();
-        let grads: Vec<&Tensor> = outputs[outputs.len() - n_params..].iter().collect();
+        let tail = &outputs[outputs.len() - n_params..];
+        let mut clipped: Option<Vec<Tensor>> = None;
+        if self.learnable() {
+            let norm = global_grad_norm(tail);
+            if norm > GRAD_NORM_CAP {
+                let s = (GRAD_NORM_CAP / norm) as f32;
+                clipped = Some(
+                    tail.iter()
+                        .map(|t| {
+                            Tensor::from_f32(&t.shape, t.f.iter().map(|x| x * s).collect())
+                        })
+                        .collect(),
+                );
+            }
+        }
+        let grads: Vec<&Tensor> = match &clipped {
+            Some(v) => v.iter().collect(),
+            None => tail.iter().collect(),
+        };
         self.opt.step(&mut self.params, &grads);
         if self.learnable() {
             lipschitz_clip(spec, &mut self.params, self.weight_clip);

@@ -97,7 +97,7 @@ fn fmt_cell(vals: &[f64]) -> String {
 /// Tables 4 & 7: performance across datasets × backbones × methods.
 pub fn table_perf(ctx: &mut Ctx, datasets: &[&str], file: &str) -> Result<()> {
     let methods = ["full", "ns", "cluster", "saint", "vq"];
-    let models = ["gcn", "sage", "gat"];
+    let models = ["gcn", "sage", "gat", "txf"];
     let mut md = String::new();
     let mut csv = String::from("dataset,model,method,metric_mean,metric_std\n");
     for ds in datasets {
@@ -114,6 +114,14 @@ pub fn table_perf(ctx: &mut Ctx, datasets: &[&str], file: &str) -> Result<()> {
             for model in models {
                 let cell = if method == "ns" && model == "gcn" {
                     "NA¹".to_string()
+                } else if model == "txf" && method != "vq" {
+                    // Global attention has no edge-list form — the sampling
+                    // baselines cannot run it (ManifestError::UnsupportedEdgeForm).
+                    "NA³".to_string()
+                } else if model == "txf"
+                    && !ctx.man.artifacts.contains_key(&format!("vq_train_{ds}_txf"))
+                {
+                    "NA⁴".to_string()
                 } else if !ctx.rt.supports_model(model) {
                     "NA²".to_string()
                 } else {
@@ -145,7 +153,12 @@ pub fn table_perf(ctx: &mut Ctx, datasets: &[&str], file: &str) -> Result<()> {
         }
     }
     md.push_str("\n¹ NS-SAGE sampling is not compatible with the GCN backbone (paper Table 4).\n");
-    md.push_str("² backbone unsupported on this backend (requires --features pjrt + artifacts).\n");
+    md.push_str("² backbone unsupported on this backend.\n");
+    md.push_str(
+        "³ global attention has no edge-list form — only VQ scales the Graph Transformer \
+         (paper §5).\n",
+    );
+    md.push_str("⁴ no txf artifact registered for this dataset (Table 8 runs it on arxiv_sim).\n");
     println!("{md}");
     ctx.save(&format!("{file}.md"), &md)?;
     ctx.save(&format!("{file}.csv"), &csv)
@@ -161,7 +174,7 @@ pub fn table3(ctx: &mut Ctx) -> Result<()> {
          |---|---|---|---|---|---|\n",
     );
     let mut csv = String::from("method,model,nodes,messages,bytes\n");
-    for model in ["gcn", "sage"] {
+    for model in ["gcn", "sage", "gat"] {
         for method in ["ns", "cluster", "saint", "vq"] {
             if method == "ns" && model == "gcn" {
                 continue;
@@ -206,7 +219,7 @@ pub fn table3(ctx: &mut Ctx) -> Result<()> {
 pub fn fig4(ctx: &mut Ctx) -> Result<()> {
     let ds_name = "arxiv_sim";
     let mut csv = String::from("model,method,epoch,train_secs,val_metric\n");
-    for model in ["gcn", "sage"] {
+    for model in ["gcn", "sage", "gat"] {
         for method in ["ns", "cluster", "saint", "vq"] {
             if method == "ns" && model == "gcn" {
                 continue;
@@ -308,8 +321,7 @@ pub fn complexity(ctx: &mut Ctx) -> Result<()> {
 pub fn table8(ctx: &mut Ctx) -> Result<()> {
     if !ctx.rt.supports_model("txf") {
         eprintln!(
-            "table8 skipped: the {} backend does not support the txf backbone \
-             (build with --features pjrt + AOT artifacts)",
+            "table8 skipped: the {} backend does not support the txf backbone",
             ctx.rt.backend_name()
         );
         return Ok(());

@@ -370,7 +370,9 @@ pub fn manifest(dir: &Path) -> Manifest {
         let b = if tiny { 64 } else { tc.b };
         let k = if tiny { 16 } else { tc.k };
         let mut model_names = vec!["gcn", "sage", "gat"];
-        if ds.name == "arxiv_sim" {
+        if ds.name == "arxiv_sim" || tiny {
+            // txf: the paper's Table-8 backbone (arxiv) + the tiny config
+            // the test/gradcheck suites train hermetically.
             model_names.push("txf");
         }
         for mn in model_names {
@@ -378,7 +380,10 @@ pub fn manifest(dir: &Path) -> Manifest {
             add(vq_spec(true, ds, mo, &tc, b, k, "", 0));
             add(vq_spec(false, ds, mo, &tc, b, k, "", 0));
             if mn == "txf" {
-                continue; // global attention has no edge-list form
+                // Global attention has no edge-list form; the registry makes
+                // this a typed lookup error (ManifestError::UnsupportedEdgeForm)
+                // instead of a silent gap.
+                continue;
             }
             add(edge_spec(true, ds, mo, &tc, ds.n, ds.m_max, "_full"));
             add(edge_spec(false, ds, mo, &tc, ds.n, ds.m_max, "_full"));
@@ -436,6 +441,8 @@ mod tests {
             "vq_infer_tiny_sim_gcn",
             "vq_train_tiny_sim_sage",
             "vq_train_tiny_sim_gat",
+            "vq_train_tiny_sim_txf",
+            "vq_infer_tiny_sim_txf",
             "vq_train_arxiv_sim_txf",
             "edge_train_tiny_sim_gcn_full",
             "edge_infer_tiny_sim_gcn_full",
@@ -483,6 +490,44 @@ mod tests {
         assert_eq!(a.outputs[2].name, "l0.xfeat");
         assert_eq!(a.outputs[4].name, "l0.assign");
         assert_eq!(a.outputs[4].dtype, DType::I32);
+    }
+
+    #[test]
+    fn tiny_txf_train_spec_shapes() {
+        let m = manifest(Path::new("artifacts"));
+        let a = m.artifact("vq_train_tiny_sim_txf").unwrap();
+        assert_eq!((a.b, a.k), (64, 16));
+        // l0: f=16, h=64, 2 heads, global split ⇒ g_dim = 2h = 128, one
+        // branch over the whole 144-wide concat space
+        let p0 = &a.plan[0];
+        assert_eq!(
+            (p0.f_in, p0.h_out, p0.g_dim, p0.n_br, p0.fp, p0.heads),
+            (16, 64, 128, 1, 144, 2)
+        );
+        // last layer: single head, g_dim = 2·n_classes
+        let p2 = &a.plan[2];
+        assert_eq!((p2.h_out, p2.g_dim, p2.heads), (4, 8, 1));
+        // learnable ctx inputs incl. the global out-of-batch histogram
+        for name in ["l0.mask_in", "l0.m_out", "l0.m_out_t", "l0.cnt_out"] {
+            assert!(a.inputs.iter().any(|t| t.name == name), "missing {name}");
+        }
+        // per-layer params: w/a_src/a_dst/bias + wq/wk/wv/w_lin
+        let n_params = a.inputs.iter().filter(|t| t.name.starts_with("param.")).count();
+        assert_eq!(n_params, 3 * 8);
+        let wq = a.inputs.iter().find(|t| t.name == "param.l0.wq").unwrap();
+        assert_eq!(wq.shape, vec![16, 32]);
+        let w0 = a.inputs.iter().find(|t| t.name == "param.l0.w").unwrap();
+        assert_eq!(w0.shape, vec![2, 16, 32]);
+        // grads pair up with params in order
+        let params: Vec<&TensorSpec> =
+            a.inputs.iter().filter(|t| t.name.starts_with("param.")).collect();
+        let grads: Vec<&TensorSpec> =
+            a.outputs.iter().filter(|t| t.name.starts_with("grad.")).collect();
+        assert_eq!(params.len(), grads.len());
+        for (p, g) in params.iter().zip(&grads) {
+            assert_eq!(p.shape, g.shape);
+            assert_eq!(g.name, format!("grad.{}", &p.name["param.".len()..]));
+        }
     }
 
     #[test]

@@ -35,6 +35,15 @@ pub struct ModelCfg {
     pub fp: usize,
 }
 
+impl ModelCfg {
+    /// Global-attention backbones attend over every node pair (𝔠 =
+    /// all-ones, paper App. Table 5), so no edge-list artifact form can
+    /// exist for them — only the VQ method scales them.
+    pub fn global_attention(&self) -> bool {
+        self.name == "txf"
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TrainCfg {
     pub b: usize,
@@ -107,6 +116,34 @@ pub struct Manifest {
     pub models: BTreeMap<String, ModelCfg>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
+
+/// Typed registry lookup error.  `UnsupportedEdgeForm` makes the Graph
+/// Transformer's edge-list gap explicit: global attention attends over
+/// every node pair, so no edge-list artifact can exist — `EdgeTrainer`
+/// fails loudly with the reason instead of a generic missing-name message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ManifestError {
+    /// No artifact registered under this name.
+    NotFound(String),
+    /// The model family fundamentally has no edge-list artifact form.
+    UnsupportedEdgeForm { model: String, artifact: String },
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::NotFound(name) => write!(f, "artifact '{name}' not in manifest"),
+            ManifestError::UnsupportedEdgeForm { model, artifact } => write!(
+                f,
+                "UnsupportedEdgeForm: artifact '{artifact}' cannot exist — the '{model}' \
+                 backbone's global attention has no edge-list form (every node pair \
+                 attends); use its vq_train/vq_infer artifacts instead"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
 
 fn us(j: &Json, k: &str) -> usize {
     j.get(k).and_then(Json::as_usize).unwrap_or(0)
@@ -235,10 +272,23 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), train, datasets, models, artifacts })
     }
 
-    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec, String> {
-        self.artifacts
-            .get(name)
-            .ok_or_else(|| format!("artifact '{name}' not in manifest"))
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec, ManifestError> {
+        if let Some(a) = self.artifacts.get(name) {
+            return Ok(a);
+        }
+        // Edge-artifact lookups for global-attention models are a structural
+        // gap, not a typo (aot.py's registry skips them for the same reason).
+        if name.starts_with("edge_") {
+            for m in self.models.values().filter(|m| m.global_attention()) {
+                if name.contains(&format!("_{}", m.name)) {
+                    return Err(ManifestError::UnsupportedEdgeForm {
+                        model: m.name.clone(),
+                        artifact: name.to_string(),
+                    });
+                }
+            }
+        }
+        Err(ManifestError::NotFound(name.to_string()))
     }
 
     pub fn default_dir() -> PathBuf {
@@ -266,6 +316,21 @@ impl Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn txf_edge_lookup_is_a_typed_unsupported_error() {
+        let m = crate::runtime::builtin::manifest(Path::new("artifacts"));
+        let err = m.artifact("edge_train_arxiv_sim_txf_full").unwrap_err();
+        assert!(matches!(err, ManifestError::UnsupportedEdgeForm { .. }));
+        let msg = err.to_string();
+        assert!(msg.contains("UnsupportedEdgeForm"), "{msg}");
+        assert!(msg.contains("edge-list form"), "{msg}");
+        // a plain typo still reports not-found, not unsupported
+        assert!(matches!(
+            m.artifact("vq_train_tiny_sim_nope").unwrap_err(),
+            ManifestError::NotFound(_)
+        ));
+    }
 
     #[test]
     fn loads_real_manifest() {

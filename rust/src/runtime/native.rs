@@ -11,12 +11,23 @@
 //!   gradient half of the codewords via the transposed sketches), per-layer
 //!   probe gradients, whitened FINDNEAREST via the blocked VQ kernels, and
 //!   exact parameter gradients;
+//! - `vq_train` / `vq_infer` for the learnable convolutions (GAT edge-softmax
+//!   attention, Graph-Transformer local+global attention): the decoupled
+//!   row-normalization form of App. E, with the out-of-batch score blocks
+//!   built from codeword projections weighted by the masked count sketches
+//!   (low-rank Eq. 6), and a hand-derived VJP mirroring
+//!   `python/compile/layers.py` exactly (the convolution-matrix cotangents
+//!   flow through both the exact and approximated message paths; the
+//!   transposed sketches carry no cotangent, matching `mp_linear`'s VJP) —
+//!   pinned by `tests/gradcheck.rs` finite differences;
 //! - `edge_train` / `edge_infer`: exact edge-list message passing with full
-//!   autodiff (the four sampling baselines);
+//!   backprop (the four sampling baselines), including per-edge GAT
+//!   attention;
 //! - `vq_assign`: the standalone masked assignment kernel.
 //!
-//! Learnable convolutions (GAT / Graph Transformer) still require the PJRT
-//! backend — `compile` rejects them with a clear error.
+//! The only artifact family without a native path is the Graph Transformer's
+//! edge-list form — global attention has none (see
+//! `manifest::ManifestError::UnsupportedEdgeForm`).
 
 use std::collections::HashMap;
 
@@ -36,7 +47,7 @@ impl Backend for NativeBackend {
     }
 
     fn supports_model(&self, model: &str) -> bool {
-        matches!(model, "gcn" | "sage")
+        matches!(model, "gcn" | "sage" | "gat" | "txf")
     }
 
     fn compile(&mut self, man: &Manifest, spec: &ArtifactSpec) -> Result<Box<dyn Executable>> {
@@ -51,12 +62,16 @@ impl Backend for NativeBackend {
             .with_context(|| format!("native: unknown model '{}'", spec.model))?
             .clone();
         match spec.kind.as_str() {
-            "vq_train" | "vq_infer" | "edge_train" | "edge_infer" => {
+            "vq_train" | "vq_infer" => {
                 if !self.supports_model(&spec.model) {
+                    bail!("native: unknown model '{}' (artifact {})", spec.model, spec.name);
+                }
+            }
+            "edge_train" | "edge_infer" => {
+                if !matches!(spec.model.as_str(), "gcn" | "sage" | "gat") {
                     bail!(
-                        "native backend does not implement the learnable convolution \
-                         '{}' (artifact {}); build with --features pjrt and AOT \
-                         artifacts to run it",
+                        "native: the '{}' backbone has no edge-list form (artifact {}): \
+                         global attention touches every node pair, not an edge list",
                         spec.model,
                         spec.name
                     );
@@ -76,7 +91,10 @@ pub struct NativeExec {
 
 impl Executable for NativeExec {
     fn run(&self, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let learnable = matches!(self.model.name.as_str(), "gat" | "txf");
         match spec.kind.as_str() {
+            "vq_train" if learnable => self.run_vq_attn(spec, inputs, true),
+            "vq_infer" if learnable => self.run_vq_attn(spec, inputs, false),
             "vq_train" => self.run_vq(spec, inputs, true),
             "vq_infer" => self.run_vq(spec, inputs, false),
             "edge_train" => self.run_edge(spec, inputs, true),
@@ -205,8 +223,166 @@ fn loss_head(
     }
 }
 
+/// `dst += src`, elementwise.
+fn add_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (a, x) in dst.iter_mut().zip(src) {
+        *a += x;
+    }
+}
+
+/// Per-row dot with a fixed vector: `(rows, w) · (w,) -> (rows,)` — the
+/// attention projections `e = (X W) a`.
+fn dot_rows(a: &[f32], w: usize, v: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(v.len(), w);
+    a.chunks(w).map(|row| row.iter().zip(v).map(|(x, y)| x * y).sum()).collect()
+}
+
+/// Forward residuals of one GAT attention head (VQ path).
+struct HeadFwd {
+    proj: Vec<f32>,    // (b, hh)  X W_s
+    e_src: Vec<f32>,   // (b,)     proj · a_src
+    e_dst: Vec<f32>,   // (b,)     proj · a_dst
+    cproj: Vec<f32>,   // (k, hh)  X̃ W_s
+    ecw_src: Vec<f32>, // (k,)     cproj · a_src
+    ecw_dst: Vec<f32>, // (k,)     cproj · a_dst
+    c_in: Vec<f32>,    // (b, b)   masked in-batch scores
+    c_out: Vec<f32>,   // (b, k)   count-weighted out-of-batch scores
+    m: Vec<f32>,       // (b, f)   approximated messages C_in X + C_out X̃
+    den: Vec<f32>,     // (b,)     attention mass
+    o: Vec<f32>,       // (b, hh)  normalized head output
+}
+
+/// Forward residuals of the txf global-attention branch.
+struct GlobFwd {
+    dk: usize,
+    q: Vec<f32>,     // (b, dk)
+    kk: Vec<f32>,    // (b, dk)
+    kcw: Vec<f32>,   // (k, dk)  X̃ W_k
+    qcw: Vec<f32>,   // (k, dk)  X̃ W_q (transposed-sketch side)
+    t_in: Vec<f32>,  // (b, b)   scaled raw dots (cap-gate input)
+    t_out: Vec<f32>, // (b, k)
+    c_in: Vec<f32>,  // (b, b)   exp scores
+    c_out: Vec<f32>, // (b, k)   cnt_out-weighted exp scores
+    m: Vec<f32>,     // (b, f)
+    den: Vec<f32>,   // (b,)
+    o: Vec<f32>,     // (b, h)
+}
+
+struct AttnLayerFwd {
+    heads: Vec<HeadFwd>,
+    glob: Option<GlobFwd>,
+}
+
+/// Forward residuals of one per-edge GAT head (edge-list path).
+struct EdgeHeadFwd {
+    proj: Vec<f32>,  // (nn, hh)
+    e_src: Vec<f32>, // (nn,)
+    e_dst: Vec<f32>, // (nn,)
+    den: Vec<f32>,   // (nn,)
+    o: Vec<f32>,     // (nn, hh) normalized head output
+}
+
+/// Fold the attention-denominator cotangent into the score cotangents:
+/// `den[i] = Σ_j c_in[i,j] + Σ_v c_out[i,v]`, so ∂ℓ/∂den broadcasts into
+/// every score of row i.
+fn add_den_cotangent(dc_in: &mut [f32], dc_out: &mut [f32], gden: &[f32], b: usize, k: usize) {
+    debug_assert_eq!(dc_in.len(), b * b);
+    debug_assert_eq!(dc_out.len(), b * k);
+    for i in 0..b {
+        let gd = gden[i];
+        for x in dc_in[i * b..(i + 1) * b].iter_mut() {
+            *x += gd;
+        }
+        for x in dc_out[i * k..(i + 1) * k].iter_mut() {
+            *x += gd;
+        }
+    }
+}
+
+/// VJP of `attn_normalize`: given `go = ∂ℓ/∂(num/den_c)`, the cached mass
+/// and the normalized output, return `(∂ℓ/∂num, ∂ℓ/∂den)`.  The `max(den,
+/// floor)` guard gates the denominator gradient exactly like
+/// `jnp.maximum` does.
+fn normalize_bwd(go: &[f32], h: usize, den: &[f32], o: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let b = den.len();
+    debug_assert_eq!(go.len(), b * h);
+    let mut gnum = vec![0.0f32; b * h];
+    let mut gden = vec![0.0f32; b];
+    for i in 0..b {
+        let d = den[i];
+        if d > ops::DEN_FLOOR {
+            let inv = 1.0 / d;
+            let mut acc = 0.0f32;
+            for t in 0..h {
+                gnum[i * h + t] = go[i * h + t] * inv;
+                acc += go[i * h + t] * o[i * h + t];
+            }
+            gden[i] = -acc * inv;
+        } else {
+            let inv = 1.0 / ops::DEN_FLOOR;
+            for t in 0..h {
+                gnum[i * h + t] = go[i * h + t] * inv;
+            }
+        }
+    }
+    (gnum, gden)
+}
+
+/// Alg. 2 FINDNEAREST on the concat vectors (X_B^l ‖ G_B^{l+1}), whitened
+/// against the pre-update codebook stats supplied as inputs; emits the
+/// per-layer `xfeat` / `gvec` / `assign` outputs shared by every vq_train
+/// backbone.
+fn push_assign_outputs(
+    spec: &ArtifactSpec,
+    inputs: &[Tensor],
+    xfeat: &[Vec<f32>],
+    gvec: &[Vec<f32>],
+    out: &mut HashMap<String, Tensor>,
+) -> Result<()> {
+    let (b, k) = (spec.b, spec.k);
+    for (l, p) in spec.plan.iter().enumerate() {
+        let mean = fin(spec, inputs, &format!("l{l}.mean"))?;
+        let var = fin(spec, inputs, &format!("l{l}.var"))?;
+        let cww = fin(spec, inputs, &format!("l{l}.cww"))?;
+        let mut assign = vec![0i32; p.n_br * b];
+        let mut zb = vec![0.0f32; b * p.fp];
+        for j in 0..p.n_br {
+            // branch j covers concat columns [j*fp, (j+1)*fp)
+            for i in 0..b {
+                for d in 0..p.fp {
+                    let col = j * p.fp + d;
+                    let raw = if col < p.f_in {
+                        xfeat[l][i * p.f_in + col]
+                    } else if col < p.f_in + p.g_dim {
+                        gvec[l][i * p.g_dim + (col - p.f_in)]
+                    } else {
+                        0.0
+                    };
+                    zb[i * p.fp + d] = raw;
+                }
+            }
+            let inv = kernels::inv_std(&var[j * p.fp..(j + 1) * p.fp]);
+            let zw = kernels::whiten(&zb, p.fp, &mean[j * p.fp..(j + 1) * p.fp], &inv);
+            kernels::assign_blocked(
+                &zw,
+                p.fp,
+                p.fp,
+                &cww[j * k * p.fp..(j + 1) * k * p.fp],
+                k,
+                p.fp,
+                &mut assign[j * b..(j + 1) * b],
+            );
+        }
+        out.insert(format!("l{l}.xfeat"), Tensor::from_f32(&[b, p.f_in], xfeat[l].clone()));
+        out.insert(format!("l{l}.gvec"), Tensor::from_f32(&[b, p.g_dim], gvec[l].clone()));
+        out.insert(format!("l{l}.assign"), Tensor::from_i32(&[p.n_br, b], assign));
+    }
+    Ok(())
+}
+
 impl NativeExec {
-    /// VQ-GNN train / inference step (Eq. 6/7 + Alg. 2 FINDNEAREST).
+    /// Fixed-convolution VQ-GNN step (Eq. 6/7 + Alg. 2 FINDNEAREST).
     fn run_vq(&self, spec: &ArtifactSpec, inputs: &[Tensor], train: bool) -> Result<Vec<Tensor>> {
         let plans: &[LayerPlan] = &spec.plan;
         let ll = plans.len();
@@ -335,59 +511,394 @@ impl NativeExec {
             g = dx;
         }
 
-        // ---- Alg. 2 FINDNEAREST on (X_B^l ‖ G_B^{l+1}), whitened against
-        // the pre-update codebook stats supplied as inputs ----
+        // ---- Alg. 2 FINDNEAREST on (X_B^l ‖ G_B^{l+1}) ----
+        push_assign_outputs(spec, inputs, &xfeat, &gvec, &mut out)?;
+        emit(spec, out)
+    }
+
+    /// Learnable-convolution VQ-GNN step (GAT / Graph Transformer), the
+    /// decoupled row-normalization form of App. E:
+    ///
+    /// Per head `s` with projection W_s and attention vectors a_src/a_dst,
+    /// the unnormalized score is `h(i,j) = exp(min(LeakyReLU(e_dst(i) +
+    /// e_src(j)), CAP))`.  The in-batch block lives on the fixed mask
+    /// 𝔠 = A + I; out-of-batch messages are merged per codeword (paper
+    /// Fig. 1) with weight `M_out[i,v] · h(i, X̃_v)` — the low-rank Eq. 6
+    /// form: scores against k codeword projections instead of n nodes.  The
+    /// numerator is the approximated message passing `(C_in X_B + C_out X̃)
+    /// W_s`; the denominator is the same attention applied to ones (plain
+    /// row sums), so an isolated row stays exactly zero.
+    ///
+    /// The backward pass mirrors `python/compile/layers.py` `mp_linear`'s
+    /// custom VJP: ∇X_B rides `C_inᵀ G + (C̃ᵀ)_out G̃` (Eq. 7 — the
+    /// transposed count sketches weight the *gradient* half of the
+    /// codewords), the convolution cotangents `∂ℓ/∂C_in = (G W ᵀ) X_Bᵀ` and
+    /// `∂ℓ/∂C̃_out = (G Wᵀ) X̃ᵀ` flow into the attention parameters through
+    /// the analytic score gradient (slope gate × cap gate), and the
+    /// transposed sketches themselves carry no cotangent.  The probe
+    /// gradient captured per layer is ∂ℓ/∂numerator — exactly the G̃
+    /// quantity the codebook update needs under decoupled normalization.
+    ///
+    /// txf adds a global scaled-dot-product branch (𝔠 = all-ones, so the
+    /// out-of-batch weight is just the bucket population `cnt_out[v]`) and a
+    /// linear branch; its gradient concat space is 2h wide (local ‖ global).
+    fn run_vq_attn(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Tensor],
+        train: bool,
+    ) -> Result<Vec<Tensor>> {
+        let plans: &[LayerPlan] = &spec.plan;
+        let ll = plans.len();
+        let (b, k) = (spec.b, spec.k);
+        let txf = self.model.name == "txf";
+        let xb = fin(spec, inputs, "xb")?;
+
+        // ---- forward ----
+        let mut h: Vec<f32> = xb.to_vec();
+        let mut xfeat: Vec<Vec<f32>> = Vec::with_capacity(ll);
+        let mut pre: Vec<Vec<f32>> = Vec::with_capacity(ll);
+        let mut caches: Vec<AttnLayerFwd> = Vec::with_capacity(ll);
         for (l, p) in plans.iter().enumerate() {
-            let mean = fin(spec, inputs, &format!("l{l}.mean"))?;
-            let var = fin(spec, inputs, &format!("l{l}.var"))?;
-            let cww = fin(spec, inputs, &format!("l{l}.cww"))?;
-            let mut assign = vec![0i32; p.n_br * b];
-            let mut zb = vec![0.0f32; b * p.fp];
-            for j in 0..p.n_br {
-                // branch j covers concat columns [j*fp, (j+1)*fp)
+            let f = p.f_in;
+            let heads = p.heads.max(1);
+            let hh = p.h_out / heads;
+            let mask_in = fin(spec, inputs, &format!("l{l}.mask_in"))?;
+            let m_out = fin(spec, inputs, &format!("l{l}.m_out"))?;
+            let cw = fin(spec, inputs, &format!("l{l}.cw"))?;
+            let cw_feat = ops::slice_cols(cw, p.fp, 0, f); // feature half X̃ (k, f)
+            let w = fin(spec, inputs, &format!("param.l{l}.w"))?;
+            let a_src = fin(spec, inputs, &format!("param.l{l}.a_src"))?;
+            let a_dst = fin(spec, inputs, &format!("param.l{l}.a_dst"))?;
+            let bias = fin(spec, inputs, &format!("param.l{l}.bias"))?;
+
+            let mut y = vec![0.0f32; b * p.h_out];
+            let mut hcs = Vec::with_capacity(heads);
+            for s in 0..heads {
+                let ws = &w[s * f * hh..(s + 1) * f * hh];
+                let asr = &a_src[s * hh..(s + 1) * hh];
+                let ads = &a_dst[s * hh..(s + 1) * hh];
+                let proj = ops::matmul(&h, b, f, ws, hh);
+                let e_src = dot_rows(&proj, hh, asr);
+                let e_dst = dot_rows(&proj, hh, ads);
+                let cproj = ops::matmul(&cw_feat, k, f, ws, hh);
+                let ecw_src = dot_rows(&cproj, hh, asr);
+                let ecw_dst = dot_rows(&cproj, hh, ads);
+                let c_in = ops::gat_score_tile(&e_dst, &e_src, mask_in);
+                let c_out = ops::gat_score_tile(&e_dst, &ecw_src, m_out);
+                // m = C_in X_B + C̃_out X̃ (the fused Eq. 6 kernel)
+                let mut m = ops::matmul(&c_in, b, b, &h, f);
+                add_into(&mut m, &ops::matmul(&c_out, b, k, &cw_feat, f));
+                let mut o = ops::matmul(&m, b, f, ws, hh);
+                let mut den = ops::row_sum(&c_in, b);
+                add_into(&mut den, &ops::row_sum(&c_out, k));
+                ops::attn_normalize(&mut o, hh, &den);
                 for i in 0..b {
-                    for d in 0..p.fp {
-                        let col = j * p.fp + d;
-                        let raw = if col < p.f_in {
-                            xfeat[l][i * p.f_in + col]
-                        } else if col < p.f_in + p.g_dim {
-                            gvec[l][i * p.g_dim + (col - p.f_in)]
-                        } else {
-                            0.0
-                        };
-                        zb[i * p.fp + d] = raw;
+                    y[i * p.h_out + s * hh..i * p.h_out + (s + 1) * hh]
+                        .copy_from_slice(&o[i * hh..(i + 1) * hh]);
+                }
+                hcs.push(HeadFwd {
+                    proj,
+                    e_src,
+                    e_dst,
+                    cproj,
+                    ecw_src,
+                    ecw_dst,
+                    c_in,
+                    c_out,
+                    m,
+                    den,
+                    o,
+                });
+            }
+            ops::add_bias(&mut y, p.h_out, bias);
+
+            let glob = if txf {
+                let cnt_out = fin(spec, inputs, &format!("l{l}.cnt_out"))?;
+                let wq_t = tin(spec, inputs, &format!("param.l{l}.wq"))?;
+                let dk = wq_t.shape[1];
+                let wq = &wq_t.f;
+                let wk = fin(spec, inputs, &format!("param.l{l}.wk"))?;
+                let wv = fin(spec, inputs, &format!("param.l{l}.wv"))?;
+                let w_lin = fin(spec, inputs, &format!("param.l{l}.w_lin"))?;
+                let scale = 1.0 / (dk as f32).sqrt();
+                let q = ops::matmul(&h, b, f, wq, dk);
+                let kk = ops::matmul(&h, b, f, wk, dk);
+                let kcw = ops::matmul(&cw_feat, k, f, wk, dk);
+                let qcw = ops::matmul(&cw_feat, k, f, wq, dk);
+                // global scores: 𝔠 = all-ones (App. Table 5)
+                let mut t_in = ops::matmul_a_bt(&q, b, dk, &kk, b);
+                for x in t_in.iter_mut() {
+                    *x *= scale;
+                }
+                let c_in: Vec<f32> = t_in.iter().map(|&t| ops::exp_capped(t)).collect();
+                let mut t_out = ops::matmul_a_bt(&q, b, dk, &kcw, k);
+                for x in t_out.iter_mut() {
+                    *x *= scale;
+                }
+                let mut c_out = vec![0.0f32; b * k];
+                for i in 0..b {
+                    for v in 0..k {
+                        c_out[i * k + v] = cnt_out[v] * ops::exp_capped(t_out[i * k + v]);
                     }
                 }
-                let inv = kernels::inv_std(&var[j * p.fp..(j + 1) * p.fp]);
-                let zw = kernels::whiten(&zb, p.fp, &mean[j * p.fp..(j + 1) * p.fp], &inv);
-                kernels::assign_blocked(
-                    &zw,
-                    p.fp,
-                    p.fp,
-                    &cww[j * k * p.fp..(j + 1) * k * p.fp],
-                    k,
-                    p.fp,
-                    &mut assign[j * b..(j + 1) * b],
+                let mut m = ops::matmul(&c_in, b, b, &h, f);
+                add_into(&mut m, &ops::matmul(&c_out, b, k, &cw_feat, f));
+                let mut o = ops::matmul(&m, b, f, wv, p.h_out);
+                let mut den = ops::row_sum(&c_in, b);
+                add_into(&mut den, &ops::row_sum(&c_out, k));
+                ops::attn_normalize(&mut o, p.h_out, &den);
+                add_into(&mut y, &o);
+                add_into(&mut y, &ops::matmul(&h, b, f, w_lin, p.h_out));
+                Some(GlobFwd { dk, q, kk, kcw, qcw, t_in, t_out, c_in, c_out, m, den, o })
+            } else {
+                None
+            };
+
+            xfeat.push(std::mem::take(&mut h));
+            h = if l + 1 < ll { ops::relu(&y) } else { y.clone() };
+            caches.push(AttnLayerFwd { heads: hcs, glob });
+            pre.push(y);
+        }
+        let c = plans[ll - 1].h_out;
+        let logits = h;
+
+        let mut out: HashMap<String, Tensor> = HashMap::new();
+        out.insert("logits".into(), Tensor::from_f32(&[b, c], logits.clone()));
+        if !train {
+            for (l, p) in plans.iter().enumerate() {
+                out.insert(
+                    format!("l{l}.xfeat"),
+                    Tensor::from_f32(&[b, p.f_in], xfeat[l].clone()),
                 );
             }
-            out.insert(
-                format!("l{l}.xfeat"),
-                Tensor::from_f32(&[b, p.f_in], xfeat[l].clone()),
-            );
-            out.insert(
-                format!("l{l}.gvec"),
-                Tensor::from_f32(&[b, p.g_dim], gvec[l].clone()),
-            );
-            out.insert(format!("l{l}.assign"), Tensor::from_i32(&[p.n_br, b], assign));
+            return emit(spec, out);
         }
+
+        let (loss, dlogits) = loss_head(&self.ds, spec, inputs, &logits, b, c)?;
+        out.insert("loss".into(), Tensor::from_f32(&[], vec![loss]));
+
+        // ---- backward ----
+        let mut g = dlogits;
+        let mut gvec: Vec<Vec<f32>> = vec![Vec::new(); ll];
+        for l in (0..ll).rev() {
+            let p = &plans[l];
+            let f = p.f_in;
+            let heads = p.heads.max(1);
+            let hh = p.h_out / heads;
+            if l + 1 < ll {
+                ops::relu_bwd(&mut g, &pre[l]);
+            }
+            out.insert(
+                format!("grad.l{l}.bias"),
+                Tensor::from_f32(&[p.h_out], ops::col_sum(&g, p.h_out)),
+            );
+            let xin = &xfeat[l];
+            let m_out_t = fin(spec, inputs, &format!("l{l}.m_out_t"))?;
+            let cw = fin(spec, inputs, &format!("l{l}.cw"))?;
+            let cw_feat = ops::slice_cols(cw, p.fp, 0, f);
+            let w = fin(spec, inputs, &format!("param.l{l}.w"))?;
+            let a_src = fin(spec, inputs, &format!("param.l{l}.a_src"))?;
+            let a_dst = fin(spec, inputs, &format!("param.l{l}.a_dst"))?;
+
+            let mut dh = vec![0.0f32; b * f];
+            let mut gv = vec![0.0f32; b * p.g_dim];
+            let mut dw = vec![0.0f32; heads * f * hh];
+            let mut da_src = vec![0.0f32; heads * hh];
+            let mut da_dst = vec![0.0f32; heads * hh];
+
+            for s in 0..heads {
+                let hc = &caches[l].heads[s];
+                let ws = &w[s * f * hh..(s + 1) * f * hh];
+                let asr = &a_src[s * hh..(s + 1) * hh];
+                let ads = &a_dst[s * hh..(s + 1) * hh];
+                let mut go = vec![0.0f32; b * hh];
+                for i in 0..b {
+                    go[i * hh..(i + 1) * hh].copy_from_slice(
+                        &g[i * p.h_out + s * hh..i * p.h_out + (s + 1) * hh],
+                    );
+                }
+                let (gnum, gden) = normalize_bwd(&go, hh, &hc.den, &hc.o);
+                // probe gradient: this head's slice of the local columns
+                for i in 0..b {
+                    gv[i * p.g_dim + s * hh..i * p.g_dim + (s + 1) * hh]
+                        .copy_from_slice(&gnum[i * hh..(i + 1) * hh]);
+                }
+                // ∇W through the numerator (exact given approximated m)
+                add_into(
+                    &mut dw[s * f * hh..(s + 1) * f * hh],
+                    &ops::matmul_at_b(&hc.m, b, f, &gnum, hh),
+                );
+                // Eq. 7: C_inᵀ G + (C̃ᵀ)_out G̃ on this head's gradient cols
+                let ct_out = ops::gat_score_tile(&hc.e_src, &hc.ecw_dst, m_out_t);
+                let cw_g = ops::slice_cols(cw, p.fp, f + s * hh, f + (s + 1) * hh);
+                let mut gsl = ops::matmul_at_b(&hc.c_in, b, b, &gnum, hh);
+                add_into(&mut gsl, &ops::matmul(&ct_out, b, k, &cw_g, hh));
+                add_into(&mut dh, &ops::matmul_a_bt(&gsl, b, hh, ws, f));
+                // convolution cotangents (numerator + denominator paths)
+                let dm = ops::matmul_a_bt(&gnum, b, hh, ws, f);
+                let mut dc_in = ops::matmul_a_bt(&dm, b, f, xin, b);
+                let mut dc_out = ops::matmul_a_bt(&dm, b, f, &cw_feat, k);
+                add_den_cotangent(&mut dc_in, &mut dc_out, &gden, b, k);
+                // analytic score backward (gat_scores VJP): gs = dc ⊙ score
+                // ⊙ slope/cap gate; scatter onto the e projections
+                let mut de_src = vec![0.0f32; b];
+                let mut de_dst = vec![0.0f32; b];
+                let mut decw_src = vec![0.0f32; k];
+                for i in 0..b {
+                    for j in 0..b {
+                        let sc = hc.c_in[i * b + j];
+                        if sc == 0.0 {
+                            continue;
+                        }
+                        let gt = dc_in[i * b + j]
+                            * sc
+                            * ops::leaky_exp_grad(hc.e_dst[i] + hc.e_src[j]);
+                        de_dst[i] += gt;
+                        de_src[j] += gt;
+                    }
+                    for v in 0..k {
+                        let sc = hc.c_out[i * k + v];
+                        if sc == 0.0 {
+                            continue;
+                        }
+                        let gt = dc_out[i * k + v]
+                            * sc
+                            * ops::leaky_exp_grad(hc.e_dst[i] + hc.ecw_src[v]);
+                        de_dst[i] += gt;
+                        decw_src[v] += gt;
+                    }
+                }
+                // project e-gradients back: batch side and codeword side
+                let mut dproj = vec![0.0f32; b * hh];
+                for i in 0..b {
+                    for t in 0..hh {
+                        dproj[i * hh + t] = de_src[i] * asr[t] + de_dst[i] * ads[t];
+                    }
+                }
+                let mut dcproj = vec![0.0f32; k * hh];
+                for v in 0..k {
+                    for t in 0..hh {
+                        dcproj[v * hh + t] = decw_src[v] * asr[t];
+                    }
+                }
+                for t in 0..hh {
+                    let mut s_src = 0.0f32;
+                    let mut s_dst = 0.0f32;
+                    for i in 0..b {
+                        s_src += de_src[i] * hc.proj[i * hh + t];
+                        s_dst += de_dst[i] * hc.proj[i * hh + t];
+                    }
+                    for v in 0..k {
+                        s_src += decw_src[v] * hc.cproj[v * hh + t];
+                    }
+                    da_src[s * hh + t] += s_src;
+                    da_dst[s * hh + t] += s_dst;
+                }
+                add_into(&mut dh, &ops::matmul_a_bt(&dproj, b, hh, ws, f));
+                add_into(
+                    &mut dw[s * f * hh..(s + 1) * f * hh],
+                    &ops::matmul_at_b(xin, b, f, &dproj, hh),
+                );
+                add_into(
+                    &mut dw[s * f * hh..(s + 1) * f * hh],
+                    &ops::matmul_at_b(&cw_feat, k, f, &dcproj, hh),
+                );
+            }
+
+            if txf {
+                let gc = caches[l].glob.as_ref().unwrap();
+                let ho = p.h_out;
+                let dk = gc.dk;
+                let wq = fin(spec, inputs, &format!("param.l{l}.wq"))?;
+                let wk = fin(spec, inputs, &format!("param.l{l}.wk"))?;
+                let wv = fin(spec, inputs, &format!("param.l{l}.wv"))?;
+                let w_lin = fin(spec, inputs, &format!("param.l{l}.w_lin"))?;
+                let cnt_out = fin(spec, inputs, &format!("l{l}.cnt_out"))?;
+                let scale = 1.0 / (dk as f32).sqrt();
+                let (gnum, gden) = normalize_bwd(&g, ho, &gc.den, &gc.o);
+                // probe gradient: global columns [h, 2h)
+                for i in 0..b {
+                    gv[i * p.g_dim + ho..i * p.g_dim + 2 * ho]
+                        .copy_from_slice(&gnum[i * ho..(i + 1) * ho]);
+                }
+                out.insert(
+                    format!("grad.l{l}.wv"),
+                    Tensor::from_f32(&[f, ho], ops::matmul_at_b(&gc.m, b, f, &gnum, ho)),
+                );
+                // Eq. 7 on the global gradient columns [f+h, f+2h): the
+                // transposed sketch is cnt_out ⊙ h(X̃, X_B)ᵀ
+                let mut ct_out = ops::matmul_a_bt(&gc.kk, b, dk, &gc.qcw, k);
+                for (i, x) in ct_out.iter_mut().enumerate() {
+                    *x = cnt_out[i % k] * ops::exp_capped(scale * *x);
+                }
+                let cw_g = ops::slice_cols(cw, p.fp, f + ho, f + 2 * ho);
+                let mut gsl = ops::matmul_at_b(&gc.c_in, b, b, &gnum, ho);
+                add_into(&mut gsl, &ops::matmul(&ct_out, b, k, &cw_g, ho));
+                add_into(&mut dh, &ops::matmul_a_bt(&gsl, b, ho, wv, f));
+                // convolution cotangents + analytic dot-product score bwd
+                let dm = ops::matmul_a_bt(&gnum, b, ho, wv, f);
+                let mut dc_in = ops::matmul_a_bt(&dm, b, f, xin, b);
+                let mut dc_out = ops::matmul_a_bt(&dm, b, f, &cw_feat, k);
+                add_den_cotangent(&mut dc_in, &mut dc_out, &gden, b, k);
+                // d(raw dot): fold the cap gate and the 1/√dk scale in
+                let mut dt_in = vec![0.0f32; b * b];
+                for (idx, x) in dt_in.iter_mut().enumerate() {
+                    *x = dc_in[idx]
+                        * gc.c_in[idx]
+                        * ops::exp_capped_grad(gc.t_in[idx])
+                        * scale;
+                }
+                let mut dt_out = vec![0.0f32; b * k];
+                for (idx, x) in dt_out.iter_mut().enumerate() {
+                    *x = dc_out[idx]
+                        * gc.c_out[idx]
+                        * ops::exp_capped_grad(gc.t_out[idx])
+                        * scale;
+                }
+                let mut dq = ops::matmul(&dt_in, b, b, &gc.kk, dk);
+                add_into(&mut dq, &ops::matmul(&dt_out, b, k, &gc.kcw, dk));
+                let dkk = ops::matmul_at_b(&dt_in, b, b, &gc.q, dk);
+                let dkcw = ops::matmul_at_b(&dt_out, b, k, &gc.q, dk);
+                out.insert(
+                    format!("grad.l{l}.wq"),
+                    Tensor::from_f32(&[f, dk], ops::matmul_at_b(xin, b, f, &dq, dk)),
+                );
+                let mut dwk = ops::matmul_at_b(xin, b, f, &dkk, dk);
+                add_into(&mut dwk, &ops::matmul_at_b(&cw_feat, k, f, &dkcw, dk));
+                out.insert(format!("grad.l{l}.wk"), Tensor::from_f32(&[f, dk], dwk));
+                add_into(&mut dh, &ops::matmul_a_bt(&dq, b, dk, wq, f));
+                add_into(&mut dh, &ops::matmul_a_bt(&dkk, b, dk, wk, f));
+                // linear branch
+                out.insert(
+                    format!("grad.l{l}.w_lin"),
+                    Tensor::from_f32(&[f, ho], ops::matmul_at_b(xin, b, f, &g, ho)),
+                );
+                add_into(&mut dh, &ops::matmul_a_bt(&g, b, ho, w_lin, f));
+            }
+
+            out.insert(
+                format!("grad.l{l}.w"),
+                Tensor::from_f32(&[heads, f, hh], dw),
+            );
+            out.insert(format!("grad.l{l}.a_src"), Tensor::from_f32(&[heads, hh], da_src));
+            out.insert(format!("grad.l{l}.a_dst"), Tensor::from_f32(&[heads, hh], da_dst));
+            gvec[l] = gv;
+            g = dh;
+        }
+
+        push_assign_outputs(spec, inputs, &xfeat, &gvec, &mut out)?;
         emit(spec, out)
     }
 
     /// Exact edge-list message passing (baseline compute path), with full
-    /// backprop for the train variant.
+    /// backprop for the train variant.  GCN/SAGE aggregate with fixed
+    /// per-edge coefficients; GAT computes per-edge attention in-graph
+    /// (ecoef is edge validity), mirroring `python/compile/edgemp.py`.
     fn run_edge(&self, spec: &ArtifactSpec, inputs: &[Tensor], train: bool) -> Result<Vec<Tensor>> {
         let (nn, _ne) = (spec.nn, spec.ne);
         let sage = self.model.name == "sage";
+        let gat = self.model.name == "gat";
         let x = fin(spec, inputs, "x")?;
         let esrc = iin(spec, inputs, "esrc")?;
         let edst = iin(spec, inputs, "edst")?;
@@ -399,12 +910,14 @@ impl NativeExec {
             .context("edge spec has no logits output")?
             .shape[1];
         let ll = self.model.layers;
-        // per-layer (f_in, h_out)
-        let dims: Vec<(usize, usize)> = (0..ll)
+        // per-layer (f_in, h_out, heads)
+        let dims: Vec<(usize, usize, usize)> = (0..ll)
             .map(|l| {
                 let f = if l == 0 { self.ds.f_in_pad } else { self.model.hidden };
-                let h = if l + 1 == ll { c } else { self.model.hidden };
-                (f, h)
+                let last = l + 1 == ll;
+                let h = if last { c } else { self.model.hidden };
+                let heads = if gat && !last { self.model.heads.max(1) } else { 1 };
+                (f, h, heads)
             })
             .collect();
 
@@ -412,27 +925,69 @@ impl NativeExec {
         let mut xin: Vec<Vec<f32>> = Vec::with_capacity(ll);
         let mut aggbuf: Vec<Vec<f32>> = Vec::with_capacity(ll);
         let mut pre: Vec<Vec<f32>> = Vec::with_capacity(ll);
+        let mut attn: Vec<Vec<EdgeHeadFwd>> = Vec::with_capacity(ll);
         for l in 0..ll {
-            let (f, ho) = dims[l];
-            let agg = scatter_edges(&h, f, nn, esrc, edst, ecoef, false);
+            let (f, ho, heads) = dims[l];
             let bias = fin(spec, inputs, &format!("param.l{l}.bias"))?;
-            let mut y = if sage {
-                let w_self = fin(spec, inputs, &format!("param.l{l}.w_self"))?;
-                let w_nbr = fin(spec, inputs, &format!("param.l{l}.w_nbr"))?;
-                let mut y = ops::matmul(&h, nn, f, w_self, ho);
-                let ynbr = ops::matmul(&agg, nn, f, w_nbr, ho);
-                for (a, v) in y.iter_mut().zip(&ynbr) {
-                    *a += v;
-                }
-                y
-            } else {
+            let mut y;
+            let mut agg = Vec::new();
+            let mut hcs = Vec::new();
+            if gat {
                 let w = fin(spec, inputs, &format!("param.l{l}.w"))?;
-                ops::matmul(&agg, nn, f, w, ho)
-            };
+                let a_src = fin(spec, inputs, &format!("param.l{l}.a_src"))?;
+                let a_dst = fin(spec, inputs, &format!("param.l{l}.a_dst"))?;
+                let hh = ho / heads;
+                y = vec![0.0f32; nn * ho];
+                for s in 0..heads {
+                    let ws = &w[s * f * hh..(s + 1) * f * hh];
+                    let proj = ops::matmul(&h, nn, f, ws, hh);
+                    let e_src = dot_rows(&proj, hh, &a_src[s * hh..(s + 1) * hh]);
+                    let e_dst = dot_rows(&proj, hh, &a_dst[s * hh..(s + 1) * hh]);
+                    let mut num = vec![0.0f32; nn * hh];
+                    let mut den = vec![0.0f32; nn];
+                    for e in 0..esrc.len() {
+                        let cf = ecoef[e];
+                        if cf == 0.0 {
+                            continue; // padding edge
+                        }
+                        let (u, v) = (esrc[e] as usize, edst[e] as usize);
+                        let sc = cf * ops::leaky_exp(e_dst[v] + e_src[u]);
+                        den[v] += sc;
+                        let src = &proj[u * hh..(u + 1) * hh];
+                        let dst = &mut num[v * hh..(v + 1) * hh];
+                        for t in 0..hh {
+                            dst[t] += sc * src[t];
+                        }
+                    }
+                    let mut o = num;
+                    ops::attn_normalize(&mut o, hh, &den);
+                    for i in 0..nn {
+                        y[i * ho + s * hh..i * ho + (s + 1) * hh]
+                            .copy_from_slice(&o[i * hh..(i + 1) * hh]);
+                    }
+                    hcs.push(EdgeHeadFwd { proj, e_src, e_dst, den, o });
+                }
+            } else {
+                agg = scatter_edges(&h, f, nn, esrc, edst, ecoef, false);
+                y = if sage {
+                    let w_self = fin(spec, inputs, &format!("param.l{l}.w_self"))?;
+                    let w_nbr = fin(spec, inputs, &format!("param.l{l}.w_nbr"))?;
+                    let mut y = ops::matmul(&h, nn, f, w_self, ho);
+                    let ynbr = ops::matmul(&agg, nn, f, w_nbr, ho);
+                    for (a, v) in y.iter_mut().zip(&ynbr) {
+                        *a += v;
+                    }
+                    y
+                } else {
+                    let w = fin(spec, inputs, &format!("param.l{l}.w"))?;
+                    ops::matmul(&agg, nn, f, w, ho)
+                };
+            }
             ops::add_bias(&mut y, ho, bias);
             xin.push(std::mem::take(&mut h));
             h = if l + 1 < ll { ops::relu(&y) } else { y.clone() };
             aggbuf.push(agg);
+            attn.push(hcs);
             pre.push(y);
         }
         let logits = h;
@@ -447,7 +1002,7 @@ impl NativeExec {
 
         let mut g = dlogits;
         for l in (0..ll).rev() {
-            let (f, ho) = dims[l];
+            let (f, ho, heads) = dims[l];
             if l + 1 < ll {
                 ops::relu_bwd(&mut g, &pre[l]);
             }
@@ -455,7 +1010,84 @@ impl NativeExec {
                 format!("grad.l{l}.bias"),
                 Tensor::from_f32(&[ho], ops::col_sum(&g, ho)),
             );
-            let dx = if sage {
+            let dx = if gat {
+                let w = fin(spec, inputs, &format!("param.l{l}.w"))?;
+                let a_src = fin(spec, inputs, &format!("param.l{l}.a_src"))?;
+                let a_dst = fin(spec, inputs, &format!("param.l{l}.a_dst"))?;
+                let hh = ho / heads;
+                let mut dh = vec![0.0f32; nn * f];
+                let mut dw = vec![0.0f32; heads * f * hh];
+                let mut da_src = vec![0.0f32; heads * hh];
+                let mut da_dst = vec![0.0f32; heads * hh];
+                for s in 0..heads {
+                    let hc = &attn[l][s];
+                    let ws = &w[s * f * hh..(s + 1) * f * hh];
+                    let asr = &a_src[s * hh..(s + 1) * hh];
+                    let ads = &a_dst[s * hh..(s + 1) * hh];
+                    let mut go = vec![0.0f32; nn * hh];
+                    for i in 0..nn {
+                        go[i * hh..(i + 1) * hh]
+                            .copy_from_slice(&g[i * ho + s * hh..i * ho + (s + 1) * hh]);
+                    }
+                    let (gnum, gden) = normalize_bwd(&go, hh, &hc.den, &hc.o);
+                    let mut dproj = vec![0.0f32; nn * hh];
+                    let mut de_src = vec![0.0f32; nn];
+                    let mut de_dst = vec![0.0f32; nn];
+                    for e in 0..esrc.len() {
+                        let cf = ecoef[e];
+                        if cf == 0.0 {
+                            continue;
+                        }
+                        let (u, v) = (esrc[e] as usize, edst[e] as usize);
+                        let raw = hc.e_dst[v] + hc.e_src[u];
+                        let sc = cf * ops::leaky_exp(raw);
+                        // num[v] += sc·proj[u]; den[v] += sc
+                        let gn = &gnum[v * hh..(v + 1) * hh];
+                        let pu = &hc.proj[u * hh..(u + 1) * hh];
+                        let mut dsc = gden[v];
+                        for t in 0..hh {
+                            dsc += gn[t] * pu[t];
+                        }
+                        let dp = &mut dproj[u * hh..(u + 1) * hh];
+                        for t in 0..hh {
+                            dp[t] += sc * gn[t];
+                        }
+                        let draw = dsc * sc * ops::leaky_exp_grad(raw);
+                        de_dst[v] += draw;
+                        de_src[u] += draw;
+                    }
+                    for i in 0..nn {
+                        for t in 0..hh {
+                            dproj[i * hh + t] += de_src[i] * asr[t] + de_dst[i] * ads[t];
+                        }
+                    }
+                    for t in 0..hh {
+                        let mut s_src = 0.0f32;
+                        let mut s_dst = 0.0f32;
+                        for i in 0..nn {
+                            s_src += de_src[i] * hc.proj[i * hh + t];
+                            s_dst += de_dst[i] * hc.proj[i * hh + t];
+                        }
+                        da_src[s * hh + t] += s_src;
+                        da_dst[s * hh + t] += s_dst;
+                    }
+                    add_into(&mut dh, &ops::matmul_a_bt(&dproj, nn, hh, ws, f));
+                    add_into(
+                        &mut dw[s * f * hh..(s + 1) * f * hh],
+                        &ops::matmul_at_b(&xin[l], nn, f, &dproj, hh),
+                    );
+                }
+                out.insert(format!("grad.l{l}.w"), Tensor::from_f32(&[heads, f, hh], dw));
+                out.insert(
+                    format!("grad.l{l}.a_src"),
+                    Tensor::from_f32(&[heads, hh], da_src),
+                );
+                out.insert(
+                    format!("grad.l{l}.a_dst"),
+                    Tensor::from_f32(&[heads, hh], da_dst),
+                );
+                dh
+            } else if sage {
                 let w_self = fin(spec, inputs, &format!("param.l{l}.w_self"))?;
                 let w_nbr = fin(spec, inputs, &format!("param.l{l}.w_nbr"))?;
                 out.insert(

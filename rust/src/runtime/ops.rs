@@ -204,6 +204,106 @@ pub fn sigmoid(z: f32) -> f32 {
     1.0 / (1.0 + (-z).exp())
 }
 
+// ---------------------------------------------------------------------------
+// Attention-score numerics (GAT / Graph Transformer, paper Table 1 + App. E).
+// Mirrors python/compile/kernels/gat_scores.py: scores are UNNORMALIZED
+// (decoupled row normalization — the denominator is the same attention
+// applied to ones), LeakyReLU-shaped, and capped before the exp so ±1e4
+// logits can never overflow (the Lipschitz control of App. E).
+// ---------------------------------------------------------------------------
+
+/// LeakyReLU slope of the GAT score nonlinearity.
+pub const SLOPE: f32 = 0.2;
+
+/// Cap on the pre-exp score: bounds `exp()` at e⁸ ≈ 2981 (App. E).
+pub const SCORE_CAP: f32 = 8.0;
+
+/// `exp(min(LeakyReLU(t), SCORE_CAP))` — one unnormalized GAT score.
+#[inline]
+pub fn leaky_exp(t: f32) -> f32 {
+    let l = if t >= 0.0 { t } else { SLOPE * t };
+    l.min(SCORE_CAP).exp()
+}
+
+/// `d/dt exp(min(LeakyReLU(t), CAP)) / leaky_exp(t)`: the multiplicative
+/// gradient factor (slope gate × cap gate), matching the analytic VJP of
+/// `gat_scores` (`leaky < CAP` is a strict comparison there too).
+#[inline]
+pub fn leaky_exp_grad(t: f32) -> f32 {
+    let l = if t >= 0.0 { t } else { SLOPE * t };
+    if l < SCORE_CAP {
+        if t >= 0.0 {
+            1.0
+        } else {
+            SLOPE
+        }
+    } else {
+        0.0
+    }
+}
+
+/// `exp(min(t, SCORE_CAP))` — one global dot-product attention score (txf).
+#[inline]
+pub fn exp_capped(t: f32) -> f32 {
+    t.min(SCORE_CAP).exp()
+}
+
+/// Multiplicative gradient factor of [`exp_capped`] (cap gate only).
+#[inline]
+pub fn exp_capped_grad(t: f32) -> f32 {
+    if t < SCORE_CAP {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Dense GAT score tile over a fixed mask (`gat_scores` kernel semantics):
+/// `out[i,v] = mask[i,v] · leaky_exp(e_dst[i] + e_src[v])` for a `(b, m)`
+/// mask.  Serves both the in-batch block (`m = b`, mask = 𝔠 = A+I) and the
+/// out-of-batch block (`m = k`, mask = the M_out count sketches: a codeword
+/// bucket with zero out-of-batch members contributes exactly nothing).
+pub fn gat_score_tile(e_dst: &[f32], e_src: &[f32], mask: &[f32]) -> Vec<f32> {
+    let (b, m) = (e_dst.len(), e_src.len());
+    debug_assert_eq!(mask.len(), b * m);
+    let mut out = vec![0.0f32; b * m];
+    for i in 0..b {
+        let orow = &mut out[i * m..(i + 1) * m];
+        let mrow = &mask[i * m..(i + 1) * m];
+        for v in 0..m {
+            if mrow[v] != 0.0 {
+                orow[v] = mrow[v] * leaky_exp(e_dst[i] + e_src[v]);
+            }
+        }
+    }
+    out
+}
+
+/// Attention-mass floor for the decoupled row normalization:
+/// `exp(-SCORE_CAP)`, the cap's reciprocal.  A destination whose every
+/// score underflows would otherwise divide by ~0 and blow the probe
+/// gradient ∂ℓ/∂num up by ~1/floor — this keeps the normalization
+/// Lipschitz on both sides of the cap (App. E; same constant as
+/// `python/compile/layers.py::DEN_FLOOR`).  An isolated row with zero
+/// attention mass still stays exactly zero.
+pub const DEN_FLOOR: f32 = 3.354_626_2e-4;
+
+/// Row-normalize an unnormalized attention numerator in place:
+/// `num[i, :] /= max(den[i], DEN_FLOOR)`.
+pub fn attn_normalize(num: &mut [f32], h: usize, den: &[f32]) {
+    for (row, &d) in num.chunks_mut(h).zip(den) {
+        let inv = 1.0 / d.max(DEN_FLOOR);
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// Row sums of a `(rows, m)` score tile (the attention denominator).
+pub fn row_sum(x: &[f32], m: usize) -> Vec<f32> {
+    x.chunks(m).map(|row| row.iter().sum()).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,5 +388,111 @@ mod tests {
             let naive = -(y * sigmoid(z).ln() + (1.0 - y) * (1.0 - sigmoid(z)).ln());
             assert!((bce_with_logits(z, y) - naive).abs() < 1e-5);
         }
+    }
+
+    // -----------------------------------------------------------------------
+    // Attention numerics: table-driven edge cases of the gat/txf forward.
+    // -----------------------------------------------------------------------
+
+    #[test]
+    fn attention_score_overflow_is_capped() {
+        // Logits at ±1e4 must stay finite on every score path (App. E cap).
+        let cap = SCORE_CAP.exp();
+        let cases: &[(f32, f32)] = &[
+            (1e4, cap),                    // raw overflow → capped at e⁸
+            (SCORE_CAP, cap),              // exactly at the cap
+            (0.0, 1.0),                    // kink of the LeakyReLU
+            (-1.0, (-SLOPE).exp()),        // negative branch: slope 0.2
+            (-1e4, (SLOPE * -1e4).exp()),  // extreme negative → underflows to 0
+        ];
+        for &(t, want) in cases {
+            let got = leaky_exp(t);
+            assert!(got.is_finite(), "leaky_exp({t}) not finite");
+            assert!(
+                (got - want).abs() <= 1e-4 * want.max(1e-30),
+                "leaky_exp({t}) = {got}, want {want}"
+            );
+            assert!(exp_capped(t).is_finite(), "exp_capped({t}) not finite");
+        }
+        assert_eq!(exp_capped(1e4), cap);
+        // Gradient gates: zero beyond the cap, slope-blended below zero.
+        assert_eq!(leaky_exp_grad(1e4), 0.0);
+        assert_eq!(leaky_exp_grad(SCORE_CAP), 0.0); // strict `<` like the VJP
+        assert_eq!(leaky_exp_grad(1.0), 1.0);
+        assert_eq!(leaky_exp_grad(-1.0), SLOPE);
+        assert_eq!(exp_capped_grad(1e4), 0.0);
+        assert_eq!(exp_capped_grad(0.0), 1.0);
+    }
+
+    #[test]
+    fn score_tile_single_neighbor_and_isolated_rows() {
+        // Three destination rows over a 3-node batch: row 0 attends to its
+        // single neighbor (+ self), row 1 is isolated (self loop only), row
+        // 2 has no mask mass at all (pure padding row).
+        let e_dst = [0.5f32, -0.25, 2.0];
+        let e_src = [0.1f32, 0.3, -0.7];
+        #[rustfmt::skip]
+        let mask = [
+            1.0, 1.0, 0.0,
+            0.0, 1.0, 0.0,
+            0.0, 0.0, 0.0,
+        ];
+        let s = gat_score_tile(&e_dst, &e_src, &mask);
+        // row 0: self + one neighbor
+        assert!((s[0] - leaky_exp(0.6)).abs() < 1e-6);
+        assert!((s[1] - leaky_exp(0.8)).abs() < 1e-6);
+        assert_eq!(s[2], 0.0);
+        // row 1: single (self) entry survives
+        assert!((s[4] - leaky_exp(0.05)).abs() < 1e-6);
+        assert_eq!((s[3], s[5]), (0.0, 0.0));
+        // row 2: fully masked out
+        assert_eq!(&s[6..9], &[0.0, 0.0, 0.0]);
+        // Normalization: the single-neighbor rows become convex weights,
+        // the empty row divides by the floor and stays exactly zero.
+        let den = row_sum(&s, 3);
+        let mut num = s.clone();
+        attn_normalize(&mut num, 3, &den);
+        assert!((num[0] + num[1] - 1.0).abs() < 1e-6);
+        assert!((num[4] - 1.0).abs() < 1e-6);
+        assert_eq!(&num[6..9], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn score_tile_zero_degree_codeword_buckets() {
+        // Out-of-batch block: M_out[i,v] counts out-of-batch in-neighbors in
+        // codeword bucket v.  Empty buckets (count 0) must contribute nothing
+        // even when the codeword projection is extreme.
+        let e_dst = [0.2f32, -1.0];
+        let ecw_src = [1e4f32, -3.0, 0.5]; // bucket 0's projection overflows
+        #[rustfmt::skip]
+        let m_out = [
+            0.0, 2.0, 1.0,  // row 0: bucket 0 empty
+            0.0, 0.0, 0.0,  // row 1: every bucket empty (all nbrs in-batch)
+        ];
+        let s = gat_score_tile(&e_dst, &ecw_src, &m_out);
+        assert_eq!(s[0], 0.0, "empty bucket leaked a message");
+        assert!((s[1] - 2.0 * leaky_exp(-2.8)).abs() < 1e-6);
+        assert!((s[2] - leaky_exp(0.7)).abs() < 1e-6);
+        assert_eq!(&s[3..6], &[0.0, 0.0, 0.0]);
+        assert!(s.iter().all(|x| x.is_finite()));
+        // txf global attention at the same extremes: cnt_out ⊙ exp_capped
+        // stays finite and an empty bucket stays silent.
+        let glob = 0.0f32 * exp_capped(1e4);
+        assert_eq!(glob, 0.0);
+    }
+
+    #[test]
+    fn log_softmax_survives_extreme_logits() {
+        // The loss head downstream of attention must also absorb ±1e4.
+        let x = [1e4f32, -1e4, 0.0, -1e4, 1e4, 0.0];
+        let ls = log_softmax(&x, 3);
+        assert!(ls.iter().all(|v| v.is_finite()));
+        for row in ls.chunks(3) {
+            let s: f32 = row.iter().map(|v| v.exp()).sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+        // the dominant logit owns (almost) all the mass
+        assert!(ls[0].abs() < 1e-3);
+        assert!(ls[4].abs() < 1e-3);
     }
 }

@@ -210,19 +210,51 @@ mod tests {
     }
 
     #[test]
-    fn blocked_matches_scalar_reference() {
-        let mut rng = Rng::new(11);
-        let (b, k, fp) = (257, 33, 12);
-        let v: Vec<f32> = (0..b * fp).map(|_| rng.gauss_f32()).collect();
-        let cww: Vec<f32> = (0..k * fp).map(|_| 0.5 * rng.gauss_f32()).collect();
-        let mean: Vec<f32> = (0..fp).map(|_| 0.2 * rng.gauss_f32()).collect();
-        let var: Vec<f32> = (0..fp).map(|_| 0.5 + rng.f32()).collect();
-        let want = scalar_assign(&v, fp, &mean, &var, &cww, k);
-        let inv = inv_std(&var);
-        let vw = whiten(&v, fp, &mean, &inv);
-        let mut got = vec![0i32; b];
-        assign_blocked(&vw, fp, fp, &cww, k, fp, &mut got);
-        assert_eq!(got, want);
+    fn blocked_matches_scalar_reference_randomized() {
+        // Property (replacing the old fixed-shape parity test): across
+        // randomized (b, k, fp) — including b below ROW_BLOCK (serial tail
+        // path), b larger than several blocks, and k = 1 — the blocked
+        // decomposed-distance assignment agrees with the seed's scalar
+        // whiten-in-the-inner-loop loop.  The two float paths may pick
+        // different winners only on genuine near-ties (distances equal to
+        // within f32 rounding), which the property verifies explicitly.
+        crate::util::prop::check("assign_parity", 30, |rng, _case| {
+            let b = 1 + rng.below(3 * ROW_BLOCK);
+            let k = 1 + rng.below(33);
+            let fp = 1 + rng.below(16);
+            let v: Vec<f32> = (0..b * fp).map(|_| rng.gauss_f32()).collect();
+            let cww: Vec<f32> = (0..k * fp).map(|_| 0.5 * rng.gauss_f32()).collect();
+            let mean: Vec<f32> = (0..fp).map(|_| 0.2 * rng.gauss_f32()).collect();
+            let var: Vec<f32> = (0..fp).map(|_| 0.5 + rng.f32()).collect();
+            let want = scalar_assign(&v, fp, &mean, &var, &cww, k);
+            let inv = inv_std(&var);
+            let vw = whiten(&v, fp, &mean, &inv);
+            let mut got = vec![0i32; b];
+            assign_blocked(&vw, fp, fp, &cww, k, fp, &mut got);
+            let d2 = |i: usize, c: usize| -> f64 {
+                let mut acc = 0.0f64;
+                for d in 0..fp {
+                    let w = ((v[i * fp + d] - mean[d]) / (var[d] + EPS).sqrt()) as f64;
+                    let diff = w - cww[c * fp + d] as f64;
+                    acc += diff * diff;
+                }
+                acc
+            };
+            for i in 0..b {
+                if got[i] == want[i] {
+                    continue;
+                }
+                let (dg, dw) = (d2(i, got[i] as usize), d2(i, want[i] as usize));
+                if (dg - dw).abs() > 1e-5 * dg.max(dw).max(1e-12) {
+                    return Err(format!(
+                        "b={b} k={k} fp={fp} row {i}: blocked chose {} (d²={dg:.9}), \
+                         scalar chose {} (d²={dw:.9}) — not a near-tie",
+                        got[i], want[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -12,6 +12,14 @@ use crate::util::tensor::Tensor;
 
 pub const EPS: f32 = 1e-5;
 
+/// Warm-start prior mass per cluster: small enough that the first real
+/// mini-batches dominate the EMA (codewords become data-driven within ~3
+/// steps instead of lingering near random init for ~1/(1-γ) steps — which
+/// left the learnable-convolution backbones training against noise for
+/// their first epochs), large enough to keep untouched clusters and the
+/// refresh guard well-defined.  Mirrors `compile/vq.py::VqState.PRIOR_MASS`.
+pub const PRIOR_MASS: f32 = 0.01;
+
 /// One product-VQ branch: k codewords over an fp-dim slice of the concat
 /// (feature ‖ gradient) space.
 #[derive(Debug, Clone)]
@@ -35,12 +43,15 @@ impl VqBranch {
         for x in cww.iter_mut() {
             *x = 0.1 * rng.gauss_f32();
         }
+        // sums/counts seeded consistently (cww == sums/counts) at the small
+        // warm-start prior mass, so step one already pulls codewords ~80%
+        // of the way to the batch cluster means.
         VqBranch {
             k,
             fp,
-            sums: cww.clone(),
+            sums: cww.iter().map(|x| x * PRIOR_MASS).collect(),
             cww,
-            counts: vec![1.0; k],
+            counts: vec![PRIOR_MASS; k],
             mean: vec![0.0; fp],
             var: vec![1.0; fp],
         }

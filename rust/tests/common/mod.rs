@@ -1,0 +1,114 @@
+//! Shared helpers for the integration-test binaries (this directory module
+//! is not itself a test target): the deterministic golden-input generator
+//! and the `VQGNN_MODEL` backbone filter driven by the CI test matrix.
+
+#![allow(dead_code)]
+
+use std::path::Path;
+
+use vq_gnn::runtime::manifest::Manifest;
+use vq_gnn::util::rng::Rng;
+use vq_gnn::util::tensor::{DType, Tensor};
+
+/// The builtin registry, even in checkouts that have AOT artifacts.
+pub fn builtin() -> Manifest {
+    Manifest::load_or_builtin(Path::new("/nonexistent-artifacts"))
+}
+
+/// CI backbone matrix filter: `VQGNN_MODEL=gat` (or a comma list) restricts
+/// the model-specific tests to those backbones; unset/empty runs everything.
+pub fn model_enabled(model: &str) -> bool {
+    match std::env::var("VQGNN_MODEL") {
+        Ok(v) if !v.trim().is_empty() => {
+            v.split(',').any(|m| m.trim().eq_ignore_ascii_case(model))
+        }
+        _ => true,
+    }
+}
+
+/// Deterministic well-formed inputs for an artifact spec.  The per-name
+/// generation rules are mirrored verbatim by the golden generator (the
+/// committed |·|-sums are meaningless if either side drifts):
+///
+/// - labels uniform over classes, loss weights 1;
+/// - edge endpoints uniform, 30% of edges live;
+/// - whitening variances in [0.5, 1.5);
+/// - fixed-conv sketches sparse (20% fill) and mildly scaled;
+/// - attention masks 𝔠 = A+I-shaped (15% fill + diagonal), count sketches
+///   nonnegative small integers, global histograms in [0, 24) — shaped like
+///   what the sketch builders emit, so attention denominators stay away
+///   from the mass floor;
+/// - everything else 0.3·gaussian.
+pub fn golden_inputs(man: &Manifest, name: &str, rng: &mut Rng) -> Vec<Tensor> {
+    let spec = man.artifact(name).unwrap();
+    let classes = spec.outputs.iter().find(|t| t.name == "logits").unwrap().shape[1];
+    spec.inputs
+        .iter()
+        .map(|ts| {
+            let n = ts.numel();
+            match (ts.name.as_str(), ts.dtype) {
+                ("y", DType::I32) => Tensor::from_i32(
+                    &ts.shape,
+                    (0..n).map(|_| rng.below(classes) as i32).collect(),
+                ),
+                ("wloss", _) => Tensor::from_f32(&ts.shape, vec![1.0; n]),
+                ("esrc", _) | ("edst", _) => Tensor::from_i32(
+                    &ts.shape,
+                    (0..n).map(|_| rng.below(spec.nn) as i32).collect(),
+                ),
+                ("ecoef", _) => Tensor::from_f32(
+                    &ts.shape,
+                    (0..n).map(|_| if rng.f64() < 0.3 { rng.f32() } else { 0.0 }).collect(),
+                ),
+                (nm, DType::F32) if nm.ends_with(".var") => {
+                    Tensor::from_f32(&ts.shape, (0..n).map(|_| 0.5 + rng.f32()).collect())
+                }
+                (nm, DType::F32) if nm.ends_with(".c_out") || nm.ends_with(".ct_out") => {
+                    Tensor::from_f32(
+                        &ts.shape,
+                        (0..n)
+                            .map(|_| if rng.f64() < 0.2 { 0.5 * rng.f32() } else { 0.0 })
+                            .collect(),
+                    )
+                }
+                (nm, DType::F32) if nm.ends_with(".c_in") => Tensor::from_f32(
+                    &ts.shape,
+                    (0..n).map(|_| 0.15 * rng.gauss_f32()).collect(),
+                ),
+                (nm, DType::F32) if nm.ends_with(".mask_in") => {
+                    let b = ts.shape[0];
+                    let mut m: Vec<f32> = (0..n)
+                        .map(|_| if rng.f64() < 0.15 { 1.0 } else { 0.0 })
+                        .collect();
+                    for i in 0..b {
+                        m[i * b + i] = 1.0;
+                    }
+                    Tensor::from_f32(&ts.shape, m)
+                }
+                (nm, DType::F32) if nm.ends_with(".m_out") || nm.ends_with(".m_out_t") => {
+                    Tensor::from_f32(
+                        &ts.shape,
+                        (0..n)
+                            .map(|_| {
+                                if rng.f64() < 0.3 {
+                                    (1 + rng.below(3)) as f32
+                                } else {
+                                    0.0
+                                }
+                            })
+                            .collect(),
+                    )
+                }
+                (nm, DType::F32) if nm.ends_with(".cnt_out") => Tensor::from_f32(
+                    &ts.shape,
+                    (0..n).map(|_| rng.below(24) as f32).collect(),
+                ),
+                (_, DType::F32) => Tensor::from_f32(
+                    &ts.shape,
+                    (0..n).map(|_| 0.3 * rng.gauss_f32()).collect(),
+                ),
+                (_, DType::I32) => Tensor::from_i32(&ts.shape, vec![0; n]),
+            }
+        })
+        .collect()
+}

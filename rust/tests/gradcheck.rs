@@ -1,0 +1,208 @@
+//! Finite-difference gradient checks for the native interpreter's hand-
+//! derived backward passes — all four backbones (gcn, sage, gat, txf) on
+//! the VQ path and the three edge-list baselines.  This is the reusable
+//! harness that makes every future backbone cheap to add: implement the
+//! forward + VJP, register the artifact, append one line here.
+//!
+//! ## What is (and isn't) checkable by finite differences
+//!
+//! The Eq. 7 custom VJP *adds* the out-of-batch gradient messages — the
+//! transposed sketches riding the gradient half of the codewords — on top
+//! of the true gradient of the computed forward.  Those extra terms enter
+//! ∂ℓ/∂X_B at each layer, so they only perturb the gradients of *lower*
+//! layers.  Two complementary checks follow:
+//!
+//! 1. all-layers, transposed inputs zeroed: with `ct_out` / `m_out_t` = 0
+//!    and (txf) `cnt_out` = 0 the extra terms vanish and every parameter's
+//!    VJP is the true gradient (`cnt_out` = 0 also silences the global
+//!    branch's *forward* out-of-batch block — covered by check 2);
+//! 2. last-layer, full inputs: nothing zeroed, so the out-of-batch forward
+//!    scores (including the `cnt_out`-weighted global block, the codeword
+//!    dot-product paths into wq/wk, and their denominators) are live — the
+//!    last layer's parameter gradients are still exact because no Eq. 7
+//!    extra term sits above them.
+//!
+//! The Eq. 7 extra terms themselves are pinned by the golden tests, whose
+//! values were verified elementwise against the repo's JAX executable spec
+//! under `jax.value_and_grad`.
+//!
+//! ## Numerics
+//!
+//! The interpreter is f32 and the network is piecewise-smooth (ReLU,
+//! LeakyReLU, score caps), so a single step size cannot serve every
+//! parameter tensor: large eps crosses kinks (the FD blends slopes),
+//! small eps amplifies f32 rounding of the loss.  Each tensor therefore
+//! takes a central difference along one random unit direction at several
+//! step sizes and must agree with the analytic directional derivative at
+//! one of them, with the error measured against max(|fd|, |analytic|, 1)
+//! — loss gradients here are O(1), so this is a relative check.  The
+//! tolerances (1e-3 vq / 3e-3 edge, the edge paths sum over 4× more rows
+//! and carry proportionally more f32 noise) hold with ≥5× margin in the
+//! f32 simulation of this exact procedure.
+
+mod common;
+
+use common::{builtin, golden_inputs, model_enabled};
+use vq_gnn::runtime::Runtime;
+use vq_gnn::util::rng::Rng;
+use vq_gnn::util::tensor::Tensor;
+
+const EPS_SET: [f32; 4] = [1e-2, 3e-3, 1e-3, 3e-4];
+
+/// Zero the inputs that only feed the Eq. 7 out-of-batch backward messages.
+fn zero_backward_only_inputs(spec_names: &[String], inputs: &mut [Tensor]) {
+    for (name, t) in spec_names.iter().zip(inputs.iter_mut()) {
+        let backward_only = name.ends_with(".ct_out")
+            || name.ends_with(".m_out_t")
+            || name.ends_with(".cnt_out");
+        if backward_only {
+            for x in t.f.iter_mut() {
+                *x = 0.0;
+            }
+        }
+    }
+}
+
+/// Check 1: every parameter tensor, with the Eq. 7 transposed inputs zeroed.
+fn gradcheck(artifact: &str, seed: u64, tol: f64) {
+    gradcheck_impl(artifact, seed, tol, false);
+}
+
+/// Check 2: the last layer's parameter tensors under the FULL custom VJP
+/// (nothing zeroed) — exercises the out-of-batch forward score paths.
+fn gradcheck_last_layer_full(artifact: &str, seed: u64, tol: f64) {
+    gradcheck_impl(artifact, seed, tol, true);
+}
+
+fn gradcheck_impl(artifact: &str, seed: u64, tol: f64, full_inputs: bool) {
+    let man = builtin();
+    let mut rt = Runtime::native();
+    let art = rt.load(&man, artifact).unwrap();
+    let spec = art.spec.clone();
+    assert_eq!(spec.outputs[0].name, "loss");
+    let names: Vec<String> = spec.inputs.iter().map(|t| t.name.clone()).collect();
+    let mut inputs = golden_inputs(&man, artifact, &mut Rng::new(seed));
+    let prefix = if full_inputs {
+        format!("param.l{}.", spec.plan.len().max(1) - 1)
+    } else {
+        zero_backward_only_inputs(&names, &mut inputs);
+        "param.".to_string()
+    };
+    let base = rt.execute(&art, &inputs).unwrap();
+
+    let pidx: Vec<usize> = (0..names.len()).filter(|&i| names[i].starts_with(&prefix)).collect();
+    assert!(!pidx.is_empty(), "{artifact}: no params match '{prefix}'");
+    for &pi in &pidx {
+        let pname = &names[pi];
+        // One random unit direction per tensor (seeded by the name).
+        let mut drng = Rng::new((seed ^ 0xD1F).wrapping_add(pname.len() as u64));
+        let mut u: Vec<f32> = (0..inputs[pi].numel()).map(|_| drng.gauss_f32()).collect();
+        let norm = u.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt() as f32;
+        for x in u.iter_mut() {
+            *x /= norm;
+        }
+        let gi = spec
+            .output_index(&format!("grad.{}", &pname["param.".len()..]))
+            .unwrap_or_else(|| panic!("{artifact}: no grad output for {pname}"));
+        let an: f64 = base[gi]
+            .f
+            .iter()
+            .zip(&u)
+            .map(|(&g, &d)| g as f64 * d as f64)
+            .sum();
+
+        let saved = inputs[pi].clone();
+        let mut best = f64::INFINITY;
+        let mut best_eps = 0.0f32;
+        for eps in EPS_SET {
+            let perturb = |inputs: &mut [Tensor], sign: f32| {
+                let data: Vec<f32> =
+                    saved.f.iter().zip(&u).map(|(&p, &d)| p + sign * eps * d).collect();
+                inputs[pi] = Tensor::from_f32(&saved.shape, data);
+            };
+            perturb(&mut inputs, 1.0);
+            let lp = rt.execute(&art, &inputs).unwrap()[0].f[0] as f64;
+            perturb(&mut inputs, -1.0);
+            let lm = rt.execute(&art, &inputs).unwrap()[0].f[0] as f64;
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let rel = (fd - an).abs() / fd.abs().max(an.abs()).max(1.0);
+            if rel < best {
+                best = rel;
+                best_eps = eps;
+            }
+            if best < tol {
+                break; // this tensor's VJP is confirmed
+            }
+        }
+        inputs[pi] = saved;
+        assert!(
+            best < tol,
+            "{artifact}/{pname}: finite differences disagree with the analytic \
+             gradient — best rel err {best:.3e} at eps {best_eps:.0e} \
+             (analytic directional derivative {an:+.6e}, tol {tol:.0e})"
+        );
+    }
+}
+
+#[test]
+fn gradcheck_vq_gcn() {
+    if model_enabled("gcn") {
+        gradcheck("vq_train_tiny_sim_gcn", 778, 1e-3);
+    }
+}
+
+#[test]
+fn gradcheck_vq_sage() {
+    if model_enabled("sage") {
+        gradcheck("vq_train_tiny_sim_sage", 778, 1e-3);
+    }
+}
+
+#[test]
+fn gradcheck_vq_gat() {
+    if model_enabled("gat") {
+        gradcheck("vq_train_tiny_sim_gat", 778, 1e-3);
+    }
+}
+
+#[test]
+fn gradcheck_vq_txf() {
+    if model_enabled("txf") {
+        gradcheck("vq_train_tiny_sim_txf", 778, 1e-3);
+    }
+}
+
+#[test]
+fn gradcheck_vq_gat_full_eq7_last_layer() {
+    if model_enabled("gat") {
+        gradcheck_last_layer_full("vq_train_tiny_sim_gat", 778, 1e-3);
+    }
+}
+
+#[test]
+fn gradcheck_vq_txf_full_eq7_last_layer() {
+    if model_enabled("txf") {
+        gradcheck_last_layer_full("vq_train_tiny_sim_txf", 778, 1e-3);
+    }
+}
+
+#[test]
+fn gradcheck_edge_gcn() {
+    if model_enabled("gcn") {
+        gradcheck("edge_train_tiny_sim_gcn_full", 777, 3e-3);
+    }
+}
+
+#[test]
+fn gradcheck_edge_sage() {
+    if model_enabled("sage") {
+        gradcheck("edge_train_tiny_sim_sage_full", 777, 3e-3);
+    }
+}
+
+#[test]
+fn gradcheck_edge_gat() {
+    if model_enabled("gat") {
+        gradcheck("edge_train_tiny_sim_gat_full", 777, 3e-3);
+    }
+}

@@ -48,7 +48,7 @@ fn golden_replay_all_bundles() {
         let art = match rt.load(&man, &name) {
             Ok(a) => a,
             Err(e) => {
-                // e.g. learnable-conv artifacts on the native backend
+                // e.g. an artifact family this backend cannot compile
                 eprintln!("skipping golden {name}: {e:#}");
                 continue;
             }

@@ -1,28 +1,28 @@
 //! Native-backend correctness: kernel parity against the scalar reference
 //! semantics (python/compile/kernels/ref.py + compile/vq.py), golden replay
-//! of the interpreted train step against an autograd-verified transcription,
-//! and a deterministic two-epoch loss-descent run — all with no Python, no
-//! JAX and no `artifacts/` directory.
+//! of the interpreted train step against a spec-verified transcription (all
+//! four backbones + the edge paths), and deterministic loss-descent runs —
+//! all with no Python, no JAX and no `artifacts/` directory.
+//!
+//! Model-specific tests honor the `VQGNN_MODEL` filter (the CI backbone
+//! matrix runs one backbone per leg).
 
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
-use std::path::Path;
+mod common;
+
 use std::rc::Rc;
 
+use common::{builtin, golden_inputs, model_enabled};
+use vq_gnn::coordinator::edge_trainer::{Baseline, EdgeTrainer};
 use vq_gnn::coordinator::vq_trainer::VqTrainer;
 use vq_gnn::datasets::Dataset;
 use vq_gnn::runtime::manifest::Manifest;
 use vq_gnn::runtime::Runtime;
 use vq_gnn::sampler::NodeStrategy;
 use vq_gnn::util::rng::Rng;
-use vq_gnn::util::tensor::{DType, Tensor};
+use vq_gnn::util::tensor::Tensor;
 use vq_gnn::vq::{VqBranch, EPS};
-
-fn builtin() -> Manifest {
-    // Point at a directory with no manifest.json so the builtin registry is
-    // exercised even in checkouts that have AOT artifacts.
-    Manifest::load_or_builtin(Path::new("/nonexistent-artifacts"))
-}
 
 // ---------------------------------------------------------------------------
 // Kernel parity
@@ -80,39 +80,47 @@ fn ref_update(st: &mut RefState, v: &[f32], assign: &[i32], k: usize, fp: usize,
 }
 
 #[test]
-fn update_matches_reference_semantics_within_1e5() {
-    let mut rng = Rng::new(21);
-    let (k, fp, b) = (24usize, 10usize, 160usize);
-    let mut br = VqBranch::init(k, fp, &mut rng);
-    for round in 0..25 {
-        // Re-snapshot each round: the bound is on ONE Alg. 2 update given
-        // identical pre-state (the reference and the kernel then walk the
-        // same trajectory to within the tolerance, round after round).
-        let mut st = RefState {
-            cww: br.cww.clone(),
-            counts: br.counts.clone(),
-            sums: br.sums.clone(),
-            mean: br.mean.clone(),
-            var: br.var.clone(),
-        };
-        let v: Vec<f32> = (0..b * fp).map(|_| 1.5 * rng.gauss_f32() + 0.3).collect();
-        let assign = br.assign_host(&v);
-        br.update(&v, &assign, 0.97, 0.95);
-        ref_update(&mut st, &v, &assign, k, fp, 0.97, 0.95);
-        let chk = |a: &[f32], r: &[f32], what: &str| {
-            for (i, (x, y)) in a.iter().zip(r).enumerate() {
-                assert!(
-                    (x - y).abs() < 1e-5 * y.abs().max(1.0),
-                    "round {round}: {what}[{i}] {x} vs {y}"
-                );
+fn update_matches_reference_semantics_randomized() {
+    // Property (replacing the old fixed-shape parity test): for randomized
+    // (b, k, fp) — including b below the parallel ROW_BLOCK and k = 1 — one
+    // Alg. 2 update from identical pre-state matches the scalar reference
+    // transcription of compile/vq.py within 1e-5 relative, on every piece
+    // of state, across a few consecutive rounds.
+    vq_gnn::util::prop::check("vq_update_parity", 20, |rng, _case| {
+        let b = 1 + rng.below(3 * vq_gnn::vq::kernels::ROW_BLOCK);
+        let k = 1 + rng.below(32);
+        let fp = 1 + rng.below(16);
+        let mut br = VqBranch::init(k, fp, rng);
+        for round in 0..3 {
+            let mut st = RefState {
+                cww: br.cww.clone(),
+                counts: br.counts.clone(),
+                sums: br.sums.clone(),
+                mean: br.mean.clone(),
+                var: br.var.clone(),
+            };
+            let v: Vec<f32> = (0..b * fp).map(|_| 1.5 * rng.gauss_f32() + 0.3).collect();
+            let assign = br.assign_host(&v);
+            br.update(&v, &assign, 0.97, 0.95);
+            ref_update(&mut st, &v, &assign, k, fp, 0.97, 0.95);
+            for (what, got, want) in [
+                ("mean", &br.mean, &st.mean),
+                ("var", &br.var, &st.var),
+                ("counts", &br.counts, &st.counts),
+                ("sums", &br.sums, &st.sums),
+                ("cww", &br.cww, &st.cww),
+            ] {
+                for (i, (x, y)) in got.iter().zip(want.iter()).enumerate() {
+                    if (x - y).abs() >= 1e-5 * y.abs().max(1.0) {
+                        return Err(format!(
+                            "b={b} k={k} fp={fp} round {round}: {what}[{i}] {x} vs {y}"
+                        ));
+                    }
+                }
             }
-        };
-        chk(&br.mean, &st.mean, "mean");
-        chk(&br.var, &st.var, "var");
-        chk(&br.counts, &st.counts, "counts");
-        chk(&br.sums, &st.sums, "sums");
-        chk(&br.cww, &st.cww, "cww");
-    }
+        }
+        Ok(())
+    });
 }
 
 #[test]
@@ -141,61 +149,14 @@ fn assignment_ties_break_identically_to_reference() {
 // Native interpreter: golden replay against the executable python spec
 // ---------------------------------------------------------------------------
 //
-// Inputs are generated from a fixed SplitMix64 stream with per-name rules;
-// the expected per-output |·|-sums were produced by an independent f64
-// transcription of the artifact semantics that was itself verified EXACTLY
-// (to ~1e-16) against torch autograd for every loss head and both fixed-
-// convolution backbones — including the Eq. 7 custom-VJP codeword term,
-// which is an *approximation* of the full-graph gradient and therefore can
-// never be validated by finite differences on the artifact itself.
-
-/// Deterministic well-formed inputs for an artifact spec (the generation
-/// rules are mirrored verbatim by the golden generator).
-fn golden_inputs(man: &Manifest, name: &str, rng: &mut Rng) -> Vec<Tensor> {
-    let spec = man.artifact(name).unwrap();
-    let classes = spec.outputs.iter().find(|t| t.name == "logits").unwrap().shape[1];
-    spec.inputs
-        .iter()
-        .map(|ts| {
-            let n = ts.numel();
-            match (ts.name.as_str(), ts.dtype) {
-                ("y", DType::I32) => Tensor::from_i32(
-                    &ts.shape,
-                    (0..n).map(|_| rng.below(classes) as i32).collect(),
-                ),
-                ("wloss", _) => Tensor::from_f32(&ts.shape, vec![1.0; n]),
-                ("esrc", _) | ("edst", _) => Tensor::from_i32(
-                    &ts.shape,
-                    (0..n).map(|_| rng.below(spec.nn) as i32).collect(),
-                ),
-                ("ecoef", _) => Tensor::from_f32(
-                    &ts.shape,
-                    (0..n).map(|_| if rng.f64() < 0.3 { rng.f32() } else { 0.0 }).collect(),
-                ),
-                (nm, DType::F32) if nm.ends_with(".var") => {
-                    Tensor::from_f32(&ts.shape, (0..n).map(|_| 0.5 + rng.f32()).collect())
-                }
-                (nm, DType::F32) if nm.ends_with(".c_out") || nm.ends_with(".ct_out") => {
-                    Tensor::from_f32(
-                        &ts.shape,
-                        (0..n)
-                            .map(|_| if rng.f64() < 0.2 { 0.5 * rng.f32() } else { 0.0 })
-                            .collect(),
-                    )
-                }
-                (nm, DType::F32) if nm.ends_with(".c_in") => Tensor::from_f32(
-                    &ts.shape,
-                    (0..n).map(|_| 0.15 * rng.gauss_f32()).collect(),
-                ),
-                (_, DType::F32) => Tensor::from_f32(
-                    &ts.shape,
-                    (0..n).map(|_| 0.3 * rng.gauss_f32()).collect(),
-                ),
-                (_, DType::I32) => Tensor::from_i32(&ts.shape, vec![0; n]),
-            }
-        })
-        .collect()
-}
+// Inputs are generated from a fixed SplitMix64 stream with per-name rules
+// (tests/common/mod.rs); the expected per-output |·|-sums were produced by
+// an f64 transcription of the artifact semantics.  For gcn/sage the
+// transcription was verified exactly against torch autograd; for gat/txf
+// and the edge paths every output (including the Eq. 7 custom-VJP codeword
+// term and all attention-parameter gradients) was verified elementwise
+// against the repo's own JAX executable spec (python/compile/model.py /
+// edgemp.py run under jax.value_and_grad) to f32 rounding (~5e-7 rel L2).
 
 fn abs_sum(t: &Tensor) -> f64 {
     t.f.iter().map(|&x| x.abs() as f64).sum()
@@ -266,6 +227,9 @@ fn check_golden(man: &Manifest, artifact: &str, expect: &[(&str, f64)]) {
 
 #[test]
 fn native_vq_train_gcn_matches_golden() {
+    if !model_enabled("gcn") {
+        return;
+    }
     check_golden(
         &builtin(),
         "vq_train_tiny_sim_gcn",
@@ -290,6 +254,9 @@ fn native_vq_train_gcn_matches_golden() {
 
 #[test]
 fn native_vq_train_sage_matches_golden() {
+    if !model_enabled("sage") {
+        return;
+    }
     check_golden(
         &builtin(),
         "vq_train_tiny_sim_sage",
@@ -317,6 +284,9 @@ fn native_vq_train_sage_matches_golden() {
 
 #[test]
 fn native_edge_train_matches_golden() {
+    if !model_enabled("gcn") {
+        return;
+    }
     check_golden(
         &builtin(),
         "edge_train_tiny_sim_gcn_full",
@@ -333,16 +303,121 @@ fn native_edge_train_matches_golden() {
     );
 }
 
+#[test]
+fn native_vq_train_gat_matches_golden() {
+    if !model_enabled("gat") {
+        return;
+    }
+    check_golden(
+        &builtin(),
+        "vq_train_tiny_sim_gat",
+        &[
+            ("loss", 1.432787),
+            ("logits", 82.09287),
+            ("l0.xfeat", 248.8563),
+            ("l0.gvec", 804.4376),
+            ("l1.xfeat", 639.2114),
+            ("l1.gvec", 55.7517),
+            ("l2.xfeat", 861.2833),
+            ("l2.gvec", 0.06601402),
+            ("grad.l0.w", 16397.14),
+            ("grad.l0.a_src", 2032.71),
+            ("grad.l0.a_dst", 516.1588),
+            ("grad.l0.bias", 13268.66),
+            ("grad.l1.w", 2819.003),
+            ("grad.l1.a_src", 173.4468),
+            ("grad.l1.a_dst", 26.88899),
+            ("grad.l1.bias", 307.8307),
+            ("grad.l2.w", 2.755629),
+            ("grad.l2.a_src", 0.07505542),
+            ("grad.l2.a_dst", 0.03376212),
+            ("grad.l2.bias", 0.3237223),
+        ],
+    );
+}
+
+#[test]
+fn native_vq_train_txf_matches_golden() {
+    if !model_enabled("txf") {
+        return;
+    }
+    check_golden(
+        &builtin(),
+        "vq_train_tiny_sim_txf",
+        &[
+            ("loss", 1.902687),
+            ("logits", 294.9183),
+            ("l0.xfeat", 248.8563),
+            ("l0.gvec", 4915.819),
+            ("l1.xfeat", 725.4117),
+            ("l1.gvec", 2929.882),
+            ("l2.xfeat", 1372.478),
+            ("l2.gvec", 0.06715583),
+            ("grad.l0.w", 56212.44),
+            ("grad.l0.a_src", 11263.27),
+            ("grad.l0.a_dst", 1772.617),
+            ("grad.l0.bias", 97161.53),
+            ("grad.l0.wq", 4576.105),
+            ("grad.l0.wk", 4586.834),
+            ("grad.l0.wv", 54429.16),
+            ("grad.l0.w_lin", 119843.0),
+            ("grad.l1.w", 307806.6),
+            ("grad.l1.a_src", 13214.57),
+            ("grad.l1.a_dst", 6412.104),
+            ("grad.l1.bias", 38555.04),
+            ("grad.l1.wq", 44690.75),
+            ("grad.l1.wk", 52595.99),
+            ("grad.l1.wv", 161448.0),
+            ("grad.l1.w_lin", 471023.4),
+            ("grad.l2.w", 4.014812),
+            ("grad.l2.a_src", 0.2996189),
+            ("grad.l2.a_dst", 0.1011776),
+            ("grad.l2.bias", 0.3320785),
+            ("grad.l2.wq", 5.638868),
+            ("grad.l2.wk", 6.623227),
+            ("grad.l2.wv", 2.207232),
+            ("grad.l2.w_lin", 8.093888),
+        ],
+    );
+}
+
+#[test]
+fn native_edge_train_gat_matches_golden() {
+    if !model_enabled("gat") {
+        return;
+    }
+    check_golden(
+        &builtin(),
+        "edge_train_tiny_sim_gat_full",
+        &[
+            ("loss", 1.76483),
+            ("logits", 1201.651),
+            ("grad.l0.w", 2.893782),
+            ("grad.l0.a_src", 0.3509826),
+            ("grad.l0.a_dst", 0.04525009),
+            ("grad.l0.bias", 3.503267),
+            ("grad.l1.w", 23.17907),
+            ("grad.l1.a_src", 0.4619403),
+            ("grad.l1.a_dst", 0.02227038),
+            ("grad.l1.bias", 2.239154),
+            ("grad.l2.w", 8.714226),
+            ("grad.l2.a_src", 0.0529282),
+            ("grad.l2.a_dst", 0.001031094),
+            ("grad.l2.bias", 0.5009941),
+        ],
+    );
+}
+
 // ---------------------------------------------------------------------------
 // End-to-end on the native backend
 // ---------------------------------------------------------------------------
 
-fn epoch_losses(seed: u64, epochs: usize) -> Vec<f32> {
+fn epoch_losses(model: &str, seed: u64, epochs: usize) -> Vec<f32> {
     let man = builtin();
     let mut rt = Runtime::native();
     let ds = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
     let mut tr =
-        VqTrainer::new(&mut rt, &man, ds, "gcn", "", NodeStrategy::Nodes, seed).unwrap();
+        VqTrainer::new(&mut rt, &man, ds, model, "", NodeStrategy::Nodes, seed).unwrap();
     let mut out = Vec::new();
     for _ in 0..epochs {
         let mut acc = 0.0f32;
@@ -359,31 +434,87 @@ fn epoch_losses(seed: u64, epochs: usize) -> Vec<f32> {
 fn two_epoch_loss_descent_is_deterministic() {
     // Satellite requirement: a deterministic 2-epoch VqTrainer loss-descent
     // on the synthetic dataset, native backend only.
-    let a = epoch_losses(1, 2);
+    if !model_enabled("gcn") {
+        return;
+    }
+    let a = epoch_losses("gcn", 1, 2);
     assert!(
         a[1] < a[0],
         "mean loss did not descend over two epochs: {a:?}"
     );
-    let b = epoch_losses(1, 2);
+    let b = epoch_losses("gcn", 1, 2);
     assert_eq!(a, b, "native training is not deterministic");
     for x in &a {
         assert!(x.is_finite());
     }
 }
 
+/// Learnable-convolution mirror of the two-epoch descent: attention
+/// backbones spend their first batches converging the gradient codewords
+/// (γ-EMA warm-up), so the deterministic descent window compares the first
+/// two epoch means against epochs 5–6.  Seeds chosen for fat margins
+/// (~45%+ in the spec-verified simulation of this exact trajectory).
+fn attn_loss_descent(model: &str, seed: u64) {
+    let m = epoch_losses(model, seed, 6);
+    for x in &m {
+        assert!(x.is_finite(), "{model}: non-finite epoch loss {m:?}");
+    }
+    let early = (m[0] + m[1]) / 2.0;
+    let late = (m[4] + m[5]) / 2.0;
+    assert!(
+        late < early,
+        "{model}: mean loss did not descend (epochs 1-2 {early:.4} vs 5-6 {late:.4}): {m:?}"
+    );
+    let again = epoch_losses(model, seed, 6);
+    assert_eq!(m, again, "{model}: native training is not deterministic");
+}
+
 #[test]
-fn native_backend_identifies_itself_and_gates_learnable_convs() {
+fn two_epoch_loss_descent_gat() {
+    if !model_enabled("gat") {
+        return;
+    }
+    attn_loss_descent("gat", 3);
+}
+
+#[test]
+fn two_epoch_loss_descent_txf() {
+    if !model_enabled("txf") {
+        return;
+    }
+    attn_loss_descent("txf", 5);
+}
+
+#[test]
+fn native_backend_supports_all_backbones() {
     let man = builtin();
     let mut rt = Runtime::native();
     assert_eq!(rt.backend_name(), "native");
-    assert!(rt.supports_model("gcn") && rt.supports_model("sage"));
-    assert!(!rt.supports_model("gat") && !rt.supports_model("txf"));
-    let err = match rt.load(&man, "vq_train_tiny_sim_gat") {
-        Ok(_) => panic!("native backend accepted a learnable convolution"),
-        Err(e) => e,
+    for model in ["gcn", "sage", "gat", "txf"] {
+        assert!(rt.supports_model(model), "{model} unsupported");
+    }
+    // The learnable convolutions compile natively now — no pjrt gate left.
+    rt.load(&man, "vq_train_tiny_sim_gat").unwrap();
+    rt.load(&man, "vq_train_tiny_sim_txf").unwrap();
+    rt.load(&man, "edge_train_tiny_sim_gat_full").unwrap();
+}
+
+#[test]
+fn txf_edge_trainer_fails_loudly_with_unsupported_edge_form() {
+    // Satellite: the registry's typed error reaches EdgeTrainer users with
+    // the reason, instead of the artifact silently not existing.
+    if !model_enabled("txf") {
+        return;
+    }
+    let man = builtin();
+    let mut rt = Runtime::native();
+    let ds = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
+    let err = match EdgeTrainer::new(&mut rt, &man, ds, "txf", Baseline::FullGraph, 1) {
+        Ok(_) => panic!("EdgeTrainer accepted the txf backbone"),
+        Err(e) => format!("{e:#}"),
     };
-    let msg = format!("{err:#}");
-    assert!(msg.contains("pjrt"), "error should point at the pjrt feature: {msg}");
+    assert!(err.contains("UnsupportedEdgeForm"), "missing typed error: {err}");
+    assert!(err.contains("no edge-list form"), "missing reason: {err}");
 }
 
 #[test]
