@@ -61,6 +61,8 @@ def artifact_registry() -> list[dict]:
         for m in models:
             add("vq_train", ds_name, m, b=b, k=k)
             add("vq_infer", ds_name, m, b=b, k=k)
+            # Forward-only serving artifact (mirrors runtime/builtin.rs).
+            add("vq_serve", ds_name, m, b=b, k=k)
             if m == "txf":
                 # Global attention has no edge-list form (dense n×n); the
                 # paper's Table 8 evaluates txf under VQ-GNN only.
@@ -146,6 +148,8 @@ def build_fn(art: dict):
         return model.build_vq_train(ds, mo, C.TRAIN, art["b"], art["k"]), mo
     if kind == "vq_infer":
         return model.build_vq_infer(ds, mo, C.TRAIN, art["b"], art["k"]), mo
+    if kind == "vq_serve":
+        return model.build_vq_serve(ds, mo, C.TRAIN, art["b"], art["k"]), mo
     if kind == "edge_train":
         return edgemp.build_edge_train(ds, mo, C.TRAIN, art["nn"], art["ne"]), mo
     if kind == "edge_infer":

@@ -360,6 +360,64 @@ def build_vq_infer(ds: DatasetCfg, model: ModelCfg, tc: TrainCfg,
     return fn, in_specs, out_specs
 
 
+def build_vq_serve(ds: DatasetCfg, model: ModelCfg, tc: TrainCfg,
+                   b: int, k: int):
+    """Forward-only serving step (the `serve` read path).  Mirrors
+    rust/src/runtime/builtin.rs::vq_serve_spec: logits only — no residual
+    outputs, and the transposed (backward-only) sketches drop out of the
+    signature entirely (the serving cache never builds them; they are fed
+    as zeros to the shared forward, which never reads them)."""
+    plans = make_plan(ds, model)
+    pspecs = param_specs(ds, model)
+    c = out_dim(ds, model)
+
+    in_specs = [("xb", (b, ds.f_in_pad), "f32")]
+    for l, p in enumerate(plans):
+        pre = f"l{l}."
+        if model.learnable_conv:
+            in_specs += [
+                (pre + "mask_in", (b, b), "f32"),
+                (pre + "m_out", (b, k), "f32"),
+            ]
+            if model.name == "txf":
+                in_specs += [(pre + "cnt_out", (k,), "f32")]
+        else:
+            in_specs += [
+                (pre + "c_in", (b, b), "f32"),
+                (pre + "c_out", (p.n_br, b, k), "f32"),
+            ]
+        in_specs += [(pre + "cw", (p.n_br, k, p.fp), "f32")]
+    in_specs += [(f"param.{n}", s, "f32") for n, s in pspecs]
+    out_specs = [("logits", (b, c), "f32")]
+    n_layers = model.layers
+
+    def fn(*flat):
+        i = 0
+        xb = flat[i]; i += 1
+        ctxs = []
+        for p in plans:
+            ctx = {}
+            if model.learnable_conv:
+                ctx["mask_in"] = flat[i]; i += 1
+                ctx["m_out"] = flat[i]; i += 1
+                ctx["m_out_t"] = jnp.zeros((b, k), jnp.float32)
+                if model.name == "txf":
+                    ctx["cnt_out"] = flat[i]; i += 1
+            else:
+                ctx["c_in"] = flat[i]; i += 1
+                ctx["c_out"] = flat[i]; i += 1
+                ctx["ct_out"] = jnp.zeros((p.n_br, b, k), jnp.float32)
+            ctx["cw"] = flat[i]; i += 1
+            ctx["gcol"] = (p.f_in, p.g_dim)
+            ctxs.append(ctx)
+        layer_params = unflatten_params(model, n_layers, list(flat[i:]))
+        probes = [jnp.zeros((b, p.g_dim), jnp.float32) for p in plans]
+        outp, _feats = _forward(model, plans, layer_params, ctxs, xb, probes)
+        return (outp,)
+
+    return fn, in_specs, out_specs
+
+
 def build_vq_assign_only(n_br: int, b: int, k: int, fp: int):
     """Standalone assignment artifact (inductive inference: unseen nodes are
     assigned by their *feature* columns only, via the mask input)."""

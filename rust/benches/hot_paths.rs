@@ -1,11 +1,15 @@
 //! Micro-benchmarks of the L3 hot paths (in-tree harness — criterion is
 //! unavailable offline): blocked VQ assignment + EMA update vs the seed's
-//! scalar loops, sketch building, codeword tensor assembly, and a full
-//! native VQ train step.  Results are written to `BENCH_hot_paths.json` so
-//! the perf trajectory accumulates across CI runs.
+//! scalar loops, sketch building, codeword tensor assembly, a full native
+//! VQ train step, and the serving read path (micro-batched inference over
+//! the codebook-backed cache: `serve_qps` / `serve_p50_ms` /
+//! `serve_p99_ms`).  Results are written to `BENCH_hot_paths.json` so the
+//! perf trajectory accumulates across CI runs (`bench_guard` diffs them
+//! against `BENCH_baseline.json`).
 //!
-//!   cargo bench --bench hot_paths              # full run
-//!   cargo bench --bench hot_paths -- --smoke   # CI smoke (short targets)
+//!   cargo bench --bench hot_paths                   # full run
+//!   cargo bench --bench hot_paths -- --smoke        # CI smoke (short targets)
+//!   cargo bench --bench hot_paths -- --smoke --only-serve   # serve job leg
 //!
 //! The headline number is the assignment speedup at k=256, fp=128, n=10k —
 //! the blocked `‖v‖² − 2·v·Cᵀ + ‖c‖²` kernel vs the scalar triple loop that
@@ -100,14 +104,81 @@ fn num(x: f64) -> Json {
     Json::Num(x)
 }
 
+/// Write the report where CI expects it (workspace root, regardless of the
+/// invocation cwd; override with `BENCH_OUT`).
+fn write_report(report: BTreeMap<String, Json>) {
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_paths.json").to_string()
+    });
+    std::fs::write(&out_path, Json::Obj(report).to_string()).expect("write bench json");
+    println!("wrote {out_path}");
+}
+
+/// The serving read path: train briefly, freeze, then push a query burst
+/// through the micro-batching engine.  Emits the acceptance keys
+/// (`serve_qps`, `serve_p50_ms`, `serve_p99_ms`) plus a detail object.
+fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
+    use vq_gnn::serve::{LatencyReport, MicroBatcher, Request, ServingModel};
+
+    let man = Manifest::load_or_builtin(&Manifest::default_dir());
+    let tiny = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
+    let mut rt = Runtime::native();
+    let mut tr =
+        VqTrainer::new(&mut rt, &man, tiny.clone(), "gcn", "", NodeStrategy::Nodes, 1).unwrap();
+    for _ in 0..2 {
+        tr.train_step(&mut rt).unwrap();
+    }
+    let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let b = sm.batch_size();
+
+    // steady-state single micro-batch latency (cache hit path)
+    let mut rq = Rng::new(0x5E57E);
+    let batch: Vec<u32> = (0..b).map(|_| rq.below(tiny.n()) as u32).collect();
+    sm.forward_batch(&mut rt, &batch).unwrap(); // warm
+    let r_fb = bench("serve/forward_batch tiny gcn b=64", if smoke { 0.3 } else { 1.5 }, || {
+        std::hint::black_box(sm.forward_batch(&mut rt, &batch).unwrap());
+    });
+    report.insert("serve_forward_batch_ms".into(), num(r_fb.mean_ns / 1e6));
+
+    // query burst through the engine: 10k requests (2k in smoke mode)
+    let n_req = if smoke { 2_000 } else { 10_000 };
+    let mut eng = MicroBatcher::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..n_req {
+        eng.submit(Request::Node(rq.below(tiny.n()) as u32));
+    }
+    let served = eng.drain(&mut rt, &mut sm).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let lat: Vec<f64> = served.iter().map(|s| s.latency_s).collect();
+    let lr = LatencyReport::from_latencies(&lat, wall);
+    println!("serve/engine tiny gcn: {lr}");
+    report.insert("serve_qps".into(), num(lr.qps));
+    report.insert("serve_p50_ms".into(), num(lr.p50_ms));
+    report.insert("serve_p99_ms".into(), num(lr.p99_ms));
+    let mut s = BTreeMap::new();
+    s.insert("requests".into(), num(n_req as f64));
+    s.insert("batch_b".into(), num(b as f64));
+    s.insert("batches".into(), num(eng.batches_run as f64));
+    s.insert("mean_ms".into(), num(lr.mean_ms));
+    s.insert("cache_bytes".into(), num(sm.cache.memory_bytes() as f64));
+    report.insert("serve".into(), Json::Obj(s));
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke")
         || std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let only_serve = std::env::args().any(|a| a == "--only-serve");
     let t = |full: f64, short: f64| if smoke { short } else { full };
     let mut report: BTreeMap<String, Json> = BTreeMap::new();
     report.insert("bench".into(), Json::Str("hot_paths".into()));
     report.insert("mode".into(), Json::Str(if smoke { "smoke" } else { "full" }.into()));
     report.insert("threads".into(), num(vq_gnn::util::par::max_threads() as f64));
+
+    bench_serve(smoke, &mut report);
+    if only_serve {
+        write_report(report);
+        return;
+    }
 
     // --- VQ assignment: acceptance config k=256, fp=128, n=10k -----------
     let (k, fp, n) = (256usize, 128usize, 10_000usize);
@@ -249,10 +320,5 @@ fn main() {
         report.insert("train_step_arxiv_ms".into(), num(r.mean_ns / 1e6));
     }
 
-    // Default to the workspace root regardless of the invocation cwd.
-    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
-        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_paths.json").to_string()
-    });
-    std::fs::write(&out_path, Json::Obj(report).to_string()).expect("write bench json");
-    println!("wrote {out_path}");
+    write_report(report);
 }

@@ -1,0 +1,122 @@
+//! Bench regression guard: diff a freshly-emitted `BENCH_hot_paths.json`
+//! against the committed `BENCH_baseline.json` and print **non-fatal**
+//! GitHub annotations for large regressions — the start of the
+//! perf-trajectory tracking the ROADMAP asks for.
+//!
+//!   cargo run --release --bin bench_guard -- BENCH_baseline.json BENCH_hot_paths.json
+//!
+//! Rules (keys are matched recursively, joined with '.'):
+//! - `*_ms` (timings, lower is better): warn when current > 1.5× baseline;
+//! - `*_qps` / `*_per_sec` (throughput, higher is better): warn when
+//!   current < baseline / 1.5.
+//!
+//! Always exits 0: bench noise across runners must never break CI — the
+//! annotations are the signal.  A missing/keyless baseline prints a notice
+//! explaining how to arm the guard (copy a CI `BENCH_hot_paths` artifact
+//! to `BENCH_baseline.json`).
+
+use std::collections::BTreeMap;
+
+use vq_gnn::util::json::Json;
+
+const RATIO: f64 = 1.5;
+
+fn collect(prefix: &str, j: &Json, out: &mut BTreeMap<String, f64>) {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let key = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                collect(&key, v, out);
+            }
+        }
+        Json::Num(x) => {
+            out.insert(prefix.to_string(), *x);
+        }
+        _ => {}
+    }
+}
+
+fn load(path: &str) -> Option<BTreeMap<String, f64>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            println!("::warning::bench_guard: {path} is not valid JSON ({e}); skipping");
+            return None;
+        }
+    };
+    let mut out = BTreeMap::new();
+    collect("", &j, &mut out);
+    Some(out)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (base_path, cur_path) = match args.as_slice() {
+        [b, c] => (b.as_str(), c.as_str()),
+        _ => {
+            eprintln!("usage: bench_guard BASELINE.json CURRENT.json");
+            return;
+        }
+    };
+    let Some(base) = load(base_path) else {
+        println!(
+            "::notice::bench_guard: no readable baseline at {base_path} — copy a CI \
+             BENCH_hot_paths artifact to {base_path} to arm the regression guard"
+        );
+        return;
+    };
+    let Some(cur) = load(cur_path) else {
+        println!("::warning::bench_guard: no current bench output at {cur_path}");
+        return;
+    };
+
+    let mut compared = 0usize;
+    let mut regressions = 0usize;
+    for (key, &b) in &base {
+        let Some(&c) = cur.get(key) else { continue };
+        let slower_is_worse = key.ends_with("_ms");
+        let faster_is_better = key.ends_with("_qps") || key.ends_with("_per_sec");
+        if !slower_is_worse && !faster_is_better {
+            continue; // shape/config numbers (n, k, threads, speedups, ...)
+        }
+        compared += 1;
+        if faster_is_better && c <= 0.0 && b > 0.0 {
+            // throughput collapsed to zero — the worst regression must not
+            // be silently dropped just because the ratio is undefined
+            regressions += 1;
+            println!("::warning::bench regression: {key} throughput collapsed ({b:.3} -> {c:.3})");
+            continue;
+        }
+        if b <= 0.0 || c <= 0.0 {
+            println!("::notice::bench_guard: {key} non-positive ({b:.3} -> {c:.3}); no ratio");
+            continue;
+        }
+        let ratio = if slower_is_worse { c / b } else { b / c };
+        let verdict = if ratio > RATIO {
+            regressions += 1;
+            println!(
+                "::warning::bench regression: {key} {} ({b:.3} -> {c:.3}, {ratio:.2}x \
+                 worse than baseline)",
+                if slower_is_worse { "slowed down" } else { "throughput dropped" }
+            );
+            "REGRESSED"
+        } else if ratio < 1.0 / RATIO {
+            "improved"
+        } else {
+            "ok"
+        };
+        println!("  {key:<44} base {b:>12.3}  cur {c:>12.3}  [{verdict}]");
+    }
+    if compared == 0 {
+        println!(
+            "::notice::bench_guard: baseline {base_path} shares no timing/throughput keys \
+             with {cur_path} — refresh it from a CI BENCH_hot_paths artifact"
+        );
+    } else {
+        println!(
+            "bench_guard: {compared} keys compared, {regressions} regression(s) beyond \
+             {RATIO}x (non-fatal)"
+        );
+    }
+}

@@ -15,6 +15,11 @@ use crate::vq::VqModel;
 
 const MAGIC: u32 = 0x56_51_47_31; // "VQG1"
 
+/// Serving-artifact magic: a *frozen* model for the read path — parameters
+/// + raw codewords + assignment tables, without the training-only EMA
+/// state (cluster counts/sums, whitening stats, optimizer moments).
+const SERVE_MAGIC: u32 = 0x56_51_53_31; // "VQS1"
+
 struct Writer<W: Write> {
     w: W,
 }
@@ -170,6 +175,104 @@ pub fn load(path: &Path, artifact: &str, params: &mut [Tensor], vq: &mut VqModel
     Ok(())
 }
 
+/// One frozen layer of a serving artifact: the paper's compact global
+/// context — raw codewords `(n_br, k, fp)` plus the node→codeword table
+/// `(n_br, n)`.  Exactly what the forward-only `vq_serve` path consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingLayer {
+    pub k: usize,
+    pub n: usize,
+    pub n_br: usize,
+    pub fp: usize,
+    /// Raw-space codewords, row-major (n_br, k, fp).
+    pub cw: Vec<f32>,
+    /// Assignment table R, row-major (n_br, n).
+    pub assign: Vec<u32>,
+}
+
+/// Export a frozen model into a serving artifact.  `artifact` is the
+/// `vq_serve_*` artifact name the file is valid for (refused on mismatch
+/// at load, like the training checkpoint).
+pub fn save_serving(
+    path: &Path,
+    artifact: &str,
+    params: &[Tensor],
+    layers: &[ServingLayer],
+) -> Result<()> {
+    let f = std::fs::File::create(path).context("create serving artifact")?;
+    let mut w = Writer { w: std::io::BufWriter::new(f) };
+    w.u32(SERVE_MAGIC)?;
+    w.u32(artifact.len() as u32)?;
+    w.w.write_all(artifact.as_bytes())?;
+    w.u32(params.len() as u32)?;
+    for p in params {
+        w.u32(p.shape.len() as u32)?;
+        for &d in &p.shape {
+            w.u32(d as u32)?;
+        }
+        w.f32s(&p.f)?;
+    }
+    w.u32(layers.len() as u32)?;
+    for l in layers {
+        w.u32(l.k as u32)?;
+        w.u32(l.n as u32)?;
+        w.u32(l.n_br as u32)?;
+        w.u32(l.fp as u32)?;
+        w.f32s(&l.cw)?;
+        w.u32s(&l.assign)?;
+    }
+    Ok(())
+}
+
+/// Load a serving artifact; shape validation against the serve spec is the
+/// caller's job (`serve::ServingModel::load` checks against the manifest).
+pub fn load_serving(path: &Path, artifact: &str) -> Result<(Vec<Tensor>, Vec<ServingLayer>)> {
+    let f = std::fs::File::open(path).context("open serving artifact")?;
+    let mut r = Reader { r: std::io::BufReader::new(f) };
+    if r.u32()? != SERVE_MAGIC {
+        bail!("not a vq-gnn serving artifact");
+    }
+    let alen = r.u32()? as usize;
+    let mut aname = vec![0u8; alen];
+    r.r.read_exact(&mut aname)?;
+    let aname = String::from_utf8(aname)?;
+    if aname != artifact {
+        bail!("serving artifact is for '{aname}', expected '{artifact}'");
+    }
+    let np = r.u32()? as usize;
+    let mut params = Vec::with_capacity(np);
+    for _ in 0..np {
+        let rank = r.u32()? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u32()? as usize);
+        }
+        let data = r.f32s()?;
+        if data.len() != shape.iter().product::<usize>() {
+            bail!("serving param payload mismatch");
+        }
+        params.push(Tensor::from_f32(&shape, data));
+    }
+    let nl = r.u32()? as usize;
+    let mut layers = Vec::with_capacity(nl);
+    for _ in 0..nl {
+        let k = r.u32()? as usize;
+        let n = r.u32()? as usize;
+        let n_br = r.u32()? as usize;
+        let fp = r.u32()? as usize;
+        let cw = r.f32s()?;
+        let assign = r.u32s()?;
+        if cw.len() != n_br * k * fp || assign.len() != n_br * n {
+            bail!("serving layer payload mismatch");
+        }
+        if assign.iter().any(|&a| a as usize >= k) {
+            bail!("serving assignment out of codebook range");
+        }
+        layers.push(ServingLayer { k, n, n_br, fp, cw, assign });
+    }
+    Ok((params, layers))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,6 +327,41 @@ mod tests {
         let mut p3 = vec![Tensor::zeros(&[2, 3])];
         assert!(load(&path, "art_a", &mut p3, &mut vq2).is_err());
         assert!(load(Path::new("/nonexistent/x.ckpt"), "art_a", &mut p2, &mut vq2).is_err());
+    }
+
+    #[test]
+    fn serving_roundtrip_and_validation() {
+        let dir = std::env::temp_dir().join("vqgnn_ckpt_serve_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.bin");
+        let mut rng = Rng::new(3);
+        let params = vec![Tensor::from_f32(&[2, 3], (0..6).map(|_| rng.gauss_f32()).collect())];
+        let layers = vec![ServingLayer {
+            k: 4,
+            n: 10,
+            n_br: 2,
+            fp: 3,
+            cw: (0..2 * 4 * 3).map(|_| rng.gauss_f32()).collect(),
+            assign: (0..2 * 10).map(|_| rng.below(4) as u32).collect(),
+        }];
+        save_serving(&path, "vq_serve_tiny_sim_gcn", &params, &layers).unwrap();
+        let (p2, l2) = load_serving(&path, "vq_serve_tiny_sim_gcn").unwrap();
+        assert_eq!(p2.len(), 1);
+        assert_eq!(p2[0].shape, vec![2, 3]);
+        assert_eq!(p2[0].f, params[0].f);
+        assert_eq!(l2, layers);
+        // wrong artifact name refused
+        assert!(load_serving(&path, "vq_serve_tiny_sim_gat").is_err());
+        // a training checkpoint is not a serving artifact (magic mismatch)
+        let tpath = dir.join("t.ckpt");
+        save(&tpath, "art", &params, &mk_vq(1)).unwrap();
+        assert!(load_serving(&tpath, "art").is_err());
+        // out-of-range assignments are rejected
+        let mut bad = layers.clone();
+        bad[0].assign[0] = 99;
+        let bpath = dir.join("bad.bin");
+        save_serving(&bpath, "a", &params, &bad).unwrap();
+        assert!(load_serving(&bpath, "a").is_err());
     }
 
     #[test]

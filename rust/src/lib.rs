@@ -25,5 +25,6 @@ pub mod graph;
 pub mod harness;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod util;
 pub mod vq;

@@ -1,6 +1,7 @@
 //! vq-gnn CLI — leader entrypoint.
 //!
 //!   vq-gnn train --dataset arxiv_sim --model gcn --method vq --epochs 30
+//!   vq-gnn serve --dataset tiny_sim --model gcn --requests reqs.txt
 //!   vq-gnn exp <table3|table4|table7|table8|fig4|inference|complexity|
 //!               ablation-layers|ablation-codebook|ablation-batch|
 //!               ablation-sampling|all> [--epochs N] [--seeds a,b,c]
@@ -8,6 +9,7 @@
 //! (clap is unavailable offline — hand-rolled parsing, DESIGN.md §7.)
 
 use std::collections::HashMap;
+use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
@@ -68,6 +70,7 @@ fn main() -> Result<()> {
                 t.elapsed().as_secs_f64()
             );
         }
+        Some("serve") => serve_cmd(&flags)?,
         Some("exp") => {
             let which = pos.get(1).context("exp needs a name")?.as_str();
             let mut ctx = exp::Ctx::new(epochs, seeds)?;
@@ -115,11 +118,117 @@ fn main() -> Result<()> {
                 "usage:\n  vq-gnn train --dataset D --model M --method \
                  [vq|full|ns|cluster|saint] [--epochs N] [--seed S] \
                  [--backend native|pjrt]\n  \
+                 vq-gnn serve --dataset D --model M --requests FILE \
+                 [--ckpt SERVING.bin] [--epochs N] [--seed S] [--out FILE]\n  \
                  vq-gnn exp [table3|table4|table7|table8|fig4|inference|\
                  complexity|ablation-*|all] [--epochs N] [--seeds 1,2,3] \
                  [--datasets a,b] [--backend native|pjrt]"
             );
         }
     }
+    Ok(())
+}
+
+/// `vq-gnn serve`: freeze (or load) a model and answer a batch request
+/// file through the micro-batching engine, reporting latency/throughput.
+///
+/// With `--ckpt PATH`: loads the serving artifact if the file exists,
+/// otherwise trains `--epochs` (default 3) epochs, freezes, and exports
+/// the artifact to that path for the next run.
+fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    use vq_gnn::coordinator::vq_trainer::VqTrainer;
+    use vq_gnn::datasets::Dataset;
+    use vq_gnn::runtime::manifest::Manifest;
+    use vq_gnn::runtime::Runtime;
+    use vq_gnn::sampler::NodeStrategy;
+    use vq_gnn::serve::{self, Answer, LatencyReport, MicroBatcher, Request, ServingModel};
+
+    let ds_name = flags.get("dataset").cloned().unwrap_or("tiny_sim".into());
+    let model = flags.get("model").cloned().unwrap_or("gcn".into());
+    let epochs: usize = flags.get("epochs").map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let req_path = flags.get("requests").context("serve needs --requests FILE")?;
+
+    let man = Manifest::load_or_builtin(&Manifest::default_dir());
+    let cfg = man
+        .datasets
+        .get(&ds_name)
+        .with_context(|| format!("unknown dataset '{ds_name}'"))?
+        .clone();
+    let mut rt = Runtime::new()?;
+    // Same generator seed as the experiment harness: the request file's
+    // node ids and any exported serving artifact refer to this graph.
+    let ds = Rc::new(Dataset::generate(&cfg, 42));
+
+    let ckpt = flags.get("ckpt").map(std::path::PathBuf::from);
+    let mut sm = match &ckpt {
+        Some(path) if path.exists() => {
+            eprintln!("loading serving artifact {}", path.display());
+            ServingModel::load(&mut rt, &man, ds.clone(), &model, path)?
+        }
+        _ => {
+            eprintln!("training {ds_name}/{model} for {epochs} epochs, then freezing");
+            let mut tr = VqTrainer::new(
+                &mut rt, &man, ds.clone(), &model, "", NodeStrategy::Nodes, seed,
+            )?;
+            for _ in 0..epochs {
+                tr.epoch(&mut rt)?;
+            }
+            let sm = ServingModel::freeze(&mut rt, &man, &tr)?;
+            if let Some(path) = &ckpt {
+                sm.save(path)?;
+                eprintln!("exported serving artifact to {}", path.display());
+            }
+            sm
+        }
+    };
+
+    let text = std::fs::read_to_string(req_path)
+        .with_context(|| format!("read requests file {req_path}"))?;
+    let reqs = serve::parse_requests(&text, ds.n())?;
+    let mut eng = MicroBatcher::new();
+    for r in &reqs {
+        eng.submit(*r);
+    }
+    let t0 = std::time::Instant::now();
+    let served = eng.drain(&mut rt, &mut sm)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    if let Some(out_path) = flags.get("out") {
+        let link_task = ds.cfg.task == "link";
+        let mut out = String::with_capacity(served.len() * 24);
+        for s in &served {
+            match &s.answer {
+                // on link-task datasets the row is an embedding, not class
+                // scores — argmax of it would be meaningless
+                Answer::Scores(row) if link_task => {
+                    let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+                    out.push_str(&format!("req {} emb_norm {norm:.6}\n", s.id));
+                }
+                Answer::Scores(_) => {
+                    out.push_str(&format!("req {} class {}\n", s.id, s.answer.argmax().unwrap()));
+                }
+                Answer::Link(sc) => out.push_str(&format!("req {} link_score {sc:.6}\n", s.id)),
+            }
+        }
+        std::fs::write(out_path, out)?;
+        eprintln!("wrote {out_path}");
+    }
+
+    let lat: Vec<f64> = served.iter().map(|s| s.latency_s).collect();
+    let report = LatencyReport::from_latencies(&lat, wall);
+    let nodes = reqs.iter().filter(|r| matches!(r, Request::Node(_))).count();
+    println!(
+        "serve {ds_name}/{model} ({} backend, b={}): {report}\n\
+         {} node + {} link queries in {} micro-batches ({} padded rows); \
+         embedding cache resident {:.1} KB",
+        rt.backend_name(),
+        sm.batch_size(),
+        nodes,
+        reqs.len() - nodes,
+        eng.batches_run,
+        eng.padded_rows,
+        sm.cache.memory_bytes() as f64 / 1024.0,
+    );
     Ok(())
 }

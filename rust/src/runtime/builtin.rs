@@ -169,6 +169,63 @@ fn ctx_specs(mo: &ModelCfg, plans: &[LayerPlan], b: usize, k: usize, train: bool
     specs
 }
 
+/// Per-layer context of the forward-only serving path: the read path never
+/// runs Eq. 7, so the transposed sketches (`ct_out` / `m_out_t`) and the
+/// whitening stats drop out of the signature — the serving cache only has
+/// to materialize forward sketches + raw codewords per micro-batch.
+fn serve_ctx_specs(mo: &ModelCfg, plans: &[LayerPlan], b: usize, k: usize) -> Vec<TensorSpec> {
+    let mut specs = Vec::new();
+    for (l, p) in plans.iter().enumerate() {
+        let pre = format!("l{l}.");
+        if learnable(&mo.name) {
+            specs.push(f32_spec(format!("{pre}mask_in"), vec![b, b]));
+            specs.push(f32_spec(format!("{pre}m_out"), vec![b, k]));
+            if mo.name == "txf" {
+                specs.push(f32_spec(format!("{pre}cnt_out"), vec![k]));
+            }
+        } else {
+            specs.push(f32_spec(format!("{pre}c_in"), vec![b, b]));
+            specs.push(f32_spec(format!("{pre}c_out"), vec![p.n_br, b, k]));
+        }
+        specs.push(f32_spec(format!("{pre}cw"), vec![p.n_br, k, p.fp]));
+    }
+    specs
+}
+
+/// The `vq_serve` artifact: same plan as the vq pair, inputs reduced to
+/// `xb` + forward sketches + codewords + params, outputs reduced to
+/// `logits` — the micro-batched inference-serving contract.
+fn vq_serve_spec(
+    ds: &DatasetCfg,
+    mo: &ModelCfg,
+    b: usize,
+    k: usize,
+    suffix: &str,
+) -> ArtifactSpec {
+    let plans = make_plan(ds, mo);
+    let pspecs = param_specs(mo, &plans);
+    let c = out_dim(ds, mo);
+    let name = format!("vq_serve_{}_{}{suffix}", ds.name, mo.name);
+    let mut inputs = vec![f32_spec("xb".into(), vec![b, ds.f_in_pad])];
+    inputs.extend(serve_ctx_specs(mo, &plans, b, k));
+    inputs.extend(pspecs.iter().map(|(n, s)| f32_spec(format!("param.{n}"), s.clone())));
+    ArtifactSpec {
+        file: format!("{name}.hlo.txt"),
+        name,
+        kind: "vq_serve".to_string(),
+        dataset: ds.name.clone(),
+        model: mo.name.clone(),
+        b,
+        k,
+        nn: 0,
+        ne: 0,
+        layers_override: 0,
+        inputs,
+        outputs: vec![f32_spec("logits".into(), vec![b, c])],
+        plan: plans,
+    }
+}
+
 fn task_specs(ds: &DatasetCfg, tc: &TrainCfg, rows: usize, c: usize) -> Vec<TensorSpec> {
     if ds.task == "link" {
         vec![
@@ -379,6 +436,7 @@ pub fn manifest(dir: &Path) -> Manifest {
             let mo = &models[mn];
             add(vq_spec(true, ds, mo, &tc, b, k, "", 0));
             add(vq_spec(false, ds, mo, &tc, b, k, "", 0));
+            add(vq_serve_spec(ds, mo, b, k, ""));
             if mn == "txf" {
                 // Global attention has no edge-list form; the registry makes
                 // this a typed lookup error (ManifestError::UnsupportedEdgeForm)
@@ -528,6 +586,41 @@ mod tests {
             assert_eq!(p.shape, g.shape);
             assert_eq!(g.name, format!("grad.{}", &p.name["param.".len()..]));
         }
+    }
+
+    #[test]
+    fn serve_specs_are_forward_only() {
+        let m = manifest(Path::new("artifacts"));
+        for mn in ["gcn", "sage", "gat", "txf"] {
+            let a = m.artifact(&format!("vq_serve_tiny_sim_{mn}")).unwrap();
+            assert_eq!(a.kind, "vq_serve");
+            assert_eq!((a.b, a.k), (64, 16));
+            // logits is the ONLY output — no residuals, no grads
+            assert_eq!(a.outputs.len(), 1);
+            assert_eq!(a.outputs[0].name, "logits");
+            // no backward-only inputs: transposed sketches, whitening
+            // stats, labels and loss weights all drop out of the read path
+            for t in &a.inputs {
+                for banned in [".ct_out", ".m_out_t", ".mean", ".var", ".cww"] {
+                    assert!(!t.name.ends_with(banned), "{}: {}", a.name, t.name);
+                }
+                assert!(t.name != "y" && t.name != "wloss", "{}", t.name);
+            }
+            // plan matches the train/infer pair (same frozen weights fit)
+            let infer = m.artifact(&format!("vq_infer_tiny_sim_{mn}")).unwrap();
+            assert_eq!(a.plan.len(), infer.plan.len());
+            let pa: Vec<_> =
+                a.inputs.iter().filter(|t| t.name.starts_with("param.")).collect();
+            let pi: Vec<_> =
+                infer.inputs.iter().filter(|t| t.name.starts_with("param.")).collect();
+            assert_eq!(pa.len(), pi.len());
+            for (x, y) in pa.iter().zip(&pi) {
+                assert_eq!((&x.name, &x.shape), (&y.name, &y.shape));
+            }
+        }
+        // serve artifacts exist for every dataset with a vq pair
+        assert!(m.artifacts.contains_key("vq_serve_arxiv_sim_txf"));
+        assert!(m.artifacts.contains_key("vq_serve_collab_sim_sage"));
     }
 
     #[test]

@@ -20,6 +20,9 @@
 //!   flow through both the exact and approximated message paths; the
 //!   transposed sketches carry no cotangent, matching `mp_linear`'s VJP) —
 //!   pinned by `tests/gradcheck.rs` finite differences;
+//! - `vq_serve`: the forward-only serving path of either family — logits
+//!   only, no gradient buffers, no residual outputs, and no transposed
+//!   sketches in the signature (the serving cache never builds them);
 //! - `edge_train` / `edge_infer`: exact edge-list message passing with full
 //!   backprop (the four sampling baselines), including per-edge GAT
 //!   attention;
@@ -62,7 +65,7 @@ impl Backend for NativeBackend {
             .with_context(|| format!("native: unknown model '{}'", spec.model))?
             .clone();
         match spec.kind.as_str() {
-            "vq_train" | "vq_infer" => {
+            "vq_train" | "vq_infer" | "vq_serve" => {
                 if !self.supports_model(&spec.model) {
                     bail!("native: unknown model '{}' (artifact {})", spec.model, spec.name);
                 }
@@ -89,14 +92,28 @@ pub struct NativeExec {
     model: ModelCfg,
 }
 
+/// Execution mode of the VQ paths.  `Train` runs the full Eq. 7 backward;
+/// `Infer` is forward-only but still emits the per-layer `xfeat` residuals
+/// (the inductive bootstrap consumes them); `Serve` is the read path — no
+/// gradient buffers, no residual outputs, logits only (and the artifact
+/// signature drops the transposed sketches, which only the backward reads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Train,
+    Infer,
+    Serve,
+}
+
 impl Executable for NativeExec {
     fn run(&self, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let learnable = matches!(self.model.name.as_str(), "gat" | "txf");
         match spec.kind.as_str() {
-            "vq_train" if learnable => self.run_vq_attn(spec, inputs, true),
-            "vq_infer" if learnable => self.run_vq_attn(spec, inputs, false),
-            "vq_train" => self.run_vq(spec, inputs, true),
-            "vq_infer" => self.run_vq(spec, inputs, false),
+            "vq_train" if learnable => self.run_vq_attn(spec, inputs, Mode::Train),
+            "vq_infer" if learnable => self.run_vq_attn(spec, inputs, Mode::Infer),
+            "vq_serve" if learnable => self.run_vq_attn(spec, inputs, Mode::Serve),
+            "vq_train" => self.run_vq(spec, inputs, Mode::Train),
+            "vq_infer" => self.run_vq(spec, inputs, Mode::Infer),
+            "vq_serve" => self.run_vq(spec, inputs, Mode::Serve),
             "edge_train" => self.run_edge(spec, inputs, true),
             "edge_infer" => self.run_edge(spec, inputs, false),
             "vq_assign" => self.run_vq_assign(spec, inputs),
@@ -383,7 +400,8 @@ fn push_assign_outputs(
 
 impl NativeExec {
     /// Fixed-convolution VQ-GNN step (Eq. 6/7 + Alg. 2 FINDNEAREST).
-    fn run_vq(&self, spec: &ArtifactSpec, inputs: &[Tensor], train: bool) -> Result<Vec<Tensor>> {
+    fn run_vq(&self, spec: &ArtifactSpec, inputs: &[Tensor], mode: Mode) -> Result<Vec<Tensor>> {
+        let train = mode == Mode::Train;
         let plans: &[LayerPlan] = &spec.plan;
         let ll = plans.len();
         let (b, k) = (spec.b, spec.k);
@@ -432,11 +450,13 @@ impl NativeExec {
         let mut out: HashMap<String, Tensor> = HashMap::new();
         out.insert("logits".into(), Tensor::from_f32(&[b, c], logits.clone()));
         if !train {
-            for (l, p) in plans.iter().enumerate() {
-                out.insert(
-                    format!("l{l}.xfeat"),
-                    Tensor::from_f32(&[b, p.f_in], xfeat[l].clone()),
-                );
+            if mode == Mode::Infer {
+                for (l, p) in plans.iter().enumerate() {
+                    out.insert(
+                        format!("l{l}.xfeat"),
+                        Tensor::from_f32(&[b, p.f_in], xfeat[l].clone()),
+                    );
+                }
             }
             return emit(spec, out);
         }
@@ -546,8 +566,9 @@ impl NativeExec {
         &self,
         spec: &ArtifactSpec,
         inputs: &[Tensor],
-        train: bool,
+        mode: Mode,
     ) -> Result<Vec<Tensor>> {
+        let train = mode == Mode::Train;
         let plans: &[LayerPlan] = &spec.plan;
         let ll = plans.len();
         let (b, k) = (spec.b, spec.k);
@@ -631,17 +652,12 @@ impl NativeExec {
                 for x in t_in.iter_mut() {
                     *x *= scale;
                 }
-                let c_in: Vec<f32> = t_in.iter().map(|&t| ops::exp_capped(t)).collect();
+                let c_in = ops::exp_capped_tile(&t_in);
                 let mut t_out = ops::matmul_a_bt(&q, b, dk, &kcw, k);
                 for x in t_out.iter_mut() {
                     *x *= scale;
                 }
-                let mut c_out = vec![0.0f32; b * k];
-                for i in 0..b {
-                    for v in 0..k {
-                        c_out[i * k + v] = cnt_out[v] * ops::exp_capped(t_out[i * k + v]);
-                    }
-                }
+                let c_out = ops::col_weighted_exp_tile(&t_out, k, cnt_out, 1.0);
                 let mut m = ops::matmul(&c_in, b, b, &h, f);
                 add_into(&mut m, &ops::matmul(&c_out, b, k, &cw_feat, f));
                 let mut o = ops::matmul(&m, b, f, wv, p.h_out);
@@ -666,11 +682,13 @@ impl NativeExec {
         let mut out: HashMap<String, Tensor> = HashMap::new();
         out.insert("logits".into(), Tensor::from_f32(&[b, c], logits.clone()));
         if !train {
-            for (l, p) in plans.iter().enumerate() {
-                out.insert(
-                    format!("l{l}.xfeat"),
-                    Tensor::from_f32(&[b, p.f_in], xfeat[l].clone()),
-                );
+            if mode == Mode::Infer {
+                for (l, p) in plans.iter().enumerate() {
+                    out.insert(
+                        format!("l{l}.xfeat"),
+                        Tensor::from_f32(&[b, p.f_in], xfeat[l].clone()),
+                    );
+                }
             }
             return emit(spec, out);
         }
@@ -828,10 +846,12 @@ impl NativeExec {
                 );
                 // Eq. 7 on the global gradient columns [f+h, f+2h): the
                 // transposed sketch is cnt_out ⊙ h(X̃, X_B)ᵀ
-                let mut ct_out = ops::matmul_a_bt(&gc.kk, b, dk, &gc.qcw, k);
-                for (i, x) in ct_out.iter_mut().enumerate() {
-                    *x = cnt_out[i % k] * ops::exp_capped(scale * *x);
-                }
+                let ct_out = ops::col_weighted_exp_tile(
+                    &ops::matmul_a_bt(&gc.kk, b, dk, &gc.qcw, k),
+                    k,
+                    cnt_out,
+                    scale,
+                );
                 let cw_g = ops::slice_cols(cw, p.fp, f + ho, f + 2 * ho);
                 let mut gsl = ops::matmul_at_b(&gc.c_in, b, b, &gnum, ho);
                 add_into(&mut gsl, &ops::matmul(&ct_out, b, k, &cw_g, ho));
@@ -943,22 +963,11 @@ impl NativeExec {
                     let proj = ops::matmul(&h, nn, f, ws, hh);
                     let e_src = dot_rows(&proj, hh, &a_src[s * hh..(s + 1) * hh]);
                     let e_dst = dot_rows(&proj, hh, &a_dst[s * hh..(s + 1) * hh]);
-                    let mut num = vec![0.0f32; nn * hh];
-                    let mut den = vec![0.0f32; nn];
-                    for e in 0..esrc.len() {
-                        let cf = ecoef[e];
-                        if cf == 0.0 {
-                            continue; // padding edge
-                        }
-                        let (u, v) = (esrc[e] as usize, edst[e] as usize);
-                        let sc = cf * ops::leaky_exp(e_dst[v] + e_src[u]);
-                        den[v] += sc;
-                        let src = &proj[u * hh..(u + 1) * hh];
-                        let dst = &mut num[v * hh..(v + 1) * hh];
-                        for t in 0..hh {
-                            dst[t] += sc * src[t];
-                        }
-                    }
+                    // per-edge scatter, blocked over destination rows
+                    // (bit-identical to the serial loop — see ops tests)
+                    let (num, den) = ops::edge_attn_scatter(
+                        &proj, hh, nn, esrc, edst, ecoef, &e_src, &e_dst,
+                    );
                     let mut o = num;
                     ops::attn_normalize(&mut o, hh, &den);
                     for i in 0..nn {

@@ -258,12 +258,45 @@ pub fn exp_capped_grad(t: f32) -> f32 {
     }
 }
 
+/// Below this many tile elements the exp-heavy score kernels run serially.
+/// An `exp` costs ~20 multiply-accumulates, so the dispatch break-even
+/// arrives much earlier than the matmuls' [`PAR_THRESHOLD`].
+const EXP_PAR_THRESHOLD: usize = 1 << 13;
+
 /// Dense GAT score tile over a fixed mask (`gat_scores` kernel semantics):
 /// `out[i,v] = mask[i,v] · leaky_exp(e_dst[i] + e_src[v])` for a `(b, m)`
 /// mask.  Serves both the in-batch block (`m = b`, mask = 𝔠 = A+I) and the
 /// out-of-batch block (`m = k`, mask = the M_out count sketches: a codeword
 /// bucket with zero out-of-batch members contributes exactly nothing).
+/// Rows are independent, so the tile blocks over `util::par` exactly like
+/// the matmuls — bit-identical to [`gat_score_tile_serial`] at any thread
+/// count.
 pub fn gat_score_tile(e_dst: &[f32], e_src: &[f32], mask: &[f32]) -> Vec<f32> {
+    let (b, m) = (e_dst.len(), e_src.len());
+    debug_assert_eq!(mask.len(), b * m);
+    let mut out = vec![0.0f32; b * m];
+    let body = |r0: usize, chunk: &mut [f32]| {
+        for (rr, orow) in chunk.chunks_mut(m).enumerate() {
+            let i = r0 + rr;
+            let mrow = &mask[i * m..(i + 1) * m];
+            for v in 0..m {
+                if mrow[v] != 0.0 {
+                    orow[v] = mrow[v] * leaky_exp(e_dst[i] + e_src[v]);
+                }
+            }
+        }
+    };
+    if b * m < EXP_PAR_THRESHOLD {
+        body(0, &mut out);
+    } else {
+        par::par_chunks_mut(&mut out, ROW_BLOCK * m, |ci, chunk| body(ci * ROW_BLOCK, chunk));
+    }
+    out
+}
+
+/// Serial reference of [`gat_score_tile`] (the pre-parallel loop, kept
+/// verbatim as the parity baseline for tests and benches).
+pub fn gat_score_tile_serial(e_dst: &[f32], e_src: &[f32], mask: &[f32]) -> Vec<f32> {
     let (b, m) = (e_dst.len(), e_src.len());
     debug_assert_eq!(mask.len(), b * m);
     let mut out = vec![0.0f32; b * m];
@@ -277,6 +310,154 @@ pub fn gat_score_tile(e_dst: &[f32], e_src: &[f32], mask: &[f32]) -> Vec<f32> {
         }
     }
     out
+}
+
+/// Elementwise `exp_capped` over a score tile (txf global attention,
+/// 𝔠 = all-ones), blocked over `util::par` above the exp threshold.
+/// Purely elementwise, so parallel == serial bitwise.
+pub fn exp_capped_tile(t: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; t.len()];
+    let body = |o0: usize, chunk: &mut [f32]| {
+        for (j, x) in chunk.iter_mut().enumerate() {
+            *x = exp_capped(t[o0 + j]);
+        }
+    };
+    if t.len() < EXP_PAR_THRESHOLD {
+        body(0, &mut out);
+    } else {
+        let chunk = ROW_BLOCK * 64;
+        par::par_chunks_mut(&mut out, chunk, |ci, c| body(ci * chunk, c));
+    }
+    out
+}
+
+/// Column-weighted capped-exp tile: `out[i,v] = w[v] · exp_capped(scale ·
+/// t[i,v])` for a `(rows, k)` tile — the txf out-of-batch score block
+/// (`w = cnt_out`, the bucket populations: an empty bucket contributes
+/// exactly nothing).  Blocked over rows like [`gat_score_tile`].
+pub fn col_weighted_exp_tile(t: &[f32], k: usize, w: &[f32], scale: f32) -> Vec<f32> {
+    debug_assert_eq!(w.len(), k);
+    debug_assert_eq!(t.len() % k, 0);
+    let mut out = vec![0.0f32; t.len()];
+    let body = |r0: usize, chunk: &mut [f32]| {
+        for (rr, orow) in chunk.chunks_mut(k).enumerate() {
+            let trow = &t[(r0 + rr) * k..(r0 + rr + 1) * k];
+            for v in 0..k {
+                orow[v] = if w[v] != 0.0 {
+                    w[v] * exp_capped(scale * trow[v])
+                } else {
+                    0.0
+                };
+            }
+        }
+    };
+    if t.len() < EXP_PAR_THRESHOLD {
+        body(0, &mut out);
+    } else {
+        par::par_chunks_mut(&mut out, ROW_BLOCK * k, |ci, chunk| body(ci * ROW_BLOCK, chunk));
+    }
+    out
+}
+
+/// Per-edge GAT attention scatter (forward): for every live edge `u → v`,
+/// `sc = ecoef[e] · leaky_exp(e_dst[v] + e_src[u])`, accumulating
+/// `num[v] += sc · proj[u]` and `den[v] += sc`.  Parallelized like the VQ
+/// kernels: edges are bucketed by destination row block (one serial O(E)
+/// pass), then blocks of destination rows are processed concurrently —
+/// each thread owns disjoint `num`/`den` rows, and contributions within a
+/// destination keep their original edge order, so the result is
+/// bit-identical to [`edge_attn_scatter_serial`] at any thread count.
+pub fn edge_attn_scatter(
+    proj: &[f32],
+    hh: usize,
+    nn: usize,
+    esrc: &[i32],
+    edst: &[i32],
+    ecoef: &[f32],
+    e_src: &[f32],
+    e_dst: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    if esrc.len() * hh < PAR_THRESHOLD {
+        return edge_attn_scatter_serial(proj, hh, nn, esrc, edst, ecoef, e_src, e_dst);
+    }
+    edge_attn_scatter_blocked(proj, hh, nn, esrc, edst, ecoef, e_src, e_dst)
+}
+
+/// Serial reference of the per-edge scatter (the pre-parallel loop,
+/// parity baseline for tests and the fallback below the threshold).
+pub fn edge_attn_scatter_serial(
+    proj: &[f32],
+    hh: usize,
+    nn: usize,
+    esrc: &[i32],
+    edst: &[i32],
+    ecoef: &[f32],
+    e_src: &[f32],
+    e_dst: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut num = vec![0.0f32; nn * hh];
+    let mut den = vec![0.0f32; nn];
+    for e in 0..esrc.len() {
+        let cf = ecoef[e];
+        if cf == 0.0 {
+            continue; // padding edge
+        }
+        let (u, v) = (esrc[e] as usize, edst[e] as usize);
+        let sc = cf * leaky_exp(e_dst[v] + e_src[u]);
+        den[v] += sc;
+        let src = &proj[u * hh..(u + 1) * hh];
+        let dst = &mut num[v * hh..(v + 1) * hh];
+        for t in 0..hh {
+            dst[t] += sc * src[t];
+        }
+    }
+    (num, den)
+}
+
+/// The blocked-parallel body of [`edge_attn_scatter`] (public so the
+/// parity tests can force it below the size threshold).
+pub fn edge_attn_scatter_blocked(
+    proj: &[f32],
+    hh: usize,
+    nn: usize,
+    esrc: &[i32],
+    edst: &[i32],
+    ecoef: &[f32],
+    e_src: &[f32],
+    e_dst: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let n_blocks = (nn + ROW_BLOCK - 1) / ROW_BLOCK;
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); n_blocks.max(1)];
+    for e in 0..esrc.len() {
+        if ecoef[e] != 0.0 {
+            buckets[edst[e] as usize / ROW_BLOCK].push(e as u32);
+        }
+    }
+    // num and den fused row-wise ([num_0..num_hh, den]) so one
+    // par_chunks_mut owns both accumulators of a destination row.
+    let w = hh + 1;
+    let mut numden = vec![0.0f32; nn * w];
+    par::par_chunks_mut(&mut numden, ROW_BLOCK * w, |ci, chunk| {
+        let base = ci * ROW_BLOCK;
+        for &e in &buckets[ci] {
+            let e = e as usize;
+            let (u, v) = (esrc[e] as usize, edst[e] as usize);
+            let sc = ecoef[e] * leaky_exp(e_dst[v] + e_src[u]);
+            let row = &mut chunk[(v - base) * w..(v - base + 1) * w];
+            let src = &proj[u * hh..(u + 1) * hh];
+            for t in 0..hh {
+                row[t] += sc * src[t];
+            }
+            row[hh] += sc;
+        }
+    });
+    let mut num = vec![0.0f32; nn * hh];
+    let mut den = vec![0.0f32; nn];
+    for v in 0..nn {
+        num[v * hh..(v + 1) * hh].copy_from_slice(&numden[v * w..v * w + hh]);
+        den[v] = numden[v * w + hh];
+    }
+    (num, den)
 }
 
 /// Attention-mass floor for the decoupled row normalization:
@@ -479,6 +660,74 @@ mod tests {
         // stays finite and an empty bucket stays silent.
         let glob = 0.0f32 * exp_capped(1e4);
         assert_eq!(glob, 0.0);
+    }
+
+    #[test]
+    fn score_tile_parallel_matches_serial_bitwise() {
+        // Above and below the dispatch threshold, the blocked tile must be
+        // bit-identical to the serial reference (ROADMAP parity promise).
+        let mut rng = crate::util::rng::Rng::new(21);
+        for &(b, m) in &[(7usize, 5usize), (96, 96), (130, 40)] {
+            let e_dst: Vec<f32> = (0..b).map(|_| rng.gauss_f32()).collect();
+            let e_src: Vec<f32> = (0..m).map(|_| rng.gauss_f32()).collect();
+            let mask: Vec<f32> = (0..b * m)
+                .map(|_| if rng.f64() < 0.2 { (1 + rng.below(3)) as f32 } else { 0.0 })
+                .collect();
+            let got = gat_score_tile(&e_dst, &e_src, &mask);
+            let want = gat_score_tile_serial(&e_dst, &e_src, &mask);
+            assert_eq!(got, want, "b={b} m={m}");
+        }
+    }
+
+    #[test]
+    fn exp_tiles_match_scalar_reference_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(22);
+        let k = 24;
+        let rows = 400; // rows*k > EXP_PAR_THRESHOLD → parallel path
+        let t: Vec<f32> = (0..rows * k).map(|_| 4.0 * rng.gauss_f32()).collect();
+        let w: Vec<f32> = (0..k)
+            .map(|_| if rng.f64() < 0.3 { 0.0 } else { rng.below(20) as f32 })
+            .collect();
+        let got = exp_capped_tile(&t);
+        for (g, &x) in got.iter().zip(&t) {
+            assert_eq!(*g, exp_capped(x));
+        }
+        let scale = 0.25f32;
+        let got = col_weighted_exp_tile(&t, k, &w, scale);
+        for i in 0..rows {
+            for v in 0..k {
+                assert_eq!(got[i * k + v], w[v] * exp_capped(scale * t[i * k + v]));
+            }
+        }
+    }
+
+    #[test]
+    fn edge_scatter_parallel_matches_serial_bitwise() {
+        // The bucketed scatter preserves per-destination edge order, so it
+        // must agree with the serial loop exactly — including padding
+        // edges (coef 0) and destinations with no edges at all.
+        let mut rng = crate::util::rng::Rng::new(23);
+        for &(nn, ne, hh) in &[(50usize, 300usize, 8usize), (333, 4000, 16), (64, 0, 4)] {
+            let proj: Vec<f32> = (0..nn * hh).map(|_| rng.gauss_f32()).collect();
+            let e_src: Vec<f32> = (0..nn).map(|_| rng.gauss_f32()).collect();
+            let e_dst: Vec<f32> = (0..nn).map(|_| rng.gauss_f32()).collect();
+            let esrc: Vec<i32> = (0..ne).map(|_| rng.below(nn) as i32).collect();
+            let edst: Vec<i32> = (0..ne).map(|_| rng.below(nn) as i32).collect();
+            let ecoef: Vec<f32> = (0..ne)
+                .map(|_| if rng.f64() < 0.25 { 0.0 } else { rng.f32() })
+                .collect();
+            let (ns, ds) =
+                edge_attn_scatter_serial(&proj, hh, nn, &esrc, &edst, &ecoef, &e_src, &e_dst);
+            let (nb, db) =
+                edge_attn_scatter_blocked(&proj, hh, nn, &esrc, &edst, &ecoef, &e_src, &e_dst);
+            assert_eq!(ns, nb, "num nn={nn} ne={ne}");
+            assert_eq!(ds, db, "den nn={nn} ne={ne}");
+            // and the dispatching wrapper agrees with both
+            let (nw, dw) =
+                edge_attn_scatter(&proj, hh, nn, &esrc, &edst, &ecoef, &e_src, &e_dst);
+            assert_eq!(nw, ns);
+            assert_eq!(dw, ds);
+        }
     }
 
     #[test]

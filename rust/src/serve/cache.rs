@@ -1,0 +1,270 @@
+//! Codebook-backed embedding cache — the serving-side realization of the
+//! paper's "compact low-rank" global context.  At load time the cache
+//! freezes, per layer, the node→codeword assignment table R (read straight
+//! out of `vq::LayerVq`) and the raw-space codewords (the inverse-whitened
+//! Ṽ̄, materialized ONCE instead of per batch as the trainers do).  A query
+//! batch then only materializes features for its own nodes plus forward
+//! sketches against k codewords — no neighbor explosion, no full-graph
+//! forward, and no transposed (backward) sketches at all.
+//!
+//! Memory model: `Σ_l n_br·n × 4` assignment bytes + `Σ_l n_br·k·fp × 4`
+//! codeword bytes (reported by [`EmbeddingCache::memory_bytes`]).
+
+use crate::coordinator::checkpoint::ServingLayer;
+use crate::graph::{Conv, Graph};
+use crate::runtime::manifest::LayerPlan;
+use crate::util::tensor::Tensor;
+use crate::vq::sketch::SketchScratch;
+use crate::vq::VqModel;
+
+/// One layer's frozen VQ state, forward-only.
+pub struct LayerCache {
+    pub plan: LayerPlan,
+    pub k: usize,
+    pub n: usize,
+    /// Assignment table R, row-major (n_br, n): R_j[node] ∈ [0, k).
+    pub assign: Vec<u32>,
+    /// Raw-space codewords (n_br, k, fp), precomputed at load time.
+    pub cw: Tensor,
+    /// Branch-0 cluster populations over ALL nodes, precomputed at load:
+    /// `cnt_out` per batch is this histogram minus the batch's members —
+    /// O(b + k) per query batch instead of an O(n) sweep.
+    global_hist: Vec<f32>,
+}
+
+impl LayerCache {
+    /// Assemble one frozen layer, precomputing the codeword histogram.
+    fn new(plan: LayerPlan, k: usize, n: usize, assign: Vec<u32>, cw: Tensor) -> LayerCache {
+        let mut global_hist = vec![0.0f32; k];
+        for u in 0..n {
+            global_hist[assign[u] as usize] += 1.0;
+        }
+        LayerCache { plan, k, n, assign, cw, global_hist }
+    }
+
+    /// Forward fixed-convolution sketches for a query batch: `(C_in,
+    /// C̃_out)` — the exact intra-batch block plus the codeword-merged
+    /// out-of-batch block.  Mirrors `vq::sketch::build_fixed` minus the
+    /// transposed (Eq. 7) side, accumulating in the same arc order so the
+    /// tensors are bit-identical to the trainer's.
+    pub fn build_fixed_fwd(
+        &self,
+        graph: &Graph,
+        conv: Conv,
+        batch: &[u32],
+        scratch: &mut SketchScratch,
+    ) -> (Tensor, Tensor) {
+        let b = batch.len();
+        let (nb, k, n) = (self.plan.n_br, self.k, self.n);
+        let mut c_in = vec![0.0f32; b * b];
+        let mut c_out = vec![0.0f32; nb * b * k];
+        scratch.mark(batch);
+        for (i, &gi) in batch.iter().enumerate() {
+            let gi = gi as usize;
+            for &u in graph.in_neighbors(gi) {
+                let coef = graph.coef(conv, u as usize, gi);
+                let p = scratch.pos_of(u as usize);
+                if p >= 0 {
+                    c_in[i * b + p as usize] += coef;
+                } else {
+                    for j in 0..nb {
+                        let v = self.assign[j * n + u as usize] as usize;
+                        c_out[(j * b + i) * k + v] += coef;
+                    }
+                }
+            }
+            if conv.with_self_loops() {
+                c_in[i * b + i] += graph.coef(conv, gi, gi);
+            }
+        }
+        scratch.unmark(batch);
+        (
+            Tensor::from_f32(&[b, b], c_in),
+            Tensor::from_f32(&[nb, b, k], c_out),
+        )
+    }
+
+    /// Forward learnable-convolution count sketches: `(mask_in, M_out)` —
+    /// 𝔠 = A+I over the batch block, out-of-batch in-neighbors counted per
+    /// codeword bucket.  Mirrors `vq::sketch::build_learnable` minus M_outᵀ.
+    pub fn build_learnable_fwd(
+        &self,
+        graph: &Graph,
+        batch: &[u32],
+        scratch: &mut SketchScratch,
+    ) -> (Tensor, Tensor) {
+        let b = batch.len();
+        let k = self.k;
+        debug_assert_eq!(self.plan.n_br, 1, "learnable convs use a single branch");
+        let mut mask_in = vec![0.0f32; b * b];
+        let mut m_out = vec![0.0f32; b * k];
+        scratch.mark(batch);
+        for (i, &gi) in batch.iter().enumerate() {
+            let gi = gi as usize;
+            mask_in[i * b + i] = 1.0;
+            for &u in graph.in_neighbors(gi) {
+                let p = scratch.pos_of(u as usize);
+                if p >= 0 {
+                    mask_in[i * b + p as usize] = 1.0;
+                } else {
+                    let v = self.assign[u as usize] as usize;
+                    m_out[i * k + v] += 1.0;
+                }
+            }
+        }
+        scratch.unmark(batch);
+        (
+            Tensor::from_f32(&[b, b], mask_in),
+            Tensor::from_f32(&[b, k], m_out),
+        )
+    }
+
+    /// Global out-of-batch cluster histogram (txf global attention):
+    /// `cnt_out[v] = |{u ∉ batch : R[u] = v}|`.  Computed as the frozen
+    /// all-node histogram minus the batch's distinct members — counts are
+    /// small integers, exact in f32, so the result is bit-identical to
+    /// `vq::sketch::build_cnt_out`'s O(n) counting sweep.
+    pub fn build_cnt_fwd(&self, batch: &[u32], scratch: &mut SketchScratch) -> Tensor {
+        let mut cnt = self.global_hist.clone();
+        scratch.mark(batch);
+        for (i, &g) in batch.iter().enumerate() {
+            // mark() keeps the LAST occurrence's position: decrement each
+            // distinct node exactly once, duplicates included
+            if scratch.pos_of(g as usize) == i as i32 {
+                cnt[self.assign[g as usize] as usize] -= 1.0;
+            }
+        }
+        scratch.unmark(batch);
+        Tensor::from_f32(&[self.k], cnt)
+    }
+}
+
+/// All layers' frozen VQ state for one serving model.
+pub struct EmbeddingCache {
+    pub layers: Vec<LayerCache>,
+}
+
+impl EmbeddingCache {
+    /// Freeze a trained `VqModel`: copy the assignment tables and
+    /// materialize the raw codeword tensors once.
+    pub fn from_vq(vq: &VqModel) -> EmbeddingCache {
+        EmbeddingCache {
+            layers: vq
+                .layers
+                .iter()
+                .map(|l| {
+                    LayerCache::new(l.plan.clone(), l.k, l.n, l.assign.clone(), l.cw_tensor())
+                })
+                .collect(),
+        }
+    }
+
+    /// Rebuild from a serving artifact's layers + the serve spec's plans.
+    pub fn from_serving_layers(plans: &[LayerPlan], layers: Vec<ServingLayer>) -> EmbeddingCache {
+        EmbeddingCache {
+            layers: plans
+                .iter()
+                .zip(layers)
+                .map(|(p, l)| {
+                    let cw = Tensor::from_f32(&[l.n_br, l.k, l.fp], l.cw);
+                    LayerCache::new(p.clone(), l.k, l.n, l.assign, cw)
+                })
+                .collect(),
+        }
+    }
+
+    /// Export back into serving-artifact layers.
+    pub fn to_serving_layers(&self) -> Vec<ServingLayer> {
+        self.layers
+            .iter()
+            .map(|l| ServingLayer {
+                k: l.k,
+                n: l.n,
+                n_br: l.plan.n_br,
+                fp: l.plan.fp,
+                cw: l.cw.f.clone(),
+                assign: l.assign.clone(),
+            })
+            .collect()
+    }
+
+    /// Resident bytes: n × L assignment words + codebooks (the README's
+    /// cache memory model).
+    pub fn memory_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| 4 * (l.assign.len() as u64 + l.cw.numel() as u64))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::vq::LayerVq;
+
+    fn setup(n: usize, seed: u64, nb: usize) -> (Graph, LayerVq) {
+        let mut rng = Rng::new(seed);
+        let mut edges = Vec::new();
+        for _ in 0..n * 3 {
+            edges.push((rng.below(n) as u32, rng.below(n) as u32));
+        }
+        let g = Graph::from_undirected(n, &edges);
+        let plan = LayerPlan {
+            f_in: 8, h_out: 4, g_dim: 4, n_br: nb, fp: 12 / nb, cf: 12, heads: 1,
+        };
+        let lv = LayerVq::init(&plan, 5, n, &mut rng);
+        (g, lv)
+    }
+
+    fn freeze_one(lv: &LayerVq) -> LayerCache {
+        LayerCache::new(lv.plan.clone(), lv.k, lv.n, lv.assign.clone(), lv.cw_tensor())
+    }
+
+    #[test]
+    fn forward_sketches_match_trainer_builders_bitwise() {
+        use crate::vq::sketch::{build_cnt_out, build_fixed, build_learnable};
+        let (g, lv) = setup(40, 31, 2);
+        let cache = freeze_one(&lv);
+        let batch: Vec<u32> = vec![2, 9, 17, 33, 39, 9]; // includes a duplicate
+        let mut s1 = SketchScratch::new(g.n);
+        let mut s2 = SketchScratch::new(g.n);
+        let (ci_t, co_t, _) = build_fixed(&g, Conv::GcnSym, &batch, &lv, &mut s1);
+        let (ci_c, co_c) = cache.build_fixed_fwd(&g, Conv::GcnSym, &batch, &mut s2);
+        assert_eq!(ci_t.f, ci_c.f);
+        assert_eq!(co_t.f, co_c.f);
+
+        let (g, mut lv) = setup(30, 37, 1);
+        lv.plan.n_br = 1;
+        let cache = freeze_one(&lv);
+        let batch: Vec<u32> = vec![1, 4, 4, 28];
+        let mut s1 = SketchScratch::new(g.n);
+        let mut s2 = SketchScratch::new(g.n);
+        let (mi_t, mo_t, _) = build_learnable(&g, &batch, &lv, &mut s1);
+        let (mi_c, mo_c) = cache.build_learnable_fwd(&g, &batch, &mut s2);
+        assert_eq!(mi_t.f, mi_c.f);
+        assert_eq!(mo_t.f, mo_c.f);
+        let cnt_t = build_cnt_out(&batch, &lv, &mut s1);
+        let cnt_c = cache.build_cnt_fwd(&batch, &mut s2);
+        assert_eq!(cnt_t.f, cnt_c.f);
+    }
+
+    #[test]
+    fn serving_layer_roundtrip_preserves_cache() {
+        let (_, lv) = setup(25, 41, 2);
+        let cache = EmbeddingCache {
+            layers: vec![freeze_one(&lv)],
+        };
+        let plans = vec![lv.plan.clone()];
+        let exported = cache.to_serving_layers();
+        let back = EmbeddingCache::from_serving_layers(&plans, exported);
+        assert_eq!(cache.layers[0].assign, back.layers[0].assign);
+        assert_eq!(cache.layers[0].cw.f, back.layers[0].cw.f);
+        assert_eq!(cache.memory_bytes(), back.memory_bytes());
+        assert_eq!(
+            cache.memory_bytes(),
+            4 * (2 * 25 + 2 * 5 * 6) as u64 // assignments + codewords
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! `serve` — the micro-batched inference-serving subsystem (the repo's
+//! first end-to-end read path).
+//!
+//! The paper's core inference claim is that VQ compresses all out-of-batch
+//! context into a small codebook, so answering a query never touches the
+//! full graph.  This module realizes that as four pieces:
+//!
+//! - [`cache::EmbeddingCache`] — per-layer codeword assignments for ALL
+//!   nodes plus raw codebooks, frozen at load time (n × L assignment words
+//!   + codebooks resident; nothing else);
+//! - [`model::ServingModel`] — an immutable model (params + cache) bound
+//!   to the forward-only `vq_serve_*` artifact, built by freezing a
+//!   trainer or loading a `checkpoint::save_serving` artifact;
+//! - [`engine::MicroBatcher`] — the request queue that coalesces queries
+//!   into fixed-size micro-batches (padding the tail) and scatters results
+//!   back per request;
+//! - [`report::LatencyReport`] — p50/p99/qps accounting for the CLI and
+//!   the bench harness.
+//!
+//! Driven by `vq-gnn serve --dataset D --model M --requests FILE`.
+
+pub mod cache;
+pub mod engine;
+pub mod model;
+pub mod report;
+
+pub use cache::EmbeddingCache;
+pub use engine::{MicroBatcher, Served};
+pub use model::ServingModel;
+pub use report::LatencyReport;
+
+use anyhow::{bail, Result};
+
+/// One serving query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Request {
+    /// Node classification / embedding lookup for one node id.
+    Node(u32),
+    /// Link prediction: dot-product score of the two endpoints' outputs.
+    Link(u32, u32),
+}
+
+/// One serving answer (same order as the [`Request`] variants).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Answer {
+    /// Per-class scores (or the embedding row for link-task datasets).
+    Scores(Vec<f32>),
+    Link(f32),
+}
+
+impl Answer {
+    /// Highest-scoring class index of a `Scores` answer.
+    pub fn argmax(&self) -> Option<usize> {
+        match self {
+            Answer::Scores(s) => s
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i),
+            Answer::Link(_) => None,
+        }
+    }
+}
+
+/// Parse a batch request file: one query per line — `<id>` or `node <id>`
+/// for classification, `link <u> <v>` for link scores; `#` comments and
+/// blank lines ignored.  Node ids are validated against `n`.
+pub fn parse_requests(text: &str, n: usize) -> Result<Vec<Request>> {
+    let mut out = Vec::new();
+    let node = |tok: &str, lno: usize| -> Result<u32> {
+        let v: u32 = tok
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {lno}: bad node id '{tok}'"))?;
+        if v as usize >= n {
+            bail!("line {lno}: node {v} out of range (n={n})");
+        }
+        Ok(v)
+    };
+    for (i, line) in text.lines().enumerate() {
+        let lno = i + 1;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks.as_slice() {
+            [id] => out.push(Request::Node(node(id, lno)?)),
+            ["node", id] => out.push(Request::Node(node(id, lno)?)),
+            ["link", u, v] => out.push(Request::Link(node(u, lno)?, node(v, lno)?)),
+            _ => bail!("line {lno}: expected '<id>' | 'node <id>' | 'link <u> <v>'"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_file_grammar() {
+        let text = "# header\n3\nnode 7\n\nlink 1 2\n  # indented comment\n0\n";
+        let reqs = parse_requests(text, 10).unwrap();
+        assert_eq!(
+            reqs,
+            vec![
+                Request::Node(3),
+                Request::Node(7),
+                Request::Link(1, 2),
+                Request::Node(0)
+            ]
+        );
+        assert!(parse_requests("99", 10).is_err(), "out of range");
+        assert!(parse_requests("link 1", 10).is_err(), "arity");
+        assert!(parse_requests("frob 1", 10).is_err(), "unknown verb");
+        assert!(parse_requests("node x", 10).is_err(), "non-numeric");
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(Answer::Scores(vec![0.1, 0.9, 0.3]).argmax(), Some(1));
+        assert_eq!(Answer::Link(0.5).argmax(), None);
+    }
+}

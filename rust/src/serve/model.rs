@@ -1,0 +1,294 @@
+//! An immutable, frozen model for the read path.  Built either by freezing
+//! a live `VqTrainer` (training process hands off to serving) or by loading
+//! a serving artifact exported by `coordinator::checkpoint::save_serving`
+//! (inference-only process).  Executes the forward-only `vq_serve_*`
+//! artifact on whatever backend the `Runtime` selected — no loss head, no
+//! gradient buffers, no residual outputs.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint;
+use crate::coordinator::gather_features;
+use crate::coordinator::vq_trainer::VqTrainer;
+use crate::datasets::Dataset;
+use crate::graph::Conv;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{Artifact, Runtime};
+use crate::serve::cache::EmbeddingCache;
+use crate::util::tensor::Tensor;
+use crate::vq::sketch::SketchScratch;
+
+pub struct ServingModel {
+    pub art: Rc<Artifact>,
+    pub ds: Rc<Dataset>,
+    pub model_name: String,
+    pub params: Vec<Tensor>,
+    pub cache: EmbeddingCache,
+    scratch: SketchScratch,
+    /// Prebuilt input list in spec order.  Constant slots (params,
+    /// codebooks) are filled ONCE here; only the batch-dependent slots are
+    /// overwritten per micro-batch — the read path never re-copies frozen
+    /// weights.
+    inputs: Vec<Tensor>,
+    /// `(input index, kind)` of every batch-dependent slot, in spec order.
+    dynamic: Vec<(usize, DynSlot)>,
+}
+
+/// Batch-dependent input slots of the serve artifact.
+#[derive(Debug, Clone, Copy)]
+enum DynSlot {
+    Xb,
+    CIn(usize),
+    COut(usize),
+    MaskIn(usize),
+    MOut(usize),
+    CntOut(usize),
+}
+
+fn serve_artifact_name(ds: &str, model: &str) -> String {
+    format!("vq_serve_{ds}_{model}")
+}
+
+/// Fill the constant input slots (params + raw codebooks) and index the
+/// dynamic ones.  Placeholder zeros keep every slot shape/dtype-correct;
+/// each dynamic slot is overwritten on every `forward_batch`.
+fn build_input_template(
+    spec: &crate::runtime::manifest::ArtifactSpec,
+    params: &[Tensor],
+    cache: &EmbeddingCache,
+) -> Result<(Vec<Tensor>, Vec<(usize, DynSlot)>)> {
+    let mut inputs = Vec::with_capacity(spec.inputs.len());
+    let mut dynamic = Vec::new();
+    let mut pi = 0usize;
+    for (idx, ts) in spec.inputs.iter().enumerate() {
+        let name = ts.name.as_str();
+        if name == "xb" {
+            dynamic.push((idx, DynSlot::Xb));
+            inputs.push(Tensor::zeros(&ts.shape));
+        } else if name.starts_with("param.") {
+            inputs.push(params[pi].clone());
+            pi += 1;
+        } else if let Some((lstr, field)) = name.split_once('.') {
+            let l: usize = lstr[1..].parse().context("layer index")?;
+            let slot = match field {
+                "c_in" => Some(DynSlot::CIn(l)),
+                "c_out" => Some(DynSlot::COut(l)),
+                "mask_in" => Some(DynSlot::MaskIn(l)),
+                "m_out" => Some(DynSlot::MOut(l)),
+                "cnt_out" => Some(DynSlot::CntOut(l)),
+                "cw" => None,
+                other => bail!("unknown serve ctx field {other}"),
+            };
+            match slot {
+                Some(kind) => {
+                    dynamic.push((idx, kind));
+                    inputs.push(Tensor::zeros(&ts.shape));
+                }
+                None => inputs.push(cache.layers[l].cw.clone()),
+            }
+        } else {
+            bail!("unknown serve input {name}");
+        }
+    }
+    Ok((inputs, dynamic))
+}
+
+impl ServingModel {
+    /// Freeze a trained `VqTrainer` into an immutable serving model: clone
+    /// the parameters, snapshot the VQ state into the embedding cache, and
+    /// compile the forward-only serve artifact.
+    pub fn freeze(rt: &mut Runtime, man: &Manifest, tr: &VqTrainer) -> Result<ServingModel> {
+        let name = serve_artifact_name(&tr.ds.cfg.name, &tr.model_name);
+        let art = rt.load(man, &name)?;
+        // Refuse shape-incompatible trainers up front (ablation-suffix
+        // trainers — "_l2", "_k64", ... — have no serve artifact; without
+        // this check the mismatch surfaces as an index panic or a cryptic
+        // execute-time shape error).
+        let spec = &art.spec;
+        let pspecs: Vec<_> =
+            spec.inputs.iter().filter(|t| t.name.starts_with("param.")).collect();
+        if tr.params.len() != pspecs.len() {
+            bail!(
+                "cannot freeze '{}' into '{name}': trainer has {} params, serve spec \
+                 wants {} (ablation-suffix trainers have no serving artifact)",
+                tr.train_art.spec.name,
+                tr.params.len(),
+                pspecs.len()
+            );
+        }
+        for (p, s) in tr.params.iter().zip(&pspecs) {
+            if p.shape != s.shape {
+                bail!(
+                    "cannot freeze '{}' into '{name}': param '{}' is {:?}, serve spec \
+                     wants {:?} (ablation-suffix trainers have no serving artifact)",
+                    tr.train_art.spec.name,
+                    s.name,
+                    p.shape,
+                    s.shape
+                );
+            }
+        }
+        if tr.vq.layers.len() != spec.plan.len()
+            || tr.vq.layers.iter().any(|l| l.k != spec.k)
+        {
+            bail!(
+                "cannot freeze '{}' into '{name}': VQ state ({} layers, k={}) does not \
+                 fit the serve plan ({} layers, k={})",
+                tr.train_art.spec.name,
+                tr.vq.layers.len(),
+                tr.vq.layers.first().map(|l| l.k).unwrap_or(0),
+                spec.plan.len(),
+                spec.k
+            );
+        }
+        let params = tr.params.clone();
+        let cache = EmbeddingCache::from_vq(&tr.vq);
+        let (inputs, dynamic) = build_input_template(spec, &params, &cache)?;
+        Ok(ServingModel {
+            art,
+            ds: tr.ds.clone(),
+            model_name: tr.model_name.clone(),
+            params,
+            cache,
+            scratch: SketchScratch::new(tr.ds.n()),
+            inputs,
+            dynamic,
+        })
+    }
+
+    /// Export this model as a serving artifact (loadable by [`Self::load`]
+    /// in a process that never trained anything).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        checkpoint::save_serving(
+            path,
+            &self.art.spec.name,
+            &self.params,
+            &self.cache.to_serving_layers(),
+        )
+    }
+
+    /// Load a serving artifact for `(dataset, model)` and validate every
+    /// payload shape against the manifest's serve spec.
+    pub fn load(
+        rt: &mut Runtime,
+        man: &Manifest,
+        ds: Rc<Dataset>,
+        model_name: &str,
+        path: &Path,
+    ) -> Result<ServingModel> {
+        let name = serve_artifact_name(&ds.cfg.name, model_name);
+        let art = rt.load(man, &name)?;
+        let (params, layers) = checkpoint::load_serving(path, &name)?;
+        let spec = &art.spec;
+        let pspecs: Vec<_> =
+            spec.inputs.iter().filter(|t| t.name.starts_with("param.")).collect();
+        if params.len() != pspecs.len() {
+            bail!("serving artifact has {} params, spec wants {}", params.len(), pspecs.len());
+        }
+        for (p, s) in params.iter().zip(&pspecs) {
+            if p.shape != s.shape {
+                bail!("serving param '{}' shape {:?}, spec wants {:?}", s.name, p.shape, s.shape);
+            }
+        }
+        if layers.len() != spec.plan.len() {
+            bail!("serving artifact has {} layers, spec wants {}", layers.len(), spec.plan.len());
+        }
+        for (l, p) in layers.iter().zip(&spec.plan) {
+            if l.k != spec.k || l.n != ds.n() || l.n_br != p.n_br || l.fp != p.fp {
+                bail!(
+                    "serving layer shape (k={}, n={}, n_br={}, fp={}) does not fit \
+                     spec (k={}, n={}, n_br={}, fp={})",
+                    l.k, l.n, l.n_br, l.fp, spec.k, ds.n(), p.n_br, p.fp
+                );
+            }
+        }
+        let cache = EmbeddingCache::from_serving_layers(&spec.plan, layers);
+        let (inputs, dynamic) = build_input_template(spec, &params, &cache)?;
+        let scratch = SketchScratch::new(ds.n());
+        Ok(ServingModel {
+            art,
+            ds,
+            model_name: model_name.to_string(),
+            params,
+            cache,
+            scratch,
+            inputs,
+            dynamic,
+        })
+    }
+
+    /// Fixed micro-batch width of the compiled serve artifact.
+    pub fn batch_size(&self) -> usize {
+        self.art.spec.b
+    }
+
+    /// Output row width: class scores for node tasks, embedding dim for
+    /// link tasks.
+    pub fn out_dim(&self) -> usize {
+        self.art.spec.outputs[0].shape[1]
+    }
+
+    fn conv(&self) -> Conv {
+        match self.model_name.as_str() {
+            "gcn" => Conv::GcnSym,
+            "sage" => Conv::SageMean,
+            other => panic!("fixed conv requested for learnable model {other}"),
+        }
+    }
+
+    /// One forward-only micro-batch: `batch` must be exactly `batch_size()`
+    /// node ids (the engine pads); returns row-major `(b, out_dim)` scores.
+    /// Only the batch-dependent input slots are rebuilt — the frozen
+    /// weights and codebooks ride the prebuilt template untouched.
+    pub fn forward_batch(&mut self, rt: &mut Runtime, batch: &[u32]) -> Result<Vec<f32>> {
+        let art = self.art.clone();
+        if batch.len() != art.spec.b {
+            bail!("forward_batch wants exactly b={} nodes, got {}", art.spec.b, batch.len());
+        }
+        let ds = self.ds.clone();
+        // request-controlled ids must never panic the server
+        if let Some(&bad) = batch.iter().find(|&&v| v as usize >= ds.n()) {
+            bail!("node id {bad} out of range (dataset '{}' has n={})", ds.cfg.name, ds.n());
+        }
+        // stash between paired slots of one layer (c_in → c_out /
+        // mask_in → m_out share a single builder pass)
+        let mut stash: Option<(usize, Tensor)> = None;
+        for di in 0..self.dynamic.len() {
+            let (idx, kind) = self.dynamic[di];
+            let t = match kind {
+                DynSlot::Xb => gather_features(&ds.features, ds.cfg.f_in_pad, batch),
+                DynSlot::CIn(l) => {
+                    let (c_in, c_out) = self.cache.layers[l].build_fixed_fwd(
+                        &ds.graph, self.conv(), batch, &mut self.scratch,
+                    );
+                    stash = Some((l, c_out));
+                    c_in
+                }
+                DynSlot::COut(l) => {
+                    let (pl, c_out) = stash.take().unwrap();
+                    assert_eq!(pl, l);
+                    c_out
+                }
+                DynSlot::MaskIn(l) => {
+                    let (mask_in, m_out) = self.cache.layers[l].build_learnable_fwd(
+                        &ds.graph, batch, &mut self.scratch,
+                    );
+                    stash = Some((l, m_out));
+                    mask_in
+                }
+                DynSlot::MOut(l) => {
+                    let (pl, m_out) = stash.take().unwrap();
+                    assert_eq!(pl, l);
+                    m_out
+                }
+                DynSlot::CntOut(l) => self.cache.layers[l].build_cnt_fwd(batch, &mut self.scratch),
+            };
+            self.inputs[idx] = t;
+        }
+        let out = rt.execute(&art, &self.inputs)?;
+        Ok(out[0].f.clone())
+    }
+}

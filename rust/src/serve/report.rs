@@ -1,0 +1,78 @@
+//! Latency/throughput accounting for a serving run: per-request latency
+//! percentiles + queries-per-second, rendered for the CLI and emitted by
+//! the bench harness into `BENCH_hot_paths.json`.
+
+/// Summary of one serving run.
+#[derive(Debug, Clone)]
+pub struct LatencyReport {
+    pub count: usize,
+    pub wall_s: f64,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Nearest-rank percentile over a sorted slice (q in [0, 1]).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+impl LatencyReport {
+    /// Build from raw per-request latencies (seconds) + run wall time.
+    pub fn from_latencies(latencies_s: &[f64], wall_s: f64) -> LatencyReport {
+        let mut sorted: Vec<f64> = latencies_s.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let count = sorted.len();
+        let mean = if count == 0 { 0.0 } else { sorted.iter().sum::<f64>() / count as f64 };
+        LatencyReport {
+            count,
+            wall_s,
+            qps: count as f64 / wall_s.max(1e-12),
+            p50_ms: 1e3 * percentile(&sorted, 0.50),
+            p99_ms: 1e3 * percentile(&sorted, 0.99),
+            mean_ms: 1e3 * mean,
+            max_ms: 1e3 * sorted.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+impl std::fmt::Display for LatencyReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} requests in {:.3}s — {:.0} qps; latency p50 {:.3} ms, p99 {:.3} ms, \
+             mean {:.3} ms, max {:.3} ms",
+            self.count, self.wall_s, self.qps, self.p50_ms, self.p99_ms, self.mean_ms,
+            self.max_ms
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let lat: Vec<f64> = (1..=100).map(|x| x as f64 / 1000.0).collect();
+        let r = LatencyReport::from_latencies(&lat, 1.0);
+        assert_eq!(r.count, 100);
+        assert!((r.qps - 100.0).abs() < 1e-9);
+        assert!((r.p50_ms - 50.0).abs() < 1e-9, "{}", r.p50_ms);
+        assert!((r.p99_ms - 99.0).abs() < 1e-9, "{}", r.p99_ms);
+        assert!((r.max_ms - 100.0).abs() < 1e-9);
+        // singleton and empty inputs stay finite
+        let one = LatencyReport::from_latencies(&[0.002], 0.004);
+        assert!((one.p50_ms - 2.0).abs() < 1e-9);
+        assert!((one.p99_ms - 2.0).abs() < 1e-9);
+        let zero = LatencyReport::from_latencies(&[], 1.0);
+        assert_eq!(zero.count, 0);
+        assert_eq!(zero.p50_ms, 0.0);
+    }
+}

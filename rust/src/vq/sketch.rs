@@ -25,16 +25,23 @@ impl SketchScratch {
         SketchScratch { pos: vec![-1; n] }
     }
 
-    fn mark(&mut self, batch: &[u32]) {
+    /// Mark a batch: `pos_of` then answers membership + position.  Public
+    /// for the serving cache's forward-only sketch builders.
+    pub fn mark(&mut self, batch: &[u32]) {
         for (i, &g) in batch.iter().enumerate() {
             self.pos[g as usize] = i as i32;
         }
     }
 
-    fn unmark(&mut self, batch: &[u32]) {
+    pub fn unmark(&mut self, batch: &[u32]) {
         for &g in batch {
             self.pos[g as usize] = -1;
         }
+    }
+
+    /// Position of `node` in the currently-marked batch, or -1.
+    pub fn pos_of(&self, node: usize) -> i32 {
+        self.pos[node]
     }
 }
 

@@ -1,0 +1,217 @@
+//! Serving-subsystem correctness.
+//!
+//! The contract under test: the micro-batching engine over a frozen
+//! `ServingModel` answers queries **bit-identically** to one-shot
+//! `VqTrainer::infer_nodes` on the same weights — including the padded
+//! final micro-batch and duplicate node ids inside one batch — and the
+//! serving-artifact export round-trips losslessly (save → load →
+//! evaluate/serve identical) for all four backbones.
+//!
+//! Model-specific tests honor the `VQGNN_MODEL` filter (CI backbone matrix).
+
+mod common;
+
+use std::rc::Rc;
+
+use common::{builtin, model_enabled};
+use vq_gnn::coordinator::{checkpoint, vq_trainer::VqTrainer};
+use vq_gnn::datasets::{Dataset, Split};
+use vq_gnn::runtime::manifest::Manifest;
+use vq_gnn::runtime::Runtime;
+use vq_gnn::sampler::NodeStrategy;
+use vq_gnn::serve::{Answer, MicroBatcher, Request, ServingModel};
+use vq_gnn::util::rng::Rng;
+
+const BACKBONES: [&str; 4] = ["gcn", "sage", "gat", "txf"];
+
+/// Train a few steps on tiny_sim so the frozen state is non-trivial
+/// (codebooks data-driven, assignments touched by real batches).
+fn trained(model: &str, steps: usize, seed: u64) -> (Runtime, Manifest, Rc<Dataset>, VqTrainer) {
+    let man = builtin();
+    let mut rt = Runtime::native();
+    let ds = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
+    let mut tr =
+        VqTrainer::new(&mut rt, &man, ds.clone(), model, "", NodeStrategy::Nodes, seed)
+            .unwrap();
+    for _ in 0..steps {
+        tr.train_step(&mut rt).unwrap();
+    }
+    (rt, man, ds, tr)
+}
+
+/// Query mix exercising the hard cases: duplicates adjacent (same
+/// micro-batch), duplicates far apart (different batches), and a length
+/// that is NOT a multiple of b (padded final micro-batch).
+fn query_nodes(n: usize, count: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut q: Vec<u32> = (0..count).map(|_| rng.below(n) as u32).collect();
+    q[1] = q[0]; // adjacent duplicate in the first batch
+    let last = q.len() - 1;
+    q[last] = q[0]; // far-apart duplicate, lands in the padded tail batch
+    q
+}
+
+#[test]
+fn serve_batched_matches_one_shot_inference() {
+    for model in BACKBONES {
+        if !model_enabled(model) {
+            continue;
+        }
+        let (mut rt, man, ds, mut tr) = trained(model, 3, 7);
+        let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+        let b = sm.batch_size();
+        let c = sm.out_dim();
+        // 333 = 5·64 + 13 → five full micro-batches + one padded tail
+        let queries = query_nodes(ds.n(), 333, 0xC0FFEE ^ b as u64);
+        assert_ne!(queries.len() % b, 0, "want a padded tail batch");
+
+        let mut eng = MicroBatcher::new();
+        for &v in &queries {
+            eng.submit(Request::Node(v));
+        }
+        let served = eng.drain(&mut rt, &mut sm).unwrap();
+        assert_eq!(served.len(), queries.len());
+        assert_eq!(eng.batches_run as usize, (queries.len() + b - 1) / b);
+        assert_eq!(eng.padded_rows as usize, b - queries.len() % b);
+
+        let want = tr.infer_nodes(&mut rt, &queries).unwrap();
+        for (i, s) in served.iter().enumerate() {
+            assert_eq!(s.id, i, "{model}: answers come back in submit order");
+            match &s.answer {
+                Answer::Scores(scores) => {
+                    assert_eq!(
+                        scores.as_slice(),
+                        &want[i * c..(i + 1) * c],
+                        "{model}: row {i} (node {}) diverged from one-shot inference",
+                        queries[i]
+                    );
+                }
+                other => panic!("{model}: node query answered with {other:?}"),
+            }
+        }
+        // duplicate occurrences answer identically
+        let (a0, a1) = (&served[0].answer, &served[1].answer);
+        assert_eq!(a0, a1, "{model}: adjacent duplicates disagree");
+    }
+}
+
+#[test]
+fn link_requests_are_dot_products_of_rows() {
+    if !model_enabled("gcn") {
+        return;
+    }
+    let (mut rt, man, _ds, mut tr) = trained("gcn", 2, 11);
+    let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let c = sm.out_dim();
+    // mixed stream: link endpoints expand into the node-slot order
+    let reqs = [
+        Request::Node(5),
+        Request::Link(9, 17),
+        Request::Node(9),
+        Request::Link(0, 5),
+    ];
+    let slots: Vec<u32> = vec![5, 9, 17, 9, 0, 5];
+    let mut eng = MicroBatcher::new();
+    for r in reqs {
+        eng.submit(r);
+    }
+    let served = eng.drain(&mut rt, &mut sm).unwrap();
+    let rows = tr.infer_nodes(&mut rt, &slots).unwrap();
+    let dot = |i: usize, j: usize| -> f32 {
+        rows[i * c..(i + 1) * c]
+            .iter()
+            .zip(&rows[j * c..(j + 1) * c])
+            .map(|(x, y)| x * y)
+            .sum()
+    };
+    assert_eq!(served[0].answer, Answer::Scores(rows[0..c].to_vec()));
+    assert_eq!(served[1].answer, Answer::Link(dot(1, 2)));
+    assert_eq!(served[2].answer, Answer::Scores(rows[3 * c..4 * c].to_vec()));
+    assert_eq!(served[3].answer, Answer::Link(dot(4, 5)));
+}
+
+#[test]
+fn checkpoint_roundtrip_evaluate_bit_identical_all_backbones() {
+    let dir = std::env::temp_dir().join("vqgnn_serve_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    for model in BACKBONES {
+        if !model_enabled(model) {
+            continue;
+        }
+        let (mut rt, man, ds, mut tr) = trained(model, 2, 3);
+        let m0 = tr.evaluate(&mut rt, Split::Test).unwrap();
+
+        // --- training checkpoint: save → load into a fresh trainer -------
+        let art = format!("vq_train_tiny_sim_{model}");
+        let ckpt = dir.join(format!("{model}.ckpt"));
+        checkpoint::save(&ckpt, &art, &tr.params, &tr.vq).unwrap();
+        let mut tr2 = VqTrainer::new(
+            &mut rt, &man, ds.clone(), model, "", NodeStrategy::Nodes, 99,
+        )
+        .unwrap();
+        checkpoint::load(&ckpt, &art, &mut tr2.params, &mut tr2.vq).unwrap();
+        let m1 = tr2.evaluate(&mut rt, Split::Test).unwrap();
+        assert_eq!(m0.to_bits(), m1.to_bits(), "{model}: evaluate drifted across restore");
+
+        // --- serving artifact: freeze → save → load → serve identical ----
+        let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+        let sckpt = dir.join(format!("{model}.serve.bin"));
+        sm.save(&sckpt).unwrap();
+        let mut sm2 = ServingModel::load(&mut rt, &man, ds.clone(), model, &sckpt).unwrap();
+        assert_eq!(sm.cache.memory_bytes(), sm2.cache.memory_bytes());
+
+        let queries = query_nodes(ds.n(), 100, 5); // 100 = 64 + 36 → padded tail
+        let mut eng1 = MicroBatcher::new();
+        let mut eng2 = MicroBatcher::new();
+        for &v in &queries {
+            eng1.submit(Request::Node(v));
+            eng2.submit(Request::Node(v));
+        }
+        let s1 = eng1.drain(&mut rt, &mut sm).unwrap();
+        let s2 = eng2.drain(&mut rt, &mut sm2).unwrap();
+        let c = sm.out_dim();
+        let want = tr.infer_nodes(&mut rt, &queries).unwrap();
+        for i in 0..queries.len() {
+            assert_eq!(
+                s1[i].answer, s2[i].answer,
+                "{model}: reloaded serving artifact answers differently"
+            );
+            assert_eq!(
+                s1[i].answer,
+                Answer::Scores(want[i * c..(i + 1) * c].to_vec()),
+                "{model}: frozen serve diverged from trainer inference"
+            );
+        }
+
+        // the wrong backbone's serving artifact is refused
+        if model == "gcn" {
+            assert!(ServingModel::load(&mut rt, &man, ds.clone(), "sage", &sckpt).is_err());
+        }
+    }
+}
+
+#[test]
+fn out_of_range_node_id_is_an_error_not_a_panic() {
+    if !model_enabled("gcn") {
+        return;
+    }
+    let (mut rt, man, ds, tr) = trained("gcn", 1, 2);
+    let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let mut eng = MicroBatcher::new();
+    eng.submit(Request::Node(ds.n() as u32)); // first invalid id
+    let err = eng.drain(&mut rt, &mut sm);
+    assert!(err.is_err(), "request-controlled id must not panic the server");
+}
+
+#[test]
+fn empty_drain_is_a_noop() {
+    if !model_enabled("gcn") {
+        return;
+    }
+    let (mut rt, man, _ds, tr) = trained("gcn", 1, 1);
+    let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let mut eng = MicroBatcher::new();
+    let served = eng.drain(&mut rt, &mut sm).unwrap();
+    assert!(served.is_empty());
+    assert_eq!(eng.batches_run, 0);
+}
