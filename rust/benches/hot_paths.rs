@@ -20,6 +20,30 @@
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
+/// With `--features alloc-count` the bench runs under a counting global
+/// allocator and reports the heap bytes one steady-state train / serve step
+/// requests (`train_step_alloc_bytes` / `serve_alloc_bytes`) — the
+/// regression keys guarding the plan-compiled executor's reusable step
+/// arena (near-zero is the contract; a hot-path `Vec` sneaking back in
+/// shows up here long before it shows up as wall-clock).
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static GLOBAL_ALLOC: vq_gnn::util::alloc::CountingAlloc = vq_gnn::util::alloc::CountingAlloc;
+
+/// Heap bytes requested while `f` runs (Some only under `alloc-count`).
+#[cfg(feature = "alloc-count")]
+fn alloc_bytes_of<F: FnOnce()>(f: F) -> Option<f64> {
+    let b0 = vq_gnn::util::alloc::bytes_now();
+    f();
+    Some(vq_gnn::util::alloc::bytes_now().saturating_sub(b0) as f64)
+}
+
+#[cfg(not(feature = "alloc-count"))]
+fn alloc_bytes_of<F: FnOnce()>(f: F) -> Option<f64> {
+    f();
+    None
+}
+
 use vq_gnn::coordinator::vq_trainer::VqTrainer;
 use vq_gnn::datasets::Dataset;
 use vq_gnn::graph::Conv;
@@ -139,6 +163,14 @@ fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
         std::hint::black_box(sm.forward_batch(&mut rt, &batch).unwrap());
     });
     report.insert("serve_forward_batch_ms".into(), num(r_fb.mean_ns / 1e6));
+    // steady-state allocation of one micro-batch through the reused
+    // serving session + step arena (the ~0-bytes contract)
+    if let Some(bytes) = alloc_bytes_of(|| {
+        std::hint::black_box(sm.forward_batch(&mut rt, &batch).unwrap());
+    }) {
+        println!("serve/forward_batch alloc: {bytes} bytes/step");
+        report.insert("serve_alloc_bytes".into(), num(bytes));
+    }
 
     // query burst through the engine: 10k requests (2k in smoke mode)
     let n_req = if smoke { 2_000 } else { 10_000 };
@@ -279,6 +311,25 @@ fn main() {
         tr.train_step(&mut rt).unwrap();
     });
     report.insert("train_step_tiny_ms".into(), num(r_ts.mean_ns / 1e6));
+
+    // steady-state allocation of one train step through the reused
+    // session + step arena.  Pipelining is disabled so the number measures
+    // the assembly/compute path itself, not the prefetch worker's batch
+    // buffers (which live off the critical path).
+    {
+        let mut tr_a =
+            VqTrainer::new(&mut rt, &man, tiny.clone(), "gcn", "", NodeStrategy::Nodes, 1)
+                .unwrap();
+        tr_a.set_pipelined(false);
+        tr_a.train_step(&mut rt).unwrap(); // warm arena + sessions
+        tr_a.train_step(&mut rt).unwrap();
+        if let Some(bytes) = alloc_bytes_of(|| {
+            tr_a.train_step(&mut rt).unwrap();
+        }) {
+            println!("train_step/vq tiny gcn alloc: {bytes} bytes/step");
+            report.insert("train_step_alloc_bytes".into(), num(bytes));
+        }
+    }
 
     // --- attention paths: dense score tile + the learnable-conv backbones --
     {

@@ -1,19 +1,26 @@
 //! Bench regression guard: diff a freshly-emitted `BENCH_hot_paths.json`
-//! against the committed `BENCH_baseline.json` and print **non-fatal**
-//! GitHub annotations for large regressions — the start of the
-//! perf-trajectory tracking the ROADMAP asks for.
+//! against the committed `BENCH_baseline.json` — the perf-trajectory
+//! tracking the ROADMAP asks for.
 //!
 //!   cargo run --release --bin bench_guard -- BENCH_baseline.json BENCH_hot_paths.json
 //!
 //! Rules (keys are matched recursively, joined with '.'):
 //! - `*_ms` (timings, lower is better): warn when current > 1.5× baseline;
 //! - `*_qps` / `*_per_sec` (throughput, higher is better): warn when
-//!   current < baseline / 1.5.
+//!   current < baseline / 1.5;
+//! - `*_alloc_bytes` (steady-state step allocation, lower is better —
+//!   requires the `alloc-count` bench feature): warn when current >
+//!   1.5× baseline, and when an allocation-free baseline (0 bytes) grows
+//!   any allocation at all;
+//! - a timing/throughput/allocation key present in the baseline but
+//!   MISSING from the fresh run is **fatal** (exit 1): a silently dropped
+//!   bench key would retire its regression coverage without anyone
+//!   noticing — guard keys may only be removed by refreshing the baseline.
 //!
-//! Always exits 0: bench noise across runners must never break CI — the
-//! annotations are the signal.  A missing/keyless baseline prints a notice
-//! explaining how to arm the guard (copy a CI `BENCH_hot_paths` artifact
-//! to `BENCH_baseline.json`).
+//! Ratio verdicts stay non-fatal: bench noise across runners must never
+//! break CI — the annotations are the signal.  A missing/keyless baseline
+//! prints a notice explaining how to arm the guard (copy a CI
+//! `BENCH_hot_paths` artifact to `BENCH_baseline.json`).
 
 use std::collections::BTreeMap;
 
@@ -50,6 +57,16 @@ fn load(path: &str) -> Option<BTreeMap<String, f64>> {
     Some(out)
 }
 
+/// Lower-is-better keys: timings and per-step allocation bytes.
+fn lower_is_better(key: &str) -> bool {
+    key.ends_with("_ms") || key.ends_with("_alloc_bytes")
+}
+
+/// Higher-is-better keys: throughput.
+fn higher_is_better(key: &str) -> bool {
+    key.ends_with("_qps") || key.ends_with("_per_sec")
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (base_path, cur_path) = match args.as_slice() {
@@ -73,32 +90,50 @@ fn main() {
 
     let mut compared = 0usize;
     let mut regressions = 0usize;
+    let mut missing: Vec<&str> = Vec::new();
     for (key, &b) in &base {
-        let Some(&c) = cur.get(key) else { continue };
-        let slower_is_worse = key.ends_with("_ms");
-        let faster_is_better = key.ends_with("_qps") || key.ends_with("_per_sec");
-        if !slower_is_worse && !faster_is_better {
+        let low = lower_is_better(key);
+        let high = higher_is_better(key);
+        if !low && !high {
             continue; // shape/config numbers (n, k, threads, speedups, ...)
         }
+        let Some(&c) = cur.get(key) else {
+            missing.push(key);
+            continue;
+        };
         compared += 1;
-        if faster_is_better && c <= 0.0 && b > 0.0 {
+        if high && c <= 0.0 && b > 0.0 {
             // throughput collapsed to zero — the worst regression must not
             // be silently dropped just because the ratio is undefined
             regressions += 1;
             println!("::warning::bench regression: {key} throughput collapsed ({b:.3} -> {c:.3})");
             continue;
         }
+        if b == 0.0 && c == 0.0 {
+            // an allocation-free step staying allocation-free
+            println!("  {key:<44} base {b:>12.3}  cur {c:>12.3}  [ok]");
+            continue;
+        }
+        if low && b == 0.0 && c > 0.0 {
+            // the arena path started allocating — a zero baseline has no
+            // ratio, but this is exactly the regression the key exists for
+            regressions += 1;
+            println!(
+                "::warning::bench regression: {key} was allocation-free, now {c:.0} bytes/step"
+            );
+            continue;
+        }
         if b <= 0.0 || c <= 0.0 {
             println!("::notice::bench_guard: {key} non-positive ({b:.3} -> {c:.3}); no ratio");
             continue;
         }
-        let ratio = if slower_is_worse { c / b } else { b / c };
+        let ratio = if low { c / b } else { b / c };
         let verdict = if ratio > RATIO {
             regressions += 1;
             println!(
                 "::warning::bench regression: {key} {} ({b:.3} -> {c:.3}, {ratio:.2}x \
                  worse than baseline)",
-                if slower_is_worse { "slowed down" } else { "throughput dropped" }
+                if low { "got worse" } else { "throughput dropped" }
             );
             "REGRESSED"
         } else if ratio < 1.0 / RATIO {
@@ -108,7 +143,7 @@ fn main() {
         };
         println!("  {key:<44} base {b:>12.3}  cur {c:>12.3}  [{verdict}]");
     }
-    if compared == 0 {
+    if compared == 0 && missing.is_empty() {
         println!(
             "::notice::bench_guard: baseline {base_path} shares no timing/throughput keys \
              with {cur_path} — refresh it from a CI BENCH_hot_paths artifact"
@@ -118,5 +153,15 @@ fn main() {
             "bench_guard: {compared} keys compared, {regressions} regression(s) beyond \
              {RATIO}x (non-fatal)"
         );
+    }
+    if !missing.is_empty() {
+        for key in &missing {
+            println!(
+                "::error::bench_guard: baseline key '{key}' is missing from {cur_path} — \
+                 a guarded bench key was dropped (refresh {base_path} deliberately if this \
+                 is intended)"
+            );
+        }
+        std::process::exit(1);
     }
 }

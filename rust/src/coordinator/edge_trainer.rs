@@ -2,18 +2,31 @@
 //! sampling, Cluster-GCN, GraphSAINT-RW.  All share the exact edge-list
 //! artifacts (python/compile/edgemp.py); they differ only in the subgraph
 //! each step feeds and in the normalization coefficients.
+//!
+//! Like `VqTrainer`, the trainer holds a persistent [`Session`] per
+//! artifact (inputs rewritten in place each step, outputs rewritten by
+//! `Runtime::execute_into`) and overlaps subgraph sampling for step `t+1`
+//! with the execution of step `t` via `util::par::join2` — subgraph
+//! sampling depends only on the sampler state and the trainer RNG stream,
+//! never on the parameters, so the overlapped schedule computes exactly
+//! the serial trajectory.
 
 use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::opt::{self, Optimizer};
-use crate::coordinator::{gather_features, init_params, lipschitz_clip, RunStats};
+use crate::coordinator::vq_trainer::pipeline_env_enabled;
+use crate::coordinator::{
+    fill_link_pairs, gather_features_into, init_params, lipschitz_clip, InSlot, PairBuf,
+    RunStats, Session,
+};
 use crate::datasets::{Dataset, Split};
-use crate::graph::Conv;
-use crate::runtime::manifest::Manifest;
+use crate::graph::{Conv, Graph};
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::{Artifact, Runtime};
 use crate::sampler::{cluster, neighbor, saint};
+use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
@@ -45,6 +58,272 @@ impl Baseline {
     }
 }
 
+/// A sampled subgraph, ready for assembly: node ids, local arcs with
+/// coefficients, per-node loss weights.
+struct EdgePrep {
+    nodes: Vec<u32>,
+    arcs: Vec<(u32, u32, f32)>,
+    lam: Vec<f32>,
+}
+
+/// Induced subgraph arcs with the convolution re-normalized on the
+/// subgraph (Cluster-GCN / SAINT convention), plus self loops for GCN.
+fn induced_with_subgraph_norm(
+    g: &Graph,
+    conv: Conv,
+    gat: bool,
+    nodes: &[u32],
+) -> Vec<(u32, u32, f32)> {
+    let mut local = vec![-1i32; g.n];
+    let pairs = g.induced_edges(nodes, &mut local);
+    let nl = nodes.len();
+    let mut indeg = vec![0u32; nl];
+    for &(_, v) in &pairs {
+        indeg[v as usize] += 1;
+    }
+    let mut arcs: Vec<(u32, u32, f32)> = pairs
+        .into_iter()
+        .map(|(u, v)| {
+            let c = if gat {
+                1.0
+            } else {
+                match conv {
+                    Conv::GcnSym => 1.0
+                        / (((indeg[u as usize] + 1) as f32
+                            * (indeg[v as usize] + 1) as f32)
+                            .sqrt()),
+                    Conv::SageMean => 1.0 / indeg[v as usize].max(1) as f32,
+                }
+            };
+            (u, v, c)
+        })
+        .collect();
+    if conv.with_self_loops() && !gat {
+        for v in 0..nl as u32 {
+            arcs.push((v, v, 1.0 / (indeg[v as usize] + 1) as f32));
+        }
+    } else if gat {
+        for v in 0..nl as u32 {
+            arcs.push((v, v, 1.0));
+        }
+    }
+    arcs
+}
+
+/// Subgraph for one step.  A free function over explicit sampler state so
+/// the pipelined prep worker can run it while the executor owns the rest
+/// of the trainer.
+#[allow(clippy::too_many_arguments)]
+fn sample_subgraph_parts(
+    kind: Baseline,
+    ds: &Dataset,
+    cap_nodes: usize,
+    rng: &mut Rng,
+    partition: &[u32],
+    n_parts: usize,
+    saint_s: Option<&saint::SaintSampler>,
+    gat: bool,
+    conv: Conv,
+) -> EdgePrep {
+    let g = &ds.graph;
+    match kind {
+        Baseline::FullGraph => {
+            let nodes: Vec<u32> = (0..g.n as u32).collect();
+            let mut arcs = Vec::with_capacity(g.num_arcs() + g.n);
+            for v in 0..g.n {
+                for &u in g.in_neighbors(v) {
+                    let coef = if gat { 1.0 } else { g.coef(conv, u as usize, v) };
+                    arcs.push((u, v as u32, coef));
+                }
+            }
+            // self loops: GCN's Ã and GAT's 𝔠 = A + I
+            if conv.with_self_loops() || gat {
+                for v in 0..g.n {
+                    let coef = if gat { 1.0 } else { g.coef(Conv::GcnSym, v, v) };
+                    arcs.push((v as u32, v as u32, coef));
+                }
+            }
+            let lam = vec![1.0; g.n];
+            EdgePrep { nodes, arcs, lam }
+        }
+        Baseline::ClusterGcn => {
+            // group random clusters until the capacity class is filled
+            let mut group = Vec::new();
+            let mut order: Vec<u32> = (0..n_parts as u32).collect();
+            rng.shuffle(&mut order);
+            let mut size = 0usize;
+            let mut sizes = vec![0usize; n_parts];
+            for &p in partition {
+                sizes[p as usize] += 1;
+            }
+            for &p in &order {
+                if size + sizes[p as usize] > cap_nodes {
+                    continue;
+                }
+                size += sizes[p as usize];
+                group.push(p);
+                if size > cap_nodes * 3 / 4 {
+                    break;
+                }
+            }
+            let nodes = cluster::batch_nodes(partition, &group);
+            let arcs = induced_with_subgraph_norm(g, conv, gat, &nodes);
+            let lam = vec![1.0; nodes.len()];
+            EdgePrep { nodes, arcs, lam }
+        }
+        Baseline::SaintRw => {
+            let s = saint_s.expect("saint sampler state");
+            let (nodes, raw_arcs, lam) = s.sample(g, rng);
+            let mut nodes = nodes;
+            nodes.truncate(cap_nodes);
+            let keep = nodes.len() as u32;
+            // subgraph normalization × SAINT α correction
+            let base = induced_with_subgraph_norm(g, conv, gat, &nodes);
+            // fold in the α edge corrections where available
+            let alpha: std::collections::HashMap<(u32, u32), f32> = raw_arcs
+                .iter()
+                .filter(|&&(u, v, _)| u < keep && v < keep)
+                .map(|&(u, v, a)| ((u, v), a))
+                .collect();
+            let arcs = base
+                .into_iter()
+                .map(|(u, v, c)| {
+                    let a = alpha.get(&(u, v)).copied().unwrap_or(1.0);
+                    // cap the variance of the unbiasedness correction
+                    (u, v, c * a.clamp(0.5, 4.0))
+                })
+                .collect();
+            let mut lam = lam;
+            lam.truncate(cap_nodes);
+            // normalize λ to mean 1 (stability at small sample counts)
+            let m: f32 = lam.iter().sum::<f32>() / lam.len().max(1) as f32;
+            for x in lam.iter_mut() {
+                *x /= m.max(1e-6);
+            }
+            EdgePrep { nodes, arcs, lam }
+        }
+        Baseline::NsSage => {
+            let b_roots = (cap_nodes / 8).max(16);
+            let pool = ds.nodes_in_split(Split::Train);
+            let roots: Vec<u32> = (0..b_roots)
+                .map(|_| pool[rng.below(pool.len())])
+                .collect();
+            let fanouts = [10, 5, 5];
+            let s = neighbor::sample(g, &roots, &fanouts, cap_nodes, rng);
+            // mean aggregator over the SAMPLED neighbors
+            let mut indeg = vec![0u32; s.nodes.len()];
+            for &(_, v) in &s.edges {
+                indeg[v as usize] += 1;
+            }
+            let arcs = s
+                .edges
+                .iter()
+                .map(|&(u, v)| {
+                    let c = if gat { 1.0 } else { 1.0 / indeg[v as usize].max(1) as f32 };
+                    (u, v, c)
+                })
+                .collect();
+            // loss only on roots
+            let mut lam = vec![0.0f32; s.nodes.len()];
+            for x in lam.iter_mut().take(s.n_roots) {
+                *x = 1.0;
+            }
+            EdgePrep { nodes: s.nodes, arcs, lam }
+        }
+    }
+}
+
+/// Rewrite an edge session's input slots in place for one subgraph.  Rng
+/// draws (link pairs) happen FIRST — the same order as the pre-session
+/// assemble, so trajectories are unchanged.
+#[allow(clippy::too_many_arguments)]
+fn fill_edge_session(
+    sess: &mut Session,
+    spec: &ArtifactSpec,
+    ds: &Dataset,
+    params: &[Tensor],
+    rng: &mut Rng,
+    pairs: &mut PairBuf,
+    nodes: &[u32],
+    arcs: &[(u32, u32, f32)],
+    lam: &[f32],
+    train: bool,
+) -> Result<()> {
+    let (nn, ne) = (spec.nn, spec.ne);
+    anyhow::ensure!(nodes.len() <= nn, "subgraph {} > artifact nn {}", nodes.len(), nn);
+    anyhow::ensure!(arcs.len() <= ne, "edges {} > artifact ne {}", arcs.len(), ne);
+    let f = ds.cfg.f_in_pad;
+    if sess.slots.contains(&InSlot::Psrc) {
+        let p = spec.inputs[spec.input_index("psrc").unwrap()].numel();
+        fill_link_pairs(&ds.graph, rng, nodes, p, train, pairs);
+    }
+    let Session { inputs, slots, .. } = sess;
+    for (idx, slot) in slots.iter().enumerate() {
+        match *slot {
+            InSlot::X => {
+                // features padded to nn rows
+                let x = &mut inputs[idx].f;
+                x.fill(0.0);
+                gather_features_into(&ds.features, f, nodes, &mut x[..nodes.len() * f]);
+            }
+            InSlot::Esrc => {
+                let e = &mut inputs[idx].i;
+                e.fill(0);
+                for (i, &(u, _, _)) in arcs.iter().enumerate() {
+                    e[i] = u as i32;
+                }
+            }
+            InSlot::Edst => {
+                let e = &mut inputs[idx].i;
+                e.fill(0);
+                for (i, &(_, v, _)) in arcs.iter().enumerate() {
+                    e[i] = v as i32;
+                }
+            }
+            InSlot::Ecoef => {
+                let e = &mut inputs[idx].f;
+                e.fill(0.0);
+                for (i, &(_, _, c)) in arcs.iter().enumerate() {
+                    e[i] = c;
+                }
+            }
+            InSlot::Y => {
+                if ds.cfg.multilabel {
+                    let c = ds.cfg.n_classes;
+                    let data = &mut inputs[idx].f;
+                    data.fill(0.0);
+                    for (i, &v) in nodes.iter().enumerate() {
+                        data[i * c..(i + 1) * c].copy_from_slice(
+                            &ds.labels_multi[v as usize * c..(v as usize + 1) * c],
+                        );
+                    }
+                } else {
+                    let data = &mut inputs[idx].i;
+                    data.fill(0);
+                    for (i, &v) in nodes.iter().enumerate() {
+                        data[i] = ds.labels[v as usize];
+                    }
+                }
+            }
+            InSlot::WLoss => {
+                let w = &mut inputs[idx].f;
+                w.fill(0.0);
+                for (i, &v) in nodes.iter().enumerate() {
+                    let in_split = !train || ds.split[v as usize] == Split::Train;
+                    w[i] = if in_split { lam[i] } else { 0.0 };
+                }
+            }
+            InSlot::Psrc => inputs[idx].i.copy_from_slice(&pairs.psrc),
+            InSlot::Pdst => inputs[idx].i.copy_from_slice(&pairs.pdst),
+            InSlot::Py => inputs[idx].f.copy_from_slice(&pairs.py),
+            InSlot::Pw => inputs[idx].f.copy_from_slice(&pairs.pw),
+            InSlot::Param(pi) => inputs[idx].f.copy_from_slice(&params[pi].f),
+            InSlot::Ctx => anyhow::bail!("VQ context input in an edge artifact ({})", spec.name),
+        }
+    }
+    Ok(())
+}
+
 pub struct EdgeTrainer {
     pub kind: Baseline,
     pub train_art: Rc<Artifact>,
@@ -59,6 +338,11 @@ pub struct EdgeTrainer {
     partition: Vec<u32>,
     n_parts: usize,
     saint: Option<saint::SaintSampler>,
+    train_io: Session,
+    infer_io: Session,
+    pairs: PairBuf,
+    pipeline: bool,
+    prefetched: Option<EdgePrep>,
     pub stats: RunStats,
 }
 
@@ -92,6 +376,8 @@ impl EdgeTrainer {
         } else {
             None
         };
+        let train_io = Session::for_artifact(&train_art.spec)?;
+        let infer_io = Session::for_artifact(&infer_art.spec)?;
         Ok(EdgeTrainer {
             kind,
             train_art,
@@ -104,9 +390,21 @@ impl EdgeTrainer {
             partition,
             n_parts,
             saint: saint_s,
+            train_io,
+            infer_io,
+            pairs: PairBuf::default(),
+            pipeline: pipeline_env_enabled(),
+            prefetched: None,
             stats: RunStats::default(),
             ds,
         })
+    }
+
+    /// Toggle the overlapped subgraph-sampling stage (parity tests /
+    /// allocation benches; the overlapped and serial schedules compute
+    /// identical trajectories).
+    pub fn set_pipelined(&mut self, on: bool) {
+        self.pipeline = on;
     }
 
     fn conv(&self) -> Conv {
@@ -121,192 +419,83 @@ impl EdgeTrainer {
         self.model_name == "gat"
     }
 
-    /// Subgraph for one step: (nodes, local arcs with coef, loss weights).
-    fn sample_subgraph(&mut self) -> (Vec<u32>, Vec<(u32, u32, f32)>, Vec<f32>) {
-        let ds = self.ds.clone();
-        let g = &ds.graph;
-        let cap_nodes = self.train_art.spec.nn;
-        match self.kind {
-            Baseline::FullGraph => {
-                let nodes: Vec<u32> = (0..g.n as u32).collect();
-                let mut arcs = Vec::with_capacity(g.num_arcs() + g.n);
-                for v in 0..g.n {
-                    for &u in g.in_neighbors(v) {
-                        let coef = if self.is_gat() {
-                            1.0
-                        } else {
-                            g.coef(self.conv(), u as usize, v)
-                        };
-                        arcs.push((u, v as u32, coef));
-                    }
-                }
-                // self loops: GCN's Ã and GAT's 𝔠 = A + I
-                if self.conv().with_self_loops() || self.is_gat() {
-                    for v in 0..g.n {
-                        let coef = if self.is_gat() {
-                            1.0
-                        } else {
-                            g.coef(Conv::GcnSym, v, v)
-                        };
-                        arcs.push((v as u32, v as u32, coef));
-                    }
-                }
-                let lam = vec![1.0; g.n];
-                (nodes, arcs, lam)
-            }
-            Baseline::ClusterGcn => {
-                // group random clusters until the capacity class is filled
-                let mut group = Vec::new();
-                let mut order: Vec<u32> = (0..self.n_parts as u32).collect();
-                self.rng.shuffle(&mut order);
-                let mut size = 0usize;
-                let mut sizes = vec![0usize; self.n_parts];
-                for &p in &self.partition {
-                    sizes[p as usize] += 1;
-                }
-                for &p in &order {
-                    if size + sizes[p as usize] > cap_nodes {
-                        continue;
-                    }
-                    size += sizes[p as usize];
-                    group.push(p);
-                    if size > cap_nodes * 3 / 4 {
-                        break;
-                    }
-                }
-                let nodes = cluster::batch_nodes(&self.partition, &group);
-                let arcs = self.induced_with_subgraph_norm(&nodes);
-                let lam = vec![1.0; nodes.len()];
-                (nodes, arcs, lam)
-            }
-            Baseline::SaintRw => {
-                let s = self.saint.as_ref().unwrap();
-                let (nodes, raw_arcs, lam) = s.sample(g, &mut self.rng);
-                let mut nodes = nodes;
-                nodes.truncate(cap_nodes);
-                let keep = nodes.len() as u32;
-                // subgraph normalization × SAINT α correction
-                let base = self.induced_with_subgraph_norm(&nodes);
-                // fold in the α edge corrections where available
-                let alpha: std::collections::HashMap<(u32, u32), f32> = raw_arcs
-                    .iter()
-                    .filter(|&&(u, v, _)| u < keep && v < keep)
-                    .map(|&(u, v, a)| ((u, v), a))
-                    .collect();
-                let arcs = base
-                    .into_iter()
-                    .map(|(u, v, c)| {
-                        let a = alpha.get(&(u, v)).copied().unwrap_or(1.0);
-                        // cap the variance of the unbiasedness correction
-                        (u, v, c * a.clamp(0.5, 4.0))
-                    })
-                    .collect();
-                let mut lam = lam;
-                lam.truncate(cap_nodes);
-                // normalize λ to mean 1 (stability at small sample counts)
-                let m: f32 = lam.iter().sum::<f32>() / lam.len().max(1) as f32;
-                for x in lam.iter_mut() {
-                    *x /= m.max(1e-6);
-                }
-                (nodes, arcs, lam)
-            }
-            Baseline::NsSage => {
-                let b_roots = (cap_nodes / 8).max(16);
-                let pool = ds.nodes_in_split(Split::Train);
-                let roots: Vec<u32> = (0..b_roots)
-                    .map(|_| pool[self.rng.below(pool.len())])
-                    .collect();
-                let fanouts = [10, 5, 5];
-                let s = neighbor::sample(&ds.graph, &roots, &fanouts, cap_nodes,
-                                         &mut self.rng);
-                // mean aggregator over the SAMPLED neighbors
-                let mut indeg = vec![0u32; s.nodes.len()];
-                for &(_, v) in &s.edges {
-                    indeg[v as usize] += 1;
-                }
-                let arcs = s
-                    .edges
-                    .iter()
-                    .map(|&(u, v)| {
-                        let c = if self.is_gat() {
-                            1.0
-                        } else {
-                            1.0 / indeg[v as usize].max(1) as f32
-                        };
-                        (u, v, c)
-                    })
-                    .collect();
-                // loss only on roots
-                let mut lam = vec![0.0f32; s.nodes.len()];
-                for x in lam.iter_mut().take(s.n_roots) {
-                    *x = 1.0;
-                }
-                (s.nodes, arcs, lam)
-            }
-        }
-    }
-
-    /// Induced subgraph arcs with the convolution re-normalized on the
-    /// subgraph (Cluster-GCN / SAINT convention), plus self loops for GCN.
-    fn induced_with_subgraph_norm(&mut self, nodes: &[u32]) -> Vec<(u32, u32, f32)> {
-        let g = &self.ds.graph;
-        let mut local = vec![-1i32; g.n];
-        let pairs = g.induced_edges(nodes, &mut local);
-        let nl = nodes.len();
-        let mut indeg = vec![0u32; nl];
-        for &(_, v) in &pairs {
-            indeg[v as usize] += 1;
-        }
-        let conv = self.conv();
-        let mut arcs: Vec<(u32, u32, f32)> = pairs
-            .into_iter()
-            .map(|(u, v)| {
-                let c = if self.is_gat() {
-                    1.0
-                } else {
-                    match conv {
-                        Conv::GcnSym => 1.0
-                            / (((indeg[u as usize] + 1) as f32
-                                * (indeg[v as usize] + 1) as f32)
-                                .sqrt()),
-                        Conv::SageMean => 1.0 / indeg[v as usize].max(1) as f32,
-                    }
-                };
-                (u, v, c)
-            })
-            .collect();
-        if conv.with_self_loops() && !self.is_gat() {
-            for v in 0..nl as u32 {
-                arcs.push((v, v, 1.0 / (indeg[v as usize] + 1) as f32));
-            }
-        } else if self.is_gat() {
-            for v in 0..nl as u32 {
-                arcs.push((v, v, 1.0));
-            }
-        }
-        arcs
-    }
-
     pub fn train_step(&mut self, rt: &mut Runtime) -> Result<f32> {
         let t0 = std::time::Instant::now();
-        let (nodes, arcs, lam) = self.sample_subgraph();
+        let ds = self.ds.clone();
         let art = self.train_art.clone();
-        let inputs = self.assemble(&art, &nodes, &arcs, &lam, true)?;
-        let outputs = rt.execute(&art, &inputs)?;
-        let loss = outputs[0].f[0];
-        let n_params = self.params.len();
-        let grads: Vec<&Tensor> = outputs[outputs.len() - n_params..].iter().collect();
-        self.opt.step(&mut self.params, &grads);
-        if self.is_gat() {
-            lipschitz_clip(&art.spec, &mut self.params, self.weight_clip);
+        let gat = self.is_gat();
+        let conv = self.conv();
+        let cap = art.spec.nn;
+        let prep = match self.prefetched.take() {
+            Some(p) => p,
+            None => sample_subgraph_parts(
+                self.kind,
+                &ds,
+                cap,
+                &mut self.rng,
+                &self.partition,
+                self.n_parts,
+                self.saint.as_ref(),
+                gat,
+                conv,
+            ),
+        };
+        fill_edge_session(
+            &mut self.train_io,
+            &art.spec,
+            &ds,
+            &self.params,
+            &mut self.rng,
+            &mut self.pairs,
+            &prep.nodes,
+            &prep.arcs,
+            &prep.lam,
+            true,
+        )?;
+        // step t computes while the prep worker samples subgraph t+1
+        let exec_res = if self.pipeline {
+            let kind = self.kind;
+            let n_parts = self.n_parts;
+            let rng = &mut self.rng;
+            let partition = &self.partition;
+            let saint_s = self.saint.as_ref();
+            let dsr: &Dataset = &ds;
+            let io = &mut self.train_io;
+            let (inputs, outputs) = (&io.inputs, &mut io.outputs);
+            let (next, res) = par::join2(
+                move || {
+                    sample_subgraph_parts(
+                        kind, dsr, cap, rng, partition, n_parts, saint_s, gat, conv,
+                    )
+                },
+                move || rt.execute_into(&art, inputs, outputs),
+            );
+            self.prefetched = Some(next);
+            res
+        } else {
+            rt.execute_into(&art, &self.train_io.inputs, &mut self.train_io.outputs)
+        };
+        exec_res?;
+        let spec = &self.train_art.spec;
+        let loss;
+        {
+            let sess = &self.train_io;
+            loss = sess.outputs[0].f[0];
+            let n_params = self.params.len();
+            let grads: Vec<&Tensor> =
+                sess.outputs[sess.outputs.len() - n_params..].iter().collect();
+            self.opt.step(&mut self.params, &grads);
         }
-        let step_bytes = art.spec.input_bytes() + art.spec.output_bytes()
+        if gat {
+            lipschitz_clip(spec, &mut self.params, self.weight_clip);
+        }
+        let step_bytes = spec.input_bytes() + spec.output_bytes()
             + opt::opt_state_bytes(&self.params, 2);
         self.stats.peak_step_bytes = self.stats.peak_step_bytes.max(step_bytes);
         self.stats.steps += 1;
         self.stats.loss_last = loss;
-        self.stats.nodes_per_step = nodes.len() as u64;
-        self.stats.messages_per_step = arcs.len() as u64;
+        self.stats.nodes_per_step = prep.nodes.len() as u64;
+        self.stats.messages_per_step = prep.arcs.len() as u64;
         self.stats.train_secs += t0.elapsed().as_secs_f64();
         Ok(loss)
     }
@@ -335,31 +524,40 @@ impl EdgeTrainer {
         let ds = self.ds.clone();
         let g = &ds.graph;
         let art = self.infer_art.clone();
+        let gat = self.is_gat();
+        let conv = self.conv();
         let nodes: Vec<u32> = (0..g.n as u32).collect();
         let mut arcs = Vec::with_capacity(g.num_arcs());
         for v in 0..g.n {
             for &u in g.in_neighbors(v) {
-                let coef = if self.is_gat() {
-                    1.0
-                } else {
-                    g.coef(self.conv(), u as usize, v)
-                };
+                let coef = if gat { 1.0 } else { g.coef(conv, u as usize, v) };
                 arcs.push((u, v as u32, coef));
             }
         }
-        if self.conv().with_self_loops() && !self.is_gat() {
+        if conv.with_self_loops() && !gat {
             for v in 0..g.n {
                 arcs.push((v as u32, v as u32, g.coef(Conv::GcnSym, v, v)));
             }
-        } else if self.is_gat() {
+        } else if gat {
             for v in 0..g.n {
                 arcs.push((v as u32, v as u32, 1.0));
             }
         }
         let lam = vec![1.0; g.n];
-        let inputs = self.assemble(&art, &nodes, &arcs, &lam, false)?;
-        let out = rt.execute(&art, &inputs)?;
-        Ok(out[0].f.clone())
+        fill_edge_session(
+            &mut self.infer_io,
+            &art.spec,
+            &ds,
+            &self.params,
+            &mut self.rng,
+            &mut self.pairs,
+            &nodes,
+            &arcs,
+            &lam,
+            false,
+        )?;
+        rt.execute_into(&art, &self.infer_io.inputs, &mut self.infer_io.outputs)?;
+        Ok(self.infer_io.outputs[0].f.clone())
     }
 
     pub fn evaluate(&mut self, rt: &mut Runtime, split: Split) -> Result<f64> {
@@ -390,120 +588,5 @@ impl EdgeTrainer {
         } else {
             Ok(metrics::accuracy(&logits, c, &ds.labels, &rows))
         }
-    }
-
-    /// Assemble the edge-artifact input list.
-    fn assemble(&mut self, art: &Rc<Artifact>, nodes: &[u32],
-                arcs: &[(u32, u32, f32)], lam: &[f32], train: bool)
-                -> Result<Vec<Tensor>> {
-        let spec = &art.spec;
-        let ds = self.ds.clone();
-        let (nn, ne) = (spec.nn, spec.ne);
-        anyhow::ensure!(nodes.len() <= nn, "subgraph {} > artifact nn {}", nodes.len(), nn);
-        anyhow::ensure!(arcs.len() <= ne, "edges {} > artifact ne {}", arcs.len(), ne);
-        let f = ds.cfg.f_in_pad;
-        // features padded to nn rows
-        let mut x = gather_features(&ds.features, f, nodes);
-        x.f.resize(nn * f, 0.0);
-        x.shape = vec![nn, f];
-        let mut esrc = vec![0i32; ne];
-        let mut edst = vec![0i32; ne];
-        let mut ecoef = vec![0.0f32; ne];
-        for (i, &(u, v, c)) in arcs.iter().enumerate() {
-            esrc[i] = u as i32;
-            edst[i] = v as i32;
-            ecoef[i] = c;
-        }
-        let link_pairs = if ds.cfg.task == "link" && spec.input_index("psrc").is_some() {
-            Some(self.link_pairs(spec.inputs[spec.input_index("psrc").unwrap()].numel(),
-                                 nodes, train))
-        } else {
-            None
-        };
-        let mut inputs = Vec::with_capacity(spec.inputs.len());
-        let mut pi = 0usize;
-        for ts in &spec.inputs {
-            let t: Tensor = match ts.name.as_str() {
-                "x" => x.clone(),
-                "esrc" => Tensor::from_i32(&[ne], esrc.clone()),
-                "edst" => Tensor::from_i32(&[ne], edst.clone()),
-                "ecoef" => Tensor::from_f32(&[ne], ecoef.clone()),
-                "y" => {
-                    if ds.cfg.multilabel {
-                        let c = ds.cfg.n_classes;
-                        let mut data = vec![0.0f32; nn * c];
-                        for (i, &v) in nodes.iter().enumerate() {
-                            data[i * c..(i + 1) * c].copy_from_slice(
-                                &ds.labels_multi[v as usize * c..(v as usize + 1) * c],
-                            );
-                        }
-                        Tensor::from_f32(&[nn, c], data)
-                    } else {
-                        let mut data = vec![0i32; nn];
-                        for (i, &v) in nodes.iter().enumerate() {
-                            data[i] = ds.labels[v as usize];
-                        }
-                        Tensor::from_i32(&[nn], data)
-                    }
-                }
-                "wloss" => {
-                    let mut w = vec![0.0f32; nn];
-                    for (i, &v) in nodes.iter().enumerate() {
-                        let in_split = !train || ds.split[v as usize] == Split::Train;
-                        w[i] = if in_split { lam[i] } else { 0.0 };
-                    }
-                    Tensor::from_f32(&[nn], w)
-                }
-                "psrc" => Tensor::from_i32(&ts.shape, link_pairs.as_ref().unwrap().0.clone()),
-                "pdst" => Tensor::from_i32(&ts.shape, link_pairs.as_ref().unwrap().1.clone()),
-                "py" => Tensor::from_f32(&ts.shape, link_pairs.as_ref().unwrap().2.clone()),
-                "pw" => Tensor::from_f32(&ts.shape, link_pairs.as_ref().unwrap().3.clone()),
-                name if name.starts_with("param.") => {
-                    let t = self.params[pi].clone();
-                    pi += 1;
-                    t
-                }
-                other => anyhow::bail!("unknown edge input {other}"),
-            };
-            inputs.push(t);
-        }
-        Ok(inputs)
-    }
-
-    fn link_pairs(&mut self, p: usize, nodes: &[u32], train: bool)
-                  -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>) {
-        let g = &self.ds.graph;
-        let nl = nodes.len();
-        let mut local = std::collections::HashMap::new();
-        for (i, &v) in nodes.iter().enumerate() {
-            local.insert(v, i as i32);
-        }
-        let mut pos = Vec::new();
-        'outer: for (i, &v) in nodes.iter().enumerate() {
-            for &u in g.in_neighbors(v as usize) {
-                if let Some(&lu) = local.get(&u) {
-                    pos.push((lu, i as i32));
-                    if pos.len() >= p / 2 {
-                        break 'outer;
-                    }
-                }
-            }
-        }
-        let mut psrc = vec![0i32; p];
-        let mut pdst = vec![0i32; p];
-        let mut py = vec![0.0f32; p];
-        let mut pw = vec![0.0f32; p];
-        for (i, &(u, v)) in pos.iter().enumerate() {
-            psrc[i] = u;
-            pdst[i] = v;
-            py[i] = 1.0;
-            pw[i] = 1.0;
-        }
-        for i in pos.len()..p {
-            psrc[i] = self.rng.below(nl) as i32;
-            pdst[i] = self.rng.below(nl) as i32;
-            pw[i] = if train { 1.0 } else { 0.0 };
-        }
-        (psrc, pdst, py, pw)
     }
 }

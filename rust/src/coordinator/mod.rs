@@ -68,13 +68,227 @@ pub fn lipschitz_clip(spec: &ArtifactSpec, params: &mut [Tensor], clip: f32) {
     }
 }
 
-/// Gather feature rows of `nodes` into a (b, f) tensor.
-pub fn gather_features(features: &[f32], f: usize, nodes: &[u32]) -> Tensor {
-    let mut data = Vec::with_capacity(nodes.len() * f);
-    for &v in nodes {
-        data.extend_from_slice(&features[v as usize * f..(v as usize + 1) * f]);
+/// Gather feature rows of `nodes` into a caller-owned `(b, f)` buffer
+/// (every element overwritten) — sessions rebuild their `xb`/`x` input
+/// slot in place each batch.
+pub fn gather_features_into(features: &[f32], f: usize, nodes: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), nodes.len() * f);
+    for (i, &v) in nodes.iter().enumerate() {
+        out[i * f..(i + 1) * f]
+            .copy_from_slice(&features[v as usize * f..(v as usize + 1) * f]);
     }
+}
+
+/// Allocating wrapper of [`gather_features_into`].
+pub fn gather_features(features: &[f32], f: usize, nodes: &[u32]) -> Tensor {
+    let mut data = vec![0.0f32; nodes.len() * f];
+    gather_features_into(features, f, nodes, &mut data);
     Tensor::from_f32(&[nodes.len(), f], data)
+}
+
+/// One typed input slot of a trainer session — the per-step classification
+/// the old `assemble()` loops re-derived from slot *names* every batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum InSlot {
+    /// `xb` (VQ paths) or `x` (edge paths): gathered feature rows.
+    X,
+    Y,
+    WLoss,
+    Psrc,
+    Pdst,
+    Py,
+    Pw,
+    Esrc,
+    Edst,
+    Ecoef,
+    /// `param.*` input number `i` (in signature order).
+    Param(usize),
+    /// Per-layer VQ context — handled by the layer pass via [`LayerIn`].
+    Ctx,
+}
+
+/// Per-layer VQ-context input indices of a session (resolved once).
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct LayerIn {
+    pub c_in: Option<usize>,
+    pub c_out: Option<usize>,
+    pub ct_out: Option<usize>,
+    pub mask_in: Option<usize>,
+    pub m_out: Option<usize>,
+    pub m_out_t: Option<usize>,
+    pub cnt_out: Option<usize>,
+    pub cw: Option<usize>,
+    pub cww: Option<usize>,
+    pub mean: Option<usize>,
+    pub var: Option<usize>,
+}
+
+/// A trainer's persistent binding to one artifact: preallocated input
+/// tensors rewritten in place every batch, output tensors rewritten in
+/// place by `Runtime::execute_into`, and the slot classification resolved
+/// once at construction.  Holding the session across steps is what turns
+/// the old assemble-allocate-execute-drop cycle into a zero-allocation
+/// steady state on the native backend.
+pub(crate) struct Session {
+    pub inputs: Vec<Tensor>,
+    pub outputs: Vec<Tensor>,
+    pub slots: Vec<InSlot>,
+    pub lslots: Vec<LayerIn>,
+    /// Train-artifact output indices of the per-layer VQ triple.
+    pub o_xfeat: Vec<usize>,
+    pub o_gvec: Vec<usize>,
+    pub o_assign: Vec<usize>,
+}
+
+impl Session {
+    /// Resolve an artifact's signature into a session (zero-filled input
+    /// tensors + typed slots).  Unknown input names are a hard error — the
+    /// same contract the old per-step `assemble` enforced, moved to
+    /// construction time.
+    pub(crate) fn for_artifact(spec: &ArtifactSpec) -> anyhow::Result<Session> {
+        use crate::util::tensor::DType;
+        let mut slots = Vec::with_capacity(spec.inputs.len());
+        let mut lslots = vec![LayerIn::default(); spec.plan.len()];
+        let mut pi = 0usize;
+        for (idx, ts) in spec.inputs.iter().enumerate() {
+            let name = ts.name.as_str();
+            let slot = match name {
+                "xb" | "x" => InSlot::X,
+                "y" => InSlot::Y,
+                "wloss" => InSlot::WLoss,
+                "psrc" => InSlot::Psrc,
+                "pdst" => InSlot::Pdst,
+                "py" => InSlot::Py,
+                "pw" => InSlot::Pw,
+                "esrc" => InSlot::Esrc,
+                "edst" => InSlot::Edst,
+                "ecoef" => InSlot::Ecoef,
+                _ if name.starts_with("param.") => {
+                    let s = InSlot::Param(pi);
+                    pi += 1;
+                    s
+                }
+                _ => {
+                    let (lstr, field) = name
+                        .split_once('.')
+                        .ok_or_else(|| anyhow::anyhow!("unknown input {name}"))?;
+                    let l: usize = lstr[1..]
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad layer index in input {name}"))?;
+                    let ls = lslots
+                        .get_mut(l)
+                        .ok_or_else(|| anyhow::anyhow!("input {name} out of layer range"))?;
+                    match field {
+                        "c_in" => ls.c_in = Some(idx),
+                        "c_out" => ls.c_out = Some(idx),
+                        "ct_out" => ls.ct_out = Some(idx),
+                        "mask_in" => ls.mask_in = Some(idx),
+                        "m_out" => ls.m_out = Some(idx),
+                        "m_out_t" => ls.m_out_t = Some(idx),
+                        "cnt_out" => ls.cnt_out = Some(idx),
+                        "cw" => ls.cw = Some(idx),
+                        "cww" => ls.cww = Some(idx),
+                        "mean" => ls.mean = Some(idx),
+                        "var" => ls.var = Some(idx),
+                        other => anyhow::bail!("unknown ctx field {other}"),
+                    }
+                    InSlot::Ctx
+                }
+            };
+            slots.push(slot);
+        }
+        let inputs = spec
+            .inputs
+            .iter()
+            .map(|ts| match ts.dtype {
+                DType::F32 => Tensor::zeros(&ts.shape),
+                DType::I32 => Tensor::from_i32(&ts.shape, vec![0; ts.numel()]),
+            })
+            .collect();
+        let (mut o_xfeat, mut o_gvec, mut o_assign) = (Vec::new(), Vec::new(), Vec::new());
+        for l in 0..spec.plan.len() {
+            if let Some(x) = spec.output_index(&format!("l{l}.xfeat")) {
+                o_xfeat.push(x);
+            }
+            if let Some(g) = spec.output_index(&format!("l{l}.gvec")) {
+                o_gvec.push(g);
+            }
+            if let Some(a) = spec.output_index(&format!("l{l}.assign")) {
+                o_assign.push(a);
+            }
+        }
+        Ok(Session {
+            inputs,
+            outputs: Vec::new(),
+            slots,
+            lslots,
+            o_xfeat,
+            o_gvec,
+            o_assign,
+        })
+    }
+}
+
+/// Reusable link-pair buffers (`psrc`/`pdst`/`py`/`pw`), filled per batch
+/// and copied into the session's input slots.
+#[derive(Default)]
+pub(crate) struct PairBuf {
+    pub psrc: Vec<i32>,
+    pub pdst: Vec<i32>,
+    pub py: Vec<f32>,
+    pub pw: Vec<f32>,
+}
+
+/// Sample link-prediction training pairs over `nodes` (graph-global ids;
+/// pair endpoints are LOCAL row indices): positives are intra-batch arcs,
+/// negatives random intra-batch pairs; padding pairs get weight 0.  The
+/// rng draw order matches the pre-session assemble paths exactly, so
+/// trajectories are unchanged.
+pub(crate) fn fill_link_pairs(
+    graph: &crate::graph::Graph,
+    rng: &mut Rng,
+    nodes: &[u32],
+    p: usize,
+    train: bool,
+    buf: &mut PairBuf,
+) {
+    let nl = nodes.len();
+    buf.psrc.clear();
+    buf.psrc.resize(p, 0);
+    buf.pdst.clear();
+    buf.pdst.resize(p, 0);
+    buf.py.clear();
+    buf.py.resize(p, 0.0);
+    buf.pw.clear();
+    buf.pw.resize(p, 0.0);
+    let mut pos = Vec::new();
+    if train {
+        let mut local = std::collections::HashMap::new();
+        for (i, &g) in nodes.iter().enumerate() {
+            local.insert(g, i as i32);
+        }
+        'outer: for (i, &g) in nodes.iter().enumerate() {
+            for &u in graph.in_neighbors(g as usize) {
+                if let Some(&lu) = local.get(&u) {
+                    pos.push((lu, i as i32));
+                    if pos.len() >= p / 2 {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+    }
+    for (i, &(u, v)) in pos.iter().enumerate() {
+        buf.psrc[i] = u;
+        buf.pdst[i] = v;
+        buf.py[i] = 1.0;
+        buf.pw[i] = 1.0;
+    }
+    for i in pos.len()..p {
+        buf.psrc[i] = rng.below(nl) as i32;
+        buf.pdst[i] = rng.below(nl) as i32;
+        buf.pw[i] = if train { 1.0 } else { 0.0 };
+    }
 }
 
 /// Running throughput/bytes statistics for a training run.

@@ -1,21 +1,42 @@
 //! VQ-GNN trainer (paper Alg. 1): mini-batch sampling → sketch building →
 //! one fused train-step execution (Eq. 6/7 + in-graph FINDNEAREST) →
 //! RMSprop + VQ EMA update + assignment-table refresh.
+//!
+//! The trainer holds a persistent [`Session`] per artifact: input tensors
+//! are allocated once and rewritten in place every batch (sketches, labels,
+//! codeword tables, parameter copies), and outputs are rewritten in place
+//! by `Runtime::execute_into` — the steady-state step allocates nothing on
+//! the assembly/compute boundary beyond the sampled batch itself.
+//!
+//! **Pipelined batch assembly**: while the compiled executor runs step `t`,
+//! a `util::par::join2` worker samples batch `t+1` and gathers its feature
+//! rows (the parts of assembly that depend only on static data and the
+//! batcher/RNG stream).  Sketch building stays on the critical path by
+//! design: Alg. 1's data dependence means batch `t+1`'s sketches consume
+//! the assignment tables step `t` just refreshed, so prefetching them would
+//! change the trajectory.  The overlapped schedule is bit-identical to the
+//! serial one (asserted by `tests/plan_executor.rs`); it is disabled for
+//! link-task datasets, whose evaluation path shares the trainer RNG that
+//! orders prefetch draws.
 
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::coordinator::opt::Optimizer;
-use crate::coordinator::{gather_features, init_params, lipschitz_clip, opt, RunStats};
+use crate::coordinator::{
+    fill_link_pairs, gather_features_into, init_params, lipschitz_clip, opt, InSlot, PairBuf,
+    RunStats, Session,
+};
 use crate::datasets::{Dataset, Split};
 use crate::graph::Conv;
-use crate::runtime::manifest::Manifest;
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::{Artifact, Runtime};
 use crate::sampler::{NodeBatcher, NodeStrategy};
+use crate::util::par;
 use crate::util::rng::Rng;
-use crate::util::tensor::Tensor;
-use crate::vq::sketch::{build_cnt_out, build_fixed, build_learnable, SketchScratch};
+use crate::util::tensor::{self, Tensor};
+use crate::vq::sketch::{build_cnt_out_into, build_fixed_into, build_learnable_into, SketchScratch};
 use crate::vq::VqModel;
 
 /// Global gradient-scale cap for the learnable-convolution backbones.  In
@@ -43,11 +64,13 @@ fn global_grad_norm(grads: &[Tensor]) -> f64 {
 /// statistics).  Zero rows — loss-masked validation/test/padding nodes,
 /// which can be more than half the batch at the last layer — are excluded
 /// from the median so they cannot collapse the cap onto the real rows.
-fn winsorize_rows(gvec: &Tensor) -> Tensor {
-    let (b, g) = (gvec.shape[0], gvec.shape[1]);
+/// Caps in place: the rows live in the session's (step-scoped) output
+/// buffer, so no copy is taken on any path.
+fn winsorize_rows_in_place(gvec: &mut Tensor) {
+    let (b, gdim) = (gvec.shape[0], gvec.shape[1]);
     let norms: Vec<f64> = (0..b)
         .map(|i| {
-            gvec.f[i * g..(i + 1) * g]
+            gvec.f[i * gdim..(i + 1) * gdim]
                 .iter()
                 .map(|&x| x as f64 * x as f64)
                 .sum::<f64>()
@@ -56,20 +79,150 @@ fn winsorize_rows(gvec: &Tensor) -> Tensor {
         .collect();
     let mut nonzero: Vec<f64> = norms.iter().copied().filter(|&n| n > 0.0).collect();
     if nonzero.is_empty() {
-        return gvec.clone();
+        return;
     }
     nonzero.sort_by(f64::total_cmp);
     let cap = 10.0 * nonzero[nonzero.len() / 2];
-    let mut out = gvec.clone();
     for i in 0..b {
         if norms[i] > cap {
             let s = (cap / norms[i]) as f32;
-            for x in out.f[i * g..(i + 1) * g].iter_mut() {
+            for x in gvec.f[i * gdim..(i + 1) * gdim].iter_mut() {
                 *x *= s;
             }
         }
     }
-    out
+}
+
+/// `VQ_GNN_PIPELINE=0|off|false` disables the overlapped prep stage.
+pub(crate) fn pipeline_env_enabled() -> bool {
+    !matches!(
+        std::env::var("VQ_GNN_PIPELINE").as_deref(),
+        Ok("0") | Ok("off") | Ok("false")
+    )
+}
+
+/// A prefetched batch: the sampled node ids plus their gathered feature
+/// rows — everything batch assembly can compute before step `t`'s VQ
+/// updates land.
+struct PrepBatch {
+    batch: Vec<u32>,
+    pad: usize,
+    xb: Vec<f32>,
+}
+
+/// Rewrite a session's input slots in place for one batch.  The rng is
+/// only drawn for link pairs, FIRST — the same draw order as the
+/// pre-session assemble, so trajectories are unchanged.
+#[allow(clippy::too_many_arguments)]
+fn fill_session(
+    sess: &mut Session,
+    spec: &ArtifactSpec,
+    ds: &Dataset,
+    vq: &VqModel,
+    params: &[Tensor],
+    conv: Option<Conv>,
+    scratch: &mut SketchScratch,
+    rng: &mut Rng,
+    pairs: &mut PairBuf,
+    batch: &[u32],
+    pad: usize,
+    train: bool,
+    xb_pre: Option<&[f32]>,
+) -> Result<()> {
+    let b = batch.len();
+    let f = ds.cfg.f_in_pad;
+    if sess.slots.contains(&InSlot::Psrc) {
+        let p = spec.inputs[spec.input_index("psrc").unwrap()].numel();
+        fill_link_pairs(&ds.graph, rng, batch, p, train, pairs);
+    }
+    let Session { inputs, slots, lslots, .. } = sess;
+    for (idx, slot) in slots.iter().enumerate() {
+        match *slot {
+            InSlot::X => {
+                if let Some(x) = xb_pre {
+                    inputs[idx].f.copy_from_slice(x);
+                } else {
+                    gather_features_into(&ds.features, f, batch, &mut inputs[idx].f);
+                }
+            }
+            InSlot::Y => {
+                if ds.cfg.multilabel {
+                    let c = ds.cfg.n_classes;
+                    let data = &mut inputs[idx].f;
+                    for (i, &v) in batch.iter().enumerate() {
+                        data[i * c..(i + 1) * c].copy_from_slice(
+                            &ds.labels_multi[v as usize * c..(v as usize + 1) * c],
+                        );
+                    }
+                } else {
+                    let data = &mut inputs[idx].i;
+                    for (i, &v) in batch.iter().enumerate() {
+                        data[i] = ds.labels[v as usize];
+                    }
+                }
+            }
+            InSlot::WLoss => {
+                let w = &mut inputs[idx].f;
+                for (i, &v) in batch.iter().enumerate() {
+                    w[i] = if train && ds.split[v as usize] != Split::Train {
+                        0.0
+                    } else {
+                        1.0
+                    };
+                }
+                for i in (b - pad)..b {
+                    w[i] = 0.0;
+                }
+            }
+            InSlot::Psrc => inputs[idx].i.copy_from_slice(&pairs.psrc),
+            InSlot::Pdst => inputs[idx].i.copy_from_slice(&pairs.pdst),
+            InSlot::Py => inputs[idx].f.copy_from_slice(&pairs.py),
+            InSlot::Pw => inputs[idx].f.copy_from_slice(&pairs.pw),
+            InSlot::Param(pi) => inputs[idx].f.copy_from_slice(&params[pi].f),
+            InSlot::Ctx => {}
+            InSlot::Esrc | InSlot::Edst | InSlot::Ecoef => {
+                anyhow::bail!("edge-list input in a VQ artifact ({})", spec.name)
+            }
+        }
+    }
+    for (l, ls) in lslots.iter().enumerate() {
+        let layer = &vq.layers[l];
+        if let (Some(ci), Some(co), Some(ct)) = (ls.c_in, ls.c_out, ls.ct_out) {
+            let (tc, to, tt) = tensor::mut3(inputs, ci, co, ct);
+            build_fixed_into(
+                &ds.graph,
+                conv.expect("fixed-conv artifact without a fixed conv"),
+                batch,
+                layer,
+                scratch,
+                &mut tc.f,
+                &mut to.f,
+                &mut tt.f,
+            );
+        }
+        if let (Some(mi), Some(mo), Some(mt)) = (ls.mask_in, ls.m_out, ls.m_out_t) {
+            let (tm, to, tt) = tensor::mut3(inputs, mi, mo, mt);
+            build_learnable_into(
+                &ds.graph, batch, layer, scratch, &mut tm.f, &mut to.f, &mut tt.f,
+            );
+        }
+        if let Some(i) = ls.cnt_out {
+            build_cnt_out_into(batch, layer, scratch, &mut inputs[i].f);
+        }
+        if let Some(i) = ls.cw {
+            layer.cw_into(&mut inputs[i].f);
+        }
+        if let Some(i) = ls.cww {
+            layer.cww_into(&mut inputs[i].f);
+        }
+        if let Some(i) = ls.mean {
+            layer.mean_into(&mut inputs[i].f);
+        }
+        if let Some(i) = ls.var {
+            layer.var_into(&mut inputs[i].f);
+        }
+    }
+    Ok(())
 }
 
 pub struct VqTrainer {
@@ -86,9 +239,12 @@ pub struct VqTrainer {
     gamma: f32,
     beta: f32,
     weight_clip: f32,
-    p_pairs: usize,
-    /// Per-layer (c_out, ct_out) stash between consecutive ctx inputs.
-    pending: Option<(usize, Tensor, Tensor)>,
+    train_io: Session,
+    infer_io: Session,
+    pairs: PairBuf,
+    /// Overlapped prep stage on/off (see module docs; off for link tasks).
+    pipeline: bool,
+    prefetched: Option<PrepBatch>,
     pub stats: RunStats,
 }
 
@@ -124,6 +280,9 @@ impl VqTrainer {
         };
         let batcher = NodeBatcher::new(pool, spec.b, strategy);
         let scratch = SketchScratch::new(ds.n());
+        let train_io = Session::for_artifact(spec)?;
+        let infer_io = Session::for_artifact(&infer_art.spec)?;
+        let pipeline = ds.cfg.task != "link" && pipeline_env_enabled();
         Ok(VqTrainer {
             train_art,
             infer_art,
@@ -137,18 +296,29 @@ impl VqTrainer {
             gamma: man.train.gamma as f32,
             beta: man.train.beta as f32,
             weight_clip: man.train.weight_clip as f32,
-            p_pairs: man.train.p_pairs,
-            pending: None,
+            train_io,
+            infer_io,
+            pairs: PairBuf::default(),
+            pipeline,
+            prefetched: None,
             stats: RunStats::default(),
             ds,
         })
     }
 
-    fn conv(&self) -> Conv {
+    /// Toggle the overlapped prep stage (always off for link tasks, whose
+    /// evaluation path shares the trainer rng).  The pipelined and serial
+    /// schedules compute identical trajectories; the toggle exists for the
+    /// parity tests and the allocation benchmarks.
+    pub fn set_pipelined(&mut self, on: bool) {
+        self.pipeline = on && self.ds.cfg.task != "link";
+    }
+
+    fn conv_opt(&self) -> Option<Conv> {
         match self.model_name.as_str() {
-            "gcn" => Conv::GcnSym,
-            "sage" => Conv::SageMean,
-            other => panic!("fixed conv requested for learnable model {other}"),
+            "gcn" => Some(Conv::GcnSym),
+            "sage" => Some(Conv::SageMean),
+            _ => None, // learnable convolutions build count sketches instead
         }
     }
 
@@ -156,64 +326,109 @@ impl VqTrainer {
         matches!(self.model_name.as_str(), "gat" | "txf")
     }
 
+    /// Sample one batch and gather its feature rows — the prefetchable half
+    /// of batch assembly (static data + the batcher/RNG stream only).
+    fn build_prep(batcher: &mut NodeBatcher, ds: &Dataset, mut rng: Rng) -> PrepBatch {
+        let (batch, pad) = batcher.next_batch(&ds.graph, &mut rng);
+        let f = ds.cfg.f_in_pad;
+        let mut xb = vec![0.0f32; batch.len() * f];
+        gather_features_into(&ds.features, f, &batch, &mut xb);
+        PrepBatch { batch, pad, xb }
+    }
+
     pub fn train_step(&mut self, rt: &mut Runtime) -> Result<f32> {
         let t0 = std::time::Instant::now();
         let ds = self.ds.clone();
-        let mut rng = self.rng.fork(self.stats.steps);
-        let (batch, pad) = self.batcher.next_batch(&ds.graph, &mut rng);
         let art = self.train_art.clone();
-        let inputs = self.assemble(&art, &batch, pad, true)?;
-        let outputs = rt.execute(&art, &inputs)?;
-        let spec = &art.spec;
-        let loss = outputs[0].f[0];
-        // VQ EMA updates + assignment-table refresh per layer (Alg. 2).
-        // Learnable convolutions winsorize the gradient rows first: a
-        // single spiky ∂ℓ/∂num row (attention-denominator conditioning)
-        // would otherwise poison its cluster's EMA codeword for ~1/(1-γ)
-        // steps and get re-broadcast into every later batch's Eq. 7
-        // backward messages.
-        for l in 0..spec.plan.len() {
-            let xi = spec.output_index(&format!("l{l}.xfeat")).unwrap();
-            let gi = spec.output_index(&format!("l{l}.gvec")).unwrap();
-            let ai = spec.output_index(&format!("l{l}.assign")).unwrap();
-            let gv;
-            let gvec = if self.learnable() {
-                gv = winsorize_rows(&outputs[gi]);
-                &gv
-            } else {
-                &outputs[gi]
-            };
-            self.vq.layers[l].update_from_batch(
-                &batch, &outputs[xi], gvec, &outputs[ai],
-                self.gamma, self.beta,
+        let prep = match self.prefetched.take() {
+            Some(p) => p,
+            None => {
+                let rng = self.rng.fork(self.stats.steps);
+                Self::build_prep(&mut self.batcher, &ds, rng)
+            }
+        };
+        let conv = self.conv_opt();
+        let learnable = self.learnable();
+        // synchronous half of assembly: sketches against the JUST-updated
+        // assignment tables, codeword tensors, labels, params
+        fill_session(
+            &mut self.train_io,
+            &art.spec,
+            &ds,
+            &self.vq,
+            &self.params,
+            conv,
+            &mut self.scratch,
+            &mut self.rng,
+            &mut self.pairs,
+            &prep.batch,
+            prep.pad,
+            true,
+            Some(&prep.xb),
+        )?;
+        // step t computes while the prep worker samples + gathers batch t+1
+        let exec_res = if self.pipeline {
+            let prng = self.rng.fork(self.stats.steps + 1);
+            let batcher = &mut self.batcher;
+            let dsr: &Dataset = &ds;
+            let io = &mut self.train_io;
+            let (inputs, outputs) = (&io.inputs, &mut io.outputs);
+            let (next, res) = par::join2(
+                move || Self::build_prep(batcher, dsr, prng),
+                move || rt.execute_into(&art, inputs, outputs),
             );
-        }
-        // optimizer on the grad.* tail (ordered like params); attention
-        // backbones normalize the global gradient scale (GRAD_NORM_CAP) —
-        // the same Eq. 7 spikes that motivate the winsorization also reach
-        // the parameter gradients of the lower layers.
-        let n_params = self.params.len();
-        let tail = &outputs[outputs.len() - n_params..];
-        let mut clipped: Option<Vec<Tensor>> = None;
-        if self.learnable() {
-            let norm = global_grad_norm(tail);
-            if norm > GRAD_NORM_CAP {
-                let s = (GRAD_NORM_CAP / norm) as f32;
-                clipped = Some(
-                    tail.iter()
-                        .map(|t| {
-                            Tensor::from_f32(&t.shape, t.f.iter().map(|x| x * s).collect())
-                        })
-                        .collect(),
+            self.prefetched = Some(next);
+            res
+        } else {
+            rt.execute_into(&art, &self.train_io.inputs, &mut self.train_io.outputs)
+        };
+        exec_res?;
+        let spec = &self.train_art.spec;
+        let loss = self.train_io.outputs[0].f[0];
+        // VQ EMA updates + assignment-table refresh per layer (Alg. 2).
+        // Learnable convolutions winsorize the gradient rows first — in
+        // place, in the session's output buffer: a single spiky ∂ℓ/∂num row
+        // (attention-denominator conditioning) would otherwise poison its
+        // cluster's EMA codeword for ~1/(1-γ) steps and get re-broadcast
+        // into every later batch's Eq. 7 backward messages.
+        {
+            let sess = &mut self.train_io;
+            for l in 0..spec.plan.len() {
+                let (xi, gi, ai) = (sess.o_xfeat[l], sess.o_gvec[l], sess.o_assign[l]);
+                if learnable {
+                    winsorize_rows_in_place(&mut sess.outputs[gi]);
+                }
+                self.vq.layers[l].update_from_batch(
+                    &prep.batch,
+                    &sess.outputs[xi],
+                    &sess.outputs[gi],
+                    &sess.outputs[ai],
+                    self.gamma,
+                    self.beta,
                 );
             }
+            // optimizer on the grad.* tail (ordered like params); attention
+            // backbones normalize the global gradient scale (GRAD_NORM_CAP)
+            // in place — the same Eq. 7 spikes that motivate the
+            // winsorization also reach the parameter gradients of the lower
+            // layers.
+            let n_params = self.params.len();
+            let start = sess.outputs.len() - n_params;
+            if learnable {
+                let norm = global_grad_norm(&sess.outputs[start..]);
+                if norm > GRAD_NORM_CAP {
+                    let s = (GRAD_NORM_CAP / norm) as f32;
+                    for t in sess.outputs[start..].iter_mut() {
+                        for x in t.f.iter_mut() {
+                            *x *= s;
+                        }
+                    }
+                }
+            }
+            let grads: Vec<&Tensor> = sess.outputs[start..].iter().collect();
+            self.opt.step(&mut self.params, &grads);
         }
-        let grads: Vec<&Tensor> = match &clipped {
-            Some(v) => v.iter().collect(),
-            None => tail.iter().collect(),
-        };
-        self.opt.step(&mut self.params, &grads);
-        if self.learnable() {
+        if learnable {
             lipschitz_clip(spec, &mut self.params, self.weight_clip);
         }
         let step_bytes = spec.input_bytes() + spec.output_bytes()
@@ -221,8 +436,8 @@ impl VqTrainer {
         self.stats.peak_step_bytes = self.stats.peak_step_bytes.max(step_bytes);
         self.stats.steps += 1;
         self.stats.loss_last = loss;
-        self.stats.nodes_per_step = batch.len() as u64;
-        self.stats.messages_per_step = self.count_messages(&batch);
+        self.stats.nodes_per_step = prep.batch.len() as u64;
+        self.stats.messages_per_step = self.count_messages(&prep.batch);
         self.stats.train_secs += t0.elapsed().as_secs_f64();
         Ok(loss)
     }
@@ -244,24 +459,42 @@ impl VqTrainer {
         Ok(last)
     }
 
-    /// Mini-batch inference over arbitrary nodes via the infer artifact;
-    /// returns row-major (|nodes|, c) logits/embeddings.
+    /// Mini-batch inference over arbitrary nodes via the infer artifact's
+    /// session; returns row-major (|nodes|, c) logits/embeddings.
     pub fn infer_nodes(&mut self, rt: &mut Runtime, nodes: &[u32]) -> Result<Vec<f32>> {
+        let ds = self.ds.clone();
         let art = self.infer_art.clone();
         let b = art.spec.b;
         let c = art.spec.outputs[0].shape[1];
+        let conv = self.conv_opt();
         let mut logits = vec![0.0f32; nodes.len() * c];
+        let mut batch: Vec<u32> = Vec::with_capacity(b);
         let mut i = 0;
         while i < nodes.len() {
             let end = (i + b).min(nodes.len());
-            let mut batch: Vec<u32> = nodes[i..end].to_vec();
+            batch.clear();
+            batch.extend_from_slice(&nodes[i..end]);
             let real = batch.len();
             while batch.len() < b {
                 batch.push(nodes[0]); // pad rows; outputs ignored
             }
-            let inputs = self.assemble(&art, &batch, 0, false)?;
-            let out = rt.execute(&art, &inputs)?;
-            logits[i * c..end * c].copy_from_slice(&out[0].f[..real * c]);
+            fill_session(
+                &mut self.infer_io,
+                &art.spec,
+                &ds,
+                &self.vq,
+                &self.params,
+                conv,
+                &mut self.scratch,
+                &mut self.rng,
+                &mut self.pairs,
+                &batch,
+                0,
+                false,
+                None,
+            )?;
+            rt.execute_into(&art, &self.infer_io.inputs, &mut self.infer_io.outputs)?;
+            logits[i * c..end * c].copy_from_slice(&self.infer_io.outputs[0].f[..real * c]);
             i = end;
         }
         Ok(logits)
@@ -338,26 +571,43 @@ impl VqTrainer {
         }
         // pass 2: forward sweep yields true per-layer inputs; re-assign
         let art = self.infer_art.clone();
-        let spec = art.spec.clone();
-        let b = spec.b;
+        let b = art.spec.b;
+        let conv = self.conv_opt();
         let nl = self.vq.layers.len();
         let mut feats: Vec<Vec<f32>> = (0..nl)
             .map(|l| vec![0.0f32; nodes.len() * self.vq.layers[l].plan.f_in])
             .collect();
+        let mut batch: Vec<u32> = Vec::with_capacity(b);
         let mut i = 0;
         while i < nodes.len() {
             let end = (i + b).min(nodes.len());
-            let mut batch: Vec<u32> = nodes[i..end].to_vec();
+            batch.clear();
+            batch.extend_from_slice(&nodes[i..end]);
             let real = batch.len();
             while batch.len() < b {
                 batch.push(nodes[0]);
             }
-            let inputs = self.assemble(&art, &batch, 0, false)?;
-            let out = rt.execute(&art, &inputs)?;
+            fill_session(
+                &mut self.infer_io,
+                &art.spec,
+                &ds,
+                &self.vq,
+                &self.params,
+                conv,
+                &mut self.scratch,
+                &mut self.rng,
+                &mut self.pairs,
+                &batch,
+                0,
+                false,
+                None,
+            )?;
+            rt.execute_into(&art, &self.infer_io.inputs, &mut self.infer_io.outputs)?;
             for l in 0..nl {
                 let fl = self.vq.layers[l].plan.f_in;
-                let xi = spec.output_index(&format!("l{l}.xfeat")).unwrap();
-                feats[l][i * fl..end * fl].copy_from_slice(&out[xi].f[..real * fl]);
+                let xi = self.infer_io.o_xfeat[l];
+                feats[l][i * fl..end * fl]
+                    .copy_from_slice(&self.infer_io.outputs[xi].f[..real * fl]);
             }
             i = end;
         }
@@ -399,165 +649,5 @@ impl VqTrainer {
                 layer.assign[j * layer.n + node as usize] = out[i] as u32;
             }
         }
-    }
-
-    /// Sample link-prediction training pairs: positives are intra-batch
-    /// arcs, negatives random intra-batch pairs; padding pairs get weight 0.
-    fn fill_link_pairs(&mut self, spec_p: usize, batch: &[u32], train: bool)
-                       -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>) {
-        let p = spec_p;
-        let b = batch.len();
-        let mut pos = Vec::new();
-        if train {
-            let mut local = std::collections::HashMap::new();
-            for (i, &g) in batch.iter().enumerate() {
-                local.insert(g, i as i32);
-            }
-            'outer: for (i, &g) in batch.iter().enumerate() {
-                for &u in self.ds.graph.in_neighbors(g as usize) {
-                    if let Some(&lu) = local.get(&u) {
-                        pos.push((lu, i as i32));
-                        if pos.len() >= p / 2 {
-                            break 'outer;
-                        }
-                    }
-                }
-            }
-        }
-        let mut psrc = vec![0i32; p];
-        let mut pdst = vec![0i32; p];
-        let mut py = vec![0.0f32; p];
-        let mut pw = vec![0.0f32; p];
-        for (i, &(u, v)) in pos.iter().enumerate() {
-            psrc[i] = u;
-            pdst[i] = v;
-            py[i] = 1.0;
-            pw[i] = 1.0;
-        }
-        for i in pos.len()..p {
-            psrc[i] = self.rng.below(b) as i32;
-            pdst[i] = self.rng.below(b) as i32;
-            pw[i] = if train { 1.0 } else { 0.0 };
-        }
-        (psrc, pdst, py, pw)
-    }
-
-    /// Assemble the artifact's ordered input list for one batch.
-    fn assemble(&mut self, art: &Rc<Artifact>, batch: &[u32], pad: usize,
-                train: bool) -> Result<Vec<Tensor>> {
-        self.pending = None;
-        let spec = &art.spec;
-        let ds = self.ds.clone();
-        let b = batch.len();
-        let f = ds.cfg.f_in_pad;
-        let link_pairs = if ds.cfg.task == "link" && spec.input_index("psrc").is_some() {
-            Some(self.fill_link_pairs(
-                spec.inputs[spec.input_index("psrc").unwrap()].numel(),
-                batch, train,
-            ))
-        } else {
-            None
-        };
-        let mut inputs: Vec<Tensor> = Vec::with_capacity(spec.inputs.len());
-        let mut pi = 0usize;
-        for ts in &spec.inputs {
-            let name = ts.name.as_str();
-            let t: Tensor = if name == "xb" {
-                gather_features(&ds.features, f, batch)
-            } else if name == "y" {
-                if ds.cfg.multilabel {
-                    let c = ds.cfg.n_classes;
-                    let mut data = Vec::with_capacity(b * c);
-                    for &v in batch {
-                        data.extend_from_slice(
-                            &ds.labels_multi[v as usize * c..(v as usize + 1) * c],
-                        );
-                    }
-                    Tensor::from_f32(&[b, c], data)
-                } else {
-                    Tensor::from_i32(
-                        &[b],
-                        batch.iter().map(|&v| ds.labels[v as usize]).collect(),
-                    )
-                }
-            } else if name == "wloss" {
-                let mut w: Vec<f32> = batch
-                    .iter()
-                    .map(|&v| {
-                        if train && ds.split[v as usize] != Split::Train {
-                            0.0
-                        } else {
-                            1.0
-                        }
-                    })
-                    .collect();
-                for i in (b - pad)..b {
-                    w[i] = 0.0;
-                }
-                Tensor::from_f32(&[b], w)
-            } else if name == "psrc" {
-                Tensor::from_i32(&ts.shape, link_pairs.as_ref().unwrap().0.clone())
-            } else if name == "pdst" {
-                Tensor::from_i32(&ts.shape, link_pairs.as_ref().unwrap().1.clone())
-            } else if name == "py" {
-                Tensor::from_f32(&ts.shape, link_pairs.as_ref().unwrap().2.clone())
-            } else if name == "pw" {
-                Tensor::from_f32(&ts.shape, link_pairs.as_ref().unwrap().3.clone())
-            } else if name.starts_with("param.") {
-                let t = self.params[pi].clone();
-                pi += 1;
-                t
-            } else if let Some((lstr, field)) = name.split_once('.') {
-                let l: usize = lstr[1..].parse().context("layer index")?;
-                match field {
-                    "c_in" => {
-                        let layer = &self.vq.layers[l];
-                        let (c_in, c_out, ct_out) = build_fixed(
-                            &ds.graph, self.conv(), batch, layer, &mut self.scratch,
-                        );
-                        self.pending = Some((l, c_out, ct_out));
-                        c_in
-                    }
-                    "c_out" => {
-                        let (pl, c_out, _) = self.pending.as_ref().unwrap();
-                        assert_eq!(*pl, l);
-                        c_out.clone()
-                    }
-                    "ct_out" => {
-                        let (pl, _, ct_out) = self.pending.take().unwrap();
-                        assert_eq!(pl, l);
-                        ct_out
-                    }
-                    "mask_in" => {
-                        let layer = &self.vq.layers[l];
-                        let (mask_in, m_out, m_out_t) = build_learnable(
-                            &ds.graph, batch, layer, &mut self.scratch,
-                        );
-                        self.pending = Some((l, m_out, m_out_t));
-                        mask_in
-                    }
-                    "m_out" => {
-                        let (pl, m_out, _) = self.pending.as_ref().unwrap();
-                        assert_eq!(*pl, l);
-                        m_out.clone()
-                    }
-                    "m_out_t" => {
-                        let (pl, _, m_out_t) = self.pending.take().unwrap();
-                        assert_eq!(pl, l);
-                        m_out_t
-                    }
-                    "cnt_out" => build_cnt_out(batch, &self.vq.layers[l], &mut self.scratch),
-                    "cw" => self.vq.layers[l].cw_tensor(),
-                    "cww" => self.vq.layers[l].cww_tensor(),
-                    "mean" => self.vq.layers[l].mean_tensor(),
-                    "var" => self.vq.layers[l].var_tensor(),
-                    other => anyhow::bail!("unknown ctx field {other}"),
-                }
-            } else {
-                anyhow::bail!("unknown input {name}")
-            };
-            inputs.push(t);
-        }
-        Ok(inputs)
     }
 }

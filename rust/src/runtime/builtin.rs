@@ -6,6 +6,11 @@
 //! Python, so this module reconstructs the registry deterministically.  Any
 //! drift between the two is caught by `tests/` (the builtin manifest is
 //! validated against a checked-in manifest.json whenever one exists).
+//!
+//! The signatures declared here are resolved exactly once per artifact by
+//! `runtime::native::plan::Plan::compile` (slot indices + per-layer dims);
+//! a registry output the compiled executor would not produce fails at load
+//! time, not at step time — keep the two in sync when adding artifacts.
 
 use std::path::Path;
 

@@ -1,8 +1,10 @@
 //! Execution runtime behind a [`Backend`] trait with two implementations:
 //!
-//! - **native** (default): pure-Rust CPU interpreter of the manifest's
+//! - **native** (default): pure-Rust CPU executor of the manifest's
 //!   artifact contract — zero Python/JAX dependency, runs anywhere
-//!   (`runtime::native`, specs reconstructed by `runtime::builtin`);
+//!   (`runtime::native`: artifacts are plan-compiled at load time and run
+//!   against a reusable step arena; specs reconstructed by
+//!   `runtime::builtin`);
 //! - **pjrt** (`--features pjrt`): the original PJRT executor for
 //!   AOT-compiled HLO text artifacts (`runtime::pjrt`).
 //!
@@ -30,6 +32,20 @@ use manifest::{ArtifactSpec, Manifest};
 /// A compiled artifact, ready to execute.
 pub trait Executable {
     fn run(&self, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Execute into caller-held output tensors.  Stateful executors (the
+    /// plan-compiled native backend) overwrite the tensors in place so a
+    /// session reusing one `outputs` vector allocates nothing per step; the
+    /// default falls back to [`Executable::run`] and replaces the vector.
+    fn run_into(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Tensor],
+        outputs: &mut Vec<Tensor>,
+    ) -> Result<()> {
+        *outputs = self.run(spec, inputs)?;
+        Ok(())
+    }
 }
 
 /// An execution engine that can compile manifest artifacts.
@@ -112,6 +128,20 @@ impl Runtime {
 
     /// Execute with positional inputs matching the manifest signature.
     pub fn execute(&mut self, art: &Artifact, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut outputs = Vec::new();
+        self.execute_into(art, inputs, &mut outputs)?;
+        Ok(outputs)
+    }
+
+    /// Execute into a caller-held output vector (a trainer/serving
+    /// session's persistent buffers): on the native backend the tensors are
+    /// rewritten in place, so the steady-state step allocates nothing here.
+    pub fn execute_into(
+        &mut self,
+        art: &Artifact,
+        inputs: &[Tensor],
+        outputs: &mut Vec<Tensor>,
+    ) -> Result<()> {
         let spec = &art.spec;
         if inputs.len() != spec.inputs.len() {
             bail!(
@@ -135,7 +165,7 @@ impl Runtime {
             }
             self.bytes_in += t.bytes() as u64;
         }
-        let outputs = art.exe.run(spec, inputs)?;
+        art.exe.run_into(spec, inputs, outputs)?;
         if outputs.len() != spec.outputs.len() {
             bail!(
                 "{}: got {} outputs, manifest declares {}",
@@ -144,11 +174,11 @@ impl Runtime {
                 spec.outputs.len()
             );
         }
-        for t in &outputs {
+        for t in outputs.iter() {
             self.bytes_out += t.bytes() as u64;
         }
         self.executions += 1;
-        Ok(outputs)
+        Ok(())
     }
 }
 

@@ -1,0 +1,325 @@
+//! The step arena: every intermediate buffer one compiled step touches,
+//! allocated once at `compile()` time and rewritten in place on every
+//! subsequent step.  Steady-state train/infer/serve steps through a cached
+//! executor perform no heap allocation in the compute path — the
+//! `alloc-count` bench feature measures exactly this.  (Two bounded
+//! exceptions, both internal to the blocked-parallel kernels above their
+//! size thresholds: the per-edge scatter's destination buckets and
+//! `util::par`'s worker bookkeeping.)
+//!
+//! Reuse discipline (what makes a reused buffer bit-identical to a fresh
+//! one): every buffer is either fully overwritten by the op that produces
+//! it (`*_into` ops zero-then-accumulate or assign every element) or
+//! explicitly `fill(0.0)`-ed before an accumulation loop.  Buffers are
+//! allocated at their maximum per-layer size and sliced to the live layer's
+//! logical width at each use site, so one arena serves every layer of a
+//! plan.  Nothing in the arena carries semantic state across steps — a
+//! cached executor is still a pure function of its inputs (pinned by
+//! `tests/plan_executor.rs`).
+
+use super::plan::{Plan, PlanKind};
+
+/// Forward residuals of one GAT attention head (VQ path), preallocated.
+#[derive(Debug, Default)]
+pub struct HeadBufs {
+    pub proj: Vec<f32>,    // (b, hh)  X W_s
+    pub e_src: Vec<f32>,   // (b,)     proj · a_src
+    pub e_dst: Vec<f32>,   // (b,)     proj · a_dst
+    pub cproj: Vec<f32>,   // (k, hh)  X̃ W_s
+    pub ecw_src: Vec<f32>, // (k,)     cproj · a_src
+    pub ecw_dst: Vec<f32>, // (k,)     cproj · a_dst
+    pub c_in: Vec<f32>,    // (b, b)   masked in-batch scores
+    pub c_out: Vec<f32>,   // (b, k)   count-weighted out-of-batch scores
+    pub m: Vec<f32>,       // (b, f)   approximated messages C_in X + C_out X̃
+    pub den: Vec<f32>,     // (b,)     attention mass
+    pub o: Vec<f32>,       // (b, hh)  normalized head output
+}
+
+impl HeadBufs {
+    fn new(b: usize, k: usize, f: usize, hh: usize) -> HeadBufs {
+        HeadBufs {
+            proj: vec![0.0; b * hh],
+            e_src: vec![0.0; b],
+            e_dst: vec![0.0; b],
+            cproj: vec![0.0; k * hh],
+            ecw_src: vec![0.0; k],
+            ecw_dst: vec![0.0; k],
+            c_in: vec![0.0; b * b],
+            c_out: vec![0.0; b * k],
+            m: vec![0.0; b * f],
+            den: vec![0.0; b],
+            o: vec![0.0; b * hh],
+        }
+    }
+}
+
+/// Forward residuals of the txf global-attention branch, preallocated.
+#[derive(Debug, Default)]
+pub struct GlobBufs {
+    pub q: Vec<f32>,     // (b, dk)
+    pub kk: Vec<f32>,    // (b, dk)
+    pub kcw: Vec<f32>,   // (k, dk)  X̃ W_k
+    pub qcw: Vec<f32>,   // (k, dk)  X̃ W_q (transposed-sketch side)
+    pub t_in: Vec<f32>,  // (b, b)   scaled raw dots (cap-gate input)
+    pub t_out: Vec<f32>, // (b, k)
+    pub c_in: Vec<f32>,  // (b, b)   exp scores
+    pub c_out: Vec<f32>, // (b, k)   cnt_out-weighted exp scores
+    pub m: Vec<f32>,     // (b, f)
+    pub den: Vec<f32>,   // (b,)
+    pub o: Vec<f32>,     // (b, h)
+}
+
+impl GlobBufs {
+    fn new(b: usize, k: usize, f: usize, h: usize, dk: usize) -> GlobBufs {
+        GlobBufs {
+            q: vec![0.0; b * dk],
+            kk: vec![0.0; b * dk],
+            kcw: vec![0.0; k * dk],
+            qcw: vec![0.0; k * dk],
+            t_in: vec![0.0; b * b],
+            t_out: vec![0.0; b * k],
+            c_in: vec![0.0; b * b],
+            c_out: vec![0.0; b * k],
+            m: vec![0.0; b * f],
+            den: vec![0.0; b],
+            o: vec![0.0; b * h],
+        }
+    }
+}
+
+/// Forward residuals of one per-edge GAT head (edge-list path).
+#[derive(Debug, Default)]
+pub struct EdgeHeadBufs {
+    pub proj: Vec<f32>,  // (nn, hh)
+    pub e_src: Vec<f32>, // (nn,)
+    pub e_dst: Vec<f32>, // (nn,)
+    pub den: Vec<f32>,   // (nn,)
+    pub o: Vec<f32>,     // (nn, hh) normalized head output
+}
+
+impl EdgeHeadBufs {
+    fn new(nn: usize, hh: usize) -> EdgeHeadBufs {
+        EdgeHeadBufs {
+            proj: vec![0.0; nn * hh],
+            e_src: vec![0.0; nn],
+            e_dst: vec![0.0; nn],
+            den: vec![0.0; nn],
+            o: vec![0.0; nn * hh],
+        }
+    }
+}
+
+/// All of a compiled step's reusable buffers.  Per-layer vectors hold
+/// forward residuals that the backward pass re-reads; `s_*` fields are
+/// within-layer scratch sized to the maximum use across layers.
+#[derive(Debug, Default)]
+pub struct StepArena {
+    // per-layer persistent forward residuals
+    pub xfeat: Vec<Vec<f32>>,   // layer inputs (rows, f_in)
+    pub pre: Vec<Vec<f32>>,     // pre-activations (rows, h_out)
+    pub mbuf: Vec<Vec<f32>>,    // fixed-conv messages / edge aggregates
+    pub gvec: Vec<Vec<f32>>,    // per-layer probe gradients (b, g_dim)
+    pub cw_feat: Vec<Vec<f32>>, // attn: feature half of the codebook (k, f)
+    pub heads: Vec<Vec<HeadBufs>>,
+    pub glob: Vec<Option<GlobBufs>>,
+    pub eheads: Vec<Vec<EdgeHeadBufs>>,
+    // rotating gradient buffers (rows × max dim)
+    pub g: Vec<f32>,
+    pub dh: Vec<f32>,
+    // generic scratch
+    pub s_un: Vec<f32>,   // unsketch output (b, cf)
+    pub s_mat: Vec<f32>,  // matmul temp (rows, max dim)
+    pub s_gsl: Vec<f32>,  // Eq. 7 gradient-column messages
+    pub s_logp: Vec<f32>, // log-softmax (rows, c)
+    pub s_rs: Vec<f32>,   // row-sum temp (rows,)
+    // attention backward scratch
+    pub s_go: Vec<f32>,     // per-head slice of the incoming gradient
+    pub s_gnum: Vec<f32>,   // numerator cotangent
+    pub s_gden: Vec<f32>,   // denominator cotangent
+    pub s_dm: Vec<f32>,     // message cotangent (b, f)
+    pub s_dcin: Vec<f32>,   // ∂ℓ/∂C_in (b, b)
+    pub s_dcout: Vec<f32>,  // ∂ℓ/∂C̃_out (b, k)
+    pub s_ct: Vec<f32>,     // transposed-score tile (b, k)
+    pub s_cwg: Vec<f32>,    // gradient-column codeword slice (k, h)
+    pub s_desrc: Vec<f32>,  // (b,)
+    pub s_dedst: Vec<f32>,  // (b,)
+    pub s_decw: Vec<f32>,   // (k,)
+    pub s_dproj: Vec<f32>,  // (rows, hh)
+    pub s_dcproj: Vec<f32>, // (k, hh)
+    pub s_das: Vec<f32>,    // per-head a_src gradient (hh,)
+    pub s_dad: Vec<f32>,    // per-head a_dst gradient (hh,)
+    pub s_wtmp: Vec<f32>,   // weight-gradient temp (f, max(hh, dk))
+    // txf global-branch backward scratch
+    pub s_dtin: Vec<f32>,  // (b, b)
+    pub s_dtout: Vec<f32>, // (b, k)
+    pub s_dq: Vec<f32>,    // (b, dk)
+    pub s_dkk: Vec<f32>,   // (b, dk)
+    pub s_dkcw: Vec<f32>,  // (k, dk)
+    // edge backward scratch
+    pub s_dagg: Vec<f32>, // scattered aggregate cotangent (nn, f)
+    // Alg. 2 FINDNEAREST scratch
+    pub s_zb: Vec<f32>,  // branch concat slice (b, fp)
+    pub s_zw: Vec<f32>,  // whitened slice (b, fp) / masked codebook (k, fp)
+    pub s_inv: Vec<f32>, // inverse std (fp,)
+}
+
+fn zeros(n: usize) -> Vec<f32> {
+    vec![0.0; n]
+}
+
+impl StepArena {
+    pub fn for_plan(plan: &Plan) -> StepArena {
+        let mut ar = StepArena::default();
+        match plan.kind {
+            PlanKind::Vq(mode) => size_vq(&mut ar, plan, mode == super::plan::Mode::Train),
+            PlanKind::VqAttn(mode) => size_attn(&mut ar, plan, mode == super::plan::Mode::Train),
+            PlanKind::Edge { train } => size_edge(&mut ar, plan, train),
+            PlanKind::Assign => {
+                ar.s_zb = zeros(plan.b * plan.fp0);
+                ar.s_zw = zeros(plan.k * plan.fp0);
+            }
+        }
+        ar
+    }
+}
+
+fn size_vq(ar: &mut StepArena, plan: &Plan, train: bool) {
+    let b = plan.b;
+    let mut maxdim = 0usize;
+    let mut max_cf = 0usize;
+    let mut max_fp = 0usize;
+    for sl in &plan.layers {
+        maxdim = maxdim.max(sl.f_in).max(sl.h_out);
+        max_cf = max_cf.max(sl.cf);
+        max_fp = max_fp.max(sl.fp);
+    }
+    ar.xfeat = plan.layers.iter().map(|sl| zeros(b * sl.f_in)).collect();
+    ar.pre = plan.layers.iter().map(|sl| zeros(b * sl.h_out)).collect();
+    ar.mbuf = plan.layers.iter().map(|sl| zeros(b * sl.f_in)).collect();
+    ar.s_un = zeros(b * max_cf);
+    ar.s_mat = zeros(b * maxdim);
+    if train {
+        ar.gvec = plan.layers.iter().map(|sl| zeros(b * sl.g_dim)).collect();
+        ar.g = zeros(b * maxdim);
+        ar.dh = zeros(b * maxdim);
+        ar.s_gsl = zeros(b * maxdim);
+        ar.s_logp = zeros(b * plan.c);
+        ar.s_zb = zeros(b * max_fp);
+        ar.s_zw = zeros(b * max_fp);
+        ar.s_inv = zeros(max_fp);
+    }
+}
+
+fn size_attn(ar: &mut StepArena, plan: &Plan, train: bool) {
+    let (b, k) = (plan.b, plan.k);
+    let mut f_max = 0usize;
+    let mut h_max = 0usize;
+    let mut hh_max = 0usize;
+    let mut dk_max = 0usize;
+    let mut max_fp = 0usize;
+    for sl in &plan.layers {
+        f_max = f_max.max(sl.f_in);
+        h_max = h_max.max(sl.h_out);
+        hh_max = hh_max.max(sl.hh);
+        dk_max = dk_max.max(sl.dk);
+        max_fp = max_fp.max(sl.fp);
+    }
+    let maxdim = f_max.max(h_max).max(dk_max);
+    ar.xfeat = plan.layers.iter().map(|sl| zeros(b * sl.f_in)).collect();
+    ar.pre = plan.layers.iter().map(|sl| zeros(b * sl.h_out)).collect();
+    ar.cw_feat = plan.layers.iter().map(|sl| zeros(k * sl.f_in)).collect();
+    ar.heads = plan
+        .layers
+        .iter()
+        .map(|sl| (0..sl.heads).map(|_| HeadBufs::new(b, k, sl.f_in, sl.hh)).collect())
+        .collect();
+    ar.glob = plan
+        .layers
+        .iter()
+        .map(|sl| {
+            if plan.txf {
+                Some(GlobBufs::new(b, k, sl.f_in, sl.h_out, sl.dk))
+            } else {
+                None
+            }
+        })
+        .collect();
+    ar.s_mat = zeros(b * maxdim);
+    ar.s_rs = zeros(b);
+    if train {
+        ar.gvec = plan.layers.iter().map(|sl| zeros(b * sl.g_dim)).collect();
+        ar.g = zeros(b * maxdim);
+        ar.dh = zeros(b * maxdim);
+        ar.s_logp = zeros(b * plan.c);
+        ar.s_go = zeros(b * h_max);
+        ar.s_gnum = zeros(b * h_max);
+        ar.s_gden = zeros(b);
+        ar.s_dm = zeros(b * f_max);
+        ar.s_dcin = zeros(b * b);
+        ar.s_dcout = zeros(b * k);
+        ar.s_ct = zeros(b * k);
+        ar.s_cwg = zeros(k * h_max);
+        ar.s_desrc = zeros(b);
+        ar.s_dedst = zeros(b);
+        ar.s_decw = zeros(k);
+        ar.s_dproj = zeros(b * hh_max);
+        ar.s_dcproj = zeros(k * hh_max);
+        ar.s_das = zeros(hh_max);
+        ar.s_dad = zeros(hh_max);
+        ar.s_gsl = zeros(b * h_max);
+        ar.s_wtmp = zeros(f_max * hh_max.max(dk_max).max(1));
+        if plan.txf {
+            ar.s_dtin = zeros(b * b);
+            ar.s_dtout = zeros(b * k);
+            ar.s_dq = zeros(b * dk_max);
+            ar.s_dkk = zeros(b * dk_max);
+            ar.s_dkcw = zeros(k * dk_max);
+        }
+        ar.s_zb = zeros(b * max_fp);
+        ar.s_zw = zeros(b * max_fp);
+        ar.s_inv = zeros(max_fp);
+    }
+}
+
+fn size_edge(ar: &mut StepArena, plan: &Plan, train: bool) {
+    let nn = plan.nn;
+    let mut f_max = 0usize;
+    let mut h_max = 0usize;
+    let mut hh_max = 0usize;
+    for sl in &plan.layers {
+        f_max = f_max.max(sl.f_in);
+        h_max = h_max.max(sl.h_out);
+        hh_max = hh_max.max(sl.hh);
+    }
+    let maxdim = f_max.max(h_max);
+    ar.xfeat = plan.layers.iter().map(|sl| zeros(nn * sl.f_in)).collect();
+    ar.pre = plan.layers.iter().map(|sl| zeros(nn * sl.h_out)).collect();
+    if plan.gat {
+        ar.eheads = plan
+            .layers
+            .iter()
+            .map(|sl| (0..sl.heads).map(|_| EdgeHeadBufs::new(nn, sl.hh)).collect())
+            .collect();
+    } else {
+        ar.mbuf = plan.layers.iter().map(|sl| zeros(nn * sl.f_in)).collect();
+    }
+    ar.s_mat = zeros(nn * maxdim);
+    if train {
+        ar.g = zeros(nn * maxdim);
+        ar.dh = zeros(nn * maxdim);
+        ar.s_logp = zeros(nn * plan.c);
+        if plan.gat {
+            ar.s_go = zeros(nn * hh_max);
+            ar.s_gnum = zeros(nn * hh_max);
+            ar.s_gden = zeros(nn);
+            ar.s_dproj = zeros(nn * hh_max);
+            ar.s_desrc = zeros(nn);
+            ar.s_dedst = zeros(nn);
+            ar.s_das = zeros(hh_max);
+            ar.s_dad = zeros(hh_max);
+            ar.s_wtmp = zeros(f_max * hh_max.max(1));
+        } else {
+            ar.s_dagg = zeros(nn * f_max);
+        }
+    }
+}

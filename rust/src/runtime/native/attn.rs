@@ -1,0 +1,468 @@
+//! Learnable-convolution VQ-GNN step (GAT / Graph Transformer) on the
+//! plan-compiled executor — the decoupled row-normalization form of App. E.
+//!
+//! Per head `s` with projection W_s and attention vectors a_src/a_dst,
+//! the unnormalized score is `h(i,j) = exp(min(LeakyReLU(e_dst(i) +
+//! e_src(j)), CAP))`.  The in-batch block lives on the fixed mask
+//! 𝔠 = A + I; out-of-batch messages are merged per codeword (paper
+//! Fig. 1) with weight `M_out[i,v] · h(i, X̃_v)` — the low-rank Eq. 6
+//! form: scores against k codeword projections instead of n nodes.  The
+//! numerator is the approximated message passing `(C_in X_B + C_out X̃)
+//! W_s`; the denominator is the same attention applied to ones (plain
+//! row sums), so an isolated row stays exactly zero.
+//!
+//! The backward pass mirrors `python/compile/layers.py` `mp_linear`'s
+//! custom VJP: ∇X_B rides `C_inᵀ G + (C̃ᵀ)_out G̃` (Eq. 7 — the
+//! transposed count sketches weight the *gradient* half of the
+//! codewords), the convolution cotangents `∂ℓ/∂C_in = (G W ᵀ) X_Bᵀ` and
+//! `∂ℓ/∂C̃_out = (G Wᵀ) X̃ᵀ` flow into the attention parameters through
+//! the analytic score gradient (slope gate × cap gate), and the
+//! transposed sketches themselves carry no cotangent.  The probe
+//! gradient captured per layer is ∂ℓ/∂numerator — exactly the G̃
+//! quantity the codebook update needs under decoupled normalization.
+//!
+//! txf adds a global scaled-dot-product branch (𝔠 = all-ones, so the
+//! out-of-batch weight is just the bucket population `cnt_out[v]`) and a
+//! linear branch; its gradient concat space is 2h wide (local ‖ global).
+//!
+//! The op sequence — and therefore every floating-point accumulation
+//! order — mirrors the pre-arena interpreter exactly (pinned by the golden
+//! tests and `tests/gradcheck.rs`); only buffer ownership moved into
+//! [`StepArena`].
+
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+use anyhow::Result;
+
+use crate::runtime::ops;
+use crate::util::tensor::Tensor;
+
+use super::arena::StepArena;
+use super::plan::{Mode, Plan};
+use super::{loss_head_into, normalize_bwd_into};
+
+/// Fold the attention-denominator cotangent into the score cotangents:
+/// `den[i] = Σ_j c_in[i,j] + Σ_v c_out[i,v]`, so ∂ℓ/∂den broadcasts into
+/// every score of row i.
+fn add_den_cotangent(dc_in: &mut [f32], dc_out: &mut [f32], gden: &[f32], b: usize, k: usize) {
+    debug_assert_eq!(dc_in.len(), b * b);
+    debug_assert_eq!(dc_out.len(), b * k);
+    for i in 0..b {
+        let gd = gden[i];
+        for x in dc_in[i * b..(i + 1) * b].iter_mut() {
+            *x += gd;
+        }
+        for x in dc_out[i * k..(i + 1) * k].iter_mut() {
+            *x += gd;
+        }
+    }
+}
+
+#[allow(clippy::needless_range_loop)]
+pub(super) fn run_vq_attn(
+    plan: &Plan,
+    ar: &mut StepArena,
+    inputs: &[Tensor],
+    outputs: &mut [Tensor],
+    mode: Mode,
+) -> Result<()> {
+    let train = mode == Mode::Train;
+    let (b, k) = (plan.b, plan.k);
+    let ll = plan.layers.len();
+    let txf = plan.txf;
+    let StepArena {
+        xfeat,
+        pre,
+        gvec,
+        cw_feat,
+        heads,
+        glob,
+        g,
+        dh,
+        s_mat,
+        s_gsl,
+        s_logp,
+        s_rs,
+        s_go,
+        s_gnum,
+        s_gden,
+        s_dm,
+        s_dcin,
+        s_dcout,
+        s_ct,
+        s_cwg,
+        s_desrc,
+        s_dedst,
+        s_decw,
+        s_dproj,
+        s_dcproj,
+        s_das,
+        s_dad,
+        s_wtmp,
+        s_dtin,
+        s_dtout,
+        s_dq,
+        s_dkk,
+        s_dkcw,
+        s_zb,
+        s_zw,
+        s_inv,
+        ..
+    } = ar;
+
+    // ---- forward ----
+    xfeat[0].copy_from_slice(&inputs[plan.in_x].f);
+    for l in 0..ll {
+        let sl = &plan.layers[l];
+        let (f, h, hh, nheads) = (sl.f_in, sl.h_out, sl.hh, sl.heads);
+        debug_assert_eq!(hh * nheads, h, "heads must tile the layer width");
+        let mask_in = &inputs[sl.mask_in.expect("plan: mask_in")].f;
+        let m_out = &inputs[sl.m_out.expect("plan: m_out")].f;
+        let cw = &inputs[sl.cw.expect("plan: cw")].f;
+        ops::slice_cols_into(cw, sl.fp, 0, f, &mut cw_feat[l]); // feature half X̃ (k, f)
+        let w = &inputs[sl.w.expect("plan: w")].f;
+        let a_src = &inputs[sl.a_src.expect("plan: a_src")].f;
+        let a_dst = &inputs[sl.a_dst.expect("plan: a_dst")].f;
+        let bias = &inputs[sl.bias.expect("plan: bias")].f;
+
+        for s in 0..nheads {
+            let hb = &mut heads[l][s];
+            let ws = &w[s * f * hh..(s + 1) * f * hh];
+            let asr = &a_src[s * hh..(s + 1) * hh];
+            let ads = &a_dst[s * hh..(s + 1) * hh];
+            ops::matmul_into(&xfeat[l], b, f, ws, hh, &mut hb.proj);
+            ops::dot_rows_into(&hb.proj, hh, asr, &mut hb.e_src);
+            ops::dot_rows_into(&hb.proj, hh, ads, &mut hb.e_dst);
+            ops::matmul_into(&cw_feat[l], k, f, ws, hh, &mut hb.cproj);
+            ops::dot_rows_into(&hb.cproj, hh, asr, &mut hb.ecw_src);
+            ops::dot_rows_into(&hb.cproj, hh, ads, &mut hb.ecw_dst);
+            ops::gat_score_tile_into(&hb.e_dst, &hb.e_src, mask_in, &mut hb.c_in);
+            ops::gat_score_tile_into(&hb.e_dst, &hb.ecw_src, m_out, &mut hb.c_out);
+            // m = C_in X_B + C̃_out X̃ (the fused Eq. 6 kernel)
+            ops::matmul_into(&hb.c_in, b, b, &xfeat[l], f, &mut hb.m);
+            ops::matmul_into(&hb.c_out, b, k, &cw_feat[l], f, &mut s_mat[..b * f]);
+            ops::add_into(&mut hb.m, &s_mat[..b * f]);
+            ops::matmul_into(&hb.m, b, f, ws, hh, &mut hb.o);
+            ops::row_sum_into(&hb.c_in, b, &mut hb.den);
+            ops::row_sum_into(&hb.c_out, k, &mut s_rs[..b]);
+            ops::add_into(&mut hb.den, &s_rs[..b]);
+            ops::attn_normalize(&mut hb.o, hh, &hb.den);
+            for i in 0..b {
+                pre[l][i * h + s * hh..i * h + (s + 1) * hh]
+                    .copy_from_slice(&hb.o[i * hh..(i + 1) * hh]);
+            }
+        }
+        ops::add_bias(&mut pre[l], h, bias);
+
+        if txf {
+            let gb = glob[l].as_mut().expect("plan: txf glob bufs");
+            let dk = sl.dk;
+            let cnt_out = &inputs[sl.cnt_out.expect("plan: cnt_out")].f;
+            let wq = &inputs[sl.wq.expect("plan: wq")].f;
+            let wk = &inputs[sl.wk.expect("plan: wk")].f;
+            let wv = &inputs[sl.wv.expect("plan: wv")].f;
+            let w_lin = &inputs[sl.w_lin.expect("plan: w_lin")].f;
+            let scale = 1.0 / (dk as f32).sqrt();
+            ops::matmul_into(&xfeat[l], b, f, wq, dk, &mut gb.q);
+            ops::matmul_into(&xfeat[l], b, f, wk, dk, &mut gb.kk);
+            ops::matmul_into(&cw_feat[l], k, f, wk, dk, &mut gb.kcw);
+            ops::matmul_into(&cw_feat[l], k, f, wq, dk, &mut gb.qcw);
+            // global scores: 𝔠 = all-ones (App. Table 5)
+            ops::matmul_a_bt_into(&gb.q, b, dk, &gb.kk, b, &mut gb.t_in);
+            for x in gb.t_in.iter_mut() {
+                *x *= scale;
+            }
+            ops::exp_capped_tile_into(&gb.t_in, &mut gb.c_in);
+            ops::matmul_a_bt_into(&gb.q, b, dk, &gb.kcw, k, &mut gb.t_out);
+            for x in gb.t_out.iter_mut() {
+                *x *= scale;
+            }
+            ops::col_weighted_exp_tile_into(&gb.t_out, k, cnt_out, 1.0, &mut gb.c_out);
+            ops::matmul_into(&gb.c_in, b, b, &xfeat[l], f, &mut gb.m);
+            ops::matmul_into(&gb.c_out, b, k, &cw_feat[l], f, &mut s_mat[..b * f]);
+            ops::add_into(&mut gb.m, &s_mat[..b * f]);
+            ops::matmul_into(&gb.m, b, f, wv, h, &mut gb.o);
+            ops::row_sum_into(&gb.c_in, b, &mut gb.den);
+            ops::row_sum_into(&gb.c_out, k, &mut s_rs[..b]);
+            ops::add_into(&mut gb.den, &s_rs[..b]);
+            ops::attn_normalize(&mut gb.o, h, &gb.den);
+            ops::add_into(&mut pre[l], &gb.o);
+            ops::matmul_into(&xfeat[l], b, f, w_lin, h, &mut s_mat[..b * h]);
+            ops::add_into(&mut pre[l], &s_mat[..b * h]);
+        }
+
+        if l + 1 < ll {
+            ops::relu_into(&pre[l], &mut xfeat[l + 1]);
+        }
+    }
+    let c = plan.c;
+    outputs[plan.o_logits.expect("plan: logits")].f.copy_from_slice(&pre[ll - 1]);
+    if !train {
+        if mode == Mode::Infer {
+            for l in 0..ll {
+                outputs[plan.layers[l].o_xfeat.expect("plan: xfeat out")]
+                    .f
+                    .copy_from_slice(&xfeat[l]);
+            }
+        }
+        return Ok(());
+    }
+
+    let loss = loss_head_into(
+        plan,
+        inputs,
+        &pre[ll - 1],
+        b,
+        c,
+        &mut g[..b * c],
+        &mut s_logp[..b * c],
+    )?;
+    outputs[plan.o_loss.expect("plan: loss")].f[0] = loss;
+
+    // ---- backward ----
+    for l in (0..ll).rev() {
+        let sl = &plan.layers[l];
+        let (f, h, hh, nheads, gdim) = (sl.f_in, sl.h_out, sl.hh, sl.heads, sl.g_dim);
+        if l + 1 < ll {
+            ops::relu_bwd(&mut g[..b * h], &pre[l]);
+        }
+        ops::col_sum_into(&g[..b * h], h, &mut outputs[sl.g_bias.expect("plan: g_bias")].f);
+        let m_out_t = &inputs[sl.m_out_t.expect("plan: m_out_t")].f;
+        let cw = &inputs[sl.cw.expect("plan: cw")].f;
+        let w = &inputs[sl.w.expect("plan: w")].f;
+        let a_src = &inputs[sl.a_src.expect("plan: a_src")].f;
+        let a_dst = &inputs[sl.a_dst.expect("plan: a_dst")].f;
+
+        dh[..b * f].fill(0.0);
+        gvec[l].fill(0.0);
+        outputs[sl.g_w.expect("plan: g_w")].f.fill(0.0);
+        outputs[sl.g_a_src.expect("plan: g_a_src")].f.fill(0.0);
+        outputs[sl.g_a_dst.expect("plan: g_a_dst")].f.fill(0.0);
+
+        for s in 0..nheads {
+            let hb = &heads[l][s];
+            let ws = &w[s * f * hh..(s + 1) * f * hh];
+            let asr = &a_src[s * hh..(s + 1) * hh];
+            let ads = &a_dst[s * hh..(s + 1) * hh];
+            for i in 0..b {
+                s_go[i * hh..(i + 1) * hh]
+                    .copy_from_slice(&g[i * h + s * hh..i * h + (s + 1) * hh]);
+            }
+            normalize_bwd_into(
+                &s_go[..b * hh],
+                hh,
+                &hb.den,
+                &hb.o,
+                &mut s_gnum[..b * hh],
+                &mut s_gden[..b],
+            );
+            // probe gradient: this head's slice of the local columns
+            for i in 0..b {
+                gvec[l][i * gdim + s * hh..i * gdim + (s + 1) * hh]
+                    .copy_from_slice(&s_gnum[i * hh..(i + 1) * hh]);
+            }
+            // ∇W through the numerator (exact given approximated m)
+            ops::matmul_at_b_into(&hb.m, b, f, &s_gnum[..b * hh], hh, &mut s_wtmp[..f * hh]);
+            ops::add_into(
+                &mut outputs[sl.g_w.expect("plan: g_w")].f[s * f * hh..(s + 1) * f * hh],
+                &s_wtmp[..f * hh],
+            );
+            // Eq. 7: C_inᵀ G + (C̃ᵀ)_out G̃ on this head's gradient cols
+            ops::gat_score_tile_into(&hb.e_src, &hb.ecw_dst, m_out_t, &mut s_ct[..b * k]);
+            ops::slice_cols_into(cw, sl.fp, f + s * hh, f + (s + 1) * hh, &mut s_cwg[..k * hh]);
+            ops::matmul_at_b_into(&hb.c_in, b, b, &s_gnum[..b * hh], hh, &mut s_gsl[..b * hh]);
+            ops::matmul_into(&s_ct[..b * k], b, k, &s_cwg[..k * hh], hh, &mut s_mat[..b * hh]);
+            ops::add_into(&mut s_gsl[..b * hh], &s_mat[..b * hh]);
+            ops::matmul_a_bt_into(&s_gsl[..b * hh], b, hh, ws, f, &mut s_mat[..b * f]);
+            ops::add_into(&mut dh[..b * f], &s_mat[..b * f]);
+            // convolution cotangents (numerator + denominator paths)
+            ops::matmul_a_bt_into(&s_gnum[..b * hh], b, hh, ws, f, &mut s_dm[..b * f]);
+            ops::matmul_a_bt_into(&s_dm[..b * f], b, f, &xfeat[l], b, &mut s_dcin[..b * b]);
+            ops::matmul_a_bt_into(&s_dm[..b * f], b, f, &cw_feat[l], k, &mut s_dcout[..b * k]);
+            add_den_cotangent(&mut s_dcin[..b * b], &mut s_dcout[..b * k], &s_gden[..b], b, k);
+            // analytic score backward (gat_scores VJP): gs = dc ⊙ score
+            // ⊙ slope/cap gate; scatter onto the e projections
+            s_desrc[..b].fill(0.0);
+            s_dedst[..b].fill(0.0);
+            s_decw[..k].fill(0.0);
+            for i in 0..b {
+                for j in 0..b {
+                    let sc = hb.c_in[i * b + j];
+                    if sc == 0.0 {
+                        continue;
+                    }
+                    let gt = s_dcin[i * b + j]
+                        * sc
+                        * ops::leaky_exp_grad(hb.e_dst[i] + hb.e_src[j]);
+                    s_dedst[i] += gt;
+                    s_desrc[j] += gt;
+                }
+                for v in 0..k {
+                    let sc = hb.c_out[i * k + v];
+                    if sc == 0.0 {
+                        continue;
+                    }
+                    let gt = s_dcout[i * k + v]
+                        * sc
+                        * ops::leaky_exp_grad(hb.e_dst[i] + hb.ecw_src[v]);
+                    s_dedst[i] += gt;
+                    s_decw[v] += gt;
+                }
+            }
+            // project e-gradients back: batch side and codeword side
+            for i in 0..b {
+                for t in 0..hh {
+                    s_dproj[i * hh + t] = s_desrc[i] * asr[t] + s_dedst[i] * ads[t];
+                }
+            }
+            for v in 0..k {
+                for t in 0..hh {
+                    s_dcproj[v * hh + t] = s_decw[v] * asr[t];
+                }
+            }
+            for t in 0..hh {
+                let mut acc_src = 0.0f32;
+                let mut acc_dst = 0.0f32;
+                for i in 0..b {
+                    acc_src += s_desrc[i] * hb.proj[i * hh + t];
+                    acc_dst += s_dedst[i] * hb.proj[i * hh + t];
+                }
+                for v in 0..k {
+                    acc_src += s_decw[v] * hb.cproj[v * hh + t];
+                }
+                s_das[t] = acc_src;
+                s_dad[t] = acc_dst;
+            }
+            ops::add_into(
+                &mut outputs[sl.g_a_src.expect("plan: g_a_src")].f[s * hh..(s + 1) * hh],
+                &s_das[..hh],
+            );
+            ops::add_into(
+                &mut outputs[sl.g_a_dst.expect("plan: g_a_dst")].f[s * hh..(s + 1) * hh],
+                &s_dad[..hh],
+            );
+            ops::matmul_a_bt_into(&s_dproj[..b * hh], b, hh, ws, f, &mut s_mat[..b * f]);
+            ops::add_into(&mut dh[..b * f], &s_mat[..b * f]);
+            ops::matmul_at_b_into(&xfeat[l], b, f, &s_dproj[..b * hh], hh, &mut s_wtmp[..f * hh]);
+            ops::add_into(
+                &mut outputs[sl.g_w.expect("plan: g_w")].f[s * f * hh..(s + 1) * f * hh],
+                &s_wtmp[..f * hh],
+            );
+            ops::matmul_at_b_into(
+                &cw_feat[l],
+                k,
+                f,
+                &s_dcproj[..k * hh],
+                hh,
+                &mut s_wtmp[..f * hh],
+            );
+            ops::add_into(
+                &mut outputs[sl.g_w.expect("plan: g_w")].f[s * f * hh..(s + 1) * f * hh],
+                &s_wtmp[..f * hh],
+            );
+        }
+
+        if txf {
+            let gb = glob[l].as_ref().expect("plan: txf glob bufs");
+            let ho = h;
+            let dk = sl.dk;
+            let wq = &inputs[sl.wq.expect("plan: wq")].f;
+            let wk = &inputs[sl.wk.expect("plan: wk")].f;
+            let wv = &inputs[sl.wv.expect("plan: wv")].f;
+            let w_lin = &inputs[sl.w_lin.expect("plan: w_lin")].f;
+            let cnt_out = &inputs[sl.cnt_out.expect("plan: cnt_out")].f;
+            let scale = 1.0 / (dk as f32).sqrt();
+            normalize_bwd_into(
+                &g[..b * ho],
+                ho,
+                &gb.den,
+                &gb.o,
+                &mut s_gnum[..b * ho],
+                &mut s_gden[..b],
+            );
+            // probe gradient: global columns [h, 2h)
+            for i in 0..b {
+                gvec[l][i * gdim + ho..i * gdim + 2 * ho]
+                    .copy_from_slice(&s_gnum[i * ho..(i + 1) * ho]);
+            }
+            ops::matmul_at_b_into(
+                &gb.m,
+                b,
+                f,
+                &s_gnum[..b * ho],
+                ho,
+                &mut outputs[sl.g_wv.expect("plan: g_wv")].f,
+            );
+            // Eq. 7 on the global gradient columns [f+h, f+2h): the
+            // transposed sketch is cnt_out ⊙ h(X̃, X_B)ᵀ
+            ops::matmul_a_bt_into(&gb.kk, b, dk, &gb.qcw, k, &mut s_dtout[..b * k]);
+            ops::col_weighted_exp_tile_into(
+                &s_dtout[..b * k],
+                k,
+                cnt_out,
+                scale,
+                &mut s_ct[..b * k],
+            );
+            ops::slice_cols_into(cw, sl.fp, f + ho, f + 2 * ho, &mut s_cwg[..k * ho]);
+            ops::matmul_at_b_into(&gb.c_in, b, b, &s_gnum[..b * ho], ho, &mut s_gsl[..b * ho]);
+            ops::matmul_into(&s_ct[..b * k], b, k, &s_cwg[..k * ho], ho, &mut s_mat[..b * ho]);
+            ops::add_into(&mut s_gsl[..b * ho], &s_mat[..b * ho]);
+            ops::matmul_a_bt_into(&s_gsl[..b * ho], b, ho, wv, f, &mut s_mat[..b * f]);
+            ops::add_into(&mut dh[..b * f], &s_mat[..b * f]);
+            // convolution cotangents + analytic dot-product score bwd
+            ops::matmul_a_bt_into(&s_gnum[..b * ho], b, ho, wv, f, &mut s_dm[..b * f]);
+            ops::matmul_a_bt_into(&s_dm[..b * f], b, f, &xfeat[l], b, &mut s_dcin[..b * b]);
+            ops::matmul_a_bt_into(&s_dm[..b * f], b, f, &cw_feat[l], k, &mut s_dcout[..b * k]);
+            add_den_cotangent(&mut s_dcin[..b * b], &mut s_dcout[..b * k], &s_gden[..b], b, k);
+            // d(raw dot): fold the cap gate and the 1/√dk scale in
+            for (idx, x) in s_dtin[..b * b].iter_mut().enumerate() {
+                *x = s_dcin[idx] * gb.c_in[idx] * ops::exp_capped_grad(gb.t_in[idx]) * scale;
+            }
+            for (idx, x) in s_dtout[..b * k].iter_mut().enumerate() {
+                *x = s_dcout[idx] * gb.c_out[idx] * ops::exp_capped_grad(gb.t_out[idx]) * scale;
+            }
+            ops::matmul_into(&s_dtin[..b * b], b, b, &gb.kk, dk, &mut s_dq[..b * dk]);
+            ops::matmul_into(&s_dtout[..b * k], b, k, &gb.kcw, dk, &mut s_mat[..b * dk]);
+            ops::add_into(&mut s_dq[..b * dk], &s_mat[..b * dk]);
+            ops::matmul_at_b_into(&s_dtin[..b * b], b, b, &gb.q, dk, &mut s_dkk[..b * dk]);
+            ops::matmul_at_b_into(&s_dtout[..b * k], b, k, &gb.q, dk, &mut s_dkcw[..k * dk]);
+            ops::matmul_at_b_into(
+                &xfeat[l],
+                b,
+                f,
+                &s_dq[..b * dk],
+                dk,
+                &mut outputs[sl.g_wq.expect("plan: g_wq")].f,
+            );
+            ops::matmul_at_b_into(
+                &xfeat[l],
+                b,
+                f,
+                &s_dkk[..b * dk],
+                dk,
+                &mut outputs[sl.g_wk.expect("plan: g_wk")].f,
+            );
+            ops::matmul_at_b_into(&cw_feat[l], k, f, &s_dkcw[..k * dk], dk, &mut s_wtmp[..f * dk]);
+            ops::add_into(&mut outputs[sl.g_wk.expect("plan: g_wk")].f, &s_wtmp[..f * dk]);
+            ops::matmul_a_bt_into(&s_dq[..b * dk], b, dk, wq, f, &mut s_mat[..b * f]);
+            ops::add_into(&mut dh[..b * f], &s_mat[..b * f]);
+            ops::matmul_a_bt_into(&s_dkk[..b * dk], b, dk, wk, f, &mut s_mat[..b * f]);
+            ops::add_into(&mut dh[..b * f], &s_mat[..b * f]);
+            // linear branch
+            ops::matmul_at_b_into(
+                &xfeat[l],
+                b,
+                f,
+                &g[..b * ho],
+                ho,
+                &mut outputs[sl.g_w_lin.expect("plan: g_w_lin")].f,
+            );
+            ops::matmul_a_bt_into(&g[..b * ho], b, ho, w_lin, f, &mut s_mat[..b * f]);
+            ops::add_into(&mut dh[..b * f], &s_mat[..b * f]);
+        }
+
+        std::mem::swap(g, dh);
+    }
+
+    super::vq::push_assign_outputs(plan, inputs, outputs, xfeat, gvec, s_zb, s_zw, s_inv)
+}

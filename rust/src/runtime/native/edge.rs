@@ -1,0 +1,287 @@
+//! Exact edge-list message passing (baseline compute path) on the
+//! plan-compiled executor, with full backprop for the train variant.
+//! GCN/SAGE aggregate with fixed per-edge coefficients; GAT computes
+//! per-edge attention in-graph (ecoef is edge validity), mirroring
+//! `python/compile/edgemp.py`.  The op sequence matches the pre-arena
+//! interpreter exactly; only buffer ownership moved into [`StepArena`].
+
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+use anyhow::Result;
+
+use crate::runtime::ops;
+use crate::util::tensor::Tensor;
+
+use super::arena::StepArena;
+use super::plan::Plan;
+use super::{loss_head_into, normalize_bwd_into};
+
+/// Edge-list scatter: `out[dst] += coef · h[src]` per edge (`transpose`
+/// flips the arc, which is exactly the backward pass of the aggregation).
+#[allow(clippy::too_many_arguments)]
+fn scatter_edges_into(
+    h: &[f32],
+    f: usize,
+    esrc: &[i32],
+    edst: &[i32],
+    ecoef: &[f32],
+    transpose: bool,
+    out: &mut [f32],
+) {
+    out.fill(0.0);
+    for e in 0..esrc.len() {
+        let coef = ecoef[e];
+        if coef == 0.0 {
+            continue; // padding edge
+        }
+        let (s, d) = if transpose {
+            (edst[e] as usize, esrc[e] as usize)
+        } else {
+            (esrc[e] as usize, edst[e] as usize)
+        };
+        let src = &h[s * f..(s + 1) * f];
+        let dst = &mut out[d * f..(d + 1) * f];
+        for j in 0..f {
+            dst[j] += coef * src[j];
+        }
+    }
+}
+
+#[allow(clippy::needless_range_loop)]
+pub(super) fn run_edge(
+    plan: &Plan,
+    ar: &mut StepArena,
+    inputs: &[Tensor],
+    outputs: &mut [Tensor],
+    train: bool,
+) -> Result<()> {
+    let nn = plan.nn;
+    let (sage, gat) = (plan.sage, plan.gat);
+    let ll = plan.layers.len();
+    let esrc = &inputs[plan.in_esrc.expect("plan: esrc")].i;
+    let edst = &inputs[plan.in_edst.expect("plan: edst")].i;
+    let ecoef = &inputs[plan.in_ecoef.expect("plan: ecoef")].f;
+    let StepArena {
+        xfeat,
+        pre,
+        mbuf,
+        eheads,
+        g,
+        dh,
+        s_mat,
+        s_logp,
+        s_go,
+        s_gnum,
+        s_gden,
+        s_dproj,
+        s_desrc,
+        s_dedst,
+        s_das,
+        s_dad,
+        s_wtmp,
+        s_dagg,
+        ..
+    } = ar;
+
+    // ---- forward ----
+    xfeat[0].copy_from_slice(&inputs[plan.in_x].f);
+    for l in 0..ll {
+        let sl = &plan.layers[l];
+        let (f, ho, nheads, hh) = (sl.f_in, sl.h_out, sl.heads, sl.hh);
+        debug_assert_eq!(hh * nheads, ho, "heads must tile the layer width");
+        let bias = &inputs[sl.bias.expect("plan: bias")].f;
+        if gat {
+            let w = &inputs[sl.w.expect("plan: w")].f;
+            let a_src = &inputs[sl.a_src.expect("plan: a_src")].f;
+            let a_dst = &inputs[sl.a_dst.expect("plan: a_dst")].f;
+            for s in 0..nheads {
+                let hb = &mut eheads[l][s];
+                let ws = &w[s * f * hh..(s + 1) * f * hh];
+                ops::matmul_into(&xfeat[l], nn, f, ws, hh, &mut hb.proj);
+                ops::dot_rows_into(&hb.proj, hh, &a_src[s * hh..(s + 1) * hh], &mut hb.e_src);
+                ops::dot_rows_into(&hb.proj, hh, &a_dst[s * hh..(s + 1) * hh], &mut hb.e_dst);
+                // per-edge scatter, blocked over destination rows
+                // (bit-identical to the serial loop — see ops tests),
+                // accumulating straight into the arena's num/den buffers
+                ops::edge_attn_scatter_into(
+                    &hb.proj, hh, nn, esrc, edst, ecoef, &hb.e_src, &hb.e_dst, &mut hb.o,
+                    &mut hb.den,
+                );
+                ops::attn_normalize(&mut hb.o, hh, &hb.den);
+                for i in 0..nn {
+                    pre[l][i * ho + s * hh..i * ho + (s + 1) * hh]
+                        .copy_from_slice(&hb.o[i * hh..(i + 1) * hh]);
+                }
+            }
+        } else {
+            scatter_edges_into(&xfeat[l], f, esrc, edst, ecoef, false, &mut mbuf[l]);
+            if sage {
+                let w_self = &inputs[sl.w_self.expect("plan: w_self")].f;
+                let w_nbr = &inputs[sl.w_nbr.expect("plan: w_nbr")].f;
+                ops::matmul_into(&xfeat[l], nn, f, w_self, ho, &mut pre[l]);
+                ops::matmul_into(&mbuf[l], nn, f, w_nbr, ho, &mut s_mat[..nn * ho]);
+                ops::add_into(&mut pre[l], &s_mat[..nn * ho]);
+            } else {
+                let w = &inputs[sl.w.expect("plan: w")].f;
+                ops::matmul_into(&mbuf[l], nn, f, w, ho, &mut pre[l]);
+            }
+        }
+        ops::add_bias(&mut pre[l], ho, bias);
+        if l + 1 < ll {
+            ops::relu_into(&pre[l], &mut xfeat[l + 1]);
+        }
+    }
+    let c = plan.c;
+    outputs[plan.o_logits.expect("plan: logits")].f.copy_from_slice(&pre[ll - 1]);
+    if !train {
+        return Ok(());
+    }
+
+    let loss = loss_head_into(
+        plan,
+        inputs,
+        &pre[ll - 1],
+        nn,
+        c,
+        &mut g[..nn * c],
+        &mut s_logp[..nn * c],
+    )?;
+    outputs[plan.o_loss.expect("plan: loss")].f[0] = loss;
+
+    // ---- backward ----
+    for l in (0..ll).rev() {
+        let sl = &plan.layers[l];
+        let (f, ho, nheads, hh) = (sl.f_in, sl.h_out, sl.heads, sl.hh);
+        if l + 1 < ll {
+            ops::relu_bwd(&mut g[..nn * ho], &pre[l]);
+        }
+        ops::col_sum_into(&g[..nn * ho], ho, &mut outputs[sl.g_bias.expect("plan: g_bias")].f);
+        if gat {
+            let w = &inputs[sl.w.expect("plan: w")].f;
+            let a_src = &inputs[sl.a_src.expect("plan: a_src")].f;
+            let a_dst = &inputs[sl.a_dst.expect("plan: a_dst")].f;
+            dh[..nn * f].fill(0.0);
+            outputs[sl.g_w.expect("plan: g_w")].f.fill(0.0);
+            outputs[sl.g_a_src.expect("plan: g_a_src")].f.fill(0.0);
+            outputs[sl.g_a_dst.expect("plan: g_a_dst")].f.fill(0.0);
+            for s in 0..nheads {
+                let hb = &eheads[l][s];
+                let ws = &w[s * f * hh..(s + 1) * f * hh];
+                let asr = &a_src[s * hh..(s + 1) * hh];
+                let ads = &a_dst[s * hh..(s + 1) * hh];
+                for i in 0..nn {
+                    s_go[i * hh..(i + 1) * hh]
+                        .copy_from_slice(&g[i * ho + s * hh..i * ho + (s + 1) * hh]);
+                }
+                normalize_bwd_into(
+                    &s_go[..nn * hh],
+                    hh,
+                    &hb.den,
+                    &hb.o,
+                    &mut s_gnum[..nn * hh],
+                    &mut s_gden[..nn],
+                );
+                s_dproj[..nn * hh].fill(0.0);
+                s_desrc[..nn].fill(0.0);
+                s_dedst[..nn].fill(0.0);
+                for e in 0..esrc.len() {
+                    let cf = ecoef[e];
+                    if cf == 0.0 {
+                        continue;
+                    }
+                    let (u, v) = (esrc[e] as usize, edst[e] as usize);
+                    let raw = hb.e_dst[v] + hb.e_src[u];
+                    let sc = cf * ops::leaky_exp(raw);
+                    // num[v] += sc·proj[u]; den[v] += sc
+                    let gn = &s_gnum[v * hh..(v + 1) * hh];
+                    let pu = &hb.proj[u * hh..(u + 1) * hh];
+                    let mut dsc = s_gden[v];
+                    for t in 0..hh {
+                        dsc += gn[t] * pu[t];
+                    }
+                    let dp = &mut s_dproj[u * hh..(u + 1) * hh];
+                    for t in 0..hh {
+                        dp[t] += sc * gn[t];
+                    }
+                    let draw = dsc * sc * ops::leaky_exp_grad(raw);
+                    s_dedst[v] += draw;
+                    s_desrc[u] += draw;
+                }
+                for i in 0..nn {
+                    for t in 0..hh {
+                        s_dproj[i * hh + t] += s_desrc[i] * asr[t] + s_dedst[i] * ads[t];
+                    }
+                }
+                for t in 0..hh {
+                    let mut acc_src = 0.0f32;
+                    let mut acc_dst = 0.0f32;
+                    for i in 0..nn {
+                        acc_src += s_desrc[i] * hb.proj[i * hh + t];
+                        acc_dst += s_dedst[i] * hb.proj[i * hh + t];
+                    }
+                    s_das[t] = acc_src;
+                    s_dad[t] = acc_dst;
+                }
+                ops::add_into(
+                    &mut outputs[sl.g_a_src.expect("plan: g_a_src")].f[s * hh..(s + 1) * hh],
+                    &s_das[..hh],
+                );
+                ops::add_into(
+                    &mut outputs[sl.g_a_dst.expect("plan: g_a_dst")].f[s * hh..(s + 1) * hh],
+                    &s_dad[..hh],
+                );
+                ops::matmul_a_bt_into(&s_dproj[..nn * hh], nn, hh, ws, f, &mut s_mat[..nn * f]);
+                ops::add_into(&mut dh[..nn * f], &s_mat[..nn * f]);
+                ops::matmul_at_b_into(
+                    &xfeat[l],
+                    nn,
+                    f,
+                    &s_dproj[..nn * hh],
+                    hh,
+                    &mut s_wtmp[..f * hh],
+                );
+                ops::add_into(
+                    &mut outputs[sl.g_w.expect("plan: g_w")].f[s * f * hh..(s + 1) * f * hh],
+                    &s_wtmp[..f * hh],
+                );
+            }
+        } else if sage {
+            let w_self = &inputs[sl.w_self.expect("plan: w_self")].f;
+            let w_nbr = &inputs[sl.w_nbr.expect("plan: w_nbr")].f;
+            ops::matmul_at_b_into(
+                &xfeat[l],
+                nn,
+                f,
+                &g[..nn * ho],
+                ho,
+                &mut outputs[sl.g_w_self.expect("plan: g_w_self")].f,
+            );
+            ops::matmul_at_b_into(
+                &mbuf[l],
+                nn,
+                f,
+                &g[..nn * ho],
+                ho,
+                &mut outputs[sl.g_w_nbr.expect("plan: g_w_nbr")].f,
+            );
+            ops::matmul_a_bt_into(&g[..nn * ho], nn, ho, w_self, f, &mut dh[..nn * f]);
+            ops::matmul_a_bt_into(&g[..nn * ho], nn, ho, w_nbr, f, &mut s_mat[..nn * f]);
+            scatter_edges_into(&s_mat[..nn * f], f, esrc, edst, ecoef, true, &mut s_dagg[..nn * f]);
+            ops::add_into(&mut dh[..nn * f], &s_dagg[..nn * f]);
+        } else {
+            let w = &inputs[sl.w.expect("plan: w")].f;
+            ops::matmul_at_b_into(
+                &mbuf[l],
+                nn,
+                f,
+                &g[..nn * ho],
+                ho,
+                &mut outputs[sl.g_w.expect("plan: g_w")].f,
+            );
+            ops::matmul_a_bt_into(&g[..nn * ho], nn, ho, w, f, &mut s_mat[..nn * f]);
+            scatter_edges_into(&s_mat[..nn * f], f, esrc, edst, ecoef, true, &mut dh[..nn * f]);
+        }
+        std::mem::swap(g, dh);
+    }
+    Ok(())
+}

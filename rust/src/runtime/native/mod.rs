@@ -1,0 +1,288 @@
+//! Native CPU backend: executes the manifest's artifacts as pure-Rust
+//! computations — no Python, no JAX, no HLO artifacts, no PJRT.
+//!
+//! It honors the same positional input/output contract the AOT artifacts
+//! expose (`runtime::builtin` reconstructs the specs), so the trainers
+//! cannot tell the backends apart.  Supported today:
+//!
+//! - `vq_train` / `vq_infer` for the fixed-convolution backbones (GCN,
+//!   SAGE-mean): Eq. 6 forward, loss head (CE / multilabel BCE / link BCE),
+//!   Eq. 7 custom-VJP backward (the out-of-batch gradient messages ride the
+//!   gradient half of the codewords via the transposed sketches), per-layer
+//!   probe gradients, whitened FINDNEAREST via the blocked VQ kernels, and
+//!   exact parameter gradients ([`vq`]);
+//! - `vq_train` / `vq_infer` for the learnable convolutions (GAT
+//!   edge-softmax attention, Graph-Transformer local+global attention): the
+//!   decoupled row-normalization form of App. E with a hand-derived VJP
+//!   mirroring `python/compile/layers.py`, pinned by `tests/gradcheck.rs`
+//!   finite differences ([`attn`]);
+//! - `vq_serve`: the forward-only serving path of either family — logits
+//!   only, no gradient buffers, no residual outputs;
+//! - `edge_train` / `edge_infer`: exact edge-list message passing with full
+//!   backprop (the four sampling baselines), including per-edge GAT
+//!   attention ([`edge`]);
+//! - `vq_assign`: the standalone masked assignment kernel.
+//!
+//! Unlike the original per-call interpreter, the backend is **plan
+//! compiled**: [`plan::Plan::compile`] resolves every string-keyed slot and
+//! per-layer dimension once at `Runtime::load` time, and
+//! [`arena::StepArena`] owns every intermediate buffer (forward caches,
+//! attention caches, gradient accumulators) for the executor to rewrite in
+//! place on every step.  Steady-state steps through a cached executor
+//! allocate nothing in the compute path, and a session driving
+//! `Runtime::execute_into` with persistent output tensors allocates nothing
+//! at the boundary either.  The arena carries no semantic state across
+//! steps — outputs are bit-identical to the old interpreter's and to a
+//! fresh executor's (`tests/plan_executor.rs`).
+//!
+//! The only artifact family without a native path is the Graph Transformer's
+//! edge-list form — global attention has none (see
+//! `manifest::ManifestError::UnsupportedEdgeForm`).
+
+pub mod arena;
+mod attn;
+mod edge;
+pub mod plan;
+mod vq;
+
+use std::cell::RefCell;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::ops;
+use crate::runtime::{Backend, Executable};
+use crate::util::tensor::{DType, Tensor};
+
+use arena::StepArena;
+use plan::{Plan, PlanKind};
+
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports_model(&self, model: &str) -> bool {
+        matches!(model, "gcn" | "sage" | "gat" | "txf")
+    }
+
+    fn compile(&mut self, man: &Manifest, spec: &ArtifactSpec) -> Result<Box<dyn Executable>> {
+        let ds = man
+            .datasets
+            .get(&spec.dataset)
+            .with_context(|| format!("native: unknown dataset '{}'", spec.dataset))?;
+        let model = man
+            .models
+            .get(&spec.model)
+            .with_context(|| format!("native: unknown model '{}'", spec.model))?;
+        match spec.kind.as_str() {
+            "vq_train" | "vq_infer" | "vq_serve" => {
+                if !self.supports_model(&spec.model) {
+                    bail!("native: unknown model '{}' (artifact {})", spec.model, spec.name);
+                }
+            }
+            "edge_train" | "edge_infer" => {
+                if !matches!(spec.model.as_str(), "gcn" | "sage" | "gat") {
+                    bail!(
+                        "native: the '{}' backbone has no edge-list form (artifact {}): \
+                         global attention touches every node pair, not an edge list",
+                        spec.model,
+                        spec.name
+                    );
+                }
+            }
+            "vq_assign" => {}
+            other => bail!("native: unknown artifact kind '{other}' ({})", spec.name),
+        }
+        let plan = Plan::compile(ds, model, spec)?;
+        let ar = StepArena::for_plan(&plan);
+        Ok(Box::new(NativeExec { plan, arena: RefCell::new(ar) }))
+    }
+}
+
+/// One compiled artifact: its resolved [`Plan`] plus the reusable
+/// [`StepArena`].  The arena rides a `RefCell` because the `Executable`
+/// contract is `&self` (the `Runtime` is single-threaded; executables are
+/// cached behind `Rc`).
+pub struct NativeExec {
+    plan: Plan,
+    arena: RefCell<StepArena>,
+}
+
+impl Executable for NativeExec {
+    fn run(&self, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut outputs = Vec::new();
+        self.run_into(spec, inputs, &mut outputs)?;
+        Ok(outputs)
+    }
+
+    fn run_into(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Tensor],
+        outputs: &mut Vec<Tensor>,
+    ) -> Result<()> {
+        debug_assert_eq!(spec.name, self.plan.name, "executor driven with a foreign spec");
+        ensure_outputs(spec, outputs);
+        let mut ar = self.arena.borrow_mut();
+        match self.plan.kind {
+            PlanKind::Vq(mode) => vq::run_vq(&self.plan, &mut ar, inputs, outputs, mode),
+            PlanKind::VqAttn(mode) => {
+                attn::run_vq_attn(&self.plan, &mut ar, inputs, outputs, mode)
+            }
+            PlanKind::Edge { train } => {
+                edge::run_edge(&self.plan, &mut ar, inputs, outputs, train)
+            }
+            PlanKind::Assign => vq::run_vq_assign(&self.plan, &mut ar, inputs, outputs),
+        }
+    }
+}
+
+impl NativeExec {
+    /// The compiled plan (read-only introspection for tests).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+}
+
+/// Make `outputs` hold exactly the spec's declared tensors, reusing the
+/// existing buffers when they already match (the steady-state path: a
+/// session passes the same vector every step).  Shape correctness of every
+/// output is by construction — the executor writes into buffers sized from
+/// the spec, with slice-length panics guarding any drift.
+fn ensure_outputs(spec: &ArtifactSpec, outputs: &mut Vec<Tensor>) {
+    let ok = outputs.len() == spec.outputs.len()
+        && outputs
+            .iter()
+            .zip(&spec.outputs)
+            .all(|(t, s)| t.shape == s.shape && t.dtype == s.dtype);
+    if ok {
+        return;
+    }
+    outputs.clear();
+    for ts in &spec.outputs {
+        outputs.push(match ts.dtype {
+            DType::F32 => Tensor::zeros(&ts.shape),
+            DType::I32 => Tensor::from_i32(&ts.shape, vec![0; ts.numel()]),
+        });
+    }
+}
+
+/// Loss head shared by all train paths.  Writes `∂ℓ/∂logits` into
+/// `dlogits` (zeroed first) and returns the loss; for the link task
+/// `logits` are node embeddings and the gradient is the pair-loss cotangent
+/// scattered back onto them.  `s_logp` is the CE path's log-softmax scratch.
+fn loss_head_into(
+    plan: &Plan,
+    inputs: &[Tensor],
+    logits: &[f32],
+    rows: usize,
+    c: usize,
+    dlogits: &mut [f32],
+    s_logp: &mut [f32],
+) -> Result<f32> {
+    debug_assert_eq!(dlogits.len(), rows * c);
+    dlogits.fill(0.0);
+    if plan.link {
+        let psrc = &inputs[plan.in_psrc.expect("plan: psrc")].i;
+        let pdst = &inputs[plan.in_pdst.expect("plan: pdst")].i;
+        let py = &inputs[plan.in_py.expect("plan: py")].f;
+        let pw = &inputs[plan.in_pw.expect("plan: pw")].f;
+        let wsum: f32 = pw.iter().sum::<f32>().max(1.0);
+        let mut loss = 0.0f64;
+        for e in 0..psrc.len() {
+            let (u, v) = (psrc[e] as usize, pdst[e] as usize);
+            let eu = &logits[u * c..(u + 1) * c];
+            let ev = &logits[v * c..(v + 1) * c];
+            let mut z = 0.0f32;
+            for d in 0..c {
+                z += eu[d] * ev[d];
+            }
+            loss += (pw[e] * ops::bce_with_logits(z, py[e])) as f64;
+            let dz = pw[e] * (ops::sigmoid(z) - py[e]) / wsum;
+            if dz != 0.0 {
+                for d in 0..c {
+                    dlogits[u * c + d] += dz * ev[d];
+                    dlogits[v * c + d] += dz * eu[d];
+                }
+            }
+        }
+        return Ok((loss / wsum as f64) as f32);
+    }
+    let w = &inputs[plan.in_wloss.expect("plan: wloss")].f;
+    let wsum: f32 = w.iter().sum::<f32>().max(1.0);
+    if plan.multilabel {
+        let y = &inputs[plan.in_y.expect("plan: y")].f;
+        let mut loss = 0.0f64;
+        for i in 0..rows {
+            if w[i] == 0.0 {
+                // gradient rows stay zero; skip the loss term too
+                continue;
+            }
+            let mut per = 0.0f32;
+            for j in 0..c {
+                let z = logits[i * c + j];
+                per += ops::bce_with_logits(z, y[i * c + j]);
+                dlogits[i * c + j] = w[i] * (ops::sigmoid(z) - y[i * c + j]) / (c as f32 * wsum);
+            }
+            loss += (w[i] * per / c as f32) as f64;
+        }
+        Ok((loss / wsum as f64) as f32)
+    } else {
+        let y = &inputs[plan.in_y.expect("plan: y")].i;
+        debug_assert_eq!(s_logp.len(), rows * c);
+        ops::log_softmax_into(logits, c, s_logp);
+        let mut loss = 0.0f64;
+        for i in 0..rows {
+            if w[i] == 0.0 {
+                continue;
+            }
+            let yi = y[i] as usize;
+            loss += (w[i] * -s_logp[i * c + yi]) as f64;
+            for j in 0..c {
+                let soft = s_logp[i * c + j].exp();
+                let delta = if j == yi { 1.0 } else { 0.0 };
+                dlogits[i * c + j] = w[i] * (soft - delta) / wsum;
+            }
+        }
+        Ok((loss / wsum as f64) as f32)
+    }
+}
+
+/// VJP of `attn_normalize`: given `go = ∂ℓ/∂(num/den_c)`, the cached mass
+/// and the normalized output, write `(∂ℓ/∂num, ∂ℓ/∂den)` into
+/// `gnum`/`gden` (every element assigned).  The `max(den, floor)` guard
+/// gates the denominator gradient exactly like `jnp.maximum` does.
+fn normalize_bwd_into(
+    go: &[f32],
+    h: usize,
+    den: &[f32],
+    o: &[f32],
+    gnum: &mut [f32],
+    gden: &mut [f32],
+) {
+    let b = den.len();
+    debug_assert_eq!(go.len(), b * h);
+    debug_assert_eq!(gnum.len(), b * h);
+    debug_assert_eq!(gden.len(), b);
+    for i in 0..b {
+        let d = den[i];
+        if d > ops::DEN_FLOOR {
+            let inv = 1.0 / d;
+            let mut acc = 0.0f32;
+            for t in 0..h {
+                gnum[i * h + t] = go[i * h + t] * inv;
+                acc += go[i * h + t] * o[i * h + t];
+            }
+            gden[i] = -acc * inv;
+        } else {
+            let inv = 1.0 / ops::DEN_FLOOR;
+            for t in 0..h {
+                gnum[i * h + t] = go[i * h + t] * inv;
+            }
+            gden[i] = 0.0;
+        }
+    }
+}

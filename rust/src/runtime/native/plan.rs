@@ -1,0 +1,405 @@
+//! Ahead-of-time compilation of an [`ArtifactSpec`] into a [`Plan`]: every
+//! string-keyed input/output lookup the old per-call interpreter performed
+//! (`spec.input_index(&format!("l{l}.c_in"))`, the `HashMap<String, Tensor>`
+//! emit path) is resolved ONCE here into positional slot indices, and every
+//! per-layer dimension the step needs is precomputed.  The hot path then
+//! indexes flat arrays only.
+//!
+//! Compilation also front-loads the interpreter/spec drift guard the old
+//! `emit()` enforced per call: a plan only compiles if every declared output
+//! is claimed by exactly the computation this executor will run, so a spec
+//! that drifts from the interpreter fails at `Runtime::load` time with the
+//! output's name, not at step time.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, DatasetCfg, ModelCfg};
+
+/// Execution mode of the VQ paths.  `Train` runs the full Eq. 7 backward;
+/// `Infer` is forward-only but still emits the per-layer `xfeat` residuals
+/// (the inductive bootstrap consumes them); `Serve` is the read path — no
+/// gradient buffers, no residual outputs, logits only (and the artifact
+/// signature drops the transposed sketches, which only the backward reads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Train,
+    Infer,
+    Serve,
+}
+
+/// Which compiled step body a plan drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKind {
+    /// Fixed-convolution VQ step (GCN / SAGE-mean), Eq. 6/7.
+    Vq(Mode),
+    /// Learnable-convolution VQ step (GAT / Graph Transformer), App. E.
+    VqAttn(Mode),
+    /// Exact edge-list message passing (the sampling baselines).
+    Edge { train: bool },
+    /// Standalone masked assignment kernel.
+    Assign,
+}
+
+/// One layer's resolved slots + dimensions.  Fields are `Option` because
+/// the struct is shared by every plan family; [`Plan::compile`] resolves
+/// exactly the slots its family/mode reads, so an `.expect()` at a use site
+/// can only fire on an executor bug, never on caller input.
+#[derive(Debug, Clone, Default)]
+pub struct LayerSlots {
+    // dimensions
+    pub f_in: usize,
+    pub h_out: usize,
+    pub g_dim: usize,
+    pub n_br: usize,
+    pub fp: usize,
+    pub cf: usize,
+    pub heads: usize,
+    pub hh: usize,
+    pub dk: usize,
+    // fixed-convolution context inputs
+    pub c_in: Option<usize>,
+    pub c_out: Option<usize>,
+    pub ct_out: Option<usize>,
+    // learnable-convolution context inputs
+    pub mask_in: Option<usize>,
+    pub m_out: Option<usize>,
+    pub m_out_t: Option<usize>,
+    pub cnt_out: Option<usize>,
+    // shared VQ context inputs
+    pub cw: Option<usize>,
+    pub mean: Option<usize>,
+    pub var: Option<usize>,
+    pub cww: Option<usize>,
+    // parameters
+    pub w: Option<usize>,
+    pub w_self: Option<usize>,
+    pub w_nbr: Option<usize>,
+    pub bias: Option<usize>,
+    pub a_src: Option<usize>,
+    pub a_dst: Option<usize>,
+    pub wq: Option<usize>,
+    pub wk: Option<usize>,
+    pub wv: Option<usize>,
+    pub w_lin: Option<usize>,
+    // outputs
+    pub o_xfeat: Option<usize>,
+    pub o_gvec: Option<usize>,
+    pub o_assign: Option<usize>,
+    pub g_w: Option<usize>,
+    pub g_w_self: Option<usize>,
+    pub g_w_nbr: Option<usize>,
+    pub g_bias: Option<usize>,
+    pub g_a_src: Option<usize>,
+    pub g_a_dst: Option<usize>,
+    pub g_wq: Option<usize>,
+    pub g_wk: Option<usize>,
+    pub g_wv: Option<usize>,
+    pub g_w_lin: Option<usize>,
+}
+
+/// A compiled artifact: resolved slots, per-layer dims, loss-head flags.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub name: String,
+    pub kind: PlanKind,
+    pub b: usize,
+    pub k: usize,
+    pub nn: usize,
+    /// Logits width (classes, or the embedding dim on link tasks).
+    pub c: usize,
+    /// Loss-head rows: `b` on the VQ paths, `nn` on the edge paths.
+    pub rows: usize,
+    pub sage: bool,
+    pub txf: bool,
+    pub gat: bool,
+    pub multilabel: bool,
+    pub link: bool,
+    pub layers: Vec<LayerSlots>,
+    // common inputs
+    pub in_x: usize,
+    pub in_y: Option<usize>,
+    pub in_wloss: Option<usize>,
+    pub in_psrc: Option<usize>,
+    pub in_pdst: Option<usize>,
+    pub in_py: Option<usize>,
+    pub in_pw: Option<usize>,
+    pub in_esrc: Option<usize>,
+    pub in_edst: Option<usize>,
+    pub in_ecoef: Option<usize>,
+    pub in_cww: Option<usize>,
+    pub in_mask: Option<usize>,
+    // common outputs
+    pub o_loss: Option<usize>,
+    pub o_logits: Option<usize>,
+    pub o_assign_only: Option<usize>,
+    /// `vq_assign` branch width (z's trailing dim).
+    pub fp0: usize,
+}
+
+impl Plan {
+    pub fn compile(ds: &DatasetCfg, model: &ModelCfg, spec: &ArtifactSpec) -> Result<Plan> {
+        let learnable = matches!(model.name.as_str(), "gat" | "txf");
+        let kind = match spec.kind.as_str() {
+            "vq_train" if learnable => PlanKind::VqAttn(Mode::Train),
+            "vq_infer" if learnable => PlanKind::VqAttn(Mode::Infer),
+            "vq_serve" if learnable => PlanKind::VqAttn(Mode::Serve),
+            "vq_train" => PlanKind::Vq(Mode::Train),
+            "vq_infer" => PlanKind::Vq(Mode::Infer),
+            "vq_serve" => PlanKind::Vq(Mode::Serve),
+            "edge_train" => PlanKind::Edge { train: true },
+            "edge_infer" => PlanKind::Edge { train: false },
+            "vq_assign" => PlanKind::Assign,
+            other => bail!("native: unknown artifact kind '{other}' ({})", spec.name),
+        };
+        let req_in = |name: &str| -> Result<usize> {
+            spec.input_index(name)
+                .with_context(|| format!("native {}: missing input '{name}'", spec.name))
+        };
+        let req_out = |name: &str| -> Result<usize> {
+            spec.output_index(name)
+                .with_context(|| format!("native {}: missing output '{name}'", spec.name))
+        };
+        let logits_c = spec
+            .outputs
+            .iter()
+            .find(|t| t.name == "logits")
+            .map(|t| t.shape[1]);
+
+        let mut plan = Plan {
+            name: spec.name.clone(),
+            kind,
+            b: spec.b,
+            k: spec.k,
+            nn: spec.nn,
+            c: logits_c.unwrap_or(0),
+            rows: if matches!(kind, PlanKind::Edge { .. }) { spec.nn } else { spec.b },
+            sage: model.name == "sage",
+            txf: model.name == "txf",
+            gat: model.name == "gat",
+            multilabel: ds.multilabel,
+            link: ds.task == "link",
+            layers: Vec::new(),
+            in_x: 0,
+            in_y: None,
+            in_wloss: None,
+            in_psrc: None,
+            in_pdst: None,
+            in_py: None,
+            in_pw: None,
+            in_esrc: None,
+            in_edst: None,
+            in_ecoef: None,
+            in_cww: None,
+            in_mask: None,
+            o_loss: None,
+            o_logits: None,
+            o_assign_only: None,
+            fp0: 0,
+        };
+
+        match kind {
+            PlanKind::Assign => {
+                plan.in_x = req_in("z")?;
+                plan.in_cww = Some(req_in("cww")?);
+                plan.in_mask = Some(req_in("mask")?);
+                plan.o_assign_only = Some(req_out("assign")?);
+                plan.fp0 = spec.inputs[plan.in_x].shape[2];
+            }
+            PlanKind::Vq(mode) | PlanKind::VqAttn(mode) => {
+                plan.in_x = req_in("xb")?;
+                plan.o_logits = Some(req_out("logits")?);
+                let train = mode == Mode::Train;
+                if train {
+                    plan.o_loss = Some(req_out("loss")?);
+                    if plan.link {
+                        plan.in_psrc = Some(req_in("psrc")?);
+                        plan.in_pdst = Some(req_in("pdst")?);
+                        plan.in_py = Some(req_in("py")?);
+                        plan.in_pw = Some(req_in("pw")?);
+                    } else {
+                        plan.in_y = Some(req_in("y")?);
+                        plan.in_wloss = Some(req_in("wloss")?);
+                    }
+                }
+                let attn = matches!(kind, PlanKind::VqAttn(_));
+                for (l, p) in spec.plan.iter().enumerate() {
+                    let heads = p.heads.max(1);
+                    let mut sl = LayerSlots {
+                        f_in: p.f_in,
+                        h_out: p.h_out,
+                        g_dim: p.g_dim,
+                        n_br: p.n_br,
+                        fp: p.fp,
+                        cf: p.cf,
+                        heads,
+                        hh: p.h_out / heads,
+                        ..LayerSlots::default()
+                    };
+                    if attn {
+                        sl.mask_in = Some(req_in(&format!("l{l}.mask_in"))?);
+                        sl.m_out = Some(req_in(&format!("l{l}.m_out"))?);
+                        if train {
+                            sl.m_out_t = Some(req_in(&format!("l{l}.m_out_t"))?);
+                        }
+                        if plan.txf {
+                            sl.cnt_out = Some(req_in(&format!("l{l}.cnt_out"))?);
+                            let wq = req_in(&format!("param.l{l}.wq"))?;
+                            sl.dk = spec.inputs[wq].shape[1];
+                            sl.wq = Some(wq);
+                            sl.wk = Some(req_in(&format!("param.l{l}.wk"))?);
+                            sl.wv = Some(req_in(&format!("param.l{l}.wv"))?);
+                            sl.w_lin = Some(req_in(&format!("param.l{l}.w_lin"))?);
+                        }
+                        sl.w = Some(req_in(&format!("param.l{l}.w"))?);
+                        sl.a_src = Some(req_in(&format!("param.l{l}.a_src"))?);
+                        sl.a_dst = Some(req_in(&format!("param.l{l}.a_dst"))?);
+                    } else {
+                        sl.c_in = Some(req_in(&format!("l{l}.c_in"))?);
+                        sl.c_out = Some(req_in(&format!("l{l}.c_out"))?);
+                        if train {
+                            sl.ct_out = Some(req_in(&format!("l{l}.ct_out"))?);
+                        }
+                        if plan.sage {
+                            sl.w_self = Some(req_in(&format!("param.l{l}.w_self"))?);
+                            sl.w_nbr = Some(req_in(&format!("param.l{l}.w_nbr"))?);
+                        } else {
+                            sl.w = Some(req_in(&format!("param.l{l}.w"))?);
+                        }
+                    }
+                    sl.cw = Some(req_in(&format!("l{l}.cw"))?);
+                    sl.bias = Some(req_in(&format!("param.l{l}.bias"))?);
+                    if train {
+                        sl.mean = Some(req_in(&format!("l{l}.mean"))?);
+                        sl.var = Some(req_in(&format!("l{l}.var"))?);
+                        sl.cww = Some(req_in(&format!("l{l}.cww"))?);
+                        sl.o_xfeat = Some(req_out(&format!("l{l}.xfeat"))?);
+                        sl.o_gvec = Some(req_out(&format!("l{l}.gvec"))?);
+                        sl.o_assign = Some(req_out(&format!("l{l}.assign"))?);
+                        sl.g_bias = Some(req_out(&format!("grad.l{l}.bias"))?);
+                        if attn {
+                            sl.g_w = Some(req_out(&format!("grad.l{l}.w"))?);
+                            sl.g_a_src = Some(req_out(&format!("grad.l{l}.a_src"))?);
+                            sl.g_a_dst = Some(req_out(&format!("grad.l{l}.a_dst"))?);
+                            if plan.txf {
+                                sl.g_wq = Some(req_out(&format!("grad.l{l}.wq"))?);
+                                sl.g_wk = Some(req_out(&format!("grad.l{l}.wk"))?);
+                                sl.g_wv = Some(req_out(&format!("grad.l{l}.wv"))?);
+                                sl.g_w_lin = Some(req_out(&format!("grad.l{l}.w_lin"))?);
+                            }
+                        } else if plan.sage {
+                            sl.g_w_self = Some(req_out(&format!("grad.l{l}.w_self"))?);
+                            sl.g_w_nbr = Some(req_out(&format!("grad.l{l}.w_nbr"))?);
+                        } else {
+                            sl.g_w = Some(req_out(&format!("grad.l{l}.w"))?);
+                        }
+                    } else if mode == Mode::Infer {
+                        sl.o_xfeat = Some(req_out(&format!("l{l}.xfeat"))?);
+                    }
+                    plan.layers.push(sl);
+                }
+            }
+            PlanKind::Edge { train } => {
+                plan.in_x = req_in("x")?;
+                plan.in_esrc = Some(req_in("esrc")?);
+                plan.in_edst = Some(req_in("edst")?);
+                plan.in_ecoef = Some(req_in("ecoef")?);
+                plan.o_logits = Some(req_out("logits")?);
+                if train {
+                    plan.o_loss = Some(req_out("loss")?);
+                    if plan.link {
+                        plan.in_psrc = Some(req_in("psrc")?);
+                        plan.in_pdst = Some(req_in("pdst")?);
+                        plan.in_py = Some(req_in("py")?);
+                        plan.in_pw = Some(req_in("pw")?);
+                    } else {
+                        plan.in_y = Some(req_in("y")?);
+                        plan.in_wloss = Some(req_in("wloss")?);
+                    }
+                }
+                let c = logits_c.context("edge spec has no logits output")?;
+                let ll = model.layers;
+                for l in 0..ll {
+                    let f = if l == 0 { ds.f_in_pad } else { model.hidden };
+                    let last = l + 1 == ll;
+                    let h = if last { c } else { model.hidden };
+                    let heads = if plan.gat && !last { model.heads.max(1) } else { 1 };
+                    let mut sl = LayerSlots {
+                        f_in: f,
+                        h_out: h,
+                        heads,
+                        hh: h / heads,
+                        ..LayerSlots::default()
+                    };
+                    if plan.gat {
+                        sl.w = Some(req_in(&format!("param.l{l}.w"))?);
+                        sl.a_src = Some(req_in(&format!("param.l{l}.a_src"))?);
+                        sl.a_dst = Some(req_in(&format!("param.l{l}.a_dst"))?);
+                    } else if plan.sage {
+                        sl.w_self = Some(req_in(&format!("param.l{l}.w_self"))?);
+                        sl.w_nbr = Some(req_in(&format!("param.l{l}.w_nbr"))?);
+                    } else {
+                        sl.w = Some(req_in(&format!("param.l{l}.w"))?);
+                    }
+                    sl.bias = Some(req_in(&format!("param.l{l}.bias"))?);
+                    if train {
+                        sl.g_bias = Some(req_out(&format!("grad.l{l}.bias"))?);
+                        if plan.gat {
+                            sl.g_w = Some(req_out(&format!("grad.l{l}.w"))?);
+                            sl.g_a_src = Some(req_out(&format!("grad.l{l}.a_src"))?);
+                            sl.g_a_dst = Some(req_out(&format!("grad.l{l}.a_dst"))?);
+                        } else if plan.sage {
+                            sl.g_w_self = Some(req_out(&format!("grad.l{l}.w_self"))?);
+                            sl.g_w_nbr = Some(req_out(&format!("grad.l{l}.w_nbr"))?);
+                        } else {
+                            sl.g_w = Some(req_out(&format!("grad.l{l}.w"))?);
+                        }
+                    }
+                    plan.layers.push(sl);
+                }
+            }
+        }
+
+        plan.check_output_coverage(spec)?;
+        Ok(plan)
+    }
+
+    /// The compile-time half of the old `emit()` drift guard: every output
+    /// the spec declares must be claimed by a slot this plan writes.
+    fn check_output_coverage(&self, spec: &ArtifactSpec) -> Result<()> {
+        let mut claimed = vec![false; spec.outputs.len()];
+        let mut claim = |i: Option<usize>| {
+            if let Some(i) = i {
+                claimed[i] = true;
+            }
+        };
+        claim(self.o_loss);
+        claim(self.o_logits);
+        claim(self.o_assign_only);
+        for sl in &self.layers {
+            claim(sl.o_xfeat);
+            claim(sl.o_gvec);
+            claim(sl.o_assign);
+            claim(sl.g_w);
+            claim(sl.g_w_self);
+            claim(sl.g_w_nbr);
+            claim(sl.g_bias);
+            claim(sl.g_a_src);
+            claim(sl.g_a_dst);
+            claim(sl.g_wq);
+            claim(sl.g_wk);
+            claim(sl.g_wv);
+            claim(sl.g_w_lin);
+        }
+        for (i, done) in claimed.iter().enumerate() {
+            if !done {
+                bail!(
+                    "native {}: output '{}' is not produced by the compiled plan \
+                     (interpreter/spec drift)",
+                    spec.name,
+                    spec.outputs[i].name
+                );
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,261 @@
+//! Fixed-convolution VQ-GNN step (Eq. 6/7 + Alg. 2 FINDNEAREST) on the
+//! plan-compiled executor, plus the standalone masked-assignment kernel.
+//! The op sequence — and therefore every floating-point accumulation
+//! order — mirrors the pre-arena interpreter exactly; only the buffer
+//! ownership moved into [`StepArena`].
+
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+use anyhow::Result;
+
+use crate::runtime::ops;
+use crate::util::tensor::Tensor;
+use crate::vq::kernels;
+
+use super::arena::StepArena;
+use super::plan::{Mode, Plan};
+use super::loss_head_into;
+
+pub(super) fn run_vq(
+    plan: &Plan,
+    ar: &mut StepArena,
+    inputs: &[Tensor],
+    outputs: &mut [Tensor],
+    mode: Mode,
+) -> Result<()> {
+    let train = mode == Mode::Train;
+    let (b, k) = (plan.b, plan.k);
+    let ll = plan.layers.len();
+    let sage = plan.sage;
+    let StepArena {
+        xfeat,
+        pre,
+        mbuf,
+        gvec,
+        g,
+        dh,
+        s_un,
+        s_mat,
+        s_gsl,
+        s_logp,
+        s_zb,
+        s_zw,
+        s_inv,
+        ..
+    } = ar;
+
+    // ---- forward (Eq. 6): m = C_in X_B + unsketch(C̃_out, X̃)[:, :f] ----
+    xfeat[0].copy_from_slice(&inputs[plan.in_x].f);
+    for l in 0..ll {
+        let sl = &plan.layers[l];
+        let (f, h, cf) = (sl.f_in, sl.h_out, sl.cf);
+        let c_in = &inputs[sl.c_in.expect("plan: c_in")].f;
+        let c_out = &inputs[sl.c_out.expect("plan: c_out")].f;
+        let cw = &inputs[sl.cw.expect("plan: cw")].f;
+        ops::unsketch_into(c_out, sl.n_br, b, k, cw, sl.fp, &mut s_un[..b * cf]);
+        {
+            let m = &mut mbuf[l];
+            ops::matmul_into(c_in, b, b, &xfeat[l], f, m);
+            for i in 0..b {
+                for d in 0..f {
+                    m[i * f + d] += s_un[i * cf + d];
+                }
+            }
+        }
+        let bias = &inputs[sl.bias.expect("plan: bias")].f;
+        {
+            let y = &mut pre[l];
+            if sage {
+                let w_self = &inputs[sl.w_self.expect("plan: w_self")].f;
+                let w_nbr = &inputs[sl.w_nbr.expect("plan: w_nbr")].f;
+                ops::matmul_into(&xfeat[l], b, f, w_self, h, y);
+                ops::matmul_into(&mbuf[l], b, f, w_nbr, h, &mut s_mat[..b * h]);
+                ops::add_into(y, &s_mat[..b * h]);
+            } else {
+                let w = &inputs[sl.w.expect("plan: w")].f;
+                ops::matmul_into(&mbuf[l], b, f, w, h, y);
+            }
+            ops::add_bias(y, h, bias);
+        }
+        if l + 1 < ll {
+            ops::relu_into(&pre[l], &mut xfeat[l + 1]);
+        }
+    }
+    let c = plan.c;
+    outputs[plan.o_logits.expect("plan: logits")].f.copy_from_slice(&pre[ll - 1]);
+    if !train {
+        if mode == Mode::Infer {
+            for l in 0..ll {
+                outputs[plan.layers[l].o_xfeat.expect("plan: xfeat out")]
+                    .f
+                    .copy_from_slice(&xfeat[l]);
+            }
+        }
+        return Ok(());
+    }
+
+    let loss = loss_head_into(
+        plan,
+        inputs,
+        &pre[ll - 1],
+        b,
+        c,
+        &mut g[..b * c],
+        &mut s_logp[..b * c],
+    )?;
+    outputs[plan.o_loss.expect("plan: loss")].f[0] = loss;
+
+    // ---- backward (Eq. 7): same fused form with C_inᵀ and the
+    // transposed out-of-batch sketches; the probe gradient at each layer
+    // is exactly G_B^{l+1} ----
+    for l in (0..ll).rev() {
+        let sl = &plan.layers[l];
+        let (f, h, gdim, cf) = (sl.f_in, sl.h_out, sl.g_dim, sl.cf);
+        debug_assert_eq!(gdim, h, "fixed conv: gradient dim equals layer width");
+        if l + 1 < ll {
+            ops::relu_bwd(&mut g[..b * h], &pre[l]);
+        }
+        gvec[l].copy_from_slice(&g[..b * h]);
+        ops::col_sum_into(&g[..b * h], h, &mut outputs[sl.g_bias.expect("plan: g_bias")].f);
+        let c_in = &inputs[sl.c_in.expect("plan: c_in")].f;
+        let ct_out = &inputs[sl.ct_out.expect("plan: ct_out")].f;
+        let cw = &inputs[sl.cw.expect("plan: cw")].f;
+        // (C_inᵀ G_B + unsketch((C̃ᵀ)_out, G̃)) — gradient columns of the
+        // concat space are [f_in, f_in + g_dim).
+        ops::unsketch_into(ct_out, sl.n_br, b, k, cw, sl.fp, &mut s_un[..b * cf]);
+        ops::slice_cols_into(&s_un[..b * cf], cf, f, f + gdim, &mut s_gsl[..b * gdim]);
+        ops::matmul_at_b_into(c_in, b, b, &g[..b * h], h, &mut s_mat[..b * h]);
+        ops::add_into(&mut s_gsl[..b * gdim], &s_mat[..b * h]);
+        if sage {
+            let w_self = &inputs[sl.w_self.expect("plan: w_self")].f;
+            let w_nbr = &inputs[sl.w_nbr.expect("plan: w_nbr")].f;
+            ops::matmul_at_b_into(
+                &xfeat[l],
+                b,
+                f,
+                &g[..b * h],
+                h,
+                &mut outputs[sl.g_w_self.expect("plan: g_w_self")].f,
+            );
+            ops::matmul_at_b_into(
+                &mbuf[l],
+                b,
+                f,
+                &g[..b * h],
+                h,
+                &mut outputs[sl.g_w_nbr.expect("plan: g_w_nbr")].f,
+            );
+            ops::matmul_a_bt_into(&g[..b * h], b, h, w_self, f, &mut dh[..b * f]);
+            ops::matmul_a_bt_into(&s_gsl[..b * h], b, h, w_nbr, f, &mut s_mat[..b * f]);
+            ops::add_into(&mut dh[..b * f], &s_mat[..b * f]);
+        } else {
+            let w = &inputs[sl.w.expect("plan: w")].f;
+            ops::matmul_at_b_into(
+                &mbuf[l],
+                b,
+                f,
+                &g[..b * h],
+                h,
+                &mut outputs[sl.g_w.expect("plan: g_w")].f,
+            );
+            ops::matmul_a_bt_into(&s_gsl[..b * h], b, h, w, f, &mut dh[..b * f]);
+        }
+        std::mem::swap(g, dh);
+    }
+
+    // ---- Alg. 2 FINDNEAREST on (X_B^l ‖ G_B^{l+1}) ----
+    push_assign_outputs(plan, inputs, outputs, xfeat, gvec, s_zb, s_zw, s_inv)
+}
+
+/// Alg. 2 FINDNEAREST on the concat vectors (X_B^l ‖ G_B^{l+1}), whitened
+/// against the pre-update codebook stats supplied as inputs; emits the
+/// per-layer `xfeat` / `gvec` / `assign` outputs shared by every vq_train
+/// backbone.
+pub(super) fn push_assign_outputs(
+    plan: &Plan,
+    inputs: &[Tensor],
+    outputs: &mut [Tensor],
+    xfeat: &[Vec<f32>],
+    gvec: &[Vec<f32>],
+    s_zb: &mut [f32],
+    s_zw: &mut [f32],
+    s_inv: &mut [f32],
+) -> Result<()> {
+    let (b, k) = (plan.b, plan.k);
+    for (l, sl) in plan.layers.iter().enumerate() {
+        let mean = &inputs[sl.mean.expect("plan: mean")].f;
+        let var = &inputs[sl.var.expect("plan: var")].f;
+        let cww = &inputs[sl.cww.expect("plan: cww")].f;
+        let (f, gdim, fp) = (sl.f_in, sl.g_dim, sl.fp);
+        {
+            let assign = &mut outputs[sl.o_assign.expect("plan: assign out")].i;
+            for j in 0..sl.n_br {
+                // branch j covers concat columns [j*fp, (j+1)*fp)
+                for i in 0..b {
+                    for d in 0..fp {
+                        let col = j * fp + d;
+                        let raw = if col < f {
+                            xfeat[l][i * f + col]
+                        } else if col < f + gdim {
+                            gvec[l][i * gdim + (col - f)]
+                        } else {
+                            0.0
+                        };
+                        s_zb[i * fp + d] = raw;
+                    }
+                }
+                kernels::inv_std_into(&var[j * fp..(j + 1) * fp], &mut s_inv[..fp]);
+                kernels::whiten_into(
+                    &s_zb[..b * fp],
+                    fp,
+                    &mean[j * fp..(j + 1) * fp],
+                    &s_inv[..fp],
+                    &mut s_zw[..b * fp],
+                );
+                kernels::assign_blocked(
+                    &s_zw[..b * fp],
+                    fp,
+                    fp,
+                    &cww[j * k * fp..(j + 1) * k * fp],
+                    k,
+                    fp,
+                    &mut assign[j * b..(j + 1) * b],
+                );
+            }
+        }
+        outputs[sl.o_xfeat.expect("plan: xfeat out")].f.copy_from_slice(&xfeat[l]);
+        outputs[sl.o_gvec.expect("plan: gvec out")].f.copy_from_slice(&gvec[l]);
+    }
+    Ok(())
+}
+
+/// Standalone masked assignment (inductive inference path).
+pub(super) fn run_vq_assign(
+    plan: &Plan,
+    ar: &mut StepArena,
+    inputs: &[Tensor],
+    outputs: &mut [Tensor],
+) -> Result<()> {
+    let z = &inputs[plan.in_x];
+    let cww = &inputs[plan.in_cww.expect("plan: cww")].f;
+    let mask = &inputs[plan.in_mask.expect("plan: mask")].f;
+    let (nb, b, fp) = (z.shape[0], z.shape[1], z.shape[2]);
+    let k = plan.k;
+    let StepArena { s_zb, s_zw, .. } = ar;
+    let assign = &mut outputs[plan.o_assign_only.expect("plan: assign out")].i;
+    for j in 0..nb {
+        let mj = &mask[j * fp..(j + 1) * fp];
+        let zm = &mut s_zb[..b * fp];
+        zm.copy_from_slice(&z.f[j * b * fp..(j + 1) * b * fp]);
+        for (idx, v) in zm.iter_mut().enumerate() {
+            *v *= mj[idx % fp];
+        }
+        let cm = &mut s_zw[..k * fp];
+        cm.copy_from_slice(&cww[j * k * fp..(j + 1) * k * fp]);
+        for (idx, v) in cm.iter_mut().enumerate() {
+            *v *= mj[idx % fp];
+        }
+        kernels::assign_blocked(zm, fp, fp, cm, k, fp, &mut assign[j * b..(j + 1) * b]);
+    }
+    Ok(())
+}

@@ -5,6 +5,16 @@
 //!
 //! Semantics mirror `python/compile/kernels/ref.py` — these are the same
 //! mathematical definitions the Pallas kernels are tested against.
+//!
+//! Every op exists in two forms: an `_into` variant writing into a
+//! caller-owned buffer (the plan-compiled executor's step arena reuses
+//! those buffers across steps, so the hot path allocates nothing) and an
+//! allocating wrapper that delegates to it.  The `_into` bodies keep the
+//! exact accumulation order of the original allocating loops — zero the
+//! buffer, then accumulate — so a reused buffer computes bit-identical
+//! results to a fresh one.
+
+#![allow(clippy::too_many_arguments)]
 
 use crate::util::par;
 
@@ -15,11 +25,13 @@ const PAR_THRESHOLD: usize = 1 << 16;
 /// Rows per parallel work unit.
 const ROW_BLOCK: usize = 32;
 
-/// `(m, k) @ (k, n) -> (m, n)`, ikj order (streams `b` rows, vectorizes n).
-pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+/// `(m, k) @ (k, n) -> (m, n)`, ikj order (streams `b` rows, vectorizes n),
+/// into a reused buffer.
+pub fn matmul_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
     let body = |r0: usize, chunk: &mut [f32]| {
         for (rr, orow) in chunk.chunks_mut(n).enumerate() {
             let r = r0 + rr;
@@ -36,19 +48,26 @@ pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
         }
     };
     if m * k * n < PAR_THRESHOLD {
-        body(0, &mut out);
+        body(0, &mut *out);
     } else {
-        par::par_chunks_mut(&mut out, ROW_BLOCK * n, |ci, chunk| body(ci * ROW_BLOCK, chunk));
+        par::par_chunks_mut(out, ROW_BLOCK * n, |ci, chunk| body(ci * ROW_BLOCK, chunk));
     }
+}
+
+/// Allocating wrapper of [`matmul_into`].
+pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_into(a, m, k, b, n, &mut out);
     out
 }
 
-/// `aᵀ @ b` where `a` is `(m, k)` and `b` is `(m, n)` -> `(k, n)`.
-/// Serial: used for weight gradients whose output is small.
-pub fn matmul_at_b(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+/// `aᵀ @ b` where `a` is `(m, k)` and `b` is `(m, n)` -> `(k, n)`, into a
+/// reused buffer.  Serial: used for weight gradients whose output is small.
+pub fn matmul_at_b_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
-    let mut out = vec![0.0f32; k * n];
+    debug_assert_eq!(out.len(), k * n);
+    out.fill(0.0);
     for r in 0..m {
         let arow = &a[r * k..(r + 1) * k];
         let brow = &b[r * n..(r + 1) * n];
@@ -62,14 +81,21 @@ pub fn matmul_at_b(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f3
             }
         }
     }
+}
+
+/// Allocating wrapper of [`matmul_at_b_into`].
+pub fn matmul_at_b(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k * n];
+    matmul_at_b_into(a, m, k, b, n, &mut out);
     out
 }
 
-/// `a @ bᵀ` where `a` is `(m, k)` and `b` is `(n, k)` -> `(m, n)` (row-dot).
-pub fn matmul_a_bt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+/// `a @ bᵀ` where `a` is `(m, k)` and `b` is `(n, k)` -> `(m, n)` (row-dot),
+/// into a reused buffer (every element overwritten).
+pub fn matmul_a_bt_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    let mut out = vec![0.0f32; m * n];
+    debug_assert_eq!(out.len(), m * n);
     let body = |r0: usize, chunk: &mut [f32]| {
         for (rr, orow) in chunk.chunks_mut(n).enumerate() {
             let arow = &a[(r0 + rr) * k..(r0 + rr + 1) * k];
@@ -84,21 +110,36 @@ pub fn matmul_a_bt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f3
         }
     };
     if m * k * n < PAR_THRESHOLD {
-        body(0, &mut out);
+        body(0, &mut *out);
     } else {
-        par::par_chunks_mut(&mut out, ROW_BLOCK * n, |ci, chunk| body(ci * ROW_BLOCK, chunk));
+        par::par_chunks_mut(out, ROW_BLOCK * n, |ci, chunk| body(ci * ROW_BLOCK, chunk));
     }
+}
+
+/// Allocating wrapper of [`matmul_a_bt_into`].
+pub fn matmul_a_bt(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_a_bt_into(a, m, k, b, n, &mut out);
     out
 }
 
 /// Out-of-batch message reconstruction (`unsketch_ref`): per branch `j`,
 /// `(b, k) @ (k, fp)` written into columns `[j*fp, (j+1)*fp)` of a
 /// `(b, n_br*fp)` buffer.
-pub fn unsketch(c_out: &[f32], n_br: usize, b: usize, k: usize, cw: &[f32], fp: usize) -> Vec<f32> {
+pub fn unsketch_into(
+    c_out: &[f32],
+    n_br: usize,
+    b: usize,
+    k: usize,
+    cw: &[f32],
+    fp: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(c_out.len(), n_br * b * k);
     debug_assert_eq!(cw.len(), n_br * k * fp);
     let width = n_br * fp;
-    let mut out = vec![0.0f32; b * width];
+    debug_assert_eq!(out.len(), b * width);
+    out.fill(0.0);
     let body = |r0: usize, chunk: &mut [f32]| {
         for (rr, orow) in chunk.chunks_mut(width).enumerate() {
             let i = r0 + rr;
@@ -118,12 +159,43 @@ pub fn unsketch(c_out: &[f32], n_br: usize, b: usize, k: usize, cw: &[f32], fp: 
         }
     };
     if b * k * width < PAR_THRESHOLD {
-        body(0, &mut out);
+        body(0, &mut *out);
     } else {
-        par::par_chunks_mut(&mut out, ROW_BLOCK * width, |ci, chunk| {
-            body(ci * ROW_BLOCK, chunk)
-        });
+        par::par_chunks_mut(out, ROW_BLOCK * width, |ci, chunk| body(ci * ROW_BLOCK, chunk));
     }
+}
+
+/// Allocating wrapper of [`unsketch_into`].
+pub fn unsketch(c_out: &[f32], n_br: usize, b: usize, k: usize, cw: &[f32], fp: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * n_br * fp];
+    unsketch_into(c_out, n_br, b, k, cw, fp, &mut out);
+    out
+}
+
+/// `dst += src`, elementwise (the fused-add used between op outputs; the
+/// addend is always materialized first so associativity matches the
+/// pre-arena interpreter exactly).
+pub fn add_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (a, x) in dst.iter_mut().zip(src) {
+        *a += x;
+    }
+}
+
+/// Per-row dot with a fixed vector: `(rows, w) · (w,) -> (rows,)` — the
+/// attention projections `e = (X W) a`.
+pub fn dot_rows_into(a: &[f32], w: usize, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(v.len(), w);
+    debug_assert_eq!(a.len(), out.len() * w);
+    for (o, row) in out.iter_mut().zip(a.chunks(w)) {
+        *o = row.iter().zip(v).map(|(x, y)| x * y).sum();
+    }
+}
+
+/// Allocating wrapper of [`dot_rows_into`].
+pub fn dot_rows(a: &[f32], w: usize, v: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; a.len() / w.max(1)];
+    dot_rows_into(a, w, v, &mut out);
     out
 }
 
@@ -137,20 +209,37 @@ pub fn add_bias(x: &mut [f32], n: usize, bias: &[f32]) {
     }
 }
 
-/// Column sums: `(rows, n) -> (n)` (bias gradient).
-pub fn col_sum(x: &[f32], n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n];
+/// Column sums: `(rows, n) -> (n)` (bias gradient), into a reused buffer.
+pub fn col_sum_into(x: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n);
+    out.fill(0.0);
     for row in x.chunks(n) {
         for (o, &v) in out.iter_mut().zip(row) {
             *o += v;
         }
     }
+}
+
+/// Allocating wrapper of [`col_sum_into`].
+pub fn col_sum(x: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    col_sum_into(x, n, &mut out);
     out
 }
 
-/// Elementwise ReLU.
+/// Elementwise ReLU into a reused buffer.
+pub fn relu_into(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = if v > 0.0 { v } else { 0.0 };
+    }
+}
+
+/// Allocating wrapper of [`relu_into`].
 pub fn relu(x: &[f32]) -> Vec<f32> {
-    x.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect()
+    let mut out = vec![0.0f32; x.len()];
+    relu_into(x, &mut out);
+    out
 }
 
 /// Mask a gradient by ReLU'(pre): `g ⊙ 1[pre > 0]`, in place.
@@ -164,21 +253,28 @@ pub fn relu_bwd(g: &mut [f32], pre: &[f32]) {
 }
 
 /// Copy columns `[lo, hi)` of a `(rows, width)` buffer into a dense
-/// `(rows, hi-lo)` one.
-pub fn slice_cols(x: &[f32], width: usize, lo: usize, hi: usize) -> Vec<f32> {
+/// `(rows, hi-lo)` one (reused buffer).
+pub fn slice_cols_into(x: &[f32], width: usize, lo: usize, hi: usize, out: &mut [f32]) {
     debug_assert!(lo <= hi && hi <= width);
     let rows = x.len() / width;
     let w = hi - lo;
-    let mut out = vec![0.0f32; rows * w];
+    debug_assert_eq!(out.len(), rows * w);
     for i in 0..rows {
         out[i * w..(i + 1) * w].copy_from_slice(&x[i * width + lo..i * width + hi]);
     }
+}
+
+/// Allocating wrapper of [`slice_cols_into`].
+pub fn slice_cols(x: &[f32], width: usize, lo: usize, hi: usize) -> Vec<f32> {
+    let rows = x.len() / width;
+    let mut out = vec![0.0f32; rows * (hi - lo)];
+    slice_cols_into(x, width, lo, hi, &mut out);
     out
 }
 
-/// Row-stable log-softmax over `(rows, c)`.
-pub fn log_softmax(x: &[f32], c: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; x.len()];
+/// Row-stable log-softmax over `(rows, c)`, into a reused buffer.
+pub fn log_softmax_into(x: &[f32], c: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
     for (orow, row) in out.chunks_mut(c).zip(x.chunks(c)) {
         let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut lse = 0.0f32;
@@ -190,6 +286,12 @@ pub fn log_softmax(x: &[f32], c: usize) -> Vec<f32> {
             *o = v - lse;
         }
     }
+}
+
+/// Allocating wrapper of [`log_softmax_into`].
+pub fn log_softmax(x: &[f32], c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    log_softmax_into(x, c, &mut out);
     out
 }
 
@@ -271,10 +373,11 @@ const EXP_PAR_THRESHOLD: usize = 1 << 13;
 /// Rows are independent, so the tile blocks over `util::par` exactly like
 /// the matmuls — bit-identical to [`gat_score_tile_serial`] at any thread
 /// count.
-pub fn gat_score_tile(e_dst: &[f32], e_src: &[f32], mask: &[f32]) -> Vec<f32> {
+pub fn gat_score_tile_into(e_dst: &[f32], e_src: &[f32], mask: &[f32], out: &mut [f32]) {
     let (b, m) = (e_dst.len(), e_src.len());
     debug_assert_eq!(mask.len(), b * m);
-    let mut out = vec![0.0f32; b * m];
+    debug_assert_eq!(out.len(), b * m);
+    out.fill(0.0);
     let body = |r0: usize, chunk: &mut [f32]| {
         for (rr, orow) in chunk.chunks_mut(m).enumerate() {
             let i = r0 + rr;
@@ -287,10 +390,16 @@ pub fn gat_score_tile(e_dst: &[f32], e_src: &[f32], mask: &[f32]) -> Vec<f32> {
         }
     };
     if b * m < EXP_PAR_THRESHOLD {
-        body(0, &mut out);
+        body(0, &mut *out);
     } else {
-        par::par_chunks_mut(&mut out, ROW_BLOCK * m, |ci, chunk| body(ci * ROW_BLOCK, chunk));
+        par::par_chunks_mut(out, ROW_BLOCK * m, |ci, chunk| body(ci * ROW_BLOCK, chunk));
     }
+}
+
+/// Allocating wrapper of [`gat_score_tile_into`].
+pub fn gat_score_tile(e_dst: &[f32], e_src: &[f32], mask: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; e_dst.len() * e_src.len()];
+    gat_score_tile_into(e_dst, e_src, mask, &mut out);
     out
 }
 
@@ -315,19 +424,25 @@ pub fn gat_score_tile_serial(e_dst: &[f32], e_src: &[f32], mask: &[f32]) -> Vec<
 /// Elementwise `exp_capped` over a score tile (txf global attention,
 /// 𝔠 = all-ones), blocked over `util::par` above the exp threshold.
 /// Purely elementwise, so parallel == serial bitwise.
-pub fn exp_capped_tile(t: &[f32]) -> Vec<f32> {
-    let mut out = vec![0.0f32; t.len()];
+pub fn exp_capped_tile_into(t: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(t.len(), out.len());
     let body = |o0: usize, chunk: &mut [f32]| {
         for (j, x) in chunk.iter_mut().enumerate() {
             *x = exp_capped(t[o0 + j]);
         }
     };
     if t.len() < EXP_PAR_THRESHOLD {
-        body(0, &mut out);
+        body(0, &mut *out);
     } else {
         let chunk = ROW_BLOCK * 64;
-        par::par_chunks_mut(&mut out, chunk, |ci, c| body(ci * chunk, c));
+        par::par_chunks_mut(out, chunk, |ci, c| body(ci * chunk, c));
     }
+}
+
+/// Allocating wrapper of [`exp_capped_tile_into`].
+pub fn exp_capped_tile(t: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; t.len()];
+    exp_capped_tile_into(t, &mut out);
     out
 }
 
@@ -335,10 +450,10 @@ pub fn exp_capped_tile(t: &[f32]) -> Vec<f32> {
 /// t[i,v])` for a `(rows, k)` tile — the txf out-of-batch score block
 /// (`w = cnt_out`, the bucket populations: an empty bucket contributes
 /// exactly nothing).  Blocked over rows like [`gat_score_tile`].
-pub fn col_weighted_exp_tile(t: &[f32], k: usize, w: &[f32], scale: f32) -> Vec<f32> {
+pub fn col_weighted_exp_tile_into(t: &[f32], k: usize, w: &[f32], scale: f32, out: &mut [f32]) {
     debug_assert_eq!(w.len(), k);
     debug_assert_eq!(t.len() % k, 0);
-    let mut out = vec![0.0f32; t.len()];
+    debug_assert_eq!(t.len(), out.len());
     let body = |r0: usize, chunk: &mut [f32]| {
         for (rr, orow) in chunk.chunks_mut(k).enumerate() {
             let trow = &t[(r0 + rr) * k..(r0 + rr + 1) * k];
@@ -352,10 +467,16 @@ pub fn col_weighted_exp_tile(t: &[f32], k: usize, w: &[f32], scale: f32) -> Vec<
         }
     };
     if t.len() < EXP_PAR_THRESHOLD {
-        body(0, &mut out);
+        body(0, &mut *out);
     } else {
-        par::par_chunks_mut(&mut out, ROW_BLOCK * k, |ci, chunk| body(ci * ROW_BLOCK, chunk));
+        par::par_chunks_mut(out, ROW_BLOCK * k, |ci, chunk| body(ci * ROW_BLOCK, chunk));
     }
+}
+
+/// Allocating wrapper of [`col_weighted_exp_tile_into`].
+pub fn col_weighted_exp_tile(t: &[f32], k: usize, w: &[f32], scale: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; t.len()];
+    col_weighted_exp_tile_into(t, k, w, scale, &mut out);
     out
 }
 
@@ -383,9 +504,12 @@ pub fn edge_attn_scatter(
     edge_attn_scatter_blocked(proj, hh, nn, esrc, edst, ecoef, e_src, e_dst)
 }
 
-/// Serial reference of the per-edge scatter (the pre-parallel loop,
-/// parity baseline for tests and the fallback below the threshold).
-pub fn edge_attn_scatter_serial(
+/// [`edge_attn_scatter`] into caller-owned buffers (the edge executor's
+/// arena).  The serial path (below the dispatch threshold — every hermetic
+/// test config) writes `num`/`den` directly and allocates nothing; the
+/// blocked-parallel path still allocates its internal fused accumulator +
+/// edge buckets (inherent to the bucketing scheme) and copies out.
+pub fn edge_attn_scatter_into(
     proj: &[f32],
     hh: usize,
     nn: usize,
@@ -394,9 +518,35 @@ pub fn edge_attn_scatter_serial(
     ecoef: &[f32],
     e_src: &[f32],
     e_dst: &[f32],
-) -> (Vec<f32>, Vec<f32>) {
-    let mut num = vec![0.0f32; nn * hh];
-    let mut den = vec![0.0f32; nn];
+    num: &mut [f32],
+    den: &mut [f32],
+) {
+    debug_assert_eq!(num.len(), nn * hh);
+    debug_assert_eq!(den.len(), nn);
+    if esrc.len() * hh < PAR_THRESHOLD {
+        edge_attn_scatter_serial_into(proj, hh, esrc, edst, ecoef, e_src, e_dst, num, den);
+        return;
+    }
+    let (n, d) = edge_attn_scatter_blocked(proj, hh, nn, esrc, edst, ecoef, e_src, e_dst);
+    num.copy_from_slice(&n);
+    den.copy_from_slice(&d);
+}
+
+/// The one serial scatter body (shared by [`edge_attn_scatter_serial`] and
+/// the arena path) — zero-then-accumulate in edge order.
+fn edge_attn_scatter_serial_into(
+    proj: &[f32],
+    hh: usize,
+    esrc: &[i32],
+    edst: &[i32],
+    ecoef: &[f32],
+    e_src: &[f32],
+    e_dst: &[f32],
+    num: &mut [f32],
+    den: &mut [f32],
+) {
+    num.fill(0.0);
+    den.fill(0.0);
     for e in 0..esrc.len() {
         let cf = ecoef[e];
         if cf == 0.0 {
@@ -411,6 +561,23 @@ pub fn edge_attn_scatter_serial(
             dst[t] += sc * src[t];
         }
     }
+}
+
+/// Serial reference of the per-edge scatter (the pre-parallel loop,
+/// parity baseline for tests and the fallback below the threshold).
+pub fn edge_attn_scatter_serial(
+    proj: &[f32],
+    hh: usize,
+    nn: usize,
+    esrc: &[i32],
+    edst: &[i32],
+    ecoef: &[f32],
+    e_src: &[f32],
+    e_dst: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut num = vec![0.0f32; nn * hh];
+    let mut den = vec![0.0f32; nn];
+    edge_attn_scatter_serial_into(proj, hh, esrc, edst, ecoef, e_src, e_dst, &mut num, &mut den);
     (num, den)
 }
 
@@ -480,9 +647,20 @@ pub fn attn_normalize(num: &mut [f32], h: usize, den: &[f32]) {
     }
 }
 
-/// Row sums of a `(rows, m)` score tile (the attention denominator).
+/// Row sums of a `(rows, m)` score tile (the attention denominator), into
+/// a reused buffer.
+pub fn row_sum_into(x: &[f32], m: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len() * m);
+    for (o, row) in out.iter_mut().zip(x.chunks(m)) {
+        *o = row.iter().sum();
+    }
+}
+
+/// Allocating wrapper of [`row_sum_into`].
 pub fn row_sum(x: &[f32], m: usize) -> Vec<f32> {
-    x.chunks(m).map(|row| row.iter().sum()).collect()
+    let mut out = vec![0.0f32; x.len() / m.max(1)];
+    row_sum_into(x, m, &mut out);
+    out
 }
 
 #[cfg(test)]

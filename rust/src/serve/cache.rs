@@ -42,22 +42,29 @@ impl LayerCache {
         LayerCache { plan, k, n, assign, cw, global_hist }
     }
 
-    /// Forward fixed-convolution sketches for a query batch: `(C_in,
-    /// C̃_out)` — the exact intra-batch block plus the codeword-merged
-    /// out-of-batch block.  Mirrors `vq::sketch::build_fixed` minus the
-    /// transposed (Eq. 7) side, accumulating in the same arc order so the
-    /// tensors are bit-identical to the trainer's.
-    pub fn build_fixed_fwd(
+    /// Forward fixed-convolution sketches for a query batch, written into
+    /// caller-owned buffers: `(C_in, C̃_out)` — the exact intra-batch block
+    /// plus the codeword-merged out-of-batch block.  Mirrors
+    /// `vq::sketch::build_fixed` minus the transposed (Eq. 7) side,
+    /// accumulating in the same arc order so the tensors are bit-identical
+    /// to the trainer's.  The serving session rebuilds its dynamic input
+    /// slots in place, so the steady-state micro-batch allocates nothing
+    /// here.
+    pub fn build_fixed_fwd_into(
         &self,
         graph: &Graph,
         conv: Conv,
         batch: &[u32],
         scratch: &mut SketchScratch,
-    ) -> (Tensor, Tensor) {
+        c_in: &mut [f32],
+        c_out: &mut [f32],
+    ) {
         let b = batch.len();
         let (nb, k, n) = (self.plan.n_br, self.k, self.n);
-        let mut c_in = vec![0.0f32; b * b];
-        let mut c_out = vec![0.0f32; nb * b * k];
+        debug_assert_eq!(c_in.len(), b * b);
+        debug_assert_eq!(c_out.len(), nb * b * k);
+        c_in.fill(0.0);
+        c_out.fill(0.0);
         scratch.mark(batch);
         for (i, &gi) in batch.iter().enumerate() {
             let gi = gi as usize;
@@ -78,26 +85,46 @@ impl LayerCache {
             }
         }
         scratch.unmark(batch);
+    }
+
+    /// Allocating wrapper of [`LayerCache::build_fixed_fwd_into`].
+    pub fn build_fixed_fwd(
+        &self,
+        graph: &Graph,
+        conv: Conv,
+        batch: &[u32],
+        scratch: &mut SketchScratch,
+    ) -> (Tensor, Tensor) {
+        let b = batch.len();
+        let (nb, k) = (self.plan.n_br, self.k);
+        let mut c_in = vec![0.0f32; b * b];
+        let mut c_out = vec![0.0f32; nb * b * k];
+        self.build_fixed_fwd_into(graph, conv, batch, scratch, &mut c_in, &mut c_out);
         (
             Tensor::from_f32(&[b, b], c_in),
             Tensor::from_f32(&[nb, b, k], c_out),
         )
     }
 
-    /// Forward learnable-convolution count sketches: `(mask_in, M_out)` —
-    /// 𝔠 = A+I over the batch block, out-of-batch in-neighbors counted per
-    /// codeword bucket.  Mirrors `vq::sketch::build_learnable` minus M_outᵀ.
-    pub fn build_learnable_fwd(
+    /// Forward learnable-convolution count sketches, written into
+    /// caller-owned buffers: `(mask_in, M_out)` — 𝔠 = A+I over the batch
+    /// block, out-of-batch in-neighbors counted per codeword bucket.
+    /// Mirrors `vq::sketch::build_learnable` minus M_outᵀ.
+    pub fn build_learnable_fwd_into(
         &self,
         graph: &Graph,
         batch: &[u32],
         scratch: &mut SketchScratch,
-    ) -> (Tensor, Tensor) {
+        mask_in: &mut [f32],
+        m_out: &mut [f32],
+    ) {
         let b = batch.len();
         let k = self.k;
         debug_assert_eq!(self.plan.n_br, 1, "learnable convs use a single branch");
-        let mut mask_in = vec![0.0f32; b * b];
-        let mut m_out = vec![0.0f32; b * k];
+        debug_assert_eq!(mask_in.len(), b * b);
+        debug_assert_eq!(m_out.len(), b * k);
+        mask_in.fill(0.0);
+        m_out.fill(0.0);
         scratch.mark(batch);
         for (i, &gi) in batch.iter().enumerate() {
             let gi = gi as usize;
@@ -113,19 +140,35 @@ impl LayerCache {
             }
         }
         scratch.unmark(batch);
+    }
+
+    /// Allocating wrapper of [`LayerCache::build_learnable_fwd_into`].
+    pub fn build_learnable_fwd(
+        &self,
+        graph: &Graph,
+        batch: &[u32],
+        scratch: &mut SketchScratch,
+    ) -> (Tensor, Tensor) {
+        let b = batch.len();
+        let k = self.k;
+        let mut mask_in = vec![0.0f32; b * b];
+        let mut m_out = vec![0.0f32; b * k];
+        self.build_learnable_fwd_into(graph, batch, scratch, &mut mask_in, &mut m_out);
         (
             Tensor::from_f32(&[b, b], mask_in),
             Tensor::from_f32(&[b, k], m_out),
         )
     }
 
-    /// Global out-of-batch cluster histogram (txf global attention):
-    /// `cnt_out[v] = |{u ∉ batch : R[u] = v}|`.  Computed as the frozen
-    /// all-node histogram minus the batch's distinct members — counts are
-    /// small integers, exact in f32, so the result is bit-identical to
-    /// `vq::sketch::build_cnt_out`'s O(n) counting sweep.
-    pub fn build_cnt_fwd(&self, batch: &[u32], scratch: &mut SketchScratch) -> Tensor {
-        let mut cnt = self.global_hist.clone();
+    /// Global out-of-batch cluster histogram (txf global attention),
+    /// written into a caller-owned buffer: `cnt_out[v] = |{u ∉ batch :
+    /// R[u] = v}|`.  Computed as the frozen all-node histogram minus the
+    /// batch's distinct members — counts are small integers, exact in f32,
+    /// so the result is bit-identical to `vq::sketch::build_cnt_out`'s O(n)
+    /// counting sweep.
+    pub fn build_cnt_fwd_into(&self, batch: &[u32], scratch: &mut SketchScratch, cnt: &mut [f32]) {
+        debug_assert_eq!(cnt.len(), self.k);
+        cnt.copy_from_slice(&self.global_hist);
         scratch.mark(batch);
         for (i, &g) in batch.iter().enumerate() {
             // mark() keeps the LAST occurrence's position: decrement each
@@ -135,6 +178,12 @@ impl LayerCache {
             }
         }
         scratch.unmark(batch);
+    }
+
+    /// Allocating wrapper of [`LayerCache::build_cnt_fwd_into`].
+    pub fn build_cnt_fwd(&self, batch: &[u32], scratch: &mut SketchScratch) -> Tensor {
+        let mut cnt = vec![0.0f32; self.k];
+        self.build_cnt_fwd_into(batch, scratch, &mut cnt);
         Tensor::from_f32(&[self.k], cnt)
     }
 }

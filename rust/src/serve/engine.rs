@@ -79,14 +79,19 @@ impl MicroBatcher {
         // the batch holding its LAST slot returns, not when the whole
         // drain does — otherwise p50/p99 collapse to the burst wall time
         let mut batch_done: Vec<Instant> = Vec::with_capacity(slots.len() / b + 1);
+        let mut batch: Vec<u32> = Vec::with_capacity(b);
         let mut i = 0;
         while i < slots.len() {
             let end = (i + b).min(slots.len());
-            let mut batch: Vec<u32> = slots[i..end].to_vec();
-            let real = batch.len();
+            batch.clear();
+            batch.extend_from_slice(&slots[i..end]);
+            let real = end - i;
             while batch.len() < b {
                 batch.push(pad);
             }
+            // forward_batch rewrites the serving session in place and hands
+            // back a view of its output buffer — no per-batch copies beyond
+            // the result scatter below
             let out = model.forward_batch(rt, &batch)?;
             rows[i * c..end * c].copy_from_slice(&out[..real * c]);
             batch_done.push(Instant::now());

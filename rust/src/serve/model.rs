@@ -11,14 +11,14 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::checkpoint;
-use crate::coordinator::gather_features;
+use crate::coordinator::gather_features_into;
 use crate::coordinator::vq_trainer::VqTrainer;
 use crate::datasets::Dataset;
 use crate::graph::Conv;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::{Artifact, Runtime};
 use crate::serve::cache::EmbeddingCache;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::{self, Tensor};
 use crate::vq::sketch::SketchScratch;
 
 pub struct ServingModel {
@@ -28,24 +28,30 @@ pub struct ServingModel {
     pub params: Vec<Tensor>,
     pub cache: EmbeddingCache,
     scratch: SketchScratch,
-    /// Prebuilt input list in spec order.  Constant slots (params,
-    /// codebooks) are filled ONCE here; only the batch-dependent slots are
-    /// overwritten per micro-batch — the read path never re-copies frozen
-    /// weights.
+    /// Prebuilt input list in spec order — the serving session.  Constant
+    /// slots (params, codebooks) are filled ONCE here; the batch-dependent
+    /// slots are rewritten IN PLACE per micro-batch — the read path never
+    /// re-copies frozen weights and never allocates for a steady-state
+    /// micro-batch (the `serve_alloc_bytes` bench key measures this).
     inputs: Vec<Tensor>,
-    /// `(input index, kind)` of every batch-dependent slot, in spec order.
-    dynamic: Vec<(usize, DynSlot)>,
+    /// Output tensors rewritten in place by `Runtime::execute_into`.
+    outputs: Vec<Tensor>,
+    /// Every batch-dependent slot, grouped per builder pass.
+    dynamic: Vec<DynSlot>,
 }
 
-/// Batch-dependent input slots of the serve artifact.
+/// Batch-dependent input slots of the serve artifact, grouped so each
+/// sketch-builder pass writes its slot pair in place (via disjoint `&mut`).
 #[derive(Debug, Clone, Copy)]
 enum DynSlot {
-    Xb,
-    CIn(usize),
-    COut(usize),
-    MaskIn(usize),
-    MOut(usize),
-    CntOut(usize),
+    /// Gathered feature rows.
+    Xb(usize),
+    /// Fixed-conv sketch pair of layer `l` at input indices `(c_in, c_out)`.
+    Fixed { l: usize, c_in: usize, c_out: usize },
+    /// Learnable count-sketch pair of layer `l` at `(mask_in, m_out)`.
+    Learnable { l: usize, mask_in: usize, m_out: usize },
+    /// txf global histogram of layer `l` at input index `idx`.
+    CntOut { l: usize, idx: usize },
 }
 
 fn serve_artifact_name(ds: &str, model: &str) -> String {
@@ -54,43 +60,74 @@ fn serve_artifact_name(ds: &str, model: &str) -> String {
 
 /// Fill the constant input slots (params + raw codebooks) and index the
 /// dynamic ones.  Placeholder zeros keep every slot shape/dtype-correct;
-/// each dynamic slot is overwritten on every `forward_batch`.
+/// each dynamic slot is rewritten in place on every `forward_batch`.
 fn build_input_template(
     spec: &crate::runtime::manifest::ArtifactSpec,
     params: &[Tensor],
     cache: &EmbeddingCache,
-) -> Result<(Vec<Tensor>, Vec<(usize, DynSlot)>)> {
+) -> Result<(Vec<Tensor>, Vec<DynSlot>)> {
+    let nl = spec.plan.len();
     let mut inputs = Vec::with_capacity(spec.inputs.len());
     let mut dynamic = Vec::new();
+    // per-layer partner indices, paired up after the scan
+    let mut c_in_idx = vec![None; nl];
+    let mut c_out_idx = vec![None; nl];
+    let mut mask_idx = vec![None; nl];
+    let mut m_out_idx = vec![None; nl];
     let mut pi = 0usize;
     for (idx, ts) in spec.inputs.iter().enumerate() {
         let name = ts.name.as_str();
         if name == "xb" {
-            dynamic.push((idx, DynSlot::Xb));
+            dynamic.push(DynSlot::Xb(idx));
             inputs.push(Tensor::zeros(&ts.shape));
         } else if name.starts_with("param.") {
             inputs.push(params[pi].clone());
             pi += 1;
         } else if let Some((lstr, field)) = name.split_once('.') {
             let l: usize = lstr[1..].parse().context("layer index")?;
-            let slot = match field {
-                "c_in" => Some(DynSlot::CIn(l)),
-                "c_out" => Some(DynSlot::COut(l)),
-                "mask_in" => Some(DynSlot::MaskIn(l)),
-                "m_out" => Some(DynSlot::MOut(l)),
-                "cnt_out" => Some(DynSlot::CntOut(l)),
-                "cw" => None,
+            let known = match field {
+                "c_in" => {
+                    c_in_idx[l] = Some(idx);
+                    true
+                }
+                "c_out" => {
+                    c_out_idx[l] = Some(idx);
+                    true
+                }
+                "mask_in" => {
+                    mask_idx[l] = Some(idx);
+                    true
+                }
+                "m_out" => {
+                    m_out_idx[l] = Some(idx);
+                    true
+                }
+                "cnt_out" => {
+                    dynamic.push(DynSlot::CntOut { l, idx });
+                    true
+                }
+                "cw" => {
+                    inputs.push(cache.layers[l].cw.clone());
+                    false
+                }
                 other => bail!("unknown serve ctx field {other}"),
             };
-            match slot {
-                Some(kind) => {
-                    dynamic.push((idx, kind));
-                    inputs.push(Tensor::zeros(&ts.shape));
-                }
-                None => inputs.push(cache.layers[l].cw.clone()),
+            if known && field != "cw" {
+                inputs.push(Tensor::zeros(&ts.shape));
             }
         } else {
             bail!("unknown serve input {name}");
+        }
+    }
+    for l in 0..nl {
+        match (c_in_idx[l], c_out_idx[l], mask_idx[l], m_out_idx[l]) {
+            (Some(ci), Some(co), None, None) => {
+                dynamic.push(DynSlot::Fixed { l, c_in: ci, c_out: co })
+            }
+            (None, None, Some(mi), Some(mo)) => {
+                dynamic.push(DynSlot::Learnable { l, mask_in: mi, m_out: mo })
+            }
+            other => bail!("serve layer {l}: incomplete sketch slot pair {other:?}"),
         }
     }
     Ok((inputs, dynamic))
@@ -155,6 +192,7 @@ impl ServingModel {
             cache,
             scratch: SketchScratch::new(tr.ds.n()),
             inputs,
+            outputs: Vec::new(),
             dynamic,
         })
     }
@@ -216,6 +254,7 @@ impl ServingModel {
             cache,
             scratch,
             inputs,
+            outputs: Vec::new(),
             dynamic,
         })
     }
@@ -231,19 +270,22 @@ impl ServingModel {
         self.art.spec.outputs[0].shape[1]
     }
 
-    fn conv(&self) -> Conv {
+    fn conv_opt(&self) -> Option<Conv> {
         match self.model_name.as_str() {
-            "gcn" => Conv::GcnSym,
-            "sage" => Conv::SageMean,
-            other => panic!("fixed conv requested for learnable model {other}"),
+            "gcn" => Some(Conv::GcnSym),
+            "sage" => Some(Conv::SageMean),
+            _ => None, // learnable convolutions build count sketches instead
         }
     }
 
     /// One forward-only micro-batch: `batch` must be exactly `batch_size()`
-    /// node ids (the engine pads); returns row-major `(b, out_dim)` scores.
-    /// Only the batch-dependent input slots are rebuilt — the frozen
-    /// weights and codebooks ride the prebuilt template untouched.
-    pub fn forward_batch(&mut self, rt: &mut Runtime, batch: &[u32]) -> Result<Vec<f32>> {
+    /// node ids (the engine pads); returns row-major `(b, out_dim)` scores
+    /// borrowed from the session's output buffer (valid until the next
+    /// call).  Only the batch-dependent input slots are rewritten — in
+    /// place — so a steady-state micro-batch performs no heap allocation:
+    /// the frozen weights and codebooks ride the prebuilt template
+    /// untouched, and the executor's step arena owns every intermediate.
+    pub fn forward_batch(&mut self, rt: &mut Runtime, batch: &[u32]) -> Result<&[f32]> {
         let art = self.art.clone();
         if batch.len() != art.spec.b {
             bail!("forward_batch wants exactly b={} nodes, got {}", art.spec.b, batch.len());
@@ -253,42 +295,44 @@ impl ServingModel {
         if let Some(&bad) = batch.iter().find(|&&v| v as usize >= ds.n()) {
             bail!("node id {bad} out of range (dataset '{}' has n={})", ds.cfg.name, ds.n());
         }
-        // stash between paired slots of one layer (c_in → c_out /
-        // mask_in → m_out share a single builder pass)
-        let mut stash: Option<(usize, Tensor)> = None;
-        for di in 0..self.dynamic.len() {
-            let (idx, kind) = self.dynamic[di];
-            let t = match kind {
-                DynSlot::Xb => gather_features(&ds.features, ds.cfg.f_in_pad, batch),
-                DynSlot::CIn(l) => {
-                    let (c_in, c_out) = self.cache.layers[l].build_fixed_fwd(
-                        &ds.graph, self.conv(), batch, &mut self.scratch,
+        let conv = self.conv_opt();
+        for slot in &self.dynamic {
+            match *slot {
+                DynSlot::Xb(idx) => gather_features_into(
+                    &ds.features,
+                    ds.cfg.f_in_pad,
+                    batch,
+                    &mut self.inputs[idx].f,
+                ),
+                DynSlot::Fixed { l, c_in, c_out } => {
+                    let (ti, to) = tensor::mut2(&mut self.inputs, c_in, c_out);
+                    self.cache.layers[l].build_fixed_fwd_into(
+                        &ds.graph,
+                        conv.expect("fixed-conv serve artifact without a fixed conv"),
+                        batch,
+                        &mut self.scratch,
+                        &mut ti.f,
+                        &mut to.f,
                     );
-                    stash = Some((l, c_out));
-                    c_in
                 }
-                DynSlot::COut(l) => {
-                    let (pl, c_out) = stash.take().unwrap();
-                    assert_eq!(pl, l);
-                    c_out
-                }
-                DynSlot::MaskIn(l) => {
-                    let (mask_in, m_out) = self.cache.layers[l].build_learnable_fwd(
-                        &ds.graph, batch, &mut self.scratch,
+                DynSlot::Learnable { l, mask_in, m_out } => {
+                    let (tm, to) = tensor::mut2(&mut self.inputs, mask_in, m_out);
+                    self.cache.layers[l].build_learnable_fwd_into(
+                        &ds.graph,
+                        batch,
+                        &mut self.scratch,
+                        &mut tm.f,
+                        &mut to.f,
                     );
-                    stash = Some((l, m_out));
-                    mask_in
                 }
-                DynSlot::MOut(l) => {
-                    let (pl, m_out) = stash.take().unwrap();
-                    assert_eq!(pl, l);
-                    m_out
-                }
-                DynSlot::CntOut(l) => self.cache.layers[l].build_cnt_fwd(batch, &mut self.scratch),
-            };
-            self.inputs[idx] = t;
+                DynSlot::CntOut { l, idx } => self.cache.layers[l].build_cnt_fwd_into(
+                    batch,
+                    &mut self.scratch,
+                    &mut self.inputs[idx].f,
+                ),
+            }
         }
-        let out = rt.execute(&art, &self.inputs)?;
-        Ok(out[0].f.clone())
+        rt.execute_into(&art, &self.inputs, &mut self.outputs)?;
+        Ok(&self.outputs[0].f)
     }
 }

@@ -1,0 +1,64 @@
+//! Counting global allocator for the `alloc-count` bench feature.
+//!
+//! `benches/hot_paths.rs` installs [`CountingAlloc`] as the global
+//! allocator when built with `--features alloc-count` and reports the heap
+//! bytes requested by one steady-state train / serve step
+//! (`train_step_alloc_bytes` / `serve_alloc_bytes` in
+//! `BENCH_hot_paths.json`).  Those keys are what arms `bench_guard` against
+//! regressions of the plan-compiled executor's zero-allocation contract:
+//! the step arena owns every intermediate buffer, so a hot-path `Vec`
+//! sneaking back in shows up as a byte-count jump, not a vague slowdown.
+//!
+//! Only *requests* are counted (alloc / alloc_zeroed / the growth half of
+//! realloc); frees are not subtracted, so the counter is monotone and a
+//! delta across a closure is exactly "bytes asked from the allocator while
+//! it ran".  Counting is a pair of relaxed atomic adds — cheap enough to
+//! leave on for a whole bench run.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Total bytes requested since process start (monotone).
+pub static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Total allocation calls since process start (monotone).
+pub static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Monotone byte counter snapshot.
+pub fn bytes_now() -> u64 {
+    ALLOC_BYTES.load(Ordering::Relaxed)
+}
+
+/// Monotone call-count snapshot.
+pub fn calls_now() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// A [`System`]-backed allocator that counts every allocation request.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if new_size > layout.size() {
+            ALLOC_BYTES.fetch_add((new_size - layout.size()) as u64, Ordering::Relaxed);
+            ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}

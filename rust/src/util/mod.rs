@@ -2,6 +2,7 @@
 //! property-test driver (serde/rand/criterion/proptest are unavailable in
 //! this image — DESIGN.md §7).
 
+pub mod alloc;
 pub mod bench;
 pub mod json;
 pub mod par;

@@ -46,6 +46,26 @@ where
     });
 }
 
+/// Run two closures concurrently — `fa` on a scoped worker thread, `fb` on
+/// the calling thread — and return both results.  This is the
+/// double-buffering primitive behind pipelined batch assembly: the trainer
+/// runs the compiled step (`fb`) while the worker samples + gathers the
+/// next batch (`fa`).  Determinism is the caller's contract: `fa` must not
+/// share mutable state with `fb` (the borrow checker enforces it), so the
+/// overlapped schedule computes exactly what the serial one would.
+pub fn join2<A, B, FA, FB>(fa: FA, fb: FB) -> (A, B)
+where
+    A: Send,
+    FA: FnOnce() -> A + Send,
+    FB: FnOnce() -> B,
+{
+    std::thread::scope(|s| {
+        let ha = s.spawn(fa);
+        let b = fb();
+        (ha.join().expect("par: prep worker panicked"), b)
+    })
+}
+
 /// Map contiguous chunks of `data` to partial results, in parallel, and
 /// return them **in chunk order** — callers merge sequentially, which keeps
 /// floating-point reductions deterministic for a fixed thread count.
@@ -113,6 +133,25 @@ mod tests {
             total += s;
         }
         assert_eq!(total, 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn join2_runs_both_and_orders_results() {
+        let mut left = 0u64;
+        let mut right = 0u64;
+        let (a, b) = join2(
+            || {
+                (0..1000u64).sum::<u64>()
+            },
+            || {
+                right = 7;
+                "main"
+            },
+        );
+        left += a;
+        assert_eq!(left, 999 * 1000 / 2);
+        assert_eq!(right, 7);
+        assert_eq!(b, "main");
     }
 
     #[test]

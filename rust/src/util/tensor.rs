@@ -107,9 +107,56 @@ impl Tensor {
     }
 }
 
+/// Disjoint mutable borrows of two tensors of a slice (`i < j`).  The
+/// in-place assembly paths fill sketch pairs (`c_in`/`c_out`,
+/// `mask_in`/`m_out`) with one builder pass, so they need simultaneous
+/// `&mut` access to two slots of a session's input vector.
+pub fn mut2(ts: &mut [Tensor], i: usize, j: usize) -> (&mut Tensor, &mut Tensor) {
+    assert!(i < j && j < ts.len(), "mut2: bad indices {i}, {j} (len {})", ts.len());
+    let (left, right) = ts.split_at_mut(j);
+    (&mut left[i], &mut right[0])
+}
+
+/// Disjoint mutable borrows of three tensors of a slice (`i < j < k`):
+/// the fixed-convolution sketch triple (`c_in`/`c_out`/`ct_out`).
+pub fn mut3(
+    ts: &mut [Tensor],
+    i: usize,
+    j: usize,
+    k: usize,
+) -> (&mut Tensor, &mut Tensor, &mut Tensor) {
+    assert!(
+        i < j && j < k && k < ts.len(),
+        "mut3: bad indices {i}, {j}, {k} (len {})",
+        ts.len()
+    );
+    let (left, right) = ts.split_at_mut(j);
+    let (mid, tail) = right.split_at_mut(k - j);
+    (&mut left[i], &mut mid[0], &mut tail[0])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn disjoint_muts_hit_the_right_slots() {
+        let mut ts: Vec<Tensor> =
+            (0..5).map(|i| Tensor::from_f32(&[1], vec![i as f32])).collect();
+        {
+            let (a, b) = mut2(&mut ts, 1, 4);
+            a.f[0] = 10.0;
+            b.f[0] = 40.0;
+        }
+        {
+            let (a, b, c) = mut3(&mut ts, 0, 2, 3);
+            a.f[0] = -1.0;
+            b.f[0] = -2.0;
+            c.f[0] = -3.0;
+        }
+        let got: Vec<f32> = ts.iter().map(|t| t.f[0]).collect();
+        assert_eq!(got, vec![-1.0, 10.0, -2.0, -3.0, 40.0]);
+    }
 
     #[test]
     fn construct_and_measure() {

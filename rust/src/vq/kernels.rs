@@ -17,24 +17,42 @@ use crate::vq::EPS;
 /// small enough to balance uneven tails).
 pub const ROW_BLOCK: usize = 64;
 
-/// `1 / sqrt(var + EPS)` per dim — the whitening scale, computed once.
-pub fn inv_std(var: &[f32]) -> Vec<f32> {
-    var.iter().map(|&v| 1.0 / (v + EPS).sqrt()).collect()
+/// `1 / sqrt(var + EPS)` per dim — the whitening scale, computed once —
+/// into a reused buffer.
+pub fn inv_std_into(var: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(var.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(var) {
+        *o = 1.0 / (v + EPS).sqrt();
+    }
 }
 
-/// Whiten `(b, fp)` row-major vectors: `w = (v − mean) · inv`.
-pub fn whiten(v: &[f32], fp: usize, mean: &[f32], inv: &[f32]) -> Vec<f32> {
+/// Allocating wrapper of [`inv_std_into`].
+pub fn inv_std(var: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; var.len()];
+    inv_std_into(var, &mut out);
+    out
+}
+
+/// Whiten `(b, fp)` row-major vectors: `w = (v − mean) · inv`, into a
+/// reused buffer (every element overwritten).
+pub fn whiten_into(v: &[f32], fp: usize, mean: &[f32], inv: &[f32], out: &mut [f32]) {
     debug_assert_eq!(v.len() % fp.max(1), 0);
     debug_assert_eq!(mean.len(), fp);
     debug_assert_eq!(inv.len(), fp);
-    let mut out = vec![0.0f32; v.len()];
-    par::par_chunks_mut(&mut out, ROW_BLOCK * fp, |ci, chunk| {
+    debug_assert_eq!(v.len(), out.len());
+    par::par_chunks_mut(out, ROW_BLOCK * fp, |ci, chunk| {
         let base = ci * ROW_BLOCK * fp;
         for (j, o) in chunk.iter_mut().enumerate() {
             let d = (base + j) % fp;
             *o = (v[base + j] - mean[d]) * inv[d];
         }
     });
+}
+
+/// Allocating wrapper of [`whiten_into`].
+pub fn whiten(v: &[f32], fp: usize, mean: &[f32], inv: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; v.len()];
+    whiten_into(v, fp, mean, inv, &mut out);
     out
 }
 

@@ -151,40 +151,66 @@ impl LayerVq {
         self.assign[branch * self.n + node] as usize
     }
 
-    /// Artifact input tensors: raw codewords cw, whitened cww, mean, var.
+    /// Artifact input buffers: raw codewords cw, whitened cww, mean, var.
+    /// The `_into` forms fill a session's persistent input slot in place
+    /// (the per-step assembly path); the `_tensor` wrappers allocate.
+    pub fn cw_into(&self, out: &mut [f32]) {
+        let (k, fp) = (self.k, self.plan.fp);
+        debug_assert_eq!(out.len(), self.plan.n_br * k * fp);
+        for (j, br) in self.branches.iter().enumerate() {
+            br.raw_codewords_into(&mut out[j * k * fp..(j + 1) * k * fp]);
+        }
+    }
+
     pub fn cw_tensor(&self) -> Tensor {
         let (nb, k, fp) = (self.plan.n_br, self.k, self.plan.fp);
         let mut data = vec![0.0f32; nb * k * fp];
-        for (j, br) in self.branches.iter().enumerate() {
-            br.raw_codewords_into(&mut data[j * k * fp..(j + 1) * k * fp]);
-        }
+        self.cw_into(&mut data);
         Tensor::from_f32(&[nb, k, fp], data)
+    }
+
+    pub fn cww_into(&self, out: &mut [f32]) {
+        let (k, fp) = (self.k, self.plan.fp);
+        debug_assert_eq!(out.len(), self.plan.n_br * k * fp);
+        for (j, br) in self.branches.iter().enumerate() {
+            out[j * k * fp..(j + 1) * k * fp].copy_from_slice(&br.cww);
+        }
     }
 
     pub fn cww_tensor(&self) -> Tensor {
         let (nb, k, fp) = (self.plan.n_br, self.k, self.plan.fp);
-        let mut data = Vec::with_capacity(nb * k * fp);
-        for br in &self.branches {
-            data.extend_from_slice(&br.cww);
-        }
+        let mut data = vec![0.0f32; nb * k * fp];
+        self.cww_into(&mut data);
         Tensor::from_f32(&[nb, k, fp], data)
+    }
+
+    pub fn mean_into(&self, out: &mut [f32]) {
+        let fp = self.plan.fp;
+        debug_assert_eq!(out.len(), self.plan.n_br * fp);
+        for (j, br) in self.branches.iter().enumerate() {
+            out[j * fp..(j + 1) * fp].copy_from_slice(&br.mean);
+        }
     }
 
     pub fn mean_tensor(&self) -> Tensor {
         let (nb, fp) = (self.plan.n_br, self.plan.fp);
-        let mut data = Vec::with_capacity(nb * fp);
-        for br in &self.branches {
-            data.extend_from_slice(&br.mean);
-        }
+        let mut data = vec![0.0f32; nb * fp];
+        self.mean_into(&mut data);
         Tensor::from_f32(&[nb, fp], data)
+    }
+
+    pub fn var_into(&self, out: &mut [f32]) {
+        let fp = self.plan.fp;
+        debug_assert_eq!(out.len(), self.plan.n_br * fp);
+        for (j, br) in self.branches.iter().enumerate() {
+            out[j * fp..(j + 1) * fp].copy_from_slice(&br.var);
+        }
     }
 
     pub fn var_tensor(&self) -> Tensor {
         let (nb, fp) = (self.plan.n_br, self.plan.fp);
-        let mut data = Vec::with_capacity(nb * fp);
-        for br in &self.branches {
-            data.extend_from_slice(&br.var);
-        }
+        let mut data = vec![0.0f32; nb * fp];
+        self.var_into(&mut data);
         Tensor::from_f32(&[nb, fp], data)
     }
 

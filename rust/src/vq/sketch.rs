@@ -45,16 +45,23 @@ impl SketchScratch {
     }
 }
 
-/// Fixed-convolution sketches for one layer (GCN / SAGE mean aggregator).
-pub fn build_fixed(graph: &Graph, conv: Conv, batch: &[u32], layer: &LayerVq,
-                   scratch: &mut SketchScratch)
-                   -> (Tensor, Tensor, Tensor) {
+/// Fixed-convolution sketches for one layer (GCN / SAGE mean aggregator),
+/// written into caller-owned buffers — a trainer session's persistent
+/// input slots are rebuilt in place every batch, so the per-step assembly
+/// allocates nothing here.
+#[allow(clippy::too_many_arguments)]
+pub fn build_fixed_into(graph: &Graph, conv: Conv, batch: &[u32], layer: &LayerVq,
+                        scratch: &mut SketchScratch,
+                        c_in: &mut [f32], c_out: &mut [f32], ct_out: &mut [f32]) {
     let b = batch.len();
     let (nb, k) = (layer.plan.n_br, layer.k);
     let n = layer.n;
-    let mut c_in = vec![0.0f32; b * b];
-    let mut c_out = vec![0.0f32; nb * b * k];
-    let mut ct_out = vec![0.0f32; nb * b * k];
+    debug_assert_eq!(c_in.len(), b * b);
+    debug_assert_eq!(c_out.len(), nb * b * k);
+    debug_assert_eq!(ct_out.len(), nb * b * k);
+    c_in.fill(0.0);
+    c_out.fill(0.0);
+    ct_out.fill(0.0);
     scratch.mark(batch);
     for (i, &gi) in batch.iter().enumerate() {
         let gi = gi as usize;
@@ -88,6 +95,18 @@ pub fn build_fixed(graph: &Graph, conv: Conv, batch: &[u32], layer: &LayerVq,
         }
     }
     scratch.unmark(batch);
+}
+
+/// Allocating wrapper of [`build_fixed_into`].
+pub fn build_fixed(graph: &Graph, conv: Conv, batch: &[u32], layer: &LayerVq,
+                   scratch: &mut SketchScratch)
+                   -> (Tensor, Tensor, Tensor) {
+    let b = batch.len();
+    let (nb, k) = (layer.plan.n_br, layer.k);
+    let mut c_in = vec![0.0f32; b * b];
+    let mut c_out = vec![0.0f32; nb * b * k];
+    let mut ct_out = vec![0.0f32; nb * b * k];
+    build_fixed_into(graph, conv, batch, layer, scratch, &mut c_in, &mut c_out, &mut ct_out);
     (
         Tensor::from_f32(&[b, b], c_in),
         Tensor::from_f32(&[nb, b, k], c_out),
@@ -95,19 +114,23 @@ pub fn build_fixed(graph: &Graph, conv: Conv, batch: &[u32], layer: &LayerVq,
     )
 }
 
-/// Learnable-convolution count sketches for one layer (GAT / Transformer):
-/// mask_in[i,j] = 𝔠 over the batch block (A+I), M_out[i,v] = #out-of-batch
-/// in-neighbors of i in cluster v, M_outᵀ[i,v] = same over out-arcs.
-pub fn build_learnable(graph: &Graph, batch: &[u32], layer: &LayerVq,
-                       scratch: &mut SketchScratch)
-                       -> (Tensor, Tensor, Tensor) {
+/// Learnable-convolution count sketches for one layer (GAT / Transformer),
+/// written into caller-owned buffers: mask_in[i,j] = 𝔠 over the batch
+/// block (A+I), M_out[i,v] = #out-of-batch in-neighbors of i in cluster v,
+/// M_outᵀ[i,v] = same over out-arcs.
+pub fn build_learnable_into(graph: &Graph, batch: &[u32], layer: &LayerVq,
+                            scratch: &mut SketchScratch,
+                            mask_in: &mut [f32], m_out: &mut [f32], m_out_t: &mut [f32]) {
     let b = batch.len();
     let k = layer.k;
     let n = layer.n;
     debug_assert_eq!(layer.plan.n_br, 1, "learnable convs use a single branch");
-    let mut mask_in = vec![0.0f32; b * b];
-    let mut m_out = vec![0.0f32; b * k];
-    let mut m_out_t = vec![0.0f32; b * k];
+    debug_assert_eq!(mask_in.len(), b * b);
+    debug_assert_eq!(m_out.len(), b * k);
+    debug_assert_eq!(m_out_t.len(), b * k);
+    mask_in.fill(0.0);
+    m_out.fill(0.0);
+    m_out_t.fill(0.0);
     scratch.mark(batch);
     for (i, &gi) in batch.iter().enumerate() {
         let gi = gi as usize;
@@ -130,6 +153,18 @@ pub fn build_learnable(graph: &Graph, batch: &[u32], layer: &LayerVq,
     }
     scratch.unmark(batch);
     let _ = n;
+}
+
+/// Allocating wrapper of [`build_learnable_into`].
+pub fn build_learnable(graph: &Graph, batch: &[u32], layer: &LayerVq,
+                       scratch: &mut SketchScratch)
+                       -> (Tensor, Tensor, Tensor) {
+    let b = batch.len();
+    let k = layer.k;
+    let mut mask_in = vec![0.0f32; b * b];
+    let mut m_out = vec![0.0f32; b * k];
+    let mut m_out_t = vec![0.0f32; b * k];
+    build_learnable_into(graph, batch, layer, scratch, &mut mask_in, &mut m_out, &mut m_out_t);
     (
         Tensor::from_f32(&[b, b], mask_in),
         Tensor::from_f32(&[b, k], m_out),
@@ -137,13 +172,13 @@ pub fn build_learnable(graph: &Graph, batch: &[u32], layer: &LayerVq,
     )
 }
 
-/// Global out-of-batch cluster histogram (Transformer global attention):
-/// cnt_out[v] = |{u ∉ batch : R[u] = v}|.
-pub fn build_cnt_out(batch: &[u32], layer: &LayerVq,
-                     scratch: &mut SketchScratch) -> Tensor {
-    let k = layer.k;
+/// Global out-of-batch cluster histogram (Transformer global attention),
+/// written into a caller-owned buffer: cnt_out[v] = |{u ∉ batch : R[u] = v}|.
+pub fn build_cnt_out_into(batch: &[u32], layer: &LayerVq,
+                          scratch: &mut SketchScratch, cnt: &mut [f32]) {
     let n = layer.n;
-    let mut cnt = vec![0.0f32; k];
+    debug_assert_eq!(cnt.len(), layer.k);
+    cnt.fill(0.0);
     scratch.mark(batch);
     for u in 0..n {
         if scratch.pos[u] < 0 {
@@ -151,7 +186,14 @@ pub fn build_cnt_out(batch: &[u32], layer: &LayerVq,
         }
     }
     scratch.unmark(batch);
-    Tensor::from_f32(&[k], cnt)
+}
+
+/// Allocating wrapper of [`build_cnt_out_into`].
+pub fn build_cnt_out(batch: &[u32], layer: &LayerVq,
+                     scratch: &mut SketchScratch) -> Tensor {
+    let mut cnt = vec![0.0f32; layer.k];
+    build_cnt_out_into(batch, layer, scratch, &mut cnt);
+    Tensor::from_f32(&[layer.k], cnt)
 }
 
 #[cfg(test)]

@@ -1,0 +1,224 @@
+//! Plan-compiled executor invariants.
+//!
+//! The arena refactor's whole contract is "same bits, no allocation": a
+//! cached executor reusing one `StepArena` across steps must behave as a
+//! pure function of its inputs, `execute_into` must compute the same
+//! outputs into reused buffers as `execute` does into fresh ones, and the
+//! trainers' pipelined batch assembly must walk the exact trajectory of
+//! the serial schedule.  Golden values against the executable python spec
+//! are pinned separately in `tests/native_backend.rs` / `tests/serve.rs`
+//! (unchanged by the refactor — that is the point); this suite pins the
+//! reuse semantics.
+
+mod common;
+
+use std::rc::Rc;
+
+use common::{builtin, golden_inputs};
+use vq_gnn::coordinator::edge_trainer::{Baseline, EdgeTrainer};
+use vq_gnn::coordinator::vq_trainer::VqTrainer;
+use vq_gnn::datasets::Dataset;
+use vq_gnn::runtime::Runtime;
+use vq_gnn::sampler::NodeStrategy;
+use vq_gnn::util::rng::Rng;
+use vq_gnn::util::tensor::Tensor;
+
+/// Bit-exact tensor-list equality (f32 compared by bit pattern).
+fn assert_outputs_eq(a: &[Tensor], b: &[Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: output count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.shape, y.shape, "{what}: output {i} shape");
+        assert_eq!(x.i, y.i, "{what}: output {i} i32 payload");
+        let xb: Vec<u32> = x.f.iter().map(|v| v.to_bits()).collect();
+        let yb: Vec<u32> = y.f.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xb, yb, "{what}: output {i} f32 bits");
+    }
+}
+
+/// Every artifact family × mode the native backend compiles, on the tiny
+/// hermetic config.
+fn all_artifacts() -> Vec<&'static str> {
+    vec![
+        "vq_train_tiny_sim_gcn",
+        "vq_train_tiny_sim_sage",
+        "vq_train_tiny_sim_gat",
+        "vq_train_tiny_sim_txf",
+        "vq_infer_tiny_sim_gcn",
+        "vq_infer_tiny_sim_sage",
+        "vq_infer_tiny_sim_gat",
+        "vq_infer_tiny_sim_txf",
+        "vq_serve_tiny_sim_gcn",
+        "vq_serve_tiny_sim_sage",
+        "vq_serve_tiny_sim_gat",
+        "vq_serve_tiny_sim_txf",
+        "edge_train_tiny_sim_gcn_full",
+        "edge_train_tiny_sim_sage_full",
+        "edge_train_tiny_sim_gat_full",
+        "edge_infer_tiny_sim_gcn_full",
+        "vq_assign_tiny_sim",
+    ]
+}
+
+#[test]
+fn cached_arena_is_a_pure_function_of_inputs() {
+    // Two different input sets A and B through ONE cached executor (reused
+    // arena), interleaved A, B, A — every run must be bit-identical to a
+    // fresh executor fed the same inputs.  This is the strongest form of
+    // "the arena carries no semantic state across steps": stale buffer
+    // contents from run A must never leak into run B or back.
+    let man = builtin();
+    for name in all_artifacts() {
+        let mut rng_a = Rng::new(1234);
+        let mut rng_b = Rng::new(987654321);
+        let in_a = golden_inputs(&man, name, &mut rng_a);
+        let in_b = golden_inputs(&man, name, &mut rng_b);
+
+        let mut shared = Runtime::native();
+        let art = shared.load(&man, name).unwrap();
+        let a1 = shared.execute(&art, &in_a).unwrap();
+        let b1 = shared.execute(&art, &in_b).unwrap();
+        let a2 = shared.execute(&art, &in_a).unwrap();
+
+        let mut fresh_a = Runtime::native();
+        let fa = fresh_a.load(&man, name).unwrap();
+        let want_a = fresh_a.execute(&fa, &in_a).unwrap();
+        let mut fresh_b = Runtime::native();
+        let fb = fresh_b.load(&man, name).unwrap();
+        let want_b = fresh_b.execute(&fb, &in_b).unwrap();
+
+        assert_outputs_eq(&a1, &want_a, &format!("{name} (first run vs fresh)"));
+        assert_outputs_eq(&b1, &want_b, &format!("{name} (second run vs fresh)"));
+        assert_outputs_eq(&a2, &want_a, &format!("{name} (reused arena vs fresh)"));
+    }
+}
+
+#[test]
+fn execute_into_matches_execute_with_reused_buffers() {
+    // The session path: one `outputs` vector rewritten in place across
+    // consecutive executions must hold exactly what fresh `execute` calls
+    // return — including after switching between two different input sets,
+    // so every output element is proven overwritten (not stale).
+    let man = builtin();
+    for name in all_artifacts() {
+        let mut rng_a = Rng::new(42);
+        let mut rng_b = Rng::new(777);
+        let in_a = golden_inputs(&man, name, &mut rng_a);
+        let in_b = golden_inputs(&man, name, &mut rng_b);
+        let mut rt = Runtime::native();
+        let art = rt.load(&man, name).unwrap();
+        let want_a = rt.execute(&art, &in_a).unwrap();
+        let want_b = rt.execute(&art, &in_b).unwrap();
+        let mut outputs = Vec::new();
+        rt.execute_into(&art, &in_a, &mut outputs).unwrap();
+        assert_outputs_eq(&outputs, &want_a, &format!("{name} (into, run 1)"));
+        rt.execute_into(&art, &in_b, &mut outputs).unwrap();
+        assert_outputs_eq(&outputs, &want_b, &format!("{name} (into, run 2)"));
+        rt.execute_into(&art, &in_a, &mut outputs).unwrap();
+        assert_outputs_eq(&outputs, &want_a, &format!("{name} (into, run 3)"));
+    }
+}
+
+/// Train `steps` steps and return (losses, params, per-layer assignment
+/// tables, per-layer whitened codebooks).
+#[allow(clippy::type_complexity)]
+fn vq_trajectory(
+    model: &str,
+    pipelined: bool,
+    steps: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<u32>>, Vec<Vec<f32>>) {
+    let man = builtin();
+    let mut rt = Runtime::native();
+    let ds = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
+    let mut tr =
+        VqTrainer::new(&mut rt, &man, ds, model, "", NodeStrategy::Nodes, 7).unwrap();
+    tr.set_pipelined(pipelined);
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        losses.push(tr.train_step(&mut rt).unwrap());
+    }
+    let params = tr.params.iter().map(|p| p.f.clone()).collect();
+    let assign = tr.vq.layers.iter().map(|l| l.assign.clone()).collect();
+    let cww = tr
+        .vq
+        .layers
+        .iter()
+        .map(|l| l.branches.iter().flat_map(|b| b.cww.iter().copied()).collect())
+        .collect();
+    (losses, params, assign, cww)
+}
+
+#[test]
+fn pipelined_vq_assembly_matches_serial_trajectory() {
+    // Double-buffered prep must be invisible: same seeds → bit-identical
+    // losses, parameters, assignment tables and codebooks.  One fixed and
+    // one learnable backbone cover both sketch families (the txf leg also
+    // exercises cnt_out assembly and the winsorized VQ update in place).
+    for model in ["gcn", "txf"] {
+        let serial = vq_trajectory(model, false, 6);
+        let piped = vq_trajectory(model, true, 6);
+        let sl: Vec<u32> = serial.0.iter().map(|x| x.to_bits()).collect();
+        let pl: Vec<u32> = piped.0.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(sl, pl, "{model}: per-step losses diverged");
+        assert_eq!(serial.2, piped.2, "{model}: assignment tables diverged");
+        for (i, (s, p)) in serial.1.iter().zip(&piped.1).enumerate() {
+            let sb: Vec<u32> = s.iter().map(|x| x.to_bits()).collect();
+            let pb: Vec<u32> = p.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(sb, pb, "{model}: param {i} diverged");
+        }
+        for (l, (s, p)) in serial.3.iter().zip(&piped.3).enumerate() {
+            let sb: Vec<u32> = s.iter().map(|x: &f32| x.to_bits()).collect();
+            let pb: Vec<u32> = p.iter().map(|x: &f32| x.to_bits()).collect();
+            assert_eq!(sb, pb, "{model}: layer {l} codebook diverged");
+        }
+    }
+}
+
+fn edge_trajectory(kind: Baseline, dataset: &str, pipelined: bool, steps: usize) -> Vec<u32> {
+    let man = builtin();
+    let mut rt = Runtime::native();
+    let ds = Rc::new(Dataset::generate(&man.datasets[dataset], 42));
+    let mut tr = EdgeTrainer::new(&mut rt, &man, ds, "gcn", kind, 11).unwrap();
+    tr.set_pipelined(pipelined);
+    let mut bits = Vec::new();
+    for _ in 0..steps {
+        bits.push(tr.train_step(&mut rt).unwrap().to_bits());
+    }
+    for p in &tr.params {
+        bits.extend(p.f.iter().map(|x| x.to_bits()));
+    }
+    bits
+}
+
+#[test]
+fn pipelined_edge_assembly_matches_serial_trajectory() {
+    // FullGraph exercises the overlapped prep thread itself; ClusterGcn
+    // additionally couples prefetch to the trainer RNG stream (shuffled
+    // cluster groups), pinning the draw-order argument in the module docs.
+    assert_eq!(
+        edge_trajectory(Baseline::FullGraph, "tiny_sim", false, 3),
+        edge_trajectory(Baseline::FullGraph, "tiny_sim", true, 3),
+        "full-graph edge trajectory diverged under pipelining"
+    );
+    assert_eq!(
+        edge_trajectory(Baseline::ClusterGcn, "arxiv_sim", false, 2),
+        edge_trajectory(Baseline::ClusterGcn, "arxiv_sim", true, 2),
+        "cluster-gcn edge trajectory diverged under pipelining"
+    );
+}
+
+#[test]
+fn trainer_steps_are_reproducible_through_reused_sessions() {
+    // Two identically-seeded trainers (both pipelined, the default) must
+    // walk the same trajectory — the session/arena reuse adds no hidden
+    // state to training.  Covers all four backbones cheaply.
+    for model in ["gcn", "sage", "gat", "txf"] {
+        let a = vq_trajectory(model, true, 3);
+        let b = vq_trajectory(model, true, 3);
+        assert_eq!(
+            a.0.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            b.0.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+            "{model}: losses not reproducible"
+        );
+        assert_eq!(a.2, b.2, "{model}: assignment tables not reproducible");
+    }
+}
