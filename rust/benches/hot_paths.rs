@@ -139,8 +139,10 @@ fn write_report(report: BTreeMap<String, Json>) {
 }
 
 /// The serving read path: train briefly, freeze, then push a query burst
-/// through the micro-batching engine.  Emits the acceptance keys
-/// (`serve_qps`, `serve_p50_ms`, `serve_p99_ms`) plus a detail object.
+/// through the micro-batching engine — single-threaded for the acceptance
+/// keys (`serve_qps`, `serve_p50_ms`, `serve_p99_ms` + a detail object),
+/// then the same burst across 2- and 4-worker session pools
+/// (`serve_concurrent_qps_t{2,4}`).
 fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
     use vq_gnn::serve::{LatencyReport, MicroBatcher, Request, ServingModel};
 
@@ -174,25 +176,62 @@ fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
 
     // query burst through the engine: 10k requests (2k in smoke mode)
     let n_req = if smoke { 2_000 } else { 10_000 };
-    let mut eng = MicroBatcher::new();
-    let t0 = std::time::Instant::now();
-    for _ in 0..n_req {
-        eng.submit(Request::Node(rq.below(tiny.n()) as u32));
+    let burst_seed = rq.next_u64();
+    let wall1 = {
+        let mut rb = Rng::new(burst_seed);
+        let mut eng = MicroBatcher::new();
+        let t0 = std::time::Instant::now();
+        for _ in 0..n_req {
+            eng.submit(Request::Node(rb.below(tiny.n()) as u32));
+        }
+        let served = eng.drain(&rt, &mut sm).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let lat: Vec<f64> = served.iter().map(|s| s.latency_s).collect();
+        let lr = LatencyReport::from_latencies(&lat, wall);
+        report_serve(report, &lr, eng.stats.batches_run, &sm);
+        wall
+    };
+
+    // the same burst fanned across 2- and 4-worker session pools: answers
+    // are bit-identical (tests/serve_concurrent.rs); these keys track the
+    // throughput scaling of the shared-plan pool
+    for threads in [2usize, 4] {
+        sm.set_threads(threads);
+        let mut rb = Rng::new(burst_seed);
+        let mut eng = MicroBatcher::new();
+        let t0 = std::time::Instant::now();
+        for _ in 0..n_req {
+            eng.submit(Request::Node(rb.below(tiny.n()) as u32));
+        }
+        let served = eng.drain(&rt, &mut sm).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let qps = served.len() as f64 / wall.max(1e-12);
+        println!(
+            "serve/engine tiny gcn x{threads}: {:.0} qps ({:.2}x vs single)",
+            qps,
+            wall1 / wall.max(1e-12)
+        );
+        report.insert(format!("serve_concurrent_qps_t{threads}"), num(qps));
     }
-    let served = eng.drain(&mut rt, &mut sm).unwrap();
-    let wall = t0.elapsed().as_secs_f64();
-    let lat: Vec<f64> = served.iter().map(|s| s.latency_s).collect();
-    let lr = LatencyReport::from_latencies(&lat, wall);
+}
+
+/// Emit the single-threaded serve acceptance keys + detail object.
+fn report_serve(
+    report: &mut BTreeMap<String, Json>,
+    lr: &vq_gnn::serve::LatencyReport,
+    batches: u64,
+    sm: &vq_gnn::serve::ServingModel,
+) {
     println!("serve/engine tiny gcn: {lr}");
     report.insert("serve_qps".into(), num(lr.qps));
     report.insert("serve_p50_ms".into(), num(lr.p50_ms));
     report.insert("serve_p99_ms".into(), num(lr.p99_ms));
     let mut s = BTreeMap::new();
-    s.insert("requests".into(), num(n_req as f64));
-    s.insert("batch_b".into(), num(b as f64));
-    s.insert("batches".into(), num(eng.batches_run as f64));
+    s.insert("requests".into(), num(lr.count as f64));
+    s.insert("batch_b".into(), num(sm.batch_size() as f64));
+    s.insert("batches".into(), num(batches as f64));
     s.insert("mean_ms".into(), num(lr.mean_ms));
-    s.insert("cache_bytes".into(), num(sm.cache.memory_bytes() as f64));
+    s.insert("cache_bytes".into(), num(sm.cache().memory_bytes() as f64));
     report.insert("serve".into(), Json::Obj(s));
 }
 

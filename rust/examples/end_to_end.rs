@@ -95,9 +95,9 @@ fn main() -> anyhow::Result<()> {
     println!("\nVQ-GNN full-graph inference ({} nodes): {vq_infer:.2}s", ds.n());
     println!(
         "runtime totals: {} executions, {:.1} MB shipped in, {:.1} MB out",
-        rt.executions,
-        rt.bytes_in as f64 / 1e6,
-        rt.bytes_out as f64 / 1e6
+        rt.executions(),
+        rt.bytes_in() as f64 / 1e6,
+        rt.bytes_out() as f64 / 1e6
     );
     Ok(())
 }

@@ -6,8 +6,9 @@
 //!
 //! Rules (keys are matched recursively, joined with '.'):
 //! - `*_ms` (timings, lower is better): warn when current > 1.5× baseline;
-//! - `*_qps` / `*_per_sec` (throughput, higher is better): warn when
-//!   current < baseline / 1.5;
+//! - `*_qps` / `*_per_sec` / `*_qps_t<N>` (throughput, incl. the
+//!   per-pool-width serving keys, higher is better): warn when current <
+//!   baseline / 1.5;
 //! - `*_alloc_bytes` (steady-state step allocation, lower is better —
 //!   requires the `alloc-count` bench feature): warn when current >
 //!   1.5× baseline, and when an allocation-free baseline (0 bytes) grows
@@ -62,9 +63,16 @@ fn lower_is_better(key: &str) -> bool {
     key.ends_with("_ms") || key.ends_with("_alloc_bytes")
 }
 
-/// Higher-is-better keys: throughput.
+/// Higher-is-better keys: throughput — `*_qps`, `*_per_sec`, and the
+/// per-pool-width variants `*_qps_t<N>` (`serve_concurrent_qps_t4`).
 fn higher_is_better(key: &str) -> bool {
-    key.ends_with("_qps") || key.ends_with("_per_sec")
+    if key.ends_with("_qps") || key.ends_with("_per_sec") {
+        return true;
+    }
+    match key.rsplit_once("_qps_t") {
+        Some((_, n)) => !n.is_empty() && n.bytes().all(|b| b.is_ascii_digit()),
+        None => false,
+    }
 }
 
 fn main() {

@@ -15,10 +15,20 @@ use crate::vq::VqModel;
 
 const MAGIC: u32 = 0x56_51_47_31; // "VQG1"
 
-/// Serving-artifact magic: a *frozen* model for the read path — parameters
-/// + raw codewords + assignment tables, without the training-only EMA
-/// state (cluster counts/sums, whitening stats, optimizer moments).
-const SERVE_MAGIC: u32 = 0x56_51_53_31; // "VQS1"
+/// Legacy serving-artifact magic: parameters + raw codewords + assignment
+/// tables only.  Still loadable ([`load_serving`] dispatches on the magic);
+/// new exports are "VQS2".
+const SERVE_MAGIC_V1: u32 = 0x56_51_53_31; // "VQS1"
+
+/// Serving-artifact magic, version 2: a *frozen* model for the read path —
+/// parameters, raw codewords, assignment tables, PLUS the per-branch
+/// whitening stats (mean/var — the inductive-admission FINDNEAREST runs in
+/// the same whitened space as training) and the admitted-node tables
+/// (features, neighbor lists, per-layer codeword assignments), so a cold
+/// node admitted in one process stays servable after save → load in
+/// another.  Still no training-only EMA state (cluster counts/sums,
+/// optimizer moments).
+const SERVE_MAGIC: u32 = 0x56_51_53_32; // "VQS2"
 
 struct Writer<W: Write> {
     w: W,
@@ -176,8 +186,9 @@ pub fn load(path: &Path, artifact: &str, params: &mut [Tensor], vq: &mut VqModel
 }
 
 /// One frozen layer of a serving artifact: the paper's compact global
-/// context — raw codewords `(n_br, k, fp)` plus the node→codeword table
-/// `(n_br, n)`.  Exactly what the forward-only `vq_serve` path consumes.
+/// context — raw codewords `(n_br, k, fp)`, the node→codeword table
+/// `(n_br, n)`, the per-branch whitening stats the admission FINDNEAREST
+/// whitens against, and the admitted-node assignment tail.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingLayer {
     pub k: usize,
@@ -188,22 +199,39 @@ pub struct ServingLayer {
     pub cw: Vec<f32>,
     /// Assignment table R, row-major (n_br, n).
     pub assign: Vec<u32>,
+    /// Whitening mean, row-major (n_br, fp).  VQS1 files load as zeros
+    /// (identity whitening — admission degrades to raw-space distances).
+    pub mean: Vec<f32>,
+    /// Whitening variance, row-major (n_br, fp).  VQS1 files load as ones.
+    pub var: Vec<f32>,
+    /// Admitted-node assignments, node-major (count, n_br).  Empty on VQS1.
+    pub admitted_assign: Vec<u32>,
 }
 
-/// Export a frozen model into a serving artifact.  `artifact` is the
-/// `vq_serve_*` artifact name the file is valid for (refused on mismatch
-/// at load, like the training checkpoint).
-pub fn save_serving(
-    path: &Path,
-    artifact: &str,
-    params: &[Tensor],
-    layers: &[ServingLayer],
-) -> Result<()> {
-    let f = std::fs::File::create(path).context("create serving artifact")?;
-    let mut w = Writer { w: std::io::BufWriter::new(f) };
-    w.u32(SERVE_MAGIC)?;
-    w.u32(artifact.len() as u32)?;
-    w.w.write_all(artifact.as_bytes())?;
+/// The model-level admitted-node block of a serving artifact: padded
+/// feature rows + CSR neighbor lists of every inductively-admitted node
+/// (ids `n ..`).  Empty on models that never admitted anything and on
+/// VQS1 files.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ServingAdmitted {
+    /// Padded feature width (0 when no nodes are admitted).
+    pub f_pad: usize,
+    /// Row-major (count, f_pad) padded feature rows.
+    pub features: Vec<f32>,
+    /// CSR offsets into `nbr`, length count + 1 (first entry 0).
+    pub nbr_ptr: Vec<u32>,
+    /// Neighbor node ids (each `< n + own_index`: a node may only cite
+    /// already-known nodes).
+    pub nbr: Vec<u32>,
+}
+
+impl ServingAdmitted {
+    pub fn count(&self) -> usize {
+        self.nbr_ptr.len().saturating_sub(1)
+    }
+}
+
+fn write_params<W: Write>(w: &mut Writer<W>, params: &[Tensor]) -> Result<()> {
     w.u32(params.len() as u32)?;
     for p in params {
         w.u32(p.shape.len() as u32)?;
@@ -212,33 +240,10 @@ pub fn save_serving(
         }
         w.f32s(&p.f)?;
     }
-    w.u32(layers.len() as u32)?;
-    for l in layers {
-        w.u32(l.k as u32)?;
-        w.u32(l.n as u32)?;
-        w.u32(l.n_br as u32)?;
-        w.u32(l.fp as u32)?;
-        w.f32s(&l.cw)?;
-        w.u32s(&l.assign)?;
-    }
     Ok(())
 }
 
-/// Load a serving artifact; shape validation against the serve spec is the
-/// caller's job (`serve::ServingModel::load` checks against the manifest).
-pub fn load_serving(path: &Path, artifact: &str) -> Result<(Vec<Tensor>, Vec<ServingLayer>)> {
-    let f = std::fs::File::open(path).context("open serving artifact")?;
-    let mut r = Reader { r: std::io::BufReader::new(f) };
-    if r.u32()? != SERVE_MAGIC {
-        bail!("not a vq-gnn serving artifact");
-    }
-    let alen = r.u32()? as usize;
-    let mut aname = vec![0u8; alen];
-    r.r.read_exact(&mut aname)?;
-    let aname = String::from_utf8(aname)?;
-    if aname != artifact {
-        bail!("serving artifact is for '{aname}', expected '{artifact}'");
-    }
+fn read_params<R: Read>(r: &mut Reader<R>) -> Result<Vec<Tensor>> {
     let np = r.u32()? as usize;
     let mut params = Vec::with_capacity(np);
     for _ in 0..np {
@@ -253,6 +258,103 @@ pub fn load_serving(path: &Path, artifact: &str) -> Result<(Vec<Tensor>, Vec<Ser
         }
         params.push(Tensor::from_f32(&shape, data));
     }
+    Ok(params)
+}
+
+fn write_header<W: Write>(w: &mut Writer<W>, magic: u32, artifact: &str) -> Result<()> {
+    w.u32(magic)?;
+    w.u32(artifact.len() as u32)?;
+    w.w.write_all(artifact.as_bytes())?;
+    Ok(())
+}
+
+fn read_artifact_name<R: Read>(r: &mut Reader<R>, artifact: &str) -> Result<()> {
+    let alen = r.u32()? as usize;
+    let mut aname = vec![0u8; alen];
+    r.r.read_exact(&mut aname)?;
+    let aname = String::from_utf8(aname)?;
+    if aname != artifact {
+        bail!("serving artifact is for '{aname}', expected '{artifact}'");
+    }
+    Ok(())
+}
+
+/// Export a frozen model into a "VQS2" serving artifact.  `artifact` is
+/// the `vq_serve_*` artifact name the file is valid for (refused on
+/// mismatch at load, like the training checkpoint).
+pub fn save_serving(
+    path: &Path,
+    artifact: &str,
+    params: &[Tensor],
+    layers: &[ServingLayer],
+    admitted: &ServingAdmitted,
+) -> Result<()> {
+    let f = std::fs::File::create(path).context("create serving artifact")?;
+    let mut w = Writer { w: std::io::BufWriter::new(f) };
+    write_header(&mut w, SERVE_MAGIC, artifact)?;
+    write_params(&mut w, params)?;
+    w.u32(layers.len() as u32)?;
+    for l in layers {
+        w.u32(l.k as u32)?;
+        w.u32(l.n as u32)?;
+        w.u32(l.n_br as u32)?;
+        w.u32(l.fp as u32)?;
+        w.f32s(&l.cw)?;
+        w.u32s(&l.assign)?;
+        w.f32s(&l.mean)?;
+        w.f32s(&l.var)?;
+        w.u32s(&l.admitted_assign)?;
+    }
+    w.u32(admitted.f_pad as u32)?;
+    w.f32s(&admitted.features)?;
+    w.u32s(&admitted.nbr_ptr)?;
+    w.u32s(&admitted.nbr)?;
+    Ok(())
+}
+
+/// Export in the legacy "VQS1" layout (no whitening stats, no admitted
+/// nodes).  Kept as the pinned writer for the compatibility load path —
+/// `load_serving` must keep accepting files older processes produced.
+pub fn save_serving_v1(
+    path: &Path,
+    artifact: &str,
+    params: &[Tensor],
+    layers: &[ServingLayer],
+) -> Result<()> {
+    let f = std::fs::File::create(path).context("create serving artifact")?;
+    let mut w = Writer { w: std::io::BufWriter::new(f) };
+    write_header(&mut w, SERVE_MAGIC_V1, artifact)?;
+    write_params(&mut w, params)?;
+    w.u32(layers.len() as u32)?;
+    for l in layers {
+        w.u32(l.k as u32)?;
+        w.u32(l.n as u32)?;
+        w.u32(l.n_br as u32)?;
+        w.u32(l.fp as u32)?;
+        w.f32s(&l.cw)?;
+        w.u32s(&l.assign)?;
+    }
+    Ok(())
+}
+
+/// Load a serving artifact ("VQS2", or legacy "VQS1" — the missing stats
+/// load as identity whitening and an empty admitted block).  Shape
+/// validation against the serve spec is the caller's job
+/// (`serve::ServingModel::load` checks against the manifest).
+pub fn load_serving(
+    path: &Path,
+    artifact: &str,
+) -> Result<(Vec<Tensor>, Vec<ServingLayer>, ServingAdmitted)> {
+    let f = std::fs::File::open(path).context("open serving artifact")?;
+    let mut r = Reader { r: std::io::BufReader::new(f) };
+    let magic = r.u32()?;
+    let v2 = match magic {
+        SERVE_MAGIC => true,
+        SERVE_MAGIC_V1 => false,
+        _ => bail!("not a vq-gnn serving artifact"),
+    };
+    read_artifact_name(&mut r, artifact)?;
+    let params = read_params(&mut r)?;
     let nl = r.u32()? as usize;
     let mut layers = Vec::with_capacity(nl);
     for _ in 0..nl {
@@ -268,9 +370,69 @@ pub fn load_serving(path: &Path, artifact: &str) -> Result<(Vec<Tensor>, Vec<Ser
         if assign.iter().any(|&a| a as usize >= k) {
             bail!("serving assignment out of codebook range");
         }
-        layers.push(ServingLayer { k, n, n_br, fp, cw, assign });
+        let (mean, var, admitted_assign) = if v2 {
+            let mean = r.f32s()?;
+            let var = r.f32s()?;
+            let aa = r.u32s()?;
+            if mean.len() != n_br * fp || var.len() != n_br * fp {
+                bail!("serving whitening-stats payload mismatch");
+            }
+            if aa.len() % n_br.max(1) != 0 || aa.iter().any(|&a| a as usize >= k) {
+                bail!("serving admitted-assignment payload mismatch");
+            }
+            (mean, var, aa)
+        } else {
+            (vec![0.0; n_br * fp], vec![1.0; n_br * fp], Vec::new())
+        };
+        layers.push(ServingLayer { k, n, n_br, fp, cw, assign, mean, var, admitted_assign });
     }
-    Ok((params, layers))
+    let admitted = if v2 {
+        let f_pad = r.u32()? as usize;
+        let features = r.f32s()?;
+        let nbr_ptr = r.u32s()?;
+        let nbr = r.u32s()?;
+        let adm = ServingAdmitted { f_pad, features, nbr_ptr, nbr };
+        validate_admitted(&adm, &layers)?;
+        adm
+    } else {
+        ServingAdmitted { f_pad: 0, features: Vec::new(), nbr_ptr: vec![0], nbr: Vec::new() }
+    };
+    Ok((params, layers, admitted))
+}
+
+/// Cross-check the admitted block against the layer tables: counts agree
+/// everywhere, CSR offsets are well-formed, and every neighbor id refers
+/// to an already-known node.
+fn validate_admitted(adm: &ServingAdmitted, layers: &[ServingLayer]) -> Result<()> {
+    if adm.nbr_ptr.first() != Some(&0) {
+        bail!("serving admitted CSR must start at 0");
+    }
+    let count = adm.count();
+    if adm.features.len() != count * adm.f_pad {
+        bail!("serving admitted feature payload mismatch");
+    }
+    if adm.nbr_ptr.windows(2).any(|w| w[0] > w[1])
+        || adm.nbr_ptr.last().copied().unwrap_or(0) as usize != adm.nbr.len()
+    {
+        bail!("serving admitted CSR offsets malformed");
+    }
+    let n = layers.first().map(|l| l.n).unwrap_or(0);
+    for (i, w) in adm.nbr_ptr.windows(2).enumerate() {
+        let lim = (n + i) as u32; // node i may only cite earlier nodes
+        if adm.nbr[w[0] as usize..w[1] as usize].iter().any(|&u| u >= lim) {
+            bail!("serving admitted node {i} cites an unknown neighbor");
+        }
+    }
+    for l in layers {
+        if l.admitted_assign.len() != count * l.n_br {
+            bail!(
+                "serving admitted tables disagree: {} nodes vs {} per-layer assignments",
+                count,
+                l.admitted_assign.len() / l.n_br.max(1)
+            );
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -329,6 +491,20 @@ mod tests {
         assert!(load(Path::new("/nonexistent/x.ckpt"), "art_a", &mut p2, &mut vq2).is_err());
     }
 
+    fn mk_serving_layer(rng: &mut Rng, admitted: usize) -> ServingLayer {
+        ServingLayer {
+            k: 4,
+            n: 10,
+            n_br: 2,
+            fp: 3,
+            cw: (0..2 * 4 * 3).map(|_| rng.gauss_f32()).collect(),
+            assign: (0..2 * 10).map(|_| rng.below(4) as u32).collect(),
+            mean: (0..2 * 3).map(|_| 0.1 * rng.gauss_f32()).collect(),
+            var: (0..2 * 3).map(|_| 0.5 + rng.f32()).collect(),
+            admitted_assign: (0..admitted * 2).map(|_| rng.below(4) as u32).collect(),
+        }
+    }
+
     #[test]
     fn serving_roundtrip_and_validation() {
         let dir = std::env::temp_dir().join("vqgnn_ckpt_serve_test");
@@ -336,20 +512,20 @@ mod tests {
         let path = dir.join("s.bin");
         let mut rng = Rng::new(3);
         let params = vec![Tensor::from_f32(&[2, 3], (0..6).map(|_| rng.gauss_f32()).collect())];
-        let layers = vec![ServingLayer {
-            k: 4,
-            n: 10,
-            n_br: 2,
-            fp: 3,
-            cw: (0..2 * 4 * 3).map(|_| rng.gauss_f32()).collect(),
-            assign: (0..2 * 10).map(|_| rng.below(4) as u32).collect(),
-        }];
-        save_serving(&path, "vq_serve_tiny_sim_gcn", &params, &layers).unwrap();
-        let (p2, l2) = load_serving(&path, "vq_serve_tiny_sim_gcn").unwrap();
+        let layers = vec![mk_serving_layer(&mut rng, 2)];
+        let admitted = ServingAdmitted {
+            f_pad: 4,
+            features: (0..2 * 4).map(|_| rng.gauss_f32()).collect(),
+            nbr_ptr: vec![0, 2, 3],
+            nbr: vec![1, 7, 10], // node 1 (id 11) may cite node 0 (id 10)
+        };
+        save_serving(&path, "vq_serve_tiny_sim_gcn", &params, &layers, &admitted).unwrap();
+        let (p2, l2, a2) = load_serving(&path, "vq_serve_tiny_sim_gcn").unwrap();
         assert_eq!(p2.len(), 1);
         assert_eq!(p2[0].shape, vec![2, 3]);
         assert_eq!(p2[0].f, params[0].f);
         assert_eq!(l2, layers);
+        assert_eq!(a2, admitted);
         // wrong artifact name refused
         assert!(load_serving(&path, "vq_serve_tiny_sim_gat").is_err());
         // a training checkpoint is not a serving artifact (magic mismatch)
@@ -360,8 +536,39 @@ mod tests {
         let mut bad = layers.clone();
         bad[0].assign[0] = 99;
         let bpath = dir.join("bad.bin");
-        save_serving(&bpath, "a", &params, &bad).unwrap();
+        save_serving(&bpath, "a", &params, &bad, &admitted).unwrap();
         assert!(load_serving(&bpath, "a").is_err());
+        // an admitted node citing a not-yet-known id is rejected
+        let mut bad_adm = admitted.clone();
+        bad_adm.nbr[0] = 11; // node 0 (id 10) citing id 11
+        save_serving(&bpath, "a", &params, &layers, &bad_adm).unwrap();
+        assert!(load_serving(&bpath, "a").is_err());
+        // admitted counts must agree between block and layer tables
+        let mut bad_layers = layers.clone();
+        bad_layers[0].admitted_assign.truncate(2); // 1 node's worth, block says 2
+        save_serving(&bpath, "a", &params, &bad_layers, &admitted).unwrap();
+        assert!(load_serving(&bpath, "a").is_err());
+    }
+
+    #[test]
+    fn vqs1_files_still_load_with_identity_whitening() {
+        let dir = std::env::temp_dir().join("vqgnn_ckpt_serve_v1_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.bin");
+        let mut rng = Rng::new(9);
+        let params = vec![Tensor::from_f32(&[3], vec![1.0, 2.0, 3.0])];
+        let layers = vec![mk_serving_layer(&mut rng, 0)];
+        save_serving_v1(&path, "vq_serve_tiny_sim_gcn", &params, &layers).unwrap();
+        let (p2, l2, a2) = load_serving(&path, "vq_serve_tiny_sim_gcn").unwrap();
+        assert_eq!(p2[0].f, params[0].f);
+        assert_eq!(l2[0].cw, layers[0].cw);
+        assert_eq!(l2[0].assign, layers[0].assign);
+        // stats degrade to identity whitening, admitted block is empty
+        assert_eq!(l2[0].mean, vec![0.0; 6]);
+        assert_eq!(l2[0].var, vec![1.0; 6]);
+        assert!(l2[0].admitted_assign.is_empty());
+        assert_eq!(a2.count(), 0);
+        assert_eq!(a2.f_pad, 0);
     }
 
     #[test]

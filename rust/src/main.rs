@@ -119,7 +119,8 @@ fn main() -> Result<()> {
                  [vq|full|ns|cluster|saint] [--epochs N] [--seed S] \
                  [--backend native|pjrt]\n  \
                  vq-gnn serve --dataset D --model M --requests FILE \
-                 [--ckpt SERVING.bin] [--epochs N] [--seed S] [--out FILE]\n  \
+                 [--ckpt SERVING.bin] [--epochs N] [--seed S] [--out FILE] \
+                 [--threads N] [--deadline-ms D]\n  \
                  vq-gnn exp [table3|table4|table7|table8|fig4|inference|\
                  complexity|ablation-*|all] [--epochs N] [--seeds 1,2,3] \
                  [--datasets a,b] [--backend native|pjrt]"
@@ -135,18 +136,26 @@ fn main() -> Result<()> {
 /// With `--ckpt PATH`: loads the serving artifact if the file exists,
 /// otherwise trains `--epochs` (default 3) epochs, freezes, and exports
 /// the artifact to that path for the next run.
+///
+/// `--threads N` widens the session pool (micro-batches fan out across N
+/// `util::par` workers — answers are byte-identical to `--threads 1`);
+/// `--deadline-ms D` switches to deadline-driven flushing: partial tails
+/// wait up to D ms for newer arrivals before padding.
 fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     use vq_gnn::coordinator::vq_trainer::VqTrainer;
     use vq_gnn::datasets::Dataset;
     use vq_gnn::runtime::manifest::Manifest;
     use vq_gnn::runtime::Runtime;
     use vq_gnn::sampler::NodeStrategy;
-    use vq_gnn::serve::{self, Answer, LatencyReport, MicroBatcher, Request, ServingModel};
+    use vq_gnn::serve::{self, report, Answer, LatencyReport, MicroBatcher, Request,
+                        ServingModel};
 
     let ds_name = flags.get("dataset").cloned().unwrap_or("tiny_sim".into());
     let model = flags.get("model").cloned().unwrap_or("gcn".into());
     let epochs: usize = flags.get("epochs").map(|s| s.parse()).transpose()?.unwrap_or(3);
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let threads: usize = flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let deadline_ms: Option<u64> = flags.get("deadline-ms").map(|s| s.parse()).transpose()?;
     let req_path = flags.get("requests").context("serve needs --requests FILE")?;
 
     let man = Manifest::load_or_builtin(&Manifest::default_dir());
@@ -183,15 +192,31 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
         }
     };
 
+    sm.set_threads(threads);
     let text = std::fs::read_to_string(req_path)
         .with_context(|| format!("read requests file {req_path}"))?;
-    let reqs = serve::parse_requests(&text, ds.n())?;
-    let mut eng = MicroBatcher::new();
+    // validate ids against everything the MODEL serves — a loaded VQS2
+    // artifact's admitted nodes are queryable too, not just the dataset's
+    let reqs = serve::parse_requests(&text, sm.total_nodes())?;
+    let mut eng = match deadline_ms {
+        Some(ms) => MicroBatcher::with_deadline(std::time::Duration::from_millis(ms)),
+        None => MicroBatcher::new(),
+    };
     for r in &reqs {
         eng.submit(*r);
     }
     let t0 = std::time::Instant::now();
-    let served = eng.drain(&mut rt, &mut sm)?;
+    let served = if deadline_ms.is_some() {
+        // deadline mode: full batches go immediately, then — the input
+        // file is exhausted, so the tail can never coalesce with newer
+        // arrivals — drain the remainder at once instead of sleeping out
+        // its deadline (a live front-end would keep calling flush())
+        let mut served = eng.flush(&rt, &mut sm)?;
+        served.extend(eng.drain(&rt, &mut sm)?);
+        served
+    } else {
+        eng.drain(&rt, &mut sm)?
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     if let Some(out_path) = flags.get("out") {
@@ -216,19 +241,27 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     }
 
     let lat: Vec<f64> = served.iter().map(|s| s.latency_s).collect();
-    let report = LatencyReport::from_latencies(&lat, wall);
+    let lr = LatencyReport::from_latencies(&lat, wall);
     let nodes = reqs.iter().filter(|r| matches!(r, Request::Node(_))).count();
     println!(
-        "serve {ds_name}/{model} ({} backend, b={}): {report}\n\
-         {} node + {} link queries in {} micro-batches ({} padded rows); \
+        "serve {ds_name}/{model} ({} backend, b={}, {} worker{}): {lr}\n\
+         {} node + {} link queries in {} micro-batches ({} full); \
+         padded rows {} last flush / {} lifetime; tail flushes {} deadline + {} forced; \
          embedding cache resident {:.1} KB",
         rt.backend_name(),
         sm.batch_size(),
+        sm.threads(),
+        if sm.threads() == 1 { "" } else { "s" },
         nodes,
         reqs.len() - nodes,
-        eng.batches_run,
-        eng.padded_rows,
-        sm.cache.memory_bytes() as f64 / 1024.0,
+        eng.stats.batches_run,
+        eng.stats.full_batches,
+        eng.stats.last_flush_padded_rows,
+        eng.stats.padded_rows,
+        eng.stats.tail_deadline_flushes,
+        eng.stats.tail_forced_flushes,
+        sm.cache().memory_bytes() as f64 / 1024.0,
     );
+    print!("{}", report::format_workers(&sm.worker_stats(), wall));
     Ok(())
 }

@@ -23,14 +23,26 @@ pub mod pjrt;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
 use crate::util::tensor::{DType, Tensor};
 use manifest::{ArtifactSpec, Manifest};
 
+pub use native::arena::ExecSession;
+
 /// A compiled artifact, ready to execute.
-pub trait Executable {
+///
+/// `Send + Sync` is part of the contract: the compiled program is read-only
+/// after `compile()`, and all per-step mutable state lives either in the
+/// executable's own internal session (behind a lock, for the single-caller
+/// `run`/`run_into` paths) or in a caller-owned [`ExecSession`] — so
+/// `&dyn Executable` can be driven from multiple `util::par` workers at
+/// once through [`Executable::run_session`].  (The in-tree `xla` stub
+/// satisfies the bound trivially; a real xla-rs build must wrap its client
+/// handles accordingly.)
+pub trait Executable: Send + Sync {
     fn run(&self, spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
 
     /// Execute into caller-held output tensors.  Stateful executors (the
@@ -45,6 +57,28 @@ pub trait Executable {
     ) -> Result<()> {
         *outputs = self.run(spec, inputs)?;
         Ok(())
+    }
+
+    /// Detach a fresh execution session (the per-caller mutable half of the
+    /// compiled program).  Backends with no host-side step state return a
+    /// stateless session.
+    fn new_session(&self) -> ExecSession {
+        ExecSession::stateless()
+    }
+
+    /// Execute against a detached session — the `Sync` entry point: takes
+    /// `&self`, touches only the caller's session, so N workers holding N
+    /// sessions can run the same executable concurrently.  The default
+    /// (stateless backends) ignores the session and falls back to
+    /// [`Executable::run_into`].
+    fn run_session(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Tensor],
+        outputs: &mut Vec<Tensor>,
+        _sess: &mut ExecSession,
+    ) -> Result<()> {
+        self.run_into(spec, inputs, outputs)
     }
 }
 
@@ -65,14 +99,80 @@ pub struct Artifact {
     exe: Box<dyn Executable>,
 }
 
+impl Artifact {
+    /// Detach a fresh execution session for this artifact.
+    pub fn new_session(&self) -> ExecSession {
+        self.exe.new_session()
+    }
+
+    /// Validated session execution WITHOUT runtime accounting — the
+    /// fan-out workers' entry point (`&Artifact` is `Sync`; a worker holds
+    /// its own session).  Callers that care about the bytes/executions
+    /// meters aggregate after the join via [`Runtime::record_external`],
+    /// or go through [`Runtime::run_session`] instead.
+    pub fn run_session(
+        &self,
+        inputs: &[Tensor],
+        outputs: &mut Vec<Tensor>,
+        sess: &mut ExecSession,
+    ) -> Result<()> {
+        check_inputs(&self.spec, inputs)?;
+        self.exe.run_session(&self.spec, inputs, outputs, sess)?;
+        check_output_count(&self.spec, outputs)
+    }
+}
+
+/// Positional input validation shared by every execution entry point.
+fn check_inputs(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "{}: got {} inputs, artifact expects {}",
+            spec.name,
+            inputs.len(),
+            spec.inputs.len()
+        );
+    }
+    for (t, s) in inputs.iter().zip(&spec.inputs) {
+        if t.shape != s.shape || t.dtype != s.dtype {
+            bail!(
+                "{}: input '{}' shape/dtype mismatch: got {:?}/{:?}, want {:?}/{:?}",
+                spec.name,
+                s.name,
+                t.shape,
+                t.dtype,
+                s.shape,
+                s.dtype
+            );
+        }
+    }
+    Ok(())
+}
+
+fn check_output_count(spec: &ArtifactSpec, outputs: &[Tensor]) -> Result<()> {
+    if outputs.len() != spec.outputs.len() {
+        bail!(
+            "{}: got {} outputs, manifest declares {}",
+            spec.name,
+            outputs.len(),
+            spec.outputs.len()
+        );
+    }
+    Ok(())
+}
+
 /// Backend + executable cache + transfer accounting.
+///
+/// The bytes/executions meters are atomics so the `&self` execution entry
+/// point ([`Runtime::run_session`]) can account from any thread; the
+/// single-threaded trainer paths observe exactly the same totals as the
+/// old plain-`u64` fields did.
 pub struct Runtime {
     backend: Box<dyn Backend>,
     cache: HashMap<String, Rc<Artifact>>,
     /// Cumulative bytes shipped to/from the backend (memory-meter input).
-    pub bytes_in: u64,
-    pub bytes_out: u64,
-    pub executions: u64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    executions: AtomicU64,
 }
 
 impl Runtime {
@@ -100,7 +200,34 @@ impl Runtime {
     }
 
     pub fn with_backend(backend: Box<dyn Backend>) -> Runtime {
-        Runtime { backend, cache: HashMap::new(), bytes_in: 0, bytes_out: 0, executions: 0 }
+        Runtime {
+            backend,
+            cache: HashMap::new(),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            executions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out.load(Ordering::Relaxed)
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+
+    /// Fold in executions performed off-runtime (workers driving
+    /// [`Artifact::run_session`] directly aggregate their accounting here
+    /// after the join).
+    pub fn record_external(&self, execs: u64, bytes_in: u64, bytes_out: u64) {
+        self.executions.fetch_add(execs, Ordering::Relaxed);
+        self.bytes_in.fetch_add(bytes_in, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes_out, Ordering::Relaxed);
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -143,42 +270,37 @@ impl Runtime {
         outputs: &mut Vec<Tensor>,
     ) -> Result<()> {
         let spec = &art.spec;
-        if inputs.len() != spec.inputs.len() {
-            bail!(
-                "{}: got {} inputs, artifact expects {}",
-                spec.name,
-                inputs.len(),
-                spec.inputs.len()
-            );
-        }
-        for (t, s) in inputs.iter().zip(&spec.inputs) {
-            if t.shape != s.shape || t.dtype != s.dtype {
-                bail!(
-                    "{}: input '{}' shape/dtype mismatch: got {:?}/{:?}, want {:?}/{:?}",
-                    spec.name,
-                    s.name,
-                    t.shape,
-                    t.dtype,
-                    s.shape,
-                    s.dtype
-                );
-            }
-            self.bytes_in += t.bytes() as u64;
-        }
+        check_inputs(spec, inputs)?;
         art.exe.run_into(spec, inputs, outputs)?;
-        if outputs.len() != spec.outputs.len() {
-            bail!(
-                "{}: got {} outputs, manifest declares {}",
-                spec.name,
-                outputs.len(),
-                spec.outputs.len()
-            );
-        }
-        for t in outputs.iter() {
-            self.bytes_out += t.bytes() as u64;
-        }
-        self.executions += 1;
+        check_output_count(spec, outputs)?;
+        self.account(inputs, outputs);
         Ok(())
+    }
+
+    /// Execute through a detached [`ExecSession`] — the `Sync` entry point:
+    /// `&self`, per-caller session, atomic accounting.  Single-threaded
+    /// callers (a serving model's own micro-batch) use this directly;
+    /// parallel fan-outs drive [`Artifact::run_session`] per worker and
+    /// aggregate accounting via [`Runtime::record_external`].
+    pub fn run_session(
+        &self,
+        art: &Artifact,
+        inputs: &[Tensor],
+        outputs: &mut Vec<Tensor>,
+        sess: &mut ExecSession,
+    ) -> Result<()> {
+        let spec = &art.spec;
+        check_inputs(spec, inputs)?;
+        art.exe.run_session(spec, inputs, outputs, sess)?;
+        check_output_count(spec, outputs)?;
+        self.account(inputs, outputs);
+        Ok(())
+    }
+
+    fn account(&self, inputs: &[Tensor], outputs: &[Tensor]) {
+        let bin: u64 = inputs.iter().map(|t| t.bytes() as u64).sum();
+        let bout: u64 = outputs.iter().map(|t| t.bytes() as u64).sum();
+        self.record_external(1, bin, bout);
     }
 }
 

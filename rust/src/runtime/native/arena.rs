@@ -17,7 +17,57 @@
 //! cached executor is still a pure function of its inputs (pinned by
 //! `tests/plan_executor.rs`).
 
+use std::sync::Arc;
+
 use super::plan::{Plan, PlanKind};
+
+/// A detachable execution session: the per-caller mutable half of a
+/// compiled artifact.  The read-only [`Plan`] is `Arc`-shared by every
+/// session of one executable; the [`StepArena`] here is private to the
+/// session, so any number of sessions can drive the SAME `&Executable`
+/// from different `util::par` workers at once
+/// (`Executable::run_session`).  Stateless backends (PJRT keeps no
+/// host-side step state) use [`ExecSession::stateless`], and their
+/// `run_session` ignores it.
+pub struct ExecSession {
+    native: Option<NativeSession>,
+}
+
+/// The native backend's session state.
+pub(crate) struct NativeSession {
+    pub plan: Arc<Plan>,
+    pub arena: StepArena,
+}
+
+impl ExecSession {
+    /// A session for backends with no per-caller step state.
+    pub fn stateless() -> ExecSession {
+        ExecSession { native: None }
+    }
+
+    /// Detach a fresh native session (its own arena) from a shared plan.
+    pub(crate) fn for_native(plan: Arc<Plan>) -> ExecSession {
+        let arena = StepArena::for_plan(&plan);
+        ExecSession { native: Some(NativeSession { plan, arena }) }
+    }
+
+    pub(crate) fn native_mut(&mut self) -> Option<&mut NativeSession> {
+        self.native.as_mut()
+    }
+
+    /// Layer `l`'s input-feature rows `(rows, f_in)` as left by the last
+    /// step through this session — the inductive-admission bootstrap reads
+    /// the cold node's per-layer features out of its serve forward instead
+    /// of re-deriving them on the host.  `None` on stateless sessions or
+    /// plans without per-layer features (edge/assign).
+    pub fn layer_xfeat(&self, l: usize) -> Option<&[f32]> {
+        self.native
+            .as_ref()
+            .and_then(|st| st.arena.xfeat.get(l))
+            .filter(|v| !v.is_empty())
+            .map(|v| v.as_slice())
+    }
+}
 
 /// Forward residuals of one GAT attention head (VQ path), preallocated.
 #[derive(Debug, Default)]

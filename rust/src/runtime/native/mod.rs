@@ -35,6 +35,14 @@
 //! steps — outputs are bit-identical to the old interpreter's and to a
 //! fresh executor's (`tests/plan_executor.rs`).
 //!
+//! The compiled [`plan::Plan`] is immutable and `Arc`-shared; all per-step
+//! mutable state lives in [`arena::ExecSession`]s detachable via
+//! `Executable::new_session`, so any number of sessions can drive one
+//! `&Executable` from concurrent `util::par` workers
+//! (`Executable::run_session` — the serving pool's fan-out path), while
+//! the single-caller `run`/`run_into` entry points keep using the
+//! executable's built-in session.
+//!
 //! The only artifact family without a native path is the Graph Transformer's
 //! edge-list form — global attention has none (see
 //! `manifest::ManifestError::UnsupportedEdgeForm`).
@@ -45,7 +53,7 @@ mod edge;
 pub mod plan;
 mod vq;
 
-use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -54,7 +62,7 @@ use crate::runtime::ops;
 use crate::runtime::{Backend, Executable};
 use crate::util::tensor::{DType, Tensor};
 
-use arena::StepArena;
+use arena::{ExecSession, StepArena};
 use plan::{Plan, PlanKind};
 
 pub struct NativeBackend;
@@ -96,19 +104,48 @@ impl Backend for NativeBackend {
             "vq_assign" => {}
             other => bail!("native: unknown artifact kind '{other}' ({})", spec.name),
         }
-        let plan = Plan::compile(ds, model, spec)?;
-        let ar = StepArena::for_plan(&plan);
-        Ok(Box::new(NativeExec { plan, arena: RefCell::new(ar) }))
+        let plan = Arc::new(Plan::compile(ds, model, spec)?);
+        let builtin = StepArena::for_plan(&plan);
+        Ok(Box::new(NativeExec { plan, builtin: Mutex::new(builtin) }))
     }
 }
 
-/// One compiled artifact: its resolved [`Plan`] plus the reusable
-/// [`StepArena`].  The arena rides a `RefCell` because the `Executable`
-/// contract is `&self` (the `Runtime` is single-threaded; executables are
-/// cached behind `Rc`).
+/// One compiled artifact, split into the read-only shared half and the
+/// per-caller mutable half:
+///
+/// - the [`Plan`] is `Arc`-shared — every session of this executable (and
+///   the executable itself) reads the same resolved slots and dims;
+/// - each [`ExecSession`] owns a private [`StepArena`], so any number of
+///   sessions can drive the same `&NativeExec` concurrently through
+///   [`Executable::run_session`] (the serving pool's fan-out path);
+/// - `builtin` is the executable's own session for the legacy
+///   single-caller `run`/`run_into` entry points (trainers, one-shot
+///   inference).  It rides a `Mutex` only to keep the type `Sync`; those
+///   paths are single-threaded, so the lock is uncontended and the outputs
+///   are bit-identical to the pre-split `RefCell` executor's.
 pub struct NativeExec {
-    plan: Plan,
-    arena: RefCell<StepArena>,
+    plan: Arc<Plan>,
+    builtin: Mutex<StepArena>,
+}
+
+/// One step against a caller-chosen arena — the shared body of every entry
+/// point.  Outputs are a pure function of `(plan, inputs)`; the arena
+/// carries no semantic state across steps (`tests/plan_executor.rs`).
+fn run_with(
+    plan: &Plan,
+    ar: &mut StepArena,
+    spec: &ArtifactSpec,
+    inputs: &[Tensor],
+    outputs: &mut Vec<Tensor>,
+) -> Result<()> {
+    debug_assert_eq!(spec.name, plan.name, "executor driven with a foreign spec");
+    ensure_outputs(spec, outputs);
+    match plan.kind {
+        PlanKind::Vq(mode) => vq::run_vq(plan, ar, inputs, outputs, mode),
+        PlanKind::VqAttn(mode) => attn::run_vq_attn(plan, ar, inputs, outputs, mode),
+        PlanKind::Edge { train } => edge::run_edge(plan, ar, inputs, outputs, train),
+        PlanKind::Assign => vq::run_vq_assign(plan, ar, inputs, outputs),
+    }
 }
 
 impl Executable for NativeExec {
@@ -124,19 +161,36 @@ impl Executable for NativeExec {
         inputs: &[Tensor],
         outputs: &mut Vec<Tensor>,
     ) -> Result<()> {
-        debug_assert_eq!(spec.name, self.plan.name, "executor driven with a foreign spec");
-        ensure_outputs(spec, outputs);
-        let mut ar = self.arena.borrow_mut();
-        match self.plan.kind {
-            PlanKind::Vq(mode) => vq::run_vq(&self.plan, &mut ar, inputs, outputs, mode),
-            PlanKind::VqAttn(mode) => {
-                attn::run_vq_attn(&self.plan, &mut ar, inputs, outputs, mode)
-            }
-            PlanKind::Edge { train } => {
-                edge::run_edge(&self.plan, &mut ar, inputs, outputs, train)
-            }
-            PlanKind::Assign => vq::run_vq_assign(&self.plan, &mut ar, inputs, outputs),
+        let mut ar = self.builtin.lock().expect("native: built-in session poisoned");
+        run_with(&self.plan, &mut ar, spec, inputs, outputs)
+    }
+
+    fn new_session(&self) -> ExecSession {
+        ExecSession::for_native(self.plan.clone())
+    }
+
+    fn run_session(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[Tensor],
+        outputs: &mut Vec<Tensor>,
+        sess: &mut ExecSession,
+    ) -> Result<()> {
+        let st = sess.native_mut().with_context(|| {
+            format!(
+                "native {}: driven with a stateless session (detach one with \
+                 Executable::new_session)",
+                self.plan.name
+            )
+        })?;
+        if st.plan.name != self.plan.name {
+            bail!(
+                "native {}: driven with a session detached from '{}'",
+                self.plan.name,
+                st.plan.name
+            );
         }
+        run_with(&self.plan, &mut st.arena, spec, inputs, outputs)
     }
 }
 

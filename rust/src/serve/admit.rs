@@ -1,0 +1,180 @@
+//! Inductive-node admission — the serving-side realization of the paper's
+//! claim that a frozen VQ-GNN generalizes to unseen nodes: a cold node is
+//! described by its raw features plus its arcs into already-known nodes,
+//! assigned to the frozen codebooks' nearest codewords per layer (the same
+//! whitened FINDNEAREST the trainer's inductive bootstrap runs, feature
+//! columns only — `VqTrainer::assign_by_features`), and appended to the
+//! per-layer node→codeword tables.  From then on it is a first-class
+//! servable id: queryable directly, and visible to other queries as an
+//! out-of-batch neighbor through its codeword, with **no retraining and no
+//! full-graph pass**.
+//!
+//! Semantics (documented limits of the read-path graph view):
+//!
+//! - admission is one-directional — the admitted node *receives* messages
+//!   from its cited neighbors, but existing nodes' stored neighbor lists
+//!   (and degrees) are not rewritten, so a pre-existing node's answer only
+//!   sees an admitted node through the global codeword histogram (txf) —
+//!   exactly the approximation Fig. 1 makes for any out-of-batch node;
+//! - ids are dense and append-only: node `i`'s id is `n + i`, and a node
+//!   may only cite neighbors admitted before it (single-writer FIFO).
+//!
+//! Writes are serialized through [`AdmissionQueue`] + the `&mut
+//! ServingModel` admission entry points, while the pooled `flush` workers
+//! only ever read the tables — the borrow checker enforces the
+//! single-writer/many-reader split.
+
+use crate::coordinator::checkpoint::ServingAdmitted;
+
+/// The model-level admitted-node store: padded feature rows + CSR neighbor
+/// lists.  Per-layer codeword assignments live next to each layer's frozen
+/// table (`serve::cache::LayerCache::admitted_assign`).
+pub struct AdmittedNodes {
+    /// Dataset node count — admitted ids start here.
+    pub base_n: usize,
+    /// Padded feature width (the dataset's `f_in_pad`).
+    pub f_pad: usize,
+    features: Vec<f32>,
+    nbr_ptr: Vec<u32>,
+    nbr: Vec<u32>,
+}
+
+impl AdmittedNodes {
+    pub fn new(base_n: usize, f_pad: usize) -> AdmittedNodes {
+        AdmittedNodes { base_n, f_pad, features: Vec::new(), nbr_ptr: vec![0], nbr: Vec::new() }
+    }
+
+    /// Rebuild from a serving artifact's admitted block.
+    pub fn from_serving(base_n: usize, f_pad: usize, adm: ServingAdmitted) -> AdmittedNodes {
+        debug_assert!(adm.count() == 0 || adm.f_pad == f_pad);
+        AdmittedNodes {
+            base_n,
+            f_pad,
+            features: adm.features,
+            nbr_ptr: if adm.nbr_ptr.is_empty() { vec![0] } else { adm.nbr_ptr },
+            nbr: adm.nbr,
+        }
+    }
+
+    /// Export into the serving-artifact block.
+    pub fn to_serving(&self) -> ServingAdmitted {
+        ServingAdmitted {
+            f_pad: if self.len() == 0 { 0 } else { self.f_pad },
+            features: self.features.clone(),
+            nbr_ptr: self.nbr_ptr.clone(),
+            nbr: self.nbr.clone(),
+        }
+    }
+
+    /// Number of admitted nodes.
+    pub fn len(&self) -> usize {
+        self.nbr_ptr.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total servable ids: dataset nodes + admitted nodes.
+    pub fn total(&self) -> usize {
+        self.base_n + self.len()
+    }
+
+    /// In-neighbors of admitted node `off` (offset, not id).
+    pub fn neighbors_of(&self, off: usize) -> &[u32] {
+        &self.nbr[self.nbr_ptr[off] as usize..self.nbr_ptr[off + 1] as usize]
+    }
+
+    /// In-degree of admitted node `off`.
+    pub fn degree(&self, off: usize) -> usize {
+        (self.nbr_ptr[off + 1] - self.nbr_ptr[off]) as usize
+    }
+
+    /// Padded feature row of admitted node `off`.
+    pub fn feature_row(&self, off: usize) -> &[f32] {
+        &self.features[off * self.f_pad..(off + 1) * self.f_pad]
+    }
+
+    /// Append one node (features already padded to `f_pad`); returns its id.
+    pub fn push(&mut self, features: &[f32], neighbors: &[u32]) -> u32 {
+        debug_assert_eq!(features.len(), self.f_pad);
+        let id = self.total() as u32;
+        self.features.extend_from_slice(features);
+        self.nbr.extend_from_slice(neighbors);
+        self.nbr_ptr.push(self.nbr.len() as u32);
+        id
+    }
+
+    /// Roll back the most recent `push` (admission bootstrap failed after
+    /// the record landed — the half-admitted node must not stay servable).
+    pub fn pop(&mut self) {
+        if self.len() == 0 {
+            return;
+        }
+        self.nbr_ptr.pop();
+        self.nbr.truncate(*self.nbr_ptr.last().expect("csr base") as usize);
+        self.features.truncate(self.len() * self.f_pad);
+    }
+
+    /// Resident bytes of the admitted tables (cache memory report).
+    pub fn memory_bytes(&self) -> u64 {
+        4 * (self.features.len() + self.nbr_ptr.len() + self.nbr.len()) as u64
+    }
+}
+
+/// A FIFO of admission requests, applied by the single writer between
+/// flushes.  Ids are handed out at enqueue time (dense, deterministic), so
+/// a caller can cite a queued node as a later request's neighbor and query
+/// it as soon as the queue is applied.
+#[derive(Default)]
+pub struct AdmissionQueue {
+    reqs: Vec<(Vec<f32>, Vec<u32>)>,
+}
+
+impl AdmissionQueue {
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+
+    /// Enqueue (validation against the live id space is the model's job).
+    pub fn push(&mut self, features: Vec<f32>, neighbors: Vec<u32>) {
+        self.reqs.push((features, neighbors));
+    }
+
+    pub fn take(&mut self) -> Vec<(Vec<f32>, Vec<u32>)> {
+        std::mem::take(&mut self.reqs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let mut adm = AdmittedNodes::new(10, 3);
+        assert_eq!(adm.total(), 10);
+        let a = adm.push(&[1.0, 2.0, 3.0], &[0, 4]);
+        assert_eq!(a, 10);
+        let b = adm.push(&[4.0, 5.0, 6.0], &[10]); // cites the first admit
+        assert_eq!(b, 11);
+        assert_eq!(adm.len(), 2);
+        assert_eq!(adm.neighbors_of(0), &[0, 4]);
+        assert_eq!(adm.neighbors_of(1), &[10]);
+        assert_eq!(adm.degree(0), 2);
+        assert_eq!(adm.feature_row(1), &[4.0, 5.0, 6.0]);
+        adm.pop();
+        assert_eq!(adm.len(), 1);
+        assert_eq!(adm.neighbors_of(0), &[0, 4]);
+        assert_eq!(adm.total(), 11);
+        // serving-block round trip
+        let again = AdmittedNodes::from_serving(10, 3, adm.to_serving());
+        assert_eq!(again.len(), 1);
+        assert_eq!(again.neighbors_of(0), &[0, 4]);
+        assert_eq!(again.feature_row(0), &[1.0, 2.0, 3.0]);
+    }
+}

@@ -1,23 +1,77 @@
 //! Codebook-backed embedding cache — the serving-side realization of the
 //! paper's "compact low-rank" global context.  At load time the cache
 //! freezes, per layer, the node→codeword assignment table R (read straight
-//! out of `vq::LayerVq`) and the raw-space codewords (the inverse-whitened
-//! Ṽ̄, materialized ONCE instead of per batch as the trainers do).  A query
-//! batch then only materializes features for its own nodes plus forward
-//! sketches against k codewords — no neighbor explosion, no full-graph
-//! forward, and no transposed (backward) sketches at all.
+//! out of `vq::LayerVq`), the raw-space codewords (the inverse-whitened
+//! Ṽ̄, materialized ONCE instead of per batch as the trainers do), and the
+//! per-branch whitening stats (so inductive admission can run FINDNEAREST
+//! in the same whitened space training used).  A query batch then only
+//! materializes features for its own nodes plus forward sketches against k
+//! codewords — no neighbor explosion, no full-graph forward, and no
+//! transposed (backward) sketches at all.
 //!
-//! Memory model: `Σ_l n_br·n × 4` assignment bytes + `Σ_l n_br·k·fp × 4`
-//! codeword bytes (reported by [`EmbeddingCache::memory_bytes`]).
+//! The cache is **shared and read-only on the serve path**: every builder
+//! here takes `&self`, so N pool sessions can build their sketches against
+//! one cache concurrently.  The only writer is the admission path
+//! ([`LayerCache::record_admitted`] behind `&mut ServingModel`), which
+//! appends to the admitted tails — never touching the frozen tables.
+//!
+//! Memory model: `Σ_l n_br·(n + admitted)` assignment words + `Σ_l
+//! n_br·k·fp` codeword floats + whitening stats + the admitted block
+//! (reported by [`EmbeddingCache::memory_bytes`]).
 
-use crate::coordinator::checkpoint::ServingLayer;
+use crate::coordinator::checkpoint::{ServingAdmitted, ServingLayer};
 use crate::graph::{Conv, Graph};
 use crate::runtime::manifest::LayerPlan;
+use crate::serve::admit::AdmittedNodes;
 use crate::util::tensor::Tensor;
 use crate::vq::sketch::SketchScratch;
-use crate::vq::VqModel;
+use crate::vq::{kernels, VqModel};
 
-/// One layer's frozen VQ state, forward-only.
+/// In-degree of any servable id (frozen graph, or the admitted CSR).
+fn deg_any(graph: &Graph, adm: &AdmittedNodes, v: usize) -> usize {
+    if v < graph.n {
+        graph.in_degree(v)
+    } else {
+        adm.degree(v - graph.n)
+    }
+}
+
+/// Convolution coefficient of the arc (src → dst) with admitted ids
+/// allowed on either end.  Arcs between two frozen nodes go through
+/// `Graph::coef` untouched (bit-identical to the pre-admission path);
+/// arcs touching an admitted node mirror the same Table-1 formulas with
+/// the admitted node's degree read from its CSR record.
+fn coef_any(graph: &Graph, adm: &AdmittedNodes, conv: Conv, src: usize, dst: usize) -> f32 {
+    if src < graph.n && dst < graph.n {
+        return graph.coef(conv, src, dst);
+    }
+    match conv {
+        Conv::GcnSym => {
+            let dd = (deg_any(graph, adm, dst) + 1) as f32;
+            let ds = (deg_any(graph, adm, src) + 1) as f32;
+            1.0 / (dd * ds).sqrt()
+        }
+        Conv::SageMean => {
+            let d = deg_any(graph, adm, dst);
+            if d == 0 {
+                0.0
+            } else {
+                1.0 / d as f32
+            }
+        }
+    }
+}
+
+/// In-neighbors of any servable id.
+fn nbrs_any<'a>(graph: &'a Graph, adm: &'a AdmittedNodes, v: usize) -> &'a [u32] {
+    if v < graph.n {
+        graph.in_neighbors(v)
+    } else {
+        adm.neighbors_of(v - graph.n)
+    }
+}
+
+/// One layer's frozen VQ state, forward-only, plus its admitted tail.
 pub struct LayerCache {
     pub plan: LayerPlan,
     pub k: usize,
@@ -26,20 +80,129 @@ pub struct LayerCache {
     pub assign: Vec<u32>,
     /// Raw-space codewords (n_br, k, fp), precomputed at load time.
     pub cw: Tensor,
-    /// Branch-0 cluster populations over ALL nodes, precomputed at load:
-    /// `cnt_out` per batch is this histogram minus the batch's members —
-    /// O(b + k) per query batch instead of an O(n) sweep.
+    /// Whitening mean, row-major (n_br, fp) — admission FINDNEAREST input.
+    pub mean: Vec<f32>,
+    /// Whitening variance, row-major (n_br, fp).
+    pub var: Vec<f32>,
+    /// Whitened codewords (n_br, k, fp), derived once from `cw`/`mean`/
+    /// `var` — the admission path's codebook.  Deriving (instead of
+    /// freezing the trainer's own whitened table) keeps admission
+    /// deterministic across save → load: the raw codewords round-trip
+    /// exactly, so both sides derive the same table.
+    cww: Vec<f32>,
+    /// Admitted-node assignments, node-major (count, n_br): entry
+    /// `[off * n_br + j]` is branch j's codeword for id `n + off`.
+    pub admitted_assign: Vec<u32>,
+    /// Branch-0 cluster populations over ALL servable nodes (frozen +
+    /// admitted), maintained on admission: `cnt_out` per batch is this
+    /// histogram minus the batch's members — O(b + k) per query batch
+    /// instead of an O(n) sweep.
     global_hist: Vec<f32>,
 }
 
 impl LayerCache {
-    /// Assemble one frozen layer, precomputing the codeword histogram.
-    fn new(plan: LayerPlan, k: usize, n: usize, assign: Vec<u32>, cw: Tensor) -> LayerCache {
+    /// Assemble one frozen layer: derive the whitened codebook, count the
+    /// codeword histogram (admitted tail included).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        plan: LayerPlan,
+        k: usize,
+        n: usize,
+        assign: Vec<u32>,
+        cw: Tensor,
+        mean: Vec<f32>,
+        var: Vec<f32>,
+        admitted_assign: Vec<u32>,
+    ) -> LayerCache {
+        let (nb, fp) = (plan.n_br, plan.fp);
+        debug_assert_eq!(mean.len(), nb * fp);
+        debug_assert_eq!(var.len(), nb * fp);
+        let mut cww = vec![0.0f32; nb * k * fp];
+        let mut inv = vec![0.0f32; fp];
+        for j in 0..nb {
+            kernels::inv_std_into(&var[j * fp..(j + 1) * fp], &mut inv);
+            for v in 0..k {
+                for d in 0..fp {
+                    let idx = (j * k + v) * fp + d;
+                    cww[idx] = (cw.f[idx] - mean[j * fp + d]) * inv[d];
+                }
+            }
+        }
         let mut global_hist = vec![0.0f32; k];
         for u in 0..n {
             global_hist[assign[u] as usize] += 1.0;
         }
-        LayerCache { plan, k, n, assign, cw, global_hist }
+        for off in 0..admitted_assign.len() / nb.max(1) {
+            global_hist[admitted_assign[off * nb] as usize] += 1.0;
+        }
+        LayerCache { plan, k, n, assign, cw, mean, var, cww, admitted_assign, global_hist }
+    }
+
+    /// Admitted nodes recorded in THIS layer's table (during an admission
+    /// bootstrap the in-flight node exists in the feature/neighbor store
+    /// but not yet here).
+    pub fn admitted_count(&self) -> usize {
+        self.admitted_assign.len() / self.plan.n_br.max(1)
+    }
+
+    /// Branch-j codeword of any servable id (frozen table or admitted
+    /// tail).
+    #[inline]
+    pub fn assign_any(&self, j: usize, u: usize) -> usize {
+        if u < self.n {
+            self.assign[j * self.n + u] as usize
+        } else {
+            self.admitted_assign[(u - self.n) * self.plan.n_br + j] as usize
+        }
+    }
+
+    /// Append one admitted node's per-branch assignments (single-writer
+    /// path) and fold it into the global histogram.
+    pub fn record_admitted(&mut self, assigns: &[u32]) {
+        debug_assert_eq!(assigns.len(), self.plan.n_br);
+        debug_assert!(assigns.iter().all(|&a| (a as usize) < self.k));
+        self.admitted_assign.extend_from_slice(assigns);
+        self.global_hist[assigns[0] as usize] += 1.0;
+    }
+
+    /// Nearest-codeword assignment of one node from its layer-input
+    /// feature row, per branch, against the frozen codebooks — the
+    /// admission FINDNEAREST.  Mirrors the trainer's inductive bootstrap
+    /// (`VqTrainer::assign_by_features`): feature columns only (an unseen
+    /// node has no gradient history), whitened per branch, ties to the
+    /// lowest index via `vq::kernels::assign_blocked`.  Branches whose
+    /// concat slice is entirely gradient columns get codeword 0 — their
+    /// assignment never reaches the forward pass (the serve step reads
+    /// only feature columns of the unsketched concat).
+    pub fn assign_features(&self, row: &[f32], out: &mut [u32]) {
+        let (fl, fp, k, nb) = (self.plan.f_in, self.plan.fp, self.k, self.plan.n_br);
+        debug_assert_eq!(row.len(), fl);
+        debug_assert_eq!(out.len(), nb);
+        let mut inv = vec![0.0f32; fp];
+        let mut vw = vec![0.0f32; fp];
+        for j in 0..nb {
+            let lo = j * fp;
+            if lo >= fl {
+                out[j] = 0; // pure-gradient branch: forward-neutral
+                continue;
+            }
+            let width = fp.min(fl - lo);
+            kernels::inv_std_into(&self.var[j * fp..j * fp + width], &mut inv[..width]);
+            for d in 0..width {
+                vw[d] = (row[lo + d] - self.mean[j * fp + d]) * inv[d];
+            }
+            let mut a = [0i32];
+            kernels::assign_blocked(
+                &vw[..width],
+                width,
+                width,
+                &self.cww[j * k * fp..(j + 1) * k * fp],
+                k,
+                fp,
+                &mut a,
+            );
+            out[j] = a[0] as u32;
+        }
     }
 
     /// Forward fixed-convolution sketches for a query batch, written into
@@ -47,12 +210,15 @@ impl LayerCache {
     /// plus the codeword-merged out-of-batch block.  Mirrors
     /// `vq::sketch::build_fixed` minus the transposed (Eq. 7) side,
     /// accumulating in the same arc order so the tensors are bit-identical
-    /// to the trainer's.  The serving session rebuilds its dynamic input
-    /// slots in place, so the steady-state micro-batch allocates nothing
-    /// here.
+    /// to the trainer's for frozen-node batches; admitted rows read their
+    /// neighbors/degrees from the admitted CSR.  The serving session
+    /// rebuilds its dynamic input slots in place, so the steady-state
+    /// micro-batch allocates nothing here.
+    #[allow(clippy::too_many_arguments)]
     pub fn build_fixed_fwd_into(
         &self,
         graph: &Graph,
+        adm: &AdmittedNodes,
         conv: Conv,
         batch: &[u32],
         scratch: &mut SketchScratch,
@@ -60,7 +226,7 @@ impl LayerCache {
         c_out: &mut [f32],
     ) {
         let b = batch.len();
-        let (nb, k, n) = (self.plan.n_br, self.k, self.n);
+        let (nb, k) = (self.plan.n_br, self.k);
         debug_assert_eq!(c_in.len(), b * b);
         debug_assert_eq!(c_out.len(), nb * b * k);
         c_in.fill(0.0);
@@ -68,20 +234,20 @@ impl LayerCache {
         scratch.mark(batch);
         for (i, &gi) in batch.iter().enumerate() {
             let gi = gi as usize;
-            for &u in graph.in_neighbors(gi) {
-                let coef = graph.coef(conv, u as usize, gi);
+            for &u in nbrs_any(graph, adm, gi) {
+                let coef = coef_any(graph, adm, conv, u as usize, gi);
                 let p = scratch.pos_of(u as usize);
                 if p >= 0 {
                     c_in[i * b + p as usize] += coef;
                 } else {
                     for j in 0..nb {
-                        let v = self.assign[j * n + u as usize] as usize;
+                        let v = self.assign_any(j, u as usize);
                         c_out[(j * b + i) * k + v] += coef;
                     }
                 }
             }
             if conv.with_self_loops() {
-                c_in[i * b + i] += graph.coef(conv, gi, gi);
+                c_in[i * b + i] += coef_any(graph, adm, conv, gi, gi);
             }
         }
         scratch.unmark(batch);
@@ -91,6 +257,7 @@ impl LayerCache {
     pub fn build_fixed_fwd(
         &self,
         graph: &Graph,
+        adm: &AdmittedNodes,
         conv: Conv,
         batch: &[u32],
         scratch: &mut SketchScratch,
@@ -99,7 +266,7 @@ impl LayerCache {
         let (nb, k) = (self.plan.n_br, self.k);
         let mut c_in = vec![0.0f32; b * b];
         let mut c_out = vec![0.0f32; nb * b * k];
-        self.build_fixed_fwd_into(graph, conv, batch, scratch, &mut c_in, &mut c_out);
+        self.build_fixed_fwd_into(graph, adm, conv, batch, scratch, &mut c_in, &mut c_out);
         (
             Tensor::from_f32(&[b, b], c_in),
             Tensor::from_f32(&[nb, b, k], c_out),
@@ -113,6 +280,7 @@ impl LayerCache {
     pub fn build_learnable_fwd_into(
         &self,
         graph: &Graph,
+        adm: &AdmittedNodes,
         batch: &[u32],
         scratch: &mut SketchScratch,
         mask_in: &mut [f32],
@@ -129,12 +297,12 @@ impl LayerCache {
         for (i, &gi) in batch.iter().enumerate() {
             let gi = gi as usize;
             mask_in[i * b + i] = 1.0;
-            for &u in graph.in_neighbors(gi) {
+            for &u in nbrs_any(graph, adm, gi) {
                 let p = scratch.pos_of(u as usize);
                 if p >= 0 {
                     mask_in[i * b + p as usize] = 1.0;
                 } else {
-                    let v = self.assign[u as usize] as usize;
+                    let v = self.assign_any(0, u as usize);
                     m_out[i * k + v] += 1.0;
                 }
             }
@@ -146,6 +314,7 @@ impl LayerCache {
     pub fn build_learnable_fwd(
         &self,
         graph: &Graph,
+        adm: &AdmittedNodes,
         batch: &[u32],
         scratch: &mut SketchScratch,
     ) -> (Tensor, Tensor) {
@@ -153,7 +322,7 @@ impl LayerCache {
         let k = self.k;
         let mut mask_in = vec![0.0f32; b * b];
         let mut m_out = vec![0.0f32; b * k];
-        self.build_learnable_fwd_into(graph, batch, scratch, &mut mask_in, &mut m_out);
+        self.build_learnable_fwd_into(graph, adm, batch, scratch, &mut mask_in, &mut m_out);
         (
             Tensor::from_f32(&[b, b], mask_in),
             Tensor::from_f32(&[b, k], m_out),
@@ -162,10 +331,13 @@ impl LayerCache {
 
     /// Global out-of-batch cluster histogram (txf global attention),
     /// written into a caller-owned buffer: `cnt_out[v] = |{u ∉ batch :
-    /// R[u] = v}|`.  Computed as the frozen all-node histogram minus the
-    /// batch's distinct members — counts are small integers, exact in f32,
-    /// so the result is bit-identical to `vq::sketch::build_cnt_out`'s O(n)
-    /// counting sweep.
+    /// R[u] = v}|` over all servable nodes.  Computed as the maintained
+    /// histogram minus the batch's distinct members — counts are small
+    /// integers, exact in f32, so the result is bit-identical to
+    /// `vq::sketch::build_cnt_out`'s O(n) counting sweep on frozen-node
+    /// batches.  A batch member that is mid-admission (recorded features
+    /// but no assignment yet — the bootstrap forward itself) is not in the
+    /// histogram and is skipped.
     pub fn build_cnt_fwd_into(&self, batch: &[u32], scratch: &mut SketchScratch, cnt: &mut [f32]) {
         debug_assert_eq!(cnt.len(), self.k);
         cnt.copy_from_slice(&self.global_hist);
@@ -174,7 +346,11 @@ impl LayerCache {
             // mark() keeps the LAST occurrence's position: decrement each
             // distinct node exactly once, duplicates included
             if scratch.pos_of(g as usize) == i as i32 {
-                cnt[self.assign[g as usize] as usize] -= 1.0;
+                let u = g as usize;
+                if u >= self.n && u - self.n >= self.admitted_count() {
+                    continue; // mid-admission: not in the histogram
+                }
+                cnt[self.assign_any(0, u)] -= 1.0;
             }
         }
         scratch.unmark(batch);
@@ -188,37 +364,62 @@ impl LayerCache {
     }
 }
 
-/// All layers' frozen VQ state for one serving model.
+/// All layers' frozen VQ state for one serving model, plus the
+/// admitted-node store shared by every layer.
 pub struct EmbeddingCache {
     pub layers: Vec<LayerCache>,
+    pub admitted: AdmittedNodes,
 }
 
 impl EmbeddingCache {
-    /// Freeze a trained `VqModel`: copy the assignment tables and
-    /// materialize the raw codeword tensors once.
+    /// Freeze a trained `VqModel`: copy the assignment tables, materialize
+    /// the raw codeword tensors once, and snapshot the whitening stats.
     pub fn from_vq(vq: &VqModel) -> EmbeddingCache {
-        EmbeddingCache {
-            layers: vq
-                .layers
-                .iter()
-                .map(|l| {
-                    LayerCache::new(l.plan.clone(), l.k, l.n, l.assign.clone(), l.cw_tensor())
-                })
-                .collect(),
-        }
+        let layers: Vec<LayerCache> = vq
+            .layers
+            .iter()
+            .map(|l| {
+                LayerCache::new(
+                    l.plan.clone(),
+                    l.k,
+                    l.n,
+                    l.assign.clone(),
+                    l.cw_tensor(),
+                    l.mean_tensor().f,
+                    l.var_tensor().f,
+                    Vec::new(),
+                )
+            })
+            .collect();
+        let (n, f_pad) = (
+            layers.first().map(|l| l.n).unwrap_or(0),
+            layers.first().map(|l| l.plan.f_in).unwrap_or(0),
+        );
+        EmbeddingCache { layers, admitted: AdmittedNodes::new(n, f_pad) }
     }
 
     /// Rebuild from a serving artifact's layers + the serve spec's plans.
-    pub fn from_serving_layers(plans: &[LayerPlan], layers: Vec<ServingLayer>) -> EmbeddingCache {
+    pub fn from_serving_layers(
+        plans: &[LayerPlan],
+        layers: Vec<ServingLayer>,
+        admitted: ServingAdmitted,
+    ) -> EmbeddingCache {
+        let layers: Vec<LayerCache> = plans
+            .iter()
+            .zip(layers)
+            .map(|(p, l)| {
+                let cw = Tensor::from_f32(&[l.n_br, l.k, l.fp], l.cw);
+                LayerCache::new(p.clone(), l.k, l.n, l.assign, cw, l.mean, l.var,
+                                l.admitted_assign)
+            })
+            .collect();
+        let (n, f_pad) = (
+            layers.first().map(|l| l.n).unwrap_or(0),
+            layers.first().map(|l| l.plan.f_in).unwrap_or(0),
+        );
         EmbeddingCache {
-            layers: plans
-                .iter()
-                .zip(layers)
-                .map(|(p, l)| {
-                    let cw = Tensor::from_f32(&[l.n_br, l.k, l.fp], l.cw);
-                    LayerCache::new(p.clone(), l.k, l.n, l.assign, cw)
-                })
-                .collect(),
+            layers,
+            admitted: AdmittedNodes::from_serving(n, f_pad, admitted),
         }
     }
 
@@ -233,17 +434,57 @@ impl EmbeddingCache {
                 fp: l.plan.fp,
                 cw: l.cw.f.clone(),
                 assign: l.assign.clone(),
+                mean: l.mean.clone(),
+                var: l.var.clone(),
+                admitted_assign: l.admitted_assign.clone(),
             })
             .collect()
     }
 
-    /// Resident bytes: n × L assignment words + codebooks (the README's
+    /// Export the admitted block.
+    pub fn to_serving_admitted(&self) -> ServingAdmitted {
+        self.admitted.to_serving()
+    }
+
+    /// Total servable ids: dataset nodes + admitted nodes.
+    pub fn total_nodes(&self) -> usize {
+        self.admitted.total()
+    }
+
+    /// Gather padded feature rows for any servable ids into a caller-owned
+    /// `(b, f)` buffer — frozen nodes from the dataset's feature matrix,
+    /// admitted nodes from the admitted store.
+    pub fn gather_features_into(&self, features: &[f32], f: usize, batch: &[u32],
+                                out: &mut [f32]) {
+        debug_assert_eq!(out.len(), batch.len() * f);
+        let base = self.admitted.base_n;
+        for (i, &v) in batch.iter().enumerate() {
+            let v = v as usize;
+            let dst = &mut out[i * f..(i + 1) * f];
+            if v < base {
+                dst.copy_from_slice(&features[v * f..(v + 1) * f]);
+            } else {
+                dst.copy_from_slice(self.admitted.feature_row(v - base));
+            }
+        }
+    }
+
+    /// Resident bytes: assignment words (frozen + admitted), codebooks,
+    /// whitening stats, and the admitted feature/CSR block (the README's
     /// cache memory model).
     pub fn memory_bytes(&self) -> u64 {
-        self.layers
+        let layers: u64 = self
+            .layers
             .iter()
-            .map(|l| 4 * (l.assign.len() as u64 + l.cw.numel() as u64))
-            .sum()
+            .map(|l| {
+                4 * (l.assign.len()
+                    + l.admitted_assign.len()
+                    + l.cw.numel()
+                    + l.mean.len()
+                    + l.var.len()) as u64
+            })
+            .sum();
+        layers + self.admitted.memory_bytes()
     }
 }
 
@@ -268,7 +509,20 @@ mod tests {
     }
 
     fn freeze_one(lv: &LayerVq) -> LayerCache {
-        LayerCache::new(lv.plan.clone(), lv.k, lv.n, lv.assign.clone(), lv.cw_tensor())
+        LayerCache::new(
+            lv.plan.clone(),
+            lv.k,
+            lv.n,
+            lv.assign.clone(),
+            lv.cw_tensor(),
+            lv.mean_tensor().f,
+            lv.var_tensor().f,
+            Vec::new(),
+        )
+    }
+
+    fn no_admitted(g: &Graph, lv: &LayerVq) -> AdmittedNodes {
+        AdmittedNodes::new(g.n, lv.plan.f_in)
     }
 
     #[test]
@@ -276,22 +530,24 @@ mod tests {
         use crate::vq::sketch::{build_cnt_out, build_fixed, build_learnable};
         let (g, lv) = setup(40, 31, 2);
         let cache = freeze_one(&lv);
+        let adm = no_admitted(&g, &lv);
         let batch: Vec<u32> = vec![2, 9, 17, 33, 39, 9]; // includes a duplicate
         let mut s1 = SketchScratch::new(g.n);
         let mut s2 = SketchScratch::new(g.n);
         let (ci_t, co_t, _) = build_fixed(&g, Conv::GcnSym, &batch, &lv, &mut s1);
-        let (ci_c, co_c) = cache.build_fixed_fwd(&g, Conv::GcnSym, &batch, &mut s2);
+        let (ci_c, co_c) = cache.build_fixed_fwd(&g, &adm, Conv::GcnSym, &batch, &mut s2);
         assert_eq!(ci_t.f, ci_c.f);
         assert_eq!(co_t.f, co_c.f);
 
         let (g, mut lv) = setup(30, 37, 1);
         lv.plan.n_br = 1;
         let cache = freeze_one(&lv);
+        let adm = no_admitted(&g, &lv);
         let batch: Vec<u32> = vec![1, 4, 4, 28];
         let mut s1 = SketchScratch::new(g.n);
         let mut s2 = SketchScratch::new(g.n);
         let (mi_t, mo_t, _) = build_learnable(&g, &batch, &lv, &mut s1);
-        let (mi_c, mo_c) = cache.build_learnable_fwd(&g, &batch, &mut s2);
+        let (mi_c, mo_c) = cache.build_learnable_fwd(&g, &adm, &batch, &mut s2);
         assert_eq!(mi_t.f, mi_c.f);
         assert_eq!(mo_t.f, mo_c.f);
         let cnt_t = build_cnt_out(&batch, &lv, &mut s1);
@@ -300,20 +556,151 @@ mod tests {
     }
 
     #[test]
+    fn admitted_rows_merge_neighbors_through_their_codewords() {
+        let (g, lv) = setup(24, 51, 2);
+        let mut cache = freeze_one(&lv);
+        let mut adm = no_admitted(&g, &lv);
+        // admit one node with three known in-neighbors
+        let id = adm.push(&[0.5; 8], &[1, 5, 9]);
+        cache.record_admitted(&[3, 1]);
+        assert_eq!(cache.admitted_count(), 1);
+        assert_eq!(cache.assign_any(0, id as usize), 3);
+        assert_eq!(cache.assign_any(1, id as usize), 1);
+
+        let batch: Vec<u32> = vec![id, 2];
+        let (b, k) = (batch.len(), cache.k);
+        let mut scratch = SketchScratch::new(adm.total());
+        let (c_in, c_out) =
+            cache.build_fixed_fwd(&g, &adm, Conv::GcnSym, &batch, &mut scratch);
+        // the admitted row's mass is its 3 arcs (none of 1/5/9 is in the
+        // batch, so all out-of-batch) at the mirrored GCN coefficient plus
+        // a self loop — NO message dropped, per branch (paper Fig. 1)
+        let dd = (adm.degree(0) + 1) as f32;
+        let want: f32 = [1u32, 5, 9]
+            .iter()
+            .map(|&u| 1.0 / (dd * (g.in_degree(u as usize) + 1) as f32).sqrt())
+            .sum::<f32>()
+            + 1.0 / dd; // self loop
+        for j in 0..2 {
+            let intra: f32 = c_in.f[..b].iter().sum(); // row 0 of C_in
+            let merged: f32 = c_out.f[(j * b) * k..(j * b) * k + k].iter().sum();
+            assert!(
+                (intra + merged - want).abs() < 1e-5,
+                "branch {j}: {} vs {want}",
+                intra + merged
+            );
+        }
+        // each neighbor's coefficient landed in its codeword's bucket
+        for &u in &[1u32, 5, 9] {
+            let v = cache.assign_any(0, u as usize);
+            assert!(c_out.f[v] > 0.0, "arc {u}→{id} missing from c_out");
+        }
+
+        // the frozen row (node 2) is bit-identical to a no-admission build
+        let fresh = freeze_one(&lv);
+        let adm0 = no_admitted(&g, &lv);
+        let mut s2 = SketchScratch::new(g.n);
+        let (ci0, co0) = fresh.build_fixed_fwd(&g, &adm0, Conv::GcnSym, &[2, 7], &mut s2);
+        let mut s3 = SketchScratch::new(adm.total());
+        let (ci1, co1) = cache.build_fixed_fwd(&g, &adm, Conv::GcnSym, &[2, 7], &mut s3);
+        assert_eq!(ci0.f, ci1.f);
+        assert_eq!(co0.f, co1.f);
+
+        // cnt histogram: admitted node counted once it is recorded
+        let (g1, mut lv1) = setup(20, 53, 1);
+        lv1.plan.n_br = 1;
+        let mut c1 = freeze_one(&lv1);
+        let mut a1 = AdmittedNodes::new(g1.n, lv1.plan.f_in);
+        let mut sc = SketchScratch::new(g1.n + 1);
+        let before = c1.build_cnt_fwd(&[0, 3], &mut sc);
+        let nid = a1.push(&[0.0; 8], &[0]);
+        // mid-admission (no assignment recorded): histogram unchanged,
+        // batches containing the in-flight node skip it
+        let mid = c1.build_cnt_fwd(&[0, nid], &mut sc);
+        assert_eq!(mid.f.iter().sum::<f32>(), before.f.iter().sum::<f32>() + 1.0);
+        c1.record_admitted(&[2]);
+        let after = c1.build_cnt_fwd(&[0, 3], &mut sc);
+        assert_eq!(after.f[2], before.f[2] + 1.0);
+        // and once admitted, the node decrements its own bucket in-batch:
+        // hist(+node) − {0, node} == hist − {0} == the mid-admission build
+        let with = c1.build_cnt_fwd(&[0, nid], &mut sc);
+        assert_eq!(with.f, mid.f);
+    }
+
+    #[test]
+    fn assign_features_matches_wholesale_kernel() {
+        let (_, lv) = setup(25, 61, 2);
+        let cache = freeze_one(&lv);
+        let mut rng = Rng::new(8);
+        let row: Vec<f32> = (0..8).map(|_| rng.gauss_f32()).collect();
+        let mut got = vec![0u32; 2];
+        cache.assign_features(&row, &mut got);
+        // brute force in the whitened feature-masked space, per branch
+        let fp = lv.plan.fp; // 6: branch 0 covers cols 0..6 (all features up
+                             // to 8? no: f_in=8 → branch 0 cols 0..6, branch
+                             // 1 cols 6..12 of which 6..8 are features)
+        for j in 0..2 {
+            let lo = j * fp;
+            let width = fp.min(8 - lo);
+            let br = &lv.branches[j];
+            let mut best = (f64::INFINITY, 0usize);
+            let mut second = f64::INFINITY;
+            for c in 0..lv.k {
+                let mut d2 = 0.0f64;
+                for d in 0..width {
+                    let w = ((row[lo + d] - br.mean[d])
+                        * (1.0 / (br.var[d] + crate::vq::EPS).sqrt()))
+                        as f64;
+                    let cwv = ((cache.cw.f[(j * lv.k + c) * fp + d] - cache.mean[j * fp + d])
+                        * (1.0 / (cache.var[j * fp + d] + crate::vq::EPS).sqrt()))
+                        as f64;
+                    let diff = w - cwv;
+                    d2 += diff * diff;
+                }
+                if d2 < best.0 {
+                    second = best.0;
+                    best = (d2, c);
+                } else if d2 < second {
+                    second = d2;
+                }
+            }
+            if second - best.0 > 1e-6 {
+                // unique winner: the kernel path must agree (near-ties may
+                // legitimately break either way across float paths)
+                assert_eq!(got[j] as usize, best.1, "branch {j}");
+            }
+        }
+    }
+
+    #[test]
     fn serving_layer_roundtrip_preserves_cache() {
-        let (_, lv) = setup(25, 41, 2);
-        let cache = EmbeddingCache {
+        let (g, lv) = setup(25, 41, 2);
+        let mut cache = EmbeddingCache {
+            admitted: AdmittedNodes::new(g.n, lv.plan.f_in),
             layers: vec![freeze_one(&lv)],
         };
+        cache.admitted.push(&[1.0; 8], &[3, 4]);
+        cache.layers[0].record_admitted(&[2, 4]);
         let plans = vec![lv.plan.clone()];
         let exported = cache.to_serving_layers();
-        let back = EmbeddingCache::from_serving_layers(&plans, exported);
+        let adm_exported = cache.to_serving_admitted();
+        let back = EmbeddingCache::from_serving_layers(&plans, exported, adm_exported);
         assert_eq!(cache.layers[0].assign, back.layers[0].assign);
         assert_eq!(cache.layers[0].cw.f, back.layers[0].cw.f);
+        assert_eq!(cache.layers[0].mean, back.layers[0].mean);
+        assert_eq!(cache.layers[0].var, back.layers[0].var);
+        assert_eq!(cache.layers[0].admitted_assign, back.layers[0].admitted_assign);
+        assert_eq!(cache.layers[0].cww, back.layers[0].cww, "derived codebooks agree");
+        assert_eq!(cache.total_nodes(), back.total_nodes());
+        assert_eq!(back.admitted.neighbors_of(0), &[3, 4]);
         assert_eq!(cache.memory_bytes(), back.memory_bytes());
-        assert_eq!(
-            cache.memory_bytes(),
-            4 * (2 * 25 + 2 * 5 * 6) as u64 // assignments + codewords
-        );
+        let l = &cache.layers[0];
+        let expect = 4 * (l.assign.len()
+            + l.admitted_assign.len()
+            + l.cw.numel()
+            + l.mean.len()
+            + l.var.len()) as u64
+            + cache.admitted.memory_bytes();
+        assert_eq!(cache.memory_bytes(), expect);
     }
 }

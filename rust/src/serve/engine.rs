@@ -1,22 +1,43 @@
 //! Micro-batching engine: a request queue that coalesces incoming queries
 //! into fixed-size batches (the serve artifact's compiled width `b`),
-//! pads the tail, runs the forward-only path, and scatters per-request
+//! fans them out across the model's session pool, and merges per-request
 //! results back in submit order.
 //!
-//! Batch composition mirrors `VqTrainer::infer_nodes` exactly — FIFO
-//! chunks of `b`, the tail padded with the first queued node — so a
-//! drained queue answers bit-identically to one-shot inference over the
-//! same query list (asserted by `tests/serve.rs`).  Duplicate node ids in
-//! one batch are fine: each occurrence owns a row, and rows of the same
-//! node are computed from identical inputs.
+//! Two flushing disciplines share one body:
+//!
+//! - [`MicroBatcher::drain`] — cut everything, padding the tail: mirrors
+//!   `VqTrainer::infer_nodes` exactly (FIFO chunks of `b`, tail padded
+//!   with the flush's first queued node), so a drained queue answers
+//!   bit-identically to one-shot inference over the same query list
+//!   (asserted by `tests/serve.rs`);
+//! - [`MicroBatcher::flush`] — **deadline-driven**: full `b`-wide batches
+//!   are always cut, but a partial tail runs (padded) only once a request
+//!   in it has outlived the engine's deadline; otherwise those requests
+//!   stay queued for the next flush to coalesce with newer arrivals.
+//!   This is what shrinks the padded-row waste under streaming load: the
+//!   common case is that the tail keeps filling, and only a deadline
+//!   expiry ever pays for padding.  The two tail paths are counted
+//!   separately ([`EngineStats::tail_deadline_flushes`] /
+//!   [`EngineStats::tail_forced_flushes`]).
+//!
+//! **Concurrency**: batches of one flush are independent — each is a pure
+//! function of the shared [`ServeCore`](crate::serve::model::ServeCore) —
+//! so they run across the pool's sessions via `util::par::scope_map`
+//! (worker `w` takes batches `w, w+T, w+2T, …`; results land in
+//! batch-indexed slots).  Answers are bit-identical to the serial
+//! schedule for ANY worker count (`tests/serve_concurrent.rs`); only the
+//! latency stamps differ.  Duplicate node ids in one batch are fine: each
+//! occurrence owns a row, and rows of the same node are computed from
+//! identical inputs.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::runtime::Runtime;
 use crate::serve::model::ServingModel;
 use crate::serve::{Answer, Request};
+use crate::util::par;
 
 /// A completed request: the answer plus its queue-to-completion latency.
 pub struct Served {
@@ -25,22 +46,69 @@ pub struct Served {
     pub latency_s: f64,
 }
 
-#[derive(Default)]
+/// Lifetime + per-flush accounting of the engine (capacity-planning
+/// signals; the CLI and `bench_guard` read these).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    /// Micro-batches executed over the engine's lifetime.
+    pub batches_run: u64,
+    /// Batches that ran completely full (no padding).
+    pub full_batches: u64,
+    /// Padding rows wasted on partial tails, lifetime total.
+    pub padded_rows: u64,
+    /// Padding rows of the MOST RECENT flush (per-drain signal).
+    pub last_flush_padded_rows: u64,
+    /// Partial tails flushed because a request's deadline expired.
+    pub tail_deadline_flushes: u64,
+    /// Partial tails flushed because the caller forced a full drain.
+    pub tail_forced_flushes: u64,
+}
+
 pub struct MicroBatcher {
     pending: Vec<(usize, Request, Instant)>,
     next_id: usize,
-    /// Micro-batches executed over the engine's lifetime.
-    pub batches_run: u64,
-    /// Padding rows wasted on partial tails (capacity-planning signal).
-    pub padded_rows: u64,
+    /// Tail-flush deadline: a partial tail runs once its oldest request is
+    /// older than this.  `None` means tails only run on `drain`.
+    deadline: Option<Duration>,
+    pub stats: EngineStats,
+}
+
+impl Default for MicroBatcher {
+    fn default() -> MicroBatcher {
+        MicroBatcher::new()
+    }
+}
+
+fn slots_of(req: &Request) -> usize {
+    match req {
+        Request::Node(_) => 1,
+        Request::Link(..) => 2, // a link query owns two consecutive rows
+    }
 }
 
 impl MicroBatcher {
     pub fn new() -> MicroBatcher {
-        MicroBatcher::default()
+        MicroBatcher {
+            pending: Vec::new(),
+            next_id: 0,
+            deadline: None,
+            stats: EngineStats::default(),
+        }
     }
 
-    /// Enqueue a request; returns its ticket id (stable across drains).
+    /// An engine whose partial tails flush once a request has waited
+    /// `deadline` (zero = every flush behaves like a drain).
+    pub fn with_deadline(deadline: Duration) -> MicroBatcher {
+        let mut eng = MicroBatcher::new();
+        eng.deadline = Some(deadline);
+        eng
+    }
+
+    pub fn set_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
+    }
+
+    /// Enqueue a request; returns its ticket id (stable across flushes).
     pub fn submit(&mut self, req: Request) -> usize {
         let id = self.next_id;
         self.next_id += 1;
@@ -52,17 +120,83 @@ impl MicroBatcher {
         self.pending.len()
     }
 
-    /// Coalesce every pending request into `b`-wide micro-batches, execute
-    /// them, and return answers in submit order.
-    pub fn drain(&mut self, rt: &mut Runtime, model: &mut ServingModel) -> Result<Vec<Served>> {
-        let pending = std::mem::take(&mut self.pending);
-        if pending.is_empty() {
+    /// Coalesce every pending request into `b`-wide micro-batches —
+    /// padding the tail — execute them across the pool, and return
+    /// answers in submit order.
+    pub fn drain(&mut self, rt: &Runtime, model: &mut ServingModel) -> Result<Vec<Served>> {
+        self.flush_inner(rt, model, true)
+    }
+
+    /// Deadline-driven flush: cut and execute every FULL micro-batch; run
+    /// the partial tail only if one of its requests has outlived the
+    /// engine's deadline, otherwise leave it queued.  Answers come back in
+    /// submit order (for the served prefix).
+    pub fn flush(&mut self, rt: &Runtime, model: &mut ServingModel) -> Result<Vec<Served>> {
+        self.flush_inner(rt, model, false)
+    }
+
+    /// How many leading requests to serve, and whether the deadline forced
+    /// the tail.  Cutting is at request granularity (a link query's two
+    /// rows never split across flushes), so when the tail is withheld the
+    /// served prefix is trimmed until it fills whole batches exactly.
+    fn cut_point(&self, b: usize, force_tail: bool) -> (usize, bool) {
+        let total: usize = self.pending.iter().map(|(_, r, _)| slots_of(r)).sum();
+        if total % b == 0 || force_tail {
+            return (self.pending.len(), false);
+        }
+        // trim to the longest request prefix that packs whole batches
+        // (a link query straddling a batch boundary shrinks the target)
+        let mut target = total / b * b;
+        let cut = loop {
+            let mut cut = 0usize;
+            let mut cum = 0usize;
+            for (_, r, _) in &self.pending {
+                if cum + slots_of(r) > target {
+                    break;
+                }
+                cum += slots_of(r);
+                cut += 1;
+            }
+            if cum % b == 0 {
+                break cut;
+            }
+            target = cum / b * b;
+        };
+        // the OLDEST WITHHELD request governs the deadline — pending[cut],
+        // not the first request past the full-batch boundary: a straddling
+        // link query can push the cut earlier, and the requests it drags
+        // along must not outwait their own deadlines (FIFO ⇒ pending[cut]
+        // has the earliest one)
+        if cut < self.pending.len() {
+            if let Some(d) = self.deadline {
+                if self.pending[cut].2.elapsed() >= d {
+                    return (self.pending.len(), true);
+                }
+            }
+        }
+        (cut, false)
+    }
+
+    fn flush_inner(
+        &mut self,
+        rt: &Runtime,
+        model: &mut ServingModel,
+        force_tail: bool,
+    ) -> Result<Vec<Served>> {
+        if self.pending.is_empty() {
             return Ok(Vec::new());
         }
-        // Expand requests into node slots in arrival order (a link query
-        // owns two consecutive rows).
-        let mut slots: Vec<u32> = Vec::with_capacity(pending.len());
-        for (_, req, _) in &pending {
+        let b = model.batch_size();
+        let c = model.out_dim();
+        let (cut, deadline_tail) = self.cut_point(b, force_tail);
+        if cut == 0 {
+            self.stats.last_flush_padded_rows = 0;
+            return Ok(Vec::new());
+        }
+        let taken: Vec<(usize, Request, Instant)> = self.pending.drain(..cut).collect();
+        // Expand requests into node slots in arrival order.
+        let mut slots: Vec<u32> = Vec::with_capacity(taken.len());
+        for (_, req, _) in &taken {
             match *req {
                 Request::Node(v) => slots.push(v),
                 Request::Link(u, v) => {
@@ -71,37 +205,82 @@ impl MicroBatcher {
                 }
             }
         }
-        let b = model.batch_size();
-        let c = model.out_dim();
-        let pad = slots[0]; // infer_nodes pads with nodes[0]; mirror it
-        let mut rows = vec![0.0f32; slots.len() * c];
-        // completion stamp per micro-batch: a request's latency ends when
-        // the batch holding its LAST slot returns, not when the whole
-        // drain does — otherwise p50/p99 collapse to the burst wall time
-        let mut batch_done: Vec<Instant> = Vec::with_capacity(slots.len() / b + 1);
-        let mut batch: Vec<u32> = Vec::with_capacity(b);
-        let mut i = 0;
-        while i < slots.len() {
-            let end = (i + b).min(slots.len());
-            batch.clear();
-            batch.extend_from_slice(&slots[i..end]);
-            let real = end - i;
-            while batch.len() < b {
-                batch.push(pad);
+        let n_batches = (slots.len() + b - 1) / b;
+        let padded = n_batches * b - slots.len();
+        // padding mirrors infer_nodes: the flush's FIRST queued node pads
+        // the tail, so drain == one-shot inference bitwise.  Padding the
+        // slot vector itself makes every batch a plain `chunks(b)` slice —
+        // no per-batch node vectors.
+        slots.resize(n_batches * b, slots[0]);
+
+        // ---- fan out across the session pool ----------------------------
+        let mut rows = vec![0.0f32; n_batches * b * c];
+        let mut stamps: Vec<Option<Instant>> = vec![None; n_batches];
+        {
+            let (core, sessions) = model.parts();
+            let workers = sessions.len().min(n_batches).max(1);
+            // worker w owns batches w, w+T, w+2T, … — deterministic, and
+            // each batch's row block is a disjoint &mut slice
+            let mut buckets: Vec<Vec<(usize, &[u32], &mut [f32])>> =
+                (0..workers).map(|_| Vec::new()).collect();
+            for (bi, (nodes, chunk)) in
+                slots.chunks(b).zip(rows.chunks_mut(b * c)).enumerate()
+            {
+                buckets[bi % workers].push((bi, nodes, chunk));
             }
-            // forward_batch rewrites the serving session in place and hands
-            // back a view of its output buffer — no per-batch copies beyond
-            // the result scatter below
-            let out = model.forward_batch(rt, &batch)?;
-            rows[i * c..end * c].copy_from_slice(&out[..real * c]);
-            batch_done.push(Instant::now());
-            self.batches_run += 1;
-            self.padded_rows += (b - real) as u64;
-            i = end;
+            let mut states: Vec<(&mut crate::serve::model::ServeSession, Vec<_>)> =
+                sessions.iter_mut().take(workers).zip(buckets).collect();
+            // split the kernel thread budget across the pool: without the
+            // cap, every worker's matmul/sketch kernels would each spawn
+            // max_threads() scoped threads — N-fold oversubscription.  The
+            // budget is a pure scheduling hint (kernels are deterministic
+            // across thread counts), so answers are unchanged.
+            let inner = (par::max_threads() + workers - 1) / workers;
+            let results = par::scope_map(&mut states, |_w, state| {
+                par::with_thread_budget(inner, || {
+                    let mut done: Vec<(usize, Instant)> =
+                        Vec::with_capacity(state.1.len());
+                    for (bi, nodes, out) in state.1.drain(..) {
+                        core.run_batch(&mut *state.0, nodes, out)?;
+                        // completion stamp per micro-batch: a request's
+                        // latency ends when the batch holding its LAST slot
+                        // returns, not when the whole flush does — otherwise
+                        // p50/p99 collapse to the burst wall time
+                        done.push((bi, Instant::now()));
+                    }
+                    Ok::<_, anyhow::Error>(done)
+                })
+            });
+            for r in results {
+                for (bi, t) in r? {
+                    stamps[bi] = Some(t);
+                }
+            }
         }
-        let mut served = Vec::with_capacity(pending.len());
+        let spec = &model.core.art.spec;
+        rt.record_external(
+            n_batches as u64,
+            n_batches as u64 * spec.input_bytes(),
+            n_batches as u64 * spec.output_bytes(),
+        );
+
+        // ---- accounting -------------------------------------------------
+        self.stats.batches_run += n_batches as u64;
+        self.stats.full_batches += (n_batches - usize::from(padded > 0)) as u64;
+        self.stats.padded_rows += padded as u64;
+        self.stats.last_flush_padded_rows = padded as u64;
+        if padded > 0 {
+            if deadline_tail {
+                self.stats.tail_deadline_flushes += 1;
+            } else if force_tail {
+                self.stats.tail_forced_flushes += 1;
+            }
+        }
+
+        // ---- merge in submit order --------------------------------------
+        let mut served = Vec::with_capacity(taken.len());
         let mut s = 0usize;
-        for (id, req, t0) in pending {
+        for (id, req, t0) in taken {
             let (answer, last_slot) = match req {
                 Request::Node(_) => {
                     let a = Answer::Scores(rows[s * c..(s + 1) * c].to_vec());
@@ -115,7 +294,7 @@ impl MicroBatcher {
                     (Answer::Link(eu.iter().zip(ev).map(|(x, y)| x * y).sum()), s - 1)
                 }
             };
-            let done = batch_done[last_slot / b];
+            let done = stamps[last_slot / b].expect("batch executed");
             served.push(Served { id, answer, latency_s: (done - t0).as_secs_f64() });
         }
         Ok(served)

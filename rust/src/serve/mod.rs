@@ -1,32 +1,42 @@
-//! `serve` — the micro-batched inference-serving subsystem (the repo's
-//! first end-to-end read path).
+//! `serve` — the micro-batched, **concurrent** inference-serving
+//! subsystem (the repo's end-to-end read path).
 //!
 //! The paper's core inference claim is that VQ compresses all out-of-batch
 //! context into a small codebook, so answering a query never touches the
-//! full graph.  This module realizes that as four pieces:
+//! full graph.  This module realizes that as a shared-nothing-but-the-plan
+//! runtime:
 //!
 //! - [`cache::EmbeddingCache`] — per-layer codeword assignments for ALL
-//!   nodes plus raw codebooks, frozen at load time (n × L assignment words
-//!   + codebooks resident; nothing else);
-//! - [`model::ServingModel`] — an immutable model (params + cache) bound
-//!   to the forward-only `vq_serve_*` artifact, built by freezing a
-//!   trainer or loading a `checkpoint::save_serving` artifact;
-//! - [`engine::MicroBatcher`] — the request queue that coalesces queries
-//!   into fixed-size micro-batches (padding the tail) and scatters results
-//!   back per request;
+//!   servable nodes plus raw codebooks and whitening stats, frozen at load
+//!   time; read-only on the serve path, appended to only by admission;
+//! - [`model::ServingModel`] — a shared immutable core (params + cache +
+//!   compiled plan) plus a pool of per-worker sessions
+//!   (`set_threads(N)`), built by freezing a trainer or loading a
+//!   `checkpoint::save_serving` ("VQS2") artifact;
+//! - [`engine::MicroBatcher`] — the request queue: `drain` cuts
+//!   everything (tail padded), `flush` is deadline-driven (partial tails
+//!   wait for newer arrivals until a request's deadline expires); either
+//!   way the batches fan out across the pool, bit-identical to the serial
+//!   schedule for any worker count;
+//! - [`admit::AdmittedNodes`] — inductive-node admission: unseen nodes
+//!   (features + arcs into known nodes) are assigned codewords against
+//!   the frozen codebooks and become servable without retraining;
 //! - [`report::LatencyReport`] — p50/p99/qps accounting for the CLI and
 //!   the bench harness.
 //!
-//! Driven by `vq-gnn serve --dataset D --model M --requests FILE`.
+//! Driven by `vq-gnn serve --dataset D --model M --requests FILE
+//! [--threads N] [--deadline-ms D]`.
 
+pub mod admit;
 pub mod cache;
 pub mod engine;
 pub mod model;
 pub mod report;
 
+pub use admit::AdmittedNodes;
 pub use cache::EmbeddingCache;
-pub use engine::{MicroBatcher, Served};
-pub use model::ServingModel;
+pub use engine::{EngineStats, MicroBatcher, Served};
+pub use model::{ServingModel, WorkerStats};
 pub use report::LatencyReport;
 
 use anyhow::{bail, Result};

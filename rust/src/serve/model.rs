@@ -1,9 +1,29 @@
-//! An immutable, frozen model for the read path.  Built either by freezing
-//! a live `VqTrainer` (training process hands off to serving) or by loading
-//! a serving artifact exported by `coordinator::checkpoint::save_serving`
-//! (inference-only process).  Executes the forward-only `vq_serve_*`
-//! artifact on whatever backend the `Runtime` selected — no loss head, no
-//! gradient buffers, no residual outputs.
+//! The serving model, split along the read/write axis the concurrent
+//! runtime needs:
+//!
+//! - [`ServeCore`] — the **shared, immutable** half: frozen parameters,
+//!   the codebook-backed [`EmbeddingCache`], the compiled serve artifact,
+//!   and the input template with every constant slot (weights, codebooks)
+//!   filled exactly once.  Everything here is read-only during a flush, so
+//!   one core serves any number of workers.
+//! - [`ServeSession`] — the **per-worker, mutable** half: a clone of the
+//!   input template whose dynamic slots (xb + sketches) are rewritten in
+//!   place per micro-batch, persistent output tensors, a sketch scratch,
+//!   and a detached [`ExecSession`] owning the executor's step arena.
+//! - The pool: `ServingModel` owns N sessions (`set_threads`); the
+//!   engine's `flush` fans micro-batches across them via `util::par`, each
+//!   worker driving `Artifact::run_session` against the shared core —
+//!   bit-identical to the serial path for any worker count, because every
+//!   batch's computation is a pure function of (core, batch).
+//!
+//! The single writer is the **admission path**: `admit` describes an
+//! unseen node (features + arcs into known nodes), bootstraps its
+//! per-layer input features with one forward through the serve artifact,
+//! assigns it to the frozen codebooks' nearest codewords
+//! (`LayerCache::assign_features` — the same whitened FINDNEAREST the
+//! trainer's inductive bootstrap runs), and appends it to the per-layer
+//! node→codeword tables.  Admissions never overlap a flush (`&mut self`),
+//! which is exactly the single-writer discipline the shared cache needs.
 
 use std::path::Path;
 use std::rc::Rc;
@@ -11,33 +31,66 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::checkpoint;
-use crate::coordinator::gather_features_into;
 use crate::coordinator::vq_trainer::VqTrainer;
 use crate::datasets::Dataset;
 use crate::graph::Conv;
 use crate::runtime::manifest::Manifest;
-use crate::runtime::{Artifact, Runtime};
+use crate::runtime::{Artifact, ExecSession, Runtime};
+use crate::serve::admit::AdmissionQueue;
 use crate::serve::cache::EmbeddingCache;
 use crate::util::tensor::{self, Tensor};
 use crate::vq::sketch::SketchScratch;
 
-pub struct ServingModel {
+/// The shared immutable half of a serving model (see module docs).
+pub struct ServeCore {
     pub art: Rc<Artifact>,
     pub ds: Rc<Dataset>,
     pub model_name: String,
     pub params: Vec<Tensor>,
     pub cache: EmbeddingCache,
-    scratch: SketchScratch,
-    /// Prebuilt input list in spec order — the serving session.  Constant
-    /// slots (params, codebooks) are filled ONCE here; the batch-dependent
-    /// slots are rewritten IN PLACE per micro-batch — the read path never
-    /// re-copies frozen weights and never allocates for a steady-state
-    /// micro-batch (the `serve_alloc_bytes` bench key measures this).
-    inputs: Vec<Tensor>,
-    /// Output tensors rewritten in place by `Runtime::execute_into`.
-    outputs: Vec<Tensor>,
+    /// Prebuilt input list in spec order: constant slots (params,
+    /// codebooks) filled ONCE, dynamic slots zeroed.  Cloned per session.
+    template: Vec<Tensor>,
     /// Every batch-dependent slot, grouped per builder pass.
     dynamic: Vec<DynSlot>,
+    conv: Option<Conv>,
+}
+
+/// One worker's mutable serving state: template clone + outputs + scratch
+/// + detached executor session.  Dynamic input slots are rewritten IN
+/// PLACE per micro-batch — the read path never re-copies frozen weights
+/// and never allocates for a steady-state micro-batch (the
+/// `serve_alloc_bytes` bench key measures this on the 1-session pool).
+pub struct ServeSession {
+    pub(crate) inputs: Vec<Tensor>,
+    pub(crate) outputs: Vec<Tensor>,
+    pub(crate) scratch: SketchScratch,
+    pub(crate) exec: ExecSession,
+    /// Micro-batches this session executed (per-worker qps reporting).
+    pub batches: u64,
+    /// Wall time this session spent filling + executing.
+    pub busy_s: f64,
+}
+
+/// Per-worker throughput summary (`ServingModel::worker_stats`).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerStats {
+    pub batches: u64,
+    pub rows: u64,
+    pub busy_s: f64,
+}
+
+/// A borrow-split view of the shared core — every field `Sync`, the whole
+/// struct `Copy` — handed to pool workers alongside their `&mut` session.
+/// (The core itself holds `Rc`s, which must not cross threads; this view
+/// carries plain references instead.)
+#[derive(Clone, Copy)]
+pub(crate) struct CoreRef<'a> {
+    pub art: &'a Artifact,
+    pub ds: &'a Dataset,
+    pub cache: &'a EmbeddingCache,
+    dynamic: &'a [DynSlot],
+    conv: Option<Conv>,
 }
 
 /// Batch-dependent input slots of the serve artifact, grouped so each
@@ -60,7 +113,7 @@ fn serve_artifact_name(ds: &str, model: &str) -> String {
 
 /// Fill the constant input slots (params + raw codebooks) and index the
 /// dynamic ones.  Placeholder zeros keep every slot shape/dtype-correct;
-/// each dynamic slot is rewritten in place on every `forward_batch`.
+/// each dynamic slot is rewritten in place on every micro-batch.
 fn build_input_template(
     spec: &crate::runtime::manifest::ArtifactSpec,
     params: &[Tensor],
@@ -133,10 +186,154 @@ fn build_input_template(
     Ok((inputs, dynamic))
 }
 
+impl ServeCore {
+    fn conv_of(model_name: &str) -> Option<Conv> {
+        match model_name {
+            "gcn" => Some(Conv::GcnSym),
+            "sage" => Some(Conv::SageMean),
+            _ => None, // learnable convolutions build count sketches instead
+        }
+    }
+
+    /// Detach one fresh worker session from this core.  The session clones
+    /// the input template, so each worker carries its own copy of the
+    /// constant slots (params + codebooks) — `Tensor` owns its storage, so
+    /// true sharing needs Arc-backed tensors (ROADMAP).  Per-worker cost
+    /// is the template bytes; the cache's big tables (assignments,
+    /// admitted store) stay shared.
+    fn new_session(&self) -> ServeSession {
+        ServeSession {
+            inputs: self.template.clone(),
+            outputs: Vec::new(),
+            scratch: SketchScratch::new(self.cache.total_nodes()),
+            exec: self.art.new_session(),
+            batches: 0,
+            busy_s: 0.0,
+        }
+    }
+
+    pub(crate) fn view(&self) -> CoreRef<'_> {
+        CoreRef {
+            art: &self.art,
+            ds: &self.ds,
+            cache: &self.cache,
+            dynamic: &self.dynamic,
+            conv: self.conv,
+        }
+    }
+}
+
+impl CoreRef<'_> {
+    /// Validate a micro-batch against the compiled width and the servable
+    /// id space (frozen + admitted).  Request-controlled ids must never
+    /// panic the server.
+    pub(crate) fn check_batch(&self, batch: &[u32]) -> Result<()> {
+        let b = self.art.spec.b;
+        if batch.len() != b {
+            bail!("forward_batch wants exactly b={b} nodes, got {}", batch.len());
+        }
+        let total = self.cache.total_nodes();
+        if let Some(&bad) = batch.iter().find(|&&v| v as usize >= total) {
+            bail!(
+                "node id {bad} out of range (dataset '{}' serves {} ids: {} nodes + {} \
+                 admitted)",
+                self.ds.cfg.name,
+                total,
+                self.cache.admitted.base_n,
+                self.cache.admitted.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Rewrite a session's dynamic input slots in place for one batch.
+    pub(crate) fn fill_inputs(&self, sess: &mut ServeSession, batch: &[u32]) {
+        let (ds, cache) = (self.ds, self.cache);
+        sess.scratch.ensure(cache.total_nodes());
+        for slot in self.dynamic {
+            match *slot {
+                DynSlot::Xb(idx) => cache.gather_features_into(
+                    &ds.features,
+                    ds.cfg.f_in_pad,
+                    batch,
+                    &mut sess.inputs[idx].f,
+                ),
+                DynSlot::Fixed { l, c_in, c_out } => {
+                    let (ti, to) = tensor::mut2(&mut sess.inputs, c_in, c_out);
+                    cache.layers[l].build_fixed_fwd_into(
+                        &ds.graph,
+                        &cache.admitted,
+                        self.conv.expect("fixed-conv serve artifact without a fixed conv"),
+                        batch,
+                        &mut sess.scratch,
+                        &mut ti.f,
+                        &mut to.f,
+                    );
+                }
+                DynSlot::Learnable { l, mask_in, m_out } => {
+                    let (tm, to) = tensor::mut2(&mut sess.inputs, mask_in, m_out);
+                    cache.layers[l].build_learnable_fwd_into(
+                        &ds.graph,
+                        &cache.admitted,
+                        batch,
+                        &mut sess.scratch,
+                        &mut tm.f,
+                        &mut to.f,
+                    );
+                }
+                DynSlot::CntOut { l, idx } => cache.layers[l].build_cnt_fwd_into(
+                    batch,
+                    &mut sess.scratch,
+                    &mut sess.inputs[idx].f,
+                ),
+            }
+        }
+    }
+
+    /// One forward-only micro-batch through a worker session, result left
+    /// in `sess.outputs[0]` — THE per-batch sequence (validate → fill →
+    /// execute → per-worker counters), shared by the fan-out workers and
+    /// the single-session `forward_batch` so the two paths cannot drift.
+    /// Takes `&self` on the shared core and touches only the worker's
+    /// session, so N workers run this concurrently
+    /// (`util::par::scope_map`).  Runtime accounting is the caller's job
+    /// (`Runtime::record_external`).
+    pub(crate) fn exec_batch(&self, sess: &mut ServeSession, batch: &[u32]) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        self.check_batch(batch)?;
+        self.fill_inputs(sess, batch);
+        self.art.run_session(&sess.inputs, &mut sess.outputs, &mut sess.exec)?;
+        sess.batches += 1;
+        sess.busy_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// [`CoreRef::exec_batch`] + copy the result rows into `out`
+    /// (`b × out_dim`) — the engine's fan-out form.
+    pub(crate) fn run_batch(
+        &self,
+        sess: &mut ServeSession,
+        batch: &[u32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.exec_batch(sess, batch)?;
+        out.copy_from_slice(&sess.outputs[0].f);
+        Ok(())
+    }
+}
+
+pub struct ServingModel {
+    pub core: ServeCore,
+    pool: Vec<ServeSession>,
+    queue: AdmissionQueue,
+}
+
 impl ServingModel {
-    /// Freeze a trained `VqTrainer` into an immutable serving model: clone
-    /// the parameters, snapshot the VQ state into the embedding cache, and
-    /// compile the forward-only serve artifact.
+    /// Freeze a trained `VqTrainer` into an immutable serving core (clone
+    /// the parameters, snapshot the VQ state — assignments, codebooks,
+    /// whitening stats — into the embedding cache, compile the forward-only
+    /// serve artifact) with a 1-session pool; widen with
+    /// [`ServingModel::set_threads`].
     pub fn freeze(rt: &mut Runtime, man: &Manifest, tr: &VqTrainer) -> Result<ServingModel> {
         let name = serve_artifact_name(&tr.ds.cfg.name, &tr.model_name);
         let art = rt.load(man, &name)?;
@@ -183,33 +380,38 @@ impl ServingModel {
         }
         let params = tr.params.clone();
         let cache = EmbeddingCache::from_vq(&tr.vq);
-        let (inputs, dynamic) = build_input_template(spec, &params, &cache)?;
-        Ok(ServingModel {
-            art,
+        let (template, dynamic) = build_input_template(spec, &params, &cache)?;
+        let core = ServeCore {
+            conv: ServeCore::conv_of(&tr.model_name),
             ds: tr.ds.clone(),
             model_name: tr.model_name.clone(),
             params,
             cache,
-            scratch: SketchScratch::new(tr.ds.n()),
-            inputs,
-            outputs: Vec::new(),
+            template,
             dynamic,
-        })
+            art,
+        };
+        let pool = vec![core.new_session()];
+        Ok(ServingModel { core, pool, queue: AdmissionQueue::default() })
     }
 
-    /// Export this model as a serving artifact (loadable by [`Self::load`]
-    /// in a process that never trained anything).
+    /// Export this model as a "VQS2" serving artifact — admitted-node
+    /// tables included, so cold nodes stay servable across processes
+    /// (loadable by [`Self::load`] in a process that never trained
+    /// anything).
     pub fn save(&self, path: &Path) -> Result<()> {
         checkpoint::save_serving(
             path,
-            &self.art.spec.name,
-            &self.params,
-            &self.cache.to_serving_layers(),
+            &self.core.art.spec.name,
+            &self.core.params,
+            &self.core.cache.to_serving_layers(),
+            &self.core.cache.to_serving_admitted(),
         )
     }
 
-    /// Load a serving artifact for `(dataset, model)` and validate every
-    /// payload shape against the manifest's serve spec.
+    /// Load a serving artifact ("VQS2", or legacy "VQS1") for
+    /// `(dataset, model)` and validate every payload shape against the
+    /// manifest's serve spec.
     pub fn load(
         rt: &mut Runtime,
         man: &Manifest,
@@ -219,7 +421,7 @@ impl ServingModel {
     ) -> Result<ServingModel> {
         let name = serve_artifact_name(&ds.cfg.name, model_name);
         let art = rt.load(man, &name)?;
-        let (params, layers) = checkpoint::load_serving(path, &name)?;
+        let (params, layers, admitted) = checkpoint::load_serving(path, &name)?;
         let spec = &art.spec;
         let pspecs: Vec<_> =
             spec.inputs.iter().filter(|t| t.name.starts_with("param.")).collect();
@@ -243,96 +445,254 @@ impl ServingModel {
                 );
             }
         }
-        let cache = EmbeddingCache::from_serving_layers(&spec.plan, layers);
-        let (inputs, dynamic) = build_input_template(spec, &params, &cache)?;
-        let scratch = SketchScratch::new(ds.n());
-        Ok(ServingModel {
-            art,
+        if admitted.count() > 0 && admitted.f_pad != ds.cfg.f_in_pad {
+            bail!(
+                "serving admitted features are {}-wide, dataset '{}' pads to {}",
+                admitted.f_pad,
+                ds.cfg.name,
+                ds.cfg.f_in_pad
+            );
+        }
+        let cache = EmbeddingCache::from_serving_layers(&spec.plan, layers, admitted);
+        let (template, dynamic) = build_input_template(spec, &params, &cache)?;
+        let core = ServeCore {
+            conv: ServeCore::conv_of(model_name),
             ds,
             model_name: model_name.to_string(),
             params,
             cache,
-            scratch,
-            inputs,
-            outputs: Vec::new(),
+            template,
             dynamic,
-        })
+            art,
+        };
+        let pool = vec![core.new_session()];
+        Ok(ServingModel { core, pool, queue: AdmissionQueue::default() })
     }
 
     /// Fixed micro-batch width of the compiled serve artifact.
     pub fn batch_size(&self) -> usize {
-        self.art.spec.b
+        self.core.art.spec.b
     }
 
     /// Output row width: class scores for node tasks, embedding dim for
     /// link tasks.
     pub fn out_dim(&self) -> usize {
-        self.art.spec.outputs[0].shape[1]
+        self.core.art.spec.outputs[0].shape[1]
     }
 
-    fn conv_opt(&self) -> Option<Conv> {
-        match self.model_name.as_str() {
-            "gcn" => Some(Conv::GcnSym),
-            "sage" => Some(Conv::SageMean),
-            _ => None, // learnable convolutions build count sketches instead
+    /// The frozen embedding cache (assignments + codebooks + admitted).
+    pub fn cache(&self) -> &EmbeddingCache {
+        &self.core.cache
+    }
+
+    /// Total servable ids: dataset nodes + admitted nodes.
+    pub fn total_nodes(&self) -> usize {
+        self.core.cache.total_nodes()
+    }
+
+    /// Worker-pool width.
+    pub fn threads(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Resize the session pool to `n` workers (≥ 1).  Sessions are
+    /// per-worker mutable state only — resizing never touches the shared
+    /// core, so answers are bit-identical across any pool width.
+    pub fn set_threads(&mut self, n: usize) {
+        let n = n.max(1);
+        while self.pool.len() > n {
+            self.pool.pop();
+        }
+        while self.pool.len() < n {
+            self.pool.push(self.core.new_session());
         }
     }
 
-    /// One forward-only micro-batch: `batch` must be exactly `batch_size()`
-    /// node ids (the engine pads); returns row-major `(b, out_dim)` scores
-    /// borrowed from the session's output buffer (valid until the next
-    /// call).  Only the batch-dependent input slots are rewritten — in
-    /// place — so a steady-state micro-batch performs no heap allocation:
-    /// the frozen weights and codebooks ride the prebuilt template
-    /// untouched, and the executor's step arena owns every intermediate.
-    pub fn forward_batch(&mut self, rt: &mut Runtime, batch: &[u32]) -> Result<&[f32]> {
-        let art = self.art.clone();
-        if batch.len() != art.spec.b {
-            bail!("forward_batch wants exactly b={} nodes, got {}", art.spec.b, batch.len());
+    /// Per-worker throughput counters (batches, padded rows included).
+    pub fn worker_stats(&self) -> Vec<WorkerStats> {
+        let b = self.batch_size() as u64;
+        self.pool
+            .iter()
+            .map(|s| WorkerStats { batches: s.batches, rows: s.batches * b, busy_s: s.busy_s })
+            .collect()
+    }
+
+    /// Borrow-split the model into the `Sync` core view + the mutable
+    /// worker pool (the engine's fan-out handle).
+    pub(crate) fn parts(&mut self) -> (CoreRef<'_>, &mut [ServeSession]) {
+        (self.core.view(), &mut self.pool)
+    }
+
+    /// One forward-only micro-batch on worker session 0: `batch` must be
+    /// exactly `batch_size()` node ids (the engine pads); returns row-major
+    /// `(b, out_dim)` scores borrowed from the session's output buffer
+    /// (valid until the next call).  Only the batch-dependent input slots
+    /// are rewritten — in place — so a steady-state micro-batch performs
+    /// no heap allocation: the frozen weights and codebooks ride the
+    /// prebuilt template untouched, and the session's step arena owns
+    /// every intermediate.
+    pub fn forward_batch(&mut self, rt: &Runtime, batch: &[u32]) -> Result<&[f32]> {
+        let core = self.core.view();
+        core.exec_batch(&mut self.pool[0], batch)?;
+        let spec = &self.core.art.spec;
+        rt.record_external(1, spec.input_bytes(), spec.output_bytes());
+        Ok(&self.pool[0].outputs[0].f)
+    }
+
+    /// Admit one unseen node NOW (see module docs): `features` is its raw
+    /// feature row (`f_in` or already-padded `f_in_pad` wide), `neighbors`
+    /// its in-arcs from already-servable ids.  Returns the node's new id.
+    /// This is the single-writer path — it takes `&mut self`, so it can
+    /// never interleave with a pooled flush.  Refused while admissions are
+    /// queued: a direct admit would steal the first queued node's promised
+    /// id (run [`Self::admit_queued`] first).
+    pub fn admit(&mut self, rt: &Runtime, features: &[f32], neighbors: &[u32]) -> Result<u32> {
+        if !self.queue.is_empty() {
+            bail!(
+                "admit: {} queued admission(s) hold the next ids — apply admit_queued() \
+                 before admitting directly",
+                self.queue.len()
+            );
         }
-        let ds = self.ds.clone();
-        // request-controlled ids must never panic the server
-        if let Some(&bad) = batch.iter().find(|&&v| v as usize >= ds.n()) {
-            bail!("node id {bad} out of range (dataset '{}' has n={})", ds.cfg.name, ds.n());
+        self.admit_now(rt, features, neighbors)
+    }
+
+    /// Feature-row validation shared by the direct and queued admission
+    /// paths — cheaply checkable up front, so a malformed request is
+    /// refused at enqueue time instead of poisoning the queue at apply
+    /// time.
+    fn check_admit_features(&self, features: &[f32]) -> Result<()> {
+        let f_pad = self.core.ds.cfg.f_in_pad;
+        let f_raw = self.core.ds.cfg.f_in;
+        if features.len() != f_raw && features.len() != f_pad {
+            bail!(
+                "admit: got {} features, dataset '{}' wants {f_raw} (or {f_pad} padded)",
+                features.len(),
+                self.core.ds.cfg.name
+            );
         }
-        let conv = self.conv_opt();
-        for slot in &self.dynamic {
-            match *slot {
-                DynSlot::Xb(idx) => gather_features_into(
-                    &ds.features,
-                    ds.cfg.f_in_pad,
-                    batch,
-                    &mut self.inputs[idx].f,
-                ),
-                DynSlot::Fixed { l, c_in, c_out } => {
-                    let (ti, to) = tensor::mut2(&mut self.inputs, c_in, c_out);
-                    self.cache.layers[l].build_fixed_fwd_into(
-                        &ds.graph,
-                        conv.expect("fixed-conv serve artifact without a fixed conv"),
-                        batch,
-                        &mut self.scratch,
-                        &mut ti.f,
-                        &mut to.f,
-                    );
+        if let Some(bad) = features.iter().find(|x| !x.is_finite()) {
+            bail!("admit: non-finite feature {bad}");
+        }
+        Ok(())
+    }
+
+    fn admit_now(&mut self, rt: &Runtime, features: &[f32], neighbors: &[u32]) -> Result<u32> {
+        self.check_admit_features(features)?;
+        let f_pad = self.core.ds.cfg.f_in_pad;
+        let total = self.core.cache.total_nodes();
+        if let Some(&bad) = neighbors.iter().find(|&&u| u as usize >= total) {
+            bail!("admit: neighbor {bad} is not a servable id (total {total})");
+        }
+        let mut padded = vec![0.0f32; f_pad];
+        padded[..features.len()].copy_from_slice(features);
+
+        // capture the plan shape before taking &mut borrows
+        let spec = &self.core.art.spec;
+        let b = spec.b;
+        let f_ins: Vec<usize> = spec.plan.iter().map(|p| p.f_in).collect();
+        let n_brs: Vec<usize> = spec.plan.iter().map(|p| p.n_br).collect();
+
+        // 1. record features + arcs — the node becomes visible to the
+        //    sketch builders (it is IN the bootstrap batch, so its own
+        //    still-missing assignment is never consulted)
+        let id = self.core.cache.admitted.push(&padded, neighbors);
+
+        // 2. bootstrap forward: one serve step over [id; b] leaves the
+        //    node's per-layer input features in the session's step arena
+        let mut feats: Vec<Vec<f32>> = Vec::with_capacity(f_ins.len());
+        let boot: Result<()> = {
+            let core = self.core.view();
+            let sess = &mut self.pool[0];
+            let batch = vec![id; b];
+            core.exec_batch(&mut *sess, &batch).and_then(|()| {
+                for (l, &fl) in f_ins.iter().enumerate() {
+                    match sess.exec.layer_xfeat(l) {
+                        Some(x) => feats.push(x[..fl].to_vec()),
+                        None => bail!(
+                            "admission needs the native backend's layer-{l} features \
+                             (stateless sessions expose none)"
+                        ),
+                    }
                 }
-                DynSlot::Learnable { l, mask_in, m_out } => {
-                    let (tm, to) = tensor::mut2(&mut self.inputs, mask_in, m_out);
-                    self.cache.layers[l].build_learnable_fwd_into(
-                        &ds.graph,
-                        batch,
-                        &mut self.scratch,
-                        &mut tm.f,
-                        &mut to.f,
-                    );
+                Ok(())
+            })
+        };
+        if let Err(e) = boot {
+            self.core.cache.admitted.pop(); // roll the half-admitted node back
+            return Err(e);
+        }
+        // the bootstrap forward is a real serve-artifact step — keep the
+        // executions/bytes meters honest
+        let spec = &self.core.art.spec;
+        rt.record_external(1, spec.input_bytes(), spec.output_bytes());
+
+        // 3. FINDNEAREST against the frozen codebooks, then append to the
+        //    per-layer tables (all-or-nothing: assignment is infallible)
+        for (l, row) in feats.iter().enumerate() {
+            let mut asg = vec![0u32; n_brs[l]];
+            self.core.cache.layers[l].assign_features(row, &mut asg);
+            self.core.cache.layers[l].record_admitted(&asg);
+        }
+        Ok(id)
+    }
+
+    /// Enqueue an admission without applying it.  The id is assigned
+    /// immediately (dense FIFO), so later requests may cite it as a
+    /// neighbor; it becomes servable once [`Self::admit_queued`] runs.
+    /// Everything cheaply checkable is validated HERE — a malformed
+    /// request is refused before it can sit in front of valid ones.
+    pub fn queue_admission(&mut self, features: Vec<f32>, neighbors: Vec<u32>) -> Result<u32> {
+        self.check_admit_features(&features)?;
+        let provisional = (self.core.cache.total_nodes() + self.queue.len()) as u32;
+        if let Some(&bad) = neighbors.iter().find(|&&u| u >= provisional) {
+            bail!("queue_admission: neighbor {bad} is not an earlier id (next is {provisional})");
+        }
+        self.queue.push(features, neighbors);
+        Ok(provisional)
+    }
+
+    /// Queued admissions not yet applied.
+    pub fn queued_admissions(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Apply every queued admission FIFO (the single writer, between
+    /// flushes); returns the admitted ids.  On a failed request the
+    /// earlier ones stay admitted, and the failing request PLUS everything
+    /// after it go back on the queue — their promised dense ids stay
+    /// reserved (nothing else can claim them while the queue is
+    /// non-empty), so a caller can drop/fix the bad request and retry
+    /// without invalidating ids already handed out.
+    pub fn admit_queued(&mut self, rt: &Runtime) -> Result<Vec<u32>> {
+        let reqs = self.queue.take();
+        let mut ids = Vec::with_capacity(reqs.len());
+        let mut failed: Option<(usize, anyhow::Error)> = None;
+        for (i, (features, neighbors)) in reqs.into_iter().enumerate() {
+            if failed.is_none() {
+                match self.admit_now(rt, &features, &neighbors) {
+                    Ok(id) => {
+                        ids.push(id);
+                        continue;
+                    }
+                    Err(e) => failed = Some((i, e)),
                 }
-                DynSlot::CntOut { l, idx } => self.cache.layers[l].build_cnt_fwd_into(
-                    batch,
-                    &mut self.scratch,
-                    &mut self.inputs[idx].f,
-                ),
             }
+            // the failed request and everything behind it keep their slots
+            self.queue.push(features, neighbors);
         }
-        rt.execute_into(&art, &self.inputs, &mut self.outputs)?;
-        Ok(&self.outputs[0].f)
+        if let Some((i, e)) = failed {
+            return Err(e.context(format!(
+                "queued admission #{i} (it and {} later request(s) remain queued)",
+                self.queue.len() - 1
+            )));
+        }
+        Ok(ids)
+    }
+
+    /// Drop every queued-but-unapplied admission (after a failed
+    /// [`Self::admit_queued`], this releases the reserved ids).
+    pub fn clear_queued(&mut self) {
+        self.queue.take();
     }
 }

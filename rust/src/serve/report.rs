@@ -1,6 +1,27 @@
 //! Latency/throughput accounting for a serving run: per-request latency
-//! percentiles + queries-per-second, rendered for the CLI and emitted by
-//! the bench harness into `BENCH_hot_paths.json`.
+//! percentiles + queries-per-second (plus the per-worker breakdown of a
+//! pooled run), rendered for the CLI and emitted by the bench harness
+//! into `BENCH_hot_paths.json`.
+
+use crate::serve::model::WorkerStats;
+
+/// One line per pool worker: batches, rows, and that worker's effective
+/// qps over the run's wall time (rows it produced / total wall — the
+/// capacity split, not the busy-time rate, so the lines sum to ~the run
+/// qps in rows).
+pub fn format_workers(stats: &[WorkerStats], wall_s: f64) -> String {
+    let mut out = String::new();
+    for (w, s) in stats.iter().enumerate() {
+        out.push_str(&format!(
+            "  worker {w}: {} batches, {} rows, {:.0} rows/s (busy {:.3}s)\n",
+            s.batches,
+            s.rows,
+            s.rows as f64 / wall_s.max(1e-12),
+            s.busy_s
+        ));
+    }
+    out
+}
 
 /// Summary of one serving run.
 #[derive(Debug, Clone)]

@@ -3,14 +3,42 @@
 //! chunks assigned round-robin to workers, so the partitioning — and with it
 //! every merge order downstream — is deterministic for a given machine.
 
-/// Worker count: physical parallelism, overridable via `VQ_GNN_THREADS`.
+use std::cell::Cell;
+
+thread_local! {
+    /// Per-thread cap on nested kernel parallelism (0 = uncapped).  Set by
+    /// [`with_thread_budget`] on pool-worker threads so N serving workers
+    /// don't each spawn `max_threads()` kernel threads — N × cores
+    /// runnable threads oversubscribes the machine N-fold.
+    static THREAD_BUDGET: Cell<usize> = Cell::new(0);
+}
+
+/// Run `f` with this thread's kernel-parallelism budget capped at `cap`
+/// (restored afterwards).  Purely a scheduling hint: every kernel above is
+/// deterministic across thread counts (disjoint chunk writes, in-order
+/// partial merges), so the budget never changes results — only how many
+/// scoped threads the nested kernels spawn.
+pub fn with_thread_budget<R>(cap: usize, f: impl FnOnce() -> R) -> R {
+    let prev = THREAD_BUDGET.with(|b| b.replace(cap.max(1)));
+    let out = f();
+    THREAD_BUDGET.with(|b| b.set(prev));
+    out
+}
+
+/// Worker count: physical parallelism, overridable via `VQ_GNN_THREADS`
+/// and capped by the calling thread's [`with_thread_budget`] scope.
 pub fn max_threads() -> usize {
-    if let Ok(s) = std::env::var("VQ_GNN_THREADS") {
-        if let Ok(n) = s.parse::<usize>() {
-            return n.max(1);
-        }
+    let n = if let Ok(s) = std::env::var("VQ_GNN_THREADS") {
+        s.parse::<usize>().map(|n| n.max(1)).unwrap_or_else(|_| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    match THREAD_BUDGET.with(Cell::get) {
+        0 => n,
+        cap => n.min(cap),
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// Run `f(chunk_index, chunk)` over contiguous chunks of `data`, in
@@ -63,6 +91,37 @@ where
         let ha = s.spawn(fa);
         let b = fb();
         (ha.join().expect("par: prep worker panicked"), b)
+    })
+}
+
+/// One scoped worker per element of `states`, each running
+/// `f(worker_index, &mut state)` concurrently; results come back **in
+/// worker order**.  This is the session-pool primitive behind concurrent
+/// serving: each worker owns one mutable session (disjoint `&mut`, so the
+/// borrow checker enforces that workers share only `Sync` state), and the
+/// deterministic result order keeps every merge downstream identical to
+/// the serial schedule.  A single state runs inline — no thread spawn, so
+/// a 1-worker pool is byte-and-timing-comparable to the serial path.
+pub fn scope_map<S, R, F>(states: &mut [S], f: F) -> Vec<R>
+where
+    S: Send,
+    R: Send,
+    F: Fn(usize, &mut S) -> R + Sync,
+{
+    if states.len() <= 1 {
+        return states.iter_mut().enumerate().map(|(i, st)| f(i, st)).collect();
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = states
+            .iter_mut()
+            .enumerate()
+            .map(|(i, st)| s.spawn(move || f(i, st)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par: pool worker panicked"))
+            .collect()
     })
 }
 
@@ -152,6 +211,41 @@ mod tests {
         assert_eq!(left, 999 * 1000 / 2);
         assert_eq!(right, 7);
         assert_eq!(b, "main");
+    }
+
+    #[test]
+    fn thread_budget_caps_and_restores() {
+        let full = max_threads();
+        let inside = with_thread_budget(1, || {
+            assert_eq!(max_threads(), 1);
+            // nested scopes replace the cap for their extent, then restore
+            with_thread_budget(5, || assert_eq!(max_threads(), full.min(5)));
+            max_threads()
+        });
+        assert_eq!(inside, 1);
+        assert_eq!(max_threads(), full, "budget must not leak past the scope");
+        // budgets are per-thread: a worker under budget 1 doesn't cap others
+        with_thread_budget(1, || {
+            let (worker_sees, _) = join2(|| max_threads(), || ());
+            // the spawned worker has its own (uncapped) budget
+            assert_eq!(worker_sees, full);
+        });
+    }
+
+    #[test]
+    fn scope_map_orders_results_and_mutates_disjoint_states() {
+        let mut states: Vec<u64> = (0..5).collect();
+        let out = scope_map(&mut states, |i, st| {
+            *st += 100;
+            i as u64 * 10
+        });
+        assert_eq!(out, vec![0, 10, 20, 30, 40]);
+        assert_eq!(states, vec![100, 101, 102, 103, 104]);
+        // single-state pools run inline
+        let mut one = vec![7u64];
+        assert_eq!(scope_map(&mut one, |_, st| *st), vec![7]);
+        let mut none: Vec<u64> = vec![];
+        assert!(scope_map(&mut none, |_, _| 0u64).is_empty());
     }
 
     #[test]

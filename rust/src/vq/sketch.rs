@@ -25,6 +25,16 @@ impl SketchScratch {
         SketchScratch { pos: vec![-1; n] }
     }
 
+    /// Grow the position table to cover `n` nodes (no-op when it already
+    /// does).  The serving path calls this when inductively-admitted node
+    /// ids extend past the dataset's `n` — the only allocation admission
+    /// adds to an otherwise steady-state session, and only on growth.
+    pub fn ensure(&mut self, n: usize) {
+        if self.pos.len() < n {
+            self.pos.resize(n, -1);
+        }
+    }
+
     /// Mark a batch: `pos_of` then answers membership + position.  Public
     /// for the serving cache's forward-only sketch builders.
     pub fn mark(&mut self, batch: &[u32]) {

@@ -35,6 +35,45 @@ fn assert_outputs_eq(a: &[Tensor], b: &[Tensor], what: &str) {
     }
 }
 
+/// The shared-plan/per-session split (ISSUE 5): sessions detached from one
+/// executable are bit-identical to the executable's built-in path, both
+/// serially and when several sessions drive the SAME `&Executable` from
+/// concurrent `util::par` workers at once.
+#[test]
+fn detached_sessions_match_execute_serial_and_concurrent() {
+    let man = builtin();
+    for name in all_artifacts() {
+        let mut rng = Rng::new(0x5E55 ^ name.len() as u64);
+        let mut rt = Runtime::native();
+        let art = rt.load(&man, name).unwrap();
+        let inputs = golden_inputs(&man, name, &mut rng);
+        let want = rt.execute(&art, &inputs).unwrap();
+
+        // one detached session via the Runtime entry point
+        let mut sess = art.new_session();
+        let mut out = Vec::new();
+        rt.run_session(&art, &inputs, &mut out, &mut sess).unwrap();
+        assert_outputs_eq(&out, &want, &format!("{name} (detached session)"));
+        // reused session buffers stay bit-identical
+        rt.run_session(&art, &inputs, &mut out, &mut sess).unwrap();
+        assert_outputs_eq(&out, &want, &format!("{name} (reused session)"));
+
+        // four sessions over the SAME executable, concurrently
+        let artr: &vq_gnn::runtime::Artifact = &art;
+        let mut states: Vec<(vq_gnn::runtime::ExecSession, Vec<Tensor>)> =
+            (0..4).map(|_| (artr.new_session(), Vec::new())).collect();
+        let results = vq_gnn::util::par::scope_map(&mut states, |_w, state| {
+            artr.run_session(&inputs, &mut state.1, &mut state.0)
+        });
+        for r in results {
+            r.unwrap();
+        }
+        for (w, (_, out)) in states.iter().enumerate() {
+            assert_outputs_eq(out, &want, &format!("{name} (concurrent session {w})"));
+        }
+    }
+}
+
 /// Every artifact family × mode the native backend compiles, on the tiny
 /// hermetic config.
 fn all_artifacts() -> Vec<&'static str> {

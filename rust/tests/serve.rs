@@ -71,8 +71,11 @@ fn serve_batched_matches_one_shot_inference() {
         }
         let served = eng.drain(&mut rt, &mut sm).unwrap();
         assert_eq!(served.len(), queries.len());
-        assert_eq!(eng.batches_run as usize, (queries.len() + b - 1) / b);
-        assert_eq!(eng.padded_rows as usize, b - queries.len() % b);
+        assert_eq!(eng.stats.batches_run as usize, (queries.len() + b - 1) / b);
+        assert_eq!(eng.stats.padded_rows as usize, b - queries.len() % b);
+        assert_eq!(eng.stats.last_flush_padded_rows, eng.stats.padded_rows);
+        assert_eq!(eng.stats.tail_forced_flushes, 1, "drain forced the padded tail");
+        assert_eq!(eng.stats.tail_deadline_flushes, 0);
 
         let want = tr.infer_nodes(&mut rt, &queries).unwrap();
         for (i, s) in served.iter().enumerate() {
@@ -158,7 +161,7 @@ fn checkpoint_roundtrip_evaluate_bit_identical_all_backbones() {
         let sckpt = dir.join(format!("{model}.serve.bin"));
         sm.save(&sckpt).unwrap();
         let mut sm2 = ServingModel::load(&mut rt, &man, ds.clone(), model, &sckpt).unwrap();
-        assert_eq!(sm.cache.memory_bytes(), sm2.cache.memory_bytes());
+        assert_eq!(sm.cache().memory_bytes(), sm2.cache().memory_bytes());
 
         let queries = query_nodes(ds.n(), 100, 5); // 100 = 64 + 36 → padded tail
         let mut eng1 = MicroBatcher::new();
@@ -213,5 +216,5 @@ fn empty_drain_is_a_noop() {
     let mut eng = MicroBatcher::new();
     let served = eng.drain(&mut rt, &mut sm).unwrap();
     assert!(served.is_empty());
-    assert_eq!(eng.batches_run, 0);
+    assert_eq!(eng.stats.batches_run, 0);
 }
