@@ -138,13 +138,18 @@ fn write_report(report: BTreeMap<String, Json>) {
     println!("wrote {out_path}");
 }
 
-/// The serving read path: train briefly, freeze, then push a query burst
-/// through the micro-batching engine — single-threaded for the acceptance
-/// keys (`serve_qps`, `serve_p50_ms`, `serve_p99_ms` + a detail object),
-/// then the same burst across 2- and 4-worker session pools
-/// (`serve_concurrent_qps_t{2,4}`).
+/// The serving read path: train briefly, freeze, then push query bursts
+/// through the [`ServeEngine`] facade — single-threaded for the
+/// acceptance keys (`serve_qps`, `serve_p50_ms`, `serve_p99_ms` + a
+/// detail object), the same burst across 2- and 4-worker session pools
+/// (`serve_concurrent_qps_t{2,4}`), and finally an OPEN-LOOP saturation
+/// driver against a bounded deadline-flushed queue: offered rates of
+/// 0.5× and 4× the measured closed-loop throughput emit
+/// `serve_open_loop_p99_ms_r{low,high}` (accepted-request p99) and
+/// `serve_shed_rate` (fraction refused at the saturating rate).
 fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
-    use vq_gnn::serve::{LatencyReport, MicroBatcher, Request, ServingModel};
+    use vq_gnn::serve::{LatencyReport, Request, ServeEngine, ServeError, ServingModel};
+    use vq_gnn::util::bench::Pacer;
 
     let man = Manifest::load_or_builtin(&Manifest::default_dir());
     let tiny = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
@@ -174,36 +179,59 @@ fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
         report.insert("serve_alloc_bytes".into(), num(bytes));
     }
 
-    // query burst through the engine: 10k requests (2k in smoke mode)
+    // marginal cost of ONE extra pool worker: the constant input template
+    // (params + codebooks) is Arc-shared across sessions, so a new worker
+    // allocates only its dynamic slots + arena + scratch — this key pins
+    // the sharing (a per-worker template copy would blow it up by
+    // template_bytes)
+    if let Some(bytes) = alloc_bytes_of(|| {
+        sm.set_threads(2);
+    }) {
+        println!(
+            "serve/session alloc: {bytes} bytes/worker (template {} B shared once, \
+             dynamic slots {} B per worker)",
+            sm.core.template_bytes(),
+            sm.worker_dyn_bytes()
+        );
+        report.insert("serve_session_alloc_bytes".into(), num(bytes));
+    }
+    sm.set_threads(1);
+
+    // ---- closed-loop bursts through the facade --------------------------
     let n_req = if smoke { 2_000 } else { 10_000 };
     let burst_seed = rq.next_u64();
+    let mut eng = ServeEngine::builder().model("gcn", sm).build(rt).unwrap();
     let wall1 = {
         let mut rb = Rng::new(burst_seed);
-        let mut eng = MicroBatcher::new();
         let t0 = std::time::Instant::now();
         for _ in 0..n_req {
-            eng.submit(Request::Node(rb.below(tiny.n()) as u32));
+            eng.submit("gcn", Request::Node(rb.below(tiny.n()) as u32)).unwrap();
         }
-        let served = eng.drain(&rt, &mut sm).unwrap();
+        let served = eng.drain().unwrap();
         let wall = t0.elapsed().as_secs_f64();
         let lat: Vec<f64> = served.iter().map(|s| s.latency_s).collect();
         let lr = LatencyReport::from_latencies(&lat, wall);
-        report_serve(report, &lr, eng.stats.batches_run, &sm);
+        report_serve(
+            report,
+            &lr,
+            eng.stats("gcn").unwrap().batches_run,
+            eng.model("gcn").unwrap(),
+        );
         wall
     };
+    let closed_qps = n_req as f64 / wall1.max(1e-12);
 
     // the same burst fanned across 2- and 4-worker session pools: answers
     // are bit-identical (tests/serve_concurrent.rs); these keys track the
     // throughput scaling of the shared-plan pool
     for threads in [2usize, 4] {
-        sm.set_threads(threads);
+        eng.set_threads(threads);
         let mut rb = Rng::new(burst_seed);
-        let mut eng = MicroBatcher::new();
         let t0 = std::time::Instant::now();
         for _ in 0..n_req {
-            eng.submit(Request::Node(rb.below(tiny.n()) as u32));
+            eng.submit("gcn", Request::Node(rb.below(tiny.n()) as u32)).unwrap();
         }
-        let served = eng.drain(&rt, &mut sm).unwrap();
+        let served = eng.drain().unwrap();
         let wall = t0.elapsed().as_secs_f64();
         let qps = served.len() as f64 / wall.max(1e-12);
         println!(
@@ -213,6 +241,70 @@ fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
         );
         report.insert(format!("serve_concurrent_qps_t{threads}"), num(qps));
     }
+
+    // ---- open-loop saturation: bounded queue + deadline flushing --------
+    // Rebuild the SAME frozen model behind a load-shedding configuration
+    // (no re-freeze — into_parts hands the parts back).
+    let (rt, models) = eng.into_parts();
+    let mut builder = ServeEngine::builder()
+        .threads(1)
+        .deadline(std::time::Duration::from_millis(5))
+        .queue_cap(4 * b);
+    for (name, m) in models {
+        builder = builder.model(name, m);
+    }
+    let mut eng = builder.build(rt).unwrap();
+    let n_open = if smoke { 1_000 } else { 5_000 };
+    let mut open_loop = |rate: f64, seed: u64| -> (f64, f64) {
+        let mut rb = Rng::new(seed);
+        let mut pacer = Pacer::new(rate);
+        let mut offered = 0usize;
+        let mut shed = 0usize;
+        let mut lat: Vec<f64> = Vec::new();
+        let t0 = std::time::Instant::now();
+        while offered < n_open {
+            let due = pacer.due().min(n_open - offered);
+            if due == 0 {
+                pacer.sleep_until_next(std::time::Duration::from_millis(1));
+            }
+            for _ in 0..due {
+                offered += 1;
+                match eng.submit("gcn", Request::Node(rb.below(tiny.n()) as u32)) {
+                    Ok(_) => {}
+                    Err(ServeError::Shed { .. }) => shed += 1,
+                    Err(e) => panic!("open-loop submit: {e}"),
+                }
+            }
+            pacer.note_issued(due);
+            for s in eng.poll().unwrap() {
+                lat.push(s.latency_s);
+            }
+        }
+        for s in eng.drain().unwrap() {
+            lat.push(s.latency_s);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let p99 = if lat.is_empty() {
+            0.0
+        } else {
+            LatencyReport::from_latencies(&lat, wall).p99_ms
+        };
+        (p99, shed as f64 / offered.max(1) as f64)
+    };
+    // 0.5× capacity: no shedding expected, p99 bounded by the deadline
+    let (p99_low, shed_low) = open_loop(0.5 * closed_qps, burst_seed.wrapping_add(1));
+    // 4× capacity: saturating — the bounded queue MUST shed, and accepted
+    // requests' p99 stays near queue-drain + deadline, not offered-rate
+    let (p99_high, shed_high) = open_loop(4.0 * closed_qps, burst_seed.wrapping_add(2));
+    println!(
+        "serve/open_loop tiny gcn: rlow p99 {p99_low:.3} ms (shed {:.1}%), \
+         rhigh p99 {p99_high:.3} ms (shed {:.1}%)",
+        100.0 * shed_low,
+        100.0 * shed_high
+    );
+    report.insert("serve_open_loop_p99_ms_rlow".into(), num(p99_low));
+    report.insert("serve_open_loop_p99_ms_rhigh".into(), num(p99_high));
+    report.insert("serve_shed_rate".into(), num(shed_high));
 }
 
 /// Emit the single-threaded serve acceptance keys + detail object.

@@ -6,6 +6,8 @@
 //!
 //! Rules (keys are matched recursively, joined with '.'):
 //! - `*_ms` (timings, lower is better): warn when current > 1.5× baseline;
+//!   `*_ms_r<tag>` (per-offered-rate open-loop latencies like
+//!   `serve_open_loop_p99_ms_rhigh`) counts too;
 //! - `*_qps` / `*_per_sec` / `*_qps_t<N>` (throughput, incl. the
 //!   per-pool-width serving keys, higher is better): warn when current <
 //!   baseline / 1.5;
@@ -13,6 +15,10 @@
 //!   requires the `alloc-count` bench feature): warn when current >
 //!   1.5× baseline, and when an allocation-free baseline (0 bytes) grows
 //!   any allocation at all;
+//! - `*_shed_rate` (fraction of offered load refused under saturation,
+//!   in [0, 1]): compared on ABSOLUTE distance, not ratio — a shed rate
+//!   is a proportion, so warn when current > baseline + 0.15 (a baseline
+//!   of 0 would make any ratio rule degenerate);
 //! - a timing/throughput/allocation key present in the baseline but
 //!   MISSING from the fresh run is **fatal** (exit 1): a silently dropped
 //!   bench key would retire its regression coverage without anyone
@@ -58,10 +64,25 @@ fn load(path: &str) -> Option<BTreeMap<String, f64>> {
     Some(out)
 }
 
-/// Lower-is-better keys: timings and per-step allocation bytes.
+/// Lower-is-better keys: timings (`*_ms`, and the per-offered-rate
+/// open-loop variants `*_ms_r<tag>`) and per-step allocation bytes.
 fn lower_is_better(key: &str) -> bool {
-    key.ends_with("_ms") || key.ends_with("_alloc_bytes")
+    if key.ends_with("_ms") || key.ends_with("_alloc_bytes") {
+        return true;
+    }
+    match key.rsplit_once("_ms_r") {
+        Some((_, tag)) => !tag.is_empty() && tag.bytes().all(|b| b.is_ascii_alphanumeric()),
+        None => false,
+    }
 }
+
+/// Absolute-tolerance keys: shed rates are proportions in [0, 1], so a
+/// ratio rule degenerates around zero — compare absolute distance.
+fn absolute_tolerance(key: &str) -> bool {
+    key.ends_with("_shed_rate")
+}
+
+const SHED_TOLERANCE: f64 = 0.15;
 
 /// Higher-is-better keys: throughput — `*_qps`, `*_per_sec`, and the
 /// per-pool-width variants `*_qps_t<N>` (`serve_concurrent_qps_t4`).
@@ -100,9 +121,10 @@ fn main() {
     let mut regressions = 0usize;
     let mut missing: Vec<&str> = Vec::new();
     for (key, &b) in &base {
+        let abs = absolute_tolerance(key);
         let low = lower_is_better(key);
         let high = higher_is_better(key);
-        if !low && !high {
+        if !abs && !low && !high {
             continue; // shape/config numbers (n, k, threads, speedups, ...)
         }
         let Some(&c) = cur.get(key) else {
@@ -110,6 +132,24 @@ fn main() {
             continue;
         };
         compared += 1;
+        if abs {
+            // shed rates: absolute distance, and only growth regresses
+            // (shedding LESS under the same offered load is an improvement)
+            let verdict = if c > b + SHED_TOLERANCE {
+                regressions += 1;
+                println!(
+                    "::warning::bench regression: {key} shed rate grew \
+                     ({b:.3} -> {c:.3}, tolerance +{SHED_TOLERANCE})"
+                );
+                "REGRESSED"
+            } else if c + SHED_TOLERANCE < b {
+                "improved"
+            } else {
+                "ok"
+            };
+            println!("  {key:<44} base {b:>12.3}  cur {c:>12.3}  [{verdict}]");
+            continue;
+        }
         if high && c <= 0.0 && b > 0.0 {
             // throughput collapsed to zero — the worst regression must not
             // be silently dropped just because the ratio is undefined

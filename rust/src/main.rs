@@ -2,6 +2,8 @@
 //!
 //!   vq-gnn train --dataset arxiv_sim --model gcn --method vq --epochs 30
 //!   vq-gnn serve --dataset tiny_sim --model gcn --requests reqs.txt
+//!   vq-gnn serve --dataset tiny_sim --model gcn,sage --listen 127.0.0.1:7571
+//!   vq-gnn client --addr 127.0.0.1:7571 --model gcn --requests reqs.txt --shutdown
 //!   vq-gnn exp <table3|table4|table7|table8|fig4|inference|complexity|
 //!               ablation-layers|ablation-codebook|ablation-batch|
 //!               ablation-sampling|all> [--epochs N] [--seeds a,b,c]
@@ -71,6 +73,7 @@ fn main() -> Result<()> {
             );
         }
         Some("serve") => serve_cmd(&flags)?,
+        Some("client") => client_cmd(&flags)?,
         Some("exp") => {
             let which = pos.get(1).context("exp needs a name")?.as_str();
             let mut ctx = exp::Ctx::new(epochs, seeds)?;
@@ -118,9 +121,12 @@ fn main() -> Result<()> {
                 "usage:\n  vq-gnn train --dataset D --model M --method \
                  [vq|full|ns|cluster|saint] [--epochs N] [--seed S] \
                  [--backend native|pjrt]\n  \
-                 vq-gnn serve --dataset D --model M --requests FILE \
+                 vq-gnn serve --dataset D --model M[,M2,..] \
+                 (--requests FILE | --listen ADDR) \
                  [--ckpt SERVING.bin] [--epochs N] [--seed S] [--out FILE] \
-                 [--threads N] [--deadline-ms D]\n  \
+                 [--threads N] [--deadline-ms D] [--queue-cap C]\n  \
+                 vq-gnn client --addr HOST:PORT --model M --requests FILE \
+                 [--out FILE] [--rate R] [--wait-ms W] [--drain] [--shutdown]\n  \
                  vq-gnn exp [table3|table4|table7|table8|fig4|inference|\
                  complexity|ablation-*|all] [--epochs N] [--seeds 1,2,3] \
                  [--datasets a,b] [--backend native|pjrt]"
@@ -130,33 +136,58 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// `vq-gnn serve`: freeze (or load) a model and answer a batch request
-/// file through the micro-batching engine, reporting latency/throughput.
+/// Render one served answer in the CLI's stable line format (the socket
+/// client emits byte-identical lines, which is what CI's `cmp` pins).
+fn answer_line(id: usize, answer: &vq_gnn::serve::Answer, link_task: bool) -> String {
+    use vq_gnn::serve::Answer;
+    match answer {
+        // on link-task datasets the row is an embedding, not class
+        // scores — argmax of it would be meaningless
+        Answer::Scores(row) if link_task => {
+            let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            format!("req {id} emb_norm {norm:.6}\n")
+        }
+        Answer::Scores(_) => format!("req {id} class {}\n", answer.argmax().unwrap()),
+        Answer::Link(sc) => format!("req {id} link_score {sc:.6}\n"),
+    }
+}
+
+/// `vq-gnn serve`: freeze (or load) models and serve them through one
+/// [`ServeEngine`](vq_gnn::serve::ServeEngine) — either answering a batch
+/// request file, or listening on a TCP address (`--listen`) for framed
+/// queries from `vq-gnn client`.
 ///
-/// With `--ckpt PATH`: loads the serving artifact if the file exists,
-/// otherwise trains `--epochs` (default 3) epochs, freezes, and exports
-/// the artifact to that path for the next run.
+/// `--model` takes a comma-separated list; with several models and
+/// `--ckpt PATH`, each model's artifact lives at `PATH.<name>`.  A ckpt
+/// path is loaded if the file exists, otherwise the model is trained for
+/// `--epochs` (default 3), frozen, and exported there for the next run.
 ///
-/// `--threads N` widens the session pool (micro-batches fan out across N
-/// `util::par` workers — answers are byte-identical to `--threads 1`);
-/// `--deadline-ms D` switches to deadline-driven flushing: partial tails
-/// wait up to D ms for newer arrivals before padding.
+/// `--threads N` widens every model's session pool (answers are
+/// byte-identical to `--threads 1`); `--deadline-ms D` switches to
+/// deadline-driven flushing; `--queue-cap C` bounds each model's queue —
+/// excess load is shed (file mode drains and retries instead).
 fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     use vq_gnn::coordinator::vq_trainer::VqTrainer;
     use vq_gnn::datasets::Dataset;
     use vq_gnn::runtime::manifest::Manifest;
     use vq_gnn::runtime::Runtime;
     use vq_gnn::sampler::NodeStrategy;
-    use vq_gnn::serve::{self, report, Answer, LatencyReport, MicroBatcher, Request,
-                        ServingModel};
+    use vq_gnn::serve::{self, report, server, LatencyReport, Request, ServeEngine,
+                        ServeError, ServingModel};
 
     let ds_name = flags.get("dataset").cloned().unwrap_or("tiny_sim".into());
-    let model = flags.get("model").cloned().unwrap_or("gcn".into());
+    let model_list = flags.get("model").cloned().unwrap_or("gcn".into());
+    let models: Vec<String> = model_list.split(',').map(str::to_string).collect();
     let epochs: usize = flags.get("epochs").map(|s| s.parse()).transpose()?.unwrap_or(3);
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let threads: usize = flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let deadline_ms: Option<u64> = flags.get("deadline-ms").map(|s| s.parse()).transpose()?;
-    let req_path = flags.get("requests").context("serve needs --requests FILE")?;
+    let queue_cap: Option<usize> = flags.get("queue-cap").map(|s| s.parse()).transpose()?;
+    let listen = flags.get("listen");
+    let req_path = flags.get("requests");
+    if listen.is_none() && req_path.is_none() {
+        bail!("serve needs --requests FILE or --listen ADDR");
+    }
 
     let man = Manifest::load_or_builtin(&Manifest::default_dir());
     let cfg = man
@@ -170,71 +201,119 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let ds = Rc::new(Dataset::generate(&cfg, 42));
 
     let ckpt = flags.get("ckpt").map(std::path::PathBuf::from);
-    let mut sm = match &ckpt {
-        Some(path) if path.exists() => {
-            eprintln!("loading serving artifact {}", path.display());
-            ServingModel::load(&mut rt, &man, ds.clone(), &model, path)?
-        }
-        _ => {
-            eprintln!("training {ds_name}/{model} for {epochs} epochs, then freezing");
-            let mut tr = VqTrainer::new(
-                &mut rt, &man, ds.clone(), &model, "", NodeStrategy::Nodes, seed,
-            )?;
-            for _ in 0..epochs {
-                tr.epoch(&mut rt)?;
+    let mut builder = ServeEngine::builder().threads(threads);
+    if let Some(ms) = deadline_ms {
+        builder = builder.deadline(std::time::Duration::from_millis(ms));
+    }
+    if let Some(cap) = queue_cap {
+        builder = builder.queue_cap(cap);
+    }
+    for name in &models {
+        // one model: the ckpt path as given; several: PATH.<name> each
+        let path = ckpt.as_ref().map(|p| {
+            if models.len() == 1 {
+                p.clone()
+            } else {
+                std::path::PathBuf::from(format!("{}.{name}", p.display()))
             }
-            let sm = ServingModel::freeze(&mut rt, &man, &tr)?;
-            if let Some(path) = &ckpt {
-                sm.save(path)?;
-                eprintln!("exported serving artifact to {}", path.display());
+        });
+        let sm = match &path {
+            Some(path) if path.exists() => {
+                eprintln!("loading serving artifact {}", path.display());
+                ServingModel::load(&mut rt, &man, ds.clone(), name, path)?
             }
-            sm
-        }
-    };
+            _ => {
+                eprintln!("training {ds_name}/{name} for {epochs} epochs, then freezing");
+                let mut tr = VqTrainer::new(
+                    &mut rt, &man, ds.clone(), name, "", NodeStrategy::Nodes, seed,
+                )?;
+                for _ in 0..epochs {
+                    tr.epoch(&mut rt)?;
+                }
+                let sm = ServingModel::freeze(&mut rt, &man, &tr)?;
+                if let Some(path) = &path {
+                    sm.save(path)?;
+                    eprintln!("exported serving artifact to {}", path.display());
+                }
+                sm
+            }
+        };
+        builder = builder.model(name.clone(), sm);
+    }
+    let mut eng = builder.build(rt).map_err(anyhow::Error::new)?;
 
-    sm.set_threads(threads);
+    // ---- socket mode ----------------------------------------------------
+    if let Some(addr) = listen {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("serve: bind {addr}"))?;
+        eprintln!("listening on {}", listener.local_addr()?);
+        let rep = server::run(&mut eng, listener)?;
+        println!(
+            "serve {ds_name}/{model_list} ({} backend, {} worker{}): \
+             {} connection(s), {} request(s), {} served, shed {}, {} error(s)",
+            eng.runtime().backend_name(),
+            eng.threads(),
+            if eng.threads() == 1 { "" } else { "s" },
+            rep.connections,
+            rep.requests,
+            rep.served,
+            rep.shed,
+            rep.errors,
+        );
+        for name in eng.models() {
+            let st = eng.stats(name).unwrap();
+            println!(
+                "model {name}: {} micro-batches ({} full), padded rows {} lifetime, \
+                 tail flushes {} deadline + {} forced",
+                st.batches_run,
+                st.full_batches,
+                st.padded_rows,
+                st.tail_deadline_flushes,
+                st.tail_forced_flushes,
+            );
+        }
+        return Ok(());
+    }
+
+    // ---- file mode: every request goes to the FIRST model ---------------
+    let target = models[0].as_str();
+    let req_path = req_path.unwrap();
     let text = std::fs::read_to_string(req_path)
         .with_context(|| format!("read requests file {req_path}"))?;
     // validate ids against everything the MODEL serves — a loaded VQS2
     // artifact's admitted nodes are queryable too, not just the dataset's
-    let reqs = serve::parse_requests(&text, sm.total_nodes())?;
-    let mut eng = match deadline_ms {
-        Some(ms) => MicroBatcher::with_deadline(std::time::Duration::from_millis(ms)),
-        None => MicroBatcher::new(),
-    };
-    for r in &reqs {
-        eng.submit(*r);
-    }
+    let total = eng.model(target).unwrap().total_nodes();
+    let reqs = serve::parse_requests(&text, total)?;
     let t0 = std::time::Instant::now();
-    let served = if deadline_ms.is_some() {
+    let mut served = Vec::new();
+    for r in &reqs {
+        match eng.submit(target, *r) {
+            Ok(_) => {}
+            Err(ServeError::Shed { .. }) => {
+                // bounded queue in batch mode: make room, then retry —
+                // a file has no client to shed to
+                served.extend(eng.drain()?);
+                eng.submit(target, *r).map_err(anyhow::Error::new)?;
+            }
+            Err(e) => return Err(anyhow::Error::new(e)),
+        }
+    }
+    if deadline_ms.is_some() {
         // deadline mode: full batches go immediately, then — the input
         // file is exhausted, so the tail can never coalesce with newer
         // arrivals — drain the remainder at once instead of sleeping out
-        // its deadline (a live front-end would keep calling flush())
-        let mut served = eng.flush(&rt, &mut sm)?;
-        served.extend(eng.drain(&rt, &mut sm)?);
-        served
-    } else {
-        eng.drain(&rt, &mut sm)?
-    };
+        // its deadline (a live front-end keeps polling instead)
+        served.extend(eng.poll()?);
+    }
+    served.extend(eng.drain()?);
+    served.sort_by_key(|s| s.id);
     let wall = t0.elapsed().as_secs_f64();
 
     if let Some(out_path) = flags.get("out") {
-        let link_task = ds.cfg.task == "link";
+        let link_task = eng.model(target).unwrap().link_task();
         let mut out = String::with_capacity(served.len() * 24);
         for s in &served {
-            match &s.answer {
-                // on link-task datasets the row is an embedding, not class
-                // scores — argmax of it would be meaningless
-                Answer::Scores(row) if link_task => {
-                    let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
-                    out.push_str(&format!("req {} emb_norm {norm:.6}\n", s.id));
-                }
-                Answer::Scores(_) => {
-                    out.push_str(&format!("req {} class {}\n", s.id, s.answer.argmax().unwrap()));
-                }
-                Answer::Link(sc) => out.push_str(&format!("req {} link_score {sc:.6}\n", s.id)),
-            }
+            out.push_str(&answer_line(s.id, &s.answer, link_task));
         }
         std::fs::write(out_path, out)?;
         eprintln!("wrote {out_path}");
@@ -243,25 +322,168 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let lat: Vec<f64> = served.iter().map(|s| s.latency_s).collect();
     let lr = LatencyReport::from_latencies(&lat, wall);
     let nodes = reqs.iter().filter(|r| matches!(r, Request::Node(_))).count();
+    let sm = eng.model(target).unwrap();
+    let st = eng.stats(target).unwrap();
     println!(
-        "serve {ds_name}/{model} ({} backend, b={}, {} worker{}): {lr}\n\
+        "serve {ds_name}/{target} ({} backend, b={}, {} worker{}): {lr}\n\
          {} node + {} link queries in {} micro-batches ({} full); \
          padded rows {} last flush / {} lifetime; tail flushes {} deadline + {} forced; \
          embedding cache resident {:.1} KB",
-        rt.backend_name(),
+        eng.runtime().backend_name(),
         sm.batch_size(),
         sm.threads(),
         if sm.threads() == 1 { "" } else { "s" },
         nodes,
         reqs.len() - nodes,
-        eng.stats.batches_run,
-        eng.stats.full_batches,
-        eng.stats.last_flush_padded_rows,
-        eng.stats.padded_rows,
-        eng.stats.tail_deadline_flushes,
-        eng.stats.tail_forced_flushes,
+        st.batches_run,
+        st.full_batches,
+        st.last_flush_padded_rows,
+        st.padded_rows,
+        st.tail_deadline_flushes,
+        st.tail_forced_flushes,
         sm.cache().memory_bytes() as f64 / 1024.0,
     );
     print!("{}", report::format_workers(&sm.worker_stats(), wall));
+    Ok(())
+}
+
+/// `vq-gnn client`: send a request file to a running `serve --listen`
+/// instance over the framed TCP protocol and collect the answers.
+///
+/// `--rate R` paces submissions open-loop at R queries/s (default: blast
+/// everything); `--drain`/`--shutdown` append the corresponding control
+/// frames; `--wait-ms W` keeps retrying the initial connect for W ms (the
+/// server may still be loading its artifact); `--out FILE` writes answer
+/// lines byte-identical to `serve --requests`'s `--out`.
+fn client_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    use std::io::Write;
+    use vq_gnn::serve::proto::{self, ErrCode, WireRequest, WireResponse};
+    use vq_gnn::serve::{self, Request};
+    use vq_gnn::util::bench::Pacer;
+
+    let addr = flags.get("addr").context("client needs --addr HOST:PORT")?.clone();
+    let model = flags.get("model").cloned().unwrap_or("gcn".into());
+    let req_path = flags.get("requests").context("client needs --requests FILE")?;
+    let rate: Option<f64> = flags.get("rate").map(|s| s.parse()).transpose()?;
+    let wait_ms: u64 = flags.get("wait-ms").map(|s| s.parse()).transpose()?.unwrap_or(10_000);
+    let do_drain = flags.contains_key("drain");
+    let do_shutdown = flags.contains_key("shutdown");
+
+    let text = std::fs::read_to_string(req_path)
+        .with_context(|| format!("read requests file {req_path}"))?;
+    // no local range check — the server owns admission control and
+    // answers out-of-range ids with a typed BAD_REQUEST frame
+    let reqs = serve::parse_requests(&text, usize::MAX)?;
+
+    let connect_deadline =
+        std::time::Instant::now() + std::time::Duration::from_millis(wait_ms);
+    let stream = loop {
+        match std::net::TcpStream::connect(&addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if std::time::Instant::now() >= connect_deadline {
+                    return Err(anyhow::Error::new(e)).context(format!("connect {addr}"));
+                }
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+        }
+    };
+    stream.set_nodelay(true)?;
+    let mut rstream = stream.try_clone()?;
+    let expected = reqs.len();
+
+    // reader thread: every node/link query gets exactly one response
+    // frame (scores or a typed error), so it can count down to `expected`
+    let reader = std::thread::spawn(move || -> Result<Vec<WireResponse>> {
+        let mut got = Vec::with_capacity(expected);
+        while got.len() < expected {
+            match proto::read_frame(&mut rstream)? {
+                Some(payload) => match proto::decode_response(&payload)? {
+                    WireResponse::Pong { .. } => continue,
+                    resp => got.push(resp),
+                },
+                None => break, // server hung up
+            }
+        }
+        Ok(got)
+    });
+
+    let t0 = std::time::Instant::now();
+    let mut w = stream;
+    let mut pacer = rate.map(Pacer::new);
+    for (i, r) in reqs.iter().enumerate() {
+        if let Some(p) = &mut pacer {
+            while p.due() == 0 {
+                p.sleep_until_next(std::time::Duration::from_millis(2));
+            }
+            p.note_issued(1);
+        }
+        let req_id = i as u64;
+        let wire = match *r {
+            Request::Node(v) => WireRequest::Node { req_id, model: model.clone(), node: v },
+            Request::Link(u, v) => {
+                WireRequest::Link { req_id, model: model.clone(), u, v }
+            }
+        };
+        w.write_all(&proto::encode_request(&wire))?;
+    }
+    if do_drain {
+        w.write_all(&proto::encode_request(&WireRequest::Drain))?;
+    }
+    if do_shutdown {
+        w.write_all(&proto::encode_request(&WireRequest::Shutdown))?;
+    }
+    w.flush()?;
+
+    let mut resps = reader.join().expect("client reader thread")?;
+    let wall = t0.elapsed().as_secs_f64();
+    resps.sort_by_key(|r| match r {
+        WireResponse::Scores { req_id, .. }
+        | WireResponse::Link { req_id, .. }
+        | WireResponse::Error { req_id, .. }
+        | WireResponse::Pong { req_id } => *req_id,
+    });
+
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    let mut errors = 0u64;
+    let mut out = String::with_capacity(resps.len() * 24);
+    for resp in &resps {
+        match resp {
+            WireResponse::Scores { req_id, embedding, row } => {
+                served += 1;
+                out.push_str(&answer_line(
+                    *req_id as usize,
+                    &vq_gnn::serve::Answer::Scores(row.clone()),
+                    *embedding,
+                ));
+            }
+            WireResponse::Link { req_id, score } => {
+                served += 1;
+                out.push_str(&answer_line(
+                    *req_id as usize,
+                    &vq_gnn::serve::Answer::Link(*score),
+                    false,
+                ));
+            }
+            WireResponse::Error { req_id, code, msg } => {
+                if *code == ErrCode::Shed {
+                    shed += 1;
+                } else {
+                    errors += 1;
+                }
+                eprintln!("req {req_id}: {} — {msg}", code.name());
+            }
+            WireResponse::Pong { .. } => {}
+        }
+    }
+    if let Some(out_path) = flags.get("out") {
+        std::fs::write(out_path, out)?;
+        eprintln!("wrote {out_path}");
+    }
+    println!(
+        "client {addr}: {} sent, {served} served, shed {shed}, {errors} error(s), {wall:.1}s",
+        reqs.len(),
+    );
     Ok(())
 }

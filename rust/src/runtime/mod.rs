@@ -32,6 +32,51 @@ use manifest::{ArtifactSpec, Manifest};
 
 pub use native::arena::ExecSession;
 
+/// Positional input view for execution entry points: either a plain dense
+/// slice (the trainer paths), or a shared constant base with a small
+/// per-session dynamic overlay — the serving pool's Arc-backed template,
+/// where the frozen weights and codebooks live ONCE in the shared core and
+/// each worker carries only its batch-dependent slots (xb + sketches).
+///
+/// The executor reads inputs purely positionally (`inputs[i]`), so the
+/// overlay resolves in `Index` and the kernels cannot tell the views
+/// apart; answers are bit-identical by construction.
+#[derive(Clone, Copy)]
+pub enum InputSlots<'a> {
+    Dense(&'a [Tensor]),
+    /// `idx` holds the ASCENDING spec positions of the dynamic slots;
+    /// position `idx[p]` resolves to `dynamic[p]`, everything else to
+    /// `base` (whose tensors at dynamic positions are never read).
+    Overlay { base: &'a [Tensor], idx: &'a [usize], dynamic: &'a [Tensor] },
+}
+
+impl InputSlots<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            InputSlots::Dense(s) => s.len(),
+            InputSlots::Overlay { base, .. } => base.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::ops::Index<usize> for InputSlots<'_> {
+    type Output = Tensor;
+
+    fn index(&self, i: usize) -> &Tensor {
+        match self {
+            InputSlots::Dense(s) => &s[i],
+            InputSlots::Overlay { base, idx, dynamic } => match idx.binary_search(&i) {
+                Ok(p) => &dynamic[p],
+                Err(_) => &base[i],
+            },
+        }
+    }
+}
+
 /// A compiled artifact, ready to execute.
 ///
 /// `Send + Sync` is part of the contract: the compiled program is read-only
@@ -80,6 +125,25 @@ pub trait Executable: Send + Sync {
     ) -> Result<()> {
         self.run_into(spec, inputs, outputs)
     }
+
+    /// [`Executable::run_session`] over an [`InputSlots`] view — the
+    /// Arc-shared-template serving path.  The default handles dense views
+    /// by delegating and refuses overlays: only backends that read inputs
+    /// through the view (native) can execute one without materializing it.
+    fn run_slots(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: InputSlots<'_>,
+        outputs: &mut Vec<Tensor>,
+        sess: &mut ExecSession,
+    ) -> Result<()> {
+        match inputs {
+            InputSlots::Dense(s) => self.run_session(spec, s, outputs, sess),
+            InputSlots::Overlay { .. } => {
+                bail!("{}: this backend cannot execute overlay input views", spec.name)
+            }
+        }
+    }
 }
 
 /// An execution engine that can compile manifest artifacts.
@@ -120,10 +184,28 @@ impl Artifact {
         self.exe.run_session(&self.spec, inputs, outputs, sess)?;
         check_output_count(&self.spec, outputs)
     }
+
+    /// [`Artifact::run_session`] over an [`InputSlots`] view — validated
+    /// and unaccounted, like `run_session`; pool workers aggregate via
+    /// [`Runtime::record_external`] after the join.
+    pub fn run_slots(
+        &self,
+        inputs: InputSlots<'_>,
+        outputs: &mut Vec<Tensor>,
+        sess: &mut ExecSession,
+    ) -> Result<()> {
+        check_input_view(&self.spec, inputs)?;
+        self.exe.run_slots(&self.spec, inputs, outputs, sess)?;
+        check_output_count(&self.spec, outputs)
+    }
 }
 
 /// Positional input validation shared by every execution entry point.
 fn check_inputs(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<()> {
+    check_input_view(spec, InputSlots::Dense(inputs))
+}
+
+fn check_input_view(spec: &ArtifactSpec, inputs: InputSlots<'_>) -> Result<()> {
     if inputs.len() != spec.inputs.len() {
         bail!(
             "{}: got {} inputs, artifact expects {}",
@@ -132,7 +214,8 @@ fn check_inputs(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<()> {
             spec.inputs.len()
         );
     }
-    for (t, s) in inputs.iter().zip(&spec.inputs) {
+    for (i, s) in spec.inputs.iter().enumerate() {
+        let t = &inputs[i];
         if t.shape != s.shape || t.dtype != s.dtype {
             bail!(
                 "{}: input '{}' shape/dtype mismatch: got {:?}/{:?}, want {:?}/{:?}",

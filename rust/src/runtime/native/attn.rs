@@ -35,6 +35,7 @@
 use anyhow::Result;
 
 use crate::runtime::ops;
+use crate::runtime::InputSlots;
 use crate::util::tensor::Tensor;
 
 use super::arena::StepArena;
@@ -62,7 +63,7 @@ fn add_den_cotangent(dc_in: &mut [f32], dc_out: &mut [f32], gden: &[f32], b: usi
 pub(super) fn run_vq_attn(
     plan: &Plan,
     ar: &mut StepArena,
-    inputs: &[Tensor],
+    inputs: InputSlots<'_>,
     outputs: &mut [Tensor],
     mode: Mode,
 ) -> Result<()> {

@@ -10,6 +10,7 @@
 use anyhow::Result;
 
 use crate::runtime::ops;
+use crate::runtime::InputSlots;
 use crate::util::tensor::Tensor;
 
 use super::arena::StepArena;
@@ -51,7 +52,7 @@ fn scatter_edges_into(
 pub(super) fn run_edge(
     plan: &Plan,
     ar: &mut StepArena,
-    inputs: &[Tensor],
+    inputs: InputSlots<'_>,
     outputs: &mut [Tensor],
     train: bool,
 ) -> Result<()> {

@@ -59,7 +59,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::ops;
-use crate::runtime::{Backend, Executable};
+use crate::runtime::{Backend, Executable, InputSlots};
 use crate::util::tensor::{DType, Tensor};
 
 use arena::{ExecSession, StepArena};
@@ -135,7 +135,7 @@ fn run_with(
     plan: &Plan,
     ar: &mut StepArena,
     spec: &ArtifactSpec,
-    inputs: &[Tensor],
+    inputs: InputSlots<'_>,
     outputs: &mut Vec<Tensor>,
 ) -> Result<()> {
     debug_assert_eq!(spec.name, plan.name, "executor driven with a foreign spec");
@@ -162,7 +162,7 @@ impl Executable for NativeExec {
         outputs: &mut Vec<Tensor>,
     ) -> Result<()> {
         let mut ar = self.builtin.lock().expect("native: built-in session poisoned");
-        run_with(&self.plan, &mut ar, spec, inputs, outputs)
+        run_with(&self.plan, &mut ar, spec, InputSlots::Dense(inputs), outputs)
     }
 
     fn new_session(&self) -> ExecSession {
@@ -173,6 +173,19 @@ impl Executable for NativeExec {
         &self,
         spec: &ArtifactSpec,
         inputs: &[Tensor],
+        outputs: &mut Vec<Tensor>,
+        sess: &mut ExecSession,
+    ) -> Result<()> {
+        self.run_slots(spec, InputSlots::Dense(inputs), outputs, sess)
+    }
+
+    /// The native executor reads inputs positionally through the view, so
+    /// overlay views (serving's Arc-shared constant template + per-session
+    /// dynamic slots) execute directly — no materialized dense copy.
+    fn run_slots(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: InputSlots<'_>,
         outputs: &mut Vec<Tensor>,
         sess: &mut ExecSession,
     ) -> Result<()> {
@@ -230,7 +243,7 @@ fn ensure_outputs(spec: &ArtifactSpec, outputs: &mut Vec<Tensor>) {
 /// scattered back onto them.  `s_logp` is the CE path's log-softmax scratch.
 fn loss_head_into(
     plan: &Plan,
-    inputs: &[Tensor],
+    inputs: InputSlots<'_>,
     logits: &[f32],
     rows: usize,
     c: usize,

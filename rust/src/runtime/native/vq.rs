@@ -9,6 +9,7 @@
 use anyhow::Result;
 
 use crate::runtime::ops;
+use crate::runtime::InputSlots;
 use crate::util::tensor::Tensor;
 use crate::vq::kernels;
 
@@ -19,7 +20,7 @@ use super::loss_head_into;
 pub(super) fn run_vq(
     plan: &Plan,
     ar: &mut StepArena,
-    inputs: &[Tensor],
+    inputs: InputSlots<'_>,
     outputs: &mut [Tensor],
     mode: Mode,
 ) -> Result<()> {
@@ -173,7 +174,7 @@ pub(super) fn run_vq(
 /// backbone.
 pub(super) fn push_assign_outputs(
     plan: &Plan,
-    inputs: &[Tensor],
+    inputs: InputSlots<'_>,
     outputs: &mut [Tensor],
     xfeat: &[Vec<f32>],
     gvec: &[Vec<f32>],
@@ -233,7 +234,7 @@ pub(super) fn push_assign_outputs(
 pub(super) fn run_vq_assign(
     plan: &Plan,
     ar: &mut StepArena,
-    inputs: &[Tensor],
+    inputs: InputSlots<'_>,
     outputs: &mut [Tensor],
 ) -> Result<()> {
     let z = &inputs[plan.in_x];

@@ -1,7 +1,15 @@
-//! Micro-batching engine: a request queue that coalesces incoming queries
-//! into fixed-size batches (the serve artifact's compiled width `b`),
-//! fans them out across the model's session pool, and merges per-request
-//! results back in submit order.
+//! Serving engine: the [`ServeEngine`] facade owns the `Runtime`, a
+//! multi-model router (one [`MicroBatcher`] queue + [`EngineStats`] per
+//! model, every model's pool behind one `submit → poll/flush → Served`
+//! call shape), and the load-shedding policy; the [`MicroBatcher`] below
+//! it coalesces queries into fixed-size batches (the serve artifact's
+//! compiled width `b`), fans them out across a model's session pool, and
+//! merges per-request results back in submit order.
+//!
+//! The old split call shape — `MicroBatcher::{drain,flush}(&Runtime,
+//! &mut ServingModel)` — survives as `#[deprecated]` shims delegating to
+//! the same body the facade uses (`tests/serve_engine.rs` pins shim ==
+//! facade bitwise); new code goes through [`ServeEngine`].
 //!
 //! Two flushing disciplines share one body:
 //!
@@ -30,12 +38,14 @@
 //! occurrence owns a row, and rows of the same node are computed from
 //! identical inputs.
 
+use std::fmt;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::runtime::Runtime;
 use crate::serve::model::ServingModel;
+use crate::serve::router::{ModelEntry, Router};
 use crate::serve::{Answer, Request};
 use crate::util::par;
 
@@ -46,9 +56,9 @@ pub struct Served {
     pub latency_s: f64,
 }
 
-/// Lifetime + per-flush accounting of the engine (capacity-planning
-/// signals; the CLI and `bench_guard` read these).
-#[derive(Debug, Default, Clone)]
+/// Lifetime + per-flush accounting of one model's queue
+/// (capacity-planning signals; the CLI and `bench_guard` read these).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct EngineStats {
     /// Micro-batches executed over the engine's lifetime.
     pub batches_run: u64,
@@ -116,23 +126,39 @@ impl MicroBatcher {
         id
     }
 
+    /// Enqueue under a caller-assigned ticket id — the facade's path: the
+    /// engine hands out ONE id sequence across every model's queue, so
+    /// merged results sort back into global submit order.
+    pub(crate) fn submit_with_id(&mut self, id: usize, req: Request) {
+        self.next_id = self.next_id.max(id + 1);
+        self.pending.push((id, req, Instant::now()));
+    }
+
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Queued node slots (a link query holds two) — the queue-depth input
+    /// to the facade's shedding policy.
+    pub(crate) fn pending_slots(&self) -> usize {
+        self.pending.iter().map(|(_, r, _)| slots_of(r)).sum()
     }
 
     /// Coalesce every pending request into `b`-wide micro-batches —
     /// padding the tail — execute them across the pool, and return
     /// answers in submit order.
+    #[deprecated(note = "go through ServeEngine::drain — this shim delegates to the same body")]
     pub fn drain(&mut self, rt: &Runtime, model: &mut ServingModel) -> Result<Vec<Served>> {
-        self.flush_inner(rt, model, true)
+        self.flush_with(rt, model, true)
     }
 
     /// Deadline-driven flush: cut and execute every FULL micro-batch; run
     /// the partial tail only if one of its requests has outlived the
     /// engine's deadline, otherwise leave it queued.  Answers come back in
     /// submit order (for the served prefix).
+    #[deprecated(note = "go through ServeEngine::poll — this shim delegates to the same body")]
     pub fn flush(&mut self, rt: &Runtime, model: &mut ServingModel) -> Result<Vec<Served>> {
-        self.flush_inner(rt, model, false)
+        self.flush_with(rt, model, false)
     }
 
     /// How many leading requests to serve, and whether the deadline forced
@@ -177,7 +203,7 @@ impl MicroBatcher {
         (cut, false)
     }
 
-    fn flush_inner(
+    pub(crate) fn flush_with(
         &mut self,
         rt: &Runtime,
         model: &mut ServingModel,
@@ -298,5 +324,309 @@ impl MicroBatcher {
             served.push(Served { id, answer, latency_s: (done - t0).as_secs_f64() });
         }
         Ok(served)
+    }
+}
+
+// ======================== ServeEngine facade ============================
+
+/// Typed serving-facade errors: builder misconfiguration and per-request
+/// admission-control refusals.  The per-request variants (`UnknownModel`,
+/// `InvalidNode`, `Shed`) map 1:1 onto wire error frames; builder
+/// variants surface at construction time, never as panics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The builder was given no models.
+    NoModels,
+    /// Two models were registered under one routing name.
+    DuplicateModel(String),
+    /// `.threads(0)` — the pool needs at least one worker.
+    ZeroWorkers,
+    /// The per-model queue cap cannot hold even one link query (2 slots).
+    QueueCapTooSmall(usize),
+    /// `submit` named a model the router does not carry.
+    UnknownModel(String),
+    /// A node id outside the model's servable range (frozen + admitted).
+    InvalidNode { model: String, id: u32, total: usize },
+    /// Backpressure: the model's queue is at capacity, so the request is
+    /// load-shed instead of letting the tail latency grow unboundedly.
+    Shed { model: String, pending_slots: usize, cap: usize },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::NoModels => write!(f, "serve engine: no models configured"),
+            ServeError::DuplicateModel(m) => {
+                write!(f, "serve engine: duplicate model name '{m}'")
+            }
+            ServeError::ZeroWorkers => {
+                write!(f, "serve engine: worker pool width must be at least 1")
+            }
+            ServeError::QueueCapTooSmall(c) => write!(
+                f,
+                "serve engine: queue cap {c} cannot hold a link query (needs at least 2 slots)"
+            ),
+            ServeError::UnknownModel(m) => write!(f, "serve engine: unknown model '{m}'"),
+            ServeError::InvalidNode { model, id, total } => write!(
+                f,
+                "serve engine: node id {id} out of range for model '{model}' \
+                 ({total} servable ids)"
+            ),
+            ServeError::Shed { model, pending_slots, cap } => write!(
+                f,
+                "serve engine: model '{model}' shed the request \
+                 ({pending_slots}/{cap} queued slots)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Validated construction shared by single- and multi-model setups:
+/// `.model(name, m)` × N, `.threads(n)`, `.deadline(d)`, `.queue_cap(c)`,
+/// then [`ServeEngineBuilder::build`].  Misconfiguration is a typed
+/// [`ServeError`], not a panic.
+pub struct ServeEngineBuilder {
+    models: Vec<(String, ServingModel)>,
+    threads: usize,
+    deadline: Option<Duration>,
+    queue_cap: Option<usize>,
+}
+
+impl ServeEngineBuilder {
+    /// Register a model under a routing name (FIFO registration order is
+    /// the router's iteration order).
+    pub fn model(mut self, name: impl Into<String>, model: ServingModel) -> Self {
+        self.models.push((name.into(), model));
+        self
+    }
+
+    /// Worker-pool width applied to every model (default 1).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Tail-flush deadline for every model's queue (see
+    /// [`MicroBatcher::flush`]).
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Bounded per-model queue: once a model holds this many node slots,
+    /// further submits are load-shed with [`ServeError::Shed`].
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = Some(cap);
+        self
+    }
+
+    pub fn build(self, rt: Runtime) -> Result<ServeEngine, ServeError> {
+        if self.models.is_empty() {
+            return Err(ServeError::NoModels);
+        }
+        if self.threads == 0 {
+            return Err(ServeError::ZeroWorkers);
+        }
+        if let Some(cap) = self.queue_cap {
+            if cap < 2 {
+                return Err(ServeError::QueueCapTooSmall(cap));
+            }
+        }
+        let mut entries: Vec<ModelEntry> = Vec::with_capacity(self.models.len());
+        for (name, mut model) in self.models {
+            if entries.iter().any(|e| e.name == name) {
+                return Err(ServeError::DuplicateModel(name));
+            }
+            model.set_threads(self.threads);
+            let mut queue = MicroBatcher::new();
+            queue.set_deadline(self.deadline);
+            entries.push(ModelEntry { name, model, queue });
+        }
+        Ok(ServeEngine {
+            rt,
+            router: Router::new(entries),
+            next_ticket: 0,
+            threads: self.threads,
+            deadline: self.deadline,
+            queue_cap: self.queue_cap,
+        })
+    }
+}
+
+/// THE serving entry point (see module docs): owns the `Runtime`, the
+/// multi-model [`Router`], and one bounded queue + [`EngineStats`] per
+/// model.  Every caller — CLI file path, socket server, tests, benches —
+/// uses the same shape: `submit(model, req) → poll()/drain() → Served`,
+/// with results merged across models into global submit order (one
+/// engine-wide ticket sequence).
+pub struct ServeEngine {
+    rt: Runtime,
+    router: Router,
+    next_ticket: usize,
+    threads: usize,
+    deadline: Option<Duration>,
+    queue_cap: Option<usize>,
+}
+
+impl ServeEngine {
+    pub fn builder() -> ServeEngineBuilder {
+        ServeEngineBuilder { models: Vec::new(), threads: 1, deadline: None, queue_cap: None }
+    }
+
+    /// Admission control + enqueue; returns the request's global ticket
+    /// id (results sort by it).  Typed refusals — unknown model,
+    /// out-of-range node id (request-controlled data must fail alone, not
+    /// poison a whole flush), and [`ServeError::Shed`] once the model's
+    /// queue is at capacity.
+    pub fn submit(&mut self, model: &str, req: Request) -> Result<usize, ServeError> {
+        let entry = self
+            .router
+            .get_mut(model)
+            .ok_or_else(|| ServeError::UnknownModel(model.to_string()))?;
+        let total = entry.model.total_nodes();
+        let bad = match req {
+            Request::Node(v) => (v as usize >= total).then_some(v),
+            Request::Link(u, v) => [u, v].into_iter().find(|&x| x as usize >= total),
+        };
+        if let Some(id) = bad {
+            return Err(ServeError::InvalidNode { model: model.to_string(), id, total });
+        }
+        if let Some(cap) = self.queue_cap {
+            let depth = entry.queue.pending_slots();
+            if depth + slots_of(&req) > cap {
+                return Err(ServeError::Shed {
+                    model: model.to_string(),
+                    pending_slots: depth,
+                    cap,
+                });
+            }
+        }
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        entry.queue.submit_with_id(ticket, req);
+        Ok(ticket)
+    }
+
+    /// Deadline-driven flush across every model: full batches always cut,
+    /// partial tails only once their oldest request outlives the deadline.
+    pub fn poll(&mut self) -> Result<Vec<Served>> {
+        self.flush_all(false)
+    }
+
+    /// Force-flush everything (padding partial tails) across every model.
+    pub fn drain(&mut self) -> Result<Vec<Served>> {
+        self.flush_all(true)
+    }
+
+    fn flush_all(&mut self, force_tail: bool) -> Result<Vec<Served>> {
+        let rt = &self.rt;
+        let mut served: Vec<Served> = Vec::new();
+        for e in self.router.entries_mut() {
+            served.extend(e.queue.flush_with(rt, &mut e.model, force_tail)?);
+        }
+        // one engine-wide ticket sequence ⇒ sorting recovers submit order
+        served.sort_by_key(|s| s.id);
+        Ok(served)
+    }
+
+    /// Requests queued across every model.
+    pub fn pending(&self) -> usize {
+        self.router.entries().iter().map(|e| e.queue.pending_len()).sum()
+    }
+
+    /// Per-model queue statistics.
+    pub fn stats(&self, model: &str) -> Option<&EngineStats> {
+        self.router.get(model).map(|e| &e.queue.stats)
+    }
+
+    pub fn model(&self, model: &str) -> Option<&ServingModel> {
+        self.router.get(model).map(|e| &e.model)
+    }
+
+    /// Mutable model access (the admission queue verbs, introspection).
+    pub fn model_mut(&mut self, model: &str) -> Option<&mut ServingModel> {
+        self.router.get_mut(model).map(|e| &mut e.model)
+    }
+
+    /// Routing names in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.router.entries().iter().map(|e| e.name.as_str()).collect()
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn deadline(&self) -> Option<Duration> {
+        self.deadline
+    }
+
+    pub fn queue_cap(&self) -> Option<usize> {
+        self.queue_cap
+    }
+
+    /// Widen/narrow every model's worker pool.
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
+        for e in self.router.entries_mut() {
+            e.model.set_threads(n);
+        }
+    }
+
+    /// Hot-add a model behind a new routing name (e.g. a reloaded
+    /// artifact served next to the original).
+    pub fn add_model(
+        &mut self,
+        name: impl Into<String>,
+        mut model: ServingModel,
+    ) -> Result<(), ServeError> {
+        let name = name.into();
+        if self.router.get(&name).is_some() {
+            return Err(ServeError::DuplicateModel(name));
+        }
+        model.set_threads(self.threads);
+        let mut queue = MicroBatcher::new();
+        queue.set_deadline(self.deadline);
+        self.router.push(ModelEntry { name, model, queue });
+        Ok(())
+    }
+
+    /// Admit one unseen node to `model` NOW (the single-writer path; see
+    /// `ServingModel::admit`).
+    pub fn admit(&mut self, model: &str, features: &[f32], neighbors: &[u32]) -> Result<u32> {
+        let rt = &self.rt;
+        let e = self
+            .router
+            .get_mut(model)
+            .with_context(|| format!("admit: unknown model '{model}'"))?;
+        e.model.admit(rt, features, neighbors)
+    }
+
+    /// Apply `model`'s queued admissions FIFO (see
+    /// `ServingModel::admit_queued`).
+    pub fn admit_queued(&mut self, model: &str) -> Result<Vec<u32>> {
+        let rt = &self.rt;
+        let e = self
+            .router
+            .get_mut(model)
+            .with_context(|| format!("admit_queued: unknown model '{model}'"))?;
+        e.model.admit_queued(rt)
+    }
+
+    /// Disassemble the facade — rebuild with a different deadline/cap
+    /// without re-freezing the models (bench reconfiguration).
+    #[allow(clippy::type_complexity)]
+    pub fn into_parts(self) -> (Runtime, Vec<(String, ServingModel)>) {
+        (self.rt, self.router.into_models())
     }
 }

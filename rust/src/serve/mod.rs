@@ -13,31 +13,47 @@
 //!   compiled plan) plus a pool of per-worker sessions
 //!   (`set_threads(N)`), built by freezing a trainer or loading a
 //!   `checkpoint::save_serving` ("VQS2") artifact;
-//! - [`engine::MicroBatcher`] — the request queue: `drain` cuts
-//!   everything (tail padded), `flush` is deadline-driven (partial tails
-//!   wait for newer arrivals until a request's deadline expires); either
-//!   way the batches fan out across the pool, bit-identical to the serial
-//!   schedule for any worker count;
+//! - [`engine::ServeEngine`] — THE serving entry point: owns the
+//!   `Runtime`, routes requests across any number of named models (one
+//!   bounded [`engine::MicroBatcher`] queue + [`EngineStats`] each), and
+//!   answers `submit(model, req) → poll()/drain() → Served`.  `drain`
+//!   cuts everything (tail padded), `poll` is deadline-driven (partial
+//!   tails wait for newer arrivals until a request's deadline expires);
+//!   either way the batches fan out across each model's pool,
+//!   bit-identical to the serial schedule for any worker count.  Bounded
+//!   queues load-shed ([`ServeError::Shed`]) instead of letting tail
+//!   latency grow without bound;
+//! - [`proto`] / [`server`] — the dependency-free length-prefixed TCP
+//!   front-end over `std::net`: framed node/link queries + typed error
+//!   frames in, [`server::run`] drives the engine's deadline flush from a
+//!   listener loop with graceful shutdown (`vq-gnn serve --listen ADDR`,
+//!   exercised by `vq-gnn client`);
 //! - [`admit::AdmittedNodes`] — inductive-node admission: unseen nodes
 //!   (features + arcs into known nodes) are assigned codewords against
 //!   the frozen codebooks and become servable without retraining;
 //! - [`report::LatencyReport`] — p50/p99/qps accounting for the CLI and
 //!   the bench harness.
 //!
-//! Driven by `vq-gnn serve --dataset D --model M --requests FILE
-//! [--threads N] [--deadline-ms D]`.
+//! Driven by `vq-gnn serve --dataset D --model M (--requests FILE |
+//! --listen ADDR) [--threads N] [--deadline-ms D] [--queue-cap C]`.
 
 pub mod admit;
 pub mod cache;
 pub mod engine;
 pub mod model;
+pub mod proto;
 pub mod report;
+pub(crate) mod router;
+pub mod server;
 
 pub use admit::AdmittedNodes;
 pub use cache::EmbeddingCache;
-pub use engine::{EngineStats, MicroBatcher, Served};
+pub use engine::{
+    EngineStats, MicroBatcher, Served, ServeEngine, ServeEngineBuilder, ServeError,
+};
 pub use model::{ServingModel, WorkerStats};
 pub use report::LatencyReport;
+pub use server::ServerReport;
 
 use anyhow::{bail, Result};
 

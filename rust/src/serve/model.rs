@@ -27,6 +27,7 @@
 
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -35,10 +36,10 @@ use crate::coordinator::vq_trainer::VqTrainer;
 use crate::datasets::Dataset;
 use crate::graph::Conv;
 use crate::runtime::manifest::Manifest;
-use crate::runtime::{Artifact, ExecSession, Runtime};
+use crate::runtime::{Artifact, ExecSession, InputSlots, Runtime};
 use crate::serve::admit::AdmissionQueue;
 use crate::serve::cache::EmbeddingCache;
-use crate::util::tensor::{self, Tensor};
+use crate::util::tensor::{self, DType, Tensor};
 use crate::vq::sketch::SketchScratch;
 
 /// The shared immutable half of a serving model (see module docs).
@@ -49,20 +50,29 @@ pub struct ServeCore {
     pub params: Vec<Tensor>,
     pub cache: EmbeddingCache,
     /// Prebuilt input list in spec order: constant slots (params,
-    /// codebooks) filled ONCE, dynamic slots zeroed.  Cloned per session.
-    template: Vec<Tensor>,
-    /// Every batch-dependent slot, grouped per builder pass.
+    /// codebooks) filled ONCE, `Arc`-shared by every worker session; the
+    /// tensors at dynamic positions are placeholders the executor never
+    /// reads (an [`InputSlots::Overlay`] resolves those to the session).
+    template: Arc<Vec<Tensor>>,
+    /// Every batch-dependent slot, grouped per builder pass; indices are
+    /// DENSE positions into a session's `dyn_inputs`.
     dynamic: Vec<DynSlot>,
+    /// Ascending spec positions of the dynamic slots (`dyn_inputs[p]`
+    /// stands in for spec input `dyn_spec_idx[p]`).
+    dyn_spec_idx: Vec<usize>,
     conv: Option<Conv>,
 }
 
-/// One worker's mutable serving state: template clone + outputs + scratch
-/// + detached executor session.  Dynamic input slots are rewritten IN
-/// PLACE per micro-batch — the read path never re-copies frozen weights
-/// and never allocates for a steady-state micro-batch (the
-/// `serve_alloc_bytes` bench key measures this on the 1-session pool).
+/// One worker's mutable serving state: the DYNAMIC input slots only
+/// (xb + sketches — the constant template is `Arc`-shared on the core),
+/// persistent output tensors, a sketch scratch, and a detached executor
+/// session.  Dynamic slots are rewritten IN PLACE per micro-batch — the
+/// read path never re-copies frozen weights and never allocates for a
+/// steady-state micro-batch (the `serve_alloc_bytes` bench key measures
+/// this on the 1-session pool; `serve_session_alloc_bytes` measures the
+/// per-worker spawn cost).
 pub struct ServeSession {
-    pub(crate) inputs: Vec<Tensor>,
+    pub(crate) dyn_inputs: Vec<Tensor>,
     pub(crate) outputs: Vec<Tensor>,
     pub(crate) scratch: SketchScratch,
     pub(crate) exec: ExecSession,
@@ -89,21 +99,24 @@ pub(crate) struct CoreRef<'a> {
     pub art: &'a Artifact,
     pub ds: &'a Dataset,
     pub cache: &'a EmbeddingCache,
+    template: &'a [Tensor],
     dynamic: &'a [DynSlot],
+    dyn_spec_idx: &'a [usize],
     conv: Option<Conv>,
 }
 
 /// Batch-dependent input slots of the serve artifact, grouped so each
 /// sketch-builder pass writes its slot pair in place (via disjoint `&mut`).
+/// All indices are DENSE positions into a session's `dyn_inputs`.
 #[derive(Debug, Clone, Copy)]
 enum DynSlot {
     /// Gathered feature rows.
     Xb(usize),
-    /// Fixed-conv sketch pair of layer `l` at input indices `(c_in, c_out)`.
+    /// Fixed-conv sketch pair of layer `l` at positions `(c_in, c_out)`.
     Fixed { l: usize, c_in: usize, c_out: usize },
     /// Learnable count-sketch pair of layer `l` at `(mask_in, m_out)`.
     Learnable { l: usize, mask_in: usize, m_out: usize },
-    /// txf global histogram of layer `l` at input index `idx`.
+    /// txf global histogram of layer `l` at position `idx`.
     CntOut { l: usize, idx: usize },
 }
 
@@ -113,15 +126,18 @@ fn serve_artifact_name(ds: &str, model: &str) -> String {
 
 /// Fill the constant input slots (params + raw codebooks) and index the
 /// dynamic ones.  Placeholder zeros keep every slot shape/dtype-correct;
-/// each dynamic slot is rewritten in place on every micro-batch.
+/// each dynamic slot is rewritten in place on every micro-batch.  Returns
+/// `(template, dynamic, dyn_spec_idx)` with the slot indices inside
+/// `dynamic` already remapped to dense positions (see [`DynSlot`]).
 fn build_input_template(
     spec: &crate::runtime::manifest::ArtifactSpec,
     params: &[Tensor],
     cache: &EmbeddingCache,
-) -> Result<(Vec<Tensor>, Vec<DynSlot>)> {
+) -> Result<(Vec<Tensor>, Vec<DynSlot>, Vec<usize>)> {
     let nl = spec.plan.len();
     let mut inputs = Vec::with_capacity(spec.inputs.len());
     let mut dynamic = Vec::new();
+    let mut dyn_spec_idx = Vec::new();
     // per-layer partner indices, paired up after the scan
     let mut c_in_idx = vec![None; nl];
     let mut c_out_idx = vec![None; nl];
@@ -132,6 +148,7 @@ fn build_input_template(
         let name = ts.name.as_str();
         if name == "xb" {
             dynamic.push(DynSlot::Xb(idx));
+            dyn_spec_idx.push(idx);
             inputs.push(Tensor::zeros(&ts.shape));
         } else if name.starts_with("param.") {
             inputs.push(params[pi].clone());
@@ -166,6 +183,7 @@ fn build_input_template(
                 other => bail!("unknown serve ctx field {other}"),
             };
             if known && field != "cw" {
+                dyn_spec_idx.push(idx);
                 inputs.push(Tensor::zeros(&ts.shape));
             }
         } else {
@@ -183,7 +201,23 @@ fn build_input_template(
             other => bail!("serve layer {l}: incomplete sketch slot pair {other:?}"),
         }
     }
-    Ok((inputs, dynamic))
+    // Remap the slots' spec indices to dense positions into `dyn_inputs`
+    // (dyn_spec_idx ascends by construction — the scan ran in spec order).
+    let dense = |i: usize| dyn_spec_idx.binary_search(&i).expect("dynamic slot index");
+    let dynamic = dynamic
+        .into_iter()
+        .map(|d| match d {
+            DynSlot::Xb(i) => DynSlot::Xb(dense(i)),
+            DynSlot::Fixed { l, c_in, c_out } => {
+                DynSlot::Fixed { l, c_in: dense(c_in), c_out: dense(c_out) }
+            }
+            DynSlot::Learnable { l, mask_in, m_out } => {
+                DynSlot::Learnable { l, mask_in: dense(mask_in), m_out: dense(m_out) }
+            }
+            DynSlot::CntOut { l, idx } => DynSlot::CntOut { l, idx: dense(idx) },
+        })
+        .collect();
+    Ok((inputs, dynamic, dyn_spec_idx))
 }
 
 impl ServeCore {
@@ -195,15 +229,27 @@ impl ServeCore {
         }
     }
 
-    /// Detach one fresh worker session from this core.  The session clones
-    /// the input template, so each worker carries its own copy of the
-    /// constant slots (params + codebooks) — `Tensor` owns its storage, so
-    /// true sharing needs Arc-backed tensors (ROADMAP).  Per-worker cost
-    /// is the template bytes; the cache's big tables (assignments,
-    /// admitted store) stay shared.
+    /// Detach one fresh worker session from this core.  The session holds
+    /// ONLY the dynamic input slots (xb + sketches) plus scratch and the
+    /// executor's step arena — the constant slots (params + codebooks)
+    /// stay on the core's `Arc`-shared template and are read through an
+    /// [`InputSlots::Overlay`] view at execute time, so widening the pool
+    /// never re-copies frozen weights.
     fn new_session(&self) -> ServeSession {
+        let spec = &self.art.spec;
+        let dyn_inputs = self
+            .dyn_spec_idx
+            .iter()
+            .map(|&i| {
+                let ts = &spec.inputs[i];
+                match ts.dtype {
+                    DType::F32 => Tensor::zeros(&ts.shape),
+                    DType::I32 => Tensor::from_i32(&ts.shape, vec![0; ts.numel()]),
+                }
+            })
+            .collect();
         ServeSession {
-            inputs: self.template.clone(),
+            dyn_inputs,
             outputs: Vec::new(),
             scratch: SketchScratch::new(self.cache.total_nodes()),
             exec: self.art.new_session(),
@@ -212,12 +258,20 @@ impl ServeCore {
         }
     }
 
+    /// Bytes of the constant input template — resident ONCE per model
+    /// behind the `Arc`, not once per worker.
+    pub fn template_bytes(&self) -> usize {
+        self.template.iter().map(Tensor::bytes).sum()
+    }
+
     pub(crate) fn view(&self) -> CoreRef<'_> {
         CoreRef {
             art: &self.art,
             ds: &self.ds,
             cache: &self.cache,
+            template: self.template.as_slice(),
             dynamic: &self.dynamic,
+            dyn_spec_idx: &self.dyn_spec_idx,
             conv: self.conv,
         }
     }
@@ -256,10 +310,10 @@ impl CoreRef<'_> {
                     &ds.features,
                     ds.cfg.f_in_pad,
                     batch,
-                    &mut sess.inputs[idx].f,
+                    &mut sess.dyn_inputs[idx].f,
                 ),
                 DynSlot::Fixed { l, c_in, c_out } => {
-                    let (ti, to) = tensor::mut2(&mut sess.inputs, c_in, c_out);
+                    let (ti, to) = tensor::mut2(&mut sess.dyn_inputs, c_in, c_out);
                     cache.layers[l].build_fixed_fwd_into(
                         &ds.graph,
                         &cache.admitted,
@@ -271,7 +325,7 @@ impl CoreRef<'_> {
                     );
                 }
                 DynSlot::Learnable { l, mask_in, m_out } => {
-                    let (tm, to) = tensor::mut2(&mut sess.inputs, mask_in, m_out);
+                    let (tm, to) = tensor::mut2(&mut sess.dyn_inputs, mask_in, m_out);
                     cache.layers[l].build_learnable_fwd_into(
                         &ds.graph,
                         &cache.admitted,
@@ -284,7 +338,7 @@ impl CoreRef<'_> {
                 DynSlot::CntOut { l, idx } => cache.layers[l].build_cnt_fwd_into(
                     batch,
                     &mut sess.scratch,
-                    &mut sess.inputs[idx].f,
+                    &mut sess.dyn_inputs[idx].f,
                 ),
             }
         }
@@ -302,7 +356,13 @@ impl CoreRef<'_> {
         let t0 = std::time::Instant::now();
         self.check_batch(batch)?;
         self.fill_inputs(sess, batch);
-        self.art.run_session(&sess.inputs, &mut sess.outputs, &mut sess.exec)?;
+        let ServeSession { dyn_inputs, outputs, exec, .. } = sess;
+        let view = InputSlots::Overlay {
+            base: self.template,
+            idx: self.dyn_spec_idx,
+            dynamic: dyn_inputs.as_slice(),
+        };
+        self.art.run_slots(view, outputs, exec)?;
         sess.batches += 1;
         sess.busy_s += t0.elapsed().as_secs_f64();
         Ok(())
@@ -380,15 +440,16 @@ impl ServingModel {
         }
         let params = tr.params.clone();
         let cache = EmbeddingCache::from_vq(&tr.vq);
-        let (template, dynamic) = build_input_template(spec, &params, &cache)?;
+        let (template, dynamic, dyn_spec_idx) = build_input_template(spec, &params, &cache)?;
         let core = ServeCore {
             conv: ServeCore::conv_of(&tr.model_name),
             ds: tr.ds.clone(),
             model_name: tr.model_name.clone(),
             params,
             cache,
-            template,
+            template: Arc::new(template),
             dynamic,
+            dyn_spec_idx,
             art,
         };
         let pool = vec![core.new_session()];
@@ -454,15 +515,16 @@ impl ServingModel {
             );
         }
         let cache = EmbeddingCache::from_serving_layers(&spec.plan, layers, admitted);
-        let (template, dynamic) = build_input_template(spec, &params, &cache)?;
+        let (template, dynamic, dyn_spec_idx) = build_input_template(spec, &params, &cache)?;
         let core = ServeCore {
             conv: ServeCore::conv_of(model_name),
             ds,
             model_name: model_name.to_string(),
             params,
             cache,
-            template,
+            template: Arc::new(template),
             dynamic,
+            dyn_spec_idx,
             art,
         };
         let pool = vec![core.new_session()];
@@ -488,6 +550,20 @@ impl ServingModel {
     /// Total servable ids: dataset nodes + admitted nodes.
     pub fn total_nodes(&self) -> usize {
         self.core.cache.total_nodes()
+    }
+
+    /// Whether the dataset is a link task — its output rows are embedding
+    /// vectors, not class scores (drives the wire SCORES `embedding` flag
+    /// and the CLI's `emb_norm` rendering).
+    pub fn link_task(&self) -> bool {
+        self.core.ds.cfg.task == "link"
+    }
+
+    /// Bytes of ONE worker's dynamic input slots — the whole per-worker
+    /// resident input cost, since the constant template is `Arc`-shared
+    /// across the pool and counted once by `ServeCore::template_bytes`.
+    pub fn worker_dyn_bytes(&self) -> usize {
+        self.pool[0].dyn_inputs.iter().map(Tensor::bytes).sum()
     }
 
     /// Worker-pool width.

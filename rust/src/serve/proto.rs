@@ -1,0 +1,541 @@
+//! Dependency-free wire protocol for the socket serving front-end:
+//! length-prefixed frames over TCP (`std::net` only).
+//!
+//! ```text
+//! frame := len:u32le payload              (len excludes the prefix, ≤ 1 MiB)
+//!
+//! request payloads (first byte = kind):
+//!   0x01 NODE     req_id:u64le  mlen:u8  model:utf8[mlen]  node:u32le
+//!   0x02 LINK     req_id:u64le  mlen:u8  model:utf8[mlen]  u:u32le  v:u32le
+//!   0x03 DRAIN    (force-flush partial tails now)
+//!   0x04 SHUTDOWN (drain everything, reply, stop the server)
+//!   0x05 PING     req_id:u64le
+//!
+//! response payloads:
+//!   0x81 SCORES   req_id:u64le  flags:u8  n:u32le  n × f32le
+//!                 (flags bit0: the row is an embedding, not class scores)
+//!   0x82 LINK     req_id:u64le  score:f32le
+//!   0x83 ERROR    req_id:u64le  code:u8  mlen:u16le  msg:utf8[mlen]
+//!                 (req_id = u64::MAX when the frame never parsed)
+//!   0x85 PONG     req_id:u64le
+//!
+//! error codes:
+//!   1 SHED           bounded queue at capacity — retry later
+//!   2 UNKNOWN_MODEL  routing name not registered
+//!   3 BAD_REQUEST    well-formed frame, unserviceable query (bad node id)
+//!   4 MALFORMED      frame failed to decode (connection survives unless
+//!                    the length prefix itself is unusable)
+//!   5 INTERNAL       engine failure
+//! ```
+//!
+//! All integers little-endian.  Decoding is fully typed ([`ProtoError`]):
+//! a malformed payload never panics and never desynchronizes the framing
+//! layer ([`Framer`] consumes exactly the declared length).  An oversized
+//! length prefix is the one unrecoverable case — the byte stream can no
+//! longer be trusted, so the server replies MALFORMED and hangs up.
+
+use std::io::{self, Read};
+
+/// Hard ceiling on a frame's payload length.  Largest legitimate frame is
+/// a SCORES row (a few KiB); anything near 1 MiB is garbage or abuse.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// `req_id` attached to error frames for requests that never parsed.
+pub const NO_REQ_ID: u64 = u64::MAX;
+
+const K_NODE: u8 = 0x01;
+const K_LINK: u8 = 0x02;
+const K_DRAIN: u8 = 0x03;
+const K_SHUTDOWN: u8 = 0x04;
+const K_PING: u8 = 0x05;
+const K_SCORES: u8 = 0x81;
+const K_LINKSCORE: u8 = 0x82;
+const K_ERROR: u8 = 0x83;
+const K_PONG: u8 = 0x85;
+
+/// One decoded client→server frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireRequest {
+    Node { req_id: u64, model: String, node: u32 },
+    Link { req_id: u64, model: String, u: u32, v: u32 },
+    Drain,
+    Shutdown,
+    Ping { req_id: u64 },
+}
+
+/// One decoded server→client frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireResponse {
+    Scores { req_id: u64, embedding: bool, row: Vec<f32> },
+    Link { req_id: u64, score: f32 },
+    Error { req_id: u64, code: ErrCode, msg: String },
+    Pong { req_id: u64 },
+}
+
+/// Typed wire error codes (the `code` byte of an ERROR frame).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    Shed = 1,
+    UnknownModel = 2,
+    BadRequest = 3,
+    Malformed = 4,
+    Internal = 5,
+}
+
+impl ErrCode {
+    fn from_u8(b: u8) -> Option<ErrCode> {
+        match b {
+            1 => Some(ErrCode::Shed),
+            2 => Some(ErrCode::UnknownModel),
+            3 => Some(ErrCode::BadRequest),
+            4 => Some(ErrCode::Malformed),
+            5 => Some(ErrCode::Internal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrCode::Shed => "SHED",
+            ErrCode::UnknownModel => "UNKNOWN_MODEL",
+            ErrCode::BadRequest => "BAD_REQUEST",
+            ErrCode::Malformed => "MALFORMED",
+            ErrCode::Internal => "INTERNAL",
+        }
+    }
+}
+
+/// Typed decode failures.  None of these panic, and only `Oversize`
+/// poisons the framing layer (the declared length cannot be skipped).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Length prefix exceeds [`MAX_FRAME`] — the stream is unusable.
+    Oversize { len: usize, max: usize },
+    /// Payload ended before a field completed (truncated frame, or a
+    /// mid-frame disconnect surfaced at EOF).
+    Truncated { need: usize, got: usize },
+    /// Unknown kind byte.
+    BadKind(u8),
+    /// Model name is not UTF-8.
+    BadUtf8,
+    /// Payload has bytes past the last field.
+    Trailing { extra: usize },
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Oversize { len, max } => {
+                write!(f, "frame length {len} exceeds the {max}-byte cap")
+            }
+            ProtoError::Truncated { need, got } => {
+                write!(f, "truncated frame: need {need} bytes, got {got}")
+            }
+            ProtoError::BadKind(b) => write!(f, "unknown frame kind 0x{b:02x}"),
+            ProtoError::BadUtf8 => write!(f, "model name is not valid UTF-8"),
+            ProtoError::Trailing { extra } => {
+                write!(f, "{extra} trailing byte(s) after the last field")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+// ---- little-endian writer/reader helpers -------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.pos + n > self.buf.len() {
+            return Err(ProtoError::Truncated { need: self.pos + n, got: self.buf.len() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, ProtoError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<(), ProtoError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtoError::Trailing { extra: self.buf.len() - self.pos });
+        }
+        Ok(())
+    }
+}
+
+fn frame(payload: Vec<u8>) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_FRAME);
+    let mut out = Vec::with_capacity(4 + payload.len());
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+// ---- encode ------------------------------------------------------------
+
+/// Encode a request INCLUDING its 4-byte length prefix.
+pub fn encode_request(req: &WireRequest) -> Vec<u8> {
+    let mut p = Vec::new();
+    match req {
+        WireRequest::Node { req_id, model, node } => {
+            assert!(model.len() <= u8::MAX as usize, "model name too long for the wire");
+            p.push(K_NODE);
+            put_u64(&mut p, *req_id);
+            p.push(model.len() as u8);
+            p.extend_from_slice(model.as_bytes());
+            put_u32(&mut p, *node);
+        }
+        WireRequest::Link { req_id, model, u, v } => {
+            assert!(model.len() <= u8::MAX as usize, "model name too long for the wire");
+            p.push(K_LINK);
+            put_u64(&mut p, *req_id);
+            p.push(model.len() as u8);
+            p.extend_from_slice(model.as_bytes());
+            put_u32(&mut p, *u);
+            put_u32(&mut p, *v);
+        }
+        WireRequest::Drain => p.push(K_DRAIN),
+        WireRequest::Shutdown => p.push(K_SHUTDOWN),
+        WireRequest::Ping { req_id } => {
+            p.push(K_PING);
+            put_u64(&mut p, *req_id);
+        }
+    }
+    frame(p)
+}
+
+/// Encode a response INCLUDING its 4-byte length prefix.
+pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
+    let mut p = Vec::new();
+    match resp {
+        WireResponse::Scores { req_id, embedding, row } => {
+            p.push(K_SCORES);
+            put_u64(&mut p, *req_id);
+            p.push(u8::from(*embedding));
+            put_u32(&mut p, row.len() as u32);
+            for &x in row {
+                put_f32(&mut p, x);
+            }
+        }
+        WireResponse::Link { req_id, score } => {
+            p.push(K_LINKSCORE);
+            put_u64(&mut p, *req_id);
+            put_f32(&mut p, *score);
+        }
+        WireResponse::Error { req_id, code, msg } => {
+            let msg = &msg.as_bytes()[..msg.len().min(u16::MAX as usize)];
+            p.push(K_ERROR);
+            put_u64(&mut p, *req_id);
+            p.push(*code as u8);
+            p.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+            p.extend_from_slice(msg);
+        }
+        WireResponse::Pong { req_id } => {
+            p.push(K_PONG);
+            put_u64(&mut p, *req_id);
+        }
+    }
+    frame(p)
+}
+
+// ---- decode ------------------------------------------------------------
+
+fn take_model(r: &mut Reader<'_>) -> Result<String, ProtoError> {
+    let mlen = r.u8()? as usize;
+    let raw = r.take(mlen)?;
+    String::from_utf8(raw.to_vec()).map_err(|_| ProtoError::BadUtf8)
+}
+
+/// Decode one request payload (the bytes AFTER the length prefix).
+pub fn decode_request(payload: &[u8]) -> Result<WireRequest, ProtoError> {
+    let mut r = Reader::new(payload);
+    let req = match r.u8()? {
+        K_NODE => {
+            let req_id = r.u64()?;
+            let model = take_model(&mut r)?;
+            WireRequest::Node { req_id, model, node: r.u32()? }
+        }
+        K_LINK => {
+            let req_id = r.u64()?;
+            let model = take_model(&mut r)?;
+            WireRequest::Link { req_id, model, u: r.u32()?, v: r.u32()? }
+        }
+        K_DRAIN => WireRequest::Drain,
+        K_SHUTDOWN => WireRequest::Shutdown,
+        K_PING => WireRequest::Ping { req_id: r.u64()? },
+        other => return Err(ProtoError::BadKind(other)),
+    };
+    r.done()?;
+    Ok(req)
+}
+
+/// Decode one response payload (the bytes AFTER the length prefix).
+pub fn decode_response(payload: &[u8]) -> Result<WireResponse, ProtoError> {
+    let mut r = Reader::new(payload);
+    let resp = match r.u8()? {
+        K_SCORES => {
+            let req_id = r.u64()?;
+            let embedding = r.u8()? != 0;
+            let n = r.u32()? as usize;
+            if n > MAX_FRAME / 4 {
+                return Err(ProtoError::Oversize { len: n * 4, max: MAX_FRAME });
+            }
+            let mut row = Vec::with_capacity(n);
+            for _ in 0..n {
+                row.push(r.f32()?);
+            }
+            WireResponse::Scores { req_id, embedding, row }
+        }
+        K_LINKSCORE => WireResponse::Link { req_id: r.u64()?, score: r.f32()? },
+        K_ERROR => {
+            let req_id = r.u64()?;
+            let code = ErrCode::from_u8(r.u8()?).ok_or(ProtoError::BadKind(K_ERROR))?;
+            let mlen = u16::from_le_bytes(r.take(2)?.try_into().unwrap()) as usize;
+            let msg =
+                String::from_utf8(r.take(mlen)?.to_vec()).map_err(|_| ProtoError::BadUtf8)?;
+            WireResponse::Error { req_id, code, msg }
+        }
+        K_PONG => WireResponse::Pong { req_id: r.u64()? },
+        other => return Err(ProtoError::BadKind(other)),
+    };
+    r.done()?;
+    Ok(resp)
+}
+
+// ---- framing -----------------------------------------------------------
+
+/// Incremental frame accumulator for nonblocking/timeout reads: feed it
+/// whatever bytes arrive, pop complete payloads.  Survives arbitrary
+/// fragmentation; the one fatal state is an oversized length prefix.
+#[derive(Default)]
+pub struct Framer {
+    buf: Vec<u8>,
+}
+
+impl Framer {
+    pub fn new() -> Framer {
+        Framer::default()
+    }
+
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame's payload, `None` if more bytes are
+    /// needed, `Err` on an unusable length prefix.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>, ProtoError> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+        if len > MAX_FRAME {
+            return Err(ProtoError::Oversize { len, max: MAX_FRAME });
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let payload = self.buf[4..4 + len].to_vec();
+        self.buf.drain(..4 + len);
+        Ok(Some(payload))
+    }
+
+    /// Bytes buffered that do not yet form a whole frame.  Non-zero at
+    /// EOF means the peer died mid-frame.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// The typed error describing the buffered partial frame (for EOF
+    /// reporting); `None` when the buffer is empty.
+    pub fn eof_error(&self) -> Option<ProtoError> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let need = if self.buf.len() >= 4 {
+            4 + u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize
+        } else {
+            4
+        };
+        Some(ProtoError::Truncated { need, got: self.buf.len() })
+    }
+}
+
+/// Blocking read of one whole frame (the CLIENT side, where the socket
+/// has no read timeout).  `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+    let mut lenb = [0u8; 4];
+    match r.read_exact(&mut lenb) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(lenb) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            ProtoError::Oversize { len, max: MAX_FRAME },
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip(framed: &[u8]) -> &[u8] {
+        &framed[4..]
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = [
+            WireRequest::Node { req_id: 7, model: "gcn".into(), node: 42 },
+            WireRequest::Link { req_id: u64::MAX - 1, model: "sage".into(), u: 0, v: 9 },
+            WireRequest::Drain,
+            WireRequest::Shutdown,
+            WireRequest::Ping { req_id: 3 },
+        ];
+        for req in reqs {
+            let framed = encode_request(&req);
+            let len = u32::from_le_bytes(framed[..4].try_into().unwrap()) as usize;
+            assert_eq!(len + 4, framed.len(), "prefix counts payload only");
+            assert_eq!(decode_request(strip(&framed)).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resps = [
+            WireResponse::Scores {
+                req_id: 1,
+                embedding: true,
+                row: vec![1.5, -2.25, f32::MIN_POSITIVE],
+            },
+            WireResponse::Scores { req_id: 2, embedding: false, row: vec![] },
+            WireResponse::Link { req_id: 3, score: -0.125 },
+            WireResponse::Error {
+                req_id: NO_REQ_ID,
+                code: ErrCode::Shed,
+                msg: "queue full".into(),
+            },
+            WireResponse::Pong { req_id: 4 },
+        ];
+        for resp in resps {
+            let framed = encode_response(&resp);
+            assert_eq!(decode_response(strip(&framed)).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed_errors() {
+        // unknown kind
+        assert_eq!(decode_request(&[0x7f]), Err(ProtoError::BadKind(0x7f)));
+        // empty payload
+        assert_eq!(decode_request(&[]), Err(ProtoError::Truncated { need: 1, got: 0 }));
+        // node frame cut mid-req_id
+        let full = encode_request(&WireRequest::Node {
+            req_id: 9,
+            model: "gcn".into(),
+            node: 1,
+        });
+        let payload = strip(&full);
+        for cut in 1..payload.len() {
+            let err = decode_request(&payload[..cut]).unwrap_err();
+            assert!(
+                matches!(err, ProtoError::Truncated { .. }),
+                "cut at {cut} gave {err:?}"
+            );
+        }
+        // trailing garbage is refused, not ignored
+        let mut long = payload.to_vec();
+        long.push(0xAA);
+        assert_eq!(decode_request(&long), Err(ProtoError::Trailing { extra: 1 }));
+        // non-UTF-8 model name
+        let mut bad = vec![0x01];
+        bad.extend_from_slice(&5u64.to_le_bytes());
+        bad.push(2);
+        bad.extend_from_slice(&[0xff, 0xfe]);
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        assert_eq!(decode_request(&bad), Err(ProtoError::BadUtf8));
+    }
+
+    #[test]
+    fn framer_reassembles_fragmented_frames() {
+        let a = encode_request(&WireRequest::Ping { req_id: 1 });
+        let b = encode_request(&WireRequest::Node { req_id: 2, model: "gcn".into(), node: 3 });
+        let stream: Vec<u8> = a.iter().chain(&b).copied().collect();
+        // feed one byte at a time: frames pop exactly at their boundaries
+        let mut fr = Framer::new();
+        let mut got = Vec::new();
+        for &byte in &stream {
+            fr.extend(&[byte]);
+            while let Some(p) = fr.next_frame().unwrap() {
+                got.push(decode_request(&p).unwrap());
+            }
+        }
+        assert_eq!(
+            got,
+            vec![
+                WireRequest::Ping { req_id: 1 },
+                WireRequest::Node { req_id: 2, model: "gcn".into(), node: 3 }
+            ]
+        );
+        assert_eq!(fr.pending_bytes(), 0);
+        assert!(fr.eof_error().is_none());
+    }
+
+    #[test]
+    fn framer_oversize_and_truncation() {
+        let mut fr = Framer::new();
+        fr.extend(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert_eq!(
+            fr.next_frame(),
+            Err(ProtoError::Oversize { len: MAX_FRAME + 1, max: MAX_FRAME })
+        );
+        // a partial frame reports a typed truncation at EOF
+        let mut fr = Framer::new();
+        fr.extend(&10u32.to_le_bytes());
+        fr.extend(&[1, 2, 3]);
+        assert_eq!(fr.next_frame(), Ok(None));
+        assert_eq!(fr.eof_error(), Some(ProtoError::Truncated { need: 14, got: 7 }));
+    }
+}

@@ -1,0 +1,49 @@
+//! Multi-model router: the `ServeEngine`'s name → (model, queue) table.
+//! Linear scan over a handful of registered models — routing cost is
+//! nanoseconds next to a micro-batch, and registration order stays the
+//! iteration (flush) order, which keeps multi-model drains deterministic.
+
+use crate::serve::engine::MicroBatcher;
+use crate::serve::model::ServingModel;
+
+/// One routed model: its serving pool plus its own bounded micro-batch
+/// queue (per-model `EngineStats` live on the queue).
+pub(crate) struct ModelEntry {
+    pub name: String,
+    pub model: ServingModel,
+    pub queue: MicroBatcher,
+}
+
+pub(crate) struct Router {
+    entries: Vec<ModelEntry>,
+}
+
+impl Router {
+    pub fn new(entries: Vec<ModelEntry>) -> Router {
+        Router { entries }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut ModelEntry> {
+        self.entries.iter_mut().find(|e| e.name == name)
+    }
+
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.entries
+    }
+
+    pub fn entries_mut(&mut self) -> &mut [ModelEntry] {
+        &mut self.entries
+    }
+
+    pub fn push(&mut self, entry: ModelEntry) {
+        self.entries.push(entry);
+    }
+
+    pub fn into_models(self) -> Vec<(String, ServingModel)> {
+        self.entries.into_iter().map(|e| (e.name, e.model)).collect()
+    }
+}

@@ -1,0 +1,409 @@
+//! Socket front-end: a `std::net` TCP listener feeding the
+//! [`ServeEngine`]'s micro-batcher.
+//!
+//! Thread layout (all scoped — [`run`] returns only after every thread
+//! has exited):
+//!
+//! ```text
+//!   caller thread          accept thread        per connection
+//!   ─────────────          ─────────────        ──────────────
+//!   batcher loop  ◀─mpsc── accept() ──spawns──▶ reader (socket → events)
+//!   (owns engine)                               writer (frames → socket)
+//! ```
+//!
+//! The engine stays on the caller's thread — serving cores hold `Rc`s, so
+//! the facade is deliberately `!Send` — and every socket thread talks to
+//! it through one event channel.  The batcher loop wakes on events or on
+//! a tick derived from the engine deadline, calls [`ServeEngine::poll`]
+//! (deadline flush) or [`ServeEngine::drain`] (DRAIN/SHUTDOWN frames),
+//! and routes each [`Served`](crate::serve::Served) answer back to the
+//! connection that submitted it.
+//!
+//! Failure containment: a malformed frame earns a typed ERROR frame and
+//! the connection keeps going; an unusable length prefix earns the ERROR
+//! and a hang-up; a mid-stream disconnect just drops that connection's
+//! reply route — queued work still executes and the pool is never
+//! poisoned.  Load-shedding ([`ServeError::Shed`]) is a SHED error frame,
+//! not a dropped connection.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::serve::engine::{ServeEngine, ServeError};
+use crate::serve::proto::{
+    self, ErrCode, Framer, ProtoError, WireRequest, WireResponse, NO_REQ_ID,
+};
+use crate::serve::{Answer, Request};
+
+/// What one [`run`] lifetime did (the CLI prints it; tests assert on it).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ServerReport {
+    /// Connections accepted.
+    pub connections: u64,
+    /// Node/link query frames received (control frames excluded).
+    pub requests: u64,
+    /// Queries answered with scores.
+    pub served: u64,
+    /// Queries refused by the load-shedding policy.
+    pub shed: u64,
+    /// Error frames other than SHED (malformed, unknown model, bad node).
+    pub errors: u64,
+}
+
+enum Event {
+    Connect { conn: u64, tx: mpsc::Sender<Vec<u8>> },
+    Request { conn: u64, req: WireRequest },
+    Malformed { conn: u64, err: ProtoError },
+    Disconnect { conn: u64 },
+}
+
+/// A submitted query awaiting its flush: where the answer goes.
+struct Pending {
+    conn: u64,
+    req_id: u64,
+    embedding: bool,
+}
+
+fn send_to(conns: &HashMap<u64, mpsc::Sender<Vec<u8>>>, conn: u64, resp: &WireResponse) {
+    if let Some(tx) = conns.get(&conn) {
+        // a send to a closing connection just drops the frame — the
+        // writer thread is already unwinding
+        let _ = tx.send(proto::encode_response(resp));
+    }
+}
+
+/// Socket → events.  Read timeout (25 ms) doubles as the stop-flag poll
+/// interval, so shutdown never waits on a silent peer.
+fn reader_loop(mut stream: TcpStream, conn: u64, etx: mpsc::Sender<Event>, stop: &AtomicBool) {
+    let mut framer = Framer::new();
+    let mut buf = [0u8; 4096];
+    'read: loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                // EOF mid-frame is a typed truncation, not silence
+                if let Some(err) = framer.eof_error() {
+                    let _ = etx.send(Event::Malformed { conn, err });
+                }
+                break;
+            }
+            Ok(n) => {
+                framer.extend(&buf[..n]);
+                loop {
+                    match framer.next_frame() {
+                        Ok(Some(payload)) => {
+                            let ev = match proto::decode_request(&payload) {
+                                Ok(req) => Event::Request { conn, req },
+                                // bad payload: report it, keep the
+                                // connection — framing is still aligned
+                                Err(err) => Event::Malformed { conn, err },
+                            };
+                            let _ = etx.send(ev);
+                        }
+                        Ok(None) => break,
+                        Err(err) => {
+                            // unusable length prefix — the stream can't
+                            // be re-synchronized, hang up
+                            let _ = etx.send(Event::Malformed { conn, err });
+                            break 'read;
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+    }
+    let _ = etx.send(Event::Disconnect { conn });
+}
+
+/// Frames → socket.  Exits once every sender is gone AND the queue is
+/// drained, so replies issued just before a disconnect still go out.
+fn writer_loop(mut stream: TcpStream, wrx: mpsc::Receiver<Vec<u8>>) {
+    for frame in wrx.iter() {
+        if stream.write_all(&frame).is_err() {
+            break;
+        }
+    }
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn submit_query(
+    engine: &mut ServeEngine,
+    embed: &[(String, bool)],
+    conns: &HashMap<u64, mpsc::Sender<Vec<u8>>>,
+    inflight: &mut HashMap<usize, Pending>,
+    report: &mut ServerReport,
+    conn: u64,
+    req_id: u64,
+    model: &str,
+    req: Request,
+) {
+    report.requests += 1;
+    match engine.submit(model, req) {
+        Ok(ticket) => {
+            let embedding = embed
+                .iter()
+                .find(|(m, _)| m.as_str() == model)
+                .map(|&(_, e)| e)
+                .unwrap_or(false);
+            inflight.insert(ticket, Pending { conn, req_id, embedding });
+        }
+        Err(e) => {
+            let code = match &e {
+                ServeError::Shed { .. } => {
+                    report.shed += 1;
+                    ErrCode::Shed
+                }
+                ServeError::UnknownModel(_) => {
+                    report.errors += 1;
+                    ErrCode::UnknownModel
+                }
+                ServeError::InvalidNode { .. } => {
+                    report.errors += 1;
+                    ErrCode::BadRequest
+                }
+                _ => {
+                    report.errors += 1;
+                    ErrCode::Internal
+                }
+            };
+            send_to(conns, conn, &WireResponse::Error { req_id, code, msg: e.to_string() });
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_event(
+    ev: Event,
+    engine: &mut ServeEngine,
+    embed: &[(String, bool)],
+    conns: &mut HashMap<u64, mpsc::Sender<Vec<u8>>>,
+    inflight: &mut HashMap<usize, Pending>,
+    report: &mut ServerReport,
+    stopping: &mut bool,
+    drain_now: &mut bool,
+) {
+    match ev {
+        Event::Connect { conn, tx } => {
+            conns.insert(conn, tx);
+            report.connections += 1;
+        }
+        Event::Disconnect { conn } => {
+            // answers already queued for this conn execute normally and
+            // are dropped at send_to — nothing to unwind
+            conns.remove(&conn);
+        }
+        Event::Malformed { conn, err } => {
+            report.errors += 1;
+            send_to(
+                conns,
+                conn,
+                &WireResponse::Error {
+                    req_id: NO_REQ_ID,
+                    code: ErrCode::Malformed,
+                    msg: err.to_string(),
+                },
+            );
+        }
+        Event::Request { conn, req } => match req {
+            WireRequest::Ping { req_id } => {
+                send_to(conns, conn, &WireResponse::Pong { req_id });
+            }
+            WireRequest::Drain => *drain_now = true,
+            WireRequest::Shutdown => *stopping = true,
+            WireRequest::Node { req_id, model, node } => submit_query(
+                engine,
+                embed,
+                conns,
+                inflight,
+                report,
+                conn,
+                req_id,
+                &model,
+                Request::Node(node),
+            ),
+            WireRequest::Link { req_id, model, u, v } => submit_query(
+                engine,
+                embed,
+                conns,
+                inflight,
+                report,
+                conn,
+                req_id,
+                &model,
+                Request::Link(u, v),
+            ),
+        },
+    }
+}
+
+/// Serve `engine` on `listener` until a SHUTDOWN frame arrives (then
+/// drain everything, reply, and return).  The flush cadence is half the
+/// engine deadline (clamped to [1 ms, 50 ms]; 5 ms when no deadline is
+/// set, where `poll` only ever cuts full batches anyway).
+pub fn run(engine: &mut ServeEngine, listener: TcpListener) -> Result<ServerReport> {
+    listener.set_nonblocking(true).context("serve: set_nonblocking on listener")?;
+    let tick = engine
+        .deadline()
+        .map(|d| (d / 2).max(Duration::from_millis(1)))
+        .unwrap_or(Duration::from_millis(5))
+        .min(Duration::from_millis(50));
+    // per-model embedding flag, resolved once: link-task rows are
+    // embeddings and the SCORES frame says so
+    let embed: Vec<(String, bool)> = engine
+        .models()
+        .iter()
+        .map(|m| (m.to_string(), engine.model(m).map(|sm| sm.link_task()).unwrap_or(false)))
+        .collect();
+    let stop = AtomicBool::new(false);
+    let (etx, erx) = mpsc::channel::<Event>();
+    let mut report = ServerReport::default();
+    let mut fatal: Option<anyhow::Error> = None;
+
+    thread::scope(|s| {
+        let stop = &stop;
+        // ---- acceptor: owns the listener, spawns a reader + writer per
+        // connection into the same scope ------------------------------
+        s.spawn(move || {
+            let mut next_conn = 0u64;
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _addr)) => {
+                        let conn = next_conn;
+                        next_conn += 1;
+                        let _ = stream.set_nodelay(true);
+                        let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
+                        let (wtx, wrx) = mpsc::channel::<Vec<u8>>();
+                        if etx.send(Event::Connect { conn, tx: wtx }).is_err() {
+                            break; // batcher is gone
+                        }
+                        let rstream = match stream.try_clone() {
+                            Ok(st) => st,
+                            Err(_) => continue,
+                        };
+                        let retx = etx.clone();
+                        s.spawn(move || reader_loop(rstream, conn, retx, stop));
+                        s.spawn(move || writer_loop(stream, wrx));
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(2)),
+                }
+            }
+        });
+
+        // ---- batcher loop: the engine never leaves this thread -------
+        let mut conns: HashMap<u64, mpsc::Sender<Vec<u8>>> = HashMap::new();
+        let mut inflight: HashMap<usize, Pending> = HashMap::new();
+        let mut stopping = false;
+        loop {
+            let mut drain_now = false;
+            match erx.recv_timeout(tick) {
+                Ok(ev) => handle_event(
+                    ev,
+                    engine,
+                    &embed,
+                    &mut conns,
+                    &mut inflight,
+                    &mut report,
+                    &mut stopping,
+                    &mut drain_now,
+                ),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            while let Ok(ev) = erx.try_recv() {
+                handle_event(
+                    ev,
+                    engine,
+                    &embed,
+                    &mut conns,
+                    &mut inflight,
+                    &mut report,
+                    &mut stopping,
+                    &mut drain_now,
+                );
+            }
+            // On DRAIN/SHUTDOWN, poll FIRST (cut every full batch at its
+            // stream-aligned boundary), THEN force the tail: the padded
+            // batch is then the withheld tail alone, padded with its own
+            // first node — the exact partition the file-driven path's
+            // poll + drain produces, so socket answers stay bit-identical
+            // to file answers even when the final event burst queued
+            // several uncut batches.
+            let flushed = if stopping || drain_now {
+                engine.poll().and_then(|mut f| {
+                    engine.drain().map(|rest| {
+                        f.extend(rest);
+                        f
+                    })
+                })
+            } else {
+                engine.poll()
+            };
+            let flushed = match flushed {
+                Ok(f) => f,
+                Err(e) => {
+                    fatal = Some(e);
+                    break;
+                }
+            };
+            for sv in flushed {
+                if let Some(p) = inflight.remove(&sv.id) {
+                    report.served += 1;
+                    let resp = match sv.answer {
+                        Answer::Scores(row) => WireResponse::Scores {
+                            req_id: p.req_id,
+                            embedding: p.embedding,
+                            row,
+                        },
+                        Answer::Link(score) => {
+                            WireResponse::Link { req_id: p.req_id, score }
+                        }
+                    };
+                    send_to(&conns, p.conn, &resp);
+                }
+            }
+            if stopping && engine.pending() == 0 && inflight.is_empty() {
+                break;
+            }
+        }
+
+        // unwind: flag the threads down, close every reply route (writer
+        // loops drain their queues then shut the sockets), and release
+        // any Connect events still buffered in the channel
+        stop.store(true, Ordering::Relaxed);
+        drop(conns);
+        drop(erx);
+    });
+
+    match fatal {
+        Some(e) => Err(e),
+        None => Ok(report),
+    }
+}

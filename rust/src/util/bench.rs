@@ -1,8 +1,49 @@
 //! Mini benchmark harness (criterion is unavailable offline): warmup +
 //! timed iterations with mean/std/min reporting, runnable under
-//! `cargo bench` via `harness = false` targets.
+//! `cargo bench` via `harness = false` targets; plus [`Pacer`], the
+//! open-loop load generator shared by the saturation bench and
+//! `vq-gnn client --rate`.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Open-loop request pacer: issues against a fixed wall-clock schedule
+/// (`rate_per_s` arrivals/second from construction time), so lateness is
+/// NEVER forgiven — if the consumer stalls, `due()` grows.  This is what
+/// distinguishes an open-loop saturation bench from a closed loop, where
+/// a slow server quietly throttles its own offered load.
+pub struct Pacer {
+    t0: Instant,
+    /// Seconds between scheduled arrivals.
+    per: f64,
+    issued: usize,
+}
+
+impl Pacer {
+    pub fn new(rate_per_s: f64) -> Pacer {
+        Pacer { t0: Instant::now(), per: 1.0 / rate_per_s.max(1e-9), issued: 0 }
+    }
+
+    /// How many arrivals the schedule owes right now (0 = ahead of
+    /// schedule).
+    pub fn due(&self) -> usize {
+        let scheduled = (self.t0.elapsed().as_secs_f64() / self.per) as usize;
+        scheduled.saturating_sub(self.issued)
+    }
+
+    pub fn note_issued(&mut self, n: usize) {
+        self.issued += n;
+    }
+
+    /// Sleep until the next scheduled arrival (at most `cap` — callers
+    /// poll other work on a bounded cadence).
+    pub fn sleep_until_next(&self, cap: Duration) {
+        let next = self.per * (self.issued + 1) as f64;
+        let now = self.t0.elapsed().as_secs_f64();
+        if next > now {
+            std::thread::sleep(Duration::from_secs_f64(next - now).min(cap));
+        }
+    }
+}
 
 pub struct BenchResult {
     pub name: String,

@@ -1,6 +1,6 @@
 //! Serving-subsystem correctness.
 //!
-//! The contract under test: the micro-batching engine over a frozen
+//! The contract under test: the `ServeEngine` facade over a frozen
 //! `ServingModel` answers queries **bit-identically** to one-shot
 //! `VqTrainer::infer_nodes` on the same weights — including the padded
 //! final micro-batch and duplicate node ids inside one batch — and the
@@ -19,7 +19,7 @@ use vq_gnn::datasets::{Dataset, Split};
 use vq_gnn::runtime::manifest::Manifest;
 use vq_gnn::runtime::Runtime;
 use vq_gnn::sampler::NodeStrategy;
-use vq_gnn::serve::{Answer, MicroBatcher, Request, ServingModel};
+use vq_gnn::serve::{Answer, Request, ServeEngine, ServeError, ServingModel};
 use vq_gnn::util::rng::Rng;
 
 const BACKBONES: [&str; 4] = ["gcn", "sage", "gat", "txf"];
@@ -58,26 +58,27 @@ fn serve_batched_matches_one_shot_inference() {
             continue;
         }
         let (mut rt, man, ds, mut tr) = trained(model, 3, 7);
-        let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+        let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
         let b = sm.batch_size();
         let c = sm.out_dim();
         // 333 = 5·64 + 13 → five full micro-batches + one padded tail
         let queries = query_nodes(ds.n(), 333, 0xC0FFEE ^ b as u64);
         assert_ne!(queries.len() % b, 0, "want a padded tail batch");
 
-        let mut eng = MicroBatcher::new();
+        let mut eng = ServeEngine::builder().model(model, sm).build(rt).unwrap();
         for &v in &queries {
-            eng.submit(Request::Node(v));
+            eng.submit(model, Request::Node(v)).unwrap();
         }
-        let served = eng.drain(&mut rt, &mut sm).unwrap();
+        let served = eng.drain().unwrap();
         assert_eq!(served.len(), queries.len());
-        assert_eq!(eng.stats.batches_run as usize, (queries.len() + b - 1) / b);
-        assert_eq!(eng.stats.padded_rows as usize, b - queries.len() % b);
-        assert_eq!(eng.stats.last_flush_padded_rows, eng.stats.padded_rows);
-        assert_eq!(eng.stats.tail_forced_flushes, 1, "drain forced the padded tail");
-        assert_eq!(eng.stats.tail_deadline_flushes, 0);
+        let st = eng.stats(model).unwrap();
+        assert_eq!(st.batches_run as usize, (queries.len() + b - 1) / b);
+        assert_eq!(st.padded_rows as usize, b - queries.len() % b);
+        assert_eq!(st.last_flush_padded_rows, st.padded_rows);
+        assert_eq!(st.tail_forced_flushes, 1, "drain forced the padded tail");
+        assert_eq!(st.tail_deadline_flushes, 0);
 
-        let want = tr.infer_nodes(&mut rt, &queries).unwrap();
+        let want = tr.infer_nodes(eng.runtime_mut(), &queries).unwrap();
         for (i, s) in served.iter().enumerate() {
             assert_eq!(s.id, i, "{model}: answers come back in submit order");
             match &s.answer {
@@ -104,7 +105,7 @@ fn link_requests_are_dot_products_of_rows() {
         return;
     }
     let (mut rt, man, _ds, mut tr) = trained("gcn", 2, 11);
-    let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
     let c = sm.out_dim();
     // mixed stream: link endpoints expand into the node-slot order
     let reqs = [
@@ -114,12 +115,12 @@ fn link_requests_are_dot_products_of_rows() {
         Request::Link(0, 5),
     ];
     let slots: Vec<u32> = vec![5, 9, 17, 9, 0, 5];
-    let mut eng = MicroBatcher::new();
+    let mut eng = ServeEngine::builder().model("gcn", sm).build(rt).unwrap();
     for r in reqs {
-        eng.submit(r);
+        eng.submit("gcn", r).unwrap();
     }
-    let served = eng.drain(&mut rt, &mut sm).unwrap();
-    let rows = tr.infer_nodes(&mut rt, &slots).unwrap();
+    let served = eng.drain().unwrap();
+    let rows = tr.infer_nodes(eng.runtime_mut(), &slots).unwrap();
     let dot = |i: usize, j: usize| -> f32 {
         rows[i * c..(i + 1) * c]
             .iter()
@@ -157,38 +158,46 @@ fn checkpoint_roundtrip_evaluate_bit_identical_all_backbones() {
         assert_eq!(m0.to_bits(), m1.to_bits(), "{model}: evaluate drifted across restore");
 
         // --- serving artifact: freeze → save → load → serve identical ----
-        let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+        let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
         let sckpt = dir.join(format!("{model}.serve.bin"));
         sm.save(&sckpt).unwrap();
-        let mut sm2 = ServingModel::load(&mut rt, &man, ds.clone(), model, &sckpt).unwrap();
+        let sm2 = ServingModel::load(&mut rt, &man, ds.clone(), model, &sckpt).unwrap();
         assert_eq!(sm.cache().memory_bytes(), sm2.cache().memory_bytes());
-
-        let queries = query_nodes(ds.n(), 100, 5); // 100 = 64 + 36 → padded tail
-        let mut eng1 = MicroBatcher::new();
-        let mut eng2 = MicroBatcher::new();
-        for &v in &queries {
-            eng1.submit(Request::Node(v));
-            eng2.submit(Request::Node(v));
-        }
-        let s1 = eng1.drain(&mut rt, &mut sm).unwrap();
-        let s2 = eng2.drain(&mut rt, &mut sm2).unwrap();
-        let c = sm.out_dim();
-        let want = tr.infer_nodes(&mut rt, &queries).unwrap();
-        for i in 0..queries.len() {
-            assert_eq!(
-                s1[i].answer, s2[i].answer,
-                "{model}: reloaded serving artifact answers differently"
-            );
-            assert_eq!(
-                s1[i].answer,
-                Answer::Scores(want[i * c..(i + 1) * c].to_vec()),
-                "{model}: frozen serve diverged from trainer inference"
-            );
-        }
 
         // the wrong backbone's serving artifact is refused
         if model == "gcn" {
             assert!(ServingModel::load(&mut rt, &man, ds.clone(), "sage", &sckpt).is_err());
+        }
+
+        // both artifacts behind ONE engine (multi-model routing): the
+        // reloaded model must answer bit-identically next to the original
+        let queries = query_nodes(ds.n(), 100, 5); // 100 = 64 + 36 → padded tail
+        let mut eng = ServeEngine::builder()
+            .model("orig", sm)
+            .model("reloaded", sm2)
+            .build(rt)
+            .unwrap();
+        for &v in &queries {
+            eng.submit("orig", Request::Node(v)).unwrap(); // ticket 2i
+            eng.submit("reloaded", Request::Node(v)).unwrap(); // ticket 2i+1
+        }
+        let served = eng.drain().unwrap();
+        assert_eq!(served.len(), 2 * queries.len());
+        let c = eng.model("orig").unwrap().out_dim();
+        let want = tr.infer_nodes(eng.runtime_mut(), &queries).unwrap();
+        for i in 0..queries.len() {
+            let (s1, s2) = (&served[2 * i], &served[2 * i + 1]);
+            assert_eq!(s1.id, 2 * i, "global ticket order interleaves the models");
+            assert_eq!(s2.id, 2 * i + 1);
+            assert_eq!(
+                s1.answer, s2.answer,
+                "{model}: reloaded serving artifact answers differently"
+            );
+            assert_eq!(
+                s1.answer,
+                Answer::Scores(want[i * c..(i + 1) * c].to_vec()),
+                "{model}: frozen serve diverged from trainer inference"
+            );
         }
     }
 }
@@ -199,11 +208,21 @@ fn out_of_range_node_id_is_an_error_not_a_panic() {
         return;
     }
     let (mut rt, man, ds, tr) = trained("gcn", 1, 2);
-    let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
-    let mut eng = MicroBatcher::new();
-    eng.submit(Request::Node(ds.n() as u32)); // first invalid id
-    let err = eng.drain(&mut rt, &mut sm);
-    assert!(err.is_err(), "request-controlled id must not panic the server");
+    let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let total = sm.total_nodes();
+    let mut eng = ServeEngine::builder().model("gcn", sm).build(rt).unwrap();
+    // refused AT SUBMIT with a typed error — a request-controlled id must
+    // fail alone, never reach a flush where it would poison the batch
+    let err = eng.submit("gcn", Request::Node(ds.n() as u32)).unwrap_err();
+    assert_eq!(
+        err,
+        ServeError::InvalidNode { model: "gcn".into(), id: ds.n() as u32, total }
+    );
+    assert!(!err.to_string().is_empty());
+    // the queue stays usable after the refusal
+    eng.submit("gcn", Request::Node(0)).unwrap();
+    let served = eng.drain().unwrap();
+    assert_eq!(served.len(), 1);
 }
 
 #[test]
@@ -212,9 +231,10 @@ fn empty_drain_is_a_noop() {
         return;
     }
     let (mut rt, man, _ds, tr) = trained("gcn", 1, 1);
-    let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
-    let mut eng = MicroBatcher::new();
-    let served = eng.drain(&mut rt, &mut sm).unwrap();
+    let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let mut eng = ServeEngine::builder().model("gcn", sm).build(rt).unwrap();
+    let served = eng.drain().unwrap();
     assert!(served.is_empty());
-    assert_eq!(eng.stats.batches_run, 0);
+    assert_eq!(eng.stats("gcn").unwrap().batches_run, 0);
+    assert_eq!(eng.pending(), 0);
 }

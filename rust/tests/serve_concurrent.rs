@@ -1,13 +1,13 @@
-//! Concurrent-serving correctness.
+//! Concurrent-serving correctness, through the `ServeEngine` facade.
 //!
 //! Contracts under test:
 //!
-//! 1. **Pool determinism** — `MicroBatcher::drain`/`flush` over a
-//!    SessionPool of 1, 2 and 4 workers return bit-identical answers in
-//!    submit order, including duplicate ids, padded tails, and interleaved
+//! 1. **Pool determinism** — `ServeEngine::drain`/`poll` over a session
+//!    pool of 1, 2 and 4 workers return bit-identical answers in submit
+//!    order, including duplicate ids, padded tails, and interleaved
 //!    node/link queries, on all four backbones.  (Each micro-batch is a
 //!    pure function of the shared core; only latency stamps may differ.)
-//! 2. **Deadline semantics** — partial tails are withheld by `flush` until
+//! 2. **Deadline semantics** — partial tails are withheld by `poll` until
 //!    a request's deadline expires (or `drain` forces them), and the two
 //!    tail paths are counted separately.
 //! 3. **Admission round-trip** — admit → serve → save ("VQS2") → load →
@@ -28,7 +28,7 @@ use vq_gnn::datasets::Dataset;
 use vq_gnn::runtime::manifest::Manifest;
 use vq_gnn::runtime::Runtime;
 use vq_gnn::sampler::NodeStrategy;
-use vq_gnn::serve::{Answer, MicroBatcher, Request, Served, ServingModel};
+use vq_gnn::serve::{Answer, Request, Served, ServeEngine, ServingModel};
 use vq_gnn::util::rng::Rng;
 
 const BACKBONES: [&str; 4] = ["gcn", "sage", "gat", "txf"];
@@ -77,10 +77,13 @@ fn mixed_requests(n: usize, count: usize, b: usize, seed: u64) -> Vec<Request> {
     reqs
 }
 
+/// Answers in submit order.  The engine's ticket sequence is global and
+/// monotone across bursts, so order is checked RELATIVE to the burst's
+/// first ticket, not absolute.
 fn answers(served: &[Served]) -> Vec<Answer> {
-    // ids must already be in submit order — pooled merges preserve it
+    let first = served.first().map(|s| s.id).unwrap_or(0);
     for (i, s) in served.iter().enumerate() {
-        assert_eq!(s.id, i, "answers out of submit order");
+        assert_eq!(s.id, first + i, "answers out of submit order");
         assert!(s.latency_s >= 0.0);
     }
     served.iter().map(|s| s.answer.clone()).collect()
@@ -93,34 +96,35 @@ fn pooled_flush_bit_identical_to_serial_drain() {
             continue;
         }
         let (mut rt, man, ds, tr) = trained(model, 3, 7);
-        let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+        let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
         let b = sm.batch_size();
         let reqs = mixed_requests(ds.n(), 150, b, 0xD15C ^ b as u64);
 
-        sm.set_threads(1);
-        let mut eng = MicroBatcher::new();
+        let mut eng = ServeEngine::builder().model(model, sm).build(rt).unwrap();
         for &r in &reqs {
-            eng.submit(r);
+            eng.submit(model, r).unwrap();
         }
-        let serial = answers(&eng.drain(&rt, &mut sm).unwrap());
-        assert!(eng.stats.padded_rows > 0, "{model}: stream must exercise padding");
+        let serial = answers(&eng.drain().unwrap());
+        let base = eng.stats(model).unwrap().clone();
+        assert!(base.padded_rows > 0, "{model}: stream must exercise padding");
 
         for threads in [2usize, 4] {
-            sm.set_threads(threads);
-            assert_eq!(sm.threads(), threads);
-            let mut eng_t = MicroBatcher::new();
+            eng.set_threads(threads);
+            assert_eq!(eng.model(model).unwrap().threads(), threads);
+            let pre = eng.stats(model).unwrap().clone();
             for &r in &reqs {
-                eng_t.submit(r);
+                eng.submit(model, r).unwrap();
             }
-            let pooled = answers(&eng_t.drain(&rt, &mut sm).unwrap());
+            let pooled = answers(&eng.drain().unwrap());
             assert_eq!(
                 serial, pooled,
                 "{model}: pooled drain at {threads} workers diverged from serial"
             );
-            assert_eq!(eng_t.stats.batches_run, eng.stats.batches_run);
-            assert_eq!(eng_t.stats.padded_rows, eng.stats.padded_rows);
+            let st = eng.stats(model).unwrap();
+            assert_eq!(st.batches_run - pre.batches_run, base.batches_run);
+            assert_eq!(st.padded_rows - pre.padded_rows, base.padded_rows);
             // the pool actually spread the work
-            let ws = sm.worker_stats();
+            let ws = eng.model(model).unwrap().worker_stats();
             assert_eq!(ws.len(), threads);
             assert!(
                 ws.iter().filter(|w| w.batches > 0).count() > 1,
@@ -136,52 +140,65 @@ fn deadline_withholds_tails_and_counts_both_paths() {
         return;
     }
     let (mut rt, man, ds, tr) = trained("gcn", 2, 11);
-    let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
-    sm.set_threads(2);
+    let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
     let b = sm.batch_size();
     let mut rng = Rng::new(3);
 
-    // --- no deadline configured: flush never pads -----------------------
-    let mut eng = MicroBatcher::new();
+    // --- no deadline configured: poll never pads ------------------------
+    let mut eng =
+        ServeEngine::builder().model("gcn", sm).threads(2).build(rt).unwrap();
     let count = b + b / 2; // one full batch + a half tail
     for _ in 0..count {
-        eng.submit(Request::Node(rng.below(ds.n()) as u32));
+        eng.submit("gcn", Request::Node(rng.below(ds.n()) as u32)).unwrap();
     }
-    let first = eng.flush(&rt, &mut sm).unwrap();
+    let first = eng.poll().unwrap();
     assert_eq!(first.len(), b, "only the full batch is served");
-    assert_eq!(eng.pending_len(), b / 2, "tail stays queued");
-    assert_eq!(eng.stats.padded_rows, 0);
-    assert_eq!(eng.stats.full_batches, 1);
-    // an idle flush with the same pending tail still withholds it
-    assert!(eng.flush(&rt, &mut sm).unwrap().is_empty());
+    assert_eq!(eng.pending(), b / 2, "tail stays queued");
+    assert_eq!(eng.stats("gcn").unwrap().padded_rows, 0);
+    assert_eq!(eng.stats("gcn").unwrap().full_batches, 1);
+    // an idle poll with the same pending tail still withholds it
+    assert!(eng.poll().unwrap().is_empty());
     // drain forces the tail (padded), counted as a FORCED tail flush
-    let rest = eng.drain(&rt, &mut sm).unwrap();
+    let rest = eng.drain().unwrap();
     assert_eq!(rest.len(), b / 2);
     assert_eq!(rest[0].id, b, "ticket ids continue across flushes");
-    assert_eq!(eng.stats.padded_rows as usize, b - b / 2);
-    assert_eq!(eng.stats.tail_forced_flushes, 1);
-    assert_eq!(eng.stats.tail_deadline_flushes, 0);
+    let st = eng.stats("gcn").unwrap();
+    assert_eq!(st.padded_rows as usize, b - b / 2);
+    assert_eq!(st.tail_forced_flushes, 1);
+    assert_eq!(st.tail_deadline_flushes, 0);
 
-    // --- zero deadline: every flush behaves like a drain ----------------
-    let mut eager = MicroBatcher::with_deadline(Duration::from_millis(0));
+    // --- zero deadline: every poll behaves like a drain -----------------
+    // (same frozen model, different queue discipline — into_parts hands
+    // the model back without a re-freeze)
+    let (rt, mut models) = eng.into_parts();
+    let (name, sm) = models.remove(0);
+    let mut eager = ServeEngine::builder()
+        .model(name, sm)
+        .threads(2)
+        .deadline(Duration::from_millis(0))
+        .build(rt)
+        .unwrap();
     for _ in 0..(b / 2) {
-        eager.submit(Request::Node(rng.below(ds.n()) as u32));
+        eager.submit("gcn", Request::Node(rng.below(ds.n()) as u32)).unwrap();
     }
-    let all = eager.flush(&rt, &mut sm).unwrap();
+    let all = eager.poll().unwrap();
     assert_eq!(all.len(), b / 2);
-    assert_eq!(eager.stats.tail_deadline_flushes, 1);
-    assert_eq!(eager.stats.tail_forced_flushes, 0);
-    assert_eq!(eager.stats.last_flush_padded_rows as usize, b - b / 2);
+    let st = eager.stats("gcn").unwrap();
+    assert_eq!(st.tail_deadline_flushes, 1);
+    assert_eq!(st.tail_forced_flushes, 0);
+    assert_eq!(st.last_flush_padded_rows as usize, b - b / 2);
 
     // --- a link query straddling the batch boundary is never split ------
-    let mut strad = MicroBatcher::new();
+    let (rt, mut models) = eager.into_parts();
+    let (name, sm) = models.remove(0);
+    let mut strad = ServeEngine::builder().model(name, sm).threads(2).build(rt).unwrap();
     for _ in 0..(b - 1) {
-        strad.submit(Request::Node(rng.below(ds.n()) as u32));
+        strad.submit("gcn", Request::Node(rng.below(ds.n()) as u32)).unwrap();
     }
-    strad.submit(Request::Link(1, 2)); // slots b-1 and b: crosses the cut
-    assert!(strad.flush(&rt, &mut sm).unwrap().is_empty(), "no whole batch packs");
-    assert_eq!(strad.pending_len(), b);
-    let forced = strad.drain(&rt, &mut sm).unwrap();
+    strad.submit("gcn", Request::Link(1, 2)).unwrap(); // slots b-1 and b: crosses the cut
+    assert!(strad.poll().unwrap().is_empty(), "no whole batch packs");
+    assert_eq!(strad.pending(), b);
+    let forced = strad.drain().unwrap();
     assert_eq!(forced.len(), b);
     assert!(matches!(forced[b - 1].answer, Answer::Link(_)));
 }
@@ -195,16 +212,8 @@ fn admission_roundtrip_serves_cold_nodes_across_save_load() {
             continue;
         }
         let (mut rt, man, ds, tr) = trained(model, 3, 13);
-        let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+        let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
         let n = ds.n() as u32;
-
-        // baseline answers for frozen nodes, pre-admission
-        let frozen_q: Vec<Request> = (0..6).map(|i| Request::Node(i * 7 % n)).collect();
-        let mut eng0 = MicroBatcher::new();
-        for &r in &frozen_q {
-            eng0.submit(r);
-        }
-        let before = answers(&eng0.drain(&rt, &mut sm).unwrap());
 
         // VQS1 export of the pre-admission state (legacy compatibility)
         let v1_path = dir.join(format!("{model}.v1.bin"));
@@ -216,20 +225,28 @@ fn admission_roundtrip_serves_cold_nodes_across_save_load() {
         )
         .unwrap();
 
+        // baseline answers for frozen nodes, pre-admission
+        let mut eng = ServeEngine::builder().model(model, sm).build(rt).unwrap();
+        let frozen_q: Vec<Request> = (0..6).map(|i| Request::Node(i * 7 % n)).collect();
+        for &r in &frozen_q {
+            eng.submit(model, r).unwrap();
+        }
+        let before = answers(&eng.drain().unwrap());
+
         // admit two cold nodes; the second cites the first as a neighbor
         let mut feat: Vec<f32> = ds.feature_row(3).to_vec();
         for (i, x) in feat.iter_mut().enumerate() {
             *x += 0.01 * (i as f32 + 1.0);
         }
-        let a = sm.admit(&rt, &feat, &[1, 5, 9]).unwrap();
+        let a = eng.admit(model, &feat, &[1, 5, 9]).unwrap();
         assert_eq!(a, n);
-        let b_id = sm.admit(&rt, &feat[..ds.cfg.f_in], &[a, 2]).unwrap();
+        let b_id = eng.admit(model, &feat[..ds.cfg.f_in], &[a, 2]).unwrap();
         assert_eq!(b_id, n + 1);
-        assert_eq!(sm.total_nodes(), ds.n() + 2);
+        assert_eq!(eng.model(model).unwrap().total_nodes(), ds.n() + 2);
 
         // cold nodes are first-class: direct queries, link endpoints,
         // neighbors-of-admitted — pooled across 2 workers
-        sm.set_threads(2);
+        eng.set_threads(2);
         let mix: Vec<Request> = vec![
             Request::Node(a),
             Request::Node(b_id),
@@ -238,25 +255,28 @@ fn admission_roundtrip_serves_cold_nodes_across_save_load() {
             Request::Link(b_id, a),
             Request::Node(a),
         ];
-        let mut eng1 = MicroBatcher::new();
         for &r in &mix {
-            eng1.submit(r);
+            eng.submit(model, r).unwrap();
         }
-        let admitted_ans = answers(&eng1.drain(&rt, &mut sm).unwrap());
+        let admitted_ans = answers(&eng.drain().unwrap());
         assert_eq!(admitted_ans[0], admitted_ans[5], "duplicate cold queries agree");
 
-        // save ("VQS2") → load → serve bit-identical, any pool width
+        // save ("VQS2") → load → hot-add behind a second routing name →
+        // serve bit-identical
         let path = dir.join(format!("{model}.v2.bin"));
-        sm.save(&path).unwrap();
-        let mut sm2 = ServingModel::load(&mut rt, &man, ds.clone(), model, &path).unwrap();
+        eng.model(model).unwrap().save(&path).unwrap();
+        let sm2 =
+            ServingModel::load(eng.runtime_mut(), &man, ds.clone(), model, &path).unwrap();
         assert_eq!(sm2.total_nodes(), ds.n() + 2);
-        assert_eq!(sm.cache().memory_bytes(), sm2.cache().memory_bytes());
-        sm2.set_threads(4);
-        let mut eng2 = MicroBatcher::new();
+        assert_eq!(
+            eng.model(model).unwrap().cache().memory_bytes(),
+            sm2.cache().memory_bytes()
+        );
+        eng.add_model("reloaded", sm2).unwrap();
         for &r in &mix {
-            eng2.submit(r);
+            eng.submit("reloaded", r).unwrap();
         }
-        let reloaded_ans = answers(&eng2.drain(&rt, &mut sm2).unwrap());
+        let reloaded_ans = answers(&eng.drain().unwrap());
         assert_eq!(
             admitted_ans, reloaded_ans,
             "{model}: VQS2 round-trip changed admitted-node answers"
@@ -266,29 +286,28 @@ fn admission_roundtrip_serves_cold_nodes_across_save_load() {
         // backbones (txf's global attention legitimately sees the new
         // nodes through the codeword histogram)
         if model != "txf" {
-            let mut eng3 = MicroBatcher::new();
             for &r in &frozen_q {
-                eng3.submit(r);
+                eng.submit(model, r).unwrap();
             }
-            let after = answers(&eng3.drain(&rt, &mut sm).unwrap());
+            let after = answers(&eng.drain().unwrap());
             assert_eq!(before, after, "{model}: admission perturbed frozen nodes");
         }
 
         // the legacy VQS1 artifact still loads and serves frozen nodes
         // bit-identically to the pre-admission model
-        let mut sm_v1 = ServingModel::load(&mut rt, &man, ds.clone(), model, &v1_path).unwrap();
-        let mut eng4 = MicroBatcher::new();
+        let sm_v1 =
+            ServingModel::load(eng.runtime_mut(), &man, ds.clone(), model, &v1_path).unwrap();
+        eng.add_model("v1", sm_v1).unwrap();
         for &r in &frozen_q {
-            eng4.submit(r);
+            eng.submit("v1", r).unwrap();
         }
-        let v1_ans = answers(&eng4.drain(&rt, &mut sm_v1).unwrap());
+        let v1_ans = answers(&eng.drain().unwrap());
         assert_eq!(before, v1_ans, "{model}: VQS1 compatibility load drifted");
         // and admission on a VQS1 model still works (identity whitening)
-        let v1_id = sm_v1.admit(&rt, &feat, &[1, 2]).unwrap();
+        let v1_id = eng.admit("v1", &feat, &[1, 2]).unwrap();
         assert_eq!(v1_id, n);
-        let mut eng5 = MicroBatcher::new();
-        eng5.submit(Request::Node(v1_id));
-        assert_eq!(eng5.drain(&rt, &mut sm_v1).unwrap().len(), 1);
+        eng.submit("v1", Request::Node(v1_id)).unwrap();
+        assert_eq!(eng.drain().unwrap().len(), 1);
     }
 }
 
@@ -298,45 +317,52 @@ fn queued_admissions_apply_fifo_with_dense_ids() {
         return;
     }
     let (mut rt, man, ds, tr) = trained("gcn", 2, 5);
-    let mut sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
     let n = ds.n() as u32;
     let feat = ds.feature_row(0).to_vec();
-    let first = sm.queue_admission(feat.clone(), vec![4, 8]).unwrap();
+    let mut eng = ServeEngine::builder().model("gcn", sm).build(rt).unwrap();
+
+    let smm = eng.model_mut("gcn").unwrap();
+    let first = smm.queue_admission(feat.clone(), vec![4, 8]).unwrap();
     assert_eq!(first, n);
     // the second request may cite the first's provisional id...
-    let second = sm.queue_admission(feat.clone(), vec![first]).unwrap();
+    let second = smm.queue_admission(feat.clone(), vec![first]).unwrap();
     assert_eq!(second, n + 1);
     // ...but not a future one
-    assert!(sm.queue_admission(feat.clone(), vec![n + 5]).is_err());
-    assert_eq!(sm.queued_admissions(), 2);
+    assert!(smm.queue_admission(feat.clone(), vec![n + 5]).is_err());
+    assert_eq!(smm.queued_admissions(), 2);
     // a direct admit would steal the first queued node's promised id
-    assert!(sm.admit(&rt, &feat, &[]).is_err());
-    let ids = sm.admit_queued(&rt).unwrap();
+    assert!(eng.admit("gcn", &feat, &[]).is_err());
+    let ids = eng.admit_queued("gcn").unwrap();
     assert_eq!(ids, vec![first, second]);
-    assert_eq!(sm.queued_admissions(), 0);
-    let mut eng = MicroBatcher::new();
-    eng.submit(Request::Node(second));
-    let served = eng.drain(&rt, &mut sm).unwrap();
+    assert_eq!(eng.model("gcn").unwrap().queued_admissions(), 0);
+    eng.submit("gcn", Request::Node(second)).unwrap();
+    let served = eng.drain().unwrap();
     assert!(matches!(served[0].answer, Answer::Scores(_)));
 
     // admission rejects garbage without poisoning the model
-    assert!(sm.admit(&rt, &[f32::NAN; 4], &[]).is_err());
-    assert!(sm.admit(&rt, &feat, &[9999]).is_err());
-    assert!(sm.admit(&rt, &feat[..1], &[]).is_err());
-    assert_eq!(sm.total_nodes(), ds.n() + 2, "failed admissions left no residue");
+    assert!(eng.admit("gcn", &[f32::NAN; 4], &[]).is_err());
+    assert!(eng.admit("gcn", &feat, &[9999]).is_err());
+    assert!(eng.admit("gcn", &feat[..1], &[]).is_err());
+    assert_eq!(
+        eng.model("gcn").unwrap().total_nodes(),
+        ds.n() + 2,
+        "failed admissions left no residue"
+    );
 
     // malformed requests are refused AT ENQUEUE — they can never sit in
     // front of valid queued admissions
+    let smm = eng.model_mut("gcn").unwrap();
     let bad: Vec<f32> = vec![f32::NAN; feat.len()];
-    assert!(sm.queue_admission(bad, vec![]).is_err(), "NaN features refused at enqueue");
-    assert!(sm.queue_admission(feat[..1].to_vec(), vec![]).is_err(), "short row refused");
-    assert_eq!(sm.queued_admissions(), 0);
+    assert!(smm.queue_admission(bad, vec![]).is_err(), "NaN features refused at enqueue");
+    assert!(smm.queue_admission(feat[..1].to_vec(), vec![]).is_err(), "short row refused");
+    assert_eq!(smm.queued_admissions(), 0);
 
     // a queued-but-unapplied request reserves its id; clearing releases it
-    let reserved = sm.queue_admission(feat.clone(), vec![0]).unwrap();
+    let reserved = smm.queue_admission(feat.clone(), vec![0]).unwrap();
     assert_eq!(reserved, n + 2);
-    assert!(sm.admit(&rt, &feat, &[]).is_err(), "direct admit blocked while queued");
-    sm.clear_queued();
-    let next = sm.admit(&rt, &feat, &[]).unwrap();
+    assert!(eng.admit("gcn", &feat, &[]).is_err(), "direct admit blocked while queued");
+    eng.model_mut("gcn").unwrap().clear_queued();
+    let next = eng.admit("gcn", &feat, &[]).unwrap();
     assert_eq!(next, n + 2, "clearing the queue releases the reserved id");
 }

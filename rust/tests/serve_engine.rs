@@ -1,0 +1,263 @@
+//! `ServeEngine` facade contracts: validated construction, the
+//! load-shedding policy's exact refusal shape, multi-model routing with
+//! one global ticket sequence, and the pledge that the `#[deprecated]`
+//! `MicroBatcher::{flush,drain}` shims answer bit-identically to the
+//! facade (they delegate to the same body — this test pins that).
+
+mod common;
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use common::{builtin, model_enabled};
+use vq_gnn::coordinator::vq_trainer::VqTrainer;
+use vq_gnn::datasets::Dataset;
+use vq_gnn::runtime::manifest::Manifest;
+use vq_gnn::runtime::Runtime;
+use vq_gnn::sampler::NodeStrategy;
+use vq_gnn::serve::{
+    Answer, MicroBatcher, Request, ServeEngine, ServeError, ServingModel,
+};
+
+fn trained(model: &str, steps: usize, seed: u64) -> (Runtime, Manifest, Rc<Dataset>, VqTrainer) {
+    let man = builtin();
+    let mut rt = Runtime::native();
+    let ds = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
+    let mut tr =
+        VqTrainer::new(&mut rt, &man, ds.clone(), model, "", NodeStrategy::Nodes, seed)
+            .unwrap();
+    for _ in 0..steps {
+        tr.train_step(&mut rt).unwrap();
+    }
+    (rt, man, ds, tr)
+}
+
+#[test]
+fn builder_misconfiguration_is_typed_not_a_panic() {
+    if !model_enabled("gcn") {
+        return;
+    }
+    let (mut rt, man, _ds, tr) = trained("gcn", 1, 1);
+    let freeze = |rt: &mut Runtime| ServingModel::freeze(rt, &man, &tr).unwrap();
+
+    let err = ServeEngine::builder().build(Runtime::native()).unwrap_err();
+    assert_eq!(err, ServeError::NoModels);
+
+    let sm = freeze(&mut rt);
+    let err = ServeEngine::builder()
+        .model("gcn", sm)
+        .threads(0)
+        .build(Runtime::native())
+        .unwrap_err();
+    assert_eq!(err, ServeError::ZeroWorkers);
+
+    let sm = freeze(&mut rt);
+    let err = ServeEngine::builder()
+        .model("gcn", sm)
+        .queue_cap(1)
+        .build(Runtime::native())
+        .unwrap_err();
+    assert_eq!(err, ServeError::QueueCapTooSmall(1));
+
+    let (a, b) = (freeze(&mut rt), freeze(&mut rt));
+    let err = ServeEngine::builder()
+        .model("gcn", a)
+        .model("gcn", b)
+        .build(Runtime::native())
+        .unwrap_err();
+    assert_eq!(err, ServeError::DuplicateModel("gcn".into()));
+
+    for e in [
+        ServeError::NoModels,
+        ServeError::ZeroWorkers,
+        ServeError::QueueCapTooSmall(1),
+        ServeError::DuplicateModel("gcn".into()),
+    ] {
+        assert!(!e.to_string().is_empty(), "{e:?} renders a message");
+    }
+
+    // a well-formed configuration still builds and serves
+    let sm = freeze(&mut rt);
+    let mut eng = ServeEngine::builder()
+        .model("gcn", sm)
+        .threads(2)
+        .deadline(Duration::from_millis(5))
+        .queue_cap(256)
+        .build(rt)
+        .unwrap();
+    assert_eq!(eng.threads(), 2);
+    assert_eq!(eng.deadline(), Some(Duration::from_millis(5)));
+    assert_eq!(eng.queue_cap(), Some(256));
+    eng.submit("gcn", Request::Node(0)).unwrap();
+    assert_eq!(eng.drain().unwrap().len(), 1);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_answer_bit_identical_to_facade() {
+    if !model_enabled("gcn") {
+        return;
+    }
+    let (mut rt, man, ds, tr) = trained("gcn", 3, 9);
+    // two freezes of one trainer are the same model
+    let mut sm_shim = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let sm_facade = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let b = sm_shim.batch_size();
+    sm_shim.set_threads(2);
+
+    let reqs: Vec<Request> = (0..b + b / 2)
+        .map(|i| {
+            if i % 7 == 3 {
+                Request::Link((i % ds.n()) as u32, ((i * 3) % ds.n()) as u32)
+            } else {
+                Request::Node(((i * 5) % ds.n()) as u32)
+            }
+        })
+        .collect();
+
+    // old call shape: direct MicroBatcher against &Runtime + &mut model
+    let mut mb = MicroBatcher::new();
+    for &r in &reqs {
+        mb.submit(r);
+    }
+    let mut old = mb.flush(&rt, &mut sm_shim).unwrap();
+    old.extend(mb.drain(&rt, &mut sm_shim).unwrap());
+    let old: Vec<Answer> = old.into_iter().map(|s| s.answer).collect();
+
+    // facade call shape: same queries through the engine
+    let mut eng = ServeEngine::builder()
+        .model("gcn", sm_facade)
+        .threads(2)
+        .build(rt)
+        .unwrap();
+    for &r in &reqs {
+        eng.submit("gcn", r).unwrap();
+    }
+    let mut new = eng.poll().unwrap();
+    new.extend(eng.drain().unwrap());
+    new.sort_by_key(|s| s.id);
+    let new: Vec<Answer> = new.into_iter().map(|s| s.answer).collect();
+
+    assert_eq!(old, new, "deprecated shim diverged from ServeEngine");
+}
+
+#[test]
+fn bounded_queue_sheds_with_exact_refusal_shape() {
+    if !model_enabled("gcn") {
+        return;
+    }
+    let (mut rt, man, _ds, tr) = trained("gcn", 1, 3);
+    let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let other = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let b = sm.batch_size();
+    assert!(b >= 4);
+    let mut eng = ServeEngine::builder()
+        .model("gcn", sm)
+        .model("other", other)
+        .queue_cap(b)
+        .build(rt)
+        .unwrap();
+
+    // fill gcn's queue exactly to capacity
+    for i in 0..b {
+        eng.submit("gcn", Request::Node((i % 8) as u32)).unwrap();
+    }
+    let err = eng.submit("gcn", Request::Node(0)).unwrap_err();
+    assert_eq!(
+        err,
+        ServeError::Shed { model: "gcn".into(), pending_slots: b, cap: b }
+    );
+    assert!(!err.to_string().is_empty());
+    // the cap is PER MODEL: the sibling queue still admits
+    eng.submit("other", Request::Node(0)).unwrap();
+
+    // shedding is in slots, not requests: a link (2 slots) is refused at
+    // b-1 pending where a node (1 slot) still fits
+    let served = eng.drain().unwrap();
+    assert_eq!(served.len(), b + 1, "drain recovers capacity");
+    for _ in 0..(b - 1) {
+        eng.submit("gcn", Request::Node(1)).unwrap();
+    }
+    let err = eng.submit("gcn", Request::Link(1, 2)).unwrap_err();
+    assert_eq!(
+        err,
+        ServeError::Shed { model: "gcn".into(), pending_slots: b - 1, cap: b }
+    );
+    eng.submit("gcn", Request::Node(2)).unwrap();
+    assert_eq!(eng.drain().unwrap().len(), b);
+}
+
+#[test]
+fn unknown_model_is_a_typed_routing_error() {
+    if !model_enabled("gcn") {
+        return;
+    }
+    let (mut rt, man, _ds, tr) = trained("gcn", 1, 2);
+    let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let dup = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let mut eng = ServeEngine::builder().model("gcn", sm).build(rt).unwrap();
+    assert_eq!(
+        eng.submit("nope", Request::Node(0)).unwrap_err(),
+        ServeError::UnknownModel("nope".into())
+    );
+    assert!(eng.stats("nope").is_none());
+    assert!(eng.model("nope").is_none());
+    assert!(eng.admit("nope", &[0.0; 4], &[]).is_err());
+    assert_eq!(
+        eng.add_model("gcn", dup).unwrap_err(),
+        ServeError::DuplicateModel("gcn".into())
+    );
+    assert_eq!(eng.models(), vec!["gcn"]);
+}
+
+#[test]
+fn multi_model_routing_interleaves_one_ticket_sequence() {
+    if !(model_enabled("gcn") && model_enabled("sage")) {
+        return;
+    }
+    let man = builtin();
+    let mut rt = Runtime::native();
+    let ds = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
+    let mut tr_g =
+        VqTrainer::new(&mut rt, &man, ds.clone(), "gcn", "", NodeStrategy::Nodes, 7).unwrap();
+    let mut tr_s =
+        VqTrainer::new(&mut rt, &man, ds.clone(), "sage", "", NodeStrategy::Nodes, 8).unwrap();
+    for _ in 0..2 {
+        tr_g.train_step(&mut rt).unwrap();
+        tr_s.train_step(&mut rt).unwrap();
+    }
+    let sm_g = ServingModel::freeze(&mut rt, &man, &tr_g).unwrap();
+    let sm_s = ServingModel::freeze(&mut rt, &man, &tr_s).unwrap();
+    let c = sm_g.out_dim();
+    assert_eq!(c, sm_s.out_dim());
+
+    let queries: Vec<u32> = (0..70).map(|i| (i * 11 % ds.n()) as u32).collect();
+    let mut eng = ServeEngine::builder()
+        .model("gcn", sm_g)
+        .model("sage", sm_s)
+        .build(rt)
+        .unwrap();
+    for &v in &queries {
+        assert_eq!(eng.submit("gcn", Request::Node(v)).unwrap() % 2, 0);
+        assert_eq!(eng.submit("sage", Request::Node(v)).unwrap() % 2, 1);
+    }
+    let served = eng.drain().unwrap();
+    assert_eq!(served.len(), 2 * queries.len());
+    let want_g = tr_g.infer_nodes(eng.runtime_mut(), &queries).unwrap();
+    let want_s = tr_s.infer_nodes(eng.runtime_mut(), &queries).unwrap();
+    for (i, &v) in queries.iter().enumerate() {
+        let (g, s) = (&served[2 * i], &served[2 * i + 1]);
+        assert_eq!(g.id, 2 * i, "global tickets interleave the two models");
+        assert_eq!(s.id, 2 * i + 1);
+        assert_eq!(
+            g.answer,
+            Answer::Scores(want_g[i * c..(i + 1) * c].to_vec()),
+            "gcn row for node {v} diverged"
+        );
+        assert_eq!(
+            s.answer,
+            Answer::Scores(want_s[i * c..(i + 1) * c].to_vec()),
+            "sage row for node {v} diverged"
+        );
+    }
+}

@@ -1,0 +1,325 @@
+//! Socket front-end contracts (`serve::server` + `serve::proto` over real
+//! loopback TCP):
+//!
+//! 1. **Bit-identity** — answers served over the socket are byte-identical
+//!    to the file-driven path (same poll-then-drain partition of the slot
+//!    stream) for all four backbones, mixed node/link streams included.
+//! 2. **Failure containment** — a malformed frame earns a typed ERROR and
+//!    the connection survives; an unusable length prefix earns the ERROR
+//!    and a hang-up; a mid-frame disconnect is reported as a truncation;
+//!    an unknown model or bad node id is a per-request error; none of
+//!    these poison the engine for later connections.
+//! 3. **Load shedding** — a saturated bounded queue refuses the overflow
+//!    with SHED frames while every accepted request is still answered.
+//!
+//! Model-specific tests honor the `VQGNN_MODEL` filter (CI backbone matrix).
+
+mod common;
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::rc::Rc;
+use std::time::Duration;
+
+use common::{builtin, model_enabled};
+use vq_gnn::coordinator::vq_trainer::VqTrainer;
+use vq_gnn::datasets::Dataset;
+use vq_gnn::runtime::manifest::Manifest;
+use vq_gnn::runtime::Runtime;
+use vq_gnn::sampler::NodeStrategy;
+use vq_gnn::serve::proto::{
+    decode_response, encode_request, read_frame, ErrCode, WireRequest, WireResponse, NO_REQ_ID,
+};
+use vq_gnn::serve::{server, Answer, Request, ServeEngine, ServerReport, ServingModel};
+use vq_gnn::util::rng::Rng;
+
+const BACKBONES: [&str; 4] = ["gcn", "sage", "gat", "txf"];
+
+fn trained(model: &str, steps: usize, seed: u64) -> (Runtime, Manifest, Rc<Dataset>, VqTrainer) {
+    let man = builtin();
+    let mut rt = Runtime::native();
+    let ds = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
+    let mut tr =
+        VqTrainer::new(&mut rt, &man, ds.clone(), model, "", NodeStrategy::Nodes, seed)
+            .unwrap();
+    for _ in 0..steps {
+        tr.train_step(&mut rt).unwrap();
+    }
+    (rt, man, ds, tr)
+}
+
+fn mixed_requests(n: usize, count: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|i| {
+            if i % 5 == 3 {
+                Request::Link(rng.below(n) as u32, rng.below(n) as u32)
+            } else {
+                Request::Node(rng.below(n) as u32)
+            }
+        })
+        .collect()
+}
+
+fn to_wire(model: &str, req_id: u64, req: Request) -> WireRequest {
+    match req {
+        Request::Node(v) => WireRequest::Node { req_id, model: model.to_string(), node: v },
+        Request::Link(u, v) => {
+            WireRequest::Link { req_id, model: model.to_string(), u, v }
+        }
+    }
+}
+
+#[test]
+fn socket_roundtrip_bit_identical_to_file_driven() {
+    for model in BACKBONES {
+        if !model_enabled(model) {
+            continue;
+        }
+        let (mut rt, man, ds, tr) = trained(model, 3, 7);
+        // two freezes of one trainer are the same model: one serves the
+        // socket, one the file-driven reference
+        let sm_srv = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+        let sm_file = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+        let reqs = mixed_requests(ds.n(), 150, 0xBEEF ^ sm_file.batch_size() as u64);
+
+        // file-driven reference: the CLI's poll-then-drain discipline
+        let mut fe = ServeEngine::builder()
+            .model(model, sm_file)
+            .threads(4)
+            .deadline(Duration::from_secs(10))
+            .build(rt)
+            .unwrap();
+        for &r in &reqs {
+            fe.submit(model, r).unwrap();
+        }
+        let mut want = fe.poll().unwrap();
+        want.extend(fe.drain().unwrap());
+        want.sort_by_key(|s| s.id);
+        let want: Vec<Answer> = want.into_iter().map(|s| s.answer).collect();
+
+        let mut se = ServeEngine::builder()
+            .model(model, sm_srv)
+            .threads(4)
+            .deadline(Duration::from_secs(10))
+            .build(Runtime::native())
+            .unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (report, got) = std::thread::scope(|s| {
+            let reqs = &reqs;
+            let client = s.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                for (i, &r) in reqs.iter().enumerate() {
+                    stream
+                        .write_all(&encode_request(&to_wire(model, i as u64, r)))
+                        .unwrap();
+                }
+                stream.write_all(&encode_request(&WireRequest::Shutdown)).unwrap();
+                let mut got: Vec<(u64, Answer)> = Vec::new();
+                while let Some(p) = read_frame(&mut stream).unwrap() {
+                    match decode_response(&p).unwrap() {
+                        WireResponse::Scores { req_id, embedding, row } => {
+                            assert!(!embedding, "tiny_sim is a node task");
+                            got.push((req_id, Answer::Scores(row)));
+                        }
+                        WireResponse::Link { req_id, score } => {
+                            got.push((req_id, Answer::Link(score)));
+                        }
+                        other => panic!("unexpected response {other:?}"),
+                    }
+                }
+                got.sort_by_key(|(id, _)| *id);
+                got
+            });
+            let report = server::run(&mut se, listener).unwrap();
+            (report, client.join().unwrap())
+        });
+
+        assert_eq!(got.len(), reqs.len(), "{model}: every request answered");
+        for (i, (id, _)) in got.iter().enumerate() {
+            assert_eq!(*id, i as u64, "{model}: response ids are dense");
+        }
+        let got: Vec<Answer> = got.into_iter().map(|(_, a)| a).collect();
+        assert_eq!(got, want, "{model}: socket answers diverged from file-driven path");
+        assert_eq!(
+            report,
+            ServerReport {
+                connections: 1,
+                requests: reqs.len() as u64,
+                served: reqs.len() as u64,
+                shed: 0,
+                errors: 0,
+            }
+        );
+    }
+}
+
+#[test]
+fn protocol_violations_are_contained_per_connection() {
+    if !model_enabled("gcn") {
+        return;
+    }
+    let (mut rt, man, _ds, tr) = trained("gcn", 2, 11);
+    let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let mut se = ServeEngine::builder().model("gcn", sm).threads(2).build(rt).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let report = std::thread::scope(|s| {
+        s.spawn(move || {
+            let read_err = |stream: &mut TcpStream| -> (u64, ErrCode, String) {
+                let p = read_frame(stream).unwrap().expect("error frame");
+                match decode_response(&p).unwrap() {
+                    WireResponse::Error { req_id, code, msg } => (req_id, code, msg),
+                    other => panic!("expected ERROR, got {other:?}"),
+                }
+            };
+
+            // ---- A: undecodable payload — typed error, connection
+            // SURVIVES (framing is still aligned) ----------------------
+            let mut a = TcpStream::connect(addr).unwrap();
+            a.write_all(&1u32.to_le_bytes()).unwrap();
+            a.write_all(&[0x7f]).unwrap(); // unknown kind byte
+            let (rid, code, msg) = read_err(&mut a);
+            assert_eq!(rid, NO_REQ_ID, "unparsed frame carries no request id");
+            assert_eq!(code, ErrCode::Malformed);
+            assert!(!msg.is_empty());
+            let node = WireRequest::Node { req_id: 11, model: "gcn".into(), node: 3 };
+            a.write_all(&encode_request(&node)).unwrap();
+            a.write_all(&encode_request(&WireRequest::Drain)).unwrap();
+            let p = read_frame(&mut a).unwrap().expect("answer after the bad frame");
+            assert!(
+                matches!(decode_response(&p).unwrap(),
+                         WireResponse::Scores { req_id: 11, .. }),
+                "connection kept serving after a malformed frame"
+            );
+            drop(a);
+
+            // ---- B: unusable length prefix — typed error, then hang-up
+            let mut b = TcpStream::connect(addr).unwrap();
+            b.write_all(&(2u32 * 1024 * 1024).to_le_bytes()).unwrap();
+            b.write_all(&[0u8; 8]).unwrap();
+            let (rid, code, _) = read_err(&mut b);
+            assert_eq!(rid, NO_REQ_ID);
+            assert_eq!(code, ErrCode::Malformed);
+            assert!(
+                read_frame(&mut b).unwrap().is_none(),
+                "server hangs up after an oversized prefix"
+            );
+            drop(b);
+
+            // ---- C: disconnect mid-frame — a typed truncation server-side
+            // (asserted via the report), later connections unaffected --
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(&100u32.to_le_bytes()).unwrap();
+            c.write_all(&[1, 2, 3]).unwrap();
+            drop(c);
+            // give C's reader time to surface the truncation before the
+            // shutdown below ends the run (25 ms read-poll cadence)
+            std::thread::sleep(Duration::from_millis(500));
+
+            // ---- D: per-request errors, then normal service ----------
+            let mut d = TcpStream::connect(addr).unwrap();
+            let bad_model = WireRequest::Node { req_id: 70, model: "nope".into(), node: 0 };
+            d.write_all(&encode_request(&bad_model)).unwrap();
+            let (rid, code, msg) = read_err(&mut d);
+            assert_eq!(rid, 70, "routing errors keep the request id");
+            assert_eq!(code, ErrCode::UnknownModel);
+            assert!(msg.contains("nope"));
+            let bad_node =
+                WireRequest::Node { req_id: 71, model: "gcn".into(), node: 999_999 };
+            d.write_all(&encode_request(&bad_node)).unwrap();
+            let (rid, code, _) = read_err(&mut d);
+            assert_eq!(rid, 71);
+            assert_eq!(code, ErrCode::BadRequest);
+            d.write_all(&encode_request(&WireRequest::Ping { req_id: 42 })).unwrap();
+            let p = read_frame(&mut d).unwrap().expect("pong");
+            assert_eq!(
+                decode_response(&p).unwrap(),
+                WireResponse::Pong { req_id: 42 }
+            );
+            let node = WireRequest::Node { req_id: 72, model: "gcn".into(), node: 5 };
+            d.write_all(&encode_request(&node)).unwrap();
+            d.write_all(&encode_request(&WireRequest::Drain)).unwrap();
+            let p = read_frame(&mut d).unwrap().expect("scores");
+            assert!(matches!(
+                decode_response(&p).unwrap(),
+                WireResponse::Scores { req_id: 72, .. }
+            ));
+            d.write_all(&encode_request(&WireRequest::Shutdown)).unwrap();
+            while read_frame(&mut d).unwrap().is_some() {}
+        });
+        server::run(&mut se, listener).unwrap()
+    });
+
+    assert_eq!(
+        report,
+        ServerReport {
+            connections: 4,
+            requests: 4, // A's node + D's three node frames
+            served: 2,   // A:11 and D:72
+            shed: 0,
+            // A bad kind, B oversize, C truncation, D unknown model,
+            // D bad node id
+            errors: 5,
+        }
+    );
+}
+
+#[test]
+fn saturated_queue_sheds_over_the_socket() {
+    if !model_enabled("gcn") {
+        return;
+    }
+    let (mut rt, man, _ds, tr) = trained("gcn", 1, 5);
+    let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    assert!(sm.batch_size() > 4, "cap must be below the batch width");
+    // cap 4 slots, 10 s deadline: no full batch can form and no deadline
+    // expires during the test, so exactly 4 of 10 requests are accepted
+    // and the other 6 are shed — deterministically
+    let mut se = ServeEngine::builder()
+        .model("gcn", sm)
+        .queue_cap(4)
+        .deadline(Duration::from_secs(10))
+        .build(rt)
+        .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let (report, (scores, shed)) = std::thread::scope(|s| {
+        let client = s.spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            for i in 0..10u64 {
+                let node =
+                    WireRequest::Node { req_id: i, model: "gcn".into(), node: i as u32 };
+                stream.write_all(&encode_request(&node)).unwrap();
+            }
+            stream.write_all(&encode_request(&WireRequest::Shutdown)).unwrap();
+            let (mut scores, mut shed) = (Vec::new(), Vec::new());
+            while let Some(p) = read_frame(&mut stream).unwrap() {
+                match decode_response(&p).unwrap() {
+                    WireResponse::Scores { req_id, .. } => scores.push(req_id),
+                    WireResponse::Error { req_id, code, msg } => {
+                        assert_eq!(code, ErrCode::Shed, "only SHED refusals expected");
+                        assert!(!msg.is_empty());
+                        shed.push(req_id);
+                    }
+                    other => panic!("unexpected response {other:?}"),
+                }
+            }
+            scores.sort_unstable();
+            shed.sort_unstable();
+            (scores, shed)
+        });
+        let report = server::run(&mut se, listener).unwrap();
+        (report, client.join().unwrap())
+    });
+
+    assert_eq!(scores, vec![0, 1, 2, 3], "accepted requests are still answered");
+    assert_eq!(shed, vec![4, 5, 6, 7, 8, 9], "the overflow is shed FIFO");
+    assert_eq!(
+        report,
+        ServerReport { connections: 1, requests: 10, served: 4, shed: 6, errors: 0 }
+    );
+}
