@@ -305,6 +305,35 @@ fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
     report.insert("serve_open_loop_p99_ms_rlow".into(), num(p99_low));
     report.insert("serve_open_loop_p99_ms_rhigh".into(), num(p99_high));
     report.insert("serve_shed_rate".into(), num(shed_high));
+
+    // ---- online maintenance: admit-at-cap and the drift probe -----------
+    // Rebuild behind an LRU cap, fill to it, then time the steady state
+    // where every admission pays for one inline eviction (assignment of
+    // one row against every layer's codebooks + table compaction) — the
+    // cost a long-running host pays per streamed node.
+    let (rt, models) = eng.into_parts();
+    let mut builder = ServeEngine::builder().threads(1).max_admitted(64);
+    for (name, m) in models {
+        builder = builder.model(name, m);
+    }
+    let mut eng = builder.build(rt).unwrap();
+    let feat = tiny.feature_row(0).to_vec();
+    let nn = tiny.n() as u32;
+    for i in 0..64u32 {
+        eng.admit("gcn", &feat, &[i % nn]).unwrap();
+    }
+    let mut nb = 0u32;
+    let r_ae = bench("serve/admit_evict tiny gcn cap=64", if smoke { 0.3 } else { 1.0 }, || {
+        nb = (nb + 1) % nn;
+        std::hint::black_box(eng.admit("gcn", &feat, &[nb]).unwrap());
+    });
+    report.insert("serve_admit_evict_ms".into(), num(r_ae.mean_ns / 1e6));
+    // the codebook-drift metric (per-layer histogram TV distance) — read
+    // on every flush-side alert check, so it must stay branch-cheap
+    let r_dr = bench("serve/drift_check tiny gcn", if smoke { 0.3 } else { 1.0 }, || {
+        std::hint::black_box(eng.drift("gcn").unwrap());
+    });
+    report.insert("serve_drift_check_ms".into(), num(r_dr.mean_ns / 1e6));
 }
 
 /// Emit the single-threaded serve acceptance keys + detail object.

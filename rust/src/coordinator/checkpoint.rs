@@ -27,8 +27,17 @@ const SERVE_MAGIC_V1: u32 = 0x56_51_53_31; // "VQS1"
 /// (features, neighbor lists, per-layer codeword assignments), so a cold
 /// node admitted in one process stays servable after save → load in
 /// another.  Still no training-only EMA state (cluster counts/sums,
-/// optimizer moments).
-const SERVE_MAGIC: u32 = 0x56_51_53_32; // "VQS2"
+/// optimizer moments).  Admitted ids are DENSE (`n + slot`) — this layout
+/// predates eviction.  Still loadable; new exports are "VQS3".
+const SERVE_MAGIC_V2: u32 = 0x56_51_53_32; // "VQS2"
+
+/// Serving-artifact magic, version 3: VQS2 plus the online-maintenance
+/// state — per-layer codebook-drift REFERENCE histograms (the training
+/// distribution's distance-to-nearest-codeword footprint, what serving
+/// traffic is compared against) and the admitted block's stable-id map +
+/// `next_id` watermark, so eviction's sparse monotone id space survives
+/// save → load (a survivor keeps its id, an evicted id is never reissued).
+const SERVE_MAGIC: u32 = 0x56_51_53_33; // "VQS3"
 
 struct Writer<W: Write> {
     w: W,
@@ -206,6 +215,10 @@ pub struct ServingLayer {
     pub var: Vec<f32>,
     /// Admitted-node assignments, node-major (count, n_br).  Empty on VQS1.
     pub admitted_assign: Vec<u32>,
+    /// Codebook-drift reference histogram bins (`serve::drift`).  Empty =
+    /// no reference (VQS1/VQS2 files — the detector stays disarmed, never
+    /// false-alarming on a legacy load).
+    pub drift_ref: Vec<f32>,
 }
 
 /// The model-level admitted-node block of a serving artifact: padded
@@ -220,9 +233,17 @@ pub struct ServingAdmitted {
     pub features: Vec<f32>,
     /// CSR offsets into `nbr`, length count + 1 (first entry 0).
     pub nbr_ptr: Vec<u32>,
-    /// Neighbor node ids (each `< n + own_index`: a node may only cite
-    /// already-known nodes).
+    /// Neighbor node ids (each a frozen id or an earlier admitted node's
+    /// id: a node may only cite already-known nodes).
     pub nbr: Vec<u32>,
+    /// Slot → stable id, strictly increasing (VQS3).  Empty on VQS1/VQS2
+    /// files, whose ids were dense — `AdmittedNodes::from_serving`
+    /// synthesizes `n + slot` then.
+    pub ids: Vec<u32>,
+    /// Exclusive upper bound on every id ever issued (VQS3) — keeps
+    /// eviction's monotone no-reissue guarantee across processes.  0 on
+    /// legacy files (the loader derives `n + count`).
+    pub next_id: u32,
 }
 
 impl ServingAdmitted {
@@ -279,7 +300,7 @@ fn read_artifact_name<R: Read>(r: &mut Reader<R>, artifact: &str) -> Result<()> 
     Ok(())
 }
 
-/// Export a frozen model into a "VQS2" serving artifact.  `artifact` is
+/// Export a frozen model into a "VQS3" serving artifact.  `artifact` is
 /// the `vq_serve_*` artifact name the file is valid for (refused on
 /// mismatch at load, like the training checkpoint).
 pub fn save_serving(
@@ -292,6 +313,43 @@ pub fn save_serving(
     let f = std::fs::File::create(path).context("create serving artifact")?;
     let mut w = Writer { w: std::io::BufWriter::new(f) };
     write_header(&mut w, SERVE_MAGIC, artifact)?;
+    write_params(&mut w, params)?;
+    w.u32(layers.len() as u32)?;
+    for l in layers {
+        w.u32(l.k as u32)?;
+        w.u32(l.n as u32)?;
+        w.u32(l.n_br as u32)?;
+        w.u32(l.fp as u32)?;
+        w.f32s(&l.cw)?;
+        w.u32s(&l.assign)?;
+        w.f32s(&l.mean)?;
+        w.f32s(&l.var)?;
+        w.u32s(&l.admitted_assign)?;
+        w.f32s(&l.drift_ref)?;
+    }
+    w.u32(admitted.f_pad as u32)?;
+    w.f32s(&admitted.features)?;
+    w.u32s(&admitted.nbr_ptr)?;
+    w.u32s(&admitted.nbr)?;
+    w.u32s(&admitted.ids)?;
+    w.u32(admitted.next_id)?;
+    Ok(())
+}
+
+/// Export in the "VQS2" layout (no drift references, no stable-id map —
+/// admitted ids degrade to dense `n + slot`).  Kept as the pinned writer
+/// for the compatibility load path — `load_serving` must keep accepting
+/// files older processes produced.
+pub fn save_serving_v2(
+    path: &Path,
+    artifact: &str,
+    params: &[Tensor],
+    layers: &[ServingLayer],
+    admitted: &ServingAdmitted,
+) -> Result<()> {
+    let f = std::fs::File::create(path).context("create serving artifact")?;
+    let mut w = Writer { w: std::io::BufWriter::new(f) };
+    write_header(&mut w, SERVE_MAGIC_V2, artifact)?;
     write_params(&mut w, params)?;
     w.u32(layers.len() as u32)?;
     for l in layers {
@@ -337,8 +395,10 @@ pub fn save_serving_v1(
     Ok(())
 }
 
-/// Load a serving artifact ("VQS2", or legacy "VQS1" — the missing stats
-/// load as identity whitening and an empty admitted block).  Shape
+/// Load a serving artifact ("VQS3", or legacy "VQS2"/"VQS1").  Missing
+/// VQS2 stats load as identity whitening and an empty admitted block;
+/// missing VQS3 maintenance state loads as "no drift reference" (detector
+/// disarmed) and a dense id map (synthesized downstream).  Shape
 /// validation against the serve spec is the caller's job
 /// (`serve::ServingModel::load` checks against the manifest).
 pub fn load_serving(
@@ -348,9 +408,10 @@ pub fn load_serving(
     let f = std::fs::File::open(path).context("open serving artifact")?;
     let mut r = Reader { r: std::io::BufReader::new(f) };
     let magic = r.u32()?;
-    let v2 = match magic {
-        SERVE_MAGIC => true,
-        SERVE_MAGIC_V1 => false,
+    let version = match magic {
+        SERVE_MAGIC => 3,
+        SERVE_MAGIC_V2 => 2,
+        SERVE_MAGIC_V1 => 1,
         _ => bail!("not a vq-gnn serving artifact"),
     };
     read_artifact_name(&mut r, artifact)?;
@@ -370,7 +431,7 @@ pub fn load_serving(
         if assign.iter().any(|&a| a as usize >= k) {
             bail!("serving assignment out of codebook range");
         }
-        let (mean, var, admitted_assign) = if v2 {
+        let (mean, var, admitted_assign) = if version >= 2 {
             let mean = r.f32s()?;
             let var = r.f32s()?;
             let aa = r.u32s()?;
@@ -384,25 +445,51 @@ pub fn load_serving(
         } else {
             (vec![0.0; n_br * fp], vec![1.0; n_br * fp], Vec::new())
         };
-        layers.push(ServingLayer { k, n, n_br, fp, cw, assign, mean, var, admitted_assign });
+        let drift_ref = if version >= 3 { r.f32s()? } else { Vec::new() };
+        if drift_ref.iter().any(|x| !x.is_finite() || *x < 0.0) {
+            bail!("serving drift-reference bins must be finite non-negative counts");
+        }
+        layers.push(ServingLayer {
+            k,
+            n,
+            n_br,
+            fp,
+            cw,
+            assign,
+            mean,
+            var,
+            admitted_assign,
+            drift_ref,
+        });
     }
-    let admitted = if v2 {
+    let admitted = if version >= 2 {
         let f_pad = r.u32()? as usize;
         let features = r.f32s()?;
         let nbr_ptr = r.u32s()?;
         let nbr = r.u32s()?;
-        let adm = ServingAdmitted { f_pad, features, nbr_ptr, nbr };
+        let (ids, next_id) = if version >= 3 { (r.u32s()?, r.u32()?) } else { (Vec::new(), 0) };
+        let adm = ServingAdmitted { f_pad, features, nbr_ptr, nbr, ids, next_id };
         validate_admitted(&adm, &layers)?;
         adm
     } else {
-        ServingAdmitted { f_pad: 0, features: Vec::new(), nbr_ptr: vec![0], nbr: Vec::new() }
+        ServingAdmitted {
+            f_pad: 0,
+            features: Vec::new(),
+            nbr_ptr: vec![0],
+            nbr: Vec::new(),
+            ids: Vec::new(),
+            next_id: 0,
+        }
     };
     Ok((params, layers, admitted))
 }
 
 /// Cross-check the admitted block against the layer tables: counts agree
-/// everywhere, CSR offsets are well-formed, and every neighbor id refers
-/// to an already-known node.
+/// everywhere, CSR offsets are well-formed, the stable-id map (when
+/// present) is strictly increasing past the frozen range with a
+/// consistent `next_id` watermark, and every neighbor id refers to an
+/// already-known node — frozen, or an earlier admitted node's id (dense
+/// `n + slot` on legacy blocks without an id map).
 fn validate_admitted(adm: &ServingAdmitted, layers: &[ServingLayer]) -> Result<()> {
     if adm.nbr_ptr.first() != Some(&0) {
         bail!("serving admitted CSR must start at 0");
@@ -417,10 +504,37 @@ fn validate_admitted(adm: &ServingAdmitted, layers: &[ServingLayer]) -> Result<(
         bail!("serving admitted CSR offsets malformed");
     }
     let n = layers.first().map(|l| l.n).unwrap_or(0);
-    for (i, w) in adm.nbr_ptr.windows(2).enumerate() {
-        let lim = (n + i) as u32; // node i may only cite earlier nodes
-        if adm.nbr[w[0] as usize..w[1] as usize].iter().any(|&u| u >= lim) {
-            bail!("serving admitted node {i} cites an unknown neighbor");
+    if adm.ids.is_empty() {
+        // legacy dense ids: node i is id n + i
+        for (i, w) in adm.nbr_ptr.windows(2).enumerate() {
+            let lim = (n + i) as u32; // node i may only cite earlier nodes
+            if adm.nbr[w[0] as usize..w[1] as usize].iter().any(|&u| u >= lim) {
+                bail!("serving admitted node {i} cites an unknown neighbor");
+            }
+        }
+    } else {
+        if adm.ids.len() != count {
+            bail!("serving admitted id map holds {} ids for {count} nodes", adm.ids.len());
+        }
+        if adm.ids.first().map_or(false, |&i| (i as usize) < n)
+            || adm.ids.windows(2).any(|w| w[0] >= w[1])
+        {
+            bail!("serving admitted id map must increase strictly from the frozen range");
+        }
+        if let Some(&last) = adm.ids.last() {
+            if adm.next_id <= last {
+                bail!("serving admitted next_id watermark is behind the id map");
+            }
+        }
+        for (i, w) in adm.nbr_ptr.windows(2).enumerate() {
+            // node i may cite frozen ids or EARLIER admitted nodes' ids
+            // (arcs into evicted ids were dropped at eviction time)
+            if adm.nbr[w[0] as usize..w[1] as usize]
+                .iter()
+                .any(|&u| (u as usize) >= n && adm.ids[..i].binary_search(&u).is_err())
+            {
+                bail!("serving admitted node {i} cites an unknown neighbor");
+            }
         }
     }
     for l in layers {
@@ -502,6 +616,7 @@ mod tests {
             mean: (0..2 * 3).map(|_| 0.1 * rng.gauss_f32()).collect(),
             var: (0..2 * 3).map(|_| 0.5 + rng.f32()).collect(),
             admitted_assign: (0..admitted * 2).map(|_| rng.below(4) as u32).collect(),
+            drift_ref: (0..16).map(|_| rng.below(9) as f32).collect(),
         }
     }
 
@@ -517,7 +632,9 @@ mod tests {
             f_pad: 4,
             features: (0..2 * 4).map(|_| rng.gauss_f32()).collect(),
             nbr_ptr: vec![0, 2, 3],
-            nbr: vec![1, 7, 10], // node 1 (id 11) may cite node 0 (id 10)
+            nbr: vec![1, 7, 10], // node 1 (id 12) may cite node 0 (id 10)
+            ids: vec![10, 12],   // sparse: id 11 was evicted
+            next_id: 13,
         };
         save_serving(&path, "vq_serve_tiny_sim_gcn", &params, &layers, &admitted).unwrap();
         let (p2, l2, a2) = load_serving(&path, "vq_serve_tiny_sim_gcn").unwrap();
@@ -538,9 +655,20 @@ mod tests {
         let bpath = dir.join("bad.bin");
         save_serving(&bpath, "a", &params, &bad, &admitted).unwrap();
         assert!(load_serving(&bpath, "a").is_err());
-        // an admitted node citing a not-yet-known id is rejected
+        // an admitted node citing a not-yet-known (here: evicted) id is
+        // rejected — 11 is inside [n, next_id) but absent from the id map
         let mut bad_adm = admitted.clone();
-        bad_adm.nbr[0] = 11; // node 0 (id 10) citing id 11
+        bad_adm.nbr[2] = 11; // node 1 citing the evicted id 11
+        save_serving(&bpath, "a", &params, &layers, &bad_adm).unwrap();
+        assert!(load_serving(&bpath, "a").is_err());
+        // a non-increasing id map is rejected
+        let mut bad_adm = admitted.clone();
+        bad_adm.ids = vec![12, 10];
+        save_serving(&bpath, "a", &params, &layers, &bad_adm).unwrap();
+        assert!(load_serving(&bpath, "a").is_err());
+        // a next_id watermark behind the id map is rejected
+        let mut bad_adm = admitted.clone();
+        bad_adm.next_id = 12;
         save_serving(&bpath, "a", &params, &layers, &bad_adm).unwrap();
         assert!(load_serving(&bpath, "a").is_err());
         // admitted counts must agree between block and layer tables
@@ -548,6 +676,43 @@ mod tests {
         bad_layers[0].admitted_assign.truncate(2); // 1 node's worth, block says 2
         save_serving(&bpath, "a", &params, &bad_layers, &admitted).unwrap();
         assert!(load_serving(&bpath, "a").is_err());
+    }
+
+    #[test]
+    fn vqs2_files_still_load_with_dense_ids_and_disarmed_drift() {
+        let dir = std::env::temp_dir().join("vqgnn_ckpt_serve_v2_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v2.bin");
+        let mut rng = Rng::new(11);
+        let params = vec![Tensor::from_f32(&[3], vec![4.0, 5.0, 6.0])];
+        let layers = vec![mk_serving_layer(&mut rng, 2)];
+        let admitted = ServingAdmitted {
+            f_pad: 4,
+            features: (0..2 * 4).map(|_| rng.gauss_f32()).collect(),
+            nbr_ptr: vec![0, 1, 3],
+            nbr: vec![2, 9, 10], // dense ids: node 1 (id 11) cites node 0 (id 10)
+            ids: Vec::new(),
+            next_id: 0,
+        };
+        save_serving_v2(&path, "vq_serve_tiny_sim_gcn", &params, &layers, &admitted).unwrap();
+        let (p2, l2, a2) = load_serving(&path, "vq_serve_tiny_sim_gcn").unwrap();
+        assert_eq!(p2[0].f, params[0].f);
+        assert_eq!(l2[0].cw, layers[0].cw);
+        assert_eq!(l2[0].mean, layers[0].mean);
+        assert_eq!(l2[0].var, layers[0].var);
+        assert_eq!(l2[0].admitted_assign, layers[0].admitted_assign);
+        // VQS2 carries no maintenance state: detector disarmed, dense ids
+        assert!(l2[0].drift_ref.is_empty());
+        assert!(a2.ids.is_empty());
+        assert_eq!(a2.next_id, 0);
+        assert_eq!(a2.count(), 2);
+        assert_eq!(a2.nbr, admitted.nbr);
+        // and re-exporting what a VQS2 load produced round-trips as VQS3
+        let v3 = dir.join("v2_as_v3.bin");
+        save_serving(&v3, "vq_serve_tiny_sim_gcn", &p2, &l2, &a2).unwrap();
+        let (_, l3, a3) = load_serving(&v3, "vq_serve_tiny_sim_gcn").unwrap();
+        assert_eq!(l3, l2);
+        assert_eq!(a3, a2);
     }
 
     #[test]
@@ -563,12 +728,15 @@ mod tests {
         assert_eq!(p2[0].f, params[0].f);
         assert_eq!(l2[0].cw, layers[0].cw);
         assert_eq!(l2[0].assign, layers[0].assign);
-        // stats degrade to identity whitening, admitted block is empty
+        // stats degrade to identity whitening, admitted block is empty,
+        // and the drift detector stays disarmed (no reference)
         assert_eq!(l2[0].mean, vec![0.0; 6]);
         assert_eq!(l2[0].var, vec![1.0; 6]);
         assert!(l2[0].admitted_assign.is_empty());
+        assert!(l2[0].drift_ref.is_empty());
         assert_eq!(a2.count(), 0);
         assert_eq!(a2.f_pad, 0);
+        assert!(a2.ids.is_empty());
     }
 
     #[test]

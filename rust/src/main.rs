@@ -124,7 +124,9 @@ fn main() -> Result<()> {
                  vq-gnn serve --dataset D --model M[,M2,..] \
                  (--requests FILE | --listen ADDR) \
                  [--ckpt SERVING.bin] [--epochs N] [--seed S] [--out FILE] \
-                 [--threads N] [--deadline-ms D] [--queue-cap C]\n  \
+                 [--threads N] [--deadline-ms D] [--queue-cap C] \
+                 [--admit FILE] [--max-admitted N] [--ttl-ms T] \
+                 [--drift-threshold T] [--refresh]\n  \
                  vq-gnn client --addr HOST:PORT --model M --requests FILE \
                  [--out FILE] [--rate R] [--wait-ms W] [--drain] [--shutdown]\n  \
                  vq-gnn exp [table3|table4|table7|table8|fig4|inference|\
@@ -152,6 +154,46 @@ fn answer_line(id: usize, answer: &vq_gnn::serve::Answer, link_task: bool) -> St
     }
 }
 
+/// Per-model maintenance report, printed when any maintenance flag was
+/// given: lifetime admitted/evicted counts, the resident admitted-table
+/// size, and the codebook-drift metric — then the opt-in drift-gated EMA
+/// refresh (`--refresh`), which only moves codewords while the drift
+/// metric is at/above the engine threshold.
+fn maintenance_epilogue(
+    eng: &mut vq_gnn::serve::ServeEngine,
+    ds_n: usize,
+    do_refresh: bool,
+) -> Result<()> {
+    let names: Vec<String> = eng.models().iter().map(|s| s.to_string()).collect();
+    for name in &names {
+        let resident = eng.model(name).unwrap().total_nodes() - ds_n;
+        let st = eng.stats(name).unwrap();
+        let (evicted, alerts) = (st.evictions, st.drift_alerts);
+        let drift = eng.drift(name).unwrap_or(0.0);
+        println!(
+            "model {name}: admitted {}, evicted {evicted}, resident {resident}; \
+             drift max {drift:.3} ({alerts} alert(s))",
+            resident as u64 + evicted,
+        );
+        if do_refresh {
+            if eng.refresh(name)? {
+                println!(
+                    "model {name}: EMA refresh moved codewords \
+                     (drift {drift:.3} -> {:.3})",
+                    eng.drift(name).unwrap_or(0.0)
+                );
+            } else {
+                println!(
+                    "model {name}: EMA refresh skipped \
+                     (drift {drift:.3} below threshold {:.3})",
+                    eng.drift_threshold()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 /// `vq-gnn serve`: freeze (or load) models and serve them through one
 /// [`ServeEngine`](vq_gnn::serve::ServeEngine) — either answering a batch
 /// request file, or listening on a TCP address (`--listen`) for framed
@@ -166,6 +208,14 @@ fn answer_line(id: usize, answer: &vq_gnn::serve::Answer, link_task: bool) -> St
 /// byte-identical to `--threads 1`); `--deadline-ms D` switches to
 /// deadline-driven flushing; `--queue-cap C` bounds each model's queue —
 /// excess load is shed (file mode drains and retries instead).
+///
+/// Online maintenance: `--admit FILE` streams admissions into the first
+/// model before serving (one line per node: `<src> [nbr..]` — the new
+/// node clones frozen node `<src>`'s features and cites `nbr..` as
+/// in-arcs); `--max-admitted N` / `--ttl-ms T` bound the admitted tables
+/// (LRU / age eviction); `--drift-threshold T` tunes the codebook-drift
+/// alert; `--refresh` runs the drift-gated EMA codebook refresh after
+/// serving.  Any of these turns on the per-model maintenance report line.
 fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     use vq_gnn::coordinator::vq_trainer::VqTrainer;
     use vq_gnn::datasets::Dataset;
@@ -183,6 +233,18 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let threads: usize = flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let deadline_ms: Option<u64> = flags.get("deadline-ms").map(|s| s.parse()).transpose()?;
     let queue_cap: Option<usize> = flags.get("queue-cap").map(|s| s.parse()).transpose()?;
+    let max_admitted: Option<usize> =
+        flags.get("max-admitted").map(|s| s.parse()).transpose()?;
+    let ttl_ms: Option<u64> = flags.get("ttl-ms").map(|s| s.parse()).transpose()?;
+    let drift_threshold: Option<f32> =
+        flags.get("drift-threshold").map(|s| s.parse()).transpose()?;
+    let do_refresh = flags.contains_key("refresh");
+    let admit_path = flags.get("admit");
+    let maintenance_on = max_admitted.is_some()
+        || ttl_ms.is_some()
+        || drift_threshold.is_some()
+        || do_refresh
+        || admit_path.is_some();
     let listen = flags.get("listen");
     let req_path = flags.get("requests");
     if listen.is_none() && req_path.is_none() {
@@ -207,6 +269,15 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     }
     if let Some(cap) = queue_cap {
         builder = builder.queue_cap(cap);
+    }
+    if let Some(cap) = max_admitted {
+        builder = builder.max_admitted(cap);
+    }
+    if let Some(ms) = ttl_ms {
+        builder = builder.admit_ttl(std::time::Duration::from_millis(ms));
+    }
+    if let Some(t) = drift_threshold {
+        builder = builder.drift_threshold(t);
     }
     for name in &models {
         // one model: the ckpt path as given; several: PATH.<name> each
@@ -242,6 +313,44 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     }
     let mut eng = builder.build(rt).map_err(anyhow::Error::new)?;
 
+    // ---- streamed admissions (first model) ------------------------------
+    // Each line admits one unseen node cloning a frozen node's features;
+    // the retention policy (LRU cap / TTL) runs inline with every admit,
+    // so driving this past --max-admitted exercises eviction.
+    if let Some(path) = admit_path {
+        let target = models[0].as_str();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read admissions file {path}"))?;
+        let mut count = 0usize;
+        for (i, line) in text.lines().enumerate() {
+            let lno = i + 1;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let src: usize = toks
+                .next()
+                .unwrap()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{path}:{lno}: bad source id"))?;
+            if src >= ds.n() {
+                bail!("{path}:{lno}: source {src} outside the frozen graph (n={})", ds.n());
+            }
+            let nbrs: Vec<u32> = toks
+                .map(|t| {
+                    t.parse()
+                        .map_err(|_| anyhow::anyhow!("{path}:{lno}: bad neighbor '{t}'"))
+                })
+                .collect::<Result<_>>()?;
+            let feat = ds.feature_row(src).to_vec();
+            eng.admit(target, &feat, &nbrs)
+                .with_context(|| format!("{path}:{lno}: admit"))?;
+            count += 1;
+        }
+        eprintln!("admitted {count} streamed node(s) into model '{target}'");
+    }
+
     // ---- socket mode ----------------------------------------------------
     if let Some(addr) = listen {
         let listener = std::net::TcpListener::bind(addr)
@@ -272,6 +381,9 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
                 st.tail_forced_flushes,
             );
         }
+        if maintenance_on {
+            maintenance_epilogue(&mut eng, ds.n(), do_refresh)?;
+        }
         return Ok(());
     }
 
@@ -280,10 +392,12 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let req_path = req_path.unwrap();
     let text = std::fs::read_to_string(req_path)
         .with_context(|| format!("read requests file {req_path}"))?;
-    // validate ids against everything the MODEL serves — a loaded VQS2
-    // artifact's admitted nodes are queryable too, not just the dataset's
-    let total = eng.model(target).unwrap().total_nodes();
-    let reqs = serve::parse_requests(&text, total)?;
+    // validate ids against every id the MODEL ever issued — admitted
+    // nodes (loaded or streamed) are queryable too, and with eviction the
+    // live set is sparse, so the parse bound is the id BOUND; `submit`
+    // still refuses evicted ids in range with the typed unknown-id error
+    let bound = eng.model(target).unwrap().cache().admitted.id_bound() as usize;
+    let reqs = serve::parse_requests(&text, bound)?;
     let t0 = std::time::Instant::now();
     let mut served = Vec::new();
     for r in &reqs {
@@ -344,6 +458,9 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
         sm.cache().memory_bytes() as f64 / 1024.0,
     );
     print!("{}", report::format_workers(&sm.worker_stats(), wall));
+    if maintenance_on {
+        maintenance_epilogue(&mut eng, ds.n(), do_refresh)?;
+    }
     Ok(())
 }
 

@@ -16,8 +16,14 @@
 //!   (and degrees) are not rewritten, so a pre-existing node's answer only
 //!   sees an admitted node through the global codeword histogram (txf) —
 //!   exactly the approximation Fig. 1 makes for any out-of-batch node;
-//! - ids are dense and append-only: node `i`'s id is `n + i`, and a node
-//!   may only cite neighbors admitted before it (single-writer FIFO).
+//! - ids are **stable and monotone**: the store hands out `next_id` (which
+//!   starts at `base_n` and never decreases across evictions), so evicting
+//!   a node never renames a survivor — an evicted id simply stops being
+//!   servable and is answered by the typed unknown-id error.  A node may
+//!   only cite neighbors admitted before it (single-writer FIFO).
+//! - eviction compacts storage (features, CSR, per-layer assignment rows)
+//!   but keeps the id space sparse; survivors' arcs into evicted ids are
+//!   dropped when the CSR is rebuilt.
 //!
 //! Writes are serialized through [`AdmissionQueue`] + the `&mut
 //! ServingModel` admission entry points, while the pooled `flush` workers
@@ -27,8 +33,10 @@
 use crate::coordinator::checkpoint::ServingAdmitted;
 
 /// The model-level admitted-node store: padded feature rows + CSR neighbor
-/// lists.  Per-layer codeword assignments live next to each layer's frozen
-/// table (`serve::cache::LayerCache::admitted_assign`).
+/// lists + the slot→stable-id map.  Per-layer codeword assignments live
+/// next to each layer's frozen table
+/// (`serve::cache::LayerCache::admitted_assign`), indexed by the same
+/// slots.
 pub struct AdmittedNodes {
     /// Dataset node count — admitted ids start here.
     pub base_n: usize,
@@ -37,22 +45,47 @@ pub struct AdmittedNodes {
     features: Vec<f32>,
     nbr_ptr: Vec<u32>,
     nbr: Vec<u32>,
+    /// Slot → stable id, strictly increasing (push appends `next_id`,
+    /// evict removes entries — order is preserved, so id lookup is a
+    /// binary search).
+    ids: Vec<u32>,
+    /// Next stable id to hand out; monotone across evictions.
+    next_id: u32,
 }
 
 impl AdmittedNodes {
     pub fn new(base_n: usize, f_pad: usize) -> AdmittedNodes {
-        AdmittedNodes { base_n, f_pad, features: Vec::new(), nbr_ptr: vec![0], nbr: Vec::new() }
+        AdmittedNodes {
+            base_n,
+            f_pad,
+            features: Vec::new(),
+            nbr_ptr: vec![0],
+            nbr: Vec::new(),
+            ids: Vec::new(),
+            next_id: base_n as u32,
+        }
     }
 
-    /// Rebuild from a serving artifact's admitted block.
+    /// Rebuild from a serving artifact's admitted block.  VQS2-era blocks
+    /// carry no id map (ids were dense `n + slot`); `ServingAdmitted`
+    /// synthesizes one at load, so this constructor only has to trust it.
     pub fn from_serving(base_n: usize, f_pad: usize, adm: ServingAdmitted) -> AdmittedNodes {
         debug_assert!(adm.count() == 0 || adm.f_pad == f_pad);
+        let count = adm.count();
+        let ids = if adm.ids.len() == count {
+            adm.ids
+        } else {
+            (0..count).map(|i| (base_n + i) as u32).collect()
+        };
+        let next_id = adm.next_id.max(ids.last().map_or(base_n as u32, |&i| i + 1));
         AdmittedNodes {
             base_n,
             f_pad,
             features: adm.features,
             nbr_ptr: if adm.nbr_ptr.is_empty() { vec![0] } else { adm.nbr_ptr },
             nbr: adm.nbr,
+            ids,
+            next_id,
         }
     }
 
@@ -63,6 +96,8 @@ impl AdmittedNodes {
             features: self.features.clone(),
             nbr_ptr: self.nbr_ptr.clone(),
             nbr: self.nbr.clone(),
+            ids: self.ids.clone(),
+            next_id: self.next_id,
         }
     }
 
@@ -75,30 +110,61 @@ impl AdmittedNodes {
         self.len() == 0
     }
 
-    /// Total servable ids: dataset nodes + admitted nodes.
+    /// Total servable ids: dataset nodes + resident admitted nodes.  With
+    /// eviction the id space is sparse, so this is a *count*, not a bound —
+    /// use [`AdmittedNodes::is_servable`] / [`AdmittedNodes::slot_of`] to
+    /// answer "is this id live".
     pub fn total(&self) -> usize {
         self.base_n + self.len()
     }
 
-    /// In-neighbors of admitted node `off` (offset, not id).
+    /// Exclusive upper bound on every id ever issued (frozen or admitted).
+    pub fn id_bound(&self) -> u32 {
+        self.next_id
+    }
+
+    /// Storage slot of a stable admitted id, if it is still resident.
+    pub fn slot_of(&self, id: u32) -> Option<usize> {
+        self.ids.binary_search(&id).ok()
+    }
+
+    /// Stable id of storage slot `off`.
+    pub fn id_of(&self, off: usize) -> u32 {
+        self.ids[off]
+    }
+
+    /// Resident admitted ids, ascending.
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// Is `id` answerable right now (a frozen node or a resident admit)?
+    pub fn is_servable(&self, id: u32) -> bool {
+        (id as usize) < self.base_n || self.slot_of(id).is_some()
+    }
+
+    /// In-neighbors of admitted node at slot `off` (slot, not id).
     pub fn neighbors_of(&self, off: usize) -> &[u32] {
         &self.nbr[self.nbr_ptr[off] as usize..self.nbr_ptr[off + 1] as usize]
     }
 
-    /// In-degree of admitted node `off`.
+    /// In-degree of admitted node at slot `off`.
     pub fn degree(&self, off: usize) -> usize {
         (self.nbr_ptr[off + 1] - self.nbr_ptr[off]) as usize
     }
 
-    /// Padded feature row of admitted node `off`.
+    /// Padded feature row of admitted node at slot `off`.
     pub fn feature_row(&self, off: usize) -> &[f32] {
         &self.features[off * self.f_pad..(off + 1) * self.f_pad]
     }
 
-    /// Append one node (features already padded to `f_pad`); returns its id.
+    /// Append one node (features already padded to `f_pad`); returns its
+    /// stable id (`next_id`, monotone — never a recycled evictee).
     pub fn push(&mut self, features: &[f32], neighbors: &[u32]) -> u32 {
         debug_assert_eq!(features.len(), self.f_pad);
-        let id = self.total() as u32;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.ids.push(id);
         self.features.extend_from_slice(features);
         self.nbr.extend_from_slice(neighbors);
         self.nbr_ptr.push(self.nbr.len() as u32);
@@ -107,25 +173,67 @@ impl AdmittedNodes {
 
     /// Roll back the most recent `push` (admission bootstrap failed after
     /// the record landed — the half-admitted node must not stay servable).
+    /// Restores `next_id` so queued admissions keep their promised ids.
     pub fn pop(&mut self) {
         if self.len() == 0 {
             return;
         }
+        self.next_id = self.ids.pop().expect("id map in sync with csr");
         self.nbr_ptr.pop();
         self.nbr.truncate(*self.nbr_ptr.last().expect("csr base") as usize);
         self.features.truncate(self.len() * self.f_pad);
     }
 
+    /// Evict a set of stable ids: compact features/ids and rebuild the CSR
+    /// keeping only survivors, dropping survivors' arcs into evicted ids.
+    /// Returns the **old slots** of the survivors in order, so sibling
+    /// tables (per-layer `admitted_assign`, touch stamps) can compact in
+    /// lockstep.  Unknown/frozen ids in `victims` are ignored.
+    pub fn evict(&mut self, victims: &[u32]) -> Vec<usize> {
+        let mut gone: Vec<u32> = victims
+            .iter()
+            .copied()
+            .filter(|&v| self.slot_of(v).is_some())
+            .collect();
+        gone.sort_unstable();
+        gone.dedup();
+        if gone.is_empty() {
+            return (0..self.len()).collect();
+        }
+        let keep: Vec<usize> =
+            (0..self.len()).filter(|&s| gone.binary_search(&self.ids[s]).is_err()).collect();
+        let mut features = Vec::with_capacity(keep.len() * self.f_pad);
+        let mut ids = Vec::with_capacity(keep.len());
+        let mut nbr_ptr = Vec::with_capacity(keep.len() + 1);
+        let mut nbr = Vec::new();
+        nbr_ptr.push(0u32);
+        for &s in &keep {
+            features.extend_from_slice(self.feature_row(s));
+            ids.push(self.ids[s]);
+            for &v in self.neighbors_of(s) {
+                if v < self.base_n as u32 || gone.binary_search(&v).is_err() {
+                    nbr.push(v);
+                }
+            }
+            nbr_ptr.push(nbr.len() as u32);
+        }
+        self.features = features;
+        self.ids = ids;
+        self.nbr_ptr = nbr_ptr;
+        self.nbr = nbr;
+        keep
+    }
+
     /// Resident bytes of the admitted tables (cache memory report).
     pub fn memory_bytes(&self) -> u64 {
-        4 * (self.features.len() + self.nbr_ptr.len() + self.nbr.len()) as u64
+        4 * (self.features.len() + self.nbr_ptr.len() + self.nbr.len() + self.ids.len()) as u64
     }
 }
 
 /// A FIFO of admission requests, applied by the single writer between
-/// flushes.  Ids are handed out at enqueue time (dense, deterministic), so
-/// a caller can cite a queued node as a later request's neighbor and query
-/// it as soon as the queue is applied.
+/// flushes.  Ids are handed out at enqueue time (monotone from `next_id`,
+/// deterministic), so a caller can cite a queued node as a later request's
+/// neighbor and query it as soon as the queue is applied.
 #[derive(Default)]
 pub struct AdmissionQueue {
     reqs: Vec<(Vec<f32>, Vec<u32>)>,
@@ -171,10 +279,47 @@ mod tests {
         assert_eq!(adm.len(), 1);
         assert_eq!(adm.neighbors_of(0), &[0, 4]);
         assert_eq!(adm.total(), 11);
+        assert_eq!(adm.id_bound(), 11); // pop released the id for reuse
         // serving-block round trip
         let again = AdmittedNodes::from_serving(10, 3, adm.to_serving());
         assert_eq!(again.len(), 1);
         assert_eq!(again.neighbors_of(0), &[0, 4]);
         assert_eq!(again.feature_row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(again.id_of(0), 10);
+        assert_eq!(again.id_bound(), 11);
+    }
+
+    #[test]
+    fn eviction_keeps_survivor_ids_stable_and_prunes_arcs() {
+        let mut adm = AdmittedNodes::new(4, 2);
+        let a = adm.push(&[1.0, 1.0], &[0]); // id 4
+        let b = adm.push(&[2.0, 2.0], &[1, a]); // id 5, cites a
+        let c = adm.push(&[3.0, 3.0], &[a, b]); // id 6, cites both
+        assert_eq!((a, b, c), (4, 5, 6));
+        let before = adm.memory_bytes();
+        let keep = adm.evict(&[a]);
+        assert_eq!(keep, vec![1, 2]); // old slots of b, c
+        assert_eq!(adm.len(), 2);
+        assert!(adm.memory_bytes() < before);
+        // survivor ids unchanged; evicted id no longer servable
+        assert_eq!(adm.slot_of(b), Some(0));
+        assert_eq!(adm.slot_of(c), Some(1));
+        assert_eq!(adm.slot_of(a), None);
+        assert!(!adm.is_servable(a));
+        assert!(adm.is_servable(b));
+        assert!(adm.is_servable(2)); // frozen ids always servable
+        // arcs into the evicted id were dropped, frozen arcs kept
+        assert_eq!(adm.neighbors_of(0), &[1]);
+        assert_eq!(adm.neighbors_of(1), &[b]);
+        // the id space stays monotone: the next admit is NOT a recycled 4
+        let d = adm.push(&[4.0, 4.0], &[b]);
+        assert_eq!(d, 7);
+        assert_eq!(adm.total(), 4 + 3);
+        assert_eq!(adm.id_bound(), 8);
+        // evicting everything leaves an empty, still-usable store
+        let keep = adm.evict(&[b, c, d]);
+        assert!(keep.is_empty());
+        assert_eq!(adm.len(), 0);
+        assert_eq!(adm.push(&[5.0, 5.0], &[0]), 8);
     }
 }

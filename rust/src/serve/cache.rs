@@ -11,9 +11,15 @@
 //!
 //! The cache is **shared and read-only on the serve path**: every builder
 //! here takes `&self`, so N pool sessions can build their sketches against
-//! one cache concurrently.  The only writer is the admission path
-//! ([`LayerCache::record_admitted`] behind `&mut ServingModel`), which
-//! appends to the admitted tails — never touching the frozen tables.
+//! one cache concurrently.  The writers all sit behind `&mut
+//! ServingModel`: the admission path ([`LayerCache::record_admitted`]),
+//! the eviction path ([`EmbeddingCache::evict`] — compacts the admitted
+//! tails, never the frozen tables), the drift observers, and the opt-in
+//! EMA [`LayerCache::refresh`].
+//!
+//! Admitted ids are **stable**: eviction compacts the storage slots but
+//! never renames a survivor (see `serve::admit`), so every admitted
+//! lookup here resolves id → slot through the store's sorted id map.
 //!
 //! Memory model: `Σ_l n_br·(n + admitted)` assignment words + `Σ_l
 //! n_br·k·fp` codeword floats + whitening stats + the admitted block
@@ -23,16 +29,29 @@ use crate::coordinator::checkpoint::{ServingAdmitted, ServingLayer};
 use crate::graph::{Conv, Graph};
 use crate::runtime::manifest::LayerPlan;
 use crate::serve::admit::AdmittedNodes;
+use crate::serve::drift::DriftHistogram;
 use crate::util::tensor::Tensor;
 use crate::vq::sketch::SketchScratch;
 use crate::vq::{kernels, VqModel};
+
+/// Rows of recent serving traffic each layer retains for an EMA refresh
+/// (a bounded ring — old rows are overwritten, so the refresh always
+/// re-fits against the freshest traffic window).
+pub(crate) const RECENT_ROWS: usize = 512;
+
+/// Storage slot of a servable admitted id (callers validate liveness
+/// before the builders run, so a miss here is a logic error, not bad
+/// request data).
+fn slot_of(adm: &AdmittedNodes, v: usize) -> usize {
+    adm.slot_of(v as u32).expect("servable admitted id")
+}
 
 /// In-degree of any servable id (frozen graph, or the admitted CSR).
 fn deg_any(graph: &Graph, adm: &AdmittedNodes, v: usize) -> usize {
     if v < graph.n {
         graph.in_degree(v)
     } else {
-        adm.degree(v - graph.n)
+        adm.degree(slot_of(adm, v))
     }
 }
 
@@ -67,11 +86,12 @@ fn nbrs_any<'a>(graph: &'a Graph, adm: &'a AdmittedNodes, v: usize) -> &'a [u32]
     if v < graph.n {
         graph.in_neighbors(v)
     } else {
-        adm.neighbors_of(v - graph.n)
+        adm.neighbors_of(slot_of(adm, v))
     }
 }
 
-/// One layer's frozen VQ state, forward-only, plus its admitted tail.
+/// One layer's frozen VQ state, forward-only, plus its admitted tail and
+/// its drift-detection state.
 pub struct LayerCache {
     pub plan: LayerPlan,
     pub k: usize,
@@ -90,19 +110,32 @@ pub struct LayerCache {
     /// deterministic across save → load: the raw codewords round-trip
     /// exactly, so both sides derive the same table.
     cww: Vec<f32>,
-    /// Admitted-node assignments, node-major (count, n_br): entry
-    /// `[off * n_br + j]` is branch j's codeword for id `n + off`.
+    /// Admitted-node assignments, SLOT-major (count, n_br): entry
+    /// `[slot * n_br + j]` is branch j's codeword for the admitted id the
+    /// store maps to `slot`.
     pub admitted_assign: Vec<u32>,
     /// Branch-0 cluster populations over ALL servable nodes (frozen +
-    /// admitted), maintained on admission: `cnt_out` per batch is this
-    /// histogram minus the batch's members — O(b + k) per query batch
-    /// instead of an O(n) sweep.
+    /// admitted), maintained on admission/eviction: `cnt_out` per batch
+    /// is this histogram minus the batch's members — O(b + k) per query
+    /// batch instead of an O(n) sweep.
     global_hist: Vec<f32>,
+    /// Reference distance histogram (the training distribution's
+    /// footprint) — frozen into a VQS3 checkpoint at export.
+    pub drift_ref: DriftHistogram,
+    /// Observed distance histogram, accumulated online from serving
+    /// traffic by the single-writer maintenance hook.
+    pub drift_obs: DriftHistogram,
+    /// Bounded ring of recent layer-input feature rows (`RECENT_ROWS` ×
+    /// `f_in`) — the EMA refresh's fitting data.  Runtime-only.
+    recent: Vec<f32>,
+    recent_rows: usize,
+    recent_next: usize,
 }
 
 impl LayerCache {
     /// Assemble one frozen layer: derive the whitened codebook, count the
-    /// codeword histogram (admitted tail included).
+    /// codeword histogram (admitted tail included).  `drift_ref` carries a
+    /// checkpoint's reference bins (empty = no reference yet).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         plan: LayerPlan,
@@ -113,6 +146,7 @@ impl LayerCache {
         mean: Vec<f32>,
         var: Vec<f32>,
         admitted_assign: Vec<u32>,
+        drift_ref: Vec<f32>,
     ) -> LayerCache {
         let (nb, fp) = (plan.n_br, plan.fp);
         debug_assert_eq!(mean.len(), nb * fp);
@@ -135,7 +169,23 @@ impl LayerCache {
         for off in 0..admitted_assign.len() / nb.max(1) {
             global_hist[admitted_assign[off * nb] as usize] += 1.0;
         }
-        LayerCache { plan, k, n, assign, cw, mean, var, cww, admitted_assign, global_hist }
+        LayerCache {
+            plan,
+            k,
+            n,
+            assign,
+            cw,
+            mean,
+            var,
+            cww,
+            admitted_assign,
+            global_hist,
+            drift_ref: DriftHistogram::from_bins(drift_ref),
+            drift_obs: DriftHistogram::new(),
+            recent: Vec::new(),
+            recent_rows: 0,
+            recent_next: 0,
+        }
     }
 
     /// Admitted nodes recorded in THIS layer's table (during an admission
@@ -146,13 +196,13 @@ impl LayerCache {
     }
 
     /// Branch-j codeword of any servable id (frozen table or admitted
-    /// tail).
+    /// tail, resolved through the store's id map).
     #[inline]
-    pub fn assign_any(&self, j: usize, u: usize) -> usize {
+    pub fn assign_any(&self, adm: &AdmittedNodes, j: usize, u: usize) -> usize {
         if u < self.n {
             self.assign[j * self.n + u] as usize
         } else {
-            self.admitted_assign[(u - self.n) * self.plan.n_br + j] as usize
+            self.admitted_assign[slot_of(adm, u) * self.plan.n_br + j] as usize
         }
     }
 
@@ -163,6 +213,28 @@ impl LayerCache {
         debug_assert!(assigns.iter().all(|&a| (a as usize) < self.k));
         self.admitted_assign.extend_from_slice(assigns);
         self.global_hist[assigns[0] as usize] += 1.0;
+    }
+
+    /// Compact the admitted tail after an eviction: `keep` is the
+    /// survivors' OLD slots in ascending order (from
+    /// `AdmittedNodes::evict`).  Dropped rows give their branch-0 count
+    /// back to the global histogram — counts are small integers, so the
+    /// +1/−1 pair restores the exact pre-admission f32 value and
+    /// frozen-node `cnt_out` builds return to bit-identity.
+    pub fn evict_slots(&mut self, keep: &[usize]) {
+        let nb = self.plan.n_br;
+        let count = self.admitted_count();
+        let mut kept = Vec::with_capacity(keep.len() * nb);
+        let mut ki = 0usize;
+        for s in 0..count {
+            if ki < keep.len() && keep[ki] == s {
+                kept.extend_from_slice(&self.admitted_assign[s * nb..(s + 1) * nb]);
+                ki += 1;
+            } else {
+                self.global_hist[self.admitted_assign[s * nb] as usize] -= 1.0;
+            }
+        }
+        self.admitted_assign = kept;
     }
 
     /// Nearest-codeword assignment of one node from its layer-input
@@ -205,6 +277,158 @@ impl LayerCache {
         }
     }
 
+    /// Whitened per-dim RMS distance from a layer-input feature row to its
+    /// NEAREST codeword, averaged over the feature-bearing branches — the
+    /// drift detector's sample statistic (how well the frozen codebook
+    /// still quantizes this row, independent of any stale table entry).
+    pub fn nearest_distance(&self, row: &[f32]) -> f32 {
+        let (fl, fp, k, nb) = (self.plan.f_in, self.plan.fp, self.k, self.plan.n_br);
+        debug_assert_eq!(row.len(), fl);
+        let mut acc = 0.0f64;
+        let mut branches = 0usize;
+        let mut vw = vec![0.0f32; fp];
+        for j in 0..nb {
+            let lo = j * fp;
+            if lo >= fl {
+                continue;
+            }
+            let width = fp.min(fl - lo);
+            for d in 0..width {
+                let inv = 1.0 / (self.var[j * fp + d] + crate::vq::EPS).sqrt();
+                vw[d] = (row[lo + d] - self.mean[j * fp + d]) * inv;
+            }
+            let mut best = f64::INFINITY;
+            for c in 0..k {
+                let base = (j * k + c) * fp;
+                let mut d2 = 0.0f64;
+                for d in 0..width {
+                    let diff = (vw[d] - self.cww[base + d]) as f64;
+                    d2 += diff * diff;
+                }
+                if d2 < best {
+                    best = d2;
+                }
+            }
+            acc += (best / width as f64).sqrt();
+            branches += 1;
+        }
+        if branches == 0 {
+            0.0
+        } else {
+            (acc / branches as f64) as f32
+        }
+    }
+
+    /// Single-writer drift hook for one served/admitted row: record its
+    /// nearest-codeword distance in the observed histogram and retain the
+    /// row in the bounded refresh ring.
+    pub fn observe_serving(&mut self, row: &[f32]) {
+        let d = self.nearest_distance(row);
+        self.drift_obs.record(d);
+        let fl = self.plan.f_in;
+        if self.recent_rows < RECENT_ROWS {
+            self.recent.extend_from_slice(row);
+            self.recent_rows += 1;
+            self.recent_next = self.recent_rows % RECENT_ROWS;
+        } else {
+            self.recent[self.recent_next * fl..(self.recent_next + 1) * fl]
+                .copy_from_slice(row);
+            self.recent_next = (self.recent_next + 1) % RECENT_ROWS;
+        }
+    }
+
+    /// Record one row into the REFERENCE histogram (freeze-time seeding
+    /// from the frozen nodes — the training distribution's footprint).
+    pub fn observe_reference(&mut self, row: &[f32]) {
+        let d = self.nearest_distance(row);
+        self.drift_ref.record(d);
+    }
+
+    /// Drift metric: total-variation distance between the observed and
+    /// reference distance histograms (0 until both hold data).
+    pub fn drift(&self) -> f32 {
+        self.drift_obs.tv_distance(&self.drift_ref)
+    }
+
+    /// Rows currently retained for a refresh.
+    pub fn recent_len(&self) -> usize {
+        self.recent_rows
+    }
+
+    /// Online EMA refresh (serving-side analogue of `VqBranch::update`,
+    /// built on the same deterministic kernels): re-assign the retained
+    /// traffic rows to the current codebook (`assign_blocked`), merge the
+    /// per-cluster partials (`cluster_accumulate`), and pull each cluster
+    /// with batch mass toward its traffic mean — `cww ← γ·cww +
+    /// (1−γ)·mean` — then re-derive the raw codeword through the frozen
+    /// inverse whitening.  Whitening stats and the node→codeword tables
+    /// are left untouched: assignments go *stale* rather than wrong (the
+    /// staleness caveat the README documents), and untouched clusters
+    /// keep their exact bits, so a refresh with no retained rows — or no
+    /// cluster mass — is a bit-exact no-op.  Finally the observed
+    /// histogram is rebuilt against the new codebook, so the drift metric
+    /// reflects the refreshed fit.  Returns whether anything changed.
+    pub fn refresh(&mut self, gamma: f32) -> bool {
+        let rows = self.recent_rows;
+        if rows == 0 {
+            return false;
+        }
+        let (fl, fp, k, nb) = (self.plan.f_in, self.plan.fp, self.k, self.plan.n_br);
+        let mut changed = false;
+        for j in 0..nb {
+            let lo = j * fp;
+            if lo >= fl {
+                continue; // pure-gradient branch: no serving data for it
+            }
+            let width = fp.min(fl - lo);
+            let mut inv = vec![0.0f32; width];
+            kernels::inv_std_into(&self.var[j * fp..j * fp + width], &mut inv);
+            let mut vw = vec![0.0f32; rows * width];
+            for r in 0..rows {
+                for d in 0..width {
+                    vw[r * width + d] =
+                        (self.recent[r * fl + lo + d] - self.mean[j * fp + d]) * inv[d];
+                }
+            }
+            let mut assigns = vec![0i32; rows];
+            kernels::assign_blocked(
+                &vw,
+                width,
+                width,
+                &self.cww[j * k * fp..(j + 1) * k * fp],
+                k,
+                fp,
+                &mut assigns,
+            );
+            let (bc, bs) = kernels::cluster_accumulate(&vw, &assigns, rows, width, k);
+            for c in 0..k {
+                // clusters without traffic mass keep their exact position
+                // (mirrors the trainer's empty-cluster guard)
+                if bc[c] > 1e-6 && bc[c].is_finite() {
+                    changed = true;
+                    for d in 0..width {
+                        let idx = (j * k + c) * fp + d;
+                        let target = bs[c * width + d] / bc[c];
+                        self.cww[idx] = gamma * self.cww[idx] + (1.0 - gamma) * target;
+                        self.cw.f[idx] = self.cww[idx]
+                            * (self.var[j * fp + d] + crate::vq::EPS).sqrt()
+                            + self.mean[j * fp + d];
+                    }
+                }
+            }
+        }
+        if changed {
+            // the codebook moved: re-score the retained window so the
+            // drift metric measures the refreshed fit
+            self.drift_obs.clear();
+            for r in 0..rows {
+                let d = self.nearest_distance(&self.recent[r * fl..(r + 1) * fl]);
+                self.drift_obs.record(d);
+            }
+        }
+        changed
+    }
+
     /// Forward fixed-convolution sketches for a query batch, written into
     /// caller-owned buffers: `(C_in, C̃_out)` — the exact intra-batch block
     /// plus the codeword-merged out-of-batch block.  Mirrors
@@ -241,7 +465,7 @@ impl LayerCache {
                     c_in[i * b + p as usize] += coef;
                 } else {
                     for j in 0..nb {
-                        let v = self.assign_any(j, u as usize);
+                        let v = self.assign_any(adm, j, u as usize);
                         c_out[(j * b + i) * k + v] += coef;
                     }
                 }
@@ -302,7 +526,7 @@ impl LayerCache {
                 if p >= 0 {
                     mask_in[i * b + p as usize] = 1.0;
                 } else {
-                    let v = self.assign_any(0, u as usize);
+                    let v = self.assign_any(adm, 0, u as usize);
                     m_out[i * k + v] += 1.0;
                 }
             }
@@ -338,7 +562,13 @@ impl LayerCache {
     /// batches.  A batch member that is mid-admission (recorded features
     /// but no assignment yet — the bootstrap forward itself) is not in the
     /// histogram and is skipped.
-    pub fn build_cnt_fwd_into(&self, batch: &[u32], scratch: &mut SketchScratch, cnt: &mut [f32]) {
+    pub fn build_cnt_fwd_into(
+        &self,
+        adm: &AdmittedNodes,
+        batch: &[u32],
+        scratch: &mut SketchScratch,
+        cnt: &mut [f32],
+    ) {
         debug_assert_eq!(cnt.len(), self.k);
         cnt.copy_from_slice(&self.global_hist);
         scratch.mark(batch);
@@ -347,19 +577,28 @@ impl LayerCache {
             // distinct node exactly once, duplicates included
             if scratch.pos_of(g as usize) == i as i32 {
                 let u = g as usize;
-                if u >= self.n && u - self.n >= self.admitted_count() {
-                    continue; // mid-admission: not in the histogram
+                if u >= self.n {
+                    match adm.slot_of(g) {
+                        // mid-admission: not in the histogram yet
+                        Some(s) if s < self.admitted_count() => {}
+                        _ => continue,
+                    }
                 }
-                cnt[self.assign_any(0, u)] -= 1.0;
+                cnt[self.assign_any(adm, 0, u)] -= 1.0;
             }
         }
         scratch.unmark(batch);
     }
 
     /// Allocating wrapper of [`LayerCache::build_cnt_fwd_into`].
-    pub fn build_cnt_fwd(&self, batch: &[u32], scratch: &mut SketchScratch) -> Tensor {
+    pub fn build_cnt_fwd(
+        &self,
+        adm: &AdmittedNodes,
+        batch: &[u32],
+        scratch: &mut SketchScratch,
+    ) -> Tensor {
         let mut cnt = vec![0.0f32; self.k];
-        self.build_cnt_fwd_into(batch, scratch, &mut cnt);
+        self.build_cnt_fwd_into(adm, batch, scratch, &mut cnt);
         Tensor::from_f32(&[self.k], cnt)
     }
 }
@@ -388,6 +627,7 @@ impl EmbeddingCache {
                     l.mean_tensor().f,
                     l.var_tensor().f,
                     Vec::new(),
+                    Vec::new(),
                 )
             })
             .collect();
@@ -396,6 +636,44 @@ impl EmbeddingCache {
             layers.first().map(|l| l.plan.f_in).unwrap_or(0),
         );
         EmbeddingCache { layers, admitted: AdmittedNodes::new(n, f_pad) }
+    }
+
+    /// Seed layer 0's drift REFERENCE from the frozen nodes' own
+    /// nearest-codeword distances — the training distribution's footprint
+    /// (freeze-time; an O(n·k·fp) one-off).  Deeper layers have no node
+    /// rows here; they gain a reference only once observed traffic is
+    /// exported into a VQS3 checkpoint.  No-op if a reference exists.
+    pub fn seed_drift_reference(&mut self, features: &[f32], f: usize) {
+        if let Some(l0) = self.layers.first_mut() {
+            if l0.plan.f_in != f || !l0.drift_ref.is_empty() {
+                return;
+            }
+            let rows = l0.n.min(features.len() / f.max(1));
+            for u in 0..rows {
+                let d = l0.nearest_distance(&features[u * f..(u + 1) * f]);
+                l0.drift_ref.record(d);
+            }
+        }
+    }
+
+    /// Evict admitted ids everywhere: the feature/CSR store plus every
+    /// layer's assignment tail and histogram, compacted in lockstep.
+    /// Returns the survivors' OLD slots (for sibling-state compaction —
+    /// touch stamps).  Single-writer path.
+    pub fn evict(&mut self, victims: &[u32]) -> Vec<usize> {
+        let before = self.admitted.len();
+        let keep = self.admitted.evict(victims);
+        if keep.len() != before {
+            for l in &mut self.layers {
+                l.evict_slots(&keep);
+            }
+        }
+        keep
+    }
+
+    /// Largest per-layer drift metric (the engine's alert signal).
+    pub fn max_drift(&self) -> f32 {
+        self.layers.iter().map(|l| l.drift()).fold(0.0, f32::max)
     }
 
     /// Rebuild from a serving artifact's layers + the serve spec's plans.
@@ -410,7 +688,7 @@ impl EmbeddingCache {
             .map(|(p, l)| {
                 let cw = Tensor::from_f32(&[l.n_br, l.k, l.fp], l.cw);
                 LayerCache::new(p.clone(), l.k, l.n, l.assign, cw, l.mean, l.var,
-                                l.admitted_assign)
+                                l.admitted_assign, l.drift_ref)
             })
             .collect();
         let (n, f_pad) = (
@@ -423,20 +701,27 @@ impl EmbeddingCache {
         }
     }
 
-    /// Export back into serving-artifact layers.
+    /// Export back into serving-artifact layers.  The drift reference
+    /// frozen into the artifact is the existing reference when one exists;
+    /// otherwise the observed traffic histogram is promoted — "the
+    /// distribution at export time" becomes the next process's reference.
     pub fn to_serving_layers(&self) -> Vec<ServingLayer> {
         self.layers
             .iter()
-            .map(|l| ServingLayer {
-                k: l.k,
-                n: l.n,
-                n_br: l.plan.n_br,
-                fp: l.plan.fp,
-                cw: l.cw.f.clone(),
-                assign: l.assign.clone(),
-                mean: l.mean.clone(),
-                var: l.var.clone(),
-                admitted_assign: l.admitted_assign.clone(),
+            .map(|l| {
+                let r = if l.drift_ref.is_empty() { &l.drift_obs } else { &l.drift_ref };
+                ServingLayer {
+                    k: l.k,
+                    n: l.n,
+                    n_br: l.plan.n_br,
+                    fp: l.plan.fp,
+                    cw: l.cw.f.clone(),
+                    assign: l.assign.clone(),
+                    mean: l.mean.clone(),
+                    var: l.var.clone(),
+                    admitted_assign: l.admitted_assign.clone(),
+                    drift_ref: if r.is_empty() { Vec::new() } else { r.bins().to_vec() },
+                }
             })
             .collect()
     }
@@ -446,7 +731,7 @@ impl EmbeddingCache {
         self.admitted.to_serving()
     }
 
-    /// Total servable ids: dataset nodes + admitted nodes.
+    /// Total servable ids: dataset nodes + resident admitted nodes.
     pub fn total_nodes(&self) -> usize {
         self.admitted.total()
     }
@@ -459,12 +744,12 @@ impl EmbeddingCache {
         debug_assert_eq!(out.len(), batch.len() * f);
         let base = self.admitted.base_n;
         for (i, &v) in batch.iter().enumerate() {
-            let v = v as usize;
             let dst = &mut out[i * f..(i + 1) * f];
-            if v < base {
+            if (v as usize) < base {
+                let v = v as usize;
                 dst.copy_from_slice(&features[v * f..(v + 1) * f]);
             } else {
-                dst.copy_from_slice(self.admitted.feature_row(v - base));
+                dst.copy_from_slice(self.admitted.feature_row(slot_of(&self.admitted, v as usize)));
             }
         }
     }
@@ -518,6 +803,7 @@ mod tests {
             lv.mean_tensor().f,
             lv.var_tensor().f,
             Vec::new(),
+            Vec::new(),
         )
     }
 
@@ -551,7 +837,7 @@ mod tests {
         assert_eq!(mi_t.f, mi_c.f);
         assert_eq!(mo_t.f, mo_c.f);
         let cnt_t = build_cnt_out(&batch, &lv, &mut s1);
-        let cnt_c = cache.build_cnt_fwd(&batch, &mut s2);
+        let cnt_c = cache.build_cnt_fwd(&adm, &batch, &mut s2);
         assert_eq!(cnt_t.f, cnt_c.f);
     }
 
@@ -564,12 +850,12 @@ mod tests {
         let id = adm.push(&[0.5; 8], &[1, 5, 9]);
         cache.record_admitted(&[3, 1]);
         assert_eq!(cache.admitted_count(), 1);
-        assert_eq!(cache.assign_any(0, id as usize), 3);
-        assert_eq!(cache.assign_any(1, id as usize), 1);
+        assert_eq!(cache.assign_any(&adm, 0, id as usize), 3);
+        assert_eq!(cache.assign_any(&adm, 1, id as usize), 1);
 
         let batch: Vec<u32> = vec![id, 2];
         let (b, k) = (batch.len(), cache.k);
-        let mut scratch = SketchScratch::new(adm.total());
+        let mut scratch = SketchScratch::new(adm.id_bound() as usize);
         let (c_in, c_out) =
             cache.build_fixed_fwd(&g, &adm, Conv::GcnSym, &batch, &mut scratch);
         // the admitted row's mass is its 3 arcs (none of 1/5/9 is in the
@@ -592,7 +878,7 @@ mod tests {
         }
         // each neighbor's coefficient landed in its codeword's bucket
         for &u in &[1u32, 5, 9] {
-            let v = cache.assign_any(0, u as usize);
+            let v = cache.assign_any(&adm, 0, u as usize);
             assert!(c_out.f[v] > 0.0, "arc {u}→{id} missing from c_out");
         }
 
@@ -601,7 +887,7 @@ mod tests {
         let adm0 = no_admitted(&g, &lv);
         let mut s2 = SketchScratch::new(g.n);
         let (ci0, co0) = fresh.build_fixed_fwd(&g, &adm0, Conv::GcnSym, &[2, 7], &mut s2);
-        let mut s3 = SketchScratch::new(adm.total());
+        let mut s3 = SketchScratch::new(adm.id_bound() as usize);
         let (ci1, co1) = cache.build_fixed_fwd(&g, &adm, Conv::GcnSym, &[2, 7], &mut s3);
         assert_eq!(ci0.f, ci1.f);
         assert_eq!(co0.f, co1.f);
@@ -612,19 +898,105 @@ mod tests {
         let mut c1 = freeze_one(&lv1);
         let mut a1 = AdmittedNodes::new(g1.n, lv1.plan.f_in);
         let mut sc = SketchScratch::new(g1.n + 1);
-        let before = c1.build_cnt_fwd(&[0, 3], &mut sc);
+        let before = c1.build_cnt_fwd(&a1, &[0, 3], &mut sc);
         let nid = a1.push(&[0.0; 8], &[0]);
         // mid-admission (no assignment recorded): histogram unchanged,
         // batches containing the in-flight node skip it
-        let mid = c1.build_cnt_fwd(&[0, nid], &mut sc);
+        let mid = c1.build_cnt_fwd(&a1, &[0, nid], &mut sc);
         assert_eq!(mid.f.iter().sum::<f32>(), before.f.iter().sum::<f32>() + 1.0);
         c1.record_admitted(&[2]);
-        let after = c1.build_cnt_fwd(&[0, 3], &mut sc);
+        let after = c1.build_cnt_fwd(&a1, &[0, 3], &mut sc);
         assert_eq!(after.f[2], before.f[2] + 1.0);
         // and once admitted, the node decrements its own bucket in-batch:
         // hist(+node) − {0, node} == hist − {0} == the mid-admission build
-        let with = c1.build_cnt_fwd(&[0, nid], &mut sc);
+        let with = c1.build_cnt_fwd(&a1, &[0, nid], &mut sc);
         assert_eq!(with.f, mid.f);
+    }
+
+    #[test]
+    fn eviction_compacts_tables_and_restores_histogram_bitwise() {
+        let (g, mut lv) = setup(20, 57, 1);
+        lv.plan.n_br = 1;
+        let mut cache = EmbeddingCache {
+            layers: vec![freeze_one(&lv)],
+            admitted: AdmittedNodes::new(g.n, lv.plan.f_in),
+        };
+        let mut sc = SketchScratch::new(64);
+        let baseline = cache.layers[0].build_cnt_fwd(&cache.admitted, &[0, 3], &mut sc);
+        let mem0 = cache.memory_bytes();
+        // admit three nodes into distinct-ish buckets
+        let a = cache.admitted.push(&[0.1; 8], &[0]);
+        cache.layers[0].record_admitted(&[1]);
+        let b = cache.admitted.push(&[0.2; 8], &[1, a]);
+        cache.layers[0].record_admitted(&[2]);
+        let c = cache.admitted.push(&[0.3; 8], &[b]);
+        cache.layers[0].record_admitted(&[1]);
+        assert!(cache.memory_bytes() > mem0);
+        // evict the middle one: survivor slots compact, ids stay put
+        let keep = cache.evict(&[b]);
+        assert_eq!(keep, vec![0, 2]);
+        assert_eq!(cache.layers[0].admitted_count(), 2);
+        assert_eq!(cache.layers[0].assign_any(&cache.admitted, 0, a as usize), 1);
+        assert_eq!(cache.layers[0].assign_any(&cache.admitted, 0, c as usize), 1);
+        assert_eq!(cache.admitted.slot_of(b), None);
+        // evict the rest: the cnt histogram returns to the frozen-only
+        // build BIT-identically (+1/−1 on small integers is exact)
+        cache.evict(&[a, c]);
+        let back = cache.layers[0].build_cnt_fwd(&cache.admitted, &[0, 3], &mut sc);
+        assert_eq!(baseline.f, back.f);
+        assert_eq!(cache.memory_bytes(), mem0);
+    }
+
+    #[test]
+    fn drift_signal_rises_with_far_traffic_and_refresh_reduces_it() {
+        let (_g, lv) = setup(25, 59, 2);
+        let mut cache = freeze_one(&lv);
+        // no reference, no observation: no signal
+        assert_eq!(cache.drift(), 0.0);
+        // reference = rows sitting exactly ON codewords (distance ~0)
+        let fp = lv.plan.fp;
+        let mut on_codeword = vec![0.0f32; 8];
+        for j in 0..2 {
+            let lo = j * fp;
+            let width = fp.min(8 - lo);
+            for d in 0..width {
+                on_codeword[lo + d] = cache.cw.f[(j * lv.k) * fp + d]; // cluster 0
+            }
+        }
+        for _ in 0..20 {
+            cache.observe_reference(&on_codeword);
+        }
+        assert_eq!(cache.drift(), 0.0, "reference alone is no signal");
+        // observed traffic far from every codeword: drift jumps
+        let far: Vec<f32> = on_codeword.iter().map(|x| x + 1000.0).collect();
+        for _ in 0..20 {
+            cache.observe_serving(&far);
+        }
+        let drifted = cache.drift();
+        assert!(drifted > 0.9, "far traffic must alarm, got {drifted}");
+        // refresh pulls codewords toward the retained rows → drift drops
+        let cw_before = cache.cw.f.clone();
+        assert!(cache.refresh(0.2));
+        assert!(cache.cw.f != cw_before, "refresh must move codewords");
+        let after = cache.drift();
+        assert!(
+            after < drifted,
+            "refresh must reduce the drift metric ({drifted} → {after})"
+        );
+        // near-codeword traffic, refreshed codebook: assignment still sane
+        let mut asg = vec![0u32; 2];
+        cache.assign_features(&far, &mut asg);
+        assert!(asg.iter().all(|&a| (a as usize) < cache.k));
+    }
+
+    #[test]
+    fn refresh_without_recent_rows_is_a_bit_exact_noop() {
+        let (_g, lv) = setup(25, 61, 2);
+        let mut cache = freeze_one(&lv);
+        let (cw0, cww0) = (cache.cw.f.clone(), cache.cww.clone());
+        assert!(!cache.refresh(0.5));
+        assert_eq!(cache.cw.f, cw0);
+        assert_eq!(cache.cww, cww0);
     }
 
     #[test]
@@ -681,6 +1053,8 @@ mod tests {
         };
         cache.admitted.push(&[1.0; 8], &[3, 4]);
         cache.layers[0].record_admitted(&[2, 4]);
+        // a non-empty reference must survive the round trip
+        cache.layers[0].observe_reference(&[0.5; 8]);
         let plans = vec![lv.plan.clone()];
         let exported = cache.to_serving_layers();
         let adm_exported = cache.to_serving_admitted();
@@ -691,6 +1065,7 @@ mod tests {
         assert_eq!(cache.layers[0].var, back.layers[0].var);
         assert_eq!(cache.layers[0].admitted_assign, back.layers[0].admitted_assign);
         assert_eq!(cache.layers[0].cww, back.layers[0].cww, "derived codebooks agree");
+        assert_eq!(cache.layers[0].drift_ref, back.layers[0].drift_ref);
         assert_eq!(cache.total_nodes(), back.total_nodes());
         assert_eq!(back.admitted.neighbors_of(0), &[3, 4]);
         assert_eq!(cache.memory_bytes(), back.memory_bytes());
@@ -702,5 +1077,14 @@ mod tests {
             + l.var.len()) as u64
             + cache.admitted.memory_bytes();
         assert_eq!(cache.memory_bytes(), expect);
+        // with no explicit reference, the observed histogram is promoted
+        // to the exported reference (freeze of "the distribution now")
+        let mut fresh = EmbeddingCache {
+            admitted: AdmittedNodes::new(g.n, lv.plan.f_in),
+            layers: vec![freeze_one(&lv)],
+        };
+        fresh.layers[0].observe_serving(&[0.25; 8]);
+        let promoted = fresh.to_serving_layers();
+        assert_eq!(promoted[0].drift_ref, fresh.layers[0].drift_obs.bins().to_vec());
     }
 }

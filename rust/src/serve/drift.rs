@@ -1,0 +1,162 @@
+//! Codebook-drift detection — the serving-side health signal for the
+//! paper's central approximation.  Every answer rides the frozen
+//! codebooks: an out-of-batch message is replaced by its node's assigned
+//! codeword, so the approximation error is governed by the
+//! distance-to-nearest-codeword of the traffic actually being served.
+//! When that distribution walks away from the one the codebooks were
+//! fitted on (new nodes from a different regime, feature drift), answers
+//! silently degrade — nothing in the forward pass fails.
+//!
+//! The detector is a fixed-bin histogram of whitened per-dimension RMS
+//! distances (the same whitened space training's FINDNEAREST ran in, so
+//! "far" means the same thing it meant to the trainer):
+//!
+//! - a **reference** histogram frozen at export time — seeded from the
+//!   frozen nodes' own distances when a trainer is frozen, carried in the
+//!   "VQS3" checkpoint block;
+//! - an **observed** histogram accumulated online from serving traffic
+//!   (flush batches, admissions) by the single-writer maintenance hook.
+//!
+//! Drift is the total-variation distance between the two normalized
+//! histograms: 0 (same distribution) … 1 (disjoint).  TV is insensitive
+//! to traffic volume — only the *shape* of the distance distribution
+//! matters — and is exactly 0 until both histograms hold data, so a
+//! fresh model or a legacy (VQS1/VQS2) load never false-alarms.
+
+/// Histogram resolution.  16 bins over `[0, DRIFT_MAX_DIST)` is coarse
+/// enough to be volume-stable and fine enough that a drifted mode (mass
+/// past the training distances) moves several bins of probability.
+pub const DRIFT_BINS: usize = 16;
+
+/// Saturation point of the binning, in whitened per-dim RMS distance.
+/// Whitened dimensions have ~unit variance, so training-regime distances
+/// land well under this; anything at or past it is "far" and shares the
+/// last bin.
+pub const DRIFT_MAX_DIST: f32 = 4.0;
+
+/// A fixed-bin distance histogram (counts kept in f32 — they are small
+/// integers, exact well past any realistic sample count).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftHistogram {
+    bins: Vec<f32>,
+}
+
+impl Default for DriftHistogram {
+    fn default() -> DriftHistogram {
+        DriftHistogram::new()
+    }
+}
+
+impl DriftHistogram {
+    pub fn new() -> DriftHistogram {
+        DriftHistogram { bins: vec![0.0; DRIFT_BINS] }
+    }
+
+    /// Rebuild from serialized bin counts (a checkpoint's reference
+    /// block).  An empty vector means "no reference" and stays empty;
+    /// anything else is normalized to `DRIFT_BINS` entries.
+    pub fn from_bins(bins: Vec<f32>) -> DriftHistogram {
+        if bins.is_empty() {
+            return DriftHistogram::new();
+        }
+        let mut h = DriftHistogram::new();
+        for (i, v) in bins.into_iter().enumerate().take(DRIFT_BINS) {
+            h.bins[i] = v;
+        }
+        h
+    }
+
+    /// Record one distance sample.  Non-finite distances (a poisoned
+    /// input row) land in the saturation bin — they are maximally "far".
+    pub fn record(&mut self, dist: f32) {
+        let b = if dist.is_finite() && dist >= 0.0 {
+            ((dist / DRIFT_MAX_DIST) * DRIFT_BINS as f32) as usize
+        } else {
+            DRIFT_BINS - 1
+        };
+        self.bins[b.min(DRIFT_BINS - 1)] += 1.0;
+    }
+
+    pub fn total(&self) -> f32 {
+        self.bins.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() <= 0.0
+    }
+
+    pub fn bins(&self) -> &[f32] {
+        &self.bins
+    }
+
+    pub fn clear(&mut self) {
+        self.bins.fill(0.0);
+    }
+
+    /// Total-variation distance between the two normalized histograms:
+    /// `0.5 · Σ_i |p_i − q_i|` ∈ [0, 1].  Returns 0 unless BOTH sides
+    /// hold samples — no reference (or no traffic) is "no signal", not
+    /// "alarm".
+    pub fn tv_distance(&self, other: &DriftHistogram) -> f32 {
+        let (tp, tq) = (self.total(), other.total());
+        if tp <= 0.0 || tq <= 0.0 {
+            return 0.0;
+        }
+        let mut acc = 0.0f64;
+        for (p, q) in self.bins.iter().zip(&other.bins) {
+            acc += ((p / tp) as f64 - (q / tq) as f64).abs();
+        }
+        (0.5 * acc) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binning_saturates_and_rejects_nonfinite() {
+        let mut h = DriftHistogram::new();
+        h.record(0.0); // first bin
+        h.record(DRIFT_MAX_DIST * 0.99); // last bin
+        h.record(DRIFT_MAX_DIST * 100.0); // saturates into the last bin
+        h.record(f32::NAN); // poisoned row: maximally far
+        h.record(f32::INFINITY);
+        assert_eq!(h.bins()[0], 1.0);
+        assert_eq!(h.bins()[DRIFT_BINS - 1], 4.0);
+        assert_eq!(h.total(), 5.0);
+    }
+
+    #[test]
+    fn tv_distance_is_zero_same_one_disjoint_and_volume_insensitive() {
+        let (mut a, mut b) = (DriftHistogram::new(), DriftHistogram::new());
+        // empty vs anything: no signal
+        assert_eq!(a.tv_distance(&b), 0.0);
+        a.record(0.1);
+        assert_eq!(a.tv_distance(&b), 0.0);
+        // same shape at different volumes: still zero
+        b.record(0.1);
+        b.record(0.1);
+        assert!(a.tv_distance(&b).abs() < 1e-7);
+        // disjoint support: maximal drift
+        let (mut lo, mut hi) = (DriftHistogram::new(), DriftHistogram::new());
+        for _ in 0..5 {
+            lo.record(0.0);
+            hi.record(DRIFT_MAX_DIST);
+        }
+        assert!((lo.tv_distance(&hi) - 1.0).abs() < 1e-7);
+        // symmetric
+        assert_eq!(lo.tv_distance(&hi), hi.tv_distance(&lo));
+    }
+
+    #[test]
+    fn from_bins_roundtrip() {
+        let mut h = DriftHistogram::new();
+        for d in [0.0, 0.5, 1.5, 3.9, 9.0] {
+            h.record(d);
+        }
+        let back = DriftHistogram::from_bins(h.bins().to_vec());
+        assert_eq!(h, back);
+        assert!(DriftHistogram::from_bins(Vec::new()).is_empty());
+    }
+}

@@ -72,6 +72,13 @@ pub struct EngineStats {
     pub tail_deadline_flushes: u64,
     /// Partial tails flushed because the caller forced a full drain.
     pub tail_forced_flushes: u64,
+    /// Admitted nodes evicted by the retention policy (TTL + LRU cap),
+    /// lifetime total.
+    pub evictions: u64,
+    /// Drift-alert excursions: +1 each time the model's codebook-drift
+    /// metric crosses the engine threshold from below (edge-triggered, so
+    /// a sustained excursion counts once).
+    pub drift_alerts: u64,
 }
 
 pub struct MicroBatcher {
@@ -232,6 +239,7 @@ impl MicroBatcher {
             }
         }
         let n_batches = (slots.len() + b - 1) / b;
+        let n_real = slots.len(); // before padding — maintenance hooks must not see pad rows
         let padded = n_batches * b - slots.len();
         // padding mirrors infer_nodes: the flush's FIRST queued node pads
         // the tail, so drain == one-shot inference bitwise.  Padding the
@@ -289,6 +297,10 @@ impl MicroBatcher {
             n_batches as u64 * spec.input_bytes(),
             n_batches as u64 * spec.output_bytes(),
         );
+        // maintenance hook: touch the served admitted nodes' LRU stamps and
+        // feed the drift observer (histograms/stamps only — answers already
+        // computed above are never affected)
+        model.note_served(&slots[..n_real]);
 
         // ---- accounting -------------------------------------------------
         self.stats.batches_run += n_batches as u64;
@@ -343,9 +355,19 @@ pub enum ServeError {
     ZeroWorkers,
     /// The per-model queue cap cannot hold even one link query (2 slots).
     QueueCapTooSmall(usize),
+    /// `.max_admitted(c)` cannot retain even one admitted node.
+    AdmitCapTooSmall(usize),
+    /// `.admit_ttl(0)` — every admitted node would expire instantly.
+    ZeroAdmitTtl,
+    /// `.drift_threshold(t)` outside (0, 1] — TV distance lives in [0, 1],
+    /// and a threshold of 0 would alert on any traffic at all.
+    BadDriftThreshold,
+    /// `.refresh_gamma(g)` outside [0, 1) — 1 would make refresh a no-op.
+    BadRefreshGamma,
     /// `submit` named a model the router does not carry.
     UnknownModel(String),
-    /// A node id outside the model's servable range (frozen + admitted).
+    /// A node id the model cannot serve: outside the frozen range and not
+    /// a RESIDENT admitted id (evicted ids land here too).
     InvalidNode { model: String, id: u32, total: usize },
     /// Backpressure: the model's queue is at capacity, so the request is
     /// load-shed instead of letting the tail latency grow unboundedly.
@@ -366,11 +388,27 @@ impl fmt::Display for ServeError {
                 f,
                 "serve engine: queue cap {c} cannot hold a link query (needs at least 2 slots)"
             ),
+            ServeError::AdmitCapTooSmall(c) => write!(
+                f,
+                "serve engine: admitted-node cap {c} cannot retain a single admission"
+            ),
+            ServeError::ZeroAdmitTtl => write!(
+                f,
+                "serve engine: a zero admit TTL would expire every admission instantly"
+            ),
+            ServeError::BadDriftThreshold => write!(
+                f,
+                "serve engine: drift threshold must be in (0, 1] (TV distance)"
+            ),
+            ServeError::BadRefreshGamma => write!(
+                f,
+                "serve engine: refresh gamma must be in [0, 1) (1 keeps codewords frozen)"
+            ),
             ServeError::UnknownModel(m) => write!(f, "serve engine: unknown model '{m}'"),
             ServeError::InvalidNode { model, id, total } => write!(
                 f,
-                "serve engine: node id {id} out of range for model '{model}' \
-                 ({total} servable ids)"
+                "serve engine: node id {id} is not servable by model '{model}' \
+                 ({total} resident ids; evicted ids are refused)"
             ),
             ServeError::Shed { model, pending_slots, cap } => write!(
                 f,
@@ -392,6 +430,10 @@ pub struct ServeEngineBuilder {
     threads: usize,
     deadline: Option<Duration>,
     queue_cap: Option<usize>,
+    max_admitted: Option<usize>,
+    ttl: Option<Duration>,
+    drift_threshold: f32,
+    refresh_gamma: f32,
 }
 
 impl ServeEngineBuilder {
@@ -422,6 +464,38 @@ impl ServeEngineBuilder {
         self
     }
 
+    /// Retention cap on admitted nodes per model: past it, the
+    /// least-recently-served admitted nodes are evicted on the admission
+    /// path (or via [`ServeEngine::maintain`]).  Unset = unbounded (the
+    /// pre-maintenance behavior).
+    pub fn max_admitted(mut self, cap: usize) -> Self {
+        self.max_admitted = Some(cap);
+        self
+    }
+
+    /// Time-to-live for admitted nodes: one untouched for this long is
+    /// evicted at the next retention pass.  Touches are admissions and
+    /// being served in a flush.  Unset = no expiry.
+    pub fn admit_ttl(mut self, ttl: Duration) -> Self {
+        self.ttl = Some(ttl);
+        self
+    }
+
+    /// Codebook-drift alert threshold in TV distance (default 0.5): at or
+    /// above it, `EngineStats::drift_alerts` counts an excursion and
+    /// [`ServeEngine::refresh`] is willing to re-fit.
+    pub fn drift_threshold(mut self, t: f32) -> Self {
+        self.drift_threshold = t;
+        self
+    }
+
+    /// EMA retention factor for [`ServeEngine::refresh`] (default 0.8):
+    /// a re-fitted codeword keeps `gamma` of its old position.
+    pub fn refresh_gamma(mut self, g: f32) -> Self {
+        self.refresh_gamma = g;
+        self
+    }
+
     pub fn build(self, rt: Runtime) -> Result<ServeEngine, ServeError> {
         if self.models.is_empty() {
             return Err(ServeError::NoModels);
@@ -434,6 +508,20 @@ impl ServeEngineBuilder {
                 return Err(ServeError::QueueCapTooSmall(cap));
             }
         }
+        if let Some(cap) = self.max_admitted {
+            if cap < 1 {
+                return Err(ServeError::AdmitCapTooSmall(cap));
+            }
+        }
+        if self.ttl == Some(Duration::ZERO) {
+            return Err(ServeError::ZeroAdmitTtl);
+        }
+        if !(self.drift_threshold > 0.0 && self.drift_threshold <= 1.0) {
+            return Err(ServeError::BadDriftThreshold);
+        }
+        if !(0.0..1.0).contains(&self.refresh_gamma) {
+            return Err(ServeError::BadRefreshGamma);
+        }
         let mut entries: Vec<ModelEntry> = Vec::with_capacity(self.models.len());
         for (name, mut model) in self.models {
             if entries.iter().any(|e| e.name == name) {
@@ -442,7 +530,7 @@ impl ServeEngineBuilder {
             model.set_threads(self.threads);
             let mut queue = MicroBatcher::new();
             queue.set_deadline(self.deadline);
-            entries.push(ModelEntry { name, model, queue });
+            entries.push(ModelEntry { name, model, queue, drift_high: false });
         }
         Ok(ServeEngine {
             rt,
@@ -451,6 +539,10 @@ impl ServeEngineBuilder {
             threads: self.threads,
             deadline: self.deadline,
             queue_cap: self.queue_cap,
+            max_admitted: self.max_admitted,
+            ttl: self.ttl,
+            drift_threshold: self.drift_threshold,
+            refresh_gamma: self.refresh_gamma,
         })
     }
 }
@@ -468,11 +560,24 @@ pub struct ServeEngine {
     threads: usize,
     deadline: Option<Duration>,
     queue_cap: Option<usize>,
+    max_admitted: Option<usize>,
+    ttl: Option<Duration>,
+    drift_threshold: f32,
+    refresh_gamma: f32,
 }
 
 impl ServeEngine {
     pub fn builder() -> ServeEngineBuilder {
-        ServeEngineBuilder { models: Vec::new(), threads: 1, deadline: None, queue_cap: None }
+        ServeEngineBuilder {
+            models: Vec::new(),
+            threads: 1,
+            deadline: None,
+            queue_cap: None,
+            max_admitted: None,
+            ttl: None,
+            drift_threshold: 0.5,
+            refresh_gamma: 0.8,
+        }
     }
 
     /// Admission control + enqueue; returns the request's global ticket
@@ -486,9 +591,10 @@ impl ServeEngine {
             .get_mut(model)
             .ok_or_else(|| ServeError::UnknownModel(model.to_string()))?;
         let total = entry.model.total_nodes();
+        let servable = |v: u32| entry.model.cache().admitted.is_servable(v);
         let bad = match req {
-            Request::Node(v) => (v as usize >= total).then_some(v),
-            Request::Link(u, v) => [u, v].into_iter().find(|&x| x as usize >= total),
+            Request::Node(v) => (!servable(v)).then_some(v),
+            Request::Link(u, v) => [u, v].into_iter().find(|&x| !servable(x)),
         };
         if let Some(id) = bad {
             return Err(ServeError::InvalidNode { model: model.to_string(), id, total });
@@ -522,9 +628,17 @@ impl ServeEngine {
 
     fn flush_all(&mut self, force_tail: bool) -> Result<Vec<Served>> {
         let rt = &self.rt;
+        let threshold = self.drift_threshold;
         let mut served: Vec<Served> = Vec::new();
         for e in self.router.entries_mut() {
             served.extend(e.queue.flush_with(rt, &mut e.model, force_tail)?);
+            // edge-triggered drift alert: the flush just fed the observer,
+            // so this is the freshest the metric gets
+            let high = e.model.max_drift() >= threshold;
+            if high && !e.drift_high {
+                e.queue.stats.drift_alerts += 1;
+            }
+            e.drift_high = high;
         }
         // one engine-wide ticket sequence ⇒ sorting recovers submit order
         served.sort_by_key(|s| s.id);
@@ -575,6 +689,22 @@ impl ServeEngine {
         self.queue_cap
     }
 
+    pub fn max_admitted(&self) -> Option<usize> {
+        self.max_admitted
+    }
+
+    pub fn admit_ttl(&self) -> Option<Duration> {
+        self.ttl
+    }
+
+    pub fn drift_threshold(&self) -> f32 {
+        self.drift_threshold
+    }
+
+    pub fn refresh_gamma(&self) -> f32 {
+        self.refresh_gamma
+    }
+
     /// Widen/narrow every model's worker pool.
     pub fn set_threads(&mut self, n: usize) {
         self.threads = n.max(1);
@@ -597,30 +727,92 @@ impl ServeEngine {
         model.set_threads(self.threads);
         let mut queue = MicroBatcher::new();
         queue.set_deadline(self.deadline);
-        self.router.push(ModelEntry { name, model, queue });
+        self.router.push(ModelEntry { name, model, queue, drift_high: false });
         Ok(())
     }
 
     /// Admit one unseen node to `model` NOW (the single-writer path; see
-    /// `ServingModel::admit`).
+    /// `ServingModel::admit`), then run the retention policy — admission
+    /// is what grows the tables, so it pays for its own trimming.
     pub fn admit(&mut self, model: &str, features: &[f32], neighbors: &[u32]) -> Result<u32> {
+        let (max_admitted, ttl) = (self.max_admitted, self.ttl);
         let rt = &self.rt;
         let e = self
             .router
             .get_mut(model)
             .with_context(|| format!("admit: unknown model '{model}'"))?;
-        e.model.admit(rt, features, neighbors)
+        let id = e.model.admit(rt, features, neighbors)?;
+        Self::retain_entry(e, max_admitted, ttl);
+        Ok(id)
     }
 
     /// Apply `model`'s queued admissions FIFO (see
-    /// `ServingModel::admit_queued`).
+    /// `ServingModel::admit_queued`), then run the retention policy.
     pub fn admit_queued(&mut self, model: &str) -> Result<Vec<u32>> {
+        let (max_admitted, ttl) = (self.max_admitted, self.ttl);
         let rt = &self.rt;
         let e = self
             .router
             .get_mut(model)
             .with_context(|| format!("admit_queued: unknown model '{model}'"))?;
-        e.model.admit_queued(rt)
+        let ids = e.model.admit_queued(rt)?;
+        Self::retain_entry(e, max_admitted, ttl);
+        Ok(ids)
+    }
+
+    /// One retention pass on `model` (the admission paths run this
+    /// implicitly; long-running hosts can also call it on a timer).
+    /// Returns how many admitted nodes were evicted.
+    pub fn maintain(&mut self, model: &str) -> Result<usize> {
+        let (max_admitted, ttl) = (self.max_admitted, self.ttl);
+        let e = self
+            .router
+            .get_mut(model)
+            .with_context(|| format!("maintain: unknown model '{model}'"))?;
+        Ok(Self::retain_entry(e, max_admitted, ttl))
+    }
+
+    /// Evict `model`'s TTL-expired admitted nodes plus the LRU overflow
+    /// past `max_admitted`.  Skipped while admissions are queued: queued
+    /// requests hold promised ids citing current residents, and the queue
+    /// is drained by `admit_queued` which retains afterwards anyway.
+    fn retain_entry(
+        e: &mut ModelEntry,
+        max_admitted: Option<usize>,
+        ttl: Option<Duration>,
+    ) -> usize {
+        if (max_admitted.is_none() && ttl.is_none()) || e.model.queued_admissions() > 0 {
+            return 0;
+        }
+        let victims = e.model.retention_victims(max_admitted, ttl);
+        if victims.is_empty() {
+            return 0;
+        }
+        let n = e.model.evict(&victims);
+        e.queue.stats.evictions += n as u64;
+        n
+    }
+
+    /// Codebook-drift metric of one model (max over layers, TV distance).
+    pub fn drift(&self, model: &str) -> Option<f32> {
+        self.router.get(model).map(|e| e.model.max_drift())
+    }
+
+    /// Drift-gated online EMA refresh (single-writer path): re-fit
+    /// `model`'s codewords from its retained recent traffic IF its drift
+    /// metric is at/above the engine threshold; below it this is a no-op
+    /// (healthy codebooks must not wander).  Returns whether codewords
+    /// changed.  See `ServingModel::refresh` for the staleness caveat.
+    pub fn refresh(&mut self, model: &str) -> Result<bool> {
+        let (threshold, gamma) = (self.drift_threshold, self.refresh_gamma);
+        let e = self
+            .router
+            .get_mut(model)
+            .with_context(|| format!("refresh: unknown model '{model}'"))?;
+        if e.model.max_drift() < threshold {
+            return Ok(false);
+        }
+        e.model.refresh(gamma)
     }
 
     /// Disassemble the facade — rebuild with a different deadline/cap

@@ -12,7 +12,8 @@
 //! - [`model::ServingModel`] — a shared immutable core (params + cache +
 //!   compiled plan) plus a pool of per-worker sessions
 //!   (`set_threads(N)`), built by freezing a trainer or loading a
-//!   `checkpoint::save_serving` ("VQS2") artifact;
+//!   `checkpoint::save_serving` ("VQS3"; VQS2/VQS1 artifacts still load)
+//!   artifact;
 //! - [`engine::ServeEngine`] — THE serving entry point: owns the
 //!   `Runtime`, routes requests across any number of named models (one
 //!   bounded [`engine::MicroBatcher`] queue + [`EngineStats`] each), and
@@ -30,7 +31,15 @@
 //!   exercised by `vq-gnn client`);
 //! - [`admit::AdmittedNodes`] — inductive-node admission: unseen nodes
 //!   (features + arcs into known nodes) are assigned codewords against
-//!   the frozen codebooks and become servable without retraining;
+//!   the frozen codebooks and become servable without retraining.
+//!   Admitted ids are stable-for-life: eviction (LRU cap / TTL, see
+//!   `ServeEngine::maintain`) compacts the tables but never reissues an
+//!   id, so an evicted id is refused with the typed unknown-id error
+//!   instead of silently aliasing a newer node;
+//! - [`drift::DriftHistogram`] — online distance-to-codeword histograms
+//!   per layer; total-variation distance against a reference frozen at
+//!   export is the drift signal that gates the opt-in EMA codebook
+//!   refresh (`ServeEngine::refresh`);
 //! - [`report::LatencyReport`] — p50/p99/qps accounting for the CLI and
 //!   the bench harness.
 //!
@@ -39,6 +48,7 @@
 
 pub mod admit;
 pub mod cache;
+pub mod drift;
 pub mod engine;
 pub mod model;
 pub mod proto;
@@ -48,12 +58,13 @@ pub mod server;
 
 pub use admit::AdmittedNodes;
 pub use cache::EmbeddingCache;
+pub use drift::DriftHistogram;
 pub use engine::{
     EngineStats, MicroBatcher, Served, ServeEngine, ServeEngineBuilder, ServeError,
 };
 pub use model::{ServingModel, WorkerStats};
 pub use report::LatencyReport;
-pub use server::ServerReport;
+pub use server::{ServerProbe, ServerReport};
 
 use anyhow::{bail, Result};
 

@@ -28,6 +28,7 @@
 use std::path::Path;
 use std::rc::Rc;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -251,7 +252,9 @@ impl ServeCore {
         ServeSession {
             dyn_inputs,
             outputs: Vec::new(),
-            scratch: SketchScratch::new(self.cache.total_nodes()),
+            // sized by the id BOUND, not the resident count: admitted ids
+            // are stable across eviction, so live ids can exceed the count
+            scratch: SketchScratch::new(self.cache.admitted.id_bound() as usize),
             exec: self.art.new_session(),
             batches: 0,
             busy_s: 0.0,
@@ -286,13 +289,11 @@ impl CoreRef<'_> {
         if batch.len() != b {
             bail!("forward_batch wants exactly b={b} nodes, got {}", batch.len());
         }
-        let total = self.cache.total_nodes();
-        if let Some(&bad) = batch.iter().find(|&&v| v as usize >= total) {
+        if let Some(&bad) = batch.iter().find(|&&v| !self.cache.admitted.is_servable(v)) {
             bail!(
-                "node id {bad} out of range (dataset '{}' serves {} ids: {} nodes + {} \
-                 admitted)",
+                "node id {bad} is not servable (dataset '{}': {} nodes + {} resident \
+                 admitted; evicted/unknown ids are refused)",
                 self.ds.cfg.name,
-                total,
                 self.cache.admitted.base_n,
                 self.cache.admitted.len()
             );
@@ -303,7 +304,7 @@ impl CoreRef<'_> {
     /// Rewrite a session's dynamic input slots in place for one batch.
     pub(crate) fn fill_inputs(&self, sess: &mut ServeSession, batch: &[u32]) {
         let (ds, cache) = (self.ds, self.cache);
-        sess.scratch.ensure(cache.total_nodes());
+        sess.scratch.ensure(cache.admitted.id_bound() as usize);
         for slot in self.dynamic {
             match *slot {
                 DynSlot::Xb(idx) => cache.gather_features_into(
@@ -336,6 +337,7 @@ impl CoreRef<'_> {
                     );
                 }
                 DynSlot::CntOut { l, idx } => cache.layers[l].build_cnt_fwd_into(
+                    &cache.admitted,
                     batch,
                     &mut sess.scratch,
                     &mut sess.dyn_inputs[idx].f,
@@ -386,6 +388,15 @@ pub struct ServingModel {
     pub core: ServeCore,
     pool: Vec<ServeSession>,
     queue: AdmissionQueue,
+    /// Per-admitted-node last-touched stamps, in SLOT lockstep with the
+    /// admitted store (compacted together on eviction).  Touched by the
+    /// batcher via [`Self::note_served`] and at admission; read by the
+    /// engine's retention policy.  Runtime-only (a loaded checkpoint's
+    /// admitted nodes start "just touched").
+    last_touch: Vec<Instant>,
+    /// Reusable sort-dedup buffer for [`Self::note_served`] — a 10k-slot
+    /// drain must not allocate per flush.
+    touch_buf: Vec<u32>,
 }
 
 impl ServingModel {
@@ -439,7 +450,11 @@ impl ServingModel {
             );
         }
         let params = tr.params.clone();
-        let cache = EmbeddingCache::from_vq(&tr.vq);
+        let mut cache = EmbeddingCache::from_vq(&tr.vq);
+        // freeze the drift detector's reference: the frozen nodes' own
+        // distance-to-nearest-codeword is the training distribution's
+        // footprint (exported into the VQS3 block by `save`)
+        cache.seed_drift_reference(&tr.ds.features, tr.ds.cfg.f_in_pad);
         let (template, dynamic, dyn_spec_idx) = build_input_template(spec, &params, &cache)?;
         let core = ServeCore {
             conv: ServeCore::conv_of(&tr.model_name),
@@ -453,13 +468,21 @@ impl ServingModel {
             art,
         };
         let pool = vec![core.new_session()];
-        Ok(ServingModel { core, pool, queue: AdmissionQueue::default() })
+        let last_touch = vec![Instant::now(); core.cache.admitted.len()];
+        Ok(ServingModel {
+            core,
+            pool,
+            queue: AdmissionQueue::default(),
+            last_touch,
+            touch_buf: Vec::new(),
+        })
     }
 
-    /// Export this model as a "VQS2" serving artifact — admitted-node
-    /// tables included, so cold nodes stay servable across processes
-    /// (loadable by [`Self::load`] in a process that never trained
-    /// anything).
+    /// Export this model as a "VQS3" serving artifact — admitted-node
+    /// tables (stable ids included) and per-layer drift references, so
+    /// cold nodes stay servable and the drift detector stays armed across
+    /// processes (loadable by [`Self::load`] in a process that never
+    /// trained anything).
     pub fn save(&self, path: &Path) -> Result<()> {
         checkpoint::save_serving(
             path,
@@ -470,7 +493,7 @@ impl ServingModel {
         )
     }
 
-    /// Load a serving artifact ("VQS2", or legacy "VQS1") for
+    /// Load a serving artifact ("VQS3", or legacy "VQS2"/"VQS1") for
     /// `(dataset, model)` and validate every payload shape against the
     /// manifest's serve spec.
     pub fn load(
@@ -528,7 +551,14 @@ impl ServingModel {
             art,
         };
         let pool = vec![core.new_session()];
-        Ok(ServingModel { core, pool, queue: AdmissionQueue::default() })
+        let last_touch = vec![Instant::now(); core.cache.admitted.len()];
+        Ok(ServingModel {
+            core,
+            pool,
+            queue: AdmissionQueue::default(),
+            last_touch,
+            touch_buf: Vec::new(),
+        })
     }
 
     /// Fixed micro-batch width of the compiled serve artifact.
@@ -656,9 +686,15 @@ impl ServingModel {
     fn admit_now(&mut self, rt: &Runtime, features: &[f32], neighbors: &[u32]) -> Result<u32> {
         self.check_admit_features(features)?;
         let f_pad = self.core.ds.cfg.f_in_pad;
-        let total = self.core.cache.total_nodes();
-        if let Some(&bad) = neighbors.iter().find(|&&u| u as usize >= total) {
-            bail!("admit: neighbor {bad} is not a servable id (total {total})");
+        if let Some(&bad) =
+            neighbors.iter().find(|&&u| !self.core.cache.admitted.is_servable(u))
+        {
+            bail!(
+                "admit: neighbor {bad} is not a servable id ({} nodes + {} resident \
+                 admitted)",
+                self.core.cache.admitted.base_n,
+                self.core.cache.admitted.len()
+            );
         }
         let mut padded = vec![0.0f32; f_pad];
         padded[..features.len()].copy_from_slice(features);
@@ -704,25 +740,146 @@ impl ServingModel {
         rt.record_external(1, spec.input_bytes(), spec.output_bytes());
 
         // 3. FINDNEAREST against the frozen codebooks, then append to the
-        //    per-layer tables (all-or-nothing: assignment is infallible)
+        //    per-layer tables (all-or-nothing: assignment is infallible).
+        //    The admitted rows double as drift observations — admission is
+        //    exactly the traffic that can walk away from training.
         for (l, row) in feats.iter().enumerate() {
             let mut asg = vec![0u32; n_brs[l]];
             self.core.cache.layers[l].assign_features(row, &mut asg);
             self.core.cache.layers[l].record_admitted(&asg);
+            self.core.cache.layers[l].observe_serving(row);
         }
+        self.last_touch.push(Instant::now());
         Ok(id)
     }
 
+    /// Batcher hook, called with a flush's REAL (unpadded) request ids
+    /// under the engine's `&mut` — refresh the admitted nodes' touch
+    /// stamps and feed the layer-0 drift observer.  Never touches
+    /// anything an answer depends on: histograms and stamps only.
+    pub fn note_served(&mut self, served: &[u32]) {
+        if served.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        self.touch_buf.clear();
+        self.touch_buf.extend_from_slice(served);
+        self.touch_buf.sort_unstable();
+        self.touch_buf.dedup();
+        let ds = &self.core.ds;
+        let f = ds.cfg.f_in_pad;
+        let EmbeddingCache { layers, admitted } = &mut self.core.cache;
+        let observe = layers.first().map(|l| l.plan.f_in == f).unwrap_or(false);
+        for &v in &self.touch_buf {
+            let row = if (v as usize) < admitted.base_n {
+                &ds.features[v as usize * f..(v as usize + 1) * f]
+            } else {
+                match admitted.slot_of(v) {
+                    Some(s) => {
+                        self.last_touch[s] = now;
+                        admitted.feature_row(s)
+                    }
+                    None => continue, // raced an eviction: already refused upstream
+                }
+            };
+            if observe {
+                layers[0].observe_serving(row);
+            }
+        }
+    }
+
+    /// Admitted ids the retention policy would evict right now: every
+    /// TTL-expired node, plus — beyond that — the least-recently-touched
+    /// survivors over `max_admitted`.  Deterministic: ties broken by id.
+    pub fn retention_victims(
+        &self,
+        max_admitted: Option<usize>,
+        ttl: Option<Duration>,
+    ) -> Vec<u32> {
+        let adm = &self.core.cache.admitted;
+        let n = adm.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let now = Instant::now();
+        let mut victims: Vec<u32> = Vec::new();
+        let mut live: Vec<(Instant, u32)> = Vec::new();
+        for s in 0..n {
+            let id = adm.id_of(s);
+            match ttl {
+                Some(t) if now.duration_since(self.last_touch[s]) >= t => victims.push(id),
+                _ => live.push((self.last_touch[s], id)),
+            }
+        }
+        if let Some(cap) = max_admitted {
+            if live.len() > cap {
+                live.sort(); // oldest stamp first, ids break ties
+                victims.extend(live[..live.len() - cap].iter().map(|&(_, id)| id));
+            }
+        }
+        victims.sort_unstable();
+        victims
+    }
+
+    /// Evict admitted ids (single-writer path): compacts the feature/CSR
+    /// store, every layer's assignment tail + histogram, and the touch
+    /// stamps in lockstep.  Survivors keep their ids; evicted ids are
+    /// refused by [`CoreRef::check_batch`] with the typed unknown-id
+    /// error from then on.  Returns how many nodes actually left.
+    pub fn evict(&mut self, victims: &[u32]) -> usize {
+        let before = self.core.cache.admitted.len();
+        let keep = self.core.cache.evict(victims);
+        if keep.len() != before {
+            self.last_touch = keep.iter().map(|&s| self.last_touch[s]).collect();
+        }
+        before - self.core.cache.admitted.len()
+    }
+
+    /// Largest per-layer codebook-drift metric (TV distance of observed
+    /// vs reference distance histograms, 0 = healthy / no signal).
+    pub fn max_drift(&self) -> f32 {
+        self.core.cache.max_drift()
+    }
+
+    /// Online EMA refresh (single-writer path): re-fit each layer's
+    /// codewords from its retained recent traffic
+    /// ([`crate::serve::cache::LayerCache::refresh`]), then rebuild the
+    /// constant input template so workers see the new codebooks (pool
+    /// sessions carry only dynamic slots — no session rebuild needed).
+    /// A refresh with no retained traffic is a bit-exact no-op.
+    pub fn refresh(&mut self, gamma: f32) -> Result<bool> {
+        let mut changed = false;
+        for l in &mut self.core.cache.layers {
+            changed |= l.refresh(gamma);
+        }
+        if changed {
+            let (template, dynamic, dyn_spec_idx) =
+                build_input_template(&self.core.art.spec, &self.core.params, &self.core.cache)?;
+            self.core.template = Arc::new(template);
+            self.core.dynamic = dynamic;
+            self.core.dyn_spec_idx = dyn_spec_idx;
+        }
+        Ok(changed)
+    }
+
     /// Enqueue an admission without applying it.  The id is assigned
-    /// immediately (dense FIFO), so later requests may cite it as a
+    /// immediately (monotone FIFO), so later requests may cite it as a
     /// neighbor; it becomes servable once [`Self::admit_queued`] runs.
     /// Everything cheaply checkable is validated HERE — a malformed
     /// request is refused before it can sit in front of valid ones.
+    /// Neighbors must be servable (frozen or resident — evicted ids are
+    /// refused like any other unknown id) or an earlier promised id.
     pub fn queue_admission(&mut self, features: Vec<f32>, neighbors: Vec<u32>) -> Result<u32> {
         self.check_admit_features(&features)?;
-        let provisional = (self.core.cache.total_nodes() + self.queue.len()) as u32;
-        if let Some(&bad) = neighbors.iter().find(|&&u| u >= provisional) {
-            bail!("queue_admission: neighbor {bad} is not an earlier id (next is {provisional})");
+        let bound = self.core.cache.admitted.id_bound();
+        let provisional = bound + self.queue.len() as u32;
+        if let Some(&bad) = neighbors.iter().find(|&&u| {
+            !(self.core.cache.admitted.is_servable(u) || (bound..provisional).contains(&u))
+        }) {
+            bail!(
+                "queue_admission: neighbor {bad} is not a servable or promised id \
+                 (next is {provisional})"
+            );
         }
         self.queue.push(features, neighbors);
         Ok(provisional)

@@ -12,6 +12,10 @@ pub(crate) struct ModelEntry {
     pub name: String,
     pub model: ServingModel,
     pub queue: MicroBatcher,
+    /// Whether the model's drift metric was at/above the engine threshold
+    /// after the last flush — edge detector for `EngineStats::drift_alerts`
+    /// (one alert per excursion, not per flush).
+    pub drift_high: bool,
 }
 
 pub(crate) struct Router {

@@ -19,6 +19,14 @@
 //! and routes each [`Served`](crate::serve::Served) answer back to the
 //! connection that submitted it.
 //!
+//! Every blocking point has an explicit wake instead of a poll interval:
+//! the acceptor blocks in `accept()` and is woken at shutdown by a
+//! loop-back connect to its own listen address; readers block in `read()`
+//! and are woken by `shutdown(Read)` on a registered duplicate of their
+//! socket; the batcher blocks in `recv()` whenever the engine is idle
+//! (nothing queued, nothing in flight) and falls back to a deadline tick
+//! only while work is pending.  An idle server burns no CPU.
+//!
 //! Failure containment: a malformed frame earns a typed ERROR frame and
 //! the connection keeps going; an unusable length prefix earns the ERROR
 //! and a hang-up; a mid-stream disconnect just drops that connection's
@@ -29,8 +37,8 @@
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
 use std::thread;
 use std::time::Duration;
 
@@ -57,6 +65,37 @@ pub struct ServerReport {
     pub errors: u64,
 }
 
+/// Live, thread-safe observation window into a running server — the
+/// counters a test (or monitor) can watch *while* [`run_probed`] is still
+/// blocked in its serve loop.  `ServerReport` is only available after the
+/// server exits; the probe is how callers synchronize on mid-lifetime
+/// events ("the truncation error has been counted") without sleeping.
+#[derive(Debug, Default)]
+pub struct ServerProbe {
+    errors: AtomicU64,
+    disconnects: AtomicU64,
+}
+
+impl ServerProbe {
+    pub fn new() -> ServerProbe {
+        ServerProbe::default()
+    }
+
+    /// Error frames issued so far (same counting rule as
+    /// `ServerReport::errors`: malformed + unknown-model + bad-node, SHED
+    /// excluded).
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Acquire)
+    }
+
+    /// Reader hang-ups observed so far (clean EOF, truncation hang-up,
+    /// or socket error).  Counts reply-route teardowns, so a value of
+    /// `k` means `k` connections can no longer receive frames.
+    pub fn disconnects(&self) -> u64 {
+        self.disconnects.load(Ordering::Acquire)
+    }
+}
+
 enum Event {
     Connect { conn: u64, tx: mpsc::Sender<Vec<u8>> },
     Request { conn: u64, req: WireRequest },
@@ -79,15 +118,14 @@ fn send_to(conns: &HashMap<u64, mpsc::Sender<Vec<u8>>>, conn: u64, resp: &WireRe
     }
 }
 
-/// Socket → events.  Read timeout (25 ms) doubles as the stop-flag poll
-/// interval, so shutdown never waits on a silent peer.
-fn reader_loop(mut stream: TcpStream, conn: u64, etx: mpsc::Sender<Event>, stop: &AtomicBool) {
+/// Socket → events.  Fully blocking: the thread parks in `read()` until
+/// bytes arrive, the peer hangs up, or shutdown calls `shutdown(Read)`
+/// on the registered duplicate of this socket (which surfaces here as
+/// EOF).  No timeout, no stop-flag poll.
+fn reader_loop(mut stream: TcpStream, conn: u64, etx: mpsc::Sender<Event>) {
     let mut framer = Framer::new();
     let mut buf = [0u8; 4096];
     'read: loop {
-        if stop.load(Ordering::Relaxed) {
-            break;
-        }
         match stream.read(&mut buf) {
             Ok(0) => {
                 // EOF mid-frame is a typed truncation, not silence
@@ -119,16 +157,7 @@ fn reader_loop(mut stream: TcpStream, conn: u64, etx: mpsc::Sender<Event>, stop:
                     }
                 }
             }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    io::ErrorKind::WouldBlock
-                        | io::ErrorKind::TimedOut
-                        | io::ErrorKind::Interrupted
-                ) =>
-            {
-                continue;
-            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
             Err(_) => break,
         }
     }
@@ -154,6 +183,7 @@ fn submit_query(
     conns: &HashMap<u64, mpsc::Sender<Vec<u8>>>,
     inflight: &mut HashMap<usize, Pending>,
     report: &mut ServerReport,
+    probe: &ServerProbe,
     conn: u64,
     req_id: u64,
     model: &str,
@@ -177,14 +207,17 @@ fn submit_query(
                 }
                 ServeError::UnknownModel(_) => {
                     report.errors += 1;
+                    probe.errors.fetch_add(1, Ordering::Release);
                     ErrCode::UnknownModel
                 }
                 ServeError::InvalidNode { .. } => {
                     report.errors += 1;
+                    probe.errors.fetch_add(1, Ordering::Release);
                     ErrCode::BadRequest
                 }
                 _ => {
                     report.errors += 1;
+                    probe.errors.fetch_add(1, Ordering::Release);
                     ErrCode::Internal
                 }
             };
@@ -201,6 +234,7 @@ fn handle_event(
     conns: &mut HashMap<u64, mpsc::Sender<Vec<u8>>>,
     inflight: &mut HashMap<usize, Pending>,
     report: &mut ServerReport,
+    probe: &ServerProbe,
     stopping: &mut bool,
     drain_now: &mut bool,
 ) {
@@ -213,6 +247,7 @@ fn handle_event(
             // answers already queued for this conn execute normally and
             // are dropped at send_to — nothing to unwind
             conns.remove(&conn);
+            probe.disconnects.fetch_add(1, Ordering::Release);
         }
         Event::Malformed { conn, err } => {
             report.errors += 1;
@@ -225,6 +260,10 @@ fn handle_event(
                     msg: err.to_string(),
                 },
             );
+            // counted after the ERROR frame is routed: once a watcher
+            // sees the probe tick, the reply (if any route remains) is
+            // already in the writer queue
+            probe.errors.fetch_add(1, Ordering::Release);
         }
         Event::Request { conn, req } => match req {
             WireRequest::Ping { req_id } => {
@@ -238,6 +277,7 @@ fn handle_event(
                 conns,
                 inflight,
                 report,
+                probe,
                 conn,
                 req_id,
                 &model,
@@ -249,6 +289,7 @@ fn handle_event(
                 conns,
                 inflight,
                 report,
+                probe,
                 conn,
                 req_id,
                 &model,
@@ -259,11 +300,26 @@ fn handle_event(
 }
 
 /// Serve `engine` on `listener` until a SHUTDOWN frame arrives (then
-/// drain everything, reply, and return).  The flush cadence is half the
-/// engine deadline (clamped to [1 ms, 50 ms]; 5 ms when no deadline is
-/// set, where `poll` only ever cuts full batches anyway).
+/// drain everything, reply, and return).  Equivalent to [`run_probed`]
+/// with a probe nobody watches.
 pub fn run(engine: &mut ServeEngine, listener: TcpListener) -> Result<ServerReport> {
-    listener.set_nonblocking(true).context("serve: set_nonblocking on listener")?;
+    run_probed(engine, listener, &ServerProbe::new())
+}
+
+/// [`run`] with a live [`ServerProbe`] the caller can watch from another
+/// thread while the server loop is still running.  The flush cadence is
+/// half the engine deadline (clamped to [1 ms, 50 ms]; 5 ms when no
+/// deadline is set, where `poll` only ever cuts full batches anyway) —
+/// and applies only while work is pending; an idle batcher blocks on the
+/// event channel.
+pub fn run_probed(
+    engine: &mut ServeEngine,
+    listener: TcpListener,
+    probe: &ServerProbe,
+) -> Result<ServerReport> {
+    // kept blocking: accept() parks until a connection arrives, and the
+    // shutdown path wakes it by connecting to this address
+    let wake_addr = listener.local_addr().context("serve: local_addr of listener")?;
     let tick = engine
         .deadline()
         .map(|d| (d / 2).max(Duration::from_millis(1)))
@@ -277,43 +333,57 @@ pub fn run(engine: &mut ServeEngine, listener: TcpListener) -> Result<ServerRepo
         .map(|m| (m.to_string(), engine.model(m).map(|sm| sm.link_task()).unwrap_or(false)))
         .collect();
     let stop = AtomicBool::new(false);
+    // one duplicate handle per accepted socket; shutdown(Read) on these
+    // is what unparks the blocking readers (entries for already-closed
+    // connections are inert — shutdown on them fails and is ignored)
+    let wake_sockets: Mutex<Vec<TcpStream>> = Mutex::new(Vec::new());
     let (etx, erx) = mpsc::channel::<Event>();
     let mut report = ServerReport::default();
     let mut fatal: Option<anyhow::Error> = None;
 
     thread::scope(|s| {
         let stop = &stop;
+        let wake_sockets = &wake_sockets;
         // ---- acceptor: owns the listener, spawns a reader + writer per
         // connection into the same scope ------------------------------
-        s.spawn(move || {
+        let acceptor = s.spawn(move || {
             let mut next_conn = 0u64;
             loop {
+                let stream = match listener.accept() {
+                    Ok((stream, _addr)) => stream,
+                    Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        // transient resource errors (e.g. fd exhaustion):
+                        // back off instead of hot-looping on accept()
+                        thread::sleep(Duration::from_millis(2));
+                        continue;
+                    }
+                };
                 if stop.load(Ordering::Relaxed) {
+                    // the shutdown wake-up connect lands here — it is a
+                    // courier, not a client: never counted, never served
                     break;
                 }
-                match listener.accept() {
-                    Ok((stream, _addr)) => {
-                        let conn = next_conn;
-                        next_conn += 1;
-                        let _ = stream.set_nodelay(true);
-                        let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
-                        let (wtx, wrx) = mpsc::channel::<Vec<u8>>();
-                        if etx.send(Event::Connect { conn, tx: wtx }).is_err() {
-                            break; // batcher is gone
-                        }
-                        let rstream = match stream.try_clone() {
-                            Ok(st) => st,
-                            Err(_) => continue,
-                        };
-                        let retx = etx.clone();
-                        s.spawn(move || reader_loop(rstream, conn, retx, stop));
-                        s.spawn(move || writer_loop(stream, wrx));
-                    }
-                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
-                        thread::sleep(Duration::from_millis(2));
-                    }
-                    Err(_) => thread::sleep(Duration::from_millis(2)),
+                let _ = stream.set_nodelay(true);
+                // reader handle + wake handle; a connection we can't
+                // duplicate can't be woken at shutdown, so refuse it
+                let (rstream, wake) = match (stream.try_clone(), stream.try_clone()) {
+                    (Ok(r), Ok(w)) => (r, w),
+                    _ => continue,
+                };
+                let conn = next_conn;
+                next_conn += 1;
+                let (wtx, wrx) = mpsc::channel::<Vec<u8>>();
+                if etx.send(Event::Connect { conn, tx: wtx }).is_err() {
+                    break; // batcher is gone
                 }
+                wake_sockets.lock().unwrap().push(wake);
+                let retx = etx.clone();
+                s.spawn(move || reader_loop(rstream, conn, retx));
+                s.spawn(move || writer_loop(stream, wrx));
             }
         });
 
@@ -323,7 +393,16 @@ pub fn run(engine: &mut ServeEngine, listener: TcpListener) -> Result<ServerRepo
         let mut stopping = false;
         loop {
             let mut drain_now = false;
-            match erx.recv_timeout(tick) {
+            // idle (nothing queued, nothing awaiting an answer): block
+            // until an event arrives — no deadline can be pending, so no
+            // tick is owed.  Busy: bound the wait by the flush cadence.
+            let idle = !stopping && engine.pending() == 0 && inflight.is_empty();
+            let first = if idle {
+                erx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected)
+            } else {
+                erx.recv_timeout(tick)
+            };
+            match first {
                 Ok(ev) => handle_event(
                     ev,
                     engine,
@@ -331,6 +410,7 @@ pub fn run(engine: &mut ServeEngine, listener: TcpListener) -> Result<ServerRepo
                     &mut conns,
                     &mut inflight,
                     &mut report,
+                    probe,
                     &mut stopping,
                     &mut drain_now,
                 ),
@@ -345,6 +425,7 @@ pub fn run(engine: &mut ServeEngine, listener: TcpListener) -> Result<ServerRepo
                     &mut conns,
                     &mut inflight,
                     &mut report,
+                    probe,
                     &mut stopping,
                     &mut drain_now,
                 );
@@ -394,12 +475,28 @@ pub fn run(engine: &mut ServeEngine, listener: TcpListener) -> Result<ServerRepo
             }
         }
 
-        // unwind: flag the threads down, close every reply route (writer
-        // loops drain their queues then shut the sockets), and release
-        // any Connect events still buffered in the channel
-        stop.store(true, Ordering::Relaxed);
+        // unwind, one explicit wake per blocking point:
+        //   1. drop the reply routes — writers for live connections
+        //      drain their queues, flush, and exit;
+        //   2. flag down, drop the event receiver (so any late send —
+        //      including a racing Connect — errors instead of landing),
+        //      then loop-back connect to unpark accept(); the acceptor
+        //      exits on the flag or on the failed Connect send, either
+        //      way without counting the courier connection;
+        //   3. join the acceptor BEFORE draining the wake registry —
+        //      after the join no new reader can be spawned nor wake
+        //      handle registered, so the drain below is complete;
+        //   4. shutdown(Read) every registered socket duplicate — each
+        //      blocking read() returns EOF and its reader exits (the
+        //      write half stays open so writers can still drain).
         drop(conns);
+        stop.store(true, Ordering::Relaxed);
         drop(erx);
+        let _ = TcpStream::connect(wake_addr);
+        let _ = acceptor.join();
+        for sock in wake_sockets.lock().unwrap().drain(..) {
+            let _ = sock.shutdown(Shutdown::Read);
+        }
     });
 
     match fatal {

@@ -10,10 +10,11 @@
 //! 2. **Deadline semantics** — partial tails are withheld by `poll` until
 //!    a request's deadline expires (or `drain` forces them), and the two
 //!    tail paths are counted separately.
-//! 3. **Admission round-trip** — admit → serve → save ("VQS2") → load →
-//!    serve bit-identical, with admitted nodes usable as query targets,
-//!    link endpoints, and neighbors of later admissions; legacy "VQS1"
-//!    artifacts still load and serve the frozen nodes bit-identically.
+//! 3. **Admission round-trip** — admit → serve → save (now "VQS3") →
+//!    load → serve bit-identical, with admitted nodes usable as query
+//!    targets, link endpoints, and neighbors of later admissions; legacy
+//!    "VQS1" artifacts still load and serve the frozen nodes
+//!    bit-identically.
 //!
 //! Model-specific tests honor the `VQGNN_MODEL` filter (CI backbone matrix).
 

@@ -165,8 +165,10 @@ fn protocol_violations_are_contained_per_connection() {
     let mut se = ServeEngine::builder().model("gcn", sm).threads(2).build(rt).unwrap();
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
+    let probe = server::ServerProbe::new();
 
     let report = std::thread::scope(|s| {
+        let probe = &probe;
         s.spawn(move || {
             let read_err = |stream: &mut TcpStream| -> (u64, ErrCode, String) {
                 let p = read_frame(stream).unwrap().expect("error frame");
@@ -215,9 +217,19 @@ fn protocol_violations_are_contained_per_connection() {
             c.write_all(&100u32.to_le_bytes()).unwrap();
             c.write_all(&[1, 2, 3]).unwrap();
             drop(c);
-            // give C's reader time to surface the truncation before the
-            // shutdown below ends the run (25 ms read-poll cadence)
-            std::thread::sleep(Duration::from_millis(500));
+            // real synchronization point: A and B put the probe at 2
+            // errors, so wait (bounded, no sleep) until the batcher has
+            // COUNTED C's truncation as the 3rd before the shutdown
+            // below can end the run
+            let spin = std::time::Instant::now();
+            while probe.errors() < 3 {
+                assert!(
+                    spin.elapsed() < Duration::from_secs(10),
+                    "truncation error never surfaced (probe stuck at {})",
+                    probe.errors()
+                );
+                std::thread::yield_now();
+            }
 
             // ---- D: per-request errors, then normal service ----------
             let mut d = TcpStream::connect(addr).unwrap();
@@ -250,7 +262,7 @@ fn protocol_violations_are_contained_per_connection() {
             d.write_all(&encode_request(&WireRequest::Shutdown)).unwrap();
             while read_frame(&mut d).unwrap().is_some() {}
         });
-        server::run(&mut se, listener).unwrap()
+        server::run_probed(&mut se, listener, probe).unwrap()
     });
 
     assert_eq!(
