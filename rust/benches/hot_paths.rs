@@ -312,7 +312,13 @@ fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
     // one row against every layer's codebooks + table compaction) — the
     // cost a long-running host pays per streamed node.
     let (rt, models) = eng.into_parts();
-    let mut builder = ServeEngine::builder().threads(1).max_admitted(64);
+    // live registry on this engine: the admit/evict/drift benches below
+    // feed real histogram families for the scrape-cost key
+    let obs_reg = std::sync::Arc::new(vq_gnn::obs::Registry::new());
+    let mut builder = ServeEngine::builder()
+        .threads(1)
+        .max_admitted(64)
+        .metrics(obs_reg.clone());
     for (name, m) in models {
         builder = builder.model(name, m);
     }
@@ -334,6 +340,30 @@ fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
         std::hint::black_box(eng.drift("gcn").unwrap());
     });
     report.insert("serve_drift_check_ms".into(), num(r_dr.mean_ns / 1e6));
+
+    // ---- observability: scrape cost + raw record overhead ---------------
+    // One STATS answer end-to-end: render the Prometheus exposition from
+    // the live registry (fed by the benches above) and frame the reply —
+    // what the server pays per scrape while serving.
+    use vq_gnn::serve::proto::{encode_response, WireResponse};
+    let r_sc = bench("obs/stats_scrape render+frame", if smoke { 0.2 } else { 0.5 }, || {
+        let text = obs_reg.render_prometheus();
+        std::hint::black_box(encode_response(&WireResponse::Stats { req_id: 0, text }));
+    });
+    report.insert("serve_stats_scrape_ms".into(), num(r_sc.mean_ns / 1e6));
+
+    // one Histogram::record — the per-sample data-path tax with metrics ON
+    // (a handful of relaxed atomic RMWs); reported in nanoseconds
+    let h = vq_gnn::obs::Histogram::new();
+    let mut x = 0u64;
+    let r_rec = bench("obs/histogram_record", if smoke { 0.2 } else { 0.5 }, || {
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        h.record(x & 0xF_FFFF);
+    });
+    report.insert("obs_record_overhead_ns".into(), num(r_rec.mean_ns));
+
+    // full registry dump rides along for post-hoc inspection
+    report.insert("obs".into(), obs_reg.to_json());
 }
 
 /// Emit the single-threaded serve acceptance keys + detail object.

@@ -64,10 +64,11 @@ fn load(path: &str) -> Option<BTreeMap<String, f64>> {
     Some(out)
 }
 
-/// Lower-is-better keys: timings (`*_ms`, and the per-offered-rate
-/// open-loop variants `*_ms_r<tag>`) and per-step allocation bytes.
+/// Lower-is-better keys: timings (`*_ms`, nanosecond micro-costs `*_ns`
+/// like `obs_record_overhead_ns`, and the per-offered-rate open-loop
+/// variants `*_ms_r<tag>`) and per-step allocation bytes.
 fn lower_is_better(key: &str) -> bool {
-    if key.ends_with("_ms") || key.ends_with("_alloc_bytes") {
+    if key.ends_with("_ms") || key.ends_with("_ns") || key.ends_with("_alloc_bytes") {
         return true;
     }
     match key.rsplit_once("_ms_r") {

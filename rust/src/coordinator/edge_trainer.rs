@@ -16,7 +16,7 @@ use std::rc::Rc;
 use anyhow::{Context, Result};
 
 use crate::coordinator::opt::{self, Optimizer};
-use crate::coordinator::vq_trainer::pipeline_env_enabled;
+use crate::coordinator::vq_trainer::{pipeline_env_enabled, TrainMetrics};
 use crate::coordinator::{
     fill_link_pairs, gather_features_into, init_params, lipschitz_clip, InSlot, PairBuf,
     RunStats, Session,
@@ -344,6 +344,7 @@ pub struct EdgeTrainer {
     pipeline: bool,
     prefetched: Option<EdgePrep>,
     pub stats: RunStats,
+    metrics: TrainMetrics,
 }
 
 impl EdgeTrainer {
@@ -396,8 +397,15 @@ impl EdgeTrainer {
             pipeline: pipeline_env_enabled(),
             prefetched: None,
             stats: RunStats::default(),
+            metrics: TrainMetrics::default(),
             ds,
         })
+    }
+
+    /// Wire `train_sample`/`train_exec` stage timers into `reg` (the
+    /// baselines have no gather-vs-sample split and no VQ state).
+    pub fn set_metrics(&mut self, reg: &crate::obs::Registry) {
+        self.metrics = TrainMetrics::wire(reg);
     }
 
     /// Toggle the overlapped subgraph-sampling stage (parity tests /
@@ -428,17 +436,22 @@ impl EdgeTrainer {
         let cap = art.spec.nn;
         let prep = match self.prefetched.take() {
             Some(p) => p,
-            None => sample_subgraph_parts(
-                self.kind,
-                &ds,
-                cap,
-                &mut self.rng,
-                &self.partition,
-                self.n_parts,
-                self.saint.as_ref(),
-                gat,
-                conv,
-            ),
+            None => {
+                let span = self.metrics.sample.stage();
+                let p = sample_subgraph_parts(
+                    self.kind,
+                    &ds,
+                    cap,
+                    &mut self.rng,
+                    &self.partition,
+                    self.n_parts,
+                    self.saint.as_ref(),
+                    gat,
+                    conv,
+                );
+                span.stop();
+                p
+            }
         };
         fill_edge_session(
             &mut self.train_io,
@@ -462,18 +475,31 @@ impl EdgeTrainer {
             let dsr: &Dataset = &ds;
             let io = &mut self.train_io;
             let (inputs, outputs) = (&io.inputs, &mut io.outputs);
+            let m = &self.metrics;
             let (next, res) = par::join2(
                 move || {
-                    sample_subgraph_parts(
+                    let span = m.sample.stage();
+                    let p = sample_subgraph_parts(
                         kind, dsr, cap, rng, partition, n_parts, saint_s, gat, conv,
-                    )
+                    );
+                    span.stop();
+                    p
                 },
-                move || rt.execute_into(&art, inputs, outputs),
+                move || {
+                    let span = m.exec.stage();
+                    let res = rt.execute_into(&art, inputs, outputs);
+                    span.stop();
+                    res
+                },
             );
             self.prefetched = Some(next);
             res
         } else {
-            rt.execute_into(&art, &self.train_io.inputs, &mut self.train_io.outputs)
+            let span = self.metrics.exec.stage();
+            let res =
+                rt.execute_into(&art, &self.train_io.inputs, &mut self.train_io.outputs);
+            span.stop();
+            res
         };
         exec_res?;
         let spec = &self.train_art.spec;

@@ -30,6 +30,7 @@ use crate::coordinator::{
 };
 use crate::datasets::{Dataset, Split};
 use crate::graph::Conv;
+use crate::obs;
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::{Artifact, Runtime};
 use crate::sampler::{NodeBatcher, NodeStrategy};
@@ -99,6 +100,30 @@ pub(crate) fn pipeline_env_enabled() -> bool {
         std::env::var("VQ_GNN_PIPELINE").as_deref(),
         Ok("0") | Ok("off") | Ok("false")
     )
+}
+
+/// Stage-timer handles for a training loop, resolved once from an
+/// [`obs::Registry`] by `set_metrics`.  Default-disabled: the
+/// un-instrumented trainer takes no clock reads (each record is one
+/// `Option` test).  Histograms are atomic, so the prefetch worker can
+/// record `sample`/`gather` from its own thread.
+#[derive(Clone, Default)]
+pub struct TrainMetrics {
+    pub(crate) sample: obs::HistHandle,
+    pub(crate) gather: obs::HistHandle,
+    pub(crate) exec: obs::HistHandle,
+    pub(crate) vq_update: obs::HistHandle,
+}
+
+impl TrainMetrics {
+    pub fn wire(reg: &obs::Registry) -> TrainMetrics {
+        TrainMetrics {
+            sample: reg.hist("train_sample"),
+            gather: reg.hist("train_gather"),
+            exec: reg.hist("train_exec"),
+            vq_update: reg.hist("train_vq_update"),
+        }
+    }
 }
 
 /// A prefetched batch: the sampled node ids plus their gathered feature
@@ -246,6 +271,9 @@ pub struct VqTrainer {
     pipeline: bool,
     prefetched: Option<PrepBatch>,
     pub stats: RunStats,
+    metrics: TrainMetrics,
+    /// Per-layer (perplexity, dead-code) gauges; empty when unwired.
+    health_gauges: Vec<(obs::GaugeHandle, obs::GaugeHandle)>,
 }
 
 impl VqTrainer {
@@ -302,8 +330,26 @@ impl VqTrainer {
             pipeline,
             prefetched: None,
             stats: RunStats::default(),
+            metrics: TrainMetrics::default(),
+            health_gauges: Vec::new(),
             ds,
         })
+    }
+
+    /// Wire stage timers (`train_sample`/`train_gather`/`train_exec`/
+    /// `train_vq_update`) and per-layer VQ-health gauges
+    /// (`vq_codebook_perplexity_l{l}`, `vq_dead_codes_l{l}` — from the
+    /// branch-0 EMA masses) into `reg`.
+    pub fn set_metrics(&mut self, reg: &obs::Registry) {
+        self.metrics = TrainMetrics::wire(reg);
+        self.health_gauges = (0..self.vq.layers.len())
+            .map(|l| {
+                (
+                    reg.gauge(&format!("vq_codebook_perplexity_l{l}")),
+                    reg.gauge(&format!("vq_dead_codes_l{l}")),
+                )
+            })
+            .collect();
     }
 
     /// Toggle the overlapped prep stage (always off for link tasks, whose
@@ -328,11 +374,22 @@ impl VqTrainer {
 
     /// Sample one batch and gather its feature rows — the prefetchable half
     /// of batch assembly (static data + the batcher/RNG stream only).
-    fn build_prep(batcher: &mut NodeBatcher, ds: &Dataset, mut rng: Rng) -> PrepBatch {
+    /// Records `train_sample` / `train_gather` whether it runs inline or on
+    /// the prefetch worker (the histogram cells are atomic).
+    fn build_prep(
+        batcher: &mut NodeBatcher,
+        ds: &Dataset,
+        mut rng: Rng,
+        m: &TrainMetrics,
+    ) -> PrepBatch {
+        let span = m.sample.stage();
         let (batch, pad) = batcher.next_batch(&ds.graph, &mut rng);
+        span.stop();
+        let span = m.gather.stage();
         let f = ds.cfg.f_in_pad;
         let mut xb = vec![0.0f32; batch.len() * f];
         gather_features_into(&ds.features, f, &batch, &mut xb);
+        span.stop();
         PrepBatch { batch, pad, xb }
     }
 
@@ -344,7 +401,7 @@ impl VqTrainer {
             Some(p) => p,
             None => {
                 let rng = self.rng.fork(self.stats.steps);
-                Self::build_prep(&mut self.batcher, &ds, rng)
+                Self::build_prep(&mut self.batcher, &ds, rng, &self.metrics)
             }
         };
         let conv = self.conv_opt();
@@ -373,14 +430,24 @@ impl VqTrainer {
             let dsr: &Dataset = &ds;
             let io = &mut self.train_io;
             let (inputs, outputs) = (&io.inputs, &mut io.outputs);
+            let m = &self.metrics;
             let (next, res) = par::join2(
-                move || Self::build_prep(batcher, dsr, prng),
-                move || rt.execute_into(&art, inputs, outputs),
+                move || Self::build_prep(batcher, dsr, prng, m),
+                move || {
+                    let span = m.exec.stage();
+                    let res = rt.execute_into(&art, inputs, outputs);
+                    span.stop();
+                    res
+                },
             );
             self.prefetched = Some(next);
             res
         } else {
-            rt.execute_into(&art, &self.train_io.inputs, &mut self.train_io.outputs)
+            let span = self.metrics.exec.stage();
+            let res =
+                rt.execute_into(&art, &self.train_io.inputs, &mut self.train_io.outputs);
+            span.stop();
+            res
         };
         exec_res?;
         let spec = &self.train_art.spec;
@@ -392,6 +459,7 @@ impl VqTrainer {
         // cluster's EMA codeword for ~1/(1-γ) steps and get re-broadcast
         // into every later batch's Eq. 7 backward messages.
         {
+            let span = self.metrics.vq_update.stage();
             let sess = &mut self.train_io;
             for l in 0..spec.plan.len() {
                 let (xi, gi, ai) = (sess.o_xfeat[l], sess.o_gvec[l], sess.o_assign[l]);
@@ -427,6 +495,14 @@ impl VqTrainer {
             }
             let grads: Vec<&Tensor> = sess.outputs[start..].iter().collect();
             self.opt.step(&mut self.params, &grads);
+            span.stop();
+        }
+        // VQ health after the EMA updates land (branch-0 masses; deeper
+        // branches track the same assignment cardinalities)
+        for (l, (perp, dead)) in self.health_gauges.iter().enumerate() {
+            let (p, d) = obs::codebook_health(&self.vq.layers[l].branches[0].counts, 1e-3);
+            perp.set(p);
+            dead.set(d as f64);
         }
         if learnable {
             lipschitz_clip(spec, &mut self.params, self.weight_clip);

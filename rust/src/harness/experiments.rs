@@ -22,6 +22,10 @@ pub struct Ctx {
     pub seeds: Vec<u64>,
     pub out_dir: std::path::PathBuf,
     datasets: BTreeMap<String, Rc<Dataset>>,
+    /// `train --metrics-every N`: trainers wire their stage timers and
+    /// VQ-health gauges into the registry, and `run_one_suffix` prints one
+    /// report line every N epochs (stderr).
+    pub metrics: Option<(std::sync::Arc<crate::obs::Registry>, usize)>,
 }
 
 impl Ctx {
@@ -36,6 +40,7 @@ impl Ctx {
             seeds,
             out_dir,
             datasets: BTreeMap::new(),
+            metrics: None,
         })
     }
 
@@ -73,19 +78,36 @@ pub fn run_one_suffix(ctx: &mut Ctx, ds_name: &str, model: &str, method: &str,
     if method == "vq" {
         let mut tr = VqTrainer::new(&mut ctx.rt, &ctx.man, ds, model, suffix,
                                     NodeStrategy::Nodes, seed)?;
-        for _ in 0..epochs {
+        if let Some((reg, _)) = &ctx.metrics {
+            tr.set_metrics(reg);
+        }
+        for e in 0..epochs {
             tr.epoch(&mut ctx.rt)?;
+            metrics_line(ctx, e);
         }
         let m = tr.evaluate(&mut ctx.rt, Split::Test)?;
         Ok((m, tr.stats.clone()))
     } else {
         let kind = Baseline::from_str(method).context("method")?;
         let mut tr = EdgeTrainer::new(&mut ctx.rt, &ctx.man, ds, model, kind, seed)?;
-        for _ in 0..epochs {
+        if let Some((reg, _)) = &ctx.metrics {
+            tr.set_metrics(reg);
+        }
+        for e in 0..epochs {
             tr.epoch(&mut ctx.rt)?;
+            metrics_line(ctx, e);
         }
         let m = tr.evaluate(&mut ctx.rt, Split::Test)?;
         Ok((m, tr.stats.clone()))
+    }
+}
+
+/// Print the periodic `--metrics-every` report line after epoch `e`.
+fn metrics_line(ctx: &Ctx, e: usize) {
+    if let Some((reg, every)) = &ctx.metrics {
+        if *every > 0 && (e + 1) % every == 0 {
+            eprintln!("[metrics epoch {}] {}", e + 1, reg.render_line());
+        }
     }
 }
 

@@ -23,6 +23,7 @@ pub mod coordinator;
 pub mod datasets;
 pub mod graph;
 pub mod harness;
+pub mod obs;
 pub mod runtime;
 pub mod sampler;
 pub mod serve;

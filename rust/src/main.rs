@@ -58,7 +58,12 @@ fn main() -> Result<()> {
             let method = flags.get("method").cloned().unwrap_or("vq".into());
             let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
             let suffix = flags.get("suffix").cloned().unwrap_or_default();
+            let metrics_every: Option<usize> =
+                flags.get("metrics-every").map(|s| s.parse()).transpose()?;
             let mut ctx = exp::Ctx::new(epochs, seeds)?;
+            let registry = metrics_every
+                .map(|n| (std::sync::Arc::new(vq_gnn::obs::Registry::new()), n));
+            ctx.metrics = registry.clone();
             let t = std::time::Instant::now();
             let (metric, stats) =
                 exp::run_one_suffix(&mut ctx, &ds, &model, &method, &suffix, seed)?;
@@ -71,6 +76,9 @@ fn main() -> Result<()> {
                 stats.messages_per_step,
                 t.elapsed().as_secs_f64()
             );
+            if let Some((reg, _)) = &registry {
+                eprintln!("[metrics final] {}", reg.render_line());
+            }
         }
         Some("serve") => serve_cmd(&flags)?,
         Some("client") => client_cmd(&flags)?,
@@ -120,14 +128,14 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage:\n  vq-gnn train --dataset D --model M --method \
                  [vq|full|ns|cluster|saint] [--epochs N] [--seed S] \
-                 [--backend native|pjrt]\n  \
+                 [--metrics-every EPOCHS] [--backend native|pjrt]\n  \
                  vq-gnn serve --dataset D --model M[,M2,..] \
                  (--requests FILE | --listen ADDR) \
                  [--ckpt SERVING.bin] [--epochs N] [--seed S] [--out FILE] \
                  [--threads N] [--deadline-ms D] [--queue-cap C] \
                  [--admit FILE] [--max-admitted N] [--ttl-ms T] \
-                 [--drift-threshold T] [--refresh]\n  \
-                 vq-gnn client --addr HOST:PORT --model M --requests FILE \
+                 [--drift-threshold T] [--refresh] [--metrics-every N]\n  \
+                 vq-gnn client --addr HOST:PORT --model M (--requests FILE | --stats) \
                  [--out FILE] [--rate R] [--wait-ms W] [--drain] [--shutdown]\n  \
                  vq-gnn exp [table3|table4|table7|table8|fig4|inference|\
                  complexity|ablation-*|all] [--epochs N] [--seeds 1,2,3] \
@@ -239,6 +247,8 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let drift_threshold: Option<f32> =
         flags.get("drift-threshold").map(|s| s.parse()).transpose()?;
     let do_refresh = flags.contains_key("refresh");
+    let metrics_every: Option<u64> =
+        flags.get("metrics-every").map(|s| s.parse()).transpose()?;
     let admit_path = flags.get("admit");
     let maintenance_on = max_admitted.is_some()
         || ttl_ms.is_some()
@@ -263,7 +273,11 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let ds = Rc::new(Dataset::generate(&cfg, 42));
 
     let ckpt = flags.get("ckpt").map(std::path::PathBuf::from);
-    let mut builder = ServeEngine::builder().threads(threads);
+    // Always attach a live registry: the STATS wire frame scrapes it with
+    // zero flags, and recording never perturbs answers (pinned by
+    // tests/obs.rs).  --metrics-every only gates the periodic report line.
+    let registry = std::sync::Arc::new(vq_gnn::obs::Registry::new());
+    let mut builder = ServeEngine::builder().threads(threads).metrics(registry.clone());
     if let Some(ms) = deadline_ms {
         builder = builder.deadline(std::time::Duration::from_millis(ms));
     }
@@ -356,7 +370,29 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
         let listener = std::net::TcpListener::bind(addr)
             .with_context(|| format!("serve: bind {addr}"))?;
         eprintln!("listening on {}", listener.local_addr()?);
+        // --metrics-every N (socket mode: N seconds): periodic report line
+        // on stderr while the accept loop runs
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let printer = metrics_every.map(|secs| {
+            let reg = registry.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let period = std::time::Duration::from_secs(secs.max(1));
+                let mut next = std::time::Instant::now() + period;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    if std::time::Instant::now() >= next {
+                        eprintln!("[metrics] {}", reg.render_line());
+                        next += period;
+                    }
+                }
+            })
+        });
         let rep = server::run(&mut eng, listener)?;
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(p) = printer {
+            let _ = p.join();
+        }
         println!(
             "serve {ds_name}/{model_list} ({} backend, {} worker{}): \
              {} connection(s), {} request(s), {} served, shed {}, {} error(s)",
@@ -400,7 +436,7 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let reqs = serve::parse_requests(&text, bound)?;
     let t0 = std::time::Instant::now();
     let mut served = Vec::new();
-    for r in &reqs {
+    for (i, r) in reqs.iter().enumerate() {
         match eng.submit(target, *r) {
             Ok(_) => {}
             Err(ServeError::Shed { .. }) => {
@@ -410,6 +446,17 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
                 eng.submit(target, *r).map_err(anyhow::Error::new)?;
             }
             Err(e) => return Err(anyhow::Error::new(e)),
+        }
+        // --metrics-every N (file mode: N requests)
+        if let Some(n) = metrics_every {
+            if n > 0 && (i as u64 + 1) % n == 0 {
+                eprintln!(
+                    "[metrics {}/{} reqs] {}",
+                    i + 1,
+                    reqs.len(),
+                    registry.render_line()
+                );
+            }
         }
     }
     if deadline_ms.is_some() {
@@ -457,7 +504,10 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
         st.tail_forced_flushes,
         sm.cache().memory_bytes() as f64 / 1024.0,
     );
-    print!("{}", report::format_workers(&sm.worker_stats(), wall));
+    print!("{}", report::format_workers(&sm.worker_stats()));
+    if metrics_every.is_some() {
+        eprintln!("[metrics final] {}", registry.render_line());
+    }
     if maintenance_on {
         maintenance_epilogue(&mut eng, ds.n(), do_refresh)?;
     }
@@ -471,7 +521,9 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
 /// everything); `--drain`/`--shutdown` append the corresponding control
 /// frames; `--wait-ms W` keeps retrying the initial connect for W ms (the
 /// server may still be loading its artifact); `--out FILE` writes answer
-/// lines byte-identical to `serve --requests`'s `--out`.
+/// lines byte-identical to `serve --requests`'s `--out`; `--stats` appends
+/// a STATS frame and prints the server's Prometheus text exposition on
+/// stdout (a curl-free scrape — `--requests` becomes optional).
 fn client_cmd(flags: &HashMap<String, String>) -> Result<()> {
     use std::io::Write;
     use vq_gnn::serve::proto::{self, ErrCode, WireRequest, WireResponse};
@@ -480,17 +532,26 @@ fn client_cmd(flags: &HashMap<String, String>) -> Result<()> {
 
     let addr = flags.get("addr").context("client needs --addr HOST:PORT")?.clone();
     let model = flags.get("model").cloned().unwrap_or("gcn".into());
-    let req_path = flags.get("requests").context("client needs --requests FILE")?;
+    let do_stats = flags.contains_key("stats");
+    let req_path = flags.get("requests");
+    if req_path.is_none() && !do_stats {
+        bail!("client needs --requests FILE (or --stats for a scrape-only probe)");
+    }
     let rate: Option<f64> = flags.get("rate").map(|s| s.parse()).transpose()?;
     let wait_ms: u64 = flags.get("wait-ms").map(|s| s.parse()).transpose()?.unwrap_or(10_000);
     let do_drain = flags.contains_key("drain");
     let do_shutdown = flags.contains_key("shutdown");
 
-    let text = std::fs::read_to_string(req_path)
-        .with_context(|| format!("read requests file {req_path}"))?;
-    // no local range check — the server owns admission control and
-    // answers out-of-range ids with a typed BAD_REQUEST frame
-    let reqs = serve::parse_requests(&text, usize::MAX)?;
+    let reqs = match req_path {
+        Some(req_path) => {
+            let text = std::fs::read_to_string(req_path)
+                .with_context(|| format!("read requests file {req_path}"))?;
+            // no local range check — the server owns admission control and
+            // answers out-of-range ids with a typed BAD_REQUEST frame
+            serve::parse_requests(&text, usize::MAX)?
+        }
+        None => Vec::new(),
+    };
 
     let connect_deadline =
         std::time::Instant::now() + std::time::Duration::from_millis(wait_ms);
@@ -507,10 +568,11 @@ fn client_cmd(flags: &HashMap<String, String>) -> Result<()> {
     };
     stream.set_nodelay(true)?;
     let mut rstream = stream.try_clone()?;
-    let expected = reqs.len();
+    // every node/link query gets exactly one response frame (scores or a
+    // typed error), and a STATS probe exactly one stats frame
+    let expected = reqs.len() + usize::from(do_stats);
 
-    // reader thread: every node/link query gets exactly one response
-    // frame (scores or a typed error), so it can count down to `expected`
+    // reader thread: counts responses down to `expected`
     let reader = std::thread::spawn(move || -> Result<Vec<WireResponse>> {
         let mut got = Vec::with_capacity(expected);
         while got.len() < expected {
@@ -544,6 +606,12 @@ fn client_cmd(flags: &HashMap<String, String>) -> Result<()> {
         };
         w.write_all(&proto::encode_request(&wire))?;
     }
+    if do_stats {
+        // after the queries so the scrape reflects them once drained
+        w.write_all(&proto::encode_request(&WireRequest::Stats {
+            req_id: reqs.len() as u64,
+        }))?;
+    }
     if do_drain {
         w.write_all(&proto::encode_request(&WireRequest::Drain))?;
     }
@@ -558,7 +626,8 @@ fn client_cmd(flags: &HashMap<String, String>) -> Result<()> {
         WireResponse::Scores { req_id, .. }
         | WireResponse::Link { req_id, .. }
         | WireResponse::Error { req_id, .. }
-        | WireResponse::Pong { req_id } => *req_id,
+        | WireResponse::Pong { req_id }
+        | WireResponse::Stats { req_id, .. } => *req_id,
     });
 
     let mut served = 0u64;
@@ -592,15 +661,20 @@ fn client_cmd(flags: &HashMap<String, String>) -> Result<()> {
                 eprintln!("req {req_id}: {} — {msg}", code.name());
             }
             WireResponse::Pong { .. } => {}
+            // scrape text goes straight to stdout (greppable, pipeable)
+            WireResponse::Stats { text, .. } => print!("{text}"),
         }
     }
     if let Some(out_path) = flags.get("out") {
         std::fs::write(out_path, out)?;
         eprintln!("wrote {out_path}");
     }
-    println!(
-        "client {addr}: {} sent, {served} served, shed {shed}, {errors} error(s), {wall:.1}s",
-        reqs.len(),
-    );
+    if !do_stats || !reqs.is_empty() {
+        println!(
+            "client {addr}: {} sent, {served} served, shed {shed}, {errors} error(s), \
+             {wall:.1}s",
+            reqs.len(),
+        );
+    }
     Ok(())
 }

@@ -1,0 +1,598 @@
+//! `obs` — dependency-free observability: a [`Registry`] of named atomic
+//! [`Counter`]s, [`Gauge`]s, and log-bucketed latency [`Histogram`]s, plus
+//! a lightweight [`Stage`] span timer.
+//!
+//! Design constraints (the serve path is the customer):
+//!
+//! - **Never perturb the data path.**  Recording is a handful of relaxed
+//!   atomic adds; a *disabled* registry hands out empty handles whose
+//!   record calls are a single `Option` test — no `Instant::now()`, no
+//!   atomics.  Served answers are byte-identical with metrics on or off
+//!   (pinned by `tests/obs.rs`).
+//! - **Sync by construction.**  Flush workers run on scoped threads, so
+//!   every metric is an atomic cell; handles are `Arc`-shared and record
+//!   via `&self` from any thread.  Handles are resolved ONCE at wiring
+//!   time (engine build / trainer construction) — the hot path never
+//!   touches the registry's name map.
+//! - **Deterministic exposition.**  [`Registry::render_prometheus`] and
+//!   [`Registry::to_json`] iterate `BTreeMap`s, so the scrape output is
+//!   byte-stable for a given metric state (the STATS-frame acceptance
+//!   criterion).
+//!
+//! # Histogram shape
+//!
+//! Fixed [`BUCKETS`] = 64 log-spaced buckets over nanoseconds: bucket 0
+//! holds everything below 2^8 ns, then two sub-buckets per power of two
+//! (boundaries 256, 384, 512, 768, 1024, ... ns), and the last bucket
+//! saturates (everything ≥ ~2^39 ns ≈ 9 minutes).  Counts are exact;
+//! `count`/`sum`/`max` are tracked exactly alongside, so `mean` and `max`
+//! carry no bucketing error.  Quantiles are estimated as the midpoint of
+//! the bucket holding the nearest-rank sample: for in-range values the
+//! relative error is at most **25%** (worst case: the true value sits on
+//! a bucket's lower edge whose width ratio is 1.5) — the bound
+//! `tests/obs.rs` property-tests against an exact sort.  Histograms
+//! [`Histogram::merge_into`] by bucket-wise addition, which is exactly
+//! pooled recording (also property-tested) — per-worker aggregation
+//! without locks.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Number of histogram buckets (fixed — merges never disagree on shape).
+pub const BUCKETS: usize = 64;
+
+/// Bucket 0 holds all values below `2^LO_BITS` nanoseconds.
+const LO_BITS: u32 = 8;
+
+/// Sub-buckets per power of two (1 bit → 2 sub-buckets, ratio ≤ 1.5).
+const SUB_BITS: u32 = 1;
+
+/// Bucket index of a nanosecond value (saturating at the last bucket).
+#[inline]
+fn bucket_of(ns: u64) -> usize {
+    if ns < (1u64 << LO_BITS) {
+        return 0;
+    }
+    let e = 63 - ns.leading_zeros(); // floor log2, >= LO_BITS
+    let sub = ((ns >> (e - SUB_BITS)) & ((1 << SUB_BITS) - 1)) as usize;
+    let idx = (((e - LO_BITS) as usize) << SUB_BITS) + sub + 1;
+    idx.min(BUCKETS - 1)
+}
+
+/// Lower edge of a bucket in nanoseconds (bucket 0 starts at 0).
+fn bucket_lo(idx: usize) -> u64 {
+    if idx == 0 {
+        return 0;
+    }
+    let oct = ((idx - 1) >> SUB_BITS) as u32 + LO_BITS;
+    let sub = ((idx - 1) & ((1 << SUB_BITS) - 1)) as u64;
+    (1u64 << oct) + sub * (1u64 << (oct - SUB_BITS))
+}
+
+/// Upper edge of a bucket (exclusive); the saturation bucket is unbounded
+/// and reports its lower edge ×1.5 so midpoints stay finite.
+fn bucket_hi(idx: usize) -> u64 {
+    if idx + 1 < BUCKETS {
+        bucket_lo(idx + 1)
+    } else {
+        bucket_lo(idx) + bucket_lo(idx) / 2
+    }
+}
+
+/// Monotone event counter (relaxed atomic add).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in an atomic word).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Log-bucketed latency histogram over nanoseconds (see module docs for
+/// the bucket layout and the 25% quantile error bound).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one nanosecond sample (a few relaxed atomic RMWs).
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Record a wall-clock duration.
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Consistent-enough point-in-time copy for rendering (individual
+    /// loads are relaxed; concurrent recording may skew cross-field
+    /// totals by in-flight samples, which scraping tolerates).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fold this histogram into `dst` (bucket-wise add; max of maxes).
+    /// Merging per-worker histograms equals pooled recording exactly.
+    pub fn merge_into(&self, dst: &Histogram) {
+        for i in 0..BUCKETS {
+            let c = self.buckets[i].load(Ordering::Relaxed);
+            if c > 0 {
+                dst.buckets[i].fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        dst.count.fetch_add(self.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        dst.sum_ns.fetch_add(self.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        dst.max_ns.fetch_max(self.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// Plain (non-atomic) histogram snapshot: quantile/mean/max accessors.
+#[derive(Debug, Clone, Copy)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot { buckets: [0; BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Fold `other` into this snapshot (bucket-wise add — identical to
+    /// having recorded both sample sets into one histogram).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for i in 0..BUCKETS {
+            self.buckets[i] += other.buckets[i];
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// Nearest-rank quantile estimate in nanoseconds: the midpoint of the
+    /// bucket holding the ⌈q·count⌉-th smallest sample (≤ 25% relative
+    /// error in-range; the saturation bucket reports a finite midpoint).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for i in 0..BUCKETS {
+            seen += self.buckets[i];
+            if seen >= rank {
+                return (bucket_lo(i) + bucket_hi(i)) / 2;
+            }
+        }
+        self.max_ns // unreachable when fields are consistent
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+}
+
+/// RAII span timer: measures from construction to drop and records into
+/// its histogram.  A handle from a disabled registry produces a no-op
+/// stage that never reads the clock.
+pub struct Stage {
+    h: Option<Arc<Histogram>>,
+    t0: Option<Instant>,
+}
+
+impl Stage {
+    /// End the span now (drop does the same; this names the intent).
+    pub fn stop(self) {}
+}
+
+impl Drop for Stage {
+    fn drop(&mut self) {
+        if let (Some(h), Some(t0)) = (&self.h, self.t0) {
+            h.record_duration(t0.elapsed());
+        }
+    }
+}
+
+/// Cheap cloneable handle to a registered histogram (`None` = disabled).
+#[derive(Clone, Default)]
+pub struct HistHandle(Option<Arc<Histogram>>);
+
+impl HistHandle {
+    /// The permanently-disabled handle (records nothing, reads no clock).
+    pub fn disabled() -> HistHandle {
+        HistHandle(None)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        if let Some(h) = &self.0 {
+            h.record(ns);
+        }
+    }
+
+    pub fn record_duration(&self, d: std::time::Duration) {
+        if let Some(h) = &self.0 {
+            h.record_duration(d);
+        }
+    }
+
+    /// Start a span; recording happens when the returned [`Stage`] drops.
+    pub fn stage(&self) -> Stage {
+        Stage { h: self.0.clone(), t0: self.0.as_ref().map(|_| Instant::now()) }
+    }
+}
+
+/// Cheap cloneable handle to a registered counter (`None` = disabled).
+#[derive(Clone, Default)]
+pub struct CounterHandle(Option<Arc<Counter>>);
+
+impl CounterHandle {
+    pub fn disabled() -> CounterHandle {
+        CounterHandle(None)
+    }
+
+    pub fn add(&self, n: u64) {
+        if let Some(c) = &self.0 {
+            c.add(n);
+        }
+    }
+}
+
+/// Cheap cloneable handle to a registered gauge (`None` = disabled).
+#[derive(Clone, Default)]
+pub struct GaugeHandle(Option<Arc<Gauge>>);
+
+impl GaugeHandle {
+    pub fn disabled() -> GaugeHandle {
+        GaugeHandle(None)
+    }
+
+    pub fn set(&self, v: f64) {
+        if let Some(g) = &self.0 {
+            g.set(v);
+        }
+    }
+}
+
+/// Named-metric registry.  Registration (`hist`/`counter`/`gauge`) takes
+/// a mutex and interns the name; the returned handles are lock-free.  A
+/// [`Registry::disabled`] registry interns nothing and hands out empty
+/// handles — the data-path cost of "metrics off" is one `Option` test.
+pub struct Registry {
+    enabled: bool,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            enabled: true,
+            hists: Mutex::new(BTreeMap::new()),
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// A registry that registers nothing and hands out disabled handles.
+    pub fn disabled() -> Registry {
+        Registry { enabled: false, ..Registry::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Resolve (or create) the named histogram.  Same name → same cells,
+    /// so independent wiring sites aggregate into one family.
+    pub fn hist(&self, name: &str) -> HistHandle {
+        if !self.enabled {
+            return HistHandle(None);
+        }
+        let mut m = self.hists.lock().unwrap();
+        let h = m.entry(name.to_string()).or_default();
+        HistHandle(Some(h.clone()))
+    }
+
+    /// Resolve (or create) the named counter.
+    pub fn counter(&self, name: &str) -> CounterHandle {
+        if !self.enabled {
+            return CounterHandle(None);
+        }
+        let mut m = self.counters.lock().unwrap();
+        let c = m.entry(name.to_string()).or_default();
+        CounterHandle(Some(c.clone()))
+    }
+
+    /// Resolve (or create) the named gauge.
+    pub fn gauge(&self, name: &str) -> GaugeHandle {
+        if !self.enabled {
+            return GaugeHandle(None);
+        }
+        let mut m = self.gauges.lock().unwrap();
+        let g = m.entry(name.to_string()).or_default();
+        GaugeHandle(Some(g.clone()))
+    }
+
+    /// Prometheus text exposition, deterministic key order: counters as
+    /// `<name>_total`, gauges bare, histograms as summaries
+    /// (`<name>_seconds{quantile="..."}` + `_seconds_sum`/`_count`/
+    /// `_seconds_max`).  Floats print with enough digits to round-trip
+    /// the gauge exactly is not needed — 9 significant digits keeps the
+    /// output stable and readable.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name}_total counter\n"));
+            out.push_str(&format!("{name}_total {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {:.9}\n", g.get()));
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let s = h.snapshot();
+            out.push_str(&format!("# TYPE {name}_seconds summary\n"));
+            for (label, q) in [("0.5", 0.5), ("0.9", 0.9), ("0.99", 0.99)] {
+                out.push_str(&format!(
+                    "{name}_seconds{{quantile=\"{label}\"}} {:.9}\n",
+                    s.quantile_ns(q) as f64 / 1e9
+                ));
+            }
+            out.push_str(&format!("{name}_seconds_sum {:.9}\n", s.sum_ns as f64 / 1e9));
+            out.push_str(&format!("{name}_seconds_count {}\n", s.count));
+            out.push_str(&format!("{name}_seconds_max {:.9}\n", s.max_ns as f64 / 1e9));
+        }
+        out
+    }
+
+    /// One compact human line per scrape for the CLI's `--metrics-every`
+    /// report: every family as `name=value`, histograms as `p50/p99` in
+    /// ms, in deterministic key order.
+    pub fn render_line(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            parts.push(format!("{name}={}", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            parts.push(format!("{name}={:.4}", g.get()));
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let s = h.snapshot();
+            parts.push(format!(
+                "{name}_ms[p50={:.3} p99={:.3} n={}]",
+                s.quantile_ns(0.5) as f64 / 1e6,
+                s.quantile_ns(0.99) as f64 / 1e6,
+                s.count
+            ));
+        }
+        parts.join(" ")
+    }
+
+    /// JSON dump (stable key order via `util::json`): counters and gauges
+    /// as numbers, each histogram as an object of exact `count` plus
+    /// `p50_ms`/`p90_ms`/`p99_ms`/`mean_ms`/`max_ms` — the shape the
+    /// bench harness merges into `BENCH_hot_paths.json`.
+    pub fn to_json(&self) -> Json {
+        let mut root: BTreeMap<String, Json> = BTreeMap::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            root.insert(name.clone(), Json::Num(c.get() as f64));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            root.insert(name.clone(), Json::Num(g.get()));
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let s = h.snapshot();
+            let mut o: BTreeMap<String, Json> = BTreeMap::new();
+            o.insert("count".into(), Json::Num(s.count as f64));
+            o.insert("p50_ms".into(), Json::Num(s.quantile_ns(0.5) as f64 / 1e6));
+            o.insert("p90_ms".into(), Json::Num(s.quantile_ns(0.9) as f64 / 1e6));
+            o.insert("p99_ms".into(), Json::Num(s.quantile_ns(0.99) as f64 / 1e6));
+            o.insert("mean_ms".into(), Json::Num(s.mean_ns() / 1e6));
+            o.insert("max_ms".into(), Json::Num(s.max_ns as f64 / 1e6));
+            root.insert(name.clone(), Json::Obj(o));
+        }
+        Json::Obj(root)
+    }
+}
+
+/// Stage handles for the serve execution split — batch assembly (sketch
+/// building + input fills) vs. session execution (the compiled plan) —
+/// passed down into the worker pool so each micro-batch attributes its
+/// time to the right family.  All-disabled by default.
+#[derive(Clone, Default)]
+pub struct ServeStages {
+    pub assembly: HistHandle,
+    pub exec: HistHandle,
+}
+
+/// Per-layer VQ-health gauges from a codeword population histogram: the
+/// codebook's **perplexity** `exp(−Σ p·ln p)` (effective number of used
+/// codewords — k when uniform, 1 when collapsed) and its **dead-code
+/// count** (clusters whose population is below `dead_eps` — the trainers'
+/// EMA masses decay toward 0, so an exact-zero test would never fire).
+pub fn codebook_health(counts: &[f32], dead_eps: f32) -> (f64, usize) {
+    let total: f64 = counts.iter().map(|&c| c.max(0.0) as f64).sum();
+    let mut dead = 0usize;
+    let mut ent = 0.0f64;
+    for &c in counts {
+        if c < dead_eps {
+            dead += 1;
+        }
+        let c = c.max(0.0) as f64;
+        if c > 0.0 && total > 0.0 {
+            let p = c / total;
+            ent -= p * p.ln();
+        }
+    }
+    let perplexity = if total > 0.0 { ent.exp() } else { 0.0 };
+    (perplexity, dead)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_monotone_and_total() {
+        // every value maps into exactly one bucket whose [lo, hi) holds it
+        // (saturation bucket excepted), and indices are monotone in value
+        let mut prev = 0usize;
+        for e in 0..60u32 {
+            for &m in &[1u64, 3, 5, 7] {
+                let v = (m << e) / 4;
+                let b = bucket_of(v);
+                assert!(b >= prev || v < (1 << LO_BITS), "monotone at {v}");
+                prev = prev.max(b);
+                if b + 1 < BUCKETS {
+                    assert!(
+                        bucket_lo(b) <= v && v < bucket_hi(b),
+                        "v={v} not in bucket {b} [{}, {})",
+                        bucket_lo(b),
+                        bucket_hi(b)
+                    );
+                }
+            }
+        }
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn exact_fields_and_quantile_edges() {
+        let h = Histogram::new();
+        assert_eq!(h.snapshot().quantile_ns(0.5), 0, "empty histogram");
+        for ns in [1_000u64, 2_000, 3_000, 4_000] {
+            h.record(ns);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum_ns, 10_000);
+        assert_eq!(s.max_ns, 4_000);
+        assert!((s.mean_ns() - 2_500.0).abs() < 1e-9);
+        // p50 of 4 samples is the 2nd smallest (2000 ns): within 25%
+        let p50 = s.quantile_ns(0.5) as f64;
+        assert!((p50 - 2_000.0).abs() <= 0.25 * 2_000.0, "p50={p50}");
+    }
+
+    #[test]
+    fn registry_is_deterministic_and_disableable() {
+        let r = Registry::new();
+        r.counter("b_count").add(2);
+        r.counter("a_count").add(1);
+        r.gauge("z_gauge").set(1.5);
+        r.hist("lat").record_ns(1_000_000);
+        let text = r.render_prometheus();
+        assert_eq!(text, r.render_prometheus(), "scrape is byte-stable");
+        let a = text.find("a_count_total 1").unwrap();
+        let b = text.find("b_count_total 2").unwrap();
+        assert!(a < b, "counters render in sorted key order");
+        assert!(text.contains("lat_seconds{quantile=\"0.9\"}"));
+        assert!(text.contains("lat_seconds_count 1"));
+        assert!(text.contains("z_gauge 1.5"));
+        // same name resolves to the same cells
+        r.counter("a_count").add(1);
+        assert!(r.render_prometheus().contains("a_count_total 2"));
+        // disabled: no interning, empty scrape, no-op handles
+        let d = Registry::disabled();
+        let h = d.hist("lat");
+        assert!(!h.enabled());
+        h.record_ns(5);
+        h.stage().stop();
+        d.counter("c").add(1);
+        d.gauge("g").set(1.0);
+        assert_eq!(d.render_prometheus(), "");
+        assert_eq!(d.render_line(), "");
+    }
+
+    #[test]
+    fn stage_records_on_drop() {
+        let r = Registry::new();
+        let h = r.hist("span");
+        {
+            let _t = h.stage();
+        }
+        assert_eq!(r.hist("span").0.unwrap().snapshot().count, 1);
+    }
+
+    #[test]
+    fn codebook_health_extremes() {
+        let (pp, dead) = codebook_health(&[1.0; 8], 1e-3);
+        assert!((pp - 8.0).abs() < 1e-9, "uniform → perplexity k, got {pp}");
+        assert_eq!(dead, 0);
+        let (pp, dead) = codebook_health(&[8.0, 0.0, 0.0, 0.0], 1e-3);
+        assert!((pp - 1.0).abs() < 1e-9, "collapsed → perplexity 1, got {pp}");
+        assert_eq!(dead, 3);
+        let (pp, dead) = codebook_health(&[], 1e-3);
+        assert_eq!(pp, 0.0);
+        assert_eq!(dead, 0);
+    }
+}

@@ -206,6 +206,14 @@ impl LayerCache {
         }
     }
 
+    /// Branch-0 codeword populations over every servable node (frozen +
+    /// admitted) — integer counts stored as f32.  Read-only view for the
+    /// VQ-health gauges (`obs::codebook_health`): perplexity and
+    /// dead-code count per layer.
+    pub fn codeword_populations(&self) -> &[f32] {
+        &self.global_hist
+    }
+
     /// Append one admitted node's per-branch assignments (single-writer
     /// path) and fold it into the global histogram.
     pub fn record_admitted(&mut self, assigns: &[u32]) {

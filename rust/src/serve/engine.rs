@@ -39,15 +39,77 @@
 //! identical inputs.
 
 use std::fmt;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::obs::{self, Registry};
 use crate::runtime::Runtime;
 use crate::serve::model::ServingModel;
 use crate::serve::router::{ModelEntry, Router};
 use crate::serve::{Answer, Request};
 use crate::util::par;
+
+/// Metric handles the engine records into, resolved ONCE at build time
+/// (the flush path never touches the registry's name map).  All-disabled
+/// by default — recording then costs one `Option` test and reads no
+/// clock, and answers are byte-identical either way (`tests/obs.rs`).
+#[derive(Clone, Default)]
+pub(crate) struct EngineMetrics {
+    /// submit → flush-cut wait per request.
+    pub queue_wait: obs::HistHandle,
+    /// submit → batch-completion latency per request (the same stamps the
+    /// `Served::latency_s` accounting already takes — no extra clock
+    /// reads on the data path).
+    pub request_latency: obs::HistHandle,
+    /// Batch-assembly / session-exec split, recorded inside the pool.
+    pub stages: obs::ServeStages,
+    pub admit: obs::HistHandle,
+    pub evict: obs::HistHandle,
+    pub drift_check: obs::HistHandle,
+    pub refresh: obs::HistHandle,
+    pub requests: obs::CounterHandle,
+    pub served: obs::CounterHandle,
+    pub shed: obs::CounterHandle,
+    pub drift_tv: obs::GaugeHandle,
+}
+
+impl EngineMetrics {
+    fn wire(reg: Option<&Registry>) -> EngineMetrics {
+        let Some(r) = reg else { return EngineMetrics::default() };
+        EngineMetrics {
+            queue_wait: r.hist("serve_queue_wait"),
+            request_latency: r.hist("serve_request_latency"),
+            stages: obs::ServeStages {
+                assembly: r.hist("serve_batch_assembly"),
+                exec: r.hist("serve_session_exec"),
+            },
+            admit: r.hist("serve_admit"),
+            evict: r.hist("serve_evict"),
+            drift_check: r.hist("serve_drift_check"),
+            refresh: r.hist("serve_refresh"),
+            requests: r.counter("serve_requests"),
+            served: r.counter("serve_served"),
+            shed: r.counter("serve_shed"),
+            drift_tv: r.gauge("serve_drift_tv"),
+        }
+    }
+}
+
+/// Publish one model's residency + VQ-health gauges (admission, eviction
+/// and refresh move them; the scrape reads last-written values).
+fn publish_model_gauges(reg: &Registry, e: &ModelEntry) {
+    let cache = e.model.cache();
+    reg.gauge("serve_resident_admitted").set(cache.admitted.len() as f64);
+    reg.gauge("serve_cache_bytes").set(cache.memory_bytes() as f64);
+    for (l, lc) in cache.layers.iter().enumerate() {
+        // serving populations are integer counts: < 0.5 means empty
+        let (pp, dead) = obs::codebook_health(lc.codeword_populations(), 0.5);
+        reg.gauge(&format!("vq_codebook_perplexity_l{l}")).set(pp);
+        reg.gauge(&format!("vq_dead_codes_l{l}")).set(dead as f64);
+    }
+}
 
 /// A completed request: the answer plus its queue-to-completion latency.
 pub struct Served {
@@ -156,7 +218,7 @@ impl MicroBatcher {
     /// answers in submit order.
     #[deprecated(note = "go through ServeEngine::drain — this shim delegates to the same body")]
     pub fn drain(&mut self, rt: &Runtime, model: &mut ServingModel) -> Result<Vec<Served>> {
-        self.flush_with(rt, model, true)
+        self.flush_with(rt, model, true, &EngineMetrics::default())
     }
 
     /// Deadline-driven flush: cut and execute every FULL micro-batch; run
@@ -165,7 +227,7 @@ impl MicroBatcher {
     /// submit order (for the served prefix).
     #[deprecated(note = "go through ServeEngine::poll — this shim delegates to the same body")]
     pub fn flush(&mut self, rt: &Runtime, model: &mut ServingModel) -> Result<Vec<Served>> {
-        self.flush_with(rt, model, false)
+        self.flush_with(rt, model, false, &EngineMetrics::default())
     }
 
     /// How many leading requests to serve, and whether the deadline forced
@@ -215,6 +277,7 @@ impl MicroBatcher {
         rt: &Runtime,
         model: &mut ServingModel,
         force_tail: bool,
+        metrics: &EngineMetrics,
     ) -> Result<Vec<Served>> {
         if self.pending.is_empty() {
             return Ok(Vec::new());
@@ -227,6 +290,14 @@ impl MicroBatcher {
             return Ok(Vec::new());
         }
         let taken: Vec<(usize, Request, Instant)> = self.pending.drain(..cut).collect();
+        // queue-wait per request, off the submit stamps latency accounting
+        // already takes — one clock read per flush, none when disabled
+        if metrics.queue_wait.enabled() {
+            let now = Instant::now();
+            for (_, _, t0) in &taken {
+                metrics.queue_wait.record_duration(now.saturating_duration_since(*t0));
+            }
+        }
         // Expand requests into node slots in arrival order.
         let mut slots: Vec<u32> = Vec::with_capacity(taken.len());
         for (_, req, _) in &taken {
@@ -275,7 +346,7 @@ impl MicroBatcher {
                     let mut done: Vec<(usize, Instant)> =
                         Vec::with_capacity(state.1.len());
                     for (bi, nodes, out) in state.1.drain(..) {
-                        core.run_batch(&mut *state.0, nodes, out)?;
+                        core.run_batch_timed(&mut *state.0, nodes, out, &metrics.stages)?;
                         // completion stamp per micro-batch: a request's
                         // latency ends when the batch holding its LAST slot
                         // returns, not when the whole flush does — otherwise
@@ -333,8 +404,11 @@ impl MicroBatcher {
                 }
             };
             let done = stamps[last_slot / b].expect("batch executed");
-            served.push(Served { id, answer, latency_s: (done - t0).as_secs_f64() });
+            let latency_s = (done - t0).as_secs_f64();
+            metrics.request_latency.record_ns((latency_s * 1e9) as u64);
+            served.push(Served { id, answer, latency_s });
         }
+        metrics.served.add(served.len() as u64);
         Ok(served)
     }
 }
@@ -434,6 +508,7 @@ pub struct ServeEngineBuilder {
     ttl: Option<Duration>,
     drift_threshold: f32,
     refresh_gamma: f32,
+    metrics: Option<Arc<Registry>>,
 }
 
 impl ServeEngineBuilder {
@@ -496,6 +571,16 @@ impl ServeEngineBuilder {
         self
     }
 
+    /// Attach a metrics registry: the engine resolves its handles once
+    /// here and records queue-wait/assembly/exec/latency histograms,
+    /// request counters, and maintenance timings + VQ-health gauges into
+    /// it.  Without this call the engine runs metrics-free (no clock
+    /// reads, no atomics) — answers are byte-identical either way.
+    pub fn metrics(mut self, reg: Arc<Registry>) -> Self {
+        self.metrics = Some(reg);
+        self
+    }
+
     pub fn build(self, rt: Runtime) -> Result<ServeEngine, ServeError> {
         if self.models.is_empty() {
             return Err(ServeError::NoModels);
@@ -532,6 +617,12 @@ impl ServeEngineBuilder {
             queue.set_deadline(self.deadline);
             entries.push(ModelEntry { name, model, queue, drift_high: false });
         }
+        let metrics = EngineMetrics::wire(self.metrics.as_deref());
+        if let Some(reg) = self.metrics.as_deref() {
+            for e in &entries {
+                publish_model_gauges(reg, e);
+            }
+        }
         Ok(ServeEngine {
             rt,
             router: Router::new(entries),
@@ -543,6 +634,8 @@ impl ServeEngineBuilder {
             ttl: self.ttl,
             drift_threshold: self.drift_threshold,
             refresh_gamma: self.refresh_gamma,
+            registry: self.metrics,
+            metrics,
         })
     }
 }
@@ -564,6 +657,8 @@ pub struct ServeEngine {
     ttl: Option<Duration>,
     drift_threshold: f32,
     refresh_gamma: f32,
+    registry: Option<Arc<Registry>>,
+    metrics: EngineMetrics,
 }
 
 impl ServeEngine {
@@ -577,7 +672,14 @@ impl ServeEngine {
             ttl: None,
             drift_threshold: 0.5,
             refresh_gamma: 0.8,
+            metrics: None,
         }
+    }
+
+    /// The registry attached at build time, if any — the server renders
+    /// STATS scrapes from it, the CLI prints `--metrics-every` lines.
+    pub fn registry(&self) -> Option<&Arc<Registry>> {
+        self.registry.as_ref()
     }
 
     /// Admission control + enqueue; returns the request's global ticket
@@ -602,6 +704,7 @@ impl ServeEngine {
         if let Some(cap) = self.queue_cap {
             let depth = entry.queue.pending_slots();
             if depth + slots_of(&req) > cap {
+                self.metrics.shed.add(1);
                 return Err(ServeError::Shed {
                     model: model.to_string(),
                     pending_slots: depth,
@@ -612,6 +715,7 @@ impl ServeEngine {
         let ticket = self.next_ticket;
         self.next_ticket += 1;
         entry.queue.submit_with_id(ticket, req);
+        self.metrics.requests.add(1);
         Ok(ticket)
     }
 
@@ -629,17 +733,22 @@ impl ServeEngine {
     fn flush_all(&mut self, force_tail: bool) -> Result<Vec<Served>> {
         let rt = &self.rt;
         let threshold = self.drift_threshold;
+        let metrics = &self.metrics;
         let mut served: Vec<Served> = Vec::new();
+        let mut max_tv = 0.0f32;
         for e in self.router.entries_mut() {
-            served.extend(e.queue.flush_with(rt, &mut e.model, force_tail)?);
+            served.extend(e.queue.flush_with(rt, &mut e.model, force_tail, metrics)?);
             // edge-triggered drift alert: the flush just fed the observer,
             // so this is the freshest the metric gets
-            let high = e.model.max_drift() >= threshold;
+            let tv = e.model.max_drift();
+            max_tv = max_tv.max(tv);
+            let high = tv >= threshold;
             if high && !e.drift_high {
                 e.queue.stats.drift_alerts += 1;
             }
             e.drift_high = high;
         }
+        metrics.drift_tv.set(max_tv as f64);
         // one engine-wide ticket sequence ⇒ sorting recovers submit order
         served.sort_by_key(|s| s.id);
         Ok(served)
@@ -728,6 +837,10 @@ impl ServeEngine {
         let mut queue = MicroBatcher::new();
         queue.set_deadline(self.deadline);
         self.router.push(ModelEntry { name, model, queue, drift_high: false });
+        if let Some(reg) = self.registry.as_deref() {
+            let e = self.router.entries().last().expect("just pushed");
+            publish_model_gauges(reg, e);
+        }
         Ok(())
     }
 
@@ -737,12 +850,18 @@ impl ServeEngine {
     pub fn admit(&mut self, model: &str, features: &[f32], neighbors: &[u32]) -> Result<u32> {
         let (max_admitted, ttl) = (self.max_admitted, self.ttl);
         let rt = &self.rt;
+        let metrics = &self.metrics;
         let e = self
             .router
             .get_mut(model)
             .with_context(|| format!("admit: unknown model '{model}'"))?;
+        let stage = metrics.admit.stage();
         let id = e.model.admit(rt, features, neighbors)?;
-        Self::retain_entry(e, max_admitted, ttl);
+        stage.stop();
+        Self::retain_entry(e, max_admitted, ttl, metrics);
+        if let Some(reg) = self.registry.as_deref() {
+            publish_model_gauges(reg, self.router.get(model).expect("present"));
+        }
         Ok(id)
     }
 
@@ -751,12 +870,18 @@ impl ServeEngine {
     pub fn admit_queued(&mut self, model: &str) -> Result<Vec<u32>> {
         let (max_admitted, ttl) = (self.max_admitted, self.ttl);
         let rt = &self.rt;
+        let metrics = &self.metrics;
         let e = self
             .router
             .get_mut(model)
             .with_context(|| format!("admit_queued: unknown model '{model}'"))?;
+        let stage = metrics.admit.stage();
         let ids = e.model.admit_queued(rt)?;
-        Self::retain_entry(e, max_admitted, ttl);
+        stage.stop();
+        Self::retain_entry(e, max_admitted, ttl, metrics);
+        if let Some(reg) = self.registry.as_deref() {
+            publish_model_gauges(reg, self.router.get(model).expect("present"));
+        }
         Ok(ids)
     }
 
@@ -765,11 +890,16 @@ impl ServeEngine {
     /// Returns how many admitted nodes were evicted.
     pub fn maintain(&mut self, model: &str) -> Result<usize> {
         let (max_admitted, ttl) = (self.max_admitted, self.ttl);
+        let metrics = &self.metrics;
         let e = self
             .router
             .get_mut(model)
             .with_context(|| format!("maintain: unknown model '{model}'"))?;
-        Ok(Self::retain_entry(e, max_admitted, ttl))
+        let n = Self::retain_entry(e, max_admitted, ttl, metrics);
+        if let Some(reg) = self.registry.as_deref() {
+            publish_model_gauges(reg, self.router.get(model).expect("present"));
+        }
+        Ok(n)
     }
 
     /// Evict `model`'s TTL-expired admitted nodes plus the LRU overflow
@@ -780,6 +910,7 @@ impl ServeEngine {
         e: &mut ModelEntry,
         max_admitted: Option<usize>,
         ttl: Option<Duration>,
+        metrics: &EngineMetrics,
     ) -> usize {
         if (max_admitted.is_none() && ttl.is_none()) || e.model.queued_admissions() > 0 {
             return 0;
@@ -788,14 +919,22 @@ impl ServeEngine {
         if victims.is_empty() {
             return 0;
         }
+        let stage = metrics.evict.stage();
         let n = e.model.evict(&victims);
+        stage.stop();
         e.queue.stats.evictions += n as u64;
         n
     }
 
     /// Codebook-drift metric of one model (max over layers, TV distance).
     pub fn drift(&self, model: &str) -> Option<f32> {
-        self.router.get(model).map(|e| e.model.max_drift())
+        let stage = self.metrics.drift_check.stage();
+        let tv = self.router.get(model).map(|e| e.model.max_drift());
+        stage.stop();
+        if let Some(tv) = tv {
+            self.metrics.drift_tv.set(tv as f64);
+        }
+        tv
     }
 
     /// Drift-gated online EMA refresh (single-writer path): re-fit
@@ -805,6 +944,7 @@ impl ServeEngine {
     /// changed.  See `ServingModel::refresh` for the staleness caveat.
     pub fn refresh(&mut self, model: &str) -> Result<bool> {
         let (threshold, gamma) = (self.drift_threshold, self.refresh_gamma);
+        let metrics = &self.metrics;
         let e = self
             .router
             .get_mut(model)
@@ -812,7 +952,13 @@ impl ServeEngine {
         if e.model.max_drift() < threshold {
             return Ok(false);
         }
-        e.model.refresh(gamma)
+        let stage = metrics.refresh.stage();
+        let changed = e.model.refresh(gamma)?;
+        stage.stop();
+        if let Some(reg) = self.registry.as_deref() {
+            publish_model_gauges(reg, self.router.get(model).expect("present"));
+        }
+        Ok(changed)
     }
 
     /// Disassemble the facade — rebuild with a different deadline/cap

@@ -40,8 +40,15 @@
 //!   per layer; total-variation distance against a reference frozen at
 //!   export is the drift signal that gates the opt-in EMA codebook
 //!   refresh (`ServeEngine::refresh`);
-//! - [`report::LatencyReport`] — p50/p99/qps accounting for the CLI and
-//!   the bench harness.
+//! - [`report::LatencyReport`] — p50/p90/p99/qps accounting for the CLI
+//!   and the bench harness, backed by `obs::Histogram`.
+//!
+//! Observability: attach an `obs::Registry` via
+//! `ServeEngine::builder().metrics(..)` and the engine records
+//! queue-wait/assembly/exec/latency histograms, admission counters, and
+//! maintenance timings + VQ-health gauges — answers stay byte-identical
+//! (`tests/obs.rs`); a STATS wire frame (`0x06`) scrapes the Prometheus
+//! exposition over the socket front-end.
 //!
 //! Driven by `vq-gnn serve --dataset D --model M (--requests FILE |
 //! --listen ADDR) [--threads N] [--deadline-ms D] [--queue-cap C]`.

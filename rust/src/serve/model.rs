@@ -36,6 +36,7 @@ use crate::coordinator::checkpoint;
 use crate::coordinator::vq_trainer::VqTrainer;
 use crate::datasets::Dataset;
 use crate::graph::Conv;
+use crate::obs;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::{Artifact, ExecSession, InputSlots, Runtime};
 use crate::serve::admit::AdmissionQueue;
@@ -81,6 +82,10 @@ pub struct ServeSession {
     pub batches: u64,
     /// Wall time this session spent filling + executing.
     pub busy_s: f64,
+    /// Per-batch wall-time histogram, fed from the same stamps `busy_s`
+    /// takes (no extra clock reads); merged across the pool by
+    /// [`report::format_workers`](crate::serve::report::format_workers).
+    pub(crate) batch_hist: obs::Histogram,
 }
 
 /// Per-worker throughput summary (`ServingModel::worker_stats`).
@@ -89,6 +94,8 @@ pub struct WorkerStats {
     pub batches: u64,
     pub rows: u64,
     pub busy_s: f64,
+    /// Snapshot of this worker's per-batch wall-time histogram.
+    pub batch: obs::HistSnapshot,
 }
 
 /// A borrow-split view of the shared core — every field `Sync`, the whole
@@ -258,6 +265,7 @@ impl ServeCore {
             exec: self.art.new_session(),
             batches: 0,
             busy_s: 0.0,
+            batch_hist: obs::Histogram::new(),
         }
     }
 
@@ -355,9 +363,27 @@ impl CoreRef<'_> {
     /// (`util::par::scope_map`).  Runtime accounting is the caller's job
     /// (`Runtime::record_external`).
     pub(crate) fn exec_batch(&self, sess: &mut ServeSession, batch: &[u32]) -> Result<()> {
+        self.exec_batch_timed(sess, batch, &obs::ServeStages::default())
+    }
+
+    /// [`CoreRef::exec_batch`] with stage attribution: batch assembly
+    /// (validation + dynamic-slot fills) and session execution (the
+    /// compiled plan) recorded into the engine's histograms.  Disabled
+    /// stage handles read no clock beyond the busy-time stamp the
+    /// untimed path already took, and the computation is byte-for-byte
+    /// the untimed sequence — timing never touches the data.
+    pub(crate) fn exec_batch_timed(
+        &self,
+        sess: &mut ServeSession,
+        batch: &[u32],
+        stages: &obs::ServeStages,
+    ) -> Result<()> {
         let t0 = std::time::Instant::now();
+        let assembly = stages.assembly.stage();
         self.check_batch(batch)?;
         self.fill_inputs(sess, batch);
+        assembly.stop();
+        let execution = stages.exec.stage();
         let ServeSession { dyn_inputs, outputs, exec, .. } = sess;
         let view = InputSlots::Overlay {
             base: self.template,
@@ -365,20 +391,24 @@ impl CoreRef<'_> {
             dynamic: dyn_inputs.as_slice(),
         };
         self.art.run_slots(view, outputs, exec)?;
+        execution.stop();
+        let elapsed = t0.elapsed();
         sess.batches += 1;
-        sess.busy_s += t0.elapsed().as_secs_f64();
+        sess.busy_s += elapsed.as_secs_f64();
+        sess.batch_hist.record_duration(elapsed);
         Ok(())
     }
 
-    /// [`CoreRef::exec_batch`] + copy the result rows into `out`
+    /// [`CoreRef::exec_batch_timed`] + copy the result rows into `out`
     /// (`b × out_dim`) — the engine's fan-out form.
-    pub(crate) fn run_batch(
+    pub(crate) fn run_batch_timed(
         &self,
         sess: &mut ServeSession,
         batch: &[u32],
         out: &mut [f32],
+        stages: &obs::ServeStages,
     ) -> Result<()> {
-        self.exec_batch(sess, batch)?;
+        self.exec_batch_timed(sess, batch, stages)?;
         out.copy_from_slice(&sess.outputs[0].f);
         Ok(())
     }
@@ -619,7 +649,12 @@ impl ServingModel {
         let b = self.batch_size() as u64;
         self.pool
             .iter()
-            .map(|s| WorkerStats { batches: s.batches, rows: s.batches * b, busy_s: s.busy_s })
+            .map(|s| WorkerStats {
+                batches: s.batches,
+                rows: s.batches * b,
+                busy_s: s.busy_s,
+                batch: s.batch_hist.snapshot(),
+            })
             .collect()
     }
 

@@ -10,6 +10,7 @@
 //!   0x03 DRAIN    (force-flush partial tails now)
 //!   0x04 SHUTDOWN (drain everything, reply, stop the server)
 //!   0x05 PING     req_id:u64le
+//!   0x06 STATS    req_id:u64le  (metrics scrape — answered inline)
 //!
 //! response payloads:
 //!   0x81 SCORES   req_id:u64le  flags:u8  n:u32le  n × f32le
@@ -18,6 +19,8 @@
 //!   0x83 ERROR    req_id:u64le  code:u8  mlen:u16le  msg:utf8[mlen]
 //!                 (req_id = u64::MAX when the frame never parsed)
 //!   0x85 PONG     req_id:u64le
+//!   0x86 STATS    req_id:u64le  tlen:u32le  text:utf8[tlen]
+//!                 (Prometheus text exposition, deterministic key order)
 //!
 //! error codes:
 //!   1 SHED           bounded queue at capacity — retry later
@@ -48,10 +51,12 @@ const K_LINK: u8 = 0x02;
 const K_DRAIN: u8 = 0x03;
 const K_SHUTDOWN: u8 = 0x04;
 const K_PING: u8 = 0x05;
+const K_STATS: u8 = 0x06;
 const K_SCORES: u8 = 0x81;
 const K_LINKSCORE: u8 = 0x82;
 const K_ERROR: u8 = 0x83;
 const K_PONG: u8 = 0x85;
+const K_STATSTEXT: u8 = 0x86;
 
 /// One decoded client→server frame.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -61,6 +66,7 @@ pub enum WireRequest {
     Drain,
     Shutdown,
     Ping { req_id: u64 },
+    Stats { req_id: u64 },
 }
 
 /// One decoded server→client frame.
@@ -70,6 +76,7 @@ pub enum WireResponse {
     Link { req_id: u64, score: f32 },
     Error { req_id: u64, code: ErrCode, msg: String },
     Pong { req_id: u64 },
+    Stats { req_id: u64, text: String },
 }
 
 /// Typed wire error codes (the `code` byte of an ERROR frame).
@@ -236,6 +243,10 @@ pub fn encode_request(req: &WireRequest) -> Vec<u8> {
             p.push(K_PING);
             put_u64(&mut p, *req_id);
         }
+        WireRequest::Stats { req_id } => {
+            p.push(K_STATS);
+            put_u64(&mut p, *req_id);
+        }
     }
     frame(p)
 }
@@ -270,6 +281,15 @@ pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
             p.push(K_PONG);
             put_u64(&mut p, *req_id);
         }
+        WireResponse::Stats { req_id, text } => {
+            // a scrape must fit one frame: truncate at the cap (a real
+            // exposition is a few KiB; the cap only guards abuse)
+            let text = &text.as_bytes()[..text.len().min(MAX_FRAME - 13)];
+            p.push(K_STATSTEXT);
+            put_u64(&mut p, *req_id);
+            put_u32(&mut p, text.len() as u32);
+            p.extend_from_slice(text);
+        }
     }
     frame(p)
 }
@@ -299,6 +319,7 @@ pub fn decode_request(payload: &[u8]) -> Result<WireRequest, ProtoError> {
         K_DRAIN => WireRequest::Drain,
         K_SHUTDOWN => WireRequest::Shutdown,
         K_PING => WireRequest::Ping { req_id: r.u64()? },
+        K_STATS => WireRequest::Stats { req_id: r.u64()? },
         other => return Err(ProtoError::BadKind(other)),
     };
     r.done()?;
@@ -332,6 +353,16 @@ pub fn decode_response(payload: &[u8]) -> Result<WireResponse, ProtoError> {
             WireResponse::Error { req_id, code, msg }
         }
         K_PONG => WireResponse::Pong { req_id: r.u64()? },
+        K_STATSTEXT => {
+            let req_id = r.u64()?;
+            let tlen = r.u32()? as usize;
+            if tlen > MAX_FRAME {
+                return Err(ProtoError::Oversize { len: tlen, max: MAX_FRAME });
+            }
+            let text =
+                String::from_utf8(r.take(tlen)?.to_vec()).map_err(|_| ProtoError::BadUtf8)?;
+            WireResponse::Stats { req_id, text }
+        }
         other => return Err(ProtoError::BadKind(other)),
     };
     r.done()?;
@@ -433,6 +464,7 @@ mod tests {
             WireRequest::Drain,
             WireRequest::Shutdown,
             WireRequest::Ping { req_id: 3 },
+            WireRequest::Stats { req_id: 8 },
         ];
         for req in reqs {
             let framed = encode_request(&req);
@@ -458,11 +490,34 @@ mod tests {
                 msg: "queue full".into(),
             },
             WireResponse::Pong { req_id: 4 },
+            WireResponse::Stats {
+                req_id: 5,
+                text: "serve_requests_total 10\nserve_queue_wait_seconds_count 10\n".into(),
+            },
+            WireResponse::Stats { req_id: 6, text: String::new() },
         ];
         for resp in resps {
             let framed = encode_response(&resp);
             assert_eq!(decode_response(strip(&framed)).unwrap(), resp);
         }
+    }
+
+    #[test]
+    fn stats_decode_guards_length_and_utf8() {
+        // declared text length beyond the frame cap is typed Oversize
+        let mut p = vec![0x86u8];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert_eq!(
+            decode_response(&p),
+            Err(ProtoError::Oversize { len: MAX_FRAME + 1, max: MAX_FRAME })
+        );
+        // non-UTF-8 exposition text is refused
+        let mut p = vec![0x86u8];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.extend_from_slice(&[0xff, 0xfe]);
+        assert_eq!(decode_response(&p), Err(ProtoError::BadUtf8));
     }
 
     #[test]

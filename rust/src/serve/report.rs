@@ -2,22 +2,41 @@
 //! percentiles + queries-per-second (plus the per-worker breakdown of a
 //! pooled run), rendered for the CLI and emitted by the bench harness
 //! into `BENCH_hot_paths.json`.
+//!
+//! Percentiles come from an [`obs::Histogram`] instead of sorting the
+//! full per-request latency vector: O(64) per quantile, mergeable across
+//! workers, and bounded to 25% relative error (the histogram's
+//! property-tested bucket bound) while `count`/`qps`/`mean`/`max` stay
+//! exact (the histogram tracks those fields exactly alongside).
 
+use crate::obs::{HistSnapshot, Histogram};
 use crate::serve::model::WorkerStats;
 
-/// One line per pool worker: batches, rows, and that worker's effective
-/// qps over the run's wall time (rows it produced / total wall — the
-/// capacity split, not the busy-time rate, so the lines sum to ~the run
-/// qps in rows).
-pub fn format_workers(stats: &[WorkerStats], wall_s: f64) -> String {
+/// One line per pool worker — batches, rows, busy time, and that worker's
+/// per-batch p50 from its own histogram — then one pooled line from the
+/// bucket-wise MERGE of every worker's histogram.  The merge is the
+/// pooled tally (no per-worker qps re-derivation): merged count/sum are
+/// exactly what one shared histogram would have recorded.
+pub fn format_workers(stats: &[WorkerStats]) -> String {
     let mut out = String::new();
+    let mut pooled = HistSnapshot::default();
     for (w, s) in stats.iter().enumerate() {
+        pooled.merge(&s.batch);
         out.push_str(&format!(
-            "  worker {w}: {} batches, {} rows, {:.0} rows/s (busy {:.3}s)\n",
+            "  worker {w}: {} batches, {} rows, batch p50 {:.3} ms (busy {:.3}s)\n",
             s.batches,
             s.rows,
-            s.rows as f64 / wall_s.max(1e-12),
+            s.batch.quantile_ns(0.5) as f64 / 1e6,
             s.busy_s
+        ));
+    }
+    if stats.len() > 1 {
+        out.push_str(&format!(
+            "  pool: {} workers, {} batches merged, batch p50 {:.3} ms / p99 {:.3} ms\n",
+            stats.len(),
+            pooled.count,
+            pooled.quantile_ns(0.5) as f64 / 1e6,
+            pooled.quantile_ns(0.99) as f64 / 1e6,
         ));
     }
     out
@@ -30,36 +49,38 @@ pub struct LatencyReport {
     pub wall_s: f64,
     pub qps: f64,
     pub p50_ms: f64,
+    pub p90_ms: f64,
     pub p99_ms: f64,
     pub mean_ms: f64,
     pub max_ms: f64,
 }
 
-/// Nearest-rank percentile over a sorted slice (q in [0, 1]).
-pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
-    sorted[idx]
-}
-
 impl LatencyReport {
-    /// Build from raw per-request latencies (seconds) + run wall time.
-    pub fn from_latencies(latencies_s: &[f64], wall_s: f64) -> LatencyReport {
-        let mut sorted: Vec<f64> = latencies_s.to_vec();
-        sorted.sort_by(f64::total_cmp);
-        let count = sorted.len();
-        let mean = if count == 0 { 0.0 } else { sorted.iter().sum::<f64>() / count as f64 };
+    /// Build from a histogram snapshot + run wall time.  `count`, `qps`,
+    /// `mean` and `max` are exact; the percentiles carry the histogram's
+    /// 25% bucket bound.
+    pub fn from_snapshot(s: &HistSnapshot, wall_s: f64) -> LatencyReport {
         LatencyReport {
-            count,
+            count: s.count as usize,
             wall_s,
-            qps: count as f64 / wall_s.max(1e-12),
-            p50_ms: 1e3 * percentile(&sorted, 0.50),
-            p99_ms: 1e3 * percentile(&sorted, 0.99),
-            mean_ms: 1e3 * mean,
-            max_ms: 1e3 * sorted.last().copied().unwrap_or(0.0),
+            qps: s.count as f64 / wall_s.max(1e-12),
+            p50_ms: s.quantile_ns(0.50) as f64 / 1e6,
+            p90_ms: s.quantile_ns(0.90) as f64 / 1e6,
+            p99_ms: s.quantile_ns(0.99) as f64 / 1e6,
+            mean_ms: s.mean_ns() / 1e6,
+            max_ms: s.max_ns as f64 / 1e6,
         }
+    }
+
+    /// Build from raw per-request latencies (seconds) + run wall time —
+    /// records into a histogram and summarizes that, instead of sorting
+    /// the full vector.
+    pub fn from_latencies(latencies_s: &[f64], wall_s: f64) -> LatencyReport {
+        let h = Histogram::new();
+        for &l in latencies_s {
+            h.record((l.max(0.0) * 1e9) as u64);
+        }
+        LatencyReport::from_snapshot(&h.snapshot(), wall_s)
     }
 }
 
@@ -67,10 +88,10 @@ impl std::fmt::Display for LatencyReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} requests in {:.3}s — {:.0} qps; latency p50 {:.3} ms, p99 {:.3} ms, \
-             mean {:.3} ms, max {:.3} ms",
-            self.count, self.wall_s, self.qps, self.p50_ms, self.p99_ms, self.mean_ms,
-            self.max_ms
+            "{} requests in {:.3}s — {:.0} qps; latency p50 {:.3} ms, p90 {:.3} ms, \
+             p99 {:.3} ms, mean {:.3} ms, max {:.3} ms",
+            self.count, self.wall_s, self.qps, self.p50_ms, self.p90_ms, self.p99_ms,
+            self.mean_ms, self.max_ms
         )
     }
 }
@@ -80,18 +101,24 @@ mod tests {
     use super::*;
 
     #[test]
-    fn percentiles_are_nearest_rank() {
+    fn percentiles_are_within_the_histogram_bound() {
+        // 1..=100 ms: nearest-rank p50 = 50 ms, p90 = 90 ms, p99 = 99 ms;
+        // the histogram estimate must land within its 25% bucket bound
+        // while count/qps/mean/max stay exact
         let lat: Vec<f64> = (1..=100).map(|x| x as f64 / 1000.0).collect();
         let r = LatencyReport::from_latencies(&lat, 1.0);
         assert_eq!(r.count, 100);
         assert!((r.qps - 100.0).abs() < 1e-9);
-        assert!((r.p50_ms - 50.0).abs() < 1e-9, "{}", r.p50_ms);
-        assert!((r.p99_ms - 99.0).abs() < 1e-9, "{}", r.p99_ms);
-        assert!((r.max_ms - 100.0).abs() < 1e-9);
+        assert!((r.p50_ms - 50.0).abs() <= 0.25 * 50.0, "{}", r.p50_ms);
+        assert!((r.p90_ms - 90.0).abs() <= 0.25 * 90.0, "{}", r.p90_ms);
+        assert!((r.p99_ms - 99.0).abs() <= 0.25 * 99.0, "{}", r.p99_ms);
+        assert!((r.mean_ms - 50.5).abs() < 1e-6, "{}", r.mean_ms);
+        assert!((r.max_ms - 100.0).abs() < 1e-6);
+        assert!(r.p50_ms <= r.p90_ms && r.p90_ms <= r.p99_ms, "quantiles are monotone");
         // singleton and empty inputs stay finite
         let one = LatencyReport::from_latencies(&[0.002], 0.004);
-        assert!((one.p50_ms - 2.0).abs() < 1e-9);
-        assert!((one.p99_ms - 2.0).abs() < 1e-9);
+        assert!((one.p50_ms - 2.0).abs() <= 0.25 * 2.0);
+        assert!((one.p99_ms - 2.0).abs() <= 0.25 * 2.0);
         let zero = LatencyReport::from_latencies(&[], 1.0);
         assert_eq!(zero.count, 0);
         assert_eq!(zero.p50_ms, 0.0);

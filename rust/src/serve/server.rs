@@ -269,6 +269,15 @@ fn handle_event(
             WireRequest::Ping { req_id } => {
                 send_to(conns, conn, &WireResponse::Pong { req_id });
             }
+            // answered inline like PING (control frame: not counted in
+            // `ServerReport::requests`): the scrape text comes from the
+            // engine's registry — deterministic key order, empty when the
+            // engine was built without `.metrics(...)`
+            WireRequest::Stats { req_id } => {
+                let text =
+                    engine.registry().map(|r| r.render_prometheus()).unwrap_or_default();
+                send_to(conns, conn, &WireResponse::Stats { req_id, text });
+            }
             WireRequest::Drain => *drain_now = true,
             WireRequest::Shutdown => *stopping = true,
             WireRequest::Node { req_id, model, node } => submit_query(
@@ -332,6 +341,12 @@ pub fn run_probed(
         .iter()
         .map(|m| (m.to_string(), engine.model(m).map(|sm| sm.link_task()).unwrap_or(false)))
         .collect();
+    // reply-write stage histogram (encode + route to the writer queue),
+    // resolved once; disabled (no clock reads) without a registry
+    let reply_write = engine
+        .registry()
+        .map(|r| r.hist("serve_reply_write"))
+        .unwrap_or_default();
     let stop = AtomicBool::new(false);
     // one duplicate handle per accepted socket; shutdown(Read) on these
     // is what unparks the blocking readers (entries for already-closed
@@ -457,6 +472,7 @@ pub fn run_probed(
             for sv in flushed {
                 if let Some(p) = inflight.remove(&sv.id) {
                     report.served += 1;
+                    let stage = reply_write.stage();
                     let resp = match sv.answer {
                         Answer::Scores(row) => WireResponse::Scores {
                             req_id: p.req_id,
@@ -468,6 +484,7 @@ pub fn run_probed(
                         }
                     };
                     send_to(&conns, p.conn, &resp);
+                    stage.stop();
                 }
             }
             if stopping && engine.pending() == 0 && inflight.is_empty() {

@@ -1,0 +1,210 @@
+//! Observability contracts (tier-1 for the metrics layer):
+//!
+//! 1. **Quantile error bound** — for in-range samples (≥ 256 ns, below the
+//!    saturation bucket) the histogram's nearest-rank bucket-midpoint
+//!    quantile is within 25% relative error of the exact nearest-rank
+//!    value from a full sort, at p50/p90/p99, across randomized sample
+//!    sets (property test).
+//! 2. **Merge = pooled** — folding per-worker histograms together
+//!    (`Histogram::merge_into` and `HistSnapshot::merge` both) produces
+//!    exactly the buckets/count/sum/max one shared histogram would have
+//!    recorded (property test).
+//! 3. **Saturation** — out-of-range samples land in the last bucket with
+//!    exact counts and a finite quantile.
+//! 4. **Metrics never perturb the data path** — the same request stream
+//!    through the same frozen model answers bit-identically with a live
+//!    registry attached vs. metrics-free, on every backbone, and the
+//!    registry does observe the traffic (the scrape carries the serve
+//!    families).  Honors the `VQGNN_MODEL` CI matrix filter.
+
+mod common;
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use common::{builtin, model_enabled};
+use vq_gnn::coordinator::vq_trainer::VqTrainer;
+use vq_gnn::datasets::Dataset;
+use vq_gnn::obs::{HistSnapshot, Histogram, Registry, BUCKETS};
+use vq_gnn::runtime::Runtime;
+use vq_gnn::sampler::NodeStrategy;
+use vq_gnn::serve::{Answer, Request, Served, ServeEngine, ServingModel};
+use vq_gnn::util::prop::check;
+use vq_gnn::util::rng::Rng;
+
+#[test]
+fn quantile_estimates_stay_within_the_bucket_bound() {
+    check("histogram_quantile_bound", 60, |rng, _| {
+        let n = 1 + rng.below(400);
+        let mut vals: Vec<u64> = (0..n)
+            .map(|_| {
+                // log-uniform octave in [2^8, 2^36): in-range by a wide
+                // margin (saturation starts near 2^39), above bucket 0
+                let e = (8 + rng.below(28)) as u32;
+                (1u64 << e) + rng.below(1usize << e) as u64
+            })
+            .collect();
+        let h = Histogram::new();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        let s = h.snapshot();
+        for q in [0.5, 0.9, 0.99] {
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let exact = vals[rank - 1] as f64;
+            let est = s.quantile_ns(q) as f64;
+            if (est - exact).abs() > 0.25 * exact {
+                return Err(format!("q={q}: estimate {est} vs exact {exact} (n={n}, >25% off)"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merging_worker_histograms_equals_pooled_recording() {
+    check("histogram_merge_pooled", 40, |rng, _| {
+        let workers = 1 + rng.below(4);
+        let pooled = Histogram::new();
+        let merged = Histogram::new();
+        let mut snap = HistSnapshot::default();
+        for _ in 0..workers {
+            let part = Histogram::new();
+            for _ in 0..rng.below(200) {
+                let v = rng.below(1usize << 40) as u64; // incl. saturation range
+                part.record(v);
+                pooled.record(v);
+            }
+            part.merge_into(&merged);
+            snap.merge(&part.snapshot());
+        }
+        let want = pooled.snapshot();
+        for got in [merged.snapshot(), snap] {
+            if got.buckets != want.buckets {
+                return Err("bucket counts differ from pooled recording".into());
+            }
+            if (got.count, got.sum_ns, got.max_ns) != (want.count, want.sum_ns, want.max_ns) {
+                return Err(format!(
+                    "exact fields differ: ({}, {}, {}) vs ({}, {}, {})",
+                    got.count, got.sum_ns, got.max_ns, want.count, want.sum_ns, want.max_ns
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn saturation_bucket_captures_out_of_range_samples() {
+    let h = Histogram::new();
+    h.record(u64::MAX);
+    h.record(1u64 << 62);
+    let s = h.snapshot();
+    assert_eq!(s.buckets[BUCKETS - 1], 2, "both land in the saturation bucket");
+    assert_eq!(s.count, 2);
+    assert_eq!(s.max_ns, u64::MAX, "max is exact even when bucketed");
+    let q = s.quantile_ns(0.99);
+    assert!(q > 0 && q < u64::MAX, "saturated quantile stays finite: {q}");
+}
+
+/// Mixed node/link stream with duplicates — same shape the concurrency
+/// tests pin, small enough to keep all four backbones fast.
+fn request_stream(n: usize, count: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|i| {
+            if i % 5 == 3 {
+                Request::Link(rng.below(n) as u32, rng.below(n) as u32)
+            } else {
+                Request::Node(rng.below(n) as u32)
+            }
+        })
+        .collect()
+}
+
+fn drain_sorted(eng: &mut ServeEngine, model: &str, reqs: &[Request]) -> Vec<Served> {
+    for r in reqs {
+        eng.submit(model, *r).unwrap();
+    }
+    let mut served = eng.drain().unwrap();
+    served.sort_by_key(|s| s.id);
+    served
+}
+
+#[test]
+fn served_answers_are_byte_identical_with_metrics_on() {
+    for model in ["gcn", "sage", "gat", "txf"] {
+        if !model_enabled(model) {
+            continue;
+        }
+        let man = builtin();
+        let mut rt = Runtime::native();
+        let ds = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
+        let mut tr =
+            VqTrainer::new(&mut rt, &man, ds.clone(), model, "", NodeStrategy::Nodes, 7).unwrap();
+        for _ in 0..2 {
+            tr.train_step(&mut rt).unwrap();
+        }
+        let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+        let reqs = request_stream(ds.n(), 150, 0x0B5E);
+
+        // metrics-free reference pass
+        let mut eng = ServeEngine::builder().model(model, sm).build(rt).unwrap();
+        assert!(eng.registry().is_none());
+        let base = drain_sorted(&mut eng, model, &reqs);
+
+        // the SAME engine parts rebuilt behind a live registry
+        let reg = Arc::new(Registry::new());
+        let (rt, models) = eng.into_parts();
+        let mut builder = ServeEngine::builder().metrics(reg.clone());
+        for (name, m) in models {
+            builder = builder.model(name, m);
+        }
+        let mut eng = builder.build(rt).unwrap();
+        let inst = drain_sorted(&mut eng, model, &reqs);
+
+        assert_eq!(base.len(), inst.len(), "{model}: served counts differ");
+        for (a, b) in base.iter().zip(&inst) {
+            assert_eq!(a.id, b.id, "{model}: answer order differs");
+            match (&a.answer, &b.answer) {
+                (Answer::Scores(x), Answer::Scores(y)) => {
+                    assert!(
+                        x.len() == y.len()
+                            && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits()),
+                        "{model}: req {} scores differ with metrics on",
+                        a.id
+                    );
+                }
+                (Answer::Link(x), Answer::Link(y)) => {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{model}: req {} link score differs with metrics on",
+                        a.id
+                    );
+                }
+                _ => panic!("{model}: req {} answer kind differs", a.id),
+            }
+        }
+
+        // ... and the registry did observe the traffic: every documented
+        // serve family is present, deterministically ordered
+        let text = reg.render_prometheus();
+        assert_eq!(text, reg.render_prometheus(), "{model}: scrape is byte-stable");
+        for family in [
+            "serve_requests_total",
+            "serve_served_total",
+            "serve_queue_wait_seconds",
+            "serve_request_latency_seconds_count",
+            "serve_batch_assembly_seconds",
+            "serve_session_exec_seconds",
+            "vq_codebook_perplexity_l0",
+            "vq_dead_codes_l0",
+            "serve_resident_admitted",
+            "serve_cache_bytes",
+        ] {
+            assert!(text.contains(family), "{model}: scrape missing {family}:\n{text}");
+        }
+    }
+}
