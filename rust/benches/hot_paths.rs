@@ -242,6 +242,27 @@ fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
         report.insert(format!("serve_concurrent_qps_t{threads}"), num(qps));
     }
 
+    // single-worker drain of the same burst: every flush hands the worker
+    // a multi-batch bucket, so this measures the prep(i+1)/exec(i) overlap
+    // inside `run_batches_pipelined` (answers stay byte-identical to the
+    // serial loop — tests/serve_concurrent.rs pins that)
+    eng.set_threads(1);
+    {
+        let mut rb = Rng::new(burst_seed);
+        let t0 = std::time::Instant::now();
+        for _ in 0..n_req {
+            eng.submit("gcn", Request::Node(rb.below(tiny.n()) as u32)).unwrap();
+        }
+        let served = eng.drain().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let qps = served.len() as f64 / wall.max(1e-12);
+        println!(
+            "serve/pipelined tiny gcn x1: {qps:.0} qps ({:.2}x vs first burst)",
+            wall1 / wall.max(1e-12)
+        );
+        report.insert("serve_pipelined_qps".into(), num(qps));
+    }
+
     // ---- open-loop saturation: bounded queue + deadline flushing --------
     // Rebuild the SAME frozen model behind a load-shedding configuration
     // (no re-freeze — into_parts hands the parts back).
@@ -395,6 +416,10 @@ fn main() {
     report.insert("bench".into(), Json::Str("hot_paths".into()));
     report.insert("mode".into(), Json::Str(if smoke { "smoke" } else { "full" }.into()));
     report.insert("threads".into(), num(vq_gnn::util::par::max_threads() as f64));
+    // which kernel dispatch this run used ("avx2" / "neon" / "scalar") —
+    // a string, so bench_guard ignores it; CI greps it out of the artifact
+    // to catch a runner silently falling back to scalar
+    report.insert("simd_dispatch".into(), Json::Str(vq_gnn::util::simd::name().into()));
 
     bench_serve(smoke, &mut report);
     if only_serve {
@@ -445,6 +470,37 @@ fn main() {
     a.insert("vectors_per_sec".into(), num(n as f64 / secs));
     a.insert("codewords_per_sec".into(), num((n * k) as f64 / secs));
     report.insert("assign".into(), Json::Obj(a));
+
+    // --- SIMD exact kernel + two-stage FINDNEAREST prune, same shapes -----
+    // `assign_simd_ms` times the dispatched exact kernel alone (whitening
+    // and codeword norms hoisted out, as the trainer's hot loop sees it);
+    // `findnearest_prune_ms` times the i8 first pass + f32 rescore, then
+    // asserts bit-exact agreement with the exact kernel — the prune's
+    // correctness contract, not a tolerance.
+    {
+        use vq_gnn::vq::kernels;
+        let inv = kernels::inv_std(&br.var);
+        let vw = kernels::whiten(&v, fp, &br.mean, &inv);
+        let mut cnorm = vec![0.0f32; k];
+        kernels::codeword_norms_into(&br.cww, k, fp, fp, &mut cnorm);
+        let mut out_b = vec![0i32; n];
+        let r_simd = bench("vq_assign/simd    k=256 fp=128 n=10k", t(3.0, 0.4), || {
+            kernels::assign_blocked_with_norms(&vw, fp, fp, &br.cww, k, fp, &cnorm, &mut out_b);
+            std::hint::black_box(&out_b);
+        });
+        report.insert("assign_simd_ms".into(), num(r_simd.mean_ns / 1e6));
+
+        let qcb = kernels::QuantCodebook::build(&br.cww, k, fp, fp);
+        let mut out_p = vec![0i32; n];
+        let r_prune = bench("vq_assign/pruned  k=256 fp=128 n=10k m=16", t(3.0, 0.4), || {
+            kernels::assign_pruned(
+                &vw, fp, fp, &br.cww, fp, &qcb, kernels::PRUNE_TOP_M, &mut out_p,
+            );
+            std::hint::black_box(&out_p);
+        });
+        report.insert("findnearest_prune_ms".into(), num(r_prune.mean_ns / 1e6));
+        assert_eq!(out_p, out_b, "pruned assignment diverged from the exact kernel");
+    }
 
     // --- VQ EMA update, same shapes ---------------------------------------
     let assign = br.assign_host(&v);

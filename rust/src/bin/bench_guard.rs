@@ -35,6 +35,11 @@ use vq_gnn::util::json::Json;
 
 const RATIO: f64 = 1.5;
 
+/// Flatten nested objects into dotted numeric keys.  Only `Json::Num`
+/// leaves are kept: string fields (`bench`, `mode`, `note`,
+/// `simd_dispatch`) are annotations by design — they document the run
+/// (or, in the baseline, the expectations) without entering the ratio or
+/// missing-key rules.
 fn collect(prefix: &str, j: &Json, out: &mut BTreeMap<String, f64>) {
     match j {
         Json::Obj(m) => {

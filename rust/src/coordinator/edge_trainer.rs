@@ -379,6 +379,12 @@ impl EdgeTrainer {
         };
         let train_io = Session::for_artifact(&train_art.spec)?;
         let infer_io = Session::for_artifact(&infer_art.spec)?;
+        // link tasks draw negative-pair samples from the trainer rng on
+        // BOTH the train and evaluate paths; the overlapped prefetch
+        // captures `&mut self.rng`, so interleaving evaluate() with a
+        // pipelined prefetch would reorder rng draws and fork the
+        // trajectory.  Mirror VqTrainer: pipelining is node-task only.
+        let pipeline = ds.cfg.task != "link" && pipeline_env_enabled();
         Ok(EdgeTrainer {
             kind,
             train_art,
@@ -394,7 +400,7 @@ impl EdgeTrainer {
             train_io,
             infer_io,
             pairs: PairBuf::default(),
-            pipeline: pipeline_env_enabled(),
+            pipeline,
             prefetched: None,
             stats: RunStats::default(),
             metrics: TrainMetrics::default(),
@@ -410,9 +416,14 @@ impl EdgeTrainer {
 
     /// Toggle the overlapped subgraph-sampling stage (parity tests /
     /// allocation benches; the overlapped and serial schedules compute
-    /// identical trajectories).
+    /// identical trajectories).  Always off for link tasks — see `new`.
     pub fn set_pipelined(&mut self, on: bool) {
-        self.pipeline = on;
+        self.pipeline = on && self.ds.cfg.task != "link";
+    }
+
+    /// Whether the overlapped prep stage is active.
+    pub fn pipelined(&self) -> bool {
+        self.pipeline
     }
 
     fn conv(&self) -> Conv {

@@ -360,6 +360,11 @@ impl VqTrainer {
         self.pipeline = on && self.ds.cfg.task != "link";
     }
 
+    /// Whether the overlapped prep stage is active.
+    pub fn pipelined(&self) -> bool {
+        self.pipeline
+    }
+
     fn conv_opt(&self) -> Option<Conv> {
         match self.model_name.as_str() {
             "gcn" => Some(Conv::GcnSym),

@@ -526,7 +526,7 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
 /// stdout (a curl-free scrape — `--requests` becomes optional).
 fn client_cmd(flags: &HashMap<String, String>) -> Result<()> {
     use std::io::Write;
-    use vq_gnn::serve::proto::{self, ErrCode, WireRequest, WireResponse};
+    use vq_gnn::serve::proto::{self, WireRequest, WireResponse};
     use vq_gnn::serve::{self, Request};
     use vq_gnn::util::bench::Pacer;
 
@@ -622,6 +622,50 @@ fn client_cmd(flags: &HashMap<String, String>) -> Result<()> {
 
     let mut resps = reader.join().expect("client reader thread")?;
     let wall = t0.elapsed().as_secs_f64();
+    let tally = render_client_responses(&mut resps);
+    for line in &tally.err_lines {
+        eprintln!("{line}");
+    }
+    // scrape text goes straight to stdout (greppable, pipeable); the STATS
+    // frame's req_id sorts after every query, so it renders last
+    print!("{}", tally.stats);
+    if let Some(out_path) = flags.get("out") {
+        std::fs::write(out_path, tally.out)?;
+        eprintln!("wrote {out_path}");
+    }
+    if !do_stats || !reqs.is_empty() {
+        println!(
+            "client {addr}: {} sent, {} served, shed {}, {} error(s), {wall:.1}s",
+            reqs.len(),
+            tally.served,
+            tally.shed,
+            tally.errors,
+        );
+    }
+    Ok(())
+}
+
+/// What one client run renders from its response frames, split by sink:
+/// `out` is the answer file bytes (identical to `serve --requests --out`),
+/// `stats` the Prometheus exposition for stdout, `err_lines` the typed
+/// error reports for stderr, and the counters feed the summary line.
+#[derive(Default)]
+struct ClientTally {
+    out: String,
+    stats: String,
+    err_lines: Vec<String>,
+    served: u64,
+    shed: u64,
+    errors: u64,
+}
+
+/// Sort responses into req_id order and render/tally them.  Pure so the
+/// accounting rules — shed vs error split, the STATS frame sorting after
+/// every answer, Pong frames ignored — stay pinned by unit tests.
+fn render_client_responses(
+    resps: &mut [vq_gnn::serve::proto::WireResponse],
+) -> ClientTally {
+    use vq_gnn::serve::proto::{ErrCode, WireResponse};
     resps.sort_by_key(|r| match r {
         WireResponse::Scores { req_id, .. }
         | WireResponse::Link { req_id, .. }
@@ -630,23 +674,21 @@ fn client_cmd(flags: &HashMap<String, String>) -> Result<()> {
         | WireResponse::Stats { req_id, .. } => *req_id,
     });
 
-    let mut served = 0u64;
-    let mut shed = 0u64;
-    let mut errors = 0u64;
-    let mut out = String::with_capacity(resps.len() * 24);
-    for resp in &resps {
+    let mut tally = ClientTally::default();
+    tally.out.reserve(resps.len() * 24);
+    for resp in resps.iter() {
         match resp {
             WireResponse::Scores { req_id, embedding, row } => {
-                served += 1;
-                out.push_str(&answer_line(
+                tally.served += 1;
+                tally.out.push_str(&answer_line(
                     *req_id as usize,
                     &vq_gnn::serve::Answer::Scores(row.clone()),
                     *embedding,
                 ));
             }
             WireResponse::Link { req_id, score } => {
-                served += 1;
-                out.push_str(&answer_line(
+                tally.served += 1;
+                tally.out.push_str(&answer_line(
                     *req_id as usize,
                     &vq_gnn::serve::Answer::Link(*score),
                     false,
@@ -654,27 +696,66 @@ fn client_cmd(flags: &HashMap<String, String>) -> Result<()> {
             }
             WireResponse::Error { req_id, code, msg } => {
                 if *code == ErrCode::Shed {
-                    shed += 1;
+                    tally.shed += 1;
                 } else {
-                    errors += 1;
+                    tally.errors += 1;
                 }
-                eprintln!("req {req_id}: {} — {msg}", code.name());
+                tally.err_lines.push(format!("req {req_id}: {} — {msg}", code.name()));
             }
             WireResponse::Pong { .. } => {}
-            // scrape text goes straight to stdout (greppable, pipeable)
-            WireResponse::Stats { text, .. } => print!("{text}"),
+            WireResponse::Stats { text, .. } => tally.stats.push_str(text),
         }
     }
-    if let Some(out_path) = flags.get("out") {
-        std::fs::write(out_path, out)?;
-        eprintln!("wrote {out_path}");
+    tally
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use vq_gnn::serve::proto::{ErrCode, WireResponse};
+
+    #[test]
+    fn parse_flags_handles_boolean_and_valued_flags() {
+        let args: Vec<String> = ["client", "--addr", "h:1", "--stats", "--rate", "5"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let (pos, flags) = parse_flags(&args);
+        assert_eq!(pos, vec!["client".to_string()]);
+        assert_eq!(flags.get("addr").map(String::as_str), Some("h:1"));
+        // a flag followed by another flag (or nothing) is boolean "true"
+        assert_eq!(flags.get("stats").map(String::as_str), Some("true"));
+        assert_eq!(flags.get("rate").map(String::as_str), Some("5"));
+        // trailing boolean flag
+        let (_, f2) = parse_flags(&["--drain".to_string()]);
+        assert_eq!(f2.get("drain").map(String::as_str), Some("true"));
     }
-    if !do_stats || !reqs.is_empty() {
-        println!(
-            "client {addr}: {} sent, {served} served, shed {shed}, {errors} error(s), \
-             {wall:.1}s",
-            reqs.len(),
-        );
+
+    #[test]
+    fn stats_frame_renders_after_answers_and_counters_split() {
+        // arrival order scrambled: the STATS frame (req_id = n_queries)
+        // arrives first, answers out of order, one shed, one hard error
+        let mut resps = vec![
+            WireResponse::Stats { req_id: 4, text: "vqgnn_up 1\n".into() },
+            WireResponse::Link { req_id: 2, score: 0.5 },
+            WireResponse::Error { req_id: 3, code: ErrCode::Shed, msg: "full".into() },
+            WireResponse::Error { req_id: 1, code: ErrCode::BadRequest, msg: "bad".into() },
+            WireResponse::Scores { req_id: 0, embedding: false, row: vec![1.0, 2.0] },
+            WireResponse::Pong { req_id: 0 },
+        ];
+        let tally = render_client_responses(&mut resps);
+        assert_eq!(tally.served, 2);
+        assert_eq!(tally.shed, 1);
+        assert_eq!(tally.errors, 1);
+        assert_eq!(tally.stats, "vqgnn_up 1\n");
+        // answer lines in req_id order: node answer (id 0) before link (id 2)
+        let lines: Vec<&str> = tally.out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("req 0 class"), "node answer first: {:?}", lines[0]);
+        assert!(lines[1].starts_with("req 2 link_score"), "link answer second: {:?}", lines[1]);
+        // stderr reports in req_id order, typed code names preserved
+        assert_eq!(tally.err_lines.len(), 2);
+        assert!(tally.err_lines[0].starts_with("req 1: BAD_REQUEST"));
+        assert!(tally.err_lines[1].starts_with("req 3: SHED"));
     }
-    Ok(())
 }

@@ -36,6 +36,7 @@ use anyhow::Result;
 
 use crate::runtime::ops;
 use crate::runtime::InputSlots;
+use crate::util::simd;
 use crate::util::tensor::Tensor;
 
 use super::arena::StepArena;
@@ -311,28 +312,33 @@ pub(super) fn run_vq_attn(
                 }
             }
             // project e-gradients back: batch side and codeword side
+            // (row-wise a·x + b·y and a·x — the SIMD forms are mul/mul/add,
+            // bit-identical to the scalar loops they replaced)
             for i in 0..b {
-                for t in 0..hh {
-                    s_dproj[i * hh + t] = s_desrc[i] * asr[t] + s_dedst[i] * ads[t];
-                }
+                simd::scale2_into(
+                    &mut s_dproj[i * hh..(i + 1) * hh],
+                    s_desrc[i],
+                    asr,
+                    s_dedst[i],
+                    ads,
+                );
             }
             for v in 0..k {
-                for t in 0..hh {
-                    s_dcproj[v * hh + t] = s_decw[v] * asr[t];
-                }
+                simd::scale_into(&mut s_dcproj[v * hh..(v + 1) * hh], s_decw[v], asr);
             }
-            for t in 0..hh {
-                let mut acc_src = 0.0f32;
-                let mut acc_dst = 0.0f32;
-                for i in 0..b {
-                    acc_src += s_desrc[i] * hb.proj[i * hh + t];
-                    acc_dst += s_dedst[i] * hb.proj[i * hh + t];
-                }
-                for v in 0..k {
-                    acc_src += s_decw[v] * hb.cproj[v * hh + t];
-                }
-                s_das[t] = acc_src;
-                s_dad[t] = acc_dst;
+            // ∇a_src / ∇a_dst: the old per-column accumulation, restructured
+            // row-major so each row is one axpy — per element t the adds
+            // still land in the original order (rows i ascending, then
+            // codewords v ascending).
+            s_das[..hh].fill(0.0);
+            s_dad[..hh].fill(0.0);
+            for i in 0..b {
+                let prow = &hb.proj[i * hh..(i + 1) * hh];
+                simd::axpy(&mut s_das[..hh], s_desrc[i], prow);
+                simd::axpy(&mut s_dad[..hh], s_dedst[i], prow);
+            }
+            for v in 0..k {
+                simd::axpy(&mut s_das[..hh], s_decw[v], &hb.cproj[v * hh..(v + 1) * hh]);
             }
             ops::add_into(
                 &mut outputs[sl.g_a_src.expect("plan: g_a_src")].f[s * hh..(s + 1) * hh],

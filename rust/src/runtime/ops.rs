@@ -16,7 +16,7 @@
 
 #![allow(clippy::too_many_arguments)]
 
-use crate::util::par;
+use crate::util::{par, simd};
 
 /// Below this many multiply-accumulates a matmul runs serially (thread
 /// dispatch costs more than the arithmetic).
@@ -38,12 +38,9 @@ pub fn matmul_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut
             let arow = &a[r * k..(r + 1) * k];
             for (kk, &av) in arow.iter().enumerate() {
                 if av == 0.0 {
-                    continue;
+                    continue; // semantic skip (sparse rows), kept pre-SIMD
                 }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
+                simd::axpy(orow, av, &b[kk * n..(kk + 1) * n]);
             }
         }
     };
@@ -75,10 +72,7 @@ pub fn matmul_at_b_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out:
             if av == 0.0 {
                 continue;
             }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
+            simd::axpy(&mut out[i * n..(i + 1) * n], av, brow);
         }
     }
 }
@@ -100,12 +94,7 @@ pub fn matmul_a_bt_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out:
         for (rr, orow) in chunk.chunks_mut(n).enumerate() {
             let arow = &a[(r0 + rr) * k..(r0 + rr + 1) * k];
             for (j, o) in orow.iter_mut().enumerate() {
-                let brow = &b[j * k..(j + 1) * k];
-                let mut dot = 0.0f32;
-                for d in 0..k {
-                    dot += arow[d] * brow[d];
-                }
-                *o = dot;
+                *o = simd::dot(arow, &b[j * k..(j + 1) * k]);
             }
         }
     };
@@ -148,12 +137,9 @@ pub fn unsketch_into(
                 let sk = &c_out[(j * b + i) * k..(j * b + i + 1) * k];
                 for (v, &coef) in sk.iter().enumerate() {
                     if coef == 0.0 {
-                        continue;
+                        continue; // sketch sparsity — most buckets are empty
                     }
-                    let cwrow = &cw[(j * k + v) * fp..(j * k + v + 1) * fp];
-                    for d in 0..fp {
-                        ocols[d] += coef * cwrow[d];
-                    }
+                    simd::axpy(ocols, coef, &cw[(j * k + v) * fp..(j * k + v + 1) * fp]);
                 }
             }
         }
@@ -177,9 +163,8 @@ pub fn unsketch(c_out: &[f32], n_br: usize, b: usize, k: usize, cw: &[f32], fp: 
 /// pre-arena interpreter exactly).
 pub fn add_into(dst: &mut [f32], src: &[f32]) {
     debug_assert_eq!(dst.len(), src.len());
-    for (a, x) in dst.iter_mut().zip(src) {
-        *a += x;
-    }
+    // Element-wise — the SIMD path is bit-identical to the scalar loop.
+    simd::add_assign(dst, src);
 }
 
 /// Per-row dot with a fixed vector: `(rows, w) · (w,) -> (rows,)` — the
@@ -188,7 +173,7 @@ pub fn dot_rows_into(a: &[f32], w: usize, v: &[f32], out: &mut [f32]) {
     debug_assert_eq!(v.len(), w);
     debug_assert_eq!(a.len(), out.len() * w);
     for (o, row) in out.iter_mut().zip(a.chunks(w)) {
-        *o = row.iter().zip(v).map(|(x, y)| x * y).sum();
+        *o = simd::dot(row, v);
     }
 }
 

@@ -343,17 +343,15 @@ impl MicroBatcher {
             let inner = (par::max_threads() + workers - 1) / workers;
             let results = par::scope_map(&mut states, |_w, state| {
                 par::with_thread_budget(inner, || {
-                    let mut done: Vec<(usize, Instant)> =
-                        Vec::with_capacity(state.1.len());
-                    for (bi, nodes, out) in state.1.drain(..) {
-                        core.run_batch_timed(&mut *state.0, nodes, out, &metrics.stages)?;
-                        // completion stamp per micro-batch: a request's
-                        // latency ends when the batch holding its LAST slot
-                        // returns, not when the whole flush does — otherwise
-                        // p50/p99 collapse to the burst wall time
-                        done.push((bi, Instant::now()));
-                    }
-                    Ok::<_, anyhow::Error>(done)
+                    // prep/exec overlap inside each worker: batch i+1's
+                    // slot rewrite + gather runs while batch i executes
+                    // (`join2` spawns one thread beyond the kernel budget,
+                    // same accepted pattern as the trainers).  Answers and
+                    // per-batch completion stamps are byte-identical to the
+                    // serial drain — a request's latency still ends when
+                    // the batch holding its LAST slot finishes executing.
+                    let batches = std::mem::take(&mut state.1);
+                    core.run_batches_pipelined(&mut *state.0, batches, &metrics.stages)
                 })
             });
             for r in results {

@@ -41,6 +41,7 @@ use crate::runtime::manifest::Manifest;
 use crate::runtime::{Artifact, ExecSession, InputSlots, Runtime};
 use crate::serve::admit::AdmissionQueue;
 use crate::serve::cache::EmbeddingCache;
+use crate::util::par;
 use crate::util::tensor::{self, DType, Tensor};
 use crate::vq::sketch::SketchScratch;
 
@@ -75,6 +76,11 @@ pub struct ServeCore {
 /// per-worker spawn cost).
 pub struct ServeSession {
     pub(crate) dyn_inputs: Vec<Tensor>,
+    /// Second dynamic-slot set for the pipelined fan-out: batch i+1's
+    /// slots are assembled here while batch i executes out of
+    /// `dyn_inputs`, then the two are swapped.  Same shapes, same
+    /// builders, so a pipelined fill is bit-identical to a serial one.
+    pub(crate) spare_inputs: Vec<Tensor>,
     pub(crate) outputs: Vec<Tensor>,
     pub(crate) scratch: SketchScratch,
     pub(crate) exec: ExecSession,
@@ -243,10 +249,9 @@ impl ServeCore {
     /// stay on the core's `Arc`-shared template and are read through an
     /// [`InputSlots::Overlay`] view at execute time, so widening the pool
     /// never re-copies frozen weights.
-    fn new_session(&self) -> ServeSession {
+    fn new_dyn_inputs(&self) -> Vec<Tensor> {
         let spec = &self.art.spec;
-        let dyn_inputs = self
-            .dyn_spec_idx
+        self.dyn_spec_idx
             .iter()
             .map(|&i| {
                 let ts = &spec.inputs[i];
@@ -255,9 +260,13 @@ impl ServeCore {
                     DType::I32 => Tensor::from_i32(&ts.shape, vec![0; ts.numel()]),
                 }
             })
-            .collect();
+            .collect()
+    }
+
+    fn new_session(&self) -> ServeSession {
         ServeSession {
-            dyn_inputs,
+            dyn_inputs: self.new_dyn_inputs(),
+            spare_inputs: self.new_dyn_inputs(),
             outputs: Vec::new(),
             // sized by the id BOUND, not the resident count: admitted ids
             // are stable across eviction, so live ids can exceed the count
@@ -311,35 +320,51 @@ impl CoreRef<'_> {
 
     /// Rewrite a session's dynamic input slots in place for one batch.
     pub(crate) fn fill_inputs(&self, sess: &mut ServeSession, batch: &[u32]) {
+        let ServeSession { dyn_inputs, scratch, .. } = sess;
+        self.fill_slots(scratch, dyn_inputs, batch);
+    }
+
+    /// The slot-rewrite body of [`CoreRef::fill_inputs`], over an explicit
+    /// (scratch, slots) pair so the pipelined fan-out can assemble batch
+    /// i+1 into a session's spare buffers while batch i executes out of
+    /// the live ones.  Every builder fully overwrites its slot
+    /// (zero-then-accumulate), so which buffer set a batch lands in never
+    /// changes the bytes.
+    pub(crate) fn fill_slots(
+        &self,
+        scratch: &mut SketchScratch,
+        dyn_inputs: &mut [Tensor],
+        batch: &[u32],
+    ) {
         let (ds, cache) = (self.ds, self.cache);
-        sess.scratch.ensure(cache.admitted.id_bound() as usize);
+        scratch.ensure(cache.admitted.id_bound() as usize);
         for slot in self.dynamic {
             match *slot {
                 DynSlot::Xb(idx) => cache.gather_features_into(
                     &ds.features,
                     ds.cfg.f_in_pad,
                     batch,
-                    &mut sess.dyn_inputs[idx].f,
+                    &mut dyn_inputs[idx].f,
                 ),
                 DynSlot::Fixed { l, c_in, c_out } => {
-                    let (ti, to) = tensor::mut2(&mut sess.dyn_inputs, c_in, c_out);
+                    let (ti, to) = tensor::mut2(dyn_inputs, c_in, c_out);
                     cache.layers[l].build_fixed_fwd_into(
                         &ds.graph,
                         &cache.admitted,
                         self.conv.expect("fixed-conv serve artifact without a fixed conv"),
                         batch,
-                        &mut sess.scratch,
+                        scratch,
                         &mut ti.f,
                         &mut to.f,
                     );
                 }
                 DynSlot::Learnable { l, mask_in, m_out } => {
-                    let (tm, to) = tensor::mut2(&mut sess.dyn_inputs, mask_in, m_out);
+                    let (tm, to) = tensor::mut2(dyn_inputs, mask_in, m_out);
                     cache.layers[l].build_learnable_fwd_into(
                         &ds.graph,
                         &cache.admitted,
                         batch,
-                        &mut sess.scratch,
+                        scratch,
                         &mut tm.f,
                         &mut to.f,
                     );
@@ -347,8 +372,8 @@ impl CoreRef<'_> {
                 DynSlot::CntOut { l, idx } => cache.layers[l].build_cnt_fwd_into(
                     &cache.admitted,
                     batch,
-                    &mut sess.scratch,
-                    &mut sess.dyn_inputs[idx].f,
+                    scratch,
+                    &mut dyn_inputs[idx].f,
                 ),
             }
         }
@@ -411,6 +436,125 @@ impl CoreRef<'_> {
         self.exec_batch_timed(sess, batch, stages)?;
         out.copy_from_slice(&sess.outputs[0].f);
         Ok(())
+    }
+
+    /// Run one worker's micro-batches with prep/exec overlap: while batch
+    /// i executes out of the session's live dynamic slots, batch i+1 is
+    /// validated and assembled into the spare slots (mirroring the
+    /// trainers' `par::join2` pipeline), then the buffer sets swap.
+    ///
+    /// Answers are byte-identical to the serial loop: every dynamic slot
+    /// is fully overwritten by its builder, batches execute in submitted
+    /// order, and the executor consumes only fully-prepared inputs.  The
+    /// one observable difference is error timing — an invalid node id in
+    /// batch i+1 is detected while batch i executes, so the flush fails
+    /// one batch earlier in wall time (same error, same failed flush).
+    ///
+    /// Accounting: `busy_s`/`batch_hist` record the join span per batch
+    /// (≈ max(exec_i, prep_{i+1}) — the worker's true busy time), and the
+    /// completion stamp is taken inside the exec arm so request latency
+    /// never includes the overlapped prep of the NEXT batch.
+    pub(crate) fn run_batches_pipelined<'d>(
+        &self,
+        sess: &mut ServeSession,
+        items: Vec<(usize, &'d [u32], &'d mut [f32])>,
+        stages: &obs::ServeStages,
+    ) -> Result<Vec<(usize, Instant)>> {
+        let mut done: Vec<(usize, Instant)> = Vec::with_capacity(items.len());
+        if items.len() <= 1 {
+            // nothing to overlap — skip the thread spawn
+            for (bi, nodes, out) in items {
+                self.run_batch_timed(sess, nodes, out, stages)?;
+                done.push((bi, Instant::now()));
+            }
+            return Ok(done);
+        }
+        let mut iter = items.into_iter();
+        let (first_bi, first_nodes, first_out) = iter.next().expect("len > 1");
+        let (mut bi, mut out) = (first_bi, first_out);
+        // prologue: assemble batch 0 into the live slots (nothing to
+        // overlap with yet)
+        {
+            let t0 = Instant::now();
+            let assembly = stages.assembly.stage();
+            self.check_batch(first_nodes)?;
+            let ServeSession { dyn_inputs, scratch, .. } = sess;
+            self.fill_slots(scratch, dyn_inputs, first_nodes);
+            assembly.stop();
+            sess.busy_s += t0.elapsed().as_secs_f64();
+        }
+        loop {
+            let next = iter.next();
+            let t0 = Instant::now();
+            match next {
+                None => {
+                    // last batch: execute inline
+                    let execution = stages.exec.stage();
+                    let ServeSession { dyn_inputs, outputs, exec, .. } = sess;
+                    let view = InputSlots::Overlay {
+                        base: self.template,
+                        idx: self.dyn_spec_idx,
+                        dynamic: dyn_inputs.as_slice(),
+                    };
+                    self.art.run_slots(view, outputs, exec)?;
+                    execution.stop();
+                    out.copy_from_slice(&sess.outputs[0].f);
+                    let elapsed = t0.elapsed();
+                    sess.batches += 1;
+                    sess.busy_s += elapsed.as_secs_f64();
+                    sess.batch_hist.record_duration(elapsed);
+                    done.push((bi, Instant::now()));
+                    return Ok(done);
+                }
+                Some((nbi, nnodes, nout)) => {
+                    let core = *self;
+                    let ServeSession {
+                        dyn_inputs,
+                        spare_inputs,
+                        outputs,
+                        scratch,
+                        exec,
+                        ..
+                    } = sess;
+                    // prep on the spawned scoped thread, exec on the
+                    // caller — stage spans are recorded inside each arm
+                    // (the histogram handles are atomic).
+                    let (prep_res, exec_res) = par::join2(
+                        move || -> Result<(usize, &'d mut [f32])> {
+                            let assembly = stages.assembly.stage();
+                            core.check_batch(nnodes)?;
+                            core.fill_slots(scratch, spare_inputs, nnodes);
+                            assembly.stop();
+                            Ok((nbi, nout))
+                        },
+                        move || -> Result<Instant> {
+                            let execution = stages.exec.stage();
+                            let view = InputSlots::Overlay {
+                                base: core.template,
+                                idx: core.dyn_spec_idx,
+                                dynamic: dyn_inputs.as_slice(),
+                            };
+                            core.art.run_slots(view, outputs, exec)?;
+                            execution.stop();
+                            out.copy_from_slice(&outputs[0].f);
+                            Ok(Instant::now())
+                        },
+                    );
+                    let stamp = exec_res?;
+                    done.push((bi, stamp));
+                    let elapsed = t0.elapsed();
+                    sess.batches += 1;
+                    sess.busy_s += elapsed.as_secs_f64();
+                    sess.batch_hist.record_duration(elapsed);
+                    let (nbi, nout) = prep_res?;
+                    // the spare slots hold batch i+1's inputs — make them
+                    // live (the old live set becomes the next prep target)
+                    std::mem::swap(&mut sess.dyn_inputs, &mut sess.spare_inputs);
+                    bi = nbi;
+                    out = nout;
+                }
+            }
+        }
     }
 }
 
@@ -623,7 +767,12 @@ impl ServingModel {
     /// resident input cost, since the constant template is `Arc`-shared
     /// across the pool and counted once by `ServeCore::template_bytes`.
     pub fn worker_dyn_bytes(&self) -> usize {
-        self.pool[0].dyn_inputs.iter().map(Tensor::bytes).sum()
+        let s = &self.pool[0];
+        s.dyn_inputs
+            .iter()
+            .chain(s.spare_inputs.iter())
+            .map(Tensor::bytes)
+            .sum()
     }
 
     /// Worker-pool width.

@@ -8,6 +8,7 @@ pub mod json;
 pub mod par;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod tensor;
 
 use std::time::Instant;

@@ -1,0 +1,797 @@
+//! Runtime-dispatched SIMD primitives under the scalar kernel layer.
+//!
+//! Dispatch is resolved ONCE per process (cached in an atomic), so every
+//! call within a build takes the same code path — that is what keeps the
+//! repo's bit-identity tests (pipelined == serial, concurrent == serial,
+//! metrics-on == off) green: they compare two runs of the *same* binary,
+//! and both runs see the same arithmetic.
+//!
+//! Exactness contract, per primitive:
+//!
+//! * **Bit-exact vs scalar** (no FMA, no reassociation — per-element ops
+//!   only): `scale`, `add_assign`, `whiten_row`, `lerp`, `scale_into`,
+//!   `scale2_into`. Safe anywhere, including paths pinned by bitwise
+//!   comparisons against a scalar twin.
+//! * **Exact by integer associativity**: `dot_i8` (i32 accumulation —
+//!   integer adds reassociate freely, so AVX2/NEON/scalar all agree
+//!   bit-for-bit). Safe for dispatch-invariant candidate selection.
+//! * **Tolerance-class** (lane-split accumulation, FMA on AVX2 — results
+//!   differ from scalar by rounding): `dot`, `sum_sq`, `axpy`. Only wired
+//!   into paths protected by a numeric tolerance (goldens at 2e-3 rel,
+//!   EMA transcription at 1e-5 rel, gradcheck at 1e-3) or by near-tie
+//!   tolerant argmin parity.
+//!
+//! The `VQGNN_SIMD` env knob (`0`/`off`/`false`/`scalar` → scalar path)
+//! lets CI exercise both paths on one runner; see `parse` for the pure,
+//! testable decision function.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which vector path is active for this process.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Simd {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+// 0 = undecided, 1 = Scalar, 2 = Avx2, 3 = Neon. Detection is idempotent,
+// so a racing double-store is harmless.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+/// Pure dispatch decision: env knob first, then hardware capability.
+/// Split out from `active()` so tests can cover the env parsing without
+/// mutating process env (cargo test threads share it).
+pub fn parse(env: Option<&str>, has_avx2_fma: bool, has_neon: bool) -> Simd {
+    if let Some(v) = env {
+        let v = v.trim().to_ascii_lowercase();
+        if matches!(v.as_str(), "0" | "off" | "false" | "scalar") {
+            return Simd::Scalar;
+        }
+    }
+    if has_avx2_fma {
+        Simd::Avx2
+    } else if has_neon {
+        Simd::Neon
+    } else {
+        Simd::Scalar
+    }
+}
+
+fn detect() -> Simd {
+    #[cfg(target_arch = "x86_64")]
+    let caps = (
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"),
+        false,
+    );
+    #[cfg(target_arch = "aarch64")]
+    let caps = (false, std::arch::is_aarch64_feature_detected!("neon"));
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let caps = (false, false);
+    let env = std::env::var("VQGNN_SIMD").ok();
+    parse(env.as_deref(), caps.0, caps.1)
+}
+
+/// The path this process dispatches to. Resolved once, then cached.
+pub fn active() -> Simd {
+    match ACTIVE.load(Ordering::Relaxed) {
+        1 => Simd::Scalar,
+        2 => Simd::Avx2,
+        3 => Simd::Neon,
+        _ => {
+            let d = detect();
+            let code = match d {
+                Simd::Scalar => 1,
+                Simd::Avx2 => 2,
+                Simd::Neon => 3,
+            };
+            ACTIVE.store(code, Ordering::Relaxed);
+            d
+        }
+    }
+}
+
+/// Human-readable dispatch name, surfaced in the bench report so a
+/// silently-scalar CI runner is visible in the artifact.
+pub fn name() -> &'static str {
+    match active() {
+        Simd::Scalar => "scalar",
+        Simd::Avx2 => "avx2",
+        Simd::Neon => "neon",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference twins — public so property tests can pit every dispatched
+// primitive against its exact scalar counterpart.
+// ---------------------------------------------------------------------------
+
+pub mod scalar {
+    /// Σ a[i]·b[i], left-to-right.
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut s = 0.0f32;
+        for i in 0..a.len().min(b.len()) {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// Σ a[i]², left-to-right.
+    pub fn sum_sq(a: &[f32]) -> f32 {
+        let mut s = 0.0f32;
+        for &x in a {
+            s += x * x;
+        }
+        s
+    }
+
+    /// Σ a[i]·b[i] with i32 accumulation (exact — no overflow possible for
+    /// i8 operands below ~2^16 elements; our widths are ≤ a few thousand).
+    pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let mut s = 0i32;
+        for i in 0..a.len().min(b.len()) {
+            s += a[i] as i32 * b[i] as i32;
+        }
+        s
+    }
+
+    /// y[i] += a·x[i].
+    pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    /// y[i] *= a.
+    pub fn scale(y: &mut [f32], a: f32) {
+        for yi in y.iter_mut() {
+            *yi *= a;
+        }
+    }
+
+    /// y[i] += x[i].
+    pub fn add_assign(y: &mut [f32], x: &[f32]) {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += xi;
+        }
+    }
+
+    /// out[i] = (v[i] − mean[i])·inv[i] — the fused whiten row.
+    pub fn whiten_row(out: &mut [f32], v: &[f32], mean: &[f32], inv: &[f32]) {
+        for i in 0..out.len() {
+            out[i] = (v[i] - mean[i]) * inv[i];
+        }
+    }
+
+    /// y[i] = y[i]·beta + x[i]·(1−beta) — the EMA blend (mul/mul/add, no
+    /// FMA, so the vector path is bit-identical).
+    pub fn lerp(y: &mut [f32], x: &[f32], beta: f32) {
+        let g = 1.0 - beta;
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi = *yi * beta + xi * g;
+        }
+    }
+
+    /// out[i] = a·x[i].
+    pub fn scale_into(out: &mut [f32], a: f32, x: &[f32]) {
+        for (oi, &xi) in out.iter_mut().zip(x) {
+            *oi = a * xi;
+        }
+    }
+
+    /// out[i] = a·x[i] + b·y[i] (mul/mul/add, no FMA).
+    pub fn scale2_into(out: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
+        for i in 0..out.len() {
+            out[i] = a * x[i] + b * y[i];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA implementations (x86_64).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum in a fixed lane order so the result is deterministic
+    /// for a given input (still differs from scalar by reassociation —
+    /// tolerance-class callers only).
+    #[inline]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+        ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+            + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]))
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_fmadd_ps(va, vb, acc);
+            i += 8;
+        }
+        let mut s = hsum256(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sum_sq(a: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            acc = _mm256_fmadd_ps(va, va, acc);
+            i += 8;
+        }
+        let mut s = hsum256(acc);
+        while i < n {
+            s += a[i] * a[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// i8·i8 → i32 dot. Exact: `_mm256_madd_epi16` sums adjacent i16
+    /// products into i32 lanes; integer addition is associative, so this
+    /// agrees bit-for-bit with the scalar twin.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 16 <= n {
+            let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            let wa = _mm256_cvtepi8_epi16(va);
+            let wb = _mm256_cvtepi8_epi16(vb);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wa, wb));
+            i += 16;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut s: i32 = lanes.iter().sum();
+        while i < n {
+            s += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len().min(x.len());
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_fmadd_ps(va, vx, vy));
+            i += 8;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale(y: &mut [f32], a: f32) {
+        let n = y.len();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_mul_ps(vy, va));
+            i += 8;
+        }
+        while i < n {
+            y[i] *= a;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(y: &mut [f32], x: &[f32]) {
+        let n = y.len().min(x.len());
+        let mut i = 0;
+        while i + 8 <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, vx));
+            i += 8;
+        }
+        while i < n {
+            y[i] += x[i];
+            i += 1;
+        }
+    }
+
+    /// (v − mean)·inv, sub then mul — bit-identical to scalar.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn whiten_row(out: &mut [f32], v: &[f32], mean: &[f32], inv: &[f32]) {
+        let n = out.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+            let vm = _mm256_loadu_ps(mean.as_ptr().add(i));
+            let vi = _mm256_loadu_ps(inv.as_ptr().add(i));
+            let r = _mm256_mul_ps(_mm256_sub_ps(vv, vm), vi);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            out[i] = (v[i] - mean[i]) * inv[i];
+            i += 1;
+        }
+    }
+
+    /// y·β + x·(1−β), mul/mul/add (deliberately NOT fmadd) so the EMA path
+    /// is bit-identical across dispatches.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lerp(y: &mut [f32], x: &[f32], beta: f32) {
+        let n = y.len().min(x.len());
+        let vb = _mm256_set1_ps(beta);
+        let vg = _mm256_set1_ps(1.0 - beta);
+        let mut i = 0;
+        while i + 8 <= n {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let r = _mm256_add_ps(_mm256_mul_ps(vy, vb), _mm256_mul_ps(vx, vg));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        let g = 1.0 - beta;
+        while i < n {
+            y[i] = y[i] * beta + x[i] * g;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_into(out: &mut [f32], a: f32, x: &[f32]) {
+        let n = out.len().min(x.len());
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(va, vx));
+            i += 8;
+        }
+        while i < n {
+            out[i] = a * x[i];
+            i += 1;
+        }
+    }
+
+    /// a·x + b·y, mul/mul/add (no FMA) — bit-identical to scalar, required
+    /// by the attention backward whose forward twin is bitwise-pinned.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale2_into(out: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
+        let n = out.len();
+        let va = _mm256_set1_ps(a);
+        let vb = _mm256_set1_ps(b);
+        let mut i = 0;
+        while i + 8 <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let r = _mm256_add_ps(_mm256_mul_ps(va, vx), _mm256_mul_ps(vb, vy));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            out[i] = a * x[i] + b * y[i];
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON implementations (aarch64).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let va = vld1q_f32(a.as_ptr().add(i));
+            let vb = vld1q_f32(b.as_ptr().add(i));
+            acc = vfmaq_f32(acc, va, vb);
+            i += 4;
+        }
+        let mut s = vaddvq_f32(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum_sq(a: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let va = vld1q_f32(a.as_ptr().add(i));
+            acc = vfmaq_f32(acc, va, va);
+            i += 4;
+        }
+        let mut s = vaddvq_f32(acc);
+        while i < n {
+            s += a[i] * a[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// Exact i8 dot via widening multiply-accumulate into i32 lanes.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len().min(b.len());
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0;
+        while i + 8 <= n {
+            let va = vmovl_s8(vld1_s8(a.as_ptr().add(i)));
+            let vb = vmovl_s8(vld1_s8(b.as_ptr().add(i)));
+            acc = vmlal_s16(acc, vget_low_s16(va), vget_low_s16(vb));
+            acc = vmlal_s16(acc, vget_high_s16(va), vget_high_s16(vb));
+            i += 8;
+        }
+        let mut s = vaddvq_s32(acc);
+        while i < n {
+            s += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len().min(x.len());
+        let va = vdupq_n_f32(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            let vy = vld1q_f32(y.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vfmaq_f32(vy, va, vx));
+            i += 4;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale(y: &mut [f32], a: f32) {
+        let n = y.len();
+        let va = vdupq_n_f32(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let vy = vld1q_f32(y.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vmulq_f32(vy, va));
+            i += 4;
+        }
+        while i < n {
+            y[i] *= a;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn add_assign(y: &mut [f32], x: &[f32]) {
+        let n = y.len().min(x.len());
+        let mut i = 0;
+        while i + 4 <= n {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            let vy = vld1q_f32(y.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(vy, vx));
+            i += 4;
+        }
+        while i < n {
+            y[i] += x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn whiten_row(out: &mut [f32], v: &[f32], mean: &[f32], inv: &[f32]) {
+        let n = out.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let vv = vld1q_f32(v.as_ptr().add(i));
+            let vm = vld1q_f32(mean.as_ptr().add(i));
+            let vi = vld1q_f32(inv.as_ptr().add(i));
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(vsubq_f32(vv, vm), vi));
+            i += 4;
+        }
+        while i < n {
+            out[i] = (v[i] - mean[i]) * inv[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn lerp(y: &mut [f32], x: &[f32], beta: f32) {
+        let n = y.len().min(x.len());
+        let vb = vdupq_n_f32(beta);
+        let vg = vdupq_n_f32(1.0 - beta);
+        let mut i = 0;
+        while i + 4 <= n {
+            let vy = vld1q_f32(y.as_ptr().add(i));
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            let r = vaddq_f32(vmulq_f32(vy, vb), vmulq_f32(vx, vg));
+            vst1q_f32(y.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        let g = 1.0 - beta;
+        while i < n {
+            y[i] = y[i] * beta + x[i] * g;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_into(out: &mut [f32], a: f32, x: &[f32]) {
+        let n = out.len().min(x.len());
+        let va = vdupq_n_f32(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(va, vx));
+            i += 4;
+        }
+        while i < n {
+            out[i] = a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale2_into(out: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
+        let n = out.len();
+        let va = vdupq_n_f32(a);
+        let vb = vdupq_n_f32(b);
+        let mut i = 0;
+        while i + 4 <= n {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            let vy = vld1q_f32(y.as_ptr().add(i));
+            let r = vaddq_f32(vmulq_f32(va, vx), vmulq_f32(vb, vy));
+            vst1q_f32(out.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        while i < n {
+            out[i] = a * x[i] + b * y[i];
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched entry points.
+// ---------------------------------------------------------------------------
+
+macro_rules! dispatch {
+    ($name:ident ( $($arg:expr),* )) => {
+        match active() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `active()` returns Avx2 only after runtime detection
+            // of avx2+fma on this CPU.
+            Simd::Avx2 => unsafe { avx2::$name($($arg),*) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: `active()` returns Neon only after runtime detection.
+            Simd::Neon => unsafe { neon::$name($($arg),*) },
+            #[allow(unreachable_patterns)]
+            _ => scalar::$name($($arg),*),
+        }
+    };
+}
+
+/// Σ a[i]·b[i]. Tolerance-class (lane accumulation + FMA).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dispatch!(dot(a, b))
+}
+
+/// Σ a[i]². Tolerance-class.
+#[inline]
+pub fn sum_sq(a: &[f32]) -> f32 {
+    dispatch!(sum_sq(a))
+}
+
+/// Σ a[i]·b[i] over i8 with i32 accumulation. Exact across dispatches.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    dispatch!(dot_i8(a, b))
+}
+
+/// y += a·x. Tolerance-class (FMA on AVX2). Callers that special-case
+/// `a == 0.0` (zero-skip in the matmuls) keep that check — it is a
+/// semantic filter (inf/NaN/−0.0 propagation), not just a perf skip.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    dispatch!(axpy(y, a, x))
+}
+
+/// y *= a. Bit-exact vs scalar.
+#[inline]
+pub fn scale(y: &mut [f32], a: f32) {
+    dispatch!(scale(y, a))
+}
+
+/// y += x (element-wise). Bit-exact vs scalar.
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    dispatch!(add_assign(y, x))
+}
+
+/// out = (v − mean)·inv, fused whiten row. Bit-exact vs scalar.
+#[inline]
+pub fn whiten_row(out: &mut [f32], v: &[f32], mean: &[f32], inv: &[f32]) {
+    dispatch!(whiten_row(out, v, mean, inv))
+}
+
+/// y = y·β + x·(1−β), the EMA blend. Bit-exact vs scalar (no FMA).
+#[inline]
+pub fn lerp(y: &mut [f32], x: &[f32], beta: f32) {
+    dispatch!(lerp(y, x, beta))
+}
+
+/// out = a·x. Bit-exact vs scalar.
+#[inline]
+pub fn scale_into(out: &mut [f32], a: f32, x: &[f32]) {
+    dispatch!(scale_into(out, a, x))
+}
+
+/// out = a·x + b·y. Bit-exact vs scalar (no FMA).
+#[inline]
+pub fn scale2_into(out: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
+    dispatch!(scale2_into(out, a, x, b, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_honors_off_values() {
+        for v in ["0", "off", "false", "scalar", " OFF ", "False"] {
+            assert_eq!(parse(Some(v), true, false), Simd::Scalar, "{v}");
+            assert_eq!(parse(Some(v), false, true), Simd::Scalar, "{v}");
+        }
+    }
+
+    #[test]
+    fn parse_prefers_hardware_when_unset_or_on() {
+        assert_eq!(parse(None, true, false), Simd::Avx2);
+        assert_eq!(parse(None, false, true), Simd::Neon);
+        assert_eq!(parse(None, false, false), Simd::Scalar);
+        assert_eq!(parse(Some("1"), true, false), Simd::Avx2);
+        assert_eq!(parse(Some("avx2"), false, false), Simd::Scalar);
+    }
+
+    #[test]
+    fn active_is_stable_across_calls() {
+        let a = active();
+        for _ in 0..4 {
+            assert_eq!(active(), a);
+        }
+        assert!(!name().is_empty());
+    }
+
+    #[test]
+    fn exact_primitives_match_scalar_bitwise() {
+        // Deterministic pseudo-random fill (no external RNG dep needed).
+        let mut state = 0x2545_f491u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 33, 100] {
+            let x: Vec<f32> = (0..n).map(|_| next()).collect();
+            let y0: Vec<f32> = (0..n).map(|_| next()).collect();
+            let m: Vec<f32> = (0..n).map(|_| next()).collect();
+            let inv: Vec<f32> = (0..n).map(|_| next().abs() + 0.1).collect();
+
+            let mut a = y0.clone();
+            let mut b = y0.clone();
+            scale(&mut a, 1.7);
+            scalar::scale(&mut b, 1.7);
+            assert_eq!(a, b, "scale n={n}");
+
+            let mut a = y0.clone();
+            let mut b = y0.clone();
+            add_assign(&mut a, &x);
+            scalar::add_assign(&mut b, &x);
+            assert_eq!(a, b, "add_assign n={n}");
+
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            whiten_row(&mut a, &x, &m, &inv);
+            scalar::whiten_row(&mut b, &x, &m, &inv);
+            assert_eq!(a, b, "whiten_row n={n}");
+
+            let mut a = y0.clone();
+            let mut b = y0.clone();
+            lerp(&mut a, &x, 0.99);
+            scalar::lerp(&mut b, &x, 0.99);
+            assert_eq!(a, b, "lerp n={n}");
+
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            scale_into(&mut a, -0.3, &x);
+            scalar::scale_into(&mut b, -0.3, &x);
+            assert_eq!(a, b, "scale_into n={n}");
+
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            scale2_into(&mut a, 0.4, &x, -1.1, &m);
+            scalar::scale2_into(&mut b, 0.4, &x, -1.1, &m);
+            assert_eq!(a, b, "scale2_into n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_i8_is_exact() {
+        let mut state = 7u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            (state >> 56) as i8
+        };
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 40, 129] {
+            let a: Vec<i8> = (0..n).map(|_| next()).collect();
+            let b: Vec<i8> = (0..n).map(|_| next()).collect();
+            assert_eq!(dot_i8(&a, &b), scalar::dot_i8(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn reductions_match_scalar_within_tolerance() {
+        let mut state = 0xdead_beefu64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        for n in [1usize, 5, 8, 13, 16, 64, 200, 1000] {
+            let a: Vec<f32> = (0..n).map(|_| next()).collect();
+            let b: Vec<f32> = (0..n).map(|_| next()).collect();
+            let d = dot(&a, &b);
+            let ds = scalar::dot(&a, &b);
+            assert!((d - ds).abs() <= 1e-4 * (1.0 + ds.abs()), "dot n={n}: {d} vs {ds}");
+            let s = sum_sq(&a);
+            let ss = scalar::sum_sq(&a);
+            assert!((s - ss).abs() <= 1e-4 * (1.0 + ss.abs()), "sum_sq n={n}");
+
+            let mut ya = b.clone();
+            let mut yb = b.clone();
+            axpy(&mut ya, 0.37, &a);
+            scalar::axpy(&mut yb, 0.37, &a);
+            for i in 0..n {
+                assert!((ya[i] - yb[i]).abs() <= 1e-5 * (1.0 + yb[i].abs()), "axpy n={n} i={i}");
+            }
+        }
+    }
+}

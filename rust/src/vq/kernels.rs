@@ -10,12 +10,22 @@
 //! index — identical to the scalar reference and to
 //! `python/compile/kernels/ref.py`.
 
-use crate::util::par;
+use crate::util::{par, simd};
 use crate::vq::EPS;
 
 /// Rows per parallel work unit (large enough to amortize thread dispatch,
 /// small enough to balance uneven tails).
 pub const ROW_BLOCK: usize = 64;
+
+/// Minimum codebook size before the two-stage quantized FINDNEAREST pays
+/// for its table build + candidate bookkeeping.  Every test config in the
+/// repo uses k ≤ 33, which keeps them on the exact single-stage path.
+pub const PRUNE_MIN_K: usize = 64;
+
+/// Candidates kept by the first-pass i8 scan (in addition to every
+/// codeword whose error-bounded lower bound beats the best upper bound —
+/// the soundness net that guarantees the exact argmin survives).
+pub const PRUNE_TOP_M: usize = 16;
 
 /// `1 / sqrt(var + EPS)` per dim — the whitening scale, computed once —
 /// into a reused buffer.
@@ -40,11 +50,17 @@ pub fn whiten_into(v: &[f32], fp: usize, mean: &[f32], inv: &[f32], out: &mut [f
     debug_assert_eq!(mean.len(), fp);
     debug_assert_eq!(inv.len(), fp);
     debug_assert_eq!(v.len(), out.len());
+    if fp == 0 {
+        return;
+    }
+    // Row-wise (the old loop recomputed `% fp` per element): each row is a
+    // fused (v − mean) · inv over the contiguous fp dims, which the SIMD
+    // layer handles sub-then-mul — bit-identical to the scalar loop.
     par::par_chunks_mut(out, ROW_BLOCK * fp, |ci, chunk| {
         let base = ci * ROW_BLOCK * fp;
-        for (j, o) in chunk.iter_mut().enumerate() {
-            let d = (base + j) % fp;
-            *o = (v[base + j] - mean[d]) * inv[d];
+        for (row_off, orow) in chunk.chunks_mut(fp).enumerate() {
+            let src = base + row_off * fp;
+            simd::whiten_row(orow, &v[src..src + orow.len()], mean, inv);
         }
     });
 }
@@ -54,6 +70,16 @@ pub fn whiten(v: &[f32], fp: usize, mean: &[f32], inv: &[f32]) -> Vec<f32> {
     let mut out = vec![0.0f32; v.len()];
     whiten_into(v, fp, mean, inv, &mut out);
     out
+}
+
+/// ‖c‖² per codeword over the `width` prefix, into a caller-reusable
+/// buffer — hoisted out of [`assign_blocked`] so per-step callers amortize
+/// the allocation.
+pub fn codeword_norms_into(cww: &[f32], k: usize, c_stride: usize, width: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), k);
+    for (c, o) in out.iter_mut().enumerate() {
+        *o = simd::sum_sq(&cww[c * c_stride..c * c_stride + width]);
+    }
 }
 
 /// Nearest-codeword assignment over pre-whitened rows.
@@ -73,35 +99,180 @@ pub fn assign_blocked(
     c_stride: usize,
     out: &mut [i32],
 ) {
-    debug_assert!(width <= v_stride && width <= c_stride);
-    debug_assert!(vw.len() >= out.len() * v_stride || out.is_empty());
-    debug_assert!(cww.len() >= k * c_stride || k == 0);
     if k == 0 {
         return;
     }
-    // ‖c‖² once per codeword, shared by every row.
-    let cnorm: Vec<f32> = (0..k)
-        .map(|c| {
-            let row = &cww[c * c_stride..c * c_stride + width];
-            row.iter().map(|x| x * x).sum()
-        })
-        .collect();
-    let cnorm = &cnorm;
+    let mut cnorm = vec![0.0f32; k];
+    codeword_norms_into(cww, k, c_stride, width, &mut cnorm);
+    assign_blocked_with_norms(vw, width, v_stride, cww, k, c_stride, &cnorm, out);
+}
+
+/// [`assign_blocked`] with the codeword norms supplied by the caller.
+pub fn assign_blocked_with_norms(
+    vw: &[f32],
+    width: usize,
+    v_stride: usize,
+    cww: &[f32],
+    k: usize,
+    c_stride: usize,
+    cnorm: &[f32],
+    out: &mut [i32],
+) {
+    debug_assert!(width <= v_stride && width <= c_stride);
+    debug_assert!(vw.len() >= out.len() * v_stride || out.is_empty());
+    debug_assert!(cww.len() >= k * c_stride || k == 0);
+    debug_assert_eq!(cnorm.len(), k);
+    if k == 0 {
+        return;
+    }
     par::par_chunks_mut(out, ROW_BLOCK, |ci, ochunk| {
         let r0 = ci * ROW_BLOCK;
         for (rr, o) in ochunk.iter_mut().enumerate() {
             let r = r0 + rr;
             let v = &vw[r * v_stride..r * v_stride + width];
-            let vn: f32 = v.iter().map(|x| x * x).sum();
+            let vn = simd::sum_sq(v);
             let mut best = f32::INFINITY;
             let mut arg = 0usize;
             for c in 0..k {
                 let cr = &cww[c * c_stride..c * c_stride + width];
-                let mut dot = 0.0f32;
-                for d in 0..width {
-                    dot += v[d] * cr[d];
+                let d2 = vn - 2.0 * simd::dot(v, cr) + cnorm[c];
+                if d2 < best {
+                    best = d2;
+                    arg = c;
                 }
-                let d2 = vn - 2.0 * dot + cnorm[c];
+            }
+            *o = arg as i32;
+        }
+    });
+}
+
+/// i8-quantized codeword table for the two-stage FINDNEAREST: a first-pass
+/// approximate scan over the quantized rows prunes the codebook down to a
+/// provably-sufficient candidate set, then the survivors are rescored with
+/// the exact f32 decomposition.
+pub struct QuantCodebook {
+    pub k: usize,
+    pub width: usize,
+    /// `k × width` row-major i8 codewords, `q = round(c / scale)`.
+    pub q: Vec<i8>,
+    /// Per-codeword dequant scale (`max|c_d| / 127`).
+    pub scale: Vec<f32>,
+    /// Exact f32 ‖c‖² per codeword (shared with the rescore pass).
+    pub cnorm: Vec<f32>,
+    /// Σ|c_d| per codeword — feeds the quantization-error bound.
+    pub cabs: Vec<f32>,
+}
+
+impl QuantCodebook {
+    pub fn build(cww: &[f32], k: usize, c_stride: usize, width: usize) -> Self {
+        let mut q = vec![0i8; k * width];
+        let mut scale = vec![0.0f32; k];
+        let mut cnorm = vec![0.0f32; k];
+        let mut cabs = vec![0.0f32; k];
+        for c in 0..k {
+            let row = &cww[c * c_stride..c * c_stride + width];
+            let amax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let sc = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            scale[c] = sc;
+            cnorm[c] = simd::sum_sq(row);
+            cabs[c] = row.iter().map(|x| x.abs()).sum();
+            let dst = &mut q[c * width..(c + 1) * width];
+            for (d, &x) in row.iter().enumerate() {
+                dst[d] = (x / sc).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantCodebook { k, width, q, scale, cnorm, cabs }
+    }
+}
+
+/// Two-stage FINDNEAREST: i8 approximate scan → error-bounded candidate
+/// set (∪ top-`m` by approximate distance) → exact f32 rescore.
+///
+/// Soundness: with per-element quantization error ≤ scale/2 on each side,
+/// the approximate dot satisfies `|dot − approx| ≤ errdot` where
+/// `errdot = (sv·Σ|c| + sc·Σ|v|)/2 + width·sv·sc/4`; any codeword whose
+/// approximate distance minus `2·errdot` exceeds the best upper bound
+/// `min(approx + 2·errdot)` cannot be the true argmin, so the exact winner
+/// (and every exact tie, including the lowest index) always survives into
+/// the rescore, which uses the same `‖v‖² − 2·v·c + ‖c‖²` arithmetic as
+/// [`assign_blocked_with_norms`] in ascending index order with strict `<`.
+/// The i8 dot itself accumulates in i32 (associative), so the candidate
+/// set is identical across SIMD dispatches.
+pub fn assign_pruned(
+    vw: &[f32],
+    width: usize,
+    v_stride: usize,
+    cww: &[f32],
+    c_stride: usize,
+    qcb: &QuantCodebook,
+    m: usize,
+    out: &mut [i32],
+) {
+    let k = qcb.k;
+    debug_assert_eq!(qcb.width, width);
+    debug_assert!(width <= v_stride && width <= c_stride);
+    if k == 0 {
+        return;
+    }
+    par::par_chunks_mut(out, ROW_BLOCK, |ci, ochunk| {
+        let r0 = ci * ROW_BLOCK;
+        // Per-chunk scratch, reused across the block's rows.
+        let mut qv = vec![0i8; width];
+        let mut ad2 = vec![0.0f32; k];
+        let mut err = vec![0.0f32; k];
+        let mut cand: Vec<usize> = Vec::with_capacity(k);
+        let mut thresh_scratch = vec![0.0f32; k];
+        for (rr, o) in ochunk.iter_mut().enumerate() {
+            let r = r0 + rr;
+            let v = &vw[r * v_stride..r * v_stride + width];
+            let vn = simd::sum_sq(v);
+            let vabs: f32 = v.iter().map(|x| x.abs()).sum();
+            let amax = v.iter().fold(0.0f32, |mx, &x| mx.max(x.abs()));
+            let sv = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+            for (d, &x) in v.iter().enumerate() {
+                qv[d] = (x / sv).round().clamp(-127.0, 127.0) as i8;
+            }
+            // First pass: approximate distances + per-codeword error radii.
+            let mut ub_min = f32::INFINITY;
+            for c in 0..k {
+                let qrow = &qcb.q[c * width..(c + 1) * width];
+                let approx_dot = simd::dot_i8(&qv, qrow) as f32 * sv * qcb.scale[c];
+                let errdot = 0.5 * qcb.scale[c] * vabs
+                    + 0.5 * sv * qcb.cabs[c]
+                    + 0.25 * width as f32 * sv * qcb.scale[c];
+                let d2 = vn - 2.0 * approx_dot + qcb.cnorm[c];
+                // Inflate slightly so float rounding in the bound itself
+                // can never exclude the true winner.
+                let e = 2.0 * errdot * (1.0 + 1e-3) + 1e-6;
+                ad2[c] = d2;
+                err[c] = e;
+                ub_min = ub_min.min(d2 + e);
+            }
+            // Candidates: everything whose lower bound beats the best upper
+            // bound (soundness) ∪ top-m by approximate distance (recall
+            // insurance for sloppy bounds).
+            let m_eff = m.min(k);
+            let thresh = if m_eff > 0 && m_eff < k {
+                thresh_scratch.copy_from_slice(&ad2);
+                let (_, t, _) = thresh_scratch
+                    .select_nth_unstable_by(m_eff - 1, |a, b| a.total_cmp(b));
+                *t
+            } else {
+                f32::INFINITY
+            };
+            cand.clear();
+            for c in 0..k {
+                if ad2[c] - err[c] <= ub_min || ad2[c] <= thresh {
+                    cand.push(c);
+                }
+            }
+            // Exact rescore, ascending index, strict < — same tie-breaking
+            // as the single-stage kernel.
+            let mut best = f32::INFINITY;
+            let mut arg = cand[0];
+            for &c in &cand {
+                let cr = &cww[c * c_stride..c * c_stride + width];
+                let d2 = vn - 2.0 * simd::dot(v, cr) + qcb.cnorm[c];
                 if d2 < best {
                     best = d2;
                     arg = c;
@@ -170,22 +341,17 @@ pub fn cluster_accumulate(
             debug_assert!(a < k);
             counts[a] += 1.0;
             let row = &vw[i * fp..(i + 1) * fp];
-            let dst = &mut sums[a * fp..(a + 1) * fp];
-            for d in 0..fp {
-                dst[d] += row[d];
-            }
+            // Element-wise adds — the SIMD path is bit-identical to the
+            // scalar scatter loop it replaces.
+            simd::add_assign(&mut sums[a * fp..(a + 1) * fp], row);
         }
         (counts, sums)
     });
     let mut counts = vec![0.0f32; k];
     let mut sums = vec![0.0f32; k * fp];
     for (pc, ps) in partials {
-        for c in 0..k {
-            counts[c] += pc[c];
-        }
-        for j in 0..k * fp {
-            sums[j] += ps[j];
-        }
+        simd::add_assign(&mut counts, &pc);
+        simd::add_assign(&mut sums, &ps);
     }
     (counts, sums)
 }
@@ -312,6 +478,68 @@ mod tests {
         }
         let mut a2 = vec![0i32; b];
         assign_blocked(&vw, width, fp, &cww, k, fp, &mut a2);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn pruned_matches_blocked_exactly() {
+        // The candidate set provably contains every exact-distance tie of
+        // the true argmin, and the rescore reuses the single-stage kernel's
+        // arithmetic (same dispatch within this process) — so the pruned
+        // path must agree with assign_blocked bit-for-bit, for every m.
+        crate::util::prop::check("pruned_parity", 12, |rng, _case| {
+            let b = 1 + rng.below(2 * ROW_BLOCK);
+            let k = PRUNE_MIN_K + rng.below(80);
+            let fp = 4 + rng.below(28);
+            let vw: Vec<f32> = (0..b * fp).map(|_| rng.gauss_f32()).collect();
+            let cww: Vec<f32> = (0..k * fp).map(|_| 0.7 * rng.gauss_f32()).collect();
+            let mut want = vec![0i32; b];
+            assign_blocked(&vw, fp, fp, &cww, k, fp, &mut want);
+            let qcb = QuantCodebook::build(&cww, k, fp, fp);
+            for m in [1usize, PRUNE_TOP_M, k] {
+                let mut got = vec![0i32; b];
+                assign_pruned(&vw, fp, fp, &cww, fp, &qcb, m, &mut got);
+                if got != want {
+                    return Err(format!("b={b} k={k} fp={fp} m={m}: prune diverged"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pruned_handles_duplicate_and_zero_codewords() {
+        // Ties (duplicate codewords) must still break to the lowest index
+        // through the prune, and all-zero rows/codewords must not divide
+        // by a zero scale.
+        let fp = 6;
+        let k = PRUNE_MIN_K;
+        let mut cww = vec![0.0f32; k * fp];
+        for c in 2..k {
+            for d in 0..fp {
+                cww[c * fp + d] = (c * fp + d) as f32 * 0.01 + 1.0;
+            }
+        }
+        // codewords 0 and 1 are both all-zero → exact tie at the origin.
+        let vw = vec![0.0f32; fp];
+        let qcb = QuantCodebook::build(&cww, k, fp, fp);
+        let mut got = vec![7i32];
+        assign_pruned(&vw, fp, fp, &cww, fp, &qcb, 4, &mut got);
+        assert_eq!(got, vec![0]);
+    }
+
+    #[test]
+    fn with_norms_matches_allocating_wrapper() {
+        let mut rng = Rng::new(11);
+        let (b, k, fp) = (90, 17, 10);
+        let vw: Vec<f32> = (0..b * fp).map(|_| rng.gauss_f32()).collect();
+        let cww: Vec<f32> = (0..k * fp).map(|_| rng.gauss_f32()).collect();
+        let mut a1 = vec![0i32; b];
+        assign_blocked(&vw, fp, fp, &cww, k, fp, &mut a1);
+        let mut cnorm = vec![0.0f32; k];
+        codeword_norms_into(&cww, k, fp, fp, &mut cnorm);
+        let mut a2 = vec![0i32; b];
+        assign_blocked_with_norms(&vw, fp, fp, &cww, k, fp, &cnorm, &mut a2);
         assert_eq!(a1, a2);
     }
 

@@ -8,6 +8,7 @@ pub mod sketch;
 
 use crate::runtime::manifest::LayerPlan;
 use crate::util::rng::Rng;
+use crate::util::simd;
 use crate::util::tensor::Tensor;
 
 pub const EPS: f32 = 1e-5;
@@ -82,27 +83,18 @@ impl VqBranch {
         }
         debug_assert_eq!(v.len(), b * self.fp);
         let (m, va) = kernels::batch_mean_var(v, b, self.fp);
-        for d in 0..self.fp {
-            self.mean[d] = self.mean[d] * beta + m[d] * (1.0 - beta);
-            self.var[d] = self.var[d] * beta + va[d] * (1.0 - beta);
-        }
+        // EMA blend (mul/mul/add — the SIMD path is bit-identical).
+        simd::lerp(&mut self.mean, &m, beta);
+        simd::lerp(&mut self.var, &va, beta);
         // EMA cluster sizes + sums over whitened vectors
-        for c in self.counts.iter_mut() {
-            *c *= gamma;
-        }
-        for s in self.sums.iter_mut() {
-            *s *= gamma;
-        }
+        simd::scale(&mut self.counts, gamma);
+        simd::scale(&mut self.sums, gamma);
         let inv = kernels::inv_std(&self.var);
         let vw = kernels::whiten(v, self.fp, &self.mean, &inv);
         let (bc, bs) = kernels::cluster_accumulate(&vw, assign, b, self.fp, self.k);
         let g1 = 1.0 - gamma;
-        for c in 0..self.k {
-            self.counts[c] += g1 * bc[c];
-        }
-        for j in 0..self.k * self.fp {
-            self.sums[j] += g1 * bs[j];
-        }
+        simd::axpy(&mut self.counts, g1, &bc);
+        simd::axpy(&mut self.sums, g1, &bs);
         // Refresh only clusters with mass; empty clusters keep their
         // position — dividing by a vanishing count would mint NaN/Inf
         // codewords that poison every later assignment.
@@ -117,14 +109,24 @@ impl VqBranch {
     }
 
     /// Host-side FINDNEAREST (tests + inductive bootstrap fallback), via
-    /// the blocked parallel kernel.
+    /// the blocked parallel kernel.  Large codebooks on batches big enough
+    /// to amortize the table build take the two-stage quantized prune —
+    /// whose result is provably identical to the single-stage scan (the
+    /// error-bounded candidate set keeps every exact tie of the argmin).
     pub fn assign_host(&self, v: &[f32]) -> Vec<i32> {
         debug_assert_eq!(v.len() % self.fp, 0);
         let b = v.len() / self.fp;
         let inv = kernels::inv_std(&self.var);
         let vw = kernels::whiten(v, self.fp, &self.mean, &inv);
         let mut out = vec![0i32; b];
-        kernels::assign_blocked(&vw, self.fp, self.fp, &self.cww, self.k, self.fp, &mut out);
+        if self.k >= kernels::PRUNE_MIN_K && b >= 64 {
+            let qcb = kernels::QuantCodebook::build(&self.cww, self.k, self.fp, self.fp);
+            kernels::assign_pruned(
+                &vw, self.fp, self.fp, &self.cww, self.fp, &qcb, kernels::PRUNE_TOP_M, &mut out,
+            );
+        } else {
+            kernels::assign_blocked(&vw, self.fp, self.fp, &self.cww, self.k, self.fp, &mut out);
+        }
         out
     }
 }

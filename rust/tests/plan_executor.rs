@@ -212,6 +212,65 @@ fn pipelined_vq_assembly_matches_serial_trajectory() {
     }
 }
 
+#[test]
+fn mid_run_pipeline_toggle_matches_serial_trajectory() {
+    // Toggling the overlapped prep on and off BETWEEN steps must be
+    // invisible too: a prefetched batch pending at the moment of a
+    // toggle-off is consumed (not dropped and resampled), and a toggle-on
+    // resumes prefetching from the same rng schedule.  This pins the
+    // `prefetched.take()` / `rng.fork(steps)` handoff that a mid-run
+    // `set_pipelined` relies on.
+    let serial = vq_trajectory("gcn", false, 6);
+    let toggled = {
+        let man = builtin();
+        let mut rt = Runtime::native();
+        let ds = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
+        let mut tr =
+            VqTrainer::new(&mut rt, &man, ds, "gcn", "", NodeStrategy::Nodes, 7).unwrap();
+        let mut losses = Vec::new();
+        for (step, on) in [true, true, false, false, true, false].iter().enumerate() {
+            tr.set_pipelined(*on);
+            assert_eq!(tr.pipelined(), *on, "toggle at step {step} did not stick");
+            losses.push(tr.train_step(&mut rt).unwrap());
+        }
+        losses
+    };
+    assert_eq!(
+        serial.0.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+        toggled.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+        "mid-run pipeline toggles changed the trajectory"
+    );
+}
+
+#[test]
+fn link_task_trainers_never_pipeline() {
+    // Link tasks draw negative pairs from the trainer rng on both the
+    // train and evaluate paths, so the overlapped prefetch (which captures
+    // `&mut rng`) would reorder draws whenever evaluation interleaves with
+    // training.  Both trainers must refuse pipelining on link datasets —
+    // at construction AND against an explicit set_pipelined(true).
+    let man = builtin();
+    let mut rt = Runtime::native();
+    let ds = Rc::new(Dataset::generate(&man.datasets["collab_sim"], 42));
+    let mut vq =
+        VqTrainer::new(&mut rt, &man, ds.clone(), "sage", "", NodeStrategy::Nodes, 7).unwrap();
+    assert!(!vq.pipelined(), "VqTrainer pipelined on a link task at construction");
+    vq.set_pipelined(true);
+    assert!(!vq.pipelined(), "VqTrainer accepted set_pipelined(true) on a link task");
+
+    let mut ed =
+        EdgeTrainer::new(&mut rt, &man, ds, "gcn", Baseline::FullGraph, 11).unwrap();
+    assert!(!ed.pipelined(), "EdgeTrainer pipelined on a link task at construction");
+    ed.set_pipelined(true);
+    assert!(!ed.pipelined(), "EdgeTrainer accepted set_pipelined(true) on a link task");
+
+    // node tasks keep the default-on behaviour (the property the link
+    // gate must not regress)
+    let tiny = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
+    let nd = VqTrainer::new(&mut rt, &man, tiny, "gcn", "", NodeStrategy::Nodes, 7).unwrap();
+    assert!(nd.pipelined(), "node-task trainer should pipeline by default");
+}
+
 fn edge_trajectory(kind: Baseline, dataset: &str, pipelined: bool, steps: usize) -> Vec<u32> {
     let man = builtin();
     let mut rt = Runtime::native();

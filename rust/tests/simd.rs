@@ -1,0 +1,212 @@
+//! SIMD/scalar parity properties (tier 2).
+//!
+//! Every dispatched primitive in `util::simd` is pitted against its
+//! scalar twin across randomized shapes, with the awkward cases forced:
+//! widths ≢ 0 mod the widest lane count (remainder loops), lengths below
+//! one vector, and unaligned slice starts (`&buf[1..]` — the kernels use
+//! unaligned loads, so alignment must never matter).  The exactness
+//! contract is per-primitive:
+//!
+//! - **bit-exact**: `scale`, `add_assign`, `whiten_row`, `lerp`,
+//!   `scale_into`, `scale2_into` keep scalar per-element arithmetic
+//!   (mul/add only, no FMA), so both paths must agree bitwise;
+//! - **integer-exact**: `dot_i8` accumulates in i32 — associativity is
+//!   exact, so lane order cannot change the sum;
+//! - **tolerance**: `dot`, `sum_sq`, `axpy` reassociate across lanes and
+//!   may contract to FMA — parity holds to a relative tolerance only.
+//!
+//! On a runner without AVX2/NEON (or under `VQGNN_SIMD=0`) the dispatched
+//! fns ARE the scalar twins and every assertion is trivially tight; CI
+//! runs the suite both ways.
+//!
+//! The two-stage FINDNEAREST prune carries a stronger contract — the
+//! i8 first pass is a sound bound, so `assign_pruned` must reproduce
+//! `assign_blocked` bit-for-bit (same process, same dispatch) for every
+//! tested top-m, including m=1. That recall property is checked here at
+//! integration scale on top of the unit cases in `vq::kernels`.
+
+use vq_gnn::prop_assert;
+use vq_gnn::util::prop;
+use vq_gnn::util::rng::Rng;
+use vq_gnn::util::simd;
+use vq_gnn::vq::kernels;
+
+/// Shape schedule covering sub-lane, exact-lane and remainder widths for
+/// both 8-lane (AVX2) and 4-lane (NEON) kernels, plus the i8 kernel's
+/// 16/8-lane strides.
+const LENS: &[usize] = &[0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 23, 31, 32, 33, 63, 100, 257];
+
+fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gauss_f32()).collect()
+}
+
+fn rel_close(a: f32, b: f32, tol: f32) -> bool {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    (a - b).abs() <= tol * scale
+}
+
+#[test]
+fn reductions_match_scalar_within_tolerance_over_shapes() {
+    prop::check("simd reductions vs scalar", 24, |rng, _case| {
+        for &n in LENS {
+            // over-allocate and slice from offset 1 so the vector body
+            // starts unaligned
+            let a = fill(rng, n + 1);
+            let b = fill(rng, n + 1);
+            let (a, b) = (&a[1..], &b[1..]);
+            let d = simd::dot(a, b);
+            let ds = simd::scalar::dot(a, b);
+            prop_assert!(rel_close(d, ds, 1e-4), "dot n={n}: {d} vs {ds}");
+            let s = simd::sum_sq(a);
+            let ss = simd::scalar::sum_sq(a);
+            prop_assert!(rel_close(s, ss, 1e-4), "sum_sq n={n}: {s} vs {ss}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn axpy_matches_scalar_within_tolerance_over_shapes() {
+    prop::check("simd axpy vs scalar", 24, |rng, _case| {
+        for &n in LENS {
+            let x = fill(rng, n + 1);
+            let y0 = fill(rng, n + 1);
+            let alpha = rng.gauss_f32();
+            let mut y_v = y0.clone();
+            let mut y_s = y0.clone();
+            simd::axpy(&mut y_v[1..], alpha, &x[1..]);
+            simd::scalar::axpy(&mut y_s[1..], alpha, &x[1..]);
+            for i in 1..n + 1 {
+                prop_assert!(
+                    rel_close(y_v[i], y_s[i], 1e-5),
+                    "axpy n={n} i={i}: {} vs {}",
+                    y_v[i],
+                    y_s[i]
+                );
+            }
+            // the untouched prefix must stay untouched
+            prop_assert!(y_v[0].to_bits() == y0[0].to_bits(), "axpy wrote before the slice");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn elementwise_primitives_match_scalar_bitwise_over_shapes() {
+    prop::check("simd elementwise vs scalar (bitwise)", 24, |rng, _case| {
+        for &n in LENS {
+            let x = fill(rng, n + 1);
+            let y = fill(rng, n + 1);
+            let mean = fill(rng, n + 1);
+            let inv: Vec<f32> = (0..n + 1).map(|_| 0.5 + rng.f32()).collect();
+            let (a, b2) = (rng.gauss_f32(), rng.gauss_f32());
+            let beta = rng.f32();
+
+            let mut v = y.clone();
+            let mut s = y.clone();
+            simd::scale(&mut v[1..], a);
+            simd::scalar::scale(&mut s[1..], a);
+            prop_assert!(bits(&v) == bits(&s), "scale n={n} diverged bitwise");
+
+            let (mut v, mut s) = (y.clone(), y.clone());
+            simd::add_assign(&mut v[1..], &x[1..]);
+            simd::scalar::add_assign(&mut s[1..], &x[1..]);
+            prop_assert!(bits(&v) == bits(&s), "add_assign n={n} diverged bitwise");
+
+            let (mut v, mut s) = (y.clone(), y.clone());
+            simd::whiten_row(&mut v[1..], &x[1..], &mean[1..], &inv[1..]);
+            simd::scalar::whiten_row(&mut s[1..], &x[1..], &mean[1..], &inv[1..]);
+            prop_assert!(bits(&v) == bits(&s), "whiten_row n={n} diverged bitwise");
+
+            let (mut v, mut s) = (y.clone(), y.clone());
+            simd::lerp(&mut v[1..], &x[1..], beta);
+            simd::scalar::lerp(&mut s[1..], &x[1..], beta);
+            prop_assert!(bits(&v) == bits(&s), "lerp n={n} diverged bitwise");
+
+            let (mut v, mut s) = (y.clone(), y.clone());
+            simd::scale_into(&mut v[1..], a, &x[1..]);
+            simd::scalar::scale_into(&mut s[1..], a, &x[1..]);
+            prop_assert!(bits(&v) == bits(&s), "scale_into n={n} diverged bitwise");
+
+            let (mut v, mut s) = (vec![0.0; n + 1], vec![0.0; n + 1]);
+            simd::scale2_into(&mut v[1..], a, &x[1..], b2, &mean[1..]);
+            simd::scalar::scale2_into(&mut s[1..], a, &x[1..], b2, &mean[1..]);
+            prop_assert!(bits(&v) == bits(&s), "scale2_into n={n} diverged bitwise");
+        }
+        Ok(())
+    });
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn dot_i8_matches_scalar_exactly_over_shapes() {
+    prop::check("simd dot_i8 vs scalar (exact)", 24, |rng, _case| {
+        for &n in LENS {
+            let a: Vec<i8> = (0..n + 1).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..n + 1).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let got = simd::dot_i8(&a[1..], &b[1..]);
+            let want = simd::scalar::dot_i8(&a[1..], &b[1..]);
+            prop_assert!(got == want, "dot_i8 n={n}: {got} vs {want}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parse_resolves_env_and_capabilities() {
+    use vq_gnn::util::simd::Simd;
+    // every documented "off" spelling forces scalar regardless of hardware
+    for off in ["0", "off", "false", "scalar", " OFF ", "False"] {
+        assert_eq!(simd::parse(Some(off), true, false), Simd::Scalar, "{off:?}");
+        assert_eq!(simd::parse(Some(off), false, true), Simd::Scalar, "{off:?}");
+    }
+    // unset or any other value defers to hardware capability
+    for env in [None, Some("1"), Some("on"), Some("auto")] {
+        assert_eq!(simd::parse(env, true, false), Simd::Avx2);
+        assert_eq!(simd::parse(env, false, true), Simd::Neon);
+        assert_eq!(simd::parse(env, false, false), Simd::Scalar);
+    }
+    // the resolved dispatch is process-stable and names itself
+    assert_eq!(simd::active(), simd::active());
+    assert!(["scalar", "avx2", "neon"].contains(&simd::name()));
+}
+
+/// The prune's recall contract at integration scale: for k well above
+/// `PRUNE_MIN_K`, random whitened vectors and codewords, the two-stage
+/// assignment must equal the exact blocked kernel bit-for-bit for every
+/// top-m — the error bound guarantees the true argmin (and all its exact
+/// ties) survives to the rescore, so this is equality, not tolerance.
+#[test]
+fn prune_recall_exact_across_top_m() {
+    prop::check("assign_pruned == assign_blocked for all m", 8, |rng, case| {
+        let k = kernels::PRUNE_MIN_K + rng.below(96);
+        let fp = 3 + rng.below(34); // hits sub-lane and remainder widths
+        let b = 48 + rng.below(160);
+        let vw = fill(rng, b * fp);
+        let mut cww = fill(rng, k * fp);
+        // plant duplicates + a zero codeword so exact ties and zero
+        // scales are exercised at this scale too
+        if case % 2 == 0 && k >= 2 {
+            let (lo, hi) = cww.split_at_mut(fp);
+            hi[..fp].copy_from_slice(lo);
+            for x in &mut cww[(k - 1) * fp..] {
+                *x = 0.0;
+            }
+        }
+        let mut want = vec![0i32; b];
+        kernels::assign_blocked(&vw, fp, fp, &cww, k, fp, &mut want);
+        let qcb = kernels::QuantCodebook::build(&cww, k, fp, fp);
+        for m in [1usize, 4, kernels::PRUNE_TOP_M, k] {
+            let mut got = vec![0i32; b];
+            kernels::assign_pruned(&vw, fp, fp, &cww, fp, &qcb, m, &mut got);
+            prop_assert!(
+                got == want,
+                "prune m={m} k={k} fp={fp} b={b}: assignment diverged from exact kernel"
+            );
+        }
+        Ok(())
+    });
+}
