@@ -263,6 +263,34 @@ fn bench_serve(smoke: bool, report: &mut BTreeMap<String, Json>) {
         report.insert("serve_pipelined_qps".into(), num(qps));
     }
 
+    // ---- sharded maintenance fan-out: same burst, answers unchanged -----
+    // Rebuild behind `.shards(2)`: the session pool widens to 2 workers
+    // and note_served / TTL scans fan across shard workers keyed by the
+    // node partition map, with results merged in serial order
+    // (tests/sharded.rs pins byte-identity).  This key tracks the
+    // end-to-end throughput with the sharded maintenance path engaged.
+    let (rt, models) = eng.into_parts();
+    let mut builder = ServeEngine::builder().threads(1).shards(2);
+    for (name, m) in models {
+        builder = builder.model(name, m);
+    }
+    let mut eng = builder.build(rt).unwrap();
+    {
+        let mut rb = Rng::new(burst_seed);
+        let t0 = std::time::Instant::now();
+        for _ in 0..n_req {
+            eng.submit("gcn", Request::Node(rb.below(tiny.n()) as u32)).unwrap();
+        }
+        let served = eng.drain().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let qps = served.len() as f64 / wall.max(1e-12);
+        println!(
+            "serve/sharded tiny gcn S=2: {qps:.0} qps ({:.2}x vs first burst)",
+            wall1 / wall.max(1e-12)
+        );
+        report.insert("serve_sharded_qps_s2".into(), num(qps));
+    }
+
     // ---- open-loop saturation: bounded queue + deadline flushing --------
     // Rebuild the SAME frozen model behind a load-shedding configuration
     // (no re-freeze — into_parts hands the parts back).
@@ -528,6 +556,25 @@ fn main() {
     u.insert("codewords_refreshed_per_sec".into(), num(k as f64 / usecs));
     report.insert("update".into(), Json::Obj(u));
 
+    // --- sharded EMA broadcast→merge cycle, same shapes -------------------
+    // One full `ShardExec::update_branch` round trip at S=2: broadcast the
+    // whitening stats, shards compute chunk partials over their resident
+    // ranges, coordinator merges in global chunk order (bit-identical to
+    // `update` above — tests/sharded.rs pins it).  The delta vs
+    // `update.blocked_ms` is the fan-out + merge tax per branch per step.
+    {
+        use std::sync::Arc;
+        use vq_gnn::shard::{ShardExec, ShardPlan};
+        let exec = ShardExec::new(ShardPlan::contiguous(n, 2));
+        let va = Arc::new(v.clone());
+        let aa = Arc::new(assign.clone());
+        let mut br_m = br.clone();
+        let r_sm = bench("shard_merge/update_branch k=256 fp=128 b=10k S=2", t(2.0, 0.3), || {
+            exec.update_branch(&mut br_m, &va, &aa, 0.99, 0.99, None);
+        });
+        report.insert("shard_merge_ms".into(), num(r_sm.mean_ns / 1e6));
+    }
+
     // --- sketch building (the per-step O(b·d·B) scan) ---------------------
     let man = Manifest::load_or_builtin(&Manifest::default_dir());
     let ds = Rc::new(Dataset::generate(&man.datasets["arxiv_sim"], 42));
@@ -575,6 +622,24 @@ fn main() {
             println!("train_step/vq tiny gcn alloc: {bytes} bytes/step");
             report.insert("train_step_alloc_bytes".into(), num(bytes));
         }
+    }
+
+    // --- sharded trainer: the same trajectory with the EMA cycle fanned ---
+    // `set_shards(S)` routes every branch update through the persistent
+    // shard-worker pool (broadcast→partial→merge); the trajectory is
+    // bit-identical to `train_step_tiny_ms` above, so these keys measure
+    // pure coordination overhead at tiny scale (the win arrives with
+    // bigger b·fp; tiny pins that the tax stays bounded).
+    for s in [2usize, 4] {
+        let mut tr_s =
+            VqTrainer::new(&mut rt, &man, tiny.clone(), "gcn", "", NodeStrategy::Nodes, 1)
+                .unwrap();
+        tr_s.set_shards(s);
+        tr_s.train_step(&mut rt).unwrap(); // warm
+        let r = bench(&format!("train_step/vq tiny gcn sharded S={s}"), t(2.0, 0.4), || {
+            tr_s.train_step(&mut rt).unwrap();
+        });
+        report.insert(format!("train_step_sharded_ms_s{s}"), num(r.mean_ns / 1e6));
     }
 
     // --- attention paths: dense score tile + the learnable-conv backbones --

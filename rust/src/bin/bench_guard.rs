@@ -7,10 +7,11 @@
 //! Rules (keys are matched recursively, joined with '.'):
 //! - `*_ms` (timings, lower is better): warn when current > 1.5× baseline;
 //!   `*_ms_r<tag>` (per-offered-rate open-loop latencies like
-//!   `serve_open_loop_p99_ms_rhigh`) counts too;
-//! - `*_qps` / `*_per_sec` / `*_qps_t<N>` (throughput, incl. the
-//!   per-pool-width serving keys, higher is better): warn when current <
-//!   baseline / 1.5;
+//!   `serve_open_loop_p99_ms_rhigh`) and `*_ms_s<N>` (per-shard-count
+//!   timings like `train_step_sharded_ms_s2`) count too;
+//! - `*_qps` / `*_per_sec` / `*_qps_t<N>` / `*_qps_s<N>` (throughput,
+//!   incl. the per-pool-width and per-shard-count serving keys, higher is
+//!   better): warn when current < baseline / 1.5;
 //! - `*_alloc_bytes` (steady-state step allocation, lower is better —
 //!   requires the `alloc-count` bench feature): warn when current >
 //!   1.5× baseline, and when an allocation-free baseline (0 bytes) grows
@@ -70,14 +71,20 @@ fn load(path: &str) -> Option<BTreeMap<String, f64>> {
 }
 
 /// Lower-is-better keys: timings (`*_ms`, nanosecond micro-costs `*_ns`
-/// like `obs_record_overhead_ns`, and the per-offered-rate open-loop
-/// variants `*_ms_r<tag>`) and per-step allocation bytes.
+/// like `obs_record_overhead_ns`, the per-offered-rate open-loop
+/// variants `*_ms_r<tag>`, and the per-shard-count variants `*_ms_s<N>`
+/// like `train_step_sharded_ms_s2`) and per-step allocation bytes.
 fn lower_is_better(key: &str) -> bool {
     if key.ends_with("_ms") || key.ends_with("_ns") || key.ends_with("_alloc_bytes") {
         return true;
     }
-    match key.rsplit_once("_ms_r") {
-        Some((_, tag)) => !tag.is_empty() && tag.bytes().all(|b| b.is_ascii_alphanumeric()),
+    if let Some((_, tag)) = key.rsplit_once("_ms_r") {
+        if !tag.is_empty() && tag.bytes().all(|b| b.is_ascii_alphanumeric()) {
+            return true;
+        }
+    }
+    match key.rsplit_once("_ms_s") {
+        Some((_, n)) => !n.is_empty() && n.bytes().all(|b| b.is_ascii_digit()),
         None => false,
     }
 }
@@ -90,13 +97,19 @@ fn absolute_tolerance(key: &str) -> bool {
 
 const SHED_TOLERANCE: f64 = 0.15;
 
-/// Higher-is-better keys: throughput — `*_qps`, `*_per_sec`, and the
-/// per-pool-width variants `*_qps_t<N>` (`serve_concurrent_qps_t4`).
+/// Higher-is-better keys: throughput — `*_qps`, `*_per_sec`, the
+/// per-pool-width variants `*_qps_t<N>` (`serve_concurrent_qps_t4`), and
+/// the per-shard-count variants `*_qps_s<N>` (`serve_sharded_qps_s2`).
 fn higher_is_better(key: &str) -> bool {
     if key.ends_with("_qps") || key.ends_with("_per_sec") {
         return true;
     }
-    match key.rsplit_once("_qps_t") {
+    if let Some((_, n)) = key.rsplit_once("_qps_t") {
+        if !n.is_empty() && n.bytes().all(|b| b.is_ascii_digit()) {
+            return true;
+        }
+    }
+    match key.rsplit_once("_qps_s") {
         Some((_, n)) => !n.is_empty() && n.bytes().all(|b| b.is_ascii_digit()),
         None => false,
     }

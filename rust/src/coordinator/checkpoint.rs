@@ -10,10 +10,19 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::shard::ShardPlan;
 use crate::util::tensor::Tensor;
 use crate::vq::VqModel;
 
 const MAGIC: u32 = 0x56_51_47_31; // "VQG1"
+
+/// Optional trailing section of a training checkpoint: the node→shard
+/// partition map of a sharded run ([`ShardPlan`] bounds).  Written only
+/// when a plan is passed to [`save_with_shards`]; a plain "VQG1" file
+/// (every pre-sharding checkpoint) simply ends before it, so old files
+/// load unchanged and old loaders never see it (they stop at the VQ
+/// payload).
+const SHARD_MAGIC: u32 = 0x53_48_50_31; // "SHP1"
 
 /// Legacy serving-artifact magic: parameters + raw codewords + assignment
 /// tables only.  Still loadable ([`load_serving`] dispatches on the magic);
@@ -103,6 +112,19 @@ impl<R: Read> Reader<R> {
 /// Persist parameters + VQ state.  The artifact name is stored so a loader
 /// can refuse a shape-incompatible restore early.
 pub fn save(path: &Path, artifact: &str, params: &[Tensor], vq: &VqModel) -> Result<()> {
+    save_with_shards(path, artifact, params, vq, None)
+}
+
+/// [`save`] plus an optional node→shard partition map, appended as a
+/// "SHP1" trailing section (see [`SHARD_MAGIC`]).  `None` writes a plain
+/// "VQG1" file byte-identical to [`save`]'s.
+pub fn save_with_shards(
+    path: &Path,
+    artifact: &str,
+    params: &[Tensor],
+    vq: &VqModel,
+    plan: Option<&ShardPlan>,
+) -> Result<()> {
     let f = std::fs::File::create(path).context("create checkpoint")?;
     let mut w = Writer { w: std::io::BufWriter::new(f) };
     w.u32(MAGIC)?;
@@ -130,11 +152,27 @@ pub fn save(path: &Path, artifact: &str, params: &[Tensor], vq: &VqModel) -> Res
         }
         w.u32s(&layer.assign)?;
     }
+    if let Some(p) = plan {
+        w.u32(SHARD_MAGIC)?;
+        w.u32s(p.bounds())?;
+    }
     Ok(())
 }
 
 /// Restore into existing (shape-matched) params + VQ state.
 pub fn load(path: &Path, artifact: &str, params: &mut [Tensor], vq: &mut VqModel) -> Result<()> {
+    load_with_shards(path, artifact, params, vq).map(|_| ())
+}
+
+/// [`load`] plus the optional "SHP1" partition map: `Ok(Some(plan))` when
+/// the checkpoint came from a sharded run, `Ok(None)` for a plain "VQG1"
+/// file (the section is strictly trailing, so its absence is EOF).
+pub fn load_with_shards(
+    path: &Path,
+    artifact: &str,
+    params: &mut [Tensor],
+    vq: &mut VqModel,
+) -> Result<Option<ShardPlan>> {
     let f = std::fs::File::open(path).context("open checkpoint")?;
     let mut r = Reader { r: std::io::BufReader::new(f) };
     if r.u32()? != MAGIC {
@@ -191,7 +229,19 @@ pub fn load(path: &Path, artifact: &str, params: &mut [Tensor], vq: &mut VqModel
             bail!("assignment table mismatch");
         }
     }
-    Ok(())
+    // optional trailing shard section: EOF here means "unsharded file"
+    let mut b = [0u8; 4];
+    match r.r.read_exact(&mut b) {
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        other => other.context("read checkpoint shard section")?,
+    }
+    if u32::from_le_bytes(b) != SHARD_MAGIC {
+        bail!("unexpected trailing section in checkpoint");
+    }
+    let bounds = r.u32s()?;
+    let plan = ShardPlan::from_bounds(bounds)
+        .map_err(|e| anyhow::anyhow!("checkpoint shard map: {e}"))?;
+    Ok(Some(plan))
 }
 
 /// One frozen layer of a serving artifact: the paper's compact global
@@ -737,6 +787,43 @@ mod tests {
         assert_eq!(a2.count(), 0);
         assert_eq!(a2.f_pad, 0);
         assert!(a2.ids.is_empty());
+    }
+
+    #[test]
+    fn shard_plan_round_trips_and_stays_optional() {
+        let dir = std::env::temp_dir().join("vqgnn_ckpt_shard_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let params = vec![Tensor::from_f32(&[2], vec![1.0, 2.0])];
+        let vq = mk_vq(5);
+
+        // with a plan: the map comes back exactly
+        let plan = ShardPlan::contiguous(30, 4);
+        let p1 = dir.join("sharded.ckpt");
+        save_with_shards(&p1, "art", &params, &vq, Some(&plan)).unwrap();
+        let mut params2 = vec![Tensor::zeros(&[2])];
+        let mut vq2 = mk_vq(8);
+        let got = load_with_shards(&p1, "art", &mut params2, &mut vq2).unwrap();
+        assert_eq!(got.as_ref(), Some(&plan));
+        assert_eq!(params2[0].f, params[0].f);
+        assert_eq!(vq2.layers[0].assign, vq.layers[0].assign);
+
+        // without: a plain VQG1 file, byte-identical to `save`, loads None
+        let p2 = dir.join("plain_a.ckpt");
+        let p3 = dir.join("plain_b.ckpt");
+        save(&p2, "art", &params, &vq).unwrap();
+        save_with_shards(&p3, "art", &params, &vq, None).unwrap();
+        assert_eq!(std::fs::read(&p2).unwrap(), std::fs::read(&p3).unwrap());
+        let got = load_with_shards(&p2, "art", &mut params2, &mut vq2).unwrap();
+        assert!(got.is_none());
+        // and the plain `load` accepts a sharded file (section ignored)
+        load(&p1, "art", &mut params2, &mut vq2).unwrap();
+
+        // trailing garbage that is not a shard section is refused
+        let mut bytes = std::fs::read(&p2).unwrap();
+        bytes.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        let p4 = dir.join("garbage.ckpt");
+        std::fs::write(&p4, bytes).unwrap();
+        assert!(load_with_shards(&p4, "art", &mut params2, &mut vq2).is_err());
     }
 
     #[test]

@@ -18,8 +18,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::opt::{self, Optimizer};
 use crate::coordinator::vq_trainer::{pipeline_env_enabled, TrainMetrics};
 use crate::coordinator::{
-    fill_link_pairs, gather_features_into, init_params, lipschitz_clip, InSlot, PairBuf,
-    RunStats, Session,
+    fill_link_pairs, init_params, lipschitz_clip, InSlot, PairBuf, RunStats, Session,
 };
 use crate::datasets::{Dataset, Split};
 use crate::graph::{Conv, Graph};
@@ -248,6 +247,7 @@ fn fill_edge_session(
     arcs: &[(u32, u32, f32)],
     lam: &[f32],
     train: bool,
+    shards: usize,
 ) -> Result<()> {
     let (nn, ne) = (spec.nn, spec.ne);
     anyhow::ensure!(nodes.len() <= nn, "subgraph {} > artifact nn {}", nodes.len(), nn);
@@ -261,10 +261,13 @@ fn fill_edge_session(
     for (idx, slot) in slots.iter().enumerate() {
         match *slot {
             InSlot::X => {
-                // features padded to nn rows
+                // features padded to nn rows; the sharded gather is a
+                // disjoint row-range split — byte-identical at any S
                 let x = &mut inputs[idx].f;
                 x.fill(0.0);
-                gather_features_into(&ds.features, f, nodes, &mut x[..nodes.len() * f]);
+                crate::shard::gather_features_sharded(
+                    &ds.features, f, nodes, &mut x[..nodes.len() * f], shards,
+                );
             }
             InSlot::Esrc => {
                 let e = &mut inputs[idx].i;
@@ -345,6 +348,10 @@ pub struct EdgeTrainer {
     prefetched: Option<EdgePrep>,
     pub stats: RunStats,
     metrics: TrainMetrics,
+    /// Shard-parallel feature gather width (1 = serial).  The baselines
+    /// carry no VQ state, so their shard integration is the partitioned
+    /// gather — byte-identical at any width.
+    shards: usize,
 }
 
 impl EdgeTrainer {
@@ -404,8 +411,16 @@ impl EdgeTrainer {
             prefetched: None,
             stats: RunStats::default(),
             metrics: TrainMetrics::default(),
+            shards: 1,
             ds,
         })
+    }
+
+    /// Split the per-step feature gather across `s` shard workers
+    /// (1 = serial).  Purely an execution-layout knob: the gathered
+    /// bytes are identical at any `s`.
+    pub fn set_shards(&mut self, s: usize) {
+        self.shards = s.max(1);
     }
 
     /// Wire `train_sample`/`train_exec` stage timers into `reg` (the
@@ -475,6 +490,7 @@ impl EdgeTrainer {
             &prep.arcs,
             &prep.lam,
             true,
+            self.shards,
         )?;
         // step t computes while the prep worker samples subgraph t+1
         let exec_res = if self.pipeline {
@@ -592,6 +608,7 @@ impl EdgeTrainer {
             &arcs,
             &lam,
             false,
+            self.shards,
         )?;
         rt.execute_into(&art, &self.infer_io.inputs, &mut self.infer_io.outputs)?;
         Ok(self.infer_io.outputs[0].f.clone())

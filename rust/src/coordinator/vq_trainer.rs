@@ -34,6 +34,7 @@ use crate::obs;
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
 use crate::runtime::{Artifact, Runtime};
 use crate::sampler::{NodeBatcher, NodeStrategy};
+use crate::shard::{ShardExec, ShardPlan};
 use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::tensor::{self, Tensor};
@@ -274,6 +275,13 @@ pub struct VqTrainer {
     metrics: TrainMetrics,
     /// Per-layer (perplexity, dead-code) gauges; empty when unwired.
     health_gauges: Vec<(obs::GaugeHandle, obs::GaugeHandle)>,
+    /// Sharded EMA coordinator (`--shards S`); `None` = unsharded path.
+    /// The sharded trajectory is bit-identical at any S (see
+    /// `crate::shard` docs), so this is purely an execution-layout knob.
+    shards: Option<ShardExec>,
+    /// Dead-code expiry knob: `(threshold, rng)`.  `None` (default) keeps
+    /// the trajectory bit-identical to the NaN-guard-only update.
+    expiry: Option<(f32, Rng)>,
 }
 
 impl VqTrainer {
@@ -332,8 +340,48 @@ impl VqTrainer {
             stats: RunStats::default(),
             metrics: TrainMetrics::default(),
             health_gauges: Vec::new(),
+            shards: None,
+            expiry: None,
             ds,
         })
+    }
+
+    /// Shard the VQ EMA update across `s` persistent workers (1 = the
+    /// unsharded path).  The node→shard partition map is a contiguous
+    /// range split over the dataset's nodes; the resulting trajectory is
+    /// bit-identical to the unsharded one at any `s`.
+    pub fn set_shards(&mut self, s: usize) {
+        self.shards = if s <= 1 {
+            None
+        } else {
+            Some(ShardExec::new(ShardPlan::contiguous(self.ds.n(), s)))
+        };
+    }
+
+    /// Active shard count (1 when unsharded).
+    pub fn shards(&self) -> usize {
+        self.shards.as_ref().map_or(1, |e| e.shards())
+    }
+
+    /// The node→shard partition map, when sharded — checkpointed so a
+    /// resumed run keeps the same table ownership.
+    pub fn shard_plan(&self) -> Option<&ShardPlan> {
+        self.shards.as_ref().map(|e| &e.plan)
+    }
+
+    /// Restore a checkpointed partition map (spins up its worker pool).
+    pub fn set_shard_plan(&mut self, plan: Option<ShardPlan>) {
+        self.shards = plan.map(ShardExec::new);
+    }
+
+    /// Enable dead-code expiry: clusters whose EMA count drops below
+    /// `threshold` are re-seeded from current-batch rows (deterministic
+    /// draws from a dedicated forked RNG).  Off by default — enabling it
+    /// changes the trajectory (that is the point), but the sharded and
+    /// unsharded paths still agree bit-for-bit because expiry runs on
+    /// the coordinator after the merged refresh.
+    pub fn set_dead_code_expiry(&mut self, threshold: Option<f32>) {
+        self.expiry = threshold.map(|t| (t, self.rng.fork(0xDEAD)));
     }
 
     /// Wire stage timers (`train_sample`/`train_gather`/`train_exec`/
@@ -471,14 +519,30 @@ impl VqTrainer {
                 if learnable {
                     winsorize_rows_in_place(&mut sess.outputs[gi]);
                 }
-                self.vq.layers[l].update_from_batch(
-                    &prep.batch,
-                    &sess.outputs[xi],
-                    &sess.outputs[gi],
-                    &sess.outputs[ai],
-                    self.gamma,
-                    self.beta,
-                );
+                // Sharded and unsharded EMA updates are bit-identical —
+                // the shard coordinator merges the same per-chunk
+                // partials in the same order (crate::shard docs).
+                match &self.shards {
+                    Some(exec) => exec.update_layer(
+                        &mut self.vq.layers[l],
+                        &prep.batch,
+                        &sess.outputs[xi],
+                        &sess.outputs[gi],
+                        &sess.outputs[ai],
+                        self.gamma,
+                        self.beta,
+                        &mut self.expiry,
+                    ),
+                    None => self.vq.layers[l].update_from_batch_expiring(
+                        &prep.batch,
+                        &sess.outputs[xi],
+                        &sess.outputs[gi],
+                        &sess.outputs[ai],
+                        self.gamma,
+                        self.beta,
+                        &mut self.expiry,
+                    ),
+                }
             }
             // optimizer on the grad.* tail (ordered like params); attention
             // backbones normalize the global gradient scale (GRAD_NORM_CAP)

@@ -26,6 +26,10 @@ pub struct Ctx {
     /// VQ-health gauges into the registry, and `run_one_suffix` prints one
     /// report line every N epochs (stderr).
     pub metrics: Option<(std::sync::Arc<crate::obs::Registry>, usize)>,
+    /// `train --shards S`: in-process shard count handed to every trainer
+    /// (1 = unsharded).  Trajectories are bit-identical at any value — the
+    /// knob changes who computes what, never the bytes (`shard` module).
+    pub shards: usize,
 }
 
 impl Ctx {
@@ -41,6 +45,7 @@ impl Ctx {
             out_dir,
             datasets: BTreeMap::new(),
             metrics: None,
+            shards: 1,
         })
     }
 
@@ -78,6 +83,7 @@ pub fn run_one_suffix(ctx: &mut Ctx, ds_name: &str, model: &str, method: &str,
     if method == "vq" {
         let mut tr = VqTrainer::new(&mut ctx.rt, &ctx.man, ds, model, suffix,
                                     NodeStrategy::Nodes, seed)?;
+        tr.set_shards(ctx.shards);
         if let Some((reg, _)) = &ctx.metrics {
             tr.set_metrics(reg);
         }
@@ -90,6 +96,7 @@ pub fn run_one_suffix(ctx: &mut Ctx, ds_name: &str, model: &str, method: &str,
     } else {
         let kind = Baseline::from_str(method).context("method")?;
         let mut tr = EdgeTrainer::new(&mut ctx.rt, &ctx.man, ds, model, kind, seed)?;
+        tr.set_shards(ctx.shards);
         if let Some((reg, _)) = &ctx.metrics {
             tr.set_metrics(reg);
         }

@@ -27,5 +27,6 @@ pub mod obs;
 pub mod runtime;
 pub mod sampler;
 pub mod serve;
+pub mod shard;
 pub mod util;
 pub mod vq;

@@ -60,7 +60,9 @@ fn main() -> Result<()> {
             let suffix = flags.get("suffix").cloned().unwrap_or_default();
             let metrics_every: Option<usize> =
                 flags.get("metrics-every").map(|s| s.parse()).transpose()?;
+            let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
             let mut ctx = exp::Ctx::new(epochs, seeds)?;
+            ctx.shards = shards.max(1);
             let registry = metrics_every
                 .map(|n| (std::sync::Arc::new(vq_gnn::obs::Registry::new()), n));
             ctx.metrics = registry.clone();
@@ -127,12 +129,12 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage:\n  vq-gnn train --dataset D --model M --method \
-                 [vq|full|ns|cluster|saint] [--epochs N] [--seed S] \
+                 [vq|full|ns|cluster|saint] [--epochs N] [--seed S] [--shards S] \
                  [--metrics-every EPOCHS] [--backend native|pjrt]\n  \
                  vq-gnn serve --dataset D --model M[,M2,..] \
                  (--requests FILE | --listen ADDR) \
                  [--ckpt SERVING.bin] [--epochs N] [--seed S] [--out FILE] \
-                 [--threads N] [--deadline-ms D] [--queue-cap C] \
+                 [--threads N] [--shards S] [--deadline-ms D] [--queue-cap C] \
                  [--admit FILE] [--max-admitted N] [--ttl-ms T] \
                  [--drift-threshold T] [--refresh] [--metrics-every N]\n  \
                  vq-gnn client --addr HOST:PORT --model M (--requests FILE | --stats) \
@@ -239,6 +241,7 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     let epochs: usize = flags.get("epochs").map(|s| s.parse()).transpose()?.unwrap_or(3);
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let threads: usize = flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let deadline_ms: Option<u64> = flags.get("deadline-ms").map(|s| s.parse()).transpose()?;
     let queue_cap: Option<usize> = flags.get("queue-cap").map(|s| s.parse()).transpose()?;
     let max_admitted: Option<usize> =
@@ -277,7 +280,10 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
     // zero flags, and recording never perturbs answers (pinned by
     // tests/obs.rs).  --metrics-every only gates the periodic report line.
     let registry = std::sync::Arc::new(vq_gnn::obs::Registry::new());
-    let mut builder = ServeEngine::builder().threads(threads).metrics(registry.clone());
+    let mut builder = ServeEngine::builder()
+        .threads(threads)
+        .shards(shards)
+        .metrics(registry.clone());
     if let Some(ms) = deadline_ms {
         builder = builder.deadline(std::time::Duration::from_millis(ms));
     }

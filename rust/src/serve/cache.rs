@@ -332,6 +332,15 @@ impl LayerCache {
     /// row in the bounded refresh ring.
     pub fn observe_serving(&mut self, row: &[f32]) {
         let d = self.nearest_distance(row);
+        self.record_observation(row, d);
+    }
+
+    /// The mutation half of [`Self::observe_serving`], with the distance
+    /// precomputed — the sharded `note_served` path fans the (pure,
+    /// read-only) `nearest_distance` calls across shard workers and then
+    /// replays the recordings here in original request order, so the
+    /// histogram and refresh ring are byte-identical to the serial path.
+    pub fn record_observation(&mut self, row: &[f32], d: f32) {
         self.drift_obs.record(d);
         let fl = self.plan.f_in;
         if self.recent_rows < RECENT_ROWS {

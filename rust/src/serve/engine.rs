@@ -500,6 +500,7 @@ impl std::error::Error for ServeError {}
 pub struct ServeEngineBuilder {
     models: Vec<(String, ServingModel)>,
     threads: usize,
+    shards: usize,
     deadline: Option<Duration>,
     queue_cap: Option<usize>,
     max_admitted: Option<usize>,
@@ -520,6 +521,17 @@ impl ServeEngineBuilder {
     /// Worker-pool width applied to every model (default 1).
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = n;
+        self
+    }
+
+    /// In-process shard count for every model (default 1 = unsharded).
+    /// `s > 1` partitions each model's maintenance paths across `s` shard
+    /// workers ([`ServingModel::set_shards`]) and widens the session pool
+    /// to at least `s` so each shard worker drives its own session.
+    /// Answers and maintenance state stay byte-identical at any `s` —
+    /// this knob only changes who computes what (see the `shard` module).
+    pub fn shards(mut self, s: usize) -> Self {
+        self.shards = s.max(1);
         self
     }
 
@@ -610,7 +622,8 @@ impl ServeEngineBuilder {
             if entries.iter().any(|e| e.name == name) {
                 return Err(ServeError::DuplicateModel(name));
             }
-            model.set_threads(self.threads);
+            model.set_threads(self.threads.max(self.shards));
+            model.set_shards(self.shards);
             let mut queue = MicroBatcher::new();
             queue.set_deadline(self.deadline);
             entries.push(ModelEntry { name, model, queue, drift_high: false });
@@ -625,7 +638,8 @@ impl ServeEngineBuilder {
             rt,
             router: Router::new(entries),
             next_ticket: 0,
-            threads: self.threads,
+            threads: self.threads.max(self.shards),
+            shards: self.shards,
             deadline: self.deadline,
             queue_cap: self.queue_cap,
             max_admitted: self.max_admitted,
@@ -649,6 +663,7 @@ pub struct ServeEngine {
     router: Router,
     next_ticket: usize,
     threads: usize,
+    shards: usize,
     deadline: Option<Duration>,
     queue_cap: Option<usize>,
     max_admitted: Option<usize>,
@@ -664,6 +679,7 @@ impl ServeEngine {
         ServeEngineBuilder {
             models: Vec::new(),
             threads: 1,
+            shards: 1,
             deadline: None,
             queue_cap: None,
             max_admitted: None,
@@ -788,6 +804,11 @@ impl ServeEngine {
         self.threads
     }
 
+    /// In-process shard count applied to every model (1 = unsharded).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
     pub fn deadline(&self) -> Option<Duration> {
         self.deadline
     }
@@ -832,6 +853,7 @@ impl ServeEngine {
             return Err(ServeError::DuplicateModel(name));
         }
         model.set_threads(self.threads);
+        model.set_shards(self.shards);
         let mut queue = MicroBatcher::new();
         queue.set_deadline(self.deadline);
         self.router.push(ModelEntry { name, model, queue, drift_high: false });

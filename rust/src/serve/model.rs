@@ -41,6 +41,7 @@ use crate::runtime::manifest::Manifest;
 use crate::runtime::{Artifact, ExecSession, InputSlots, Runtime};
 use crate::serve::admit::AdmissionQueue;
 use crate::serve::cache::EmbeddingCache;
+use crate::shard::ShardPlan;
 use crate::util::par;
 use crate::util::tensor::{self, DType, Tensor};
 use crate::vq::sketch::SketchScratch;
@@ -571,6 +572,13 @@ pub struct ServingModel {
     /// Reusable sort-dedup buffer for [`Self::note_served`] — a 10k-slot
     /// drain must not allocate per flush.
     touch_buf: Vec<u32>,
+    /// Node→shard partition for the maintenance fan-out (`None` = serial).
+    /// Governs which worker computes each served row's drift distance in
+    /// [`Self::note_served`] and which slot range each worker scans in
+    /// [`Self::retention_victims`]; recordings and eviction decisions are
+    /// merged back in the serial order, so maintenance state is
+    /// byte-identical at any shard count (see the `shard` module docs).
+    shards: Option<ShardPlan>,
 }
 
 impl ServingModel {
@@ -649,6 +657,7 @@ impl ServingModel {
             queue: AdmissionQueue::default(),
             last_touch,
             touch_buf: Vec::new(),
+            shards: None,
         })
     }
 
@@ -732,6 +741,7 @@ impl ServingModel {
             queue: AdmissionQueue::default(),
             last_touch,
             touch_buf: Vec::new(),
+            shards: None,
         })
     }
 
@@ -791,6 +801,20 @@ impl ServingModel {
         while self.pool.len() < n {
             self.pool.push(self.core.new_session());
         }
+    }
+
+    /// Partition the maintenance paths across `s` shard workers (≤ 1 =
+    /// serial).  The plan covers the frozen node range contiguously;
+    /// admitted ids are assigned round-robin by [`ShardPlan::owner_of`].
+    /// Maintenance output is merged back in serial order, so this knob —
+    /// like the pool width — never changes a single byte of state.
+    pub fn set_shards(&mut self, s: usize) {
+        self.shards = (s > 1).then(|| ShardPlan::contiguous(self.core.ds.n(), s));
+    }
+
+    /// Current maintenance shard count (1 = serial).
+    pub fn shards(&self) -> usize {
+        self.shards.as_ref().map_or(1, ShardPlan::shards)
     }
 
     /// Per-worker throughput counters (batches, padded rows included).
@@ -954,6 +978,9 @@ impl ServingModel {
         let f = ds.cfg.f_in_pad;
         let EmbeddingCache { layers, admitted } = &mut self.core.cache;
         let observe = layers.first().map(|l| l.plan.f_in == f).unwrap_or(false);
+        // Phase 1, in id order: refresh admitted touch stamps and resolve
+        // every served id to its feature row (dropping eviction races).
+        let mut rows: Vec<(u32, &[f32])> = Vec::with_capacity(self.touch_buf.len());
         for &v in &self.touch_buf {
             let row = if (v as usize) < admitted.base_n {
                 &ds.features[v as usize * f..(v as usize + 1) * f]
@@ -966,8 +993,44 @@ impl ServingModel {
                     None => continue, // raced an eviction: already refused upstream
                 }
             };
-            if observe {
-                layers[0].observe_serving(row);
+            rows.push((v, row));
+        }
+        if !observe || rows.is_empty() {
+            return;
+        }
+        let l0 = &mut layers[0];
+        match &self.shards {
+            None => {
+                for &(_, row) in &rows {
+                    l0.observe_serving(row);
+                }
+            }
+            Some(plan) => {
+                // Phase 2: fan the pure nearest-codeword distances across
+                // the shard workers, each covering only the ids it owns.
+                let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); plan.shards()];
+                for (i, &(v, _)) in rows.iter().enumerate() {
+                    buckets[plan.owner_of(v)].push(i);
+                }
+                let mut dists = vec![0.0f32; rows.len()];
+                {
+                    let l0r = &*l0;
+                    let parts = par::scope_map(&mut buckets, |_w, idxs| {
+                        idxs.iter()
+                            .map(|&i| l0r.nearest_distance(rows[i].1))
+                            .collect::<Vec<f32>>()
+                    });
+                    for (idxs, part) in buckets.iter().zip(&parts) {
+                        for (&i, &d) in idxs.iter().zip(part) {
+                            dists[i] = d;
+                        }
+                    }
+                }
+                // Phase 3, back in id order: replay the recordings so the
+                // drift histogram and refresh ring match the serial bytes.
+                for (i, &(_, row)) in rows.iter().enumerate() {
+                    l0.record_observation(row, dists[i]);
+                }
             }
         }
     }
@@ -986,15 +1049,38 @@ impl ServingModel {
             return Vec::new();
         }
         let now = Instant::now();
-        let mut victims: Vec<u32> = Vec::new();
-        let mut live: Vec<(Instant, u32)> = Vec::new();
-        for s in 0..n {
-            let id = adm.id_of(s);
-            match ttl {
-                Some(t) if now.duration_since(self.last_touch[s]) >= t => victims.push(id),
-                _ => live.push((self.last_touch[s], id)),
+        let scan = |lo: usize, hi: usize| {
+            let mut victims: Vec<u32> = Vec::new();
+            let mut live: Vec<(Instant, u32)> = Vec::new();
+            for s in lo..hi {
+                let id = adm.id_of(s);
+                match ttl {
+                    Some(t) if now.duration_since(self.last_touch[s]) >= t => {
+                        victims.push(id)
+                    }
+                    _ => live.push((self.last_touch[s], id)),
+                }
             }
-        }
+            (victims, live)
+        };
+        let (mut victims, mut live) = match &self.shards {
+            // shard the TTL scan over slot ranges; the merge order cannot
+            // matter because both lists are globally sorted below
+            Some(plan) if n >= 2 * plan.shards() => {
+                let st = plan.shards();
+                let mut ranges: Vec<(usize, usize)> =
+                    (0..st).map(|s| crate::shard::chunk_range(n, st, s)).collect();
+                let parts = par::scope_map(&mut ranges, |_w, r| scan(r.0, r.1));
+                let mut victims = Vec::new();
+                let mut live = Vec::new();
+                for (v, l) in parts {
+                    victims.extend(v);
+                    live.extend(l);
+                }
+                (victims, live)
+            }
+            _ => scan(0, n),
+        };
         if let Some(cap) = max_admitted {
             if live.len() > cap {
                 live.sort(); // oldest stamp first, ids break ties

@@ -1,0 +1,415 @@
+//! In-process sharded scale-out: codebooks as the compressed cross-shard
+//! message.
+//!
+//! The paper's central trick — all out-of-batch context rides k quantized
+//! codewords plus count sketches — means only O(k·fp) codebook state ever
+//! needs to cross a shard boundary, never per-node messages.  This module
+//! owns that boundary:
+//!
+//! - [`ShardPlan`] — the node→shard partition map (contiguous ranges).
+//!   It governs which shard *owns* a node's rows: feature gathers, serve
+//!   cache maintenance, and checkpointed state are split along it.  The
+//!   map is deliberately a plain table of `u32` bounds: it is the seam a
+//!   later process/socket hop over `serve::proto` would serialize.
+//! - [`ShardExec`] — a coordinator over a persistent
+//!   [`par::ShardPool`] of S workers that runs the EMA codebook update
+//!   as a broadcast→partial→merge cycle: the coordinator broadcasts the
+//!   current whitening stats (the compressed message), each shard
+//!   computes moment and cluster partials over its resident chunk range,
+//!   and the coordinator merges all partials **in global chunk order**.
+//!
+//! # Determinism contract
+//!
+//! The sharded trajectory is bit-identical to the unsharded one at any
+//! shard count S, because:
+//!
+//! 1. Per-chunk partials are computed by the *same functions* the
+//!    unsharded kernels use (`kernels::mean_var_chunk_partial`,
+//!    `kernels::cluster_chunk_partial`) over the same `ROW_BLOCK`-aligned
+//!    chunks — the partial boundaries never move with S.
+//! 2. Partials are merged in ascending global chunk order with the same
+//!    `f64` adds / `simd::add_assign` the unsharded merge uses
+//!    (`kernels::{mean_var_from_partials, cluster_from_partials}`) —
+//!    float addition is non-associative, so the order is the contract.
+//! 3. Everything order-free (whitening, assignment distances) is
+//!    elementwise per row and identical wherever it runs.
+//!
+//! Note the seam: EMA partials are sharded by **batch chunk index**
+//! (rows land in `ROW_BLOCK` chunks exactly as `par::par_map_chunks`
+//! would cut them), while the [`ShardPlan`] node ranges govern **table
+//! residence** (gathers, serve-cache maintenance, checkpoints).  Both
+//! produce results independent of S by the argument above.
+
+use std::sync::Arc;
+
+use crate::util::par::{self, ShardPool};
+use crate::util::rng::Rng;
+use crate::util::simd;
+use crate::util::tensor::Tensor;
+use crate::vq::kernels::{self, ROW_BLOCK};
+use crate::vq::{LayerVq, VqBranch};
+
+/// Contiguous node→shard partition map: shard `s` owns nodes
+/// `[bounds[s], bounds[s+1])`.  `bounds` always starts at 0 and ends at
+/// the node count, so `bounds.len() == shards + 1`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    bounds: Vec<u32>,
+}
+
+impl ShardPlan {
+    /// Balanced contiguous partition of `n` nodes into `shards` ranges
+    /// (the first `n % shards` ranges get one extra node).
+    pub fn contiguous(n: usize, shards: usize) -> ShardPlan {
+        let s = shards.max(1);
+        let mut bounds = Vec::with_capacity(s + 1);
+        for i in 0..s {
+            bounds.push(chunk_range(n, s, i).0 as u32);
+        }
+        bounds.push(n as u32);
+        ShardPlan { bounds }
+    }
+
+    /// Rebuild a plan from checkpointed bounds, validating the shape.
+    pub fn from_bounds(bounds: Vec<u32>) -> Result<ShardPlan, String> {
+        if bounds.len() < 2 {
+            return Err(format!("shard plan needs >= 2 bounds, got {}", bounds.len()));
+        }
+        if bounds[0] != 0 {
+            return Err(format!("shard plan must start at node 0, got {}", bounds[0]));
+        }
+        if bounds.windows(2).any(|w| w[0] > w[1]) {
+            return Err("shard plan bounds must be non-decreasing".into());
+        }
+        Ok(ShardPlan { bounds })
+    }
+
+    /// The checkpoint wire form — the exact bounds table.
+    pub fn bounds(&self) -> &[u32] {
+        &self.bounds
+    }
+
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        *self.bounds.last().unwrap() as usize
+    }
+
+    /// The node range `[lo, hi)` shard `s` owns.
+    pub fn node_range(&self, s: usize) -> (usize, usize) {
+        (self.bounds[s] as usize, self.bounds[s + 1] as usize)
+    }
+
+    /// Owning shard of a frozen-graph node (the last shard whose lower
+    /// bound is ≤ `node`, which skips empty ranges).
+    pub fn shard_of(&self, node: usize) -> usize {
+        debug_assert!(node < self.n_nodes());
+        self.bounds[..self.bounds.len() - 1]
+            .partition_point(|&b| b as usize <= node)
+            .saturating_sub(1)
+    }
+
+    /// Owning shard of any serving id: frozen nodes by range, admitted
+    /// ids (which are minted past the frozen range, monotone for life)
+    /// round-robin — a total ownership rule over the open-ended id
+    /// space.  Maintenance results are merged in slot order afterwards,
+    /// so serving answers never depend on this choice.
+    pub fn owner_of(&self, id: u32) -> usize {
+        let n = self.n_nodes();
+        let id = id as usize;
+        if id < n {
+            self.shard_of(id)
+        } else {
+            (id - n) % self.shards()
+        }
+    }
+}
+
+/// Balanced contiguous split of `n` items into `shards` ranges: the
+/// range `[lo, hi)` owned by shard `s`.  Shared by the node partition
+/// and the per-batch chunk partition.
+pub fn chunk_range(n: usize, shards: usize, s: usize) -> (usize, usize) {
+    let q = n / shards;
+    let r = n % shards;
+    let lo = s * q + s.min(r);
+    (lo, lo + q + usize::from(s < r))
+}
+
+/// Per-shard worker state for the trainer's EMA cycle: just reusable
+/// whitening scratch — all real inputs arrive as per-step `Arc`
+/// broadcasts (the cross-shard message is data, never a borrow).
+#[derive(Default)]
+pub struct TrainShard {
+    vw: Vec<f32>,
+}
+
+/// Coordinator over a persistent pool of S shard workers, running the
+/// EMA codebook update as the broadcast→partial→merge cycle described
+/// in the module docs.
+pub struct ShardExec {
+    pub plan: ShardPlan,
+    pool: ShardPool<TrainShard>,
+}
+
+impl ShardExec {
+    pub fn new(plan: ShardPlan) -> ShardExec {
+        let s = plan.shards();
+        let inner = (par::max_threads() / s).max(1);
+        let states = (0..s).map(|_| TrainShard::default()).collect();
+        ShardExec { plan, pool: ShardPool::new(states, inner) }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.pool.shards()
+    }
+
+    /// Sharded [`VqBranch::update_expiring`]: two broadcast→merge rounds.
+    ///
+    /// Round A — shards compute f64 moment partials over their chunk
+    /// ranges of the raw batch; the coordinator merges them in global
+    /// chunk order and blends the whitening EMAs.  Round B — the
+    /// coordinator broadcasts the fresh (mean, inv_std) stats, shards
+    /// whiten their resident rows and compute cluster partials, and the
+    /// coordinator merges those in chunk order and refreshes codewords.
+    /// Expiry (when enabled) runs on the coordinator after the merge,
+    /// so its RNG draw sequence is shard-count independent.
+    pub fn update_branch(
+        &self,
+        br: &mut VqBranch,
+        v: &Arc<Vec<f32>>,
+        assign: &Arc<Vec<i32>>,
+        gamma: f32,
+        beta: f32,
+        expiry: Option<(f32, &mut Rng)>,
+    ) {
+        let b = assign.len();
+        if b == 0 {
+            return;
+        }
+        let (fp, k) = (br.fp, br.k);
+        debug_assert_eq!(v.len(), b * fp);
+        let s_total = self.pool.shards();
+        let n_chunks = (b + ROW_BLOCK - 1) / ROW_BLOCK;
+
+        // Round A: moment partials over resident chunk ranges.
+        let va = v.clone();
+        let mv = self.pool.map(move |s, _st| {
+            let (c0, c1) = chunk_range(n_chunks, s_total, s);
+            (c0..c1)
+                .map(|ci| {
+                    let lo = ci * ROW_BLOCK * fp;
+                    let hi = (lo + ROW_BLOCK * fp).min(b * fp);
+                    kernels::mean_var_chunk_partial(&va[lo..hi], fp)
+                })
+                .collect::<Vec<_>>()
+        });
+        // Shard s owns chunks [c_s, c_{s+1}), so flattening in shard
+        // order IS ascending global chunk order — the same merge the
+        // unsharded kernel performs.
+        let (m, varr) = kernels::mean_var_from_partials(mv.into_iter().flatten(), b, fp);
+        let inv = br.apply_moments(&m, &varr, gamma, beta);
+
+        // Broadcast the updated whitening stats — O(fp) data, the
+        // compressed cross-shard message.
+        let mean = Arc::new(br.mean.clone());
+        let inv = Arc::new(inv);
+
+        // Round B: whiten resident rows, cluster partials per chunk.
+        let (v2, a2, mean2, inv2) = (v.clone(), assign.clone(), mean.clone(), inv.clone());
+        let cl = self.pool.map(move |s, st| {
+            let (c0, c1) = chunk_range(n_chunks, s_total, s);
+            let r0 = c0 * ROW_BLOCK;
+            let r1 = (c1 * ROW_BLOCK).min(b);
+            let rows = r1.saturating_sub(r0);
+            st.vw.resize(rows * fp, 0.0);
+            for r in 0..rows {
+                simd::whiten_row(
+                    &mut st.vw[r * fp..(r + 1) * fp],
+                    &v2[(r0 + r) * fp..(r0 + r + 1) * fp],
+                    &mean2,
+                    &inv2,
+                );
+            }
+            (c0..c1)
+                .map(|ci| {
+                    let lo = ci * ROW_BLOCK;
+                    let hi = (lo + ROW_BLOCK).min(b);
+                    kernels::cluster_chunk_partial(
+                        &st.vw[(lo - r0) * fp..(hi - r0) * fp],
+                        &a2[lo..hi],
+                        fp,
+                        k,
+                    )
+                })
+                .collect::<Vec<_>>()
+        });
+        let (bc, bs) = kernels::cluster_from_partials(cl.into_iter().flatten(), fp, k);
+        br.apply_cluster_partials(&bc, &bs, gamma);
+        if let Some((threshold, rng)) = expiry {
+            br.expire_dead(v, b, &inv, threshold, rng);
+        }
+    }
+
+    /// Sharded [`LayerVq::update_from_batch_expiring`]: identical concat
+    /// layout and assignment-table writes, with each branch's EMA update
+    /// running the broadcast→merge cycle above.
+    pub fn update_layer(
+        &self,
+        lv: &mut LayerVq,
+        batch: &[u32],
+        xfeat: &Tensor,
+        gvec: &Tensor,
+        assign: &Tensor,
+        gamma: f32,
+        beta: f32,
+        expiry: &mut Option<(f32, Rng)>,
+    ) {
+        let b = batch.len();
+        let (nb, fp) = (lv.plan.n_br, lv.plan.fp);
+        debug_assert_eq!(assign.shape, &[nb, b]);
+        let z = lv.concat_z(xfeat, gvec);
+        for j in 0..nb {
+            let mut vbr = vec![0.0f32; b * fp];
+            lv.branch_rows_into(&z, j, &mut vbr);
+            let v = Arc::new(vbr);
+            let a = Arc::new(assign.i[j * b..(j + 1) * b].to_vec());
+            let e = expiry.as_mut().map(|(t, r)| (*t, &mut *r));
+            self.update_branch(&mut lv.branches[j], &v, &a, gamma, beta, e);
+            lv.write_assignments(j, batch, a.as_slice());
+        }
+    }
+}
+
+/// Shard-parallel feature gather: split the batch into `shards`
+/// contiguous position ranges and copy each range's rows on its own
+/// worker.  Pure disjoint row copies — byte-identical to the serial
+/// gather at any shard count.
+pub fn gather_features_sharded(
+    features: &[f32],
+    f: usize,
+    nodes: &[u32],
+    out: &mut [f32],
+    shards: usize,
+) {
+    let s = shards.max(1);
+    if s == 1 || f == 0 || nodes.len() < s {
+        crate::coordinator::gather_features_into(features, f, nodes, out);
+        return;
+    }
+    let per = (nodes.len() + s - 1) / s;
+    let mut parts: Vec<(&[u32], &mut [f32])> =
+        nodes.chunks(per).zip(out.chunks_mut(per * f)).collect();
+    par::scope_map(&mut parts, |_w, (ns, os)| {
+        crate::coordinator::gather_features_into(features, f, ns, os);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_plan_covers_every_node_once() {
+        for (n, s) in [(10usize, 3usize), (7, 7), (5, 8), (1000, 4), (0, 2)] {
+            let plan = ShardPlan::contiguous(n, s);
+            assert_eq!(plan.shards(), s.max(1));
+            assert_eq!(plan.n_nodes(), n);
+            let mut covered = 0usize;
+            for sh in 0..plan.shards() {
+                let (lo, hi) = plan.node_range(sh);
+                assert!(lo <= hi && hi <= n);
+                for node in lo..hi {
+                    assert_eq!(plan.shard_of(node), sh, "node {node}");
+                }
+                covered += hi - lo;
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn chunk_range_is_a_balanced_cover() {
+        for (n, s) in [(13usize, 4usize), (4, 4), (3, 5), (0, 3), (64, 1)] {
+            let mut next = 0usize;
+            for sh in 0..s {
+                let (lo, hi) = chunk_range(n, s, sh);
+                assert_eq!(lo, next);
+                assert!(hi - lo <= n / s + 1);
+                next = hi;
+            }
+            assert_eq!(next, n);
+        }
+    }
+
+    #[test]
+    fn owner_of_is_total_over_admitted_ids() {
+        let plan = ShardPlan::contiguous(100, 4);
+        for id in 0..100u32 {
+            assert_eq!(plan.owner_of(id), plan.shard_of(id as usize));
+        }
+        for id in 100..140u32 {
+            assert!(plan.owner_of(id) < 4);
+        }
+        assert_eq!(plan.owner_of(100), 0);
+        assert_eq!(plan.owner_of(101), 1);
+    }
+
+    #[test]
+    fn plan_bounds_round_trip_and_validate() {
+        let plan = ShardPlan::contiguous(37, 3);
+        let back = ShardPlan::from_bounds(plan.bounds().to_vec()).unwrap();
+        assert_eq!(plan, back);
+        assert!(ShardPlan::from_bounds(vec![]).is_err());
+        assert!(ShardPlan::from_bounds(vec![1, 5]).is_err());
+        assert!(ShardPlan::from_bounds(vec![0, 5, 3]).is_err());
+    }
+
+    #[test]
+    fn sharded_branch_update_is_bit_identical() {
+        let mut rng = Rng::new(42);
+        let reference = VqBranch::init(16, 8, &mut rng);
+        let b = 3 * ROW_BLOCK + 17; // exercises the short tail chunk
+        let v: Vec<f32> = (0..b * 8).map(|_| rng.gauss_f32()).collect();
+        let assign: Vec<i32> = (0..b).map(|_| rng.below(16) as i32).collect();
+        let mut unsharded = reference.clone();
+        for _ in 0..3 {
+            unsharded.update(&v, &assign, 0.9, 0.9);
+        }
+        let va = Arc::new(v.clone());
+        let aa = Arc::new(assign.clone());
+        for s in [1usize, 2, 4] {
+            let exec = ShardExec::new(ShardPlan::contiguous(b, s));
+            let mut br = reference.clone();
+            for _ in 0..3 {
+                exec.update_branch(&mut br, &va, &aa, 0.9, 0.9, None);
+            }
+            let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&br.cww), bits(&unsharded.cww), "cww diverged at S={s}");
+            assert_eq!(bits(&br.counts), bits(&unsharded.counts), "counts diverged at S={s}");
+            assert_eq!(bits(&br.sums), bits(&unsharded.sums), "sums diverged at S={s}");
+            assert_eq!(bits(&br.mean), bits(&unsharded.mean), "mean diverged at S={s}");
+            assert_eq!(bits(&br.var), bits(&unsharded.var), "var diverged at S={s}");
+        }
+    }
+
+    #[test]
+    fn sharded_gather_matches_serial() {
+        let mut rng = Rng::new(7);
+        let (n, f) = (50usize, 6usize);
+        let features: Vec<f32> = (0..n * f).map(|_| rng.gauss_f32()).collect();
+        let nodes: Vec<u32> = (0..33).map(|_| rng.below(n) as u32).collect();
+        let mut serial = vec![0.0f32; nodes.len() * f];
+        crate::coordinator::gather_features_into(&features, f, &nodes, &mut serial);
+        for s in [1usize, 2, 4, 64] {
+            let mut sharded = vec![0.0f32; nodes.len() * f];
+            gather_features_sharded(&features, f, &nodes, &mut sharded, s);
+            assert_eq!(
+                serial.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                sharded.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "gather diverged at S={s}"
+            );
+        }
+    }
+}

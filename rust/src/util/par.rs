@@ -164,6 +164,98 @@ where
     slots.into_iter().map(|r| r.expect("chunk not computed")).collect()
 }
 
+type ShardJob<T> = Box<dyn FnOnce(&mut T) + Send>;
+
+/// Persistent shard-worker pool: S long-lived threads, each owning one
+/// shard state `T` for the lifetime of the pool (unlike the scoped
+/// helpers above, workers survive across calls — the substrate for
+/// sharded execution, where per-step work is dispatched to the thread
+/// that owns the shard's tables).
+///
+/// Jobs are `'static` closures, so everything a step sends to a shard
+/// must be owned or `Arc`'d — deliberately the same discipline a future
+/// process/socket boundary would impose: the cross-shard message is
+/// data (codebooks, whitening stats, batch slices), never a borrow.
+///
+/// [`ShardPool::map`] collects results **in shard order**, which keeps
+/// every downstream partial-merge deterministic, exactly like
+/// [`par_map_chunks`]'s chunk-order contract.
+pub struct ShardPool<T> {
+    txs: Vec<std::sync::mpsc::Sender<ShardJob<T>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> ShardPool<T> {
+    /// Spawn one worker per element of `states`; each worker runs its
+    /// jobs under a kernel-parallelism budget of `inner_budget` (see
+    /// [`with_thread_budget`]) so S shards don't oversubscribe the
+    /// machine S-fold.
+    pub fn new(states: Vec<T>, inner_budget: usize) -> ShardPool<T> {
+        let mut txs = Vec::with_capacity(states.len());
+        let mut handles = Vec::with_capacity(states.len());
+        for (i, mut st) in states.into_iter().enumerate() {
+            let (tx, rx) = std::sync::mpsc::channel::<ShardJob<T>>();
+            let h = std::thread::Builder::new()
+                .name(format!("vqgnn-shard-{i}"))
+                .spawn(move || {
+                    with_thread_budget(inner_budget, || {
+                        while let Ok(job) = rx.recv() {
+                            job(&mut st);
+                        }
+                    })
+                })
+                .expect("par: failed to spawn shard worker");
+            txs.push(tx);
+            handles.push(h);
+        }
+        ShardPool { txs, handles }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Run `f(shard_index, &mut state)` on every shard worker
+    /// concurrently; results come back **in shard order** regardless of
+    /// which worker finishes first.
+    pub fn map<R, F>(&self, f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(usize, &mut T) -> R + Send + Clone + 'static,
+    {
+        let (rtx, rrx) = std::sync::mpsc::channel::<(usize, R)>();
+        for (i, tx) in self.txs.iter().enumerate() {
+            let f = f.clone();
+            let rtx = rtx.clone();
+            tx.send(Box::new(move |st: &mut T| {
+                let r = f(i, st);
+                let _ = rtx.send((i, r));
+            }))
+            .expect("par: shard worker disappeared");
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(self.txs.len());
+        slots.resize_with(self.txs.len(), || None);
+        for (i, r) in rrx {
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|r| r.expect("par: shard worker dropped its result"))
+            .collect()
+    }
+}
+
+impl<T> Drop for ShardPool<T> {
+    fn drop(&mut self) {
+        // Closing the senders ends each worker's recv loop.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,5 +346,44 @@ mod tests {
         par_chunks_mut(&mut v, 16, |_, _| panic!("no chunks expected"));
         let out = par_map_chunks(&[1u8, 2, 3], 16, |_, c| c.len());
         assert_eq!(out, vec![3]);
+    }
+
+    #[test]
+    fn shard_pool_orders_results_and_persists_state() {
+        let pool = ShardPool::new(vec![0u64; 4], 1);
+        assert_eq!(pool.shards(), 4);
+        // results come back in shard order even though workers race
+        let out = pool.map(|i, st| {
+            *st += 1;
+            i as u64 * 10
+        });
+        assert_eq!(out, vec![0, 10, 20, 30]);
+        // state persists across calls on the same worker
+        for _ in 0..5 {
+            pool.map(|_, st| *st += 1);
+        }
+        let counts = pool.map(|_, st| *st);
+        assert_eq!(counts, vec![7, 7, 7, 7]);
+    }
+
+    #[test]
+    fn shard_pool_workers_run_under_inner_budget() {
+        let pool = ShardPool::new(vec![(); 2], 1);
+        let seen = pool.map(|_, _| max_threads());
+        assert_eq!(seen, vec![1, 1]);
+        drop(pool); // Drop joins cleanly
+    }
+
+    #[test]
+    fn shard_pool_moves_owned_messages() {
+        use std::sync::Arc;
+        let pool = ShardPool::new(vec![Vec::<u32>::new(); 3], 1);
+        let msg = Arc::new(vec![5u32, 6, 7]);
+        let m = msg.clone();
+        let sums = pool.map(move |i, st| {
+            st.push(m[i]);
+            st.iter().sum::<u32>()
+        });
+        assert_eq!(sums, vec![5, 6, 7]);
     }
 }

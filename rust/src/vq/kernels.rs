@@ -283,23 +283,30 @@ pub fn assign_pruned(
     });
 }
 
-/// Per-dim batch mean and (population) variance of `(b, fp)` rows, f64
-/// accumulation, parallel over row blocks with a deterministic in-order
-/// merge.  Matches `numpy`'s `v.mean(0)` / `v.var(0)` semantics used by
-/// `python/compile/vq.py`.
-pub fn batch_mean_var(v: &[f32], b: usize, fp: usize) -> (Vec<f32>, Vec<f32>) {
-    debug_assert_eq!(v.len(), b * fp);
-    let partials = par::par_map_chunks(v, ROW_BLOCK * fp, |_ci, chunk| {
-        let mut s = vec![0.0f64; fp];
-        let mut s2 = vec![0.0f64; fp];
-        for (j, &x) in chunk.iter().enumerate() {
-            let d = j % fp;
-            let x = x as f64;
-            s[d] += x;
-            s2[d] += x * x;
-        }
-        (s, s2)
-    });
+/// f64 (Σx, Σx²) per-dim partial over one `ROW_BLOCK·fp` chunk of raw
+/// rows — the single source of truth shared by [`batch_mean_var`]'s
+/// in-kernel parallel path and the shard coordinator (`crate::shard`),
+/// so the two compute bit-identical partials by construction.
+pub fn mean_var_chunk_partial(chunk: &[f32], fp: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut s = vec![0.0f64; fp];
+    let mut s2 = vec![0.0f64; fp];
+    for (j, &x) in chunk.iter().enumerate() {
+        let d = j % fp;
+        let x = x as f64;
+        s[d] += x;
+        s2[d] += x * x;
+    }
+    (s, s2)
+}
+
+/// Merge mean/var chunk partials **in iteration order** (callers must
+/// supply ascending chunk order — f64 addition is not associative) and
+/// finalize to per-dim mean and population variance over `b` rows.
+pub fn mean_var_from_partials(
+    partials: impl IntoIterator<Item = (Vec<f64>, Vec<f64>)>,
+    b: usize,
+    fp: usize,
+) -> (Vec<f32>, Vec<f32>) {
     let mut s = vec![0.0f64; fp];
     let mut s2 = vec![0.0f64; fp];
     for (ps, ps2) in partials {
@@ -319,6 +326,59 @@ pub fn batch_mean_var(v: &[f32], b: usize, fp: usize) -> (Vec<f32>, Vec<f32>) {
     (mean, var)
 }
 
+/// Per-dim batch mean and (population) variance of `(b, fp)` rows, f64
+/// accumulation, parallel over row blocks with a deterministic in-order
+/// merge.  Matches `numpy`'s `v.mean(0)` / `v.var(0)` semantics used by
+/// `python/compile/vq.py`.
+pub fn batch_mean_var(v: &[f32], b: usize, fp: usize) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(v.len(), b * fp);
+    let partials =
+        par::par_map_chunks(v, ROW_BLOCK * fp, |_ci, chunk| mean_var_chunk_partial(chunk, fp));
+    mean_var_from_partials(partials, b, fp)
+}
+
+/// Per-cluster (counts, vector sums) partial over one `ROW_BLOCK` chunk
+/// of whitened rows — `vw` holds exactly the chunk's rows
+/// (`assign.len() · fp` floats).  Shared by [`cluster_accumulate`] and
+/// the shard coordinator, same reasoning as
+/// [`mean_var_chunk_partial`].
+pub fn cluster_chunk_partial(
+    vw: &[f32],
+    assign: &[i32],
+    fp: usize,
+    k: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(vw.len(), assign.len() * fp);
+    let mut counts = vec![0.0f32; k];
+    let mut sums = vec![0.0f32; k * fp];
+    for (i, &ai) in assign.iter().enumerate() {
+        let a = ai as usize;
+        debug_assert!(a < k);
+        counts[a] += 1.0;
+        let row = &vw[i * fp..(i + 1) * fp];
+        // Element-wise adds — the SIMD path is bit-identical to the
+        // scalar scatter loop it replaces.
+        simd::add_assign(&mut sums[a * fp..(a + 1) * fp], row);
+    }
+    (counts, sums)
+}
+
+/// Merge cluster chunk partials **in iteration order** (ascending chunk
+/// order — the `simd::add_assign` merges are f32 and order-sensitive).
+pub fn cluster_from_partials(
+    partials: impl IntoIterator<Item = (Vec<f32>, Vec<f32>)>,
+    fp: usize,
+    k: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut counts = vec![0.0f32; k];
+    let mut sums = vec![0.0f32; k * fp];
+    for (pc, ps) in partials {
+        simd::add_assign(&mut counts, &pc);
+        simd::add_assign(&mut sums, &ps);
+    }
+    (counts, sums)
+}
+
 /// Scatter whitened rows into per-cluster counts and vector sums
 /// (`onehot.sum(0)`, `onehotᵀ @ vw`), parallel over row blocks with
 /// deterministic in-order merge of the per-block partials.
@@ -333,27 +393,9 @@ pub fn cluster_accumulate(
     debug_assert_eq!(assign.len(), b);
     let partials = par::par_map_chunks(assign, ROW_BLOCK, |ci, chunk| {
         let row0 = ci * ROW_BLOCK;
-        let mut counts = vec![0.0f32; k];
-        let mut sums = vec![0.0f32; k * fp];
-        for (off, &ai) in chunk.iter().enumerate() {
-            let i = row0 + off;
-            let a = ai as usize;
-            debug_assert!(a < k);
-            counts[a] += 1.0;
-            let row = &vw[i * fp..(i + 1) * fp];
-            // Element-wise adds — the SIMD path is bit-identical to the
-            // scalar scatter loop it replaces.
-            simd::add_assign(&mut sums[a * fp..(a + 1) * fp], row);
-        }
-        (counts, sums)
+        cluster_chunk_partial(&vw[row0 * fp..(row0 + chunk.len()) * fp], chunk, fp, k)
     });
-    let mut counts = vec![0.0f32; k];
-    let mut sums = vec![0.0f32; k * fp];
-    for (pc, ps) in partials {
-        simd::add_assign(&mut counts, &pc);
-        simd::add_assign(&mut sums, &ps);
-    }
-    (counts, sums)
+    cluster_from_partials(partials, fp, k)
 }
 
 #[cfg(test)]

@@ -75,6 +75,23 @@ impl VqBranch {
     /// in-graph FINDNEAREST result (computed against the pre-update state).
     /// Runs on the blocked parallel kernels in [`kernels`].
     pub fn update(&mut self, v: &[f32], assign: &[i32], gamma: f32, beta: f32) {
+        self.update_expiring(v, assign, gamma, beta, None);
+    }
+
+    /// [`VqBranch::update`] with optional dead-code expiry (the
+    /// `threshold_ema_dead_code` idiom): after the codeword refresh,
+    /// clusters whose EMA count fell below the threshold are re-seeded
+    /// from rows of the current batch, drawn deterministically from the
+    /// caller's RNG in ascending cluster order.  `None` (the default
+    /// everywhere) keeps the trajectory bit-identical to [`update`].
+    pub fn update_expiring(
+        &mut self,
+        v: &[f32],
+        assign: &[i32],
+        gamma: f32,
+        beta: f32,
+        expiry: Option<(f32, &mut Rng)>,
+    ) {
         let b = assign.len();
         if b == 0 {
             // An empty batch has no statistics: the seed's per-dim mean
@@ -83,18 +100,36 @@ impl VqBranch {
         }
         debug_assert_eq!(v.len(), b * self.fp);
         let (m, va) = kernels::batch_mean_var(v, b, self.fp);
+        let inv = self.apply_moments(&m, &va, gamma, beta);
+        let vw = kernels::whiten(v, self.fp, &self.mean, &inv);
+        let (bc, bs) = kernels::cluster_accumulate(&vw, assign, b, self.fp, self.k);
+        self.apply_cluster_partials(&bc, &bs, gamma);
+        if let Some((threshold, rng)) = expiry {
+            self.expire_dead(v, b, &inv, threshold, rng);
+        }
+    }
+
+    /// First half of the EMA update: blend the batch moments into the
+    /// smoothed whitening stats, decay the cluster EMA mass, and return
+    /// the fresh whitening scale.  Split out so the shard coordinator
+    /// (`crate::shard`) can run the identical sequence around its own
+    /// partial-merge — bit-identity by shared code, not by re-derivation.
+    pub fn apply_moments(&mut self, m: &[f32], va: &[f32], gamma: f32, beta: f32) -> Vec<f32> {
         // EMA blend (mul/mul/add — the SIMD path is bit-identical).
-        simd::lerp(&mut self.mean, &m, beta);
-        simd::lerp(&mut self.var, &va, beta);
+        simd::lerp(&mut self.mean, m, beta);
+        simd::lerp(&mut self.var, va, beta);
         // EMA cluster sizes + sums over whitened vectors
         simd::scale(&mut self.counts, gamma);
         simd::scale(&mut self.sums, gamma);
-        let inv = kernels::inv_std(&self.var);
-        let vw = kernels::whiten(v, self.fp, &self.mean, &inv);
-        let (bc, bs) = kernels::cluster_accumulate(&vw, assign, b, self.fp, self.k);
+        kernels::inv_std(&self.var)
+    }
+
+    /// Second half of the EMA update: fold the batch's merged cluster
+    /// (counts, sums) into the EMA state and refresh the codewords.
+    pub fn apply_cluster_partials(&mut self, bc: &[f32], bs: &[f32], gamma: f32) {
         let g1 = 1.0 - gamma;
-        simd::axpy(&mut self.counts, g1, &bc);
-        simd::axpy(&mut self.sums, g1, &bs);
+        simd::axpy(&mut self.counts, g1, bc);
+        simd::axpy(&mut self.sums, g1, bs);
         // Refresh only clusters with mass; empty clusters keep their
         // position — dividing by a vanishing count would mint NaN/Inf
         // codewords that poison every later assignment.
@@ -104,6 +139,37 @@ impl VqBranch {
                 for d in 0..self.fp {
                     self.cww[c * self.fp + d] = self.sums[c * self.fp + d] / cnt;
                 }
+            }
+        }
+    }
+
+    /// Dead-code expiry: re-seed every cluster whose EMA count is below
+    /// `threshold` with a whitened row sampled from the current batch.
+    /// Runs in ascending cluster order and draws from `rng` only for
+    /// dead clusters, so the draw sequence — and with it the trajectory —
+    /// is deterministic and independent of the shard count (expiry
+    /// always runs on the coordinator, after the merged refresh).
+    pub fn expire_dead(
+        &mut self,
+        v: &[f32],
+        b: usize,
+        inv: &[f32],
+        threshold: f32,
+        rng: &mut Rng,
+    ) {
+        let fp = self.fp;
+        let mut row = vec![0.0f32; fp];
+        for c in 0..self.k {
+            if self.counts[c] < threshold {
+                let i = rng.below(b);
+                // Whitening one raw row with the post-blend stats gives a
+                // result bit-identical to the batch's `vw` row, so both
+                // the unsharded and sharded paths can re-derive it here
+                // without shipping whitened rows back from the shards.
+                simd::whiten_row(&mut row, &v[i * fp..(i + 1) * fp], &self.mean, inv);
+                self.cww[c * fp..(c + 1) * fp].copy_from_slice(&row);
+                self.sums[c * fp..(c + 1) * fp].copy_from_slice(&row);
+                self.counts[c] = 1.0;
             }
         }
     }
@@ -216,6 +282,42 @@ impl LayerVq {
         Tensor::from_f32(&[nb, fp], data)
     }
 
+    /// Lay the concat space out per node: `[feat | grad | zero-pad]` — the
+    /// (b, cf) matrix the product-VQ branches slice.  Shared with the
+    /// shard coordinator so both paths build bit-identical branch rows.
+    pub fn concat_z(&self, xfeat: &Tensor, gvec: &Tensor) -> Vec<f32> {
+        let (f, g, cf) = (self.plan.f_in, self.plan.g_dim, self.plan.cf);
+        debug_assert_eq!(xfeat.shape[1], f);
+        debug_assert_eq!(gvec.shape[1], g);
+        let b = xfeat.shape[0];
+        let mut z = vec![0.0f32; b * cf];
+        for i in 0..b {
+            z[i * cf..i * cf + f].copy_from_slice(&xfeat.f[i * f..(i + 1) * f]);
+            z[i * cf + f..i * cf + f + g]
+                .copy_from_slice(&gvec.f[i * g..(i + 1) * g]);
+        }
+        z
+    }
+
+    /// Copy branch `j`'s (b, fp) slice out of the concat matrix `z`.
+    pub fn branch_rows_into(&self, z: &[f32], j: usize, out: &mut [f32]) {
+        let (fp, cf) = (self.plan.fp, self.plan.cf);
+        let b = z.len() / cf.max(1);
+        debug_assert_eq!(out.len(), b * fp);
+        for i in 0..b {
+            out[i * fp..(i + 1) * fp]
+                .copy_from_slice(&z[i * cf + j * fp..i * cf + (j + 1) * fp]);
+        }
+    }
+
+    /// Write the fresh batch assignments for branch `j` into the global
+    /// node→codeword table R.
+    pub fn write_assignments(&mut self, j: usize, batch: &[u32], a: &[i32]) {
+        for (i, &node) in batch.iter().enumerate() {
+            self.assign[j * self.n + node as usize] = a[i] as u32;
+        }
+    }
+
     /// Apply a train step's outputs: update branch EMAs with the batch's
     /// concat vectors and write the fresh assignments into R.
     ///
@@ -224,30 +326,30 @@ impl LayerVq {
     pub fn update_from_batch(&mut self, batch: &[u32], xfeat: &Tensor,
                              gvec: &Tensor, assign: &Tensor,
                              gamma: f32, beta: f32) {
+        self.update_from_batch_expiring(batch, xfeat, gvec, assign, gamma, beta, &mut None);
+    }
+
+    /// [`LayerVq::update_from_batch`] with the dead-code expiry knob
+    /// threaded through (see [`VqBranch::update_expiring`]).  Branches
+    /// draw from the shared RNG in ascending branch order, so the draw
+    /// sequence is deterministic.
+    pub fn update_from_batch_expiring(&mut self, batch: &[u32], xfeat: &Tensor,
+                                      gvec: &Tensor, assign: &Tensor,
+                                      gamma: f32, beta: f32,
+                                      expiry: &mut Option<(f32, Rng)>) {
         let b = batch.len();
-        let (f, g) = (self.plan.f_in, self.plan.g_dim);
-        let (nb, fp, cf) = (self.plan.n_br, self.plan.fp, self.plan.cf);
-        debug_assert_eq!(xfeat.shape, &[b, f]);
-        debug_assert_eq!(gvec.shape, &[b, g]);
+        let (nb, fp) = (self.plan.n_br, self.plan.fp);
+        debug_assert_eq!(xfeat.shape, &[b, self.plan.f_in]);
+        debug_assert_eq!(gvec.shape, &[b, self.plan.g_dim]);
         debug_assert_eq!(assign.shape, &[nb, b]);
-        // lay the concat space out per node: [feat | grad | zero-pad]
-        let mut z = vec![0.0f32; b * cf];
-        for i in 0..b {
-            z[i * cf..i * cf + f].copy_from_slice(&xfeat.f[i * f..(i + 1) * f]);
-            z[i * cf + f..i * cf + f + g]
-                .copy_from_slice(&gvec.f[i * g..(i + 1) * g]);
-        }
+        let z = self.concat_z(xfeat, gvec);
         let mut vbr = vec![0.0f32; b * fp];
         for j in 0..nb {
-            for i in 0..b {
-                vbr[i * fp..(i + 1) * fp]
-                    .copy_from_slice(&z[i * cf + j * fp..i * cf + (j + 1) * fp]);
-            }
+            self.branch_rows_into(&z, j, &mut vbr);
             let a = &assign.i[j * b..(j + 1) * b];
-            self.branches[j].update(&vbr, a, gamma, beta);
-            for (i, &node) in batch.iter().enumerate() {
-                self.assign[j * self.n + node as usize] = a[i] as u32;
-            }
+            let e = expiry.as_mut().map(|(t, r)| (*t, &mut *r));
+            self.branches[j].update_expiring(&vbr, a, gamma, beta, e);
+            self.write_assignments(j, batch, a);
         }
     }
 }
@@ -375,6 +477,49 @@ mod tests {
         for c in 1..8 {
             assert!(br.counts[c] < 1e-3);
         }
+    }
+
+    #[test]
+    fn dead_code_expiry_reseeds_from_batch() {
+        // Starve clusters 1.. (every vector assigned to cluster 0) with
+        // aggressive decay: expiry must re-seed them from batch rows
+        // instead of leaving them stranded at their init position.
+        let mut rng = Rng::new(9);
+        let mut br = VqBranch::init(8, 4, &mut rng);
+        let v: Vec<f32> = (0..32 * 4).map(|_| rng.gauss_f32()).collect();
+        let assign = vec![0i32; 32];
+        let mut erng = Rng::new(123);
+        for _ in 0..50 {
+            br.update_expiring(&v, &assign, 0.05, 0.9, Some((0.5, &mut erng)));
+            assert!(br.cww.iter().all(|x| x.is_finite()));
+        }
+        for c in 1..8 {
+            // re-seeded on the final step: unit mass, codeword == sums row
+            assert!((br.counts[c] - 1.0).abs() < 1e-6, "cluster {c} not re-seeded");
+            for d in 0..4 {
+                assert_eq!(br.cww[c * 4 + d].to_bits(), br.sums[c * 4 + d].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn expiry_with_live_clusters_is_inert() {
+        // With every cluster above threshold the expiry path must neither
+        // change the trajectory nor consume RNG draws — the off-by-default
+        // bit-identity contract.
+        let mut rng = Rng::new(10);
+        let mut a = VqBranch::init(4, 3, &mut rng);
+        let mut b = a.clone();
+        let v: Vec<f32> = (0..64 * 3).map(|_| rng.gauss_f32()).collect();
+        let assign = a.assign_host(&v);
+        let mut e1 = Rng::new(77);
+        let mut e2 = Rng::new(77);
+        a.update(&v, &assign, 0.9, 0.9);
+        b.update_expiring(&v, &assign, 0.9, 0.9, Some((1e-9, &mut e1)));
+        assert_eq!(a.cww, b.cww);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.sums, b.sums);
+        assert_eq!(e1.below(1 << 20), e2.below(1 << 20), "expiry consumed RNG draws");
     }
 
     #[test]

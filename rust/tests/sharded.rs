@@ -1,0 +1,291 @@
+//! Sharded scale-out determinism, end to end.
+//!
+//! Contracts under test (see `shard` module docs for the why):
+//!
+//! 1. **Training bit-identity** — a `VqTrainer` with `set_shards(S)` walks
+//!    the EXACT trajectory of the unsharded trainer at S ∈ {1, 2, 4}:
+//!    parameters and the full VQ state (codebooks, EMA stats, assignment
+//!    tables) compare bit-for-bit after every step, on all four backbones,
+//!    with and without dead-code expiry.
+//! 2. **Serving bit-identity** — a `ServeEngine` built with `.shards(S)`
+//!    returns byte-identical answers AND byte-identical maintenance state
+//!    (drift histogram, refresh ring) at S ∈ {1, 2, 4}.
+//! 3. **Partial-merge determinism** — for random chunk-aligned split
+//!    points, per-shard partials merged in global chunk order reproduce
+//!    the whole-batch kernels bit-for-bit (the property the sharded EMA
+//!    update rests on).
+//! 4. **Partition-map round-trip** — a sharded trainer's `ShardPlan`
+//!    survives checkpoint save → load; unsharded checkpoints load `None`.
+//!
+//! Model-specific tests honor the `VQGNN_MODEL` filter (CI backbone matrix).
+
+mod common;
+
+use std::rc::Rc;
+
+use common::{builtin, model_enabled};
+use vq_gnn::coordinator::{checkpoint, vq_trainer::VqTrainer};
+use vq_gnn::datasets::Dataset;
+use vq_gnn::runtime::manifest::Manifest;
+use vq_gnn::runtime::Runtime;
+use vq_gnn::sampler::NodeStrategy;
+use vq_gnn::serve::{Answer, Request, ServeEngine, Served, ServingModel};
+use vq_gnn::shard::{chunk_range, ShardPlan};
+use vq_gnn::util::rng::Rng;
+use vq_gnn::vq::kernels;
+
+const BACKBONES: [&str; 4] = ["gcn", "sage", "gat", "txf"];
+
+fn fresh_trainer(model: &str, seed: u64) -> (Runtime, Manifest, Rc<Dataset>, VqTrainer) {
+    let man = builtin();
+    let mut rt = Runtime::native();
+    let ds = Rc::new(Dataset::generate(&man.datasets["tiny_sim"], 42));
+    let tr = VqTrainer::new(&mut rt, &man, ds.clone(), model, "", NodeStrategy::Nodes, seed)
+        .unwrap();
+    (rt, man, ds, tr)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Full bit image of everything a training step mutates.
+fn state_bits(tr: &VqTrainer) -> Vec<Vec<u32>> {
+    let mut out: Vec<Vec<u32>> = tr.params.iter().map(|p| bits(&p.f)).collect();
+    for l in &tr.vq.layers {
+        out.push(l.assign.clone());
+        for br in &l.branches {
+            out.push(bits(&br.cww));
+            out.push(bits(&br.counts));
+            out.push(bits(&br.sums));
+            out.push(bits(&br.mean));
+            out.push(bits(&br.var));
+        }
+    }
+    out
+}
+
+fn assert_same_trajectory(model: &str, shards: usize, expiry: Option<f32>) {
+    let (mut rt_a, _, _, mut base) = fresh_trainer(model, 11);
+    let (mut rt_b, _, _, mut tr) = fresh_trainer(model, 11);
+    base.set_dead_code_expiry(expiry);
+    tr.set_dead_code_expiry(expiry);
+    tr.set_shards(shards);
+    assert_eq!(tr.shards(), shards);
+    for step in 0..4 {
+        base.train_step(&mut rt_a).unwrap();
+        tr.train_step(&mut rt_b).unwrap();
+        assert_eq!(
+            state_bits(&base),
+            state_bits(&tr),
+            "{model}: sharded trajectory (S={shards}, expiry={expiry:?}) \
+             diverged at step {step}"
+        );
+    }
+}
+
+#[test]
+fn sharded_training_is_bit_identical_per_backbone() {
+    for model in BACKBONES {
+        if !model_enabled(model) {
+            continue;
+        }
+        for shards in [1usize, 2, 4] {
+            assert_same_trajectory(model, shards, None);
+        }
+    }
+}
+
+#[test]
+fn sharded_training_with_dead_code_expiry_is_bit_identical() {
+    if !model_enabled("gcn") {
+        return;
+    }
+    // a high threshold forces expiry activity every step; the re-seeding
+    // RNG runs on the coordinator, so shard count still must not matter
+    for shards in [2usize, 4] {
+        assert_same_trajectory("gcn", shards, Some(5.0));
+    }
+}
+
+fn node_requests(n: usize, count: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|i| {
+            if i % 7 == 5 {
+                Request::Link(rng.below(n) as u32, rng.below(n) as u32)
+            } else {
+                Request::Node(rng.below(n) as u32)
+            }
+        })
+        .collect()
+}
+
+fn serve_with_shards(model: &str, shards: usize) -> (Vec<Answer>, Vec<f32>) {
+    let (mut rt, man, ds, mut tr) = fresh_trainer(model, 7);
+    for _ in 0..3 {
+        tr.train_step(&mut rt).unwrap();
+    }
+    let sm = ServingModel::freeze(&mut rt, &man, &tr).unwrap();
+    let mut eng = ServeEngine::builder()
+        .model(model, sm)
+        .shards(shards)
+        .build(rt)
+        .unwrap();
+    assert_eq!(eng.shards(), shards);
+    assert_eq!(eng.model(model).unwrap().shards(), shards);
+    assert!(eng.model(model).unwrap().threads() >= shards);
+    for r in node_requests(ds.n(), 120, 0x5A4D) {
+        eng.submit(model, r).unwrap();
+    }
+    let served: Vec<Served> = eng.drain().unwrap();
+    let answers = served.iter().map(|s| s.answer.clone()).collect();
+    // maintenance state fed by note_served during the drain
+    let drift_bins = eng
+        .model(model)
+        .unwrap()
+        .cache()
+        .layers
+        .iter()
+        .flat_map(|l| l.drift_obs.bins().to_vec())
+        .collect();
+    (answers, drift_bins)
+}
+
+#[test]
+fn sharded_serving_matches_unsharded_answers_and_maintenance() {
+    for model in ["gcn", "gat"] {
+        if !model_enabled(model) {
+            continue;
+        }
+        let (base_answers, base_bins) = serve_with_shards(model, 1);
+        assert!(!base_answers.is_empty());
+        for shards in [2usize, 4] {
+            let (answers, bins) = serve_with_shards(model, shards);
+            assert_eq!(
+                base_answers, answers,
+                "{model}: served answers diverged at {shards} shards"
+            );
+            assert_eq!(
+                bits(&base_bins),
+                bits(&bins),
+                "{model}: drift observations diverged at {shards} shards"
+            );
+        }
+    }
+}
+
+/// Split the ROW_BLOCK chunk index range at random points, compute the
+/// shared per-chunk partials per part, merge in global chunk order, and
+/// compare bit-for-bit against the whole-batch kernels — the exact
+/// algebra `ShardExec::update_branch` runs.
+#[test]
+fn random_chunk_splits_merge_to_the_unsharded_kernels() {
+    let mut rng = Rng::new(0x51AB);
+    for trial in 0..10 {
+        let b = 1 + rng.below(4 * kernels::ROW_BLOCK + 7);
+        let fp = 1 + rng.below(12);
+        let k = 2 + rng.below(14);
+        let v: Vec<f32> = (0..b * fp).map(|_| rng.gauss_f32()).collect();
+        let assign: Vec<i32> = (0..b).map(|_| rng.below(k) as i32).collect();
+        let n_chunks = (b + kernels::ROW_BLOCK - 1) / kernels::ROW_BLOCK;
+
+        // random split points over the CHUNK index range (some empty)
+        let parts = 1 + rng.below(5);
+        let mut cuts: Vec<usize> = (0..parts - 1).map(|_| rng.below(n_chunks + 1)).collect();
+        cuts.push(0);
+        cuts.push(n_chunks);
+        cuts.sort_unstable();
+
+        let (m_ref, var_ref) = kernels::batch_mean_var(&v, b, fp);
+        let mut mv_partials = Vec::new();
+        for w in cuts.windows(2) {
+            for ci in w[0]..w[1] {
+                let lo = ci * kernels::ROW_BLOCK * fp;
+                let hi = (lo + kernels::ROW_BLOCK * fp).min(b * fp);
+                mv_partials.push(kernels::mean_var_chunk_partial(&v[lo..hi], fp));
+            }
+        }
+        let (m, var) = kernels::mean_var_from_partials(mv_partials, b, fp);
+        assert_eq!(bits(&m_ref), bits(&m), "trial {trial}: mean diverged");
+        assert_eq!(bits(&var_ref), bits(&var), "trial {trial}: var diverged");
+
+        let inv = kernels::inv_std(&var);
+        let vw = kernels::whiten(&v, fp, &m, &inv);
+        let (c_ref, s_ref) = kernels::cluster_accumulate(&vw, &assign, b, fp, k);
+        let mut cl_partials = Vec::new();
+        for w in cuts.windows(2) {
+            for ci in w[0]..w[1] {
+                let r0 = ci * kernels::ROW_BLOCK;
+                let r1 = (r0 + kernels::ROW_BLOCK).min(b);
+                cl_partials.push(kernels::cluster_chunk_partial(
+                    &vw[r0 * fp..r1 * fp],
+                    &assign[r0..r1],
+                    fp,
+                    k,
+                ));
+            }
+        }
+        let (counts, sums) = kernels::cluster_from_partials(cl_partials, fp, k);
+        assert_eq!(bits(&c_ref), bits(&counts), "trial {trial}: counts diverged");
+        assert_eq!(bits(&s_ref), bits(&sums), "trial {trial}: sums diverged");
+    }
+}
+
+#[test]
+fn shard_plan_round_trips_through_trainer_checkpoints() {
+    if !model_enabled("gcn") {
+        return;
+    }
+    let dir = std::env::temp_dir().join("vqgnn_sharded_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (mut rt, _, _, mut tr) = fresh_trainer("gcn", 3);
+    tr.set_shards(4);
+    for _ in 0..2 {
+        tr.train_step(&mut rt).unwrap();
+    }
+    let art = tr.train_art.spec.name.clone();
+    let sharded = dir.join("sharded.ckpt");
+    checkpoint::save_with_shards(&sharded, &art, &tr.params, &tr.vq, tr.shard_plan())
+        .unwrap();
+    let plain = dir.join("plain.ckpt");
+    checkpoint::save(&plain, &art, &tr.params, &tr.vq).unwrap();
+
+    let (_rt2, _, _, mut fresh) = fresh_trainer("gcn", 99);
+    let plan =
+        checkpoint::load_with_shards(&sharded, &art, &mut fresh.params, &mut fresh.vq)
+            .unwrap();
+    assert_eq!(plan.as_ref(), tr.shard_plan());
+    assert_eq!(plan.as_ref().map(ShardPlan::shards), Some(4));
+    // the restored state is the saved state, bit for bit
+    assert_eq!(state_bits(&tr), state_bits(&fresh));
+    // resuming the restored trainer under the restored plan stays on the
+    // sharded==unsharded trajectory (the plan partitions the same n)
+    fresh.set_shard_plan(plan);
+    assert_eq!(fresh.shards(), 4);
+
+    // an unsharded file reports no plan and restores the same bytes
+    let plan = checkpoint::load_with_shards(&plain, &art, &mut fresh.params, &mut fresh.vq)
+        .unwrap();
+    assert!(plan.is_none());
+    assert_eq!(state_bits(&tr), state_bits(&fresh));
+}
+
+#[test]
+fn chunk_range_partition_is_exact() {
+    for n in [0usize, 1, 5, 64, 129, 1000] {
+        for s in [1usize, 2, 3, 4, 7] {
+            let mut covered = 0usize;
+            let mut prev_end = 0usize;
+            for i in 0..s {
+                let (lo, hi) = chunk_range(n, s, i);
+                assert_eq!(lo, prev_end, "n={n} s={s}: ranges must be contiguous");
+                assert!(hi >= lo);
+                covered += hi - lo;
+                prev_end = hi;
+            }
+            assert_eq!(prev_end, n);
+            assert_eq!(covered, n);
+        }
+    }
+}
